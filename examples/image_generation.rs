@@ -1,0 +1,131 @@
+//! Image-generation experiments (paper §6.1).
+//!
+//!   --fig2    theta sweep on latent16 (StableDiffusion stand-in), K=1000
+//!   --fig4    theta sweep on pixel64 (LSUN pixel-model stand-in)
+//!   --table1  CLIP-proxy alignment, DDPM vs ASD-theta (latent16)
+//!   --table2  FID-proxy, DDPM vs ASD-theta (pixel64)
+//!   --fig3    paired samples DDPM vs ASD-inf, shared seeds (CSV)
+//!
+//! Defaults run a reduced-n version of everything; see EXPERIMENTS.md
+//! for the recorded full runs.
+//!
+//! Run: cargo run --release --example image_generation -- [--table1 ...]
+
+use std::sync::Arc;
+
+use asd::exp::latency::default_latency_model;
+use asd::exp::quality::{format_quality_table, make_class_conds, sample_asd,
+                        sample_ddpm, score};
+use asd::exp::{format_rows, sweep_thetas};
+use asd::model::DenoiseModel;
+use asd::runtime::Runtime;
+use asd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["fig2", "fig4", "table1", "table2", "fig3"]);
+    let all = !(args.flag("fig2") || args.flag("fig4") || args.flag("table1")
+        || args.flag("table2") || args.flag("fig3"));
+    let rt = Runtime::load_default()?;
+
+    if all || args.flag("fig2") {
+        fig_speedup(&rt, "latent16", "Fig 2 — speedup on latent diffusion",
+                    &args)?;
+    }
+    if all || args.flag("fig4") {
+        fig_speedup(&rt, "pixel64", "Fig 4 — speedup on pixel diffusion",
+                    &args)?;
+    }
+    if all || args.flag("table1") {
+        table_quality(&rt, "latent16", "Table 1 — CLIP-proxy (higher=better)",
+                      &args)?;
+    }
+    if all || args.flag("table2") {
+        table_quality(&rt, "pixel64", "Table 2 — FID-proxy (lower=better)",
+                      &args)?;
+    }
+    if all || args.flag("fig3") {
+        fig3_pairs(&rt, &args)?;
+    }
+    Ok(())
+}
+
+fn fig_speedup(rt: &Runtime, variant: &str, title: &str, args: &Args)
+               -> anyhow::Result<()> {
+    let n = args.get_usize("n", 6)?;
+    let model = rt.model(variant)?;
+    model.warmup()?;
+    let k = model.info.k_steps;
+    let dyn_model: Arc<dyn DenoiseModel> = model.clone();
+
+    // measured sequential wall-clock (per sample)
+    let seq = asd::ddpm::SequentialSampler::new(dyn_model.clone());
+    let t0 = std::time::Instant::now();
+    let reps = 2.min(n);
+    for s in 0..reps {
+        let cond = vec![0.0; model.info.cond_dim];
+        seq.sample(s as u64, &cond)?;
+    }
+    let seq_wall = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let latency = default_latency_model(&model, 8)?;
+    let conds: Option<Vec<Vec<f64>>> = if model.info.cond_dim > 0 {
+        Some(make_class_conds(&dyn_model, n).0)
+    } else {
+        None
+    };
+    let thetas = args.get_usize_list("thetas", &[2, 4, 6, 8, 0])?;
+    let rows = sweep_thetas(dyn_model, &thetas, n, seq_wall, 500,
+                            conds.as_deref(), &latency)?;
+    println!("\n=== {title} (K={k}, n={n}) ===");
+    println!("measured sequential wall: {:.1} ms/sample", seq_wall * 1e3);
+    print!("{}", format_rows(k, &rows));
+    Ok(())
+}
+
+fn table_quality(rt: &Runtime, variant: &str, title: &str, args: &Args)
+                 -> anyhow::Result<()> {
+    let n = args.get_usize("n", 64)?;
+    let model = rt.model(variant)?;
+    model.warmup()?;
+    let dyn_model: Arc<dyn DenoiseModel> = model.clone();
+    let target = model.info.target.clone();
+    let (conds, classes) = make_class_conds(&dyn_model, n);
+    let conditional = model.info.cond_dim > 0;
+
+    let mut rows = Vec::new();
+    let ddpm = sample_ddpm(&dyn_model, n, 42, &conds)?;
+    rows.push(score(&target, ddpm,
+                    conditional.then_some(classes.as_slice()), "DDPM", 9));
+    for theta in args.get_usize_list("thetas", &[2, 4, 8, 0])? {
+        let label = if theta == 0 { "ASD-inf".into() }
+                    else { format!("ASD-{theta}") };
+        let samples = sample_asd(&dyn_model, theta, n, 42, &conds)?;
+        rows.push(score(&target, samples,
+                        conditional.then_some(classes.as_slice()), &label, 9));
+    }
+    println!("\n=== {title} (n={n}) ===");
+    print!("{}", format_quality_table(
+        &rows, if conditional { "align (CLIP~)" } else { "-" }));
+    Ok(())
+}
+
+fn fig3_pairs(rt: &Runtime, args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 4)?;
+    let model = rt.model("latent16")?;
+    let dyn_model: Arc<dyn DenoiseModel> = model.clone();
+    let (conds, classes) = make_class_conds(&dyn_model, n);
+    let ddpm = sample_ddpm(&dyn_model, n, 7, &conds)?;
+    let asd = sample_asd(&dyn_model, 0, n, 7, &conds)?;
+    println!("\n=== Fig 3 — paired samples (shared seeds), CSV ===");
+    println!("class,method,{}",
+             (0..model.info.d).map(|i| format!("x{i}"))
+                 .collect::<Vec<_>>().join(","));
+    for i in 0..n {
+        for (m, s) in [("DDPM", &ddpm[i]), ("ASD-inf", &asd[i])] {
+            println!("{},{m},{}", classes[i],
+                     s.iter().map(|v| format!("{v:.4}"))
+                         .collect::<Vec<_>>().join(","));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load a model from the AOT artifacts, sample with
+//! sequential DDPM and with ASD, and verify the headline claims on a
+//! small target — error-free output, fewer parallel rounds.
+//!
+//! Run: cargo run --release --example quickstart
+
+use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+use asd::ddpm::SequentialSampler;
+use asd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The runtime loads artifacts/manifest.json and talks PJRT.
+    let rt = Runtime::load_default()?;
+    let model = rt.model("gmm2d")?;
+    let k = model.info.k_steps;
+    println!("loaded gmm2d: d={} K={k}", model.info.d);
+
+    // 2. Baseline: sequential ancestral sampling (K model calls).
+    let seq = SequentialSampler::new(model.clone());
+    let (y_seq, st) = seq.sample(7, &[])?;
+    println!("\nsequential DDPM: {} model calls -> y = [{:+.3}, {:+.3}]",
+             st.model_calls, y_seq[0], y_seq[1]);
+
+    // 3. ASD: same distribution, far fewer parallel rounds.
+    let mut engine = AsdEngine::new(
+        model.clone(),
+        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native },
+    );
+    let out = engine.sample(7)?;
+    println!(
+        "ASD-8:           {} parallel rounds ({} calls) -> y = [{:+.3}, {:+.3}]",
+        out.stats.parallel_rounds, out.stats.model_calls,
+        out.y0[0], out.y0[1]
+    );
+    println!("algorithmic speedup: {:.2}x, acceptance rate {:.3}",
+             out.stats.algorithmic_speedup(k), out.stats.acceptance_rate());
+
+    // 4. Error-free check: both estimators hit the target's radius.
+    let n = 200;
+    let mut r_seq = 0.0;
+    let mut r_asd = 0.0;
+    for seed in 0..n {
+        r_seq += norm2(&seq.sample(seed, &[])?.0);
+        r_asd += norm2(&engine.sample(10_000 + seed)?.y0);
+    }
+    println!(
+        "\nmean radius over {n} samples: sequential {:.3}, ASD {:.3} \
+         (target 1.500)",
+        r_seq / n as f64, r_asd / n as f64
+    );
+
+    // 5. Lemma 13 in action: the first speculated step never rejects.
+    let out = engine.sample(99)?;
+    assert!(out.stats.accepted >= out.stats.iterations);
+    println!(
+        "Lemma 13 invariant held: {} accepts >= {} iterations",
+        out.stats.accepted, out.stats.iterations
+    );
+    Ok(())
+}
+
+fn norm2(v: &[f64]) -> f64 {
+    (v[0] * v[0] + v[1] * v[1]).sqrt()
+}

@@ -1,0 +1,113 @@
+//! Robot-control experiments (paper §6.2): diffusion policies on the
+//! three simulated manipulation tasks.
+//!
+//!   --fig5    speedup of ASD vs DDPM per task (batched, single device)
+//!   --table3  success rates, DDPM vs ASD-theta (seeds x repeats)
+//!
+//! Run: cargo run --release --example robot_control -- [--seeds 20]
+
+use std::sync::Arc;
+
+use asd::env::{rollout_policy, DiffusionPolicy, SamplerKind, TaskSpec};
+use asd::math::stats::Welford;
+use asd::model::DenoiseModel;
+use asd::runtime::Runtime;
+use asd::util::cli::Args;
+
+const TASKS: [&str; 3] = ["square", "transport", "toolhang"];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["fig5", "table3"]);
+    let all = !(args.flag("fig5") || args.flag("table3"));
+    let rt = Runtime::load_default()?;
+
+    if all || args.flag("fig5") {
+        fig5(&rt, &args)?;
+    }
+    if all || args.flag("table3") {
+        table3(&rt, &args)?;
+    }
+    Ok(())
+}
+
+fn policy_for(rt: &Runtime, task: &str) -> anyhow::Result<DiffusionPolicy> {
+    let model = rt.model(&format!("policy_{task}"))?;
+    model.warmup()?;
+    let dyn_model: Arc<dyn DenoiseModel> = model;
+    DiffusionPolicy::new(dyn_model, TaskSpec::by_name(task).unwrap())
+}
+
+fn fig5(rt: &Runtime, args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("episodes", 3)?;
+    let thetas = args.get_usize_list("thetas", &[8, 12, 16, 20, 24, 0])?;
+    println!("\n=== Fig 5 — diffusion-policy speedup (K=100, batched \
+              single-device verification) ===");
+    for task in TASKS {
+        let policy = policy_for(rt, task)?;
+        // sequential baseline
+        let mut seq_rounds = Welford::default();
+        let mut seq_wall = Welford::default();
+        for s in 0..n {
+            let r = rollout_policy(&policy, SamplerKind::Sequential, s as u64)?;
+            seq_rounds.push(r.parallel_rounds as f64 / r.plans.max(1) as f64);
+            seq_wall.push(r.wallclock_s / r.plans.max(1) as f64);
+        }
+        println!("\n[{task}] sequential: {:.0} rounds/plan, {:.1} ms/plan",
+                 seq_rounds.mean(), seq_wall.mean() * 1e3);
+        println!("{:<10} {:>12} {:>14} {:>12}", "method", "alg speedup",
+                 "wall x (1dev)", "rounds/plan");
+        for &theta in &thetas {
+            let mut rounds = Welford::default();
+            let mut wall = Welford::default();
+            for s in 0..n {
+                let r = rollout_policy(&policy, SamplerKind::Asd(theta),
+                                       s as u64)?;
+                rounds.push(r.parallel_rounds as f64 / r.plans.max(1) as f64);
+                wall.push(r.wallclock_s / r.plans.max(1) as f64);
+            }
+            let label = if theta == 0 { "ASD-inf".into() }
+                        else { format!("ASD-{theta}") };
+            println!("{:<10} {:>12.2} {:>14.2} {:>12.1}", label,
+                     seq_rounds.mean() / rounds.mean(),
+                     seq_wall.mean() / wall.mean(), rounds.mean());
+        }
+    }
+    Ok(())
+}
+
+fn table3(rt: &Runtime, args: &Args) -> anyhow::Result<()> {
+    let seeds = args.get_usize("seeds", 20)?;
+    let repeats = args.get_usize("repeats", 2)?;
+    let thetas = args.get_usize_list("thetas", &[8, 16, 24, 0])?;
+    println!("\n=== Table 3 — success rates ({seeds} seeds x {repeats} \
+              repeats; mean +- SEM %) ===");
+    let mut header = format!("{:<11} {:>13}", "env", "DDPM");
+    for &t in &thetas {
+        let label = if t == 0 { "ASD-inf".into() } else { format!("ASD-{t}") };
+        header.push_str(&format!(" {label:>13}"));
+    }
+    println!("{header}");
+
+    for task in TASKS {
+        let policy = policy_for(rt, task)?;
+        let mut row = format!("{task:<11}");
+        let mut samplers = vec![SamplerKind::Sequential];
+        samplers.extend(thetas.iter().map(|&t| SamplerKind::Asd(t)));
+        for sampler in samplers {
+            let mut reps = Welford::default();
+            for rep in 0..repeats {
+                let mut ok = 0usize;
+                for s in 0..seeds {
+                    let seed = (rep * 10_000 + s) as u64;
+                    ok += rollout_policy(&policy, sampler, seed)?.success
+                        as usize;
+                }
+                reps.push(100.0 * ok as f64 / seeds as f64);
+            }
+            row.push_str(&format!(" {:>6.1}+-{:<5.1}", reps.mean(),
+                                  reps.sem()));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Theorem 4 validation: the number of parallel rounds of ASD on the SL
+//! process scales as O(K^{2/3} (beta d eta)^{1/3}).
+//!
+//! Uses the analytic GMM oracle m(t, y) (zero network error) so the
+//! measured scaling reflects the algorithm alone. We sweep K at fixed
+//! total SL time (so eta ~ 1/K) with theta = theta*(K) ~ (K/(beta d
+//! eta))^{1/3} as the theorem prescribes, and fit the log-log slope of
+//! rounds vs K. Prediction: with eta ~ T/K, rounds ~ K^{2/3} (T beta
+//! d / K)^{1/3} ~ K^{1/3} — slope 1/3 in this parametrization.
+//!
+//! Run: cargo run --release --example scaling_law -- [--samples 5]
+
+use asd::asd::SlAsd;
+use asd::model::{Gmm, GmmSlOracle};
+use asd::schedule::SlGrid;
+use asd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let samples = args.get_usize("samples", 5)?;
+    let t_max = args.get_f64("t-max", 200.0)?;
+
+    println!("=== Theorem 4 — parallel rounds vs K (SL, analytic GMM) ===");
+    println!("total SL time T={t_max}; eta = T/K; theta = (K^2 / (beta d \
+              T))^(1/3)\n");
+
+    for (label, gmm) in [
+        ("d=2 (circle GMM)", Gmm::circle_2d()),
+        ("d=8 (2 modes)", two_mode_gmm(8)),
+        ("d=32 (2 modes)", two_mode_gmm(32)),
+    ] {
+        let oracle = GmmSlOracle { gmm };
+        let d = oracle.gmm.d;
+        println!("--- {label} ---");
+        println!("{:>6} {:>8} {:>10} {:>12} {:>12}", "K", "theta", "rounds",
+                 "rounds/K", "K^(1/3) fit");
+        let mut pts = Vec::new();
+        for k in [128usize, 256, 512, 1024, 2048] {
+            let eta = t_max / k as f64;
+            // Thm 4: theta ~ (K / (beta d eta))^{1/3}, beta ~ sigma^2+mu^2 ~ O(1)
+            let theta = ((k as f64 / (d as f64 * eta)).powf(1.0 / 3.0))
+                .ceil().max(2.0) as usize;
+            let grid = SlGrid::uniform(t_max, k);
+            let asd = SlAsd { oracle: &oracle, grid: &grid, theta };
+            let mut rounds = 0usize;
+            for s in 0..samples {
+                let (_, stats) = asd.sample(s as u64);
+                rounds += stats.parallel_rounds;
+            }
+            let mean_rounds = rounds as f64 / samples as f64;
+            pts.push((k as f64, mean_rounds));
+            println!("{:>6} {:>8} {:>10.1} {:>12.3} {:>12.2}", k, theta,
+                     mean_rounds, mean_rounds / k as f64,
+                     mean_rounds / (k as f64).powf(1.0 / 3.0));
+        }
+        let slope = loglog_slope(&pts);
+        println!("log-log slope(rounds vs K) = {slope:.3}  \
+                  (Thm 4 prediction ~0.33, sequential would be 1.0)\n");
+    }
+    Ok(())
+}
+
+fn two_mode_gmm(d: usize) -> Gmm {
+    let mut m1 = vec![0.0; d];
+    let mut m2 = vec![0.0; d];
+    m1[0] = 1.0;
+    m2[0] = -1.0;
+    m1[d - 1] = 0.5;
+    m2[d - 1] = -0.5;
+    Gmm::new(vec![m1, m2], vec![0.3, 0.3], vec![0.5, 0.5])
+}
+
+fn loglog_slope(pts: &[(f64, f64)]) -> f64 {
+    let n = pts.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in pts {
+        let (lx, ly) = (x.ln(), y.ln());
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}

@@ -1,0 +1,104 @@
+//! End-to-end serving driver (the repository's system validation run):
+//! load real AOT-compiled models, run the coordinator with a mixed
+//! concurrent workload, and report latency/throughput — recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: cargo run --release --example serve -- [--requests 64]
+
+use std::time::Instant;
+
+use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
+use asd::runtime::Runtime;
+use asd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n_requests = args.get_usize("requests", 64)?;
+    let workers = args.get_usize("workers", 2)?;
+    let theta = args.get_usize("theta", 8)?;
+
+    let rt = Runtime::load_default()?;
+    let coordinator = Coordinator::new(ServerConfig {
+        workers,
+        max_batch: 8,
+        enable_batching: true,
+    });
+    // serve two real models side by side
+    for variant in ["gmm2d", "latent16"] {
+        let m = rt.model(variant)?;
+        m.warmup()?;
+        coordinator.register_model(variant, m);
+    }
+
+    println!("mixed workload: {n_requests} requests over 2 models, \
+              {workers} workers, dynamic batching on");
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let variant = if i % 3 == 0 { "latent16" } else { "gmm2d" };
+        let sampler = if i % 2 == 0 {
+            SamplerSpec::Asd(theta)
+        } else {
+            SamplerSpec::Sequential
+        };
+        let cond = if variant == "latent16" {
+            let mut c = vec![0.0; 10];
+            c[i % 10] = 1.0;
+            c
+        } else {
+            vec![]
+        };
+        let (_, rx) = coordinator.submit(Request {
+            id: 0,
+            variant: variant.into(),
+            sampler,
+            seed: 7_000 + i as u64,
+            cond,
+        });
+        pending.push((variant, sampler, rx));
+    }
+
+    let mut failures = 0usize;
+    let mut asd_rounds = 0usize;
+    let mut asd_count = 0usize;
+    let mut seq_rounds = 0usize;
+    let mut seq_count = 0usize;
+    for (_, sampler, rx) in pending {
+        let r = rx.recv()?;
+        if r.error.is_some() {
+            failures += 1;
+            continue;
+        }
+        match sampler {
+            SamplerSpec::Asd(_) => {
+                asd_rounds += r.parallel_rounds;
+                asd_count += 1;
+            }
+            _ => {
+                seq_rounds += r.parallel_rounds;
+                seq_count += 1;
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = coordinator.metrics();
+    println!("\n--- results ---");
+    println!("throughput:       {:.1} requests/s ({n_requests} in {elapsed:.2}s)",
+             n_requests as f64 / elapsed);
+    println!("mean latency:     {:.1} ms service + {:.1} ms queue",
+             m.mean_service_ms, m.mean_queue_wait_ms);
+    println!("dynamic batching: {} requests ganged into {} lockstep groups",
+             m.batched_requests, m.batched_groups);
+    if asd_count > 0 && seq_count > 0 {
+        println!(
+            "rounds/request:   ASD {:.1} vs sequential {:.1} ({:.2}x fewer)",
+            asd_rounds as f64 / asd_count as f64,
+            seq_rounds as f64 / seq_count as f64,
+            seq_rounds as f64 / seq_count as f64
+                / (asd_rounds as f64 / asd_count as f64)
+        );
+    }
+    println!("failures:         {failures}");
+    coordinator.shutdown();
+    Ok(())
+}

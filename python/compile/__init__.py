@@ -1,0 +1,5 @@
+"""Build-path Python package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Nothing in this package is imported at runtime; `aot.py` lowers everything
+to HLO text artifacts that the Rust coordinator loads via PJRT.
+"""

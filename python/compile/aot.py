@@ -1,0 +1,208 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest + weights.
+
+Emits HLO **text** (NOT `.serialize()`): the image's xla_extension 0.5.1
+rejects jax>=0.5's 64-bit-instruction-id protos; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ../artifacts (repo root):
+  denoise_{variant}_b{B}.hlo.txt   (y[B,d], t[B], cond[B,c]?, *weights) -> x0hat
+  speculate_d{d}_T{T}.hlo.txt      proposal chain (Pallas prefix kernel)
+  verify_d{d}_T{T}.hlo.txt         batched GRS (Pallas kernel)
+  weights_{variant}.bin            flat f32 (layout: model.flatten_params)
+  manifest.json                    dims, schedules, targets, artifact map
+
+Weights are HLO *parameters* (not baked constants): the Rust runtime
+uploads them to device once per variant (PjRtBuffer) and reuses them for
+every call via execute_b — keeping artifacts small and the request path
+argument-light.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import envs, targets
+from .kernels import grs_verify, speculate
+from .model import denoise_pallas, flatten_params, layer_dims
+from .schedule import BETA_END, BETA_START, make_schedule
+from .train import train_variant
+from .variants import BATCH_SIZES, SPEC_T, VARIANTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_denoise(variant, params, batch: int) -> str:
+    """Lower the Pallas denoiser for one batch size, weights as params."""
+    cfg = variant.cfg
+    n_weights = len(params)
+
+    def fn(y, t, cond, *flat_w):
+        p = [(flat_w[2 * i], flat_w[2 * i + 1]) for i in range(n_weights)]
+        return (denoise_pallas(p, y, t, cond, cfg),)
+
+    w_specs = []
+    for w, b in params:
+        w_specs.append(_spec(w.shape))
+        w_specs.append(_spec(b.shape))
+    lowered = jax.jit(fn).lower(
+        _spec((batch, cfg.d)), _spec((batch,)),
+        _spec((batch, cfg.cond_dim)), *w_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_speculate(d: int, t_steps: int) -> str:
+    def fn(y_a, x0a, c1, c2, sigma, xi):
+        return speculate(y_a, x0a, c1, c2, sigma, xi)
+
+    lowered = jax.jit(fn).lower(
+        _spec((d,)), _spec((d,)), _spec((t_steps,)), _spec((t_steps,)),
+        _spec((t_steps,)), _spec((t_steps, d)))
+    return to_hlo_text(lowered)
+
+
+def lower_verify(d: int, t_steps: int) -> str:
+    def fn(u, xi, m_hat, m, sigma):
+        return grs_verify(u, xi, m_hat, m, sigma)
+
+    lowered = jax.jit(fn).lower(
+        _spec((t_steps,)), _spec((t_steps, d)), _spec((t_steps, d)),
+        _spec((t_steps, d)), _spec((t_steps,)))
+    return to_hlo_text(lowered)
+
+
+def target_manifest(variant) -> dict:
+    """Ground-truth target parameters for the Rust quality metrics."""
+    t = variant.target
+    if t == "gmm2d":
+        means, sigmas, weights = targets.gmm2d_params()
+    elif t == "latent16":
+        means, sigmas, weights = targets.latent16_params()
+    elif t == "pixel64":
+        return {"kind": "pixel64", "side": targets.PIXEL64_SIDE,
+                "freq": [targets.PIXEL64_FREQ_MIN, targets.PIXEL64_FREQ_MAX],
+                "amp": [targets.PIXEL64_AMP_MIN, targets.PIXEL64_AMP_MAX],
+                "noise": targets.PIXEL64_NOISE}
+    elif t == "env":
+        return {"kind": "env", "task": variant.env}
+    else:
+        raise ValueError(t)
+    return {"kind": "gmm", "means": means.tolist(),
+            "sigmas": sigmas.tolist(), "weights": weights.tolist()}
+
+
+def build(out_dir: str, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    trained = {}
+    manifest = {
+        "format_version": 1,
+        "beta_start": BETA_START,
+        "beta_end": BETA_END,
+        "spec_t": SPEC_T,
+        "batch_sizes": BATCH_SIZES,
+        "chunk": envs.CHUNK,
+        "exec_steps": envs.EXEC_STEPS,
+        "variants": {},
+        "kernels": {"speculate": {}, "verify": {}},
+    }
+
+    dims_needed = set()
+    for name, variant in VARIANTS.items():
+        if only and name not in only:
+            continue
+        cfg = variant.cfg
+        print(f"[aot] training {name} (d={cfg.d}, K={cfg.k_steps})")
+        t0 = time.time()
+        params, final_loss = train_variant(variant)
+        trained[name] = params
+        print(f"[aot] trained {name} in {time.time() - t0:.1f}s "
+              f"loss={final_loss:.4f}")
+
+        wpath = f"weights_{name}.bin"
+        flatten_params(params).tofile(os.path.join(out_dir, wpath))
+
+        art = {}
+        for b in BATCH_SIZES:
+            fname = f"denoise_{name}_b{b}.hlo.txt"
+            text = lower_denoise(variant, params, b)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            art[str(b)] = fname
+        print(f"[aot] lowered {len(BATCH_SIZES)} denoise artifacts for {name}")
+
+        sched = make_schedule(cfg.k_steps)
+        entry = {
+            "d": cfg.d,
+            "cond_dim": cfg.cond_dim,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "temb_dim": 32,
+            "k_steps": cfg.k_steps,
+            "train_loss": final_loss,
+            "weights": wpath,
+            "weights_layout": [[a, b] for a, b in layer_dims(cfg)],
+            "artifacts": art,
+            "abar": sched["abar"].tolist(),
+            "target": target_manifest(variant),
+            "env": variant.env,
+        }
+        manifest["variants"][name] = entry
+        dims_needed.add(cfg.d)
+
+    for d in sorted(dims_needed):
+        sp = f"speculate_d{d}_T{SPEC_T}.hlo.txt"
+        with open(os.path.join(out_dir, sp), "w") as f:
+            f.write(lower_speculate(d, SPEC_T))
+        manifest["kernels"]["speculate"][str(d)] = sp
+        vf = f"verify_d{d}_T{SPEC_T}.hlo.txt"
+        with open(os.path.join(out_dir, vf), "w") as f:
+            f.write(lower_verify(d, SPEC_T))
+        manifest["kernels"]["verify"][str(d)] = vf
+        print(f"[aot] lowered speculate/verify kernels for d={d}")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    # merge with an existing manifest when building a subset
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["variants"].update(manifest["variants"])
+        old["kernels"]["speculate"].update(manifest["kernels"]["speculate"])
+        old["kernels"]["verify"].update(manifest["kernels"]["verify"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    print(f"[aot] wrote {mpath}")
+
+    from .golden import write_golden
+    write_golden(out_dir, trained)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of variant names to (re)build")
+    args = ap.parse_args()
+    build(args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Reference (numpy) implementation of Autospeculative Decoding (Alg 1-3).
+
+This is the executable specification for the Rust engine
+(rust/src/asd/engine.rs): same DDPM-native formulation (Remark 2), same
+randomness contract (pre-drawn per-step (u_i, xi_i) streams indexed by the
+DDPM step they will be consumed at), same round accounting. pytest checks
+it against sequential DDPM for distributional equality and Lemma-13
+invariants; the Rust integration tests reproduce its traces.
+
+Step indexing: DDPM indices run i = K, K-1, ..., 1; transition i -> i-1
+consumes (u[i-1], xi[i-1]) (0-based arrays of length K) and the schedule
+row i-1 of (c1, c2, sigma) from schedule.make_schedule.
+"""
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .schedule import make_schedule
+
+_SIGMA0_TOL = 1e-6
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class AsdStats:
+    model_calls: int = 0       # total denoiser evaluations
+    parallel_rounds: int = 0   # rounds of (possibly batched) calls
+    iterations: int = 0
+    accepted: int = 0
+    rejected: int = 0
+
+
+def grs(u, xi, m_hat, m, sigma):
+    """Gaussian rejection sampler (Alg 3); returns (z, accept)."""
+    v = m_hat - m
+    v_sq = float(np.dot(v, v))
+    if sigma <= _SIGMA0_TOL:
+        return m.copy(), v_sq <= _SIGMA0_TOL * _SIGMA0_TOL
+    w_sq = v_sq / (sigma * sigma)
+    log_ratio = -(np.dot(v, xi) / sigma + 0.5 * w_sq)
+    accept = np.log(max(u, _EPS)) <= log_ratio or v_sq <= _EPS
+    if accept:
+        return m_hat + sigma * xi, True
+    refl = xi - 2.0 * v * (np.dot(v, xi) / max(v_sq, _EPS))
+    return m + sigma * refl, False
+
+
+def sequential_ddpm(model: Callable, y_k: np.ndarray, k_steps: int,
+                    sched, xi: np.ndarray) -> np.ndarray:
+    """Baseline ancestral sampler; model(y, i) -> x0hat; K model calls."""
+    y = y_k.copy()
+    for i in range(k_steps, 0, -1):
+        x0 = model(y, i)
+        j = i - 1
+        y = sched["c1"][j] * x0 + sched["c2"][j] * y
+        if sched["sigma"][j] > 0:
+            y = y + sched["sigma"][j] * xi[j]
+    return y
+
+
+def asd(model: Callable, batch_model: Optional[Callable], y_k: np.ndarray,
+        k_steps: int, sched, u: np.ndarray, xi: np.ndarray, theta: int,
+        eval_tail: bool = True):
+    """Autospeculative decoding (Alg 1). Returns (y_0, AsdStats).
+
+    model(y, i) -> x0hat; batch_model(ys (n,d), is (n,)) -> (n,d) or None
+    to loop over `model`. theta <= 0 means ASD-infinity (speculate to the
+    end). ``eval_tail`` additionally evaluates the chain's final point in
+    the verify round so a fully-accepted window chains into the next
+    proposal for free (DESIGN.md §2).
+    """
+    if batch_model is None:
+        def batch_model(ys, idxs):
+            return np.stack([model(ys[r], int(idxs[r]))
+                             for r in range(len(ys))])
+
+    c1, c2, sigma = sched["c1"], sched["c2"], sched["sigma"]
+    stats = AsdStats()
+    y = y_k.copy()
+    i_cur = k_steps
+    x0_cur = None  # x0hat at (y, i_cur) when already known
+    while i_cur > 0:
+        stats.iterations += 1
+        th = i_cur if theta <= 0 else min(theta, i_cur)
+
+        # --- proposal round: one model call (unless chained from verify)
+        if x0_cur is None:
+            x0a = model(y, i_cur)
+            stats.model_calls += 1
+            stats.parallel_rounds += 1
+        else:
+            x0a = x0_cur
+
+        # --- speculate (kernel `speculate`): chain positions k = 0..th-1
+        # cover transitions j -> j-1 for j = i_cur - k
+        js = i_cur - np.arange(th)            # DDPM indices of transitions
+        m_hat = np.empty((th, len(y)))
+        y_hat = np.empty((th, len(y)))
+        y_prev = y
+        for k in range(th):
+            j = js[k] - 1                      # schedule/noise row
+            m_hat[k] = c1[j] * x0a + c2[j] * y_prev
+            y_hat[k] = m_hat[k] + sigma[j] * xi[j]
+            y_prev = y_hat[k]
+
+        # --- verify round: one *parallel* batch of model calls at the
+        # proposed points (chain positions 1..th-1; position 0 reuses x0a
+        # — that is Lemma 13), plus optionally the tail point.
+        eval_pos = list(range(1, th))
+        tail = eval_tail and js[-1] - 1 > 0
+        ys_eval = [y_hat[k - 1] for k in eval_pos]
+        idx_eval = [js[k] for k in eval_pos]
+        if tail:
+            ys_eval.append(y_hat[th - 1])
+            idx_eval.append(js[th - 1] - 1)
+        if ys_eval:
+            x0_eval = batch_model(np.stack(ys_eval), np.asarray(idx_eval))
+            stats.model_calls += len(ys_eval)
+            stats.parallel_rounds += 1
+        else:
+            x0_eval = np.zeros((0, len(y)))
+
+        x0_at = {0: x0a}
+        for n, k in enumerate(eval_pos):
+            x0_at[k] = x0_eval[n]
+        x0_tail = x0_eval[-1] if tail else None
+
+        # --- verifier (Alg 2): sequential-scan semantics over parallel GRS
+        advanced = 0
+        x0_next = None
+        for k in range(th):
+            j = js[k] - 1
+            y_base = y if k == 0 else y_hat[k - 1]
+            m = c1[j] * x0_at[k] + c2[j] * y_base
+            z, ok = grs(u[j], xi[j], m_hat[k], m, sigma[j])
+            if ok:
+                stats.accepted += 1
+                y = z
+                advanced += 1
+                if k == th - 1 and tail:
+                    x0_next = x0_tail  # accepted tail: z == y_hat[th-1]
+            else:
+                stats.rejected += 1
+                y = z                 # reflected sample — still exact
+                advanced += 1
+                break
+        i_cur -= advanced
+        x0_cur = x0_next
+    return y, stats

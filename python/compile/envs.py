@@ -1,0 +1,270 @@
+"""Point-mass manipulation environments (Robomimic stand-ins).
+
+DESIGN.md §7: deterministic kinematics shared verbatim with
+rust/src/env/ — python generates expert demonstrations for behaviour
+cloning; rust evaluates the trained diffusion policies (Table 3 / Fig 5).
+Any change here MUST be mirrored in rust/src/env/point_mass.rs.
+
+Model: n_arms point masses with 2-D position and a binary gripper.
+Action per arm is 7-D ([dx, dy, grip, 4 unused] — matching the paper's
+7-DoF OSC action space; unused dims carry expert noise and are modelled
+by the policy but ignored by the dynamics). An episode is a sequence of
+"legs":
+
+  GRASP      — move gripper to the object and close: succeeds when the
+               arm's grip is closed within `tol` of the object.
+  VIA(x, y)  — pass within `tol` of a waypoint while carrying.
+  PLACE(x,y) — release the object within `tol` of the target.
+
+Success = all legs completed within `max_steps`. Tasks:
+
+  square     1 arm,  grasp(.05) -> place(.3,.7; .06)            ~easy
+  transport  2 arms, grasp(.05) -> place-handoff(.5,.5; .05) by arm0,
+             grasp(.05) -> place(.85,.5; .07) by arm1           ~medium
+  toolhang   1 arm,  grasp(.035) -> via(.5,.35) -> via(.55,.75)
+             -> place(.62,.8), all tol .035                     ~hard
+"""
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+DT = 0.05
+ACTION_DIM_PER_ARM = 7
+CHUNK = 16        # diffusion policy action-chunk length (paper: k=16)
+EXEC_STEPS = 8    # receding horizon: execute 8, replan
+
+LEG_GRASP = 0
+LEG_VIA = 1
+LEG_PLACE = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Leg:
+    arm: int
+    kind: int
+    target: Optional[Tuple[float, float]]  # None for GRASP
+    tol: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    name: str
+    n_arms: int
+    obj_box: Tuple[float, float, float, float]       # lox, loy, hix, hiy
+    ee_start: List[Tuple[float, float, float, float]]  # per arm
+    legs: List[Leg]
+    max_steps: int
+    expert_noise: float
+
+    @property
+    def action_dim(self) -> int:
+        return ACTION_DIM_PER_ARM * self.n_arms
+
+    @property
+    def obs_dim(self) -> int:
+        # ee(2/arm) + grip(1/arm) + obj(2) + carried onehot(n_arms+1)
+        # + leg fraction(1) + current leg target(2)
+        return 3 * self.n_arms + 2 + (self.n_arms + 1) + 1 + 2
+
+    @property
+    def chunk_dim(self) -> int:
+        return CHUNK * self.action_dim
+
+
+SQUARE = TaskSpec(
+    name="square", n_arms=1,
+    obj_box=(0.55, 0.15, 0.85, 0.45),
+    ee_start=[(0.05, 0.05, 0.30, 0.30)],
+    legs=[Leg(0, LEG_GRASP, None, 0.05),
+          Leg(0, LEG_PLACE, (0.30, 0.70), 0.06)],
+    max_steps=100, expert_noise=0.07,
+)
+
+TRANSPORT = TaskSpec(
+    name="transport", n_arms=2,
+    obj_box=(0.10, 0.40, 0.30, 0.60),
+    ee_start=[(0.05, 0.05, 0.25, 0.25), (0.75, 0.75, 0.95, 0.95)],
+    legs=[Leg(0, LEG_GRASP, None, 0.05),
+          Leg(0, LEG_PLACE, (0.50, 0.50), 0.05),
+          Leg(1, LEG_GRASP, None, 0.05),
+          Leg(1, LEG_PLACE, (0.85, 0.50), 0.07)],
+    max_steps=160, expert_noise=0.07,
+)
+
+TOOLHANG = TaskSpec(
+    name="toolhang", n_arms=1,
+    obj_box=(0.15, 0.10, 0.45, 0.30),
+    ee_start=[(0.60, 0.60, 0.85, 0.85)],
+    legs=[Leg(0, LEG_GRASP, None, 0.035),
+          Leg(0, LEG_VIA, (0.50, 0.35), 0.035),
+          Leg(0, LEG_VIA, (0.55, 0.75), 0.035),
+          Leg(0, LEG_PLACE, (0.62, 0.80), 0.035)],
+    max_steps=120, expert_noise=0.12,
+)
+
+TASKS = {t.name: t for t in (SQUARE, TRANSPORT, TOOLHANG)}
+
+
+class PointMassEnv:
+    """Deterministic kinematics; all randomness enters via reset(rng) and
+    the actions. Mirrored by rust/src/env/point_mass.rs."""
+
+    def __init__(self, spec: TaskSpec):
+        self.spec = spec
+
+    def reset(self, rng: np.random.Generator):
+        s = self.spec
+        self.ee = np.array([
+            [rng.uniform(b[0], b[2]), rng.uniform(b[1], b[3])]
+            for b in s.ee_start])
+        self.grip = np.zeros(s.n_arms, dtype=bool)
+        b = s.obj_box
+        self.obj = np.array([rng.uniform(b[0], b[2]), rng.uniform(b[1], b[3])])
+        self.carried = -1
+        self.leg_idx = 0
+        self.steps = 0
+        self.failed = False
+        return self.obs()
+
+    # -- observation ------------------------------------------------------
+    def obs(self) -> np.ndarray:
+        s = self.spec
+        carried_oh = np.zeros(s.n_arms + 1)
+        carried_oh[self.carried + 1] = 1.0
+        if self.leg_idx < len(s.legs):
+            leg = s.legs[self.leg_idx]
+            tgt = self.obj if leg.kind == LEG_GRASP else np.asarray(leg.target)
+        else:
+            tgt = self.obj
+        return np.concatenate([
+            self.ee.ravel(), self.grip.astype(np.float64),
+            self.obj, carried_oh,
+            [self.leg_idx / len(s.legs)], tgt])
+
+    @property
+    def done(self) -> bool:
+        return (self.leg_idx >= len(self.spec.legs) or self.failed
+                or self.steps >= self.spec.max_steps)
+
+    @property
+    def success(self) -> bool:
+        return self.leg_idx >= len(self.spec.legs) and not self.failed
+
+    # -- dynamics ---------------------------------------------------------
+    def step(self, action: np.ndarray):
+        s = self.spec
+        assert action.shape == (s.action_dim,)
+        self.steps += 1
+        for a in range(s.n_arms):
+            d = np.clip(action[7 * a: 7 * a + 2], -1.0, 1.0)
+            self.ee[a] = self.ee[a] + DT * d
+            self.grip[a] = action[7 * a + 2] > 0.0
+
+        # dropping: carrier opened its grip
+        if self.carried >= 0 and not self.grip[self.carried]:
+            dropped_by = self.carried
+            self.carried = -1
+            # if the current leg required carrying, check it wasn't a
+            # successful PLACE (handled below); VIA legs fail on drop
+            leg = s.legs[self.leg_idx] if self.leg_idx < len(s.legs) else None
+            if leg is not None and leg.kind == LEG_VIA and leg.arm == dropped_by:
+                self.failed = True
+
+        if self.carried >= 0:
+            self.obj = self.ee[self.carried].copy()
+
+        if self.leg_idx < len(s.legs):
+            leg = s.legs[self.leg_idx]
+            if leg.kind == LEG_GRASP:
+                if (self.carried == -1 and self.grip[leg.arm]
+                        and _dist(self.ee[leg.arm], self.obj) < leg.tol):
+                    self.carried = leg.arm
+                    self.leg_idx += 1
+            elif leg.kind == LEG_VIA:
+                if (self.carried == leg.arm
+                        and _dist(self.ee[leg.arm], np.asarray(leg.target)) < leg.tol):
+                    self.leg_idx += 1
+            elif leg.kind == LEG_PLACE:
+                if (self.carried == -1 and not self.grip[leg.arm]
+                        and _dist(self.obj, np.asarray(leg.target)) < leg.tol):
+                    self.leg_idx += 1
+        return self.obs()
+
+
+def _dist(a, b) -> float:
+    return float(np.hypot(a[0] - b[0], a[1] - b[1]))
+
+
+# ---------------------------------------------------------------------------
+# Scripted expert (P-controller over the current leg) — demo generation
+# ---------------------------------------------------------------------------
+
+KP = 4.0
+GRIP_CLOSE_FRAC = 0.9   # close/open the gripper inside tol * this
+
+
+def expert_action(env: PointMassEnv, rng: np.random.Generator) -> np.ndarray:
+    s = env.spec
+    act = np.zeros(s.action_dim)
+    leg = s.legs[env.leg_idx] if env.leg_idx < len(s.legs) else None
+    for a in range(s.n_arms):
+        if leg is not None and leg.arm == a:
+            if leg.kind == LEG_GRASP:
+                tgt = env.obj
+                close = _dist(env.ee[a], env.obj) < leg.tol * GRIP_CLOSE_FRAC
+                grip_cmd = 1.0 if close else -1.0
+            elif leg.kind == LEG_VIA:
+                tgt = np.asarray(leg.target)
+                grip_cmd = 1.0
+            else:  # PLACE
+                tgt = np.asarray(leg.target)
+                near = _dist(env.ee[a], tgt) < leg.tol * GRIP_CLOSE_FRAC
+                grip_cmd = -1.0 if near else 1.0
+        else:
+            # idle arm: pre-position at its next leg's target (or stay)
+            tgt = _next_target_for_arm(env, a)
+            grip_cmd = -1.0
+        delta = np.clip(KP * (tgt - env.ee[a]), -1.0, 1.0)
+        act[7 * a: 7 * a + 2] = delta
+        act[7 * a + 2] = grip_cmd
+    act = act + s.expert_noise * rng.standard_normal(s.action_dim)
+    return np.clip(act, -1.0, 1.0)
+
+
+def _next_target_for_arm(env: PointMassEnv, arm: int) -> np.ndarray:
+    for leg in env.spec.legs[env.leg_idx:]:
+        if leg.arm == arm:
+            return env.obj if leg.kind == LEG_GRASP else np.asarray(leg.target)
+    return env.ee[arm]
+
+
+def collect_demos(spec: TaskSpec, n_episodes: int, seed: int):
+    """Run the scripted expert; returns (obs, chunks) arrays for BC.
+
+    obs: (N, obs_dim); chunks: (N, CHUNK * action_dim) — the CHUNK actions
+    following each visited state (padded by repeating the last action).
+    Episodes that fail are discarded (BC on successes only).
+    """
+    rng = np.random.default_rng(seed)
+    env = PointMassEnv(spec)
+    all_obs, all_chunks, n_ok = [], [], 0
+    while n_ok < n_episodes:
+        obs_list, act_list = [], []
+        env.reset(rng)
+        while not env.done:
+            obs_list.append(env.obs())
+            a = expert_action(env, rng)
+            act_list.append(a)
+            env.step(a)
+        if not env.success:
+            continue
+        n_ok += 1
+        acts = np.asarray(act_list)
+        pad = np.repeat(acts[-1:], CHUNK, axis=0)
+        acts = np.concatenate([acts, pad], axis=0)
+        for t, o in enumerate(obs_list):
+            all_obs.append(o)
+            all_chunks.append(acts[t: t + CHUNK].ravel())
+    return np.asarray(all_obs), np.asarray(all_chunks)

@@ -1,0 +1,148 @@
+"""Golden traces for Rust parity tests (artifacts/golden.json).
+
+Generated at build time alongside the HLO artifacts:
+
+* env traces      — explicit initial state + action sequence + expected
+                    observation/state sequence per task (rust env must
+                    reproduce bit-for-bit up to f64 rounding).
+* model forwards  — (y, t, cond) -> x0hat tuples per variant (checks the
+                    rust HLO execution AND the rust-native MLP oracle).
+* schedule spots  — c1/c2/sigma at sampled indices.
+* asd trace       — full ASD run on gmm2d with explicit (u, xi) streams;
+                    rust must reproduce the final sample and stats.
+"""
+
+import json
+import os
+
+import numpy as np
+
+from . import envs
+from .asd_ref import asd, sequential_ddpm
+from .model import denoise_ref
+from .schedule import make_schedule
+from .variants import VARIANTS
+
+
+def env_traces():
+    out = {}
+    for name, spec in envs.TASKS.items():
+        rng = np.random.default_rng(2024)
+        env = envs.PointMassEnv(spec)
+        env.reset(rng)
+        init = {"ee": env.ee.tolist(), "obj": env.obj.tolist()}
+        actions, obs_seq = [], [env.obs().tolist()]
+        arng = np.random.default_rng(77)
+        for t in range(40):
+            a = envs.expert_action(env, arng)
+            actions.append(a.tolist())
+            obs_seq.append(env.step(a).tolist())
+        out[name] = {
+            "init": init,
+            "actions": actions,
+            "obs": obs_seq,
+            "leg_idx": env.leg_idx,
+            "carried": env.carried,
+            "failed": env.failed,
+            "obs_dim": spec.obs_dim,
+            "action_dim": spec.action_dim,
+        }
+    return out
+
+
+def model_forward_goldens(trained):
+    """trained: {name: params}; 3 probe points per variant."""
+    out = {}
+    for name, params in trained.items():
+        cfg = VARIANTS[name].cfg
+        rng = np.random.default_rng(hash(name) % (2**31))
+        cases = []
+        for _ in range(3):
+            y = rng.standard_normal((2, cfg.d)).astype(np.float32)
+            t = rng.integers(1, cfg.k_steps + 1, 2).astype(np.float32)
+            cond = rng.standard_normal((2, cfg.cond_dim)).astype(np.float32)
+            x0 = np.asarray(denoise_ref(
+                [(w, b) for w, b in params], y, t, cond, cfg))
+            cases.append({"y": y.tolist(), "t": t.tolist(),
+                          "cond": cond.tolist(), "x0": x0.tolist()})
+        out[name] = cases
+    return out
+
+
+def schedule_spots():
+    out = {}
+    for k in (100, 1000):
+        s = make_schedule(k)
+        idx = [0, 1, k // 2, k - 1]
+        out[str(k)] = {
+            "idx": idx,
+            "c1": [s["c1"][i] for i in idx],
+            "c2": [s["c2"][i] for i in idx],
+            "sigma": [s["sigma"][i] for i in idx],
+            "abar": [s["abar"][i] for i in idx],
+        }
+    return out
+
+
+def asd_trace(trained):
+    """Golden ASD + sequential run on gmm2d with the trained network."""
+    name = "gmm2d"
+    if name not in trained:
+        return None
+    params = [(w, b) for w, b in trained[name]]
+    cfg = VARIANTS[name].cfg
+    sched = make_schedule(cfg.k_steps)
+
+    def model(y, i):
+        out = denoise_ref(params, y[None].astype(np.float32),
+                          np.asarray([float(i)], np.float32),
+                          np.zeros((1, 0), np.float32), cfg)
+        return np.asarray(out)[0].astype(np.float64)
+
+    rng = np.random.default_rng(31337)
+    y_k = rng.standard_normal(cfg.d)
+    xi = rng.standard_normal((cfg.k_steps, cfg.d))
+    u = rng.uniform(0, 1, cfg.k_steps)
+    y_seq = sequential_ddpm(model, y_k, cfg.k_steps, sched, xi)
+    traces = {}
+    for theta in (4, 8, 0):
+        y0, st = asd(model, None, y_k, cfg.k_steps, sched, u, xi, theta)
+        traces[str(theta)] = {
+            "y0": y0.tolist(),
+            "model_calls": st.model_calls,
+            "parallel_rounds": st.parallel_rounds,
+            "iterations": st.iterations,
+            "accepted": st.accepted,
+            "rejected": st.rejected,
+        }
+    return {
+        "variant": name,
+        "y_k": y_k.tolist(),
+        "xi": xi.tolist(),
+        "u": u.tolist(),
+        "sequential_y0": y_seq.tolist(),
+        "asd": traces,
+    }
+
+
+def write_golden(out_dir: str, trained):
+    data = {
+        "envs": env_traces(),
+        "model_forwards": model_forward_goldens(trained),
+        "schedule": schedule_spots(),
+        "asd_gmm2d": asd_trace(trained),
+    }
+    path = os.path.join(out_dir, "golden.json")
+    # partial rebuilds (aot --only ...) must not lose other variants'
+    # forwards or the gmm2d ASD trace
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        merged = old.get("model_forwards", {})
+        merged.update(data["model_forwards"])
+        data["model_forwards"] = merged
+        if data["asd_gmm2d"] is None:
+            data["asd_gmm2d"] = old.get("asd_gmm2d")
+    with open(path, "w") as f:
+        json.dump(data, f)
+    print(f"[golden] wrote {path}")

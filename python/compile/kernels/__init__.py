@@ -1,0 +1,7 @@
+"""L1 Pallas kernels for the ASD hot path (+ pure-jnp oracles in ref.py)."""
+
+from .fused_linear import ACT_NONE, ACT_SILU, fused_linear
+from .grs import grs_verify
+from .speculate import speculate
+
+__all__ = ["fused_linear", "ACT_NONE", "ACT_SILU", "grs_verify", "speculate"]

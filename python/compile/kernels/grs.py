@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: batched Gaussian Rejection Sampler (Algorithm 3).
+
+For each of T speculative steps, given the proposal mean ``m_hat``, the
+target mean ``m`` (both Gaussians share variance ``sigma^2 I``), the
+pre-drawn noise ``xi ~ N(0, I)`` and uniform seed ``u``:
+
+    v = m_hat - m,  w = v / sigma
+    accept  <=>  u <= min(1, N(xi + w | 0, I) / N(xi | 0, I))
+            <=>  log u <= -(||xi + w||^2 - ||xi||^2) / 2
+                        = -<w, xi> - ||w||^2 / 2
+    accepted:  z = m_hat + sigma * xi           (the proposal sample)
+    rejected:  z = m + sigma * reflect(xi)      (reflection coupling)
+               reflect(xi) = xi - 2 v <v, xi> / ||v||^2
+
+Theorem 12: z ~ N(m, sigma^2 I) exactly in both branches, and
+P[reject] = TV(N(m_hat, s^2 I), N(m, s^2 I)). Edge cases handled exactly:
+
+* ||v|| = 0: accept always (ratio = 1, u <= 1); reflection undefined but
+  unused. This is what makes the first speculated step always accepted
+  (Lemma 13).
+* sigma = 0 (final DDPM step): distributions are Diracs; accept iff
+  m_hat == m (within eps); z = m either way.
+
+All T verifications are independent given their inputs — the kernel is a
+pure row-parallel VPU workload ((T, d) elementwise ops + per-row
+reductions), an ideal single-block Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+_SIGMA0_TOL = 1e-6
+
+
+def _grs_kernel(u_ref, xi_ref, m_hat_ref, m_ref, sigma_ref, z_ref, acc_ref):
+    u = u_ref[...]              # (T,)
+    xi = xi_ref[...]            # (T, d)
+    m_hat = m_hat_ref[...]      # (T, d)
+    m = m_ref[...]              # (T, d)
+    sigma = sigma_ref[...]      # (T,)
+
+    v = m_hat - m                                        # (T, d)
+    v_sq = jnp.sum(v * v, axis=-1)                       # (T,)
+    safe_sigma = jnp.maximum(sigma, _EPS)
+    w = v / safe_sigma[:, None]
+    w_sq = v_sq / (safe_sigma * safe_sigma)
+    # log acceptance ratio, clipped at 0
+    log_ratio = -(jnp.sum(w * xi, axis=-1) + 0.5 * w_sq)
+    accept_gauss = jnp.log(jnp.maximum(u, _EPS)) <= log_ratio
+
+    # reflection of xi along v (guard v=0; the branch is unused there)
+    vxi = jnp.sum(v * xi, axis=-1)
+    refl = xi - 2.0 * v * (vxi / jnp.maximum(v_sq, _EPS))[:, None]
+
+    z_acc = m_hat + sigma[:, None] * xi
+    z_rej = m + sigma[:, None] * refl
+
+    # sigma == 0: Dirac case
+    is_dirac = sigma <= _SIGMA0_TOL
+    accept_dirac = v_sq <= _SIGMA0_TOL * _SIGMA0_TOL
+    accept = jnp.where(is_dirac, accept_dirac, accept_gauss | (v_sq <= _EPS))
+    z = jnp.where(accept[:, None], z_acc, z_rej)
+    z = jnp.where(is_dirac[:, None], m, z)
+
+    z_ref[...] = z
+    acc_ref[...] = accept.astype(jnp.float32)
+
+
+@jax.jit
+def grs_verify(u: jax.Array, xi: jax.Array, m_hat: jax.Array, m: jax.Array,
+               sigma: jax.Array):
+    """Batched GRS over T speculative steps.
+
+    Args:
+      u: (T,) uniform seeds in [0, 1].
+      xi: (T, d) standard normal noise (same stream used by `speculate`).
+      m_hat: (T, d) proposal means.
+      m: (T, d) target means.
+      sigma: (T,) per-step standard deviations.
+
+    Returns:
+      z: (T, d) corrected samples, each ~ N(m_k, sigma_k^2 I).
+      accept: (T,) float32 in {0, 1}.
+    """
+    t_steps, d = xi.shape
+    assert u.shape == sigma.shape == (t_steps,)
+    assert m_hat.shape == m.shape == (t_steps, d)
+    return pl.pallas_call(
+        _grs_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t_steps, d), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps,), jnp.float32),
+        ),
+        interpret=True,
+    )(u, xi, m_hat, m, sigma)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: pytest asserts each Pallas kernel
+matches its oracle across hypothesis-swept shapes (see
+python/tests/test_kernels.py), and the Rust integration tests compare the
+AOT-compiled HLO against the same numbers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+_SIGMA0_TOL = 1e-6
+
+
+def fused_linear_ref(x, w, b, act: int = 1):
+    """act(x @ W + b); act: 0 = none, 1 = SiLU."""
+    y = x @ w + b[None, :]
+    if act == 1:
+        y = y * jax.nn.sigmoid(y)
+    return y
+
+
+def speculate_ref(y_a, x0a, c1, c2, sigma, xi):
+    """Proposal chain via lax.scan (sequential reference)."""
+
+    def step(y_prev, inp):
+        c1_k, c2_k, s_k, xi_k = inp
+        m_hat = c1_k * x0a + c2_k * y_prev
+        y_hat = m_hat + s_k * xi_k
+        return y_hat, (m_hat, y_hat)
+
+    _, (m_hat, y_hat) = jax.lax.scan(step, y_a, (c1, c2, sigma, xi))
+    return m_hat, y_hat
+
+
+def speculate_prefix_ref(y_a, x0a, c1, c2, sigma, xi):
+    """Proposal chain via associative scan — the paper's O~(1) parallel
+    prefix-sum formulation. Recurrence y_k = A_k y_{k-1} + u_k composes
+    as (A, u) o (A', u') = (A A', A' u + u'), an associative monoid.
+    """
+    u = c1[:, None] * x0a[None, :] + sigma[:, None] * xi  # (T, d)
+    a = c2  # (T,)
+
+    def combine(left, right):
+        a_l, u_l = left
+        a_r, u_r = right
+        return a_l * a_r, a_r[:, None] * u_l + u_r
+
+    a_pref, u_pref = jax.lax.associative_scan(combine, (a, u))
+    y_hat = a_pref[:, None] * y_a[None, :] + u_pref
+    m_hat = y_hat - sigma[:, None] * xi
+    return m_hat, y_hat
+
+
+def grs_verify_ref(u, xi, m_hat, m, sigma):
+    """Batched Gaussian rejection sampler, mirroring kernels/grs.py."""
+    v = m_hat - m
+    v_sq = jnp.sum(v * v, axis=-1)
+    safe_sigma = jnp.maximum(sigma, _EPS)
+    w = v / safe_sigma[:, None]
+    w_sq = v_sq / (safe_sigma * safe_sigma)
+    log_ratio = -(jnp.sum(w * xi, axis=-1) + 0.5 * w_sq)
+    accept_gauss = jnp.log(jnp.maximum(u, _EPS)) <= log_ratio
+
+    vxi = jnp.sum(v * xi, axis=-1)
+    refl = xi - 2.0 * v * (vxi / jnp.maximum(v_sq, _EPS))[:, None]
+    z_acc = m_hat + sigma[:, None] * xi
+    z_rej = m + sigma[:, None] * refl
+
+    is_dirac = sigma <= _SIGMA0_TOL
+    accept_dirac = v_sq <= _SIGMA0_TOL * _SIGMA0_TOL
+    accept = jnp.where(is_dirac, accept_dirac, accept_gauss | (v_sq <= _EPS))
+    z = jnp.where(accept[:, None], z_acc, z_rej)
+    z = jnp.where(is_dirac[:, None], m, z)
+    return z, accept.astype(jnp.float32)

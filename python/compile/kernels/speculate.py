@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: ASD proposal chain (Algorithm 1, lines 7-9).
+
+Given the current iterate ``y_a`` at DDPM index ``a`` and the single model
+prediction ``x0a = x_hat_0(y_a, a)``, speculate the next ``T`` denoising
+steps by freezing the model output (hidden exchangeability / Remark 2 of
+the paper): for chain position ``k`` (step index ``j = a - k``):
+
+    m_hat[k] = c1[k] * x0a + c2[k] * y[k-1]        (y[-1] = y_a)
+    y_hat[k] = m_hat[k] + sigma[k] * xi[k]
+
+This is a *linear recurrence* ``y_k = A_k y_{k-1} + u_k`` with scalar
+``A_k = c2[k]`` and ``u_k = c1[k] x0a + sigma[k] xi[k]``; the paper notes
+it is computable in O~(1) parallel time via prefix sums (associative scan
+over (A, u) pairs — that formulation is the oracle in ``ref.py``). The
+kernel below evaluates the recurrence with an in-VMEM ``fori_loop``: for
+T <= 64 and d <= 256 the whole chain state is a single VMEM block, so the
+sequential-in-k loop is latency-bound at ~T cycles of VPU work, which is
+negligible next to the denoiser matmuls it feeds.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _speculate_kernel(y_a_ref, x0a_ref, c1_ref, c2_ref, sigma_ref, xi_ref,
+                      m_hat_ref, y_hat_ref):
+    y_a = y_a_ref[...]          # (d,)
+    x0a = x0a_ref[...]          # (d,)
+    c1 = c1_ref[...]            # (T,)
+    c2 = c2_ref[...]            # (T,)
+    sigma = sigma_ref[...]      # (T,)
+    xi = xi_ref[...]            # (T, d)
+    t_steps = c1.shape[0]
+
+    def body(k, y_prev):
+        m_hat = c1[k] * x0a + c2[k] * y_prev
+        y_hat = m_hat + sigma[k] * xi[k]
+        m_hat_ref[k, :] = m_hat
+        y_hat_ref[k, :] = y_hat
+        return y_hat
+
+    jax.lax.fori_loop(0, t_steps, body, y_a)
+
+
+@jax.jit
+def speculate(y_a: jax.Array, x0a: jax.Array, c1: jax.Array, c2: jax.Array,
+              sigma: jax.Array, xi: jax.Array):
+    """Proposal chain for T speculative steps.
+
+    Args:
+      y_a: (d,) current iterate.
+      x0a: (d,) model prediction at the current iterate.
+      c1, c2, sigma: (T,) per-step DDPM posterior coefficients
+        (``schedule.py`` / rust ``schedule::ddpm`` produce these).
+      xi: (T, d) pre-drawn standard normal noise (rust owns randomness).
+
+    Returns:
+      (m_hat, y_hat): each (T, d); proposal means and proposal samples.
+    """
+    t_steps, d = xi.shape
+    assert y_a.shape == (d,) and x0a.shape == (d,)
+    assert c1.shape == c2.shape == sigma.shape == (t_steps,)
+    return pl.pallas_call(
+        _speculate_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t_steps, d), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, d), jnp.float32),
+        ),
+        interpret=True,
+    )(y_a, x0a, c1, c2, sigma, xi)

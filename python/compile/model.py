@@ -1,0 +1,106 @@
+"""L2 JAX model: x0-predicting MLP denoiser.
+
+Two mathematically identical forward paths:
+
+* ``denoise_pallas`` — composes the L1 ``fused_linear`` Pallas kernel;
+  this is what ``aot.py`` lowers into the HLO artifacts the Rust runtime
+  executes (the request-path function).
+* ``denoise_ref`` — pure jnp; used by the (CPU, jit-compiled) training
+  loop where interpret-mode Pallas would be needlessly slow, and as the
+  pytest oracle that pins the two paths together.
+
+Architecture: concat[y, sinusoidal_temb(i), cond] -> Linear+SiLU ->
+(L-1) x residual(Linear+SiLU) -> Linear -> x0hat. Weights are a flat list
+[(W, b), ...]; `flatten_params` defines the byte layout shared with
+rust/src/model/mlp.rs (the rust-native parity oracle).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ACT_NONE, ACT_SILU, fused_linear
+from .kernels.ref import fused_linear_ref
+
+TEMB_DIM = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    d: int            # data dimension (flattened)
+    cond_dim: int     # conditioning dimension (0 = unconditional)
+    hidden: int
+    layers: int       # number of hidden layers (>= 1)
+    k_steps: int      # diffusion steps K
+
+    @property
+    def in_dim(self) -> int:
+        return self.d + TEMB_DIM + self.cond_dim
+
+
+def time_embedding(t: jax.Array, k_steps: int, dim: int = TEMB_DIM):
+    """Sinusoidal embedding of the integer step index t in 1..K.
+
+    t: (B,) float32 (step indices). Returns (B, dim).
+    """
+    half = dim // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = (t[:, None] / k_steps) * 1000.0 * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_params(cfg: ModelConfig, seed: int) -> List[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    dims = [cfg.in_dim] + [cfg.hidden] * cfg.layers + [cfg.d]
+    params = []
+    for n_in, n_out in zip(dims[:-1], dims[1:]):
+        w = rng.standard_normal((n_in, n_out)) * np.sqrt(2.0 / n_in)
+        b = np.zeros(n_out)
+        params.append((w.astype(np.float32), b.astype(np.float32)))
+    return params
+
+
+def _forward(params, y, t, cond, cfg: ModelConfig, linear):
+    """Shared forward skeleton; `linear(x, w, b, act)` is injected."""
+    temb = time_embedding(t, cfg.k_steps)
+    parts = [y, temb]
+    if cfg.cond_dim > 0:
+        parts.append(cond)
+    h = jnp.concatenate(parts, axis=-1).astype(jnp.float32)
+    w0, b0 = params[0]
+    h = linear(h, w0, b0, ACT_SILU)
+    for w, b in params[1:-1]:
+        h = h + linear(h, w, b, ACT_SILU)  # residual hidden blocks
+    w_out, b_out = params[-1]
+    return linear(h, w_out, b_out, ACT_NONE)
+
+
+def denoise_pallas(params, y, t, cond, cfg: ModelConfig):
+    """(B,d), (B,), (B,cond_dim) -> x0hat (B,d) via Pallas kernels."""
+    return _forward(params, y, t, cond, cfg, fused_linear)
+
+
+def denoise_ref(params, y, t, cond, cfg: ModelConfig):
+    """Pure-jnp twin of denoise_pallas (training + oracle)."""
+    return _forward(params, y, t, cond, cfg, fused_linear_ref)
+
+
+# ---------------------------------------------------------------------------
+# Weight (de)serialization — layout shared with rust/src/model/mlp.rs
+# ---------------------------------------------------------------------------
+
+def flatten_params(params) -> np.ndarray:
+    """Flat f32 buffer: for each layer, W row-major (n_in, n_out) then b."""
+    chunks = []
+    for w, b in params:
+        chunks.append(np.asarray(w, dtype=np.float32).ravel())
+        chunks.append(np.asarray(b, dtype=np.float32).ravel())
+    return np.concatenate(chunks)
+
+
+def layer_dims(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    dims = [cfg.in_dim] + [cfg.hidden] * cfg.layers + [cfg.d]
+    return list(zip(dims[:-1], dims[1:]))

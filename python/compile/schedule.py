@@ -1,0 +1,70 @@
+"""DDPM noise schedule + Stochastic Localization (SL) reparametrization.
+
+Source of truth for the schedule constants; `aot.py` exports the exact
+arrays into artifacts/manifest.json and the Rust `schedule` module
+cross-checks its own computation against them (tested to 1e-6).
+
+Conventions (paper Sec. 3, Remark 2; x0-prediction form):
+
+  forward:   y_i = sqrt(abar_i) x0 + sqrt(1 - abar_i) eps,  i in 1..K
+  reverse:   y_{i-1} = c1_i x0hat(y_i, i) + c2_i y_i + sigma_i xi
+     c1_i    = sqrt(abar_{i-1}) beta_i / (1 - abar_i)
+     c2_i    = sqrt(alpha_i) (1 - abar_{i-1}) / (1 - abar_i)
+     sigma_i = sqrt((1 - abar_{i-1}) beta_i / (1 - abar_i))   (abar_0 = 1)
+
+sigma_1 = 0: the final step is deterministic (Dirac; GRS handles it).
+
+SL equivalence (Thm 9): ybar_t = t e^{s(t)} xbar_{s(t)} with
+s(t) = ln(1 + 1/t) / 2; used by the theory benches (rust schedule::sl).
+"""
+
+import numpy as np
+
+BETA_START = 1e-4
+BETA_END = 2e-2
+REF_STEPS = 1000  # schedule is defined at 1000 steps and rescaled
+
+
+def make_betas(k_steps: int) -> np.ndarray:
+    """Linear-beta schedule, rescaled so total noising matches K=1000.
+
+    For K < 1000 (robot policies use K=100) the betas are scaled by
+    1000/K so abar_K stays ~0 — the same convention diffusers uses when
+    retraining with fewer steps.
+    """
+    scale = REF_STEPS / k_steps
+    betas = np.linspace(BETA_START * scale, BETA_END * scale, k_steps,
+                        dtype=np.float64)
+    # K < ~20 would push beta past 1; clamp (alphas must stay positive)
+    return np.minimum(betas, 0.999)
+
+
+def make_schedule(k_steps: int):
+    """Returns dict of f64 arrays, each of length K, indexed by i-1 for
+    step i in 1..K: betas, alphas, abar, c1, c2, sigma, and abar_prev."""
+    betas = make_betas(k_steps)
+    alphas = 1.0 - betas
+    abar = np.cumprod(alphas)
+    abar_prev = np.concatenate([[1.0], abar[:-1]])
+    c1 = np.sqrt(abar_prev) * betas / (1.0 - abar)
+    c2 = np.sqrt(alphas) * (1.0 - abar_prev) / (1.0 - abar)
+    sigma = np.sqrt((1.0 - abar_prev) * betas / (1.0 - abar))
+    return {
+        "betas": betas,
+        "alphas": alphas,
+        "abar": abar,
+        "abar_prev": abar_prev,
+        "c1": c1,
+        "c2": c2,
+        "sigma": sigma,
+    }
+
+
+def sl_time_of_ddpm(s: np.ndarray) -> np.ndarray:
+    """t(s) = 1 / (e^{2s} - 1): inverse of s(t) = ln(1 + 1/t)/2."""
+    return 1.0 / np.expm1(2.0 * s)
+
+
+def ddpm_time_of_sl(t: np.ndarray) -> np.ndarray:
+    """s(t) = ln(1 + 1/t) / 2 (Thm 9)."""
+    return 0.5 * np.log1p(1.0 / t)

@@ -1,0 +1,98 @@
+"""Synthetic target distributions (the paper's datasets, substituted).
+
+DESIGN.md §4 documents each substitution. Every target here has an exact
+mirror in rust/src/model/targets.rs (distribution-identical sampler +
+ground-truth statistics) so the Rust quality metrics (CLIP-proxy
+alignment, FID-proxy Frechet) are computed against the true target.
+
+All parameters are deterministic functions of fixed seeds and are exported
+into artifacts/manifest.json.
+"""
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# gmm2d: 8 isotropic Gaussians on a circle (unconditional quickstart target)
+# ---------------------------------------------------------------------------
+
+GMM2D_COMPONENTS = 8
+GMM2D_RADIUS = 1.5
+GMM2D_SIGMA = 0.12
+
+
+def gmm2d_params():
+    ang = 2.0 * np.pi * np.arange(GMM2D_COMPONENTS) / GMM2D_COMPONENTS
+    means = np.stack([GMM2D_RADIUS * np.cos(ang),
+                      GMM2D_RADIUS * np.sin(ang)], axis=1)
+    sigmas = np.full(GMM2D_COMPONENTS, GMM2D_SIGMA)
+    weights = np.full(GMM2D_COMPONENTS, 1.0 / GMM2D_COMPONENTS)
+    return means, sigmas, weights
+
+
+def gmm2d_sample(rng: np.random.Generator, n: int):
+    means, sigmas, weights = gmm2d_params()
+    comp = rng.choice(len(weights), size=n, p=weights)
+    return means[comp] + sigmas[comp, None] * rng.standard_normal((n, 2))
+
+
+# ---------------------------------------------------------------------------
+# latent16: 10-class conditional GMM in R^16 (StableDiffusion-latent stand-in)
+# ---------------------------------------------------------------------------
+
+LATENT16_DIM = 16
+LATENT16_CLASSES = 10
+LATENT16_SIGMA = 0.35
+LATENT16_SCALE = 2.0
+_LATENT16_SEED = 1234
+
+
+def latent16_params():
+    rng = np.random.default_rng(_LATENT16_SEED)
+    raw = rng.standard_normal((LATENT16_CLASSES, LATENT16_DIM))
+    means = LATENT16_SCALE * raw / np.linalg.norm(raw, axis=1, keepdims=True)
+    sigmas = np.full(LATENT16_CLASSES, LATENT16_SIGMA)
+    weights = np.full(LATENT16_CLASSES, 1.0 / LATENT16_CLASSES)
+    return means, sigmas, weights
+
+
+def latent16_sample(rng: np.random.Generator, n: int, cls=None):
+    """Class-conditional sample; cls None => classes drawn uniformly."""
+    means, sigmas, _ = latent16_params()
+    if cls is None:
+        cls = rng.integers(0, LATENT16_CLASSES, size=n)
+    else:
+        cls = np.broadcast_to(np.asarray(cls), (n,))
+    x = means[cls] + sigmas[cls, None] * rng.standard_normal(
+        (n, LATENT16_DIM))
+    return x, cls
+
+
+# ---------------------------------------------------------------------------
+# pixel64: procedural 8x8 "texture" images in [-1, 1]^64 (LSUN stand-in)
+# ---------------------------------------------------------------------------
+
+PIXEL64_SIDE = 8
+PIXEL64_DIM = PIXEL64_SIDE * PIXEL64_SIDE
+PIXEL64_FREQ_MIN = 1.0
+PIXEL64_FREQ_MAX = 3.0
+PIXEL64_AMP_MIN = 0.5
+PIXEL64_AMP_MAX = 1.0
+PIXEL64_NOISE = 0.05
+
+
+def pixel64_sample(rng: np.random.Generator, n: int):
+    """Oriented sinusoidal gratings with random frequency/phase/amplitude
+    plus pixel noise. The Rust mirror (model/targets.rs) draws the same
+    parameters from the same uniform/normal primitives."""
+    freq = rng.uniform(PIXEL64_FREQ_MIN, PIXEL64_FREQ_MAX, size=n)
+    psi = rng.uniform(0.0, np.pi, size=n)
+    phase = rng.uniform(0.0, 2.0 * np.pi, size=n)
+    amp = rng.uniform(PIXEL64_AMP_MIN, PIXEL64_AMP_MAX, size=n)
+    ii, jj = np.meshgrid(np.arange(PIXEL64_SIDE), np.arange(PIXEL64_SIDE),
+                         indexing="ij")
+    grid = (np.cos(psi)[:, None, None] * ii[None] +
+            np.sin(psi)[:, None, None] * jj[None]) / PIXEL64_SIDE
+    img = amp[:, None, None] * np.sin(
+        2.0 * np.pi * freq[:, None, None] * grid + phase[:, None, None])
+    img = img + PIXEL64_NOISE * rng.standard_normal(img.shape)
+    return img.reshape(n, PIXEL64_DIM)

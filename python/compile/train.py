@@ -1,0 +1,131 @@
+"""Build-time trainer for every denoiser variant (x0-prediction DDPM).
+
+Runs ONCE inside `make artifacts` (never on the request path). Uses the
+pure-jnp forward (`denoise_ref`) — numerically identical to the Pallas
+path (pinned by pytest) but fast to jit on the 1-core CPU testbed. Adam
+is hand-rolled (no optax in the offline environment).
+"""
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import envs, targets
+from .model import ModelConfig, denoise_ref, init_params
+from .schedule import make_schedule
+from .variants import Variant
+
+
+# ---------------------------------------------------------------------------
+# Data plumbing: each variant yields (x0, cond) training batches
+# ---------------------------------------------------------------------------
+
+def make_dataset(variant: Variant, rng: np.random.Generator):
+    """Returns sample_batch(n) -> (x0 (n,d) f32, cond (n,cond_dim) f32)."""
+    t = variant.target
+    if t == "gmm2d":
+        def batch(n):
+            return (targets.gmm2d_sample(rng, n).astype(np.float32),
+                    np.zeros((n, 0), np.float32))
+    elif t == "latent16":
+        def batch(n):
+            x, cls = targets.latent16_sample(rng, n)
+            cond = np.eye(targets.LATENT16_CLASSES, dtype=np.float32)[cls]
+            return x.astype(np.float32), cond
+    elif t == "pixel64":
+        def batch(n):
+            return (targets.pixel64_sample(rng, n).astype(np.float32),
+                    np.zeros((n, 0), np.float32))
+    elif t == "env":
+        spec = envs.TASKS[variant.env]
+        obs, chunks = envs.collect_demos(spec, variant.demos, variant.seed)
+        obs = obs.astype(np.float32)
+        chunks = chunks.astype(np.float32)
+        print(f"  demos: {len(obs)} transitions from {variant.demos} episodes")
+
+        def batch(n):
+            idx = rng.integers(0, len(obs), size=n)
+            # DART-style robustness: jitter the conditioning observation
+            # so the policy stays on-task under compounding rollout drift
+            jitter = 0.01 * rng.standard_normal((n, obs.shape[1]))
+            return chunks[idx], (obs[idx] + jitter).astype(np.float32)
+    else:
+        raise ValueError(f"unknown target {t}")
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = lambda p: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in p]
+    return zeros(params), zeros(params)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def adam_update(params, grads, m, v, step, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8):
+    bias1 = 1.0 - b1 ** step
+    bias2 = 1.0 - b2 ** step
+
+    def upd(p, g, m_i, v_i):
+        m_n = b1 * m_i + (1 - b1) * g
+        v_n = b2 * v_i + (1 - b2) * g * g
+        p_n = p - lr * (m_n / bias1) / (jnp.sqrt(v_n / bias2) + eps)
+        return p_n, m_n, v_n
+
+    new_p, new_m, new_v = [], [], []
+    for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, m, v):
+        w2, mw2, vw2 = upd(w, gw, mw, vw)
+        b2_, mb2, vb2 = upd(b, gb, mb, vb)
+        new_p.append((w2, b2_))
+        new_m.append((mw2, mb2))
+        new_v.append((vw2, vb2))
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+def train_variant(variant: Variant) -> Tuple[list, float]:
+    """Trains one denoiser; returns (params, final_loss)."""
+    cfg: ModelConfig = variant.cfg
+    sched = make_schedule(cfg.k_steps)
+    sqrt_abar = jnp.asarray(np.sqrt(sched["abar"]), jnp.float32)
+    sqrt_1m = jnp.asarray(np.sqrt(1.0 - sched["abar"]), jnp.float32)
+
+    rng = np.random.default_rng(variant.seed)
+    batch_fn = make_dataset(variant, rng)
+    params = [(jnp.asarray(w), jnp.asarray(b))
+              for w, b in init_params(cfg, variant.seed)]
+    m, v = adam_init(params)
+
+    def loss_fn(p, x0, cond, t_idx, eps):
+        # forward-noise x0 to step t (t_idx is 0-based into the tables)
+        y = sqrt_abar[t_idx][:, None] * x0 + sqrt_1m[t_idx][:, None] * eps
+        pred = denoise_ref(p, y, (t_idx + 1).astype(jnp.float32), cond, cfg)
+        return jnp.mean(jnp.sum((pred - x0) ** 2, axis=-1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    loss_val = float("nan")
+    ema_loss = None
+    for step in range(1, variant.train_steps + 1):
+        x0, cond = batch_fn(variant.batch_size)
+        t_idx = jnp.asarray(
+            rng.integers(0, cfg.k_steps, size=variant.batch_size))
+        eps = jnp.asarray(
+            rng.standard_normal((variant.batch_size, cfg.d)), jnp.float32)
+        loss_val, grads = grad_fn(params, jnp.asarray(x0), jnp.asarray(cond),
+                                  t_idx, eps)
+        params, m, v = adam_update(params, grads, m, v, step, lr=variant.lr)
+        loss_f = float(loss_val)
+        ema_loss = loss_f if ema_loss is None else 0.98 * ema_loss + 0.02 * loss_f
+        if step % 1000 == 0 or step == 1:
+            print(f"  step {step:5d}  loss {loss_f:.4f}  ema {ema_loss:.4f}")
+    return [(np.asarray(w), np.asarray(b)) for w, b in params], float(ema_loss)

@@ -1,0 +1,66 @@
+"""Model-variant registry: everything `train.py` / `aot.py` / the Rust
+manifest loader need to agree on, in one place.
+
+Variants (DESIGN.md §4 maps each to the paper's workload):
+  gmm2d            quickstart toy target, K=100
+  latent16         StableDiffusion-v2 stand-in (Fig 2 / Table 1 / Fig 3)
+  pixel64          LSUN-Church pixel-model stand-in (Fig 4 / Table 2)
+  policy_square    Robomimic Square stand-in (Fig 5 / Table 3)
+  policy_transport Robomimic Transport stand-in
+  policy_toolhang  Robomimic ToolHang stand-in
+"""
+
+import dataclasses
+from typing import Optional
+
+from .envs import TASKS, CHUNK
+from .model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    cfg: ModelConfig
+    target: str              # gmm2d | latent16 | pixel64 | env
+    env: Optional[str]       # task name for policy variants
+    train_steps: int
+    batch_size: int
+    lr: float
+    seed: int
+    demos: int = 0           # expert episodes for policy variants
+
+
+def _v(name, d, cond_dim, hidden, layers, k, target, env=None,
+       train_steps=3000, batch_size=256, lr=1e-3, seed=0, demos=0):
+    return Variant(name, ModelConfig(d=d, cond_dim=cond_dim, hidden=hidden,
+                                     layers=layers, k_steps=k),
+                   target, env, train_steps, batch_size, lr, seed, demos)
+
+
+def _policy(name, task, hidden=384, layers=3, demos=1000, train_steps=16000):
+    spec = TASKS[task]
+    return _v(f"policy_{task}", d=CHUNK * spec.action_dim,
+              cond_dim=spec.obs_dim, hidden=hidden, layers=layers, k=100,
+              target="env", env=task, train_steps=train_steps,
+              seed=hash(task) % (2**31), demos=demos)
+
+
+VARIANTS = {v.name: v for v in [
+    _v("gmm2d", d=2, cond_dim=0, hidden=128, layers=3, k=100,
+       target="gmm2d", train_steps=3000, seed=7),
+    _v("latent16", d=16, cond_dim=10, hidden=256, layers=4, k=1000,
+       target="latent16", train_steps=4000, seed=11),
+    _v("pixel64", d=64, cond_dim=0, hidden=128, layers=3, k=1000,
+       target="pixel64", train_steps=4000, seed=13),
+    _policy("square", "square"),
+    _policy("transport", "transport"),
+    _policy("toolhang", "toolhang"),
+]}
+
+# Batched denoise artifact sizes; the Rust runtime pads to the smallest
+# B >= n and chunks batches larger than MAX_B across "workers".
+BATCH_SIZES = [1, 2, 4, 8, 16, 32]
+MAX_B = BATCH_SIZES[-1]
+
+# Speculation-chain length per HLO speculate/verify kernel artifact.
+SPEC_T = 32

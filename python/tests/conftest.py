@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from the repo root or python/.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,7 @@
+"""Standard normal CDF via erf (scipy is not available offline)."""
+
+import math
+
+
+def normal_cdf(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))

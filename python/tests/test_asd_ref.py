@@ -1,0 +1,166 @@
+"""ASD reference implementation vs sequential DDPM (Theorems 1, 3, 4).
+
+The model here is the *analytic* GMM posterior mean (no NN error), so the
+tests exercise exactly the algorithmic claims:
+
+* Thm 3 — ASD output is distributed identically to sequential DDPM
+  (two-sample moment tests over many seeds).
+* Lemma 13 — the first speculated step of every window is accepted.
+* Thm 4 flavour — ASD's parallel rounds shrink as theta grows; ASD-inf
+  beats sequential by a clear margin.
+* Thm 1 — exchangeability of SL increments (direct simulation).
+"""
+
+import numpy as np
+import pytest
+
+from compile.asd_ref import asd, sequential_ddpm
+from compile.schedule import make_schedule
+from compile import targets
+
+
+def gmm_x0_posterior(means, sigmas, weights):
+    """E[x0 | y_i] for a GMM target under the DDPM forward process:
+    y_i = sqrt(abar_i) x0 + sqrt(1-abar_i) eps."""
+
+    def model(y, i, *, abar):
+        a = abar[i - 1]
+        sa = np.sqrt(a)
+        var = a * sigmas ** 2 + (1.0 - a)            # per component
+        diff = y[None, :] - sa * means               # (C, d)
+        logw = (np.log(weights) - 0.5 * np.sum(diff ** 2, -1) / var
+                - 0.5 * len(y) * np.log(var))
+        logw -= logw.max()
+        r = np.exp(logw)
+        r /= r.sum()
+        # E[x0 | y, c] = (sa * sigma_c^2 * y/..) standard conditioning:
+        gain = sa * sigmas ** 2 / var                # (C,)
+        cond_mean = means + gain[:, None] * (diff)   # means + gain (y - sa mu)
+        return r @ cond_mean
+
+    return model
+
+
+@pytest.fixture(scope="module")
+def gmm_setup():
+    means, sigmas, weights = targets.gmm2d_params()
+    k = 60
+    sched = make_schedule(k)
+    raw = gmm_x0_posterior(means, sigmas, weights)
+
+    def model(y, i):
+        return raw(y, i, abar=sched["abar"])
+
+    return model, k, sched
+
+
+def _sample_many(sampler, n, seed0, d=2, k=60):
+    out = np.empty((n, d))
+    for s in range(n):
+        rng = np.random.default_rng(seed0 + s)
+        y_k = rng.standard_normal(d)
+        xi = rng.standard_normal((k, d))
+        u = rng.uniform(0, 1, k)
+        out[s] = sampler(y_k, xi, u)
+    return out
+
+
+def test_asd_matches_sequential_distribution(gmm_setup):
+    model, k, sched = gmm_setup
+    n = 400
+
+    seq = _sample_many(
+        lambda y, xi, u: sequential_ddpm(model, y, k, sched, xi),
+        n, seed0=100, k=k)
+    spec = _sample_many(
+        lambda y, xi, u: asd(model, None, y, k, sched, u, xi, theta=8)[0],
+        n, seed0=100, k=k)
+
+    # same target: compare radial distribution + first two moments
+    r_seq = np.linalg.norm(seq, axis=1)
+    r_asd = np.linalg.norm(spec, axis=1)
+    assert abs(r_seq.mean() - r_asd.mean()) < 0.08
+    assert abs(r_seq.std() - r_asd.std()) < 0.08
+    assert np.all(np.abs(seq.mean(0) - spec.mean(0)) < 0.15)
+
+
+def test_asd_exactness_vs_target(gmm_setup):
+    """ASD samples should land on the GMM modes (radius ~1.5)."""
+    model, k, sched = gmm_setup
+    spec = _sample_many(
+        lambda y, xi, u: asd(model, None, y, k, sched, u, xi, theta=0)[0],
+        200, seed0=999, k=k)
+    r = np.linalg.norm(spec, axis=1)
+    assert abs(r.mean() - targets.GMM2D_RADIUS) < 0.1
+    assert r.std() < 0.3
+
+
+def test_lemma13_first_speculation_always_accepted(gmm_setup):
+    model, k, sched = gmm_setup
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        y_k = rng.standard_normal(2)
+        xi = rng.standard_normal((k, 2))
+        u = rng.uniform(0, 1, k)
+        _, stats = asd(model, None, y_k, k, sched, u, xi, theta=4)
+        # every iteration advances by >= 1 accepted step => iterations <= K
+        # and, with theta >= 2, rejections only happen at positions >= 1:
+        assert stats.accepted >= stats.iterations
+        assert stats.accepted + stats.rejected == k
+
+
+def test_asd_rounds_decrease_with_theta(gmm_setup):
+    model, k, sched = gmm_setup
+    rng = np.random.default_rng(42)
+    rounds = {}
+    for theta in (1, 4, 16, 0):  # 0 = infinity
+        tot = 0
+        for trial in range(4):
+            seed_rng = np.random.default_rng(1000 + trial)
+            y_k = seed_rng.standard_normal(2)
+            xi = seed_rng.standard_normal((k, 2))
+            u = seed_rng.uniform(0, 1, k)
+            _, stats = asd(model, None, y_k, k, sched, u, xi, theta=theta)
+            tot += stats.parallel_rounds
+        rounds[theta] = tot / 4
+    assert rounds[4] < rounds[1]
+    assert rounds[16] <= rounds[4] + 1
+    assert rounds[0] <= rounds[16] + 1
+    # ASD-inf must beat sequential's K rounds decisively
+    assert rounds[0] < 0.75 * k
+
+
+def test_asd_theta1_equals_half_speed(gmm_setup):
+    """theta=1: every window is the always-accepted step => exactly K
+    iterations; with eval_tail chaining the proposal is free, so rounds
+    ~= K (not 2K)."""
+    model, k, sched = gmm_setup
+    rng = np.random.default_rng(3)
+    y_k = rng.standard_normal(2)
+    xi = rng.standard_normal((k, 2))
+    u = rng.uniform(0, 1, k)
+    _, stats = asd(model, None, y_k, k, sched, u, xi, theta=1)
+    assert stats.iterations == k
+    assert stats.rejected == 0
+
+
+def test_exchangeability_of_sl_increments():
+    """Thm 1 by direct simulation: ybar_t = t x* + W_t; equal-eta
+    increments are exchangeable => any permutation has the same joint
+    law. Check pairwise product moments under a swap."""
+    rng = np.random.default_rng(0)
+    n, m, eta = 40000, 4, 0.25
+    x_star = rng.choice([-1.0, 1.0], size=n)  # Rademacher target
+    # increments: Delta_i = eta x* + (W_{t+eta} - W_t)
+    deltas = eta * x_star[:, None] + np.sqrt(eta) * rng.standard_normal(
+        (n, m))
+    # moments invariant under permutation of the m increments
+    m12 = (deltas[:, 0] * deltas[:, 1]).mean()
+    m23 = (deltas[:, 1] * deltas[:, 2]).mean()
+    m03 = (deltas[:, 0] * deltas[:, 3]).mean()
+    tol = 4.0 / np.sqrt(n)
+    assert abs(m12 - m23) < tol
+    assert abs(m12 - m03) < tol
+    # and the marginal laws match
+    assert abs(deltas[:, 0].mean() - deltas[:, 3].mean()) < tol
+    assert abs(deltas[:, 0].std() - deltas[:, 2].std()) < tol

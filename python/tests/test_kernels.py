@@ -1,0 +1,209 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal).
+
+hypothesis sweeps shapes; fixed-seed numpy draws the values (kernels are
+deterministic functions of their inputs — all randomness is an input).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (ACT_NONE, ACT_SILU, fused_linear, grs_verify,
+                             speculate)
+from compile.kernels.ref import (fused_linear_ref, grs_verify_ref,
+                                 speculate_prefix_ref, speculate_ref)
+
+_SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(b=st.sampled_from([1, 2, 3, 8, 32]),
+       n_in=st.sampled_from([2, 7, 64, 130]),
+       n_out=st.sampled_from([1, 16, 128]),
+       act=st.sampled_from([ACT_NONE, ACT_SILU]),
+       seed=st.integers(0, 2**16))
+def test_fused_linear_matches_ref(b, n_in, n_out, act, seed):
+    rng = _rng(seed)
+    x = rng.standard_normal((b, n_in)).astype(np.float32)
+    w = rng.standard_normal((n_in, n_out)).astype(np.float32)
+    bias = rng.standard_normal(n_out).astype(np.float32)
+    got = fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), act)
+    want = fused_linear_ref(jnp.asarray(x), jnp.asarray(w),
+                            jnp.asarray(bias), act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_silu_values():
+    # silu(0) = 0; silu(large) ~ identity
+    x = jnp.asarray([[0.0, 100.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = np.asarray(fused_linear(x, w, b, ACT_SILU))
+    assert abs(out[0, 0]) < 1e-7
+    np.testing.assert_allclose(out[0, 1], 100.0, rtol=1e-6)
+
+
+def test_fused_linear_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        fused_linear(jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros(5))
+
+
+# ---------------------------------------------------------------------------
+# speculate
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(t=st.sampled_from([1, 2, 5, 32]),
+       d=st.sampled_from([1, 2, 16, 112]),
+       seed=st.integers(0, 2**16))
+def test_speculate_matches_scan_ref(t, d, seed):
+    rng = _rng(seed)
+    y_a = rng.standard_normal(d).astype(np.float32)
+    x0a = rng.standard_normal(d).astype(np.float32)
+    c1 = rng.uniform(0, 0.2, t).astype(np.float32)
+    c2 = rng.uniform(0.8, 1.0, t).astype(np.float32)
+    sigma = rng.uniform(0, 0.1, t).astype(np.float32)
+    xi = rng.standard_normal((t, d)).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in (y_a, x0a, c1, c2, sigma, xi))
+    m_hat, y_hat = speculate(*args)
+    m_ref, y_ref = speculate_ref(*args)
+    np.testing.assert_allclose(np.asarray(m_hat), np.asarray(m_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_hat), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**_SETTINGS)
+@given(t=st.sampled_from([1, 3, 32]), d=st.sampled_from([2, 16]),
+       seed=st.integers(0, 2**16))
+def test_prefix_scan_equals_sequential_scan(t, d, seed):
+    """The paper's O~(1) associative-scan formulation == the recurrence."""
+    rng = _rng(seed)
+    args = tuple(jnp.asarray(a) for a in (
+        rng.standard_normal(d).astype(np.float32),
+        rng.standard_normal(d).astype(np.float32),
+        rng.uniform(0, 0.2, t).astype(np.float32),
+        rng.uniform(0.8, 1.0, t).astype(np.float32),
+        rng.uniform(0, 0.1, t).astype(np.float32),
+        rng.standard_normal((t, d)).astype(np.float32)))
+    m_seq, y_seq = speculate_ref(*args)
+    m_pre, y_pre = speculate_prefix_ref(*args)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_pre),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_seq), np.asarray(m_pre),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_speculate_first_step_mean():
+    """Chain position 0: m_hat = c1*x0a + c2*y_a exactly."""
+    y_a = jnp.asarray([1.0, -2.0], jnp.float32)
+    x0a = jnp.asarray([0.5, 0.5], jnp.float32)
+    one = jnp.asarray([0.1], jnp.float32)
+    m_hat, _ = speculate(y_a, x0a, one, jnp.asarray([0.9], jnp.float32),
+                         jnp.asarray([0.0], jnp.float32),
+                         jnp.zeros((1, 2), jnp.float32))
+    np.testing.assert_allclose(np.asarray(m_hat)[0],
+                               0.1 * np.asarray(x0a) + 0.9 * np.asarray(y_a),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# grs_verify
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(t=st.sampled_from([1, 4, 32]), d=st.sampled_from([1, 2, 16, 64]),
+       seed=st.integers(0, 2**16))
+def test_grs_matches_ref(t, d, seed):
+    rng = _rng(seed)
+    u = rng.uniform(0, 1, t).astype(np.float32)
+    xi = rng.standard_normal((t, d)).astype(np.float32)
+    m_hat = rng.standard_normal((t, d)).astype(np.float32)
+    m = m_hat + 0.3 * rng.standard_normal((t, d)).astype(np.float32)
+    sigma = rng.uniform(0.01, 1.0, t).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in (u, xi, m_hat, m, sigma))
+    z, acc = grs_verify(*args)
+    z_ref, acc_ref = grs_verify_ref(*args)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc_ref))
+
+
+def test_grs_equal_means_always_accepts():
+    """Lemma 13 mechanism: v = 0 => accept regardless of u."""
+    t, d = 8, 4
+    rng = _rng(1)
+    m = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    u = jnp.asarray(np.linspace(0.0, 1.0, t), jnp.float32)
+    sigma = jnp.full((t,), 0.5, jnp.float32)
+    z, acc = grs_verify(u, xi, m, m, sigma)
+    assert np.all(np.asarray(acc) == 1.0)
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(m) + 0.5 * np.asarray(xi),
+                               rtol=1e-6)
+
+
+def test_grs_sigma_zero_dirac():
+    u = jnp.asarray([0.5, 0.5], jnp.float32)
+    xi = jnp.asarray(_rng(2).standard_normal((2, 3)), jnp.float32)
+    m = jnp.asarray(_rng(3).standard_normal((2, 3)), jnp.float32)
+    m_hat = m.at[1].add(1.0)  # row 0 equal, row 1 different
+    sigma = jnp.zeros((2,), jnp.float32)
+    z, acc = grs_verify(u, xi, m_hat, m, sigma)
+    assert np.asarray(acc).tolist() == [1.0, 0.0]
+    np.testing.assert_allclose(np.asarray(z), np.asarray(m), rtol=1e-6)
+
+
+def test_grs_reflection_preserves_norm():
+    """Rejected branch: reflect(xi) has the same norm as xi."""
+    rng = _rng(4)
+    t, d = 16, 8
+    u = jnp.ones((t,), jnp.float32)  # force rejection unless ratio >= 1
+    xi = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    m = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    m_hat = m + 5.0  # large v => essentially always reject at u=1
+    sigma = jnp.full((t,), 0.3, jnp.float32)
+    z, acc = grs_verify(u, xi, m_hat, m, sigma)
+    rej = np.asarray(acc) == 0.0
+    assert rej.sum() >= t - 2
+    refl = (np.asarray(z)[rej] - np.asarray(m)[rej]) / 0.3
+    np.testing.assert_allclose(np.linalg.norm(refl, axis=1),
+                               np.linalg.norm(np.asarray(xi)[rej], axis=1),
+                               rtol=1e-4)
+
+
+def test_grs_statistical_correctness():
+    """Theorem 12: z ~ N(m, sigma^2 I) regardless of m_hat, and
+    P[reject] ~= TV(N(m_hat, s^2), N(m, s^2)) = 2 Phi(||v||/2s) - 1."""
+    from scipy_free_norm import normal_cdf  # local helper below
+
+    rng = _rng(5)
+    n, d, s = 20000, 3, 0.7
+    m = np.zeros(d, np.float32)
+    m_hat = np.asarray([0.5, -0.3, 0.2], np.float32)
+    u = rng.uniform(0, 1, n).astype(np.float32)
+    xi = rng.standard_normal((n, d)).astype(np.float32)
+    z, acc = grs_verify(jnp.asarray(u), jnp.asarray(xi),
+                        jnp.broadcast_to(m_hat, (n, d)),
+                        jnp.broadcast_to(m, (n, d)),
+                        jnp.full((n,), s, jnp.float32))
+    z = np.asarray(z)
+    # marginal moments of z
+    np.testing.assert_allclose(z.mean(0), m, atol=4 * s / np.sqrt(n) * 3)
+    np.testing.assert_allclose(z.std(0), s, rtol=0.05)
+    # rejection probability == TV distance
+    v_norm = float(np.linalg.norm(m_hat - m))
+    tv = 2.0 * normal_cdf(v_norm / (2.0 * s)) - 1.0
+    p_rej = 1.0 - float(np.asarray(acc).mean())
+    assert abs(p_rej - tv) < 0.015, (p_rej, tv)

@@ -1,0 +1,73 @@
+"""L2 model: Pallas path == pure-jnp path; weight layout; training smoke."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (ModelConfig, denoise_pallas, denoise_ref,
+                           flatten_params, init_params, layer_dims,
+                           time_embedding)
+
+
+def _cfg(d=4, cond=3, hidden=16, layers=2, k=50):
+    return ModelConfig(d=d, cond_dim=cond, hidden=hidden, layers=layers,
+                       k_steps=k)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([1, 2, 8]), d=st.sampled_from([2, 16]),
+       cond=st.sampled_from([0, 10]), layers=st.sampled_from([1, 3]),
+       seed=st.integers(0, 2**10))
+def test_pallas_forward_matches_ref(b, d, cond, layers, seed):
+    cfg = _cfg(d=d, cond=cond, hidden=32, layers=layers)
+    params = [(jnp.asarray(w), jnp.asarray(bb))
+              for w, bb in init_params(cfg, seed)]
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    t = jnp.asarray(rng.integers(1, cfg.k_steps + 1, b), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((b, cond)), jnp.float32)
+    out_p = denoise_pallas(params, y, t, c, cfg)
+    out_r = denoise_ref(params, y, t, c, cfg)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_time_embedding_distinguishes_steps():
+    k = 100
+    e = np.asarray(time_embedding(jnp.asarray([1.0, 2.0, 50.0, 100.0]), k))
+    assert e.shape == (4, 32)
+    # distinct steps get distinct embeddings
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert np.linalg.norm(e[i] - e[j]) > 1e-3
+    assert np.all(np.abs(e) <= 1.0 + 1e-6)
+
+
+def test_flatten_params_layout():
+    cfg = _cfg(d=3, cond=0, hidden=5, layers=2)
+    params = init_params(cfg, 0)
+    flat = flatten_params(params)
+    dims = layer_dims(cfg)
+    expect = sum(a * b + b for a, b in dims)
+    assert flat.shape == (expect,)
+    # first weight matrix occupies the head of the buffer, row-major
+    w0 = params[0][0]
+    np.testing.assert_array_equal(flat[: w0.size], w0.ravel())
+
+
+def test_layer_dims():
+    cfg = _cfg(d=4, cond=3, hidden=16, layers=2)
+    assert layer_dims(cfg) == [(4 + 32 + 3, 16), (16, 16), (16, 4)]
+
+
+def test_training_reduces_loss():
+    from compile.train import train_variant
+    from compile.variants import _v
+
+    v = _v("tiny", d=2, cond_dim=0, hidden=32, layers=2, k=20,
+           target="gmm2d", train_steps=300, batch_size=128, seed=5)
+    params, final_loss = train_variant(v)
+    # initial loss for this target is ~ E||x0||^2 ~ 2.3; training should
+    # cut it below the unconditional-mean floor averaged over noise levels
+    assert final_loss < 2.2

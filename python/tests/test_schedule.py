@@ -1,0 +1,55 @@
+"""DDPM schedule identities + SL reparametrization round-trips."""
+
+import numpy as np
+import pytest
+
+from compile.schedule import (ddpm_time_of_sl, make_betas, make_schedule,
+                              sl_time_of_ddpm)
+
+
+@pytest.mark.parametrize("k", [50, 100, 1000])
+def test_posterior_mean_identity(k):
+    """c1_i + c2_i sqrt(abar_i) == sqrt(abar_{i-1}): a noiseless iterate
+    with a perfect model denoises onto the noiseless trajectory."""
+    s = make_schedule(k)
+    lhs = s["c1"] + s["c2"] * np.sqrt(s["abar"])
+    np.testing.assert_allclose(lhs, np.sqrt(s["abar_prev"]), rtol=1e-10)
+
+
+@pytest.mark.parametrize("k", [50, 100, 1000])
+def test_posterior_variance_identity(k):
+    """c2_i^2 (1-abar_i) + sigma_i^2 == 1 - abar_{i-1}: the forward
+    marginal variance is preserved by the reverse update."""
+    s = make_schedule(k)
+    lhs = s["c2"] ** 2 * (1.0 - s["abar"]) + s["sigma"] ** 2
+    np.testing.assert_allclose(lhs, 1.0 - s["abar_prev"], rtol=1e-10)
+
+
+@pytest.mark.parametrize("k", [100, 1000])
+def test_schedule_shapes_and_bounds(k):
+    s = make_schedule(k)
+    for key in ("betas", "alphas", "abar", "c1", "c2", "sigma"):
+        assert s[key].shape == (k,)
+    assert s["sigma"][0] == 0.0           # final reverse step is a Dirac
+    assert np.all(s["sigma"][1:] > 0.0)
+    assert np.all(np.diff(s["abar"]) < 0)  # strictly decreasing
+    assert s["abar"][-1] < 5e-5            # fully noised at i = K
+
+
+def test_beta_rescaling_keeps_total_noise():
+    """abar_K is (nearly) K-independent thanks to the 1000/K rescale."""
+    a100 = make_schedule(100)["abar"][-1]
+    a1000 = make_schedule(1000)["abar"][-1]
+    assert abs(np.log(a100) - np.log(a1000)) < 2.0
+
+
+def test_sl_time_roundtrip():
+    s = np.linspace(0.01, 5.0, 50)
+    np.testing.assert_allclose(ddpm_time_of_sl(sl_time_of_ddpm(s)), s,
+                               rtol=1e-9)
+
+
+def test_betas_positive_and_below_one():
+    for k in (50, 100, 1000):
+        b = make_betas(k)
+        assert np.all(b > 0) and np.all(b < 1)

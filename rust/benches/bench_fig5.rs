@@ -1,0 +1,59 @@
+//! Fig 5 — diffusion-policy speedup on the three manipulation tasks
+//! (K=100, one simulated device, batched verification — the paper's
+//! policy setup). Higher acceptance than images => bigger useful theta.
+//!
+//! Run: cargo bench --bench bench_fig5
+
+use std::sync::Arc;
+
+use asd::env::{rollout_policy, DiffusionPolicy, SamplerKind, TaskSpec};
+use asd::model::DenoiseModel;
+use asd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let episodes = 2u64;
+    let rt = Runtime::load_default()?;
+    println!("=== Fig 5 — Speedup of diffusion policies (K=100, batched \
+              1-device verification, {episodes} episodes/point) ===");
+    println!("paper shape: acceptance is much higher than image models \
+              => 6-7x algorithmic for ASD-inf, saturation near theta=20-24\n");
+    for task in ["square", "transport", "toolhang"] {
+        let model = rt.model(&format!("policy_{task}"))?;
+        model.warmup()?;
+        let dyn_model: Arc<dyn DenoiseModel> = model;
+        let policy = DiffusionPolicy::new(dyn_model,
+                                          TaskSpec::by_name(task).unwrap())?;
+        let mut seq_rounds = 0.0;
+        let mut seq_wall = 0.0;
+        let mut plans = 0.0;
+        for s in 0..episodes {
+            let r = rollout_policy(&policy, SamplerKind::Sequential, s)?;
+            seq_rounds += r.parallel_rounds as f64;
+            seq_wall += r.wallclock_s;
+            plans += r.plans as f64;
+        }
+        println!("[{task}] sequential: {:.0} rounds/plan, {:.1} ms/plan",
+                 seq_rounds / plans, seq_wall / plans * 1e3);
+        println!("{:<10} {:>12} {:>14} {:>13}", "method", "alg speedup",
+                 "wall x (1dev)", "rounds/plan");
+        for theta in [8usize, 12, 16, 20, 24, 0] {
+            let mut rounds = 0.0;
+            let mut wall = 0.0;
+            let mut plans_a = 0.0;
+            for s in 0..episodes {
+                let r = rollout_policy(&policy, SamplerKind::Asd(theta), s)?;
+                rounds += r.parallel_rounds as f64;
+                wall += r.wallclock_s;
+                plans_a += r.plans as f64;
+            }
+            let label = if theta == 0 { "ASD-inf".into() }
+                        else { format!("ASD-{theta}") };
+            println!("{:<10} {:>12.2} {:>14.2} {:>13.1}", label,
+                     (seq_rounds / plans) / (rounds / plans_a),
+                     (seq_wall / plans) / (wall / plans_a),
+                     rounds / plans_a);
+        }
+        println!();
+    }
+    Ok(())
+}

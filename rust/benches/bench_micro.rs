@@ -1,0 +1,80 @@
+//! Microbenchmarks of the hot-path components (feeds EXPERIMENTS.md
+//! §Perf): PJRT dispatch per batch size, native GRS, proposal chain,
+//! Philox throughput, JSON parse.
+//!
+//! Run: cargo bench --bench bench_micro
+
+use asd::asd::grs_native;
+use asd::ddpm::NoiseStreams;
+use asd::model::DenoiseModel;
+use asd::rng::Philox;
+use asd::runtime::Runtime;
+use asd::util::timer::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Microbenchmarks (1-core CPU testbed) ===\n");
+
+    // Philox throughput
+    let mut rng = Philox::new(1, 0);
+    let st = bench(3, 20, || {
+        let mut acc = 0.0;
+        for _ in 0..100_000 {
+            acc += rng.normal();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", st.row("philox normal x100k"));
+
+    // GRS native
+    let d = 224;
+    let mut g = Philox::new(2, 0);
+    let xi: Vec<f64> = (0..d).map(|_| g.normal()).collect();
+    let m_hat: Vec<f64> = (0..d).map(|_| g.normal()).collect();
+    let m: Vec<f64> = m_hat.iter().map(|x| x + 0.1).collect();
+    let mut z = vec![0.0; d];
+    let mut v = vec![0.0; d];
+    let st = bench(10, 50, || {
+        for i in 0..1000 {
+            let u = (i as f64 + 0.5) / 1000.0;
+            std::hint::black_box(grs_native(u, &xi, &m_hat, &m, 0.3,
+                                            &mut z, &mut v));
+        }
+    });
+    println!("{}", st.row("grs_native d=224 x1k"));
+
+    // PJRT dispatch latency per batch size, per variant
+    let rt = Runtime::load_default()?;
+    for variant in ["gmm2d", "latent16", "pixel64", "policy_transport"] {
+        let model = rt.model(variant)?;
+        model.warmup()?;
+        let d = model.info.d;
+        let c = model.info.cond_dim;
+        for b in [1usize, 8, 32] {
+            let ys = vec![0.1; b * d];
+            let ts = vec![(model.info.k_steps / 2) as f64; b];
+            let cond = vec![0.0; b * c];
+            let mut out = vec![0.0; b * d];
+            model.denoise_batch(&ys, &ts, &cond, b, &mut out)?;
+            let st = bench(3, 30, || {
+                model.denoise_batch(&ys, &ts, &cond, b, &mut out).unwrap();
+            });
+            println!("{}", st.row(&format!("hlo denoise {variant} b={b}")));
+        }
+    }
+
+    // NoiseStreams generation (per-request randomness setup)
+    let st = bench(3, 30, || {
+        std::hint::black_box(NoiseStreams::draw(7, 0, 1000, 64));
+    });
+    println!("{}", st.row("noise streams K=1000 d=64"));
+
+    // JSON manifest parse
+    let dir = asd::artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let st = bench(2, 10, || {
+        std::hint::black_box(asd::util::Json::parse(&text).unwrap());
+    });
+    println!("{}", st.row(&format!("manifest.json parse ({} KB)",
+                                   text.len() / 1024)));
+    Ok(())
+}

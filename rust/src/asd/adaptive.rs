@@ -1,0 +1,106 @@
+//! Extension: online speculation-length controller.
+//!
+//! The paper tunes theta offline (Fig 2: theta = 6-8 saturates for
+//! images; Fig 5: 20-24 for policies, where acceptance is much higher).
+//! This controller discovers that setting online from the observed
+//! acceptance run-lengths: it targets the theta that keeps the expected
+//! wasted verification work below `waste_budget` of the batch.
+//!
+//! Model: if per-step acceptance is ~p (estimated online by EWMA), the
+//! expected number of accepted steps in a window of theta is
+//! E = sum_{i=1..theta} p^{i-1} ~ (1 - p^theta) / (1 - p); wasted calls
+//! are theta - E. The controller picks the largest theta (within
+//! [min, max]) whose marginal acceptance probability p^theta stays above
+//! `marginal_floor` — i.e. stop speculating where the chance the window
+//! survives that far drops too low.
+
+#[derive(Debug, Clone)]
+pub struct AdaptiveTheta {
+    /// EWMA of per-step acceptance
+    p_accept: f64,
+    ewma: f64,
+    pub min_theta: usize,
+    pub max_theta: usize,
+    pub marginal_floor: f64,
+}
+
+impl AdaptiveTheta {
+    pub fn new(min_theta: usize, max_theta: usize) -> AdaptiveTheta {
+        AdaptiveTheta {
+            p_accept: 0.7, // optimistic prior
+            ewma: 0.05,
+            min_theta,
+            max_theta,
+            marginal_floor: 0.2,
+        }
+    }
+
+    /// Feed one verification window's outcome.
+    pub fn observe(&mut self, accepted: usize, rejected: usize) {
+        let total = accepted + rejected;
+        if total == 0 {
+            return;
+        }
+        let rate = accepted as f64 / total as f64;
+        self.p_accept = (1.0 - self.ewma) * self.p_accept + self.ewma * rate;
+    }
+
+    pub fn acceptance_estimate(&self) -> f64 {
+        self.p_accept
+    }
+
+    /// Current recommendation.
+    pub fn theta(&self) -> usize {
+        let p = self.p_accept.clamp(1e-6, 1.0 - 1e-9);
+        // largest theta with p^theta >= marginal_floor
+        let t = (self.marginal_floor.ln() / p.ln()).floor();
+        let t = if t.is_finite() { t.max(1.0) as usize } else { self.max_theta };
+        t.clamp(self.min_theta, self.max_theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_acceptance_grows_theta() {
+        let mut c = AdaptiveTheta::new(2, 32);
+        for _ in 0..200 {
+            c.observe(19, 1); // 95% acceptance
+        }
+        assert!(c.theta() >= 20, "theta {} for p={}", c.theta(),
+                c.acceptance_estimate());
+    }
+
+    #[test]
+    fn low_acceptance_shrinks_theta() {
+        let mut c = AdaptiveTheta::new(2, 32);
+        for _ in 0..200 {
+            c.observe(1, 1); // 50% acceptance
+        }
+        let th = c.theta();
+        assert!((2..=4).contains(&th), "theta {th}");
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut c = AdaptiveTheta::new(4, 8);
+        for _ in 0..100 {
+            c.observe(0, 1);
+        }
+        assert_eq!(c.theta(), 4);
+        for _ in 0..2000 {
+            c.observe(1, 0);
+        }
+        assert_eq!(c.theta(), 8);
+    }
+
+    #[test]
+    fn empty_observation_is_noop() {
+        let mut c = AdaptiveTheta::new(2, 32);
+        let before = c.acceptance_estimate();
+        c.observe(0, 0);
+        assert_eq!(c.acceptance_estimate(), before);
+    }
+}

@@ -1,0 +1,404 @@
+//! The ASD engine: Algorithm 1 (+ Verifier, Algorithm 2) in the
+//! DDPM-native x0-prediction form (paper Remark 2).
+//!
+//! Executable-spec parity: python/compile/asd_ref.py implements the same
+//! loop; the integration tests replay its golden traces through this
+//! engine over the HLO model and demand matching outputs and stats.
+//!
+//! Round accounting (what Theorem 4 bounds): every iteration spends one
+//! parallel round on the proposal call (unless chained from the previous
+//! verify round via `eval_tail`) and one parallel round on the batched
+//! verification calls. `round_batches` records the batch size of every
+//! round so the experiment layer can model multi-worker wall-clock
+//! (DESIGN.md §3).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::asd::grs::grs_native;
+use crate::ddpm::NoiseStreams;
+use crate::math::vec_ops::lincomb_into;
+use crate::model::DenoiseModel;
+use crate::runtime::HloKernels;
+
+/// Which implementation computes the speculation chain and the GRS.
+/// The denoiser itself is always whatever `DenoiseModel` was given.
+pub enum KernelBackend {
+    /// Rust-native (default: PJRT dispatch overhead dominates these
+    /// O(theta*d) ops on the CPU testbed).
+    Native,
+    /// The AOT Pallas kernels through PJRT (full three-layer path;
+    /// parity-tested against Native).
+    Hlo(HloKernels),
+}
+
+pub struct AsdConfig {
+    /// Speculation length; 0 = ASD-infinity (speculate to the end).
+    pub theta: usize,
+    /// Also evaluate the chain's final point during verification so a
+    /// fully-accepted window chains into the next proposal for free.
+    pub eval_tail: bool,
+    pub backend: KernelBackend,
+}
+
+impl Default for AsdConfig {
+    fn default() -> AsdConfig {
+        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AsdStats {
+    /// total denoiser evaluations (sequential DDPM needs K)
+    pub model_calls: usize,
+    /// rounds of (possibly batched) denoiser calls — the Thm 4 quantity
+    pub parallel_rounds: usize,
+    pub iterations: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// batch size of each parallel round (for the latency model)
+    pub round_batches: Vec<usize>,
+}
+
+impl AsdStats {
+    /// Algorithmic speedup vs the K-round sequential sampler.
+    pub fn algorithmic_speedup(&self, k: usize) -> f64 {
+        k as f64 / self.parallel_rounds.max(1) as f64
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        let total = self.accepted + self.rejected;
+        if total == 0 { 1.0 } else { self.accepted as f64 / total as f64 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AsdOutput {
+    pub y0: Vec<f64>,
+    pub stats: AsdStats,
+    pub wallclock_s: f64,
+}
+
+pub struct AsdEngine {
+    pub model: Arc<dyn DenoiseModel>,
+    pub config: AsdConfig,
+    // preallocated chain buffers (sized K x d)
+    m_hat: Vec<f64>,
+    y_hat: Vec<f64>,
+    x0_eval: Vec<f64>,
+    eval_in: Vec<f64>,
+    eval_ts: Vec<f64>,
+    eval_cond: Vec<f64>,
+    m_buf: Vec<f64>,
+    z_buf: Vec<f64>,
+    v_buf: Vec<f64>,
+}
+
+impl AsdEngine {
+    pub fn new(model: Arc<dyn DenoiseModel>, config: AsdConfig) -> AsdEngine {
+        let d = model.dim();
+        let k = model.k_steps();
+        let c = model.cond_dim();
+        AsdEngine {
+            model,
+            config,
+            m_hat: vec![0.0; k * d],
+            y_hat: vec![0.0; k * d],
+            x0_eval: vec![0.0; (k + 1) * d],
+            eval_in: vec![0.0; (k + 1) * d],
+            eval_ts: vec![0.0; k + 1],
+            eval_cond: vec![0.0; (k + 1) * c.max(1)],
+            m_buf: vec![0.0; d],
+            z_buf: vec![0.0; d],
+            v_buf: vec![0.0; d],
+        }
+    }
+
+    /// Effective speculation cap per iteration.
+    fn theta_for(&self, i_cur: usize) -> usize {
+        let want = if self.config.theta == 0 { i_cur } else { self.config.theta };
+        let capped = match &self.config.backend {
+            KernelBackend::Hlo(k) => want.min(k.t_steps),
+            KernelBackend::Native => want,
+        };
+        capped.min(i_cur).max(1)
+    }
+
+    /// Sample with a fresh Philox stream for `seed`.
+    pub fn sample(&mut self, seed: u64) -> Result<AsdOutput> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_with_noise(&noise, &[])
+    }
+
+    pub fn sample_cond(&mut self, seed: u64, cond: &[f64]) -> Result<AsdOutput> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_with_noise(&noise, cond)
+    }
+
+    /// Algorithm 1 with explicit noise streams (golden-trace parity).
+    pub fn sample_with_noise(&mut self, noise: &NoiseStreams, cond: &[f64])
+                             -> Result<AsdOutput> {
+        let t_start = std::time::Instant::now();
+        let d = self.model.dim();
+        let k = self.model.k_steps();
+        anyhow::ensure!(cond.len() == self.model.cond_dim(),
+                        "conditioning length {} != cond_dim {}",
+                        cond.len(), self.model.cond_dim());
+        // borrow the schedule through a cheap Arc clone so the borrow is
+        // not tied to `self` (we mutate chain buffers below); avoids a
+        // ~56 KB schedule copy per sample at K=1000 (EXPERIMENTS §Perf)
+        let model = self.model.clone();
+        let sched = model.schedule();
+        let (c1, c2, sigma) = (&sched.c1, &sched.c2, &sched.sigma);
+
+        let mut stats = AsdStats::default();
+        let mut y = noise.y_k.clone();
+        let mut i_cur = k;
+        // x0hat at (y, i_cur) when chained from the previous verify round
+        let mut x0_cur: Option<Vec<f64>> = None;
+        let mut x0a = vec![0.0; d];
+
+        while i_cur > 0 {
+            stats.iterations += 1;
+            let th = self.theta_for(i_cur);
+
+            // ---- proposal round: one model call (Alg 1 line 6) ----
+            match x0_cur.take() {
+                Some(v) => x0a.copy_from_slice(&v),
+                None => {
+                    self.model.denoise_one(&y, i_cur, cond, &mut x0a)?;
+                    stats.model_calls += 1;
+                    stats.parallel_rounds += 1;
+                    stats.round_batches.push(1);
+                }
+            }
+
+            // ---- speculate (Alg 1 lines 7-9; L1 kernel `speculate`) ----
+            // chain position k covers transition j -> j-1, j = i_cur - k
+            self.run_speculate(&y, &x0a, i_cur, th, c1, c2, sigma, noise)?;
+
+            // ---- verify round: parallel batch of model calls ----
+            // positions 1..th-1 evaluate x0hat at the proposed points
+            // (position 0 reuses x0a — Lemma 13); `eval_tail` adds the
+            // final chain point so an all-accept window chains onward.
+            let tail = self.config.eval_tail && i_cur - th > 0 && th >= 1;
+            let n_eval = (th - 1) + tail as usize;
+            if n_eval > 0 {
+                for (slot, kpos) in (1..th).enumerate() {
+                    let j = i_cur - kpos; // transition j -> j-1
+                    self.eval_in[slot * d..(slot + 1) * d]
+                        .copy_from_slice(&self.y_hat[(kpos - 1) * d..kpos * d]);
+                    self.eval_ts[slot] = j as f64;
+                }
+                if tail {
+                    let slot = th - 1;
+                    self.eval_in[slot * d..(slot + 1) * d]
+                        .copy_from_slice(&self.y_hat[(th - 1) * d..th * d]);
+                    self.eval_ts[slot] = (i_cur - th) as f64;
+                }
+                let c_dim = self.model.cond_dim();
+                if c_dim > 0 {
+                    for slot in 0..n_eval {
+                        self.eval_cond[slot * c_dim..(slot + 1) * c_dim]
+                            .copy_from_slice(cond);
+                    }
+                }
+                self.model.denoise_batch(
+                    &self.eval_in[..n_eval * d],
+                    &self.eval_ts[..n_eval],
+                    &self.eval_cond[..n_eval * c_dim.max(0)],
+                    n_eval,
+                    &mut self.x0_eval[..n_eval * d],
+                )?;
+                stats.model_calls += n_eval;
+                stats.parallel_rounds += 1;
+                stats.round_batches.push(n_eval);
+            }
+
+            // ---- verifier (Alg 2): sequential scan over parallel GRS ----
+            let mut advanced = 0usize;
+            let mut next_x0: Option<Vec<f64>> = None;
+            for kpos in 0..th {
+                let j = i_cur - kpos; // transition j -> j-1, schedule row j-1
+                let row = j - 1;
+                // target mean: c1 x0hat(y_base, j) + c2 y_base
+                let x0_at: &[f64] = if kpos == 0 {
+                    &x0a
+                } else {
+                    &self.x0_eval[(kpos - 1) * d..kpos * d]
+                };
+                let y_base: &[f64] = if kpos == 0 {
+                    &y
+                } else {
+                    &self.y_hat[(kpos - 1) * d..kpos * d]
+                };
+                lincomb_into(&mut self.m_buf, c1[row], x0_at, c2[row], y_base);
+                let accept = grs_native(
+                    noise.u[row],
+                    noise.xi_row(row, d),
+                    &self.m_hat[kpos * d..(kpos + 1) * d],
+                    &self.m_buf,
+                    sigma[row],
+                    &mut self.z_buf,
+                    &mut self.v_buf,
+                );
+                y.copy_from_slice(&self.z_buf);
+                advanced += 1;
+                if accept {
+                    stats.accepted += 1;
+                    if kpos == th - 1 && tail {
+                        // accepted tail: z == y_hat[th-1], whose x0hat is
+                        // the last verify slot
+                        next_x0 = Some(
+                            self.x0_eval[(th - 1) * d..th * d].to_vec());
+                    }
+                } else {
+                    stats.rejected += 1;
+                    break;
+                }
+            }
+            i_cur -= advanced;
+            x0_cur = next_x0;
+        }
+
+        Ok(AsdOutput {
+            y0: y,
+            stats,
+            wallclock_s: t_start.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn run_speculate(&mut self, y: &[f64], x0a: &[f64], i_cur: usize,
+                     th: usize, c1: &[f64], c2: &[f64], sigma: &[f64],
+                     noise: &NoiseStreams) -> Result<()> {
+        let d = self.model.dim();
+        match &self.config.backend {
+            KernelBackend::Native => {
+                // y_hat[k] = c1 x0a + c2 y_hat[k-1] + sigma xi
+                for kpos in 0..th {
+                    let row = i_cur - kpos - 1;
+                    let (head, tail_buf) = self.y_hat.split_at_mut(kpos * d);
+                    let y_prev: &[f64] = if kpos == 0 {
+                        y
+                    } else {
+                        &head[(kpos - 1) * d..kpos * d]
+                    };
+                    let m_slice = &mut self.m_hat[kpos * d..(kpos + 1) * d];
+                    lincomb_into(m_slice, c1[row], x0a, c2[row], y_prev);
+                    let xi = noise.xi_row(row, d);
+                    let y_slice = &mut tail_buf[..d];
+                    for i in 0..d {
+                        y_slice[i] = m_slice[i] + sigma[row] * xi[i];
+                    }
+                }
+            }
+            KernelBackend::Hlo(kernels) => {
+                let mut c1v = Vec::with_capacity(th);
+                let mut c2v = Vec::with_capacity(th);
+                let mut sv = Vec::with_capacity(th);
+                let mut xiv = Vec::with_capacity(th * d);
+                for kpos in 0..th {
+                    let row = i_cur - kpos - 1;
+                    c1v.push(c1[row]);
+                    c2v.push(c2[row]);
+                    sv.push(sigma[row]);
+                    xiv.extend_from_slice(noise.xi_row(row, d));
+                }
+                let (m_hat, y_hat) =
+                    kernels.speculate(y, x0a, &c1v, &c2v, &sv, &xiv)?;
+                self.m_hat[..th * d].copy_from_slice(&m_hat);
+                self.y_hat[..th * d].copy_from_slice(&y_hat);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddpm::SequentialSampler;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    fn engine(theta: usize, k: usize) -> AsdEngine {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), k, false);
+        AsdEngine::new(oracle, AsdConfig { theta, ..Default::default() })
+    }
+
+    #[test]
+    fn all_transitions_consumed_once() {
+        let mut e = engine(8, 60);
+        for seed in 0..10 {
+            let out = e.sample(seed).unwrap();
+            assert_eq!(out.stats.accepted + out.stats.rejected, 60);
+            // at least one accept per iteration (Lemma 13)
+            assert!(out.stats.accepted >= out.stats.iterations);
+        }
+    }
+
+    #[test]
+    fn theta1_never_rejects() {
+        let mut e = engine(1, 40);
+        let out = e.sample(3).unwrap();
+        assert_eq!(out.stats.iterations, 40);
+        assert_eq!(out.stats.rejected, 0);
+    }
+
+    #[test]
+    fn asd_inf_beats_sequential_rounds() {
+        let mut e = engine(0, 100);
+        let mut total_rounds = 0;
+        for seed in 0..5 {
+            total_rounds += e.sample(seed).unwrap().stats.parallel_rounds;
+        }
+        assert!((total_rounds as f64 / 5.0) < 75.0,
+                "ASD-inf rounds {} not < 75", total_rounds as f64 / 5.0);
+    }
+
+    #[test]
+    fn distribution_matches_sequential() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
+        let seq = SequentialSampler::new(oracle.clone());
+        let mut e = AsdEngine::new(oracle, AsdConfig { theta: 8, ..Default::default() });
+        let n = 150;
+        let mut r_seq = 0.0;
+        let mut r_asd = 0.0;
+        for seed in 0..n {
+            let (s, _) = seq.sample(seed, &[]).unwrap();
+            r_seq += (s[0] * s[0] + s[1] * s[1]).sqrt();
+            let a = e.sample(10_000 + seed).unwrap().y0;
+            r_asd += (a[0] * a[0] + a[1] * a[1]).sqrt();
+        }
+        let (r_seq, r_asd) = (r_seq / n as f64, r_asd / n as f64);
+        assert!((r_seq - r_asd).abs() < 0.08,
+                "radius mismatch: seq {r_seq} vs asd {r_asd}");
+        assert!((r_asd - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn rounds_decrease_with_theta() {
+        let mut by_theta = vec![];
+        for theta in [1usize, 4, 16] {
+            let mut e = engine(theta, 80);
+            let mut rounds = 0;
+            for seed in 0..6 {
+                rounds += e.sample(seed).unwrap().stats.parallel_rounds;
+            }
+            by_theta.push(rounds as f64 / 6.0);
+        }
+        assert!(by_theta[1] < by_theta[0]);
+        assert!(by_theta[2] <= by_theta[1] + 2.0);
+    }
+
+    #[test]
+    fn round_batches_sum_to_model_calls() {
+        let mut e = engine(6, 60);
+        let out = e.sample(9).unwrap();
+        let sum: usize = out.stats.round_batches.iter().sum();
+        assert_eq!(sum, out.stats.model_calls);
+        assert_eq!(out.stats.round_batches.len(), out.stats.parallel_rounds);
+    }
+}

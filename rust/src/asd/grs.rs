@@ -1,0 +1,152 @@
+//! Gaussian Rejection Sampler (Algorithm 3) — native implementation.
+//!
+//! Given proposal mean `m_hat`, target mean `m` (same variance
+//! `sigma^2 I`), pre-drawn `xi ~ N(0,I)` and uniform `u`:
+//!
+//! accept  <=>  ln u <= -(<v, xi>/sigma + ||v||^2 / (2 sigma^2)),
+//!              v = m_hat - m
+//! accepted:  z = m_hat + sigma xi      (the proposal sample)
+//! rejected:  z = m + sigma reflect(xi) (reflection coupling)
+//!
+//! Theorem 12: z ~ N(m, sigma^2 I) exactly either way, and
+//! P[reject] = TV(N(m_hat, s^2 I), N(m, s^2 I)). Edge cases match
+//! python/compile/kernels/grs.py: v = 0 always accepts (Lemma 13);
+//! sigma = 0 compares Diracs.
+
+use crate::math::vec_ops::{dot, norm_sq, reflect_into};
+
+pub const SIGMA0_TOL: f64 = 1e-6;
+const EPS: f64 = 1e-12;
+
+/// Runs GRS for one step; writes the corrected sample into `z`.
+/// Returns `true` on accept.
+pub fn grs_native(u: f64, xi: &[f64], m_hat: &[f64], m: &[f64], sigma: f64,
+                  z: &mut [f64], v_buf: &mut [f64]) -> bool {
+    let d = xi.len();
+    debug_assert!(m_hat.len() == d && m.len() == d && z.len() == d
+                  && v_buf.len() == d);
+    for i in 0..d {
+        v_buf[i] = m_hat[i] - m[i];
+    }
+    let v_sq = norm_sq(v_buf);
+
+    if sigma <= SIGMA0_TOL {
+        // Dirac vs Dirac
+        z.copy_from_slice(m);
+        return v_sq <= SIGMA0_TOL * SIGMA0_TOL;
+    }
+
+    let log_ratio = -(dot(v_buf, xi) / sigma + 0.5 * v_sq / (sigma * sigma));
+    let accept = u.max(EPS).ln() <= log_ratio || v_sq <= EPS;
+    if accept {
+        for i in 0..d {
+            z[i] = m_hat[i] + sigma * xi[i];
+        }
+    } else {
+        reflect_into(z, xi, v_buf);
+        for i in 0..d {
+            z[i] = m[i] + sigma * z[i];
+        }
+    }
+    accept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::erf::gaussian_tv;
+    use crate::rng::Philox;
+    use crate::util::prop;
+
+    #[test]
+    fn equal_means_always_accept() {
+        prop::check("grs-equal-means", 40, |g| {
+            let d = g.usize_in(1, 32);
+            let m = g.normal_vec(d);
+            let xi = g.normal_vec(d);
+            let u = g.rng.uniform();
+            let sigma = g.f64_in(0.01, 2.0);
+            let mut z = vec![0.0; d];
+            let mut v = vec![0.0; d];
+            let ok = grs_native(u, &xi, &m, &m, sigma, &mut z, &mut v);
+            assert!(ok, "v=0 must always accept (Lemma 13)");
+            for i in 0..d {
+                assert!((z[i] - (m[i] + sigma * xi[i])).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn sigma_zero_dirac_semantics() {
+        let m = [1.0, 2.0];
+        let mut z = [0.0; 2];
+        let mut v = [0.0; 2];
+        let ok = grs_native(0.5, &[0.3, -0.1], &m, &m, 0.0, &mut z, &mut v);
+        assert!(ok);
+        assert_eq!(z, m);
+        let m_hat = [1.5, 2.0];
+        let ok = grs_native(0.5, &[0.3, -0.1], &m_hat, &m, 0.0, &mut z, &mut v);
+        assert!(!ok);
+        assert_eq!(z, m, "rejected Dirac must return the target mean");
+    }
+
+    #[test]
+    fn marginal_law_is_target_theorem12() {
+        // z ~ N(m, sigma^2 I) regardless of m_hat
+        let mut rng = Philox::new(42, 0);
+        let d = 3;
+        let m = vec![0.0; d];
+        let m_hat = vec![0.5, -0.3, 0.2];
+        let sigma = 0.7;
+        let n = 40_000;
+        let mut sum = vec![0.0; d];
+        let mut sum_sq = vec![0.0; d];
+        let mut rejects = 0usize;
+        let mut z = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        for _ in 0..n {
+            let xi: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let u = rng.uniform();
+            if !grs_native(u, &xi, &m_hat, &m, sigma, &mut z, &mut v) {
+                rejects += 1;
+            }
+            for i in 0..d {
+                sum[i] += z[i];
+                sum_sq[i] += z[i] * z[i];
+            }
+        }
+        for i in 0..d {
+            let mean = sum[i] / n as f64;
+            let var = sum_sq[i] / n as f64 - mean * mean;
+            assert!(mean.abs() < 0.02, "dim {i} mean {mean}");
+            assert!((var - sigma * sigma).abs() < 0.02, "dim {i} var {var}");
+        }
+        // P[reject] == TV( N(m_hat, s^2), N(m, s^2) )
+        let v_norm = crate::math::vec_ops::dist(&m_hat, &m);
+        let want = gaussian_tv(v_norm, sigma);
+        let got = rejects as f64 / n as f64;
+        assert!((got - want).abs() < 0.01, "reject rate {got} vs TV {want}");
+    }
+
+    #[test]
+    fn rejected_sample_is_reflection() {
+        prop::check("grs-reflection", 30, |g| {
+            let d = g.usize_in(2, 8);
+            let m = g.normal_vec(d);
+            let mut m_hat = m.clone();
+            m_hat[0] += 10.0; // huge v: reject with u ~ 1
+            let xi = g.normal_vec(d);
+            let sigma = 0.5;
+            let mut z = vec![0.0; d];
+            let mut v = vec![0.0; d];
+            let ok = grs_native(0.999999, &xi, &m_hat, &m, sigma, &mut z, &mut v);
+            if !ok {
+                // ||(z - m)/sigma|| == ||xi|| (reflection is an isometry)
+                let r: Vec<f64> = (0..d).map(|i| (z[i] - m[i]) / sigma).collect();
+                let (n1, n2) = (crate::math::vec_ops::norm(&r),
+                                crate::math::vec_ops::norm(&xi));
+                assert!((n1 - n2).abs() < 1e-9);
+            }
+        });
+    }
+}

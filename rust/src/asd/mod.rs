@@ -1,0 +1,19 @@
+//! Autospeculative Decoding — the paper's core contribution.
+//!
+//! * [`grs`] — Gaussian Rejection Sampler (Algorithm 3, native path).
+//! * [`engine`] — the DDPM-native ASD loop (Algorithm 1 + Verifier
+//!   Algorithm 2), mirroring python/compile/asd_ref.py.
+//! * [`sl_engine`] — SL-native ASD + sequential Euler over a
+//!   [`crate::model::GmmSlOracle`] (theory benches, Thm 4).
+//! * [`adaptive`] — extension: online theta controller driven by the
+//!   observed acceptance rate.
+
+pub mod adaptive;
+pub mod engine;
+pub mod grs;
+pub mod sl_engine;
+
+pub use adaptive::AdaptiveTheta;
+pub use engine::{AsdConfig, AsdEngine, AsdOutput, AsdStats, KernelBackend};
+pub use grs::grs_native;
+pub use sl_engine::{SlAsd, SlAsdStats, SlSequential};

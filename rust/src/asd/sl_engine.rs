@@ -1,0 +1,223 @@
+//! SL-native sampling: Euler discretization of Stochastic Localization
+//! (paper Eq. 4/5) plus ASD over it — the setting of Theorems 4/15.
+//!
+//! Uses the analytic GMM oracle `m(t, y)` so the Thm-4 scaling benches
+//! measure the *algorithm*, not network error. Target/proposal of the
+//! Euler step on grid {t_k}:
+//!
+//!   target:    y_{k+1} = y_k + eta_k m(t_k, y_k)   + sqrt(eta_k) xi
+//!   proposal:  y_{k+1} = y_k + eta_k m(t_a, y_a)   + sqrt(eta_k) xi
+//!
+//! Both Gaussians share variance eta_k I => GRS applies verbatim.
+
+
+use crate::asd::grs::grs_native;
+use crate::math::vec_ops::axpy_into;
+use crate::model::GmmSlOracle;
+use crate::rng::Philox;
+use crate::schedule::SlGrid;
+
+pub struct SlSequential<'a> {
+    pub oracle: &'a GmmSlOracle,
+    pub grid: &'a SlGrid,
+}
+
+impl<'a> SlSequential<'a> {
+    /// Returns y_{t_K} / t_K (the localized sample, Law -> mu as t grows).
+    pub fn sample(&self, seed: u64) -> Vec<f64> {
+        let d = self.oracle.gmm.d;
+        let k = self.grid.k_steps();
+        let mut rng = Philox::new(seed, 1);
+        let mut y = vec![0.0; d];
+        let mut m = vec![0.0; d];
+        for step in 0..k {
+            let t = self.grid.times[step];
+            let eta = self.grid.etas[step];
+            self.oracle.gmm.sl_posterior_mean(&y, t, &mut m);
+            let se = eta.sqrt();
+            for i in 0..d {
+                y[i] += eta * m[i] + se * rng.normal();
+            }
+        }
+        let t_final = *self.grid.times.last().unwrap();
+        y.iter().map(|v| v / t_final).collect()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SlAsdStats {
+    pub oracle_calls: usize,
+    pub parallel_rounds: usize,
+    pub iterations: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+}
+
+pub struct SlAsd<'a> {
+    pub oracle: &'a GmmSlOracle,
+    pub grid: &'a SlGrid,
+    /// speculation length; 0 = infinity
+    pub theta: usize,
+}
+
+impl<'a> SlAsd<'a> {
+    /// ASD over the SL Euler chain. Exactly Algorithm 1 with
+    /// b(eta, y) = y + eta m(t, y) and sigma_k = sqrt(eta_k).
+    pub fn sample(&self, seed: u64) -> (Vec<f64>, SlAsdStats) {
+        let d = self.oracle.gmm.d;
+        let k = self.grid.k_steps();
+        let mut rng = Philox::new(seed, 1);
+        // pre-draw the per-step noise (same contract as the DDPM engine)
+        let xi: Vec<f64> = (0..k * d).map(|_| rng.normal()).collect();
+        let u: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
+
+        let mut stats = SlAsdStats::default();
+        let mut y = vec![0.0; d];
+        let mut a = 0usize; // current grid index
+        let mut m_a = vec![0.0; d];
+        let mut m_hat = vec![0.0; k * d];
+        let mut y_hat = vec![0.0; k * d];
+        let mut evals = vec![0.0; k * d];
+        let mut m_buf = vec![0.0; d];
+        let mut z_buf = vec![0.0; d];
+        let mut v_buf = vec![0.0; d];
+
+        while a < k {
+            stats.iterations += 1;
+            let want = if self.theta == 0 { k - a } else { self.theta };
+            let th = want.min(k - a).max(1);
+
+            // proposal round: one oracle call at (t_a, y_a)
+            self.oracle.gmm.sl_posterior_mean(&y, self.grid.times[a], &mut m_a);
+            stats.oracle_calls += 1;
+            stats.parallel_rounds += 1;
+
+            // speculate: frozen drift m_a
+            for kpos in 0..th {
+                let step = a + kpos;
+                let eta = self.grid.etas[step];
+                let (mh, yh) = (&mut m_hat[kpos * d..(kpos + 1) * d],
+                                kpos * d);
+                let y_prev: Vec<f64> = if kpos == 0 {
+                    y.clone()
+                } else {
+                    y_hat[(kpos - 1) * d..kpos * d].to_vec()
+                };
+                axpy_into(mh, &y_prev, eta, &m_a);
+                let se = eta.sqrt();
+                for i in 0..d {
+                    y_hat[yh + i] = mh[i] + se * xi[step * d + i];
+                }
+            }
+
+            // verify round: oracle at proposed points (positions 1..th-1;
+            // position 0's target mean equals the proposal mean exactly)
+            if th > 1 {
+                for kpos in 1..th {
+                    let step = a + kpos;
+                    self.oracle.gmm.sl_posterior_mean(
+                        &y_hat[(kpos - 1) * d..kpos * d],
+                        self.grid.times[step],
+                        &mut evals[kpos * d..(kpos + 1) * d],
+                    );
+                }
+                stats.oracle_calls += th - 1;
+                stats.parallel_rounds += 1;
+            }
+
+            // verifier scan
+            let mut advanced = 0usize;
+            for kpos in 0..th {
+                let step = a + kpos;
+                let eta = self.grid.etas[step];
+                let sigma = eta.sqrt();
+                let y_base: Vec<f64> = if kpos == 0 {
+                    y.clone()
+                } else {
+                    y_hat[(kpos - 1) * d..kpos * d].to_vec()
+                };
+                let drift: &[f64] = if kpos == 0 {
+                    &m_a
+                } else {
+                    &evals[kpos * d..(kpos + 1) * d]
+                };
+                axpy_into(&mut m_buf, &y_base, eta, drift);
+                let accept = grs_native(
+                    u[step], &xi[step * d..(step + 1) * d],
+                    &m_hat[kpos * d..(kpos + 1) * d], &m_buf, sigma,
+                    &mut z_buf, &mut v_buf,
+                );
+                y.copy_from_slice(&z_buf);
+                advanced += 1;
+                if accept {
+                    stats.accepted += 1;
+                } else {
+                    stats.rejected += 1;
+                    break;
+                }
+            }
+            a += advanced;
+        }
+        let t_final = *self.grid.times.last().unwrap();
+        (y.iter().map(|v| v / t_final).collect(), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Gmm;
+    use crate::schedule::SlGrid;
+
+    fn radius(p: &[f64]) -> f64 {
+        (p[0] * p[0] + p[1] * p[1]).sqrt()
+    }
+
+    #[test]
+    fn sl_sequential_localizes_to_target() {
+        let oracle = GmmSlOracle { gmm: Gmm::circle_2d() };
+        let grid = SlGrid::uniform(300.0, 600);
+        let seq = SlSequential { oracle: &oracle, grid: &grid };
+        let n = 40;
+        let mean_r: f64 = (0..n).map(|s| radius(&seq.sample(s))).sum::<f64>()
+            / n as f64;
+        assert!((mean_r - 1.5).abs() < 0.12, "mean radius {mean_r}");
+    }
+
+    #[test]
+    fn sl_asd_matches_sequential_law() {
+        let oracle = GmmSlOracle { gmm: Gmm::circle_2d() };
+        let grid = SlGrid::uniform(300.0, 400);
+        let asd = SlAsd { oracle: &oracle, grid: &grid, theta: 8 };
+        let n = 40;
+        let mut mean_r = 0.0;
+        for s in 0..n {
+            let (y, stats) = asd.sample(s);
+            mean_r += radius(&y);
+            assert_eq!(stats.accepted + stats.rejected, 400);
+        }
+        mean_r /= n as f64;
+        assert!((mean_r - 1.5).abs() < 0.12, "mean radius {mean_r}");
+    }
+
+    #[test]
+    fn sl_asd_fewer_rounds_than_sequential() {
+        let oracle = GmmSlOracle { gmm: Gmm::circle_2d() };
+        let grid = SlGrid::uniform(300.0, 512);
+        let asd = SlAsd { oracle: &oracle, grid: &grid, theta: 16 };
+        let (_, stats) = asd.sample(7);
+        assert!(stats.parallel_rounds < 512,
+                "rounds {}", stats.parallel_rounds);
+    }
+
+    #[test]
+    fn first_speculation_always_accepted_sl() {
+        let oracle = GmmSlOracle { gmm: Gmm::circle_2d() };
+        let grid = SlGrid::uniform(200.0, 256);
+        let asd = SlAsd { oracle: &oracle, grid: &grid, theta: 4 };
+        for s in 0..5 {
+            let (_, stats) = asd.sample(s);
+            assert!(stats.accepted >= stats.iterations);
+        }
+    }
+}

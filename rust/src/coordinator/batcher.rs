@@ -1,0 +1,133 @@
+//! Dynamic batcher: gangs compatible queued requests.
+//!
+//! Sequential DDPM requests to the same variant advance in lockstep, so
+//! they can share one batched denoise call per step — the classic
+//! continuous-batching win. ASD requests are adaptive (each follows its
+//! own accept/reject path) and run per-request; their parallelism is the
+//! *within*-request batched verification.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::request::{QueuedJob, SamplerSpec};
+
+/// A unit of worker execution.
+pub(crate) enum WorkItem {
+    Single(QueuedJob),
+    /// lockstep gang of sequential requests to the same variant
+    SequentialGang(Vec<QueuedJob>),
+}
+
+/// Pop the next work item, ganging sequential requests for the same
+/// variant (up to `max_batch`). Caller holds the queue lock.
+pub(crate) fn next_work_item(queue: &mut VecDeque<QueuedJob>, max_batch: usize,
+                             batching: bool) -> Option<WorkItem> {
+    let first = queue.pop_front()?;
+    if !batching || first.request.sampler != SamplerSpec::Sequential
+        || max_batch <= 1
+    {
+        return Some(WorkItem::Single(first));
+    }
+    let variant = first.request.variant.clone();
+    let mut gang = vec![first];
+    let mut idx = 0;
+    while gang.len() < max_batch && idx < queue.len() {
+        let compatible = {
+            let job = &queue[idx];
+            job.request.sampler == SamplerSpec::Sequential
+                && job.request.variant == variant
+        };
+        if compatible {
+            gang.push(queue.remove(idx).unwrap());
+        } else {
+            idx += 1;
+        }
+    }
+    if gang.len() == 1 {
+        Some(WorkItem::Single(gang.pop().unwrap()))
+    } else {
+        Some(WorkItem::SequentialGang(gang))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn job(variant: &str, sampler: SamplerSpec) -> QueuedJob {
+        let (tx, _rx) = channel();
+        // leak the receiver: these tests never reply
+        std::mem::forget(_rx);
+        QueuedJob {
+            request: Request {
+                id: 0,
+                variant: variant.into(),
+                sampler,
+                seed: 0,
+                cond: vec![],
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn gangs_same_variant_sequential() {
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("b", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Asd(4)));
+        let item = next_work_item(&mut q, 8, true).unwrap();
+        match item {
+            WorkItem::SequentialGang(g) => {
+                assert_eq!(g.len(), 2);
+                assert!(g.iter().all(|j| j.request.variant == "a"));
+            }
+            _ => panic!("expected gang"),
+        }
+        // remaining: b sequential, a asd
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn asd_requests_stay_single() {
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(job("a", SamplerSpec::Asd(8)));
+        q.push_back(job("a", SamplerSpec::Asd(8)));
+        match next_work_item(&mut q, 8, true).unwrap() {
+            WorkItem::Single(j) => assert_eq!(j.request.variant, "a"),
+            _ => panic!("asd must not gang"),
+        }
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        for _ in 0..10 {
+            q.push_back(job("a", SamplerSpec::Sequential));
+        }
+        match next_work_item(&mut q, 4, true).unwrap() {
+            WorkItem::SequentialGang(g) => assert_eq!(g.len(), 4),
+            _ => panic!(),
+        }
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn batching_disabled_returns_single() {
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Sequential));
+        assert!(matches!(next_work_item(&mut q, 8, false).unwrap(),
+                         WorkItem::Single(_)));
+    }
+
+    #[test]
+    fn empty_queue_none() {
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        assert!(next_work_item(&mut q, 8, true).is_none());
+    }
+}

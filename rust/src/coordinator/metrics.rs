@@ -1,0 +1,104 @@
+//! Serving metrics: counters + latency aggregates, cheap to update from
+//! every worker (single short-lived mutex; the hot path does sampling,
+//! not metric churn).
+
+use std::sync::Mutex;
+
+use crate::math::stats::Welford;
+
+#[derive(Debug, Default)]
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    batched_groups: u64,
+    batched_requests: u64,
+    queue_wait: Welford,
+    service: Welford,
+    model_calls: u64,
+    parallel_rounds: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batched_groups: u64,
+    pub batched_requests: u64,
+    pub mean_queue_wait_ms: f64,
+    pub mean_service_ms: f64,
+    pub p_like_max_service_ms: f64,
+    pub model_calls: u64,
+    pub parallel_rounds: u64,
+}
+
+impl Metrics {
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_complete(&self, queued_s: f64, service_s: f64,
+                       model_calls: usize, rounds: usize, failed: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if failed {
+            m.failed += 1;
+        } else {
+            m.completed += 1;
+        }
+        m.queue_wait.push(queued_s * 1e3);
+        m.service.push(service_s * 1e3);
+        m.model_calls += model_calls as u64;
+        m.parallel_rounds += rounds as u64;
+    }
+
+    pub fn on_batch(&self, group_size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batched_groups += 1;
+        m.batched_requests += group_size as u64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            submitted: m.submitted,
+            completed: m.completed,
+            failed: m.failed,
+            batched_groups: m.batched_groups,
+            batched_requests: m.batched_requests,
+            mean_queue_wait_ms: m.queue_wait.mean(),
+            mean_service_ms: m.service.mean(),
+            p_like_max_service_ms: m.service.mean() + 2.0 * m.service.std(),
+            model_calls: m.model_calls,
+            parallel_rounds: m.parallel_rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(0.001, 0.010, 100, 50, false);
+        m.on_complete(0.002, 0.020, 200, 60, true);
+        m.on_batch(4);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.model_calls, 300);
+        assert_eq!(s.parallel_rounds, 110);
+        assert_eq!(s.batched_requests, 4);
+        assert!((s.mean_service_ms - 15.0).abs() < 1e-9);
+    }
+}

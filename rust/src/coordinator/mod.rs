@@ -1,0 +1,18 @@
+//! L3 serving stack: request router + dynamic batcher + worker pool.
+//!
+//! vLLM-router-shaped: clients submit sampling [`Request`]s; a shared
+//! FIFO feeds a pool of worker threads; compatible *sequential* requests
+//! to the same variant are ganged into lockstep batches (one batched
+//! denoise call per step across requests), while ASD requests run
+//! per-request (their control flow is adaptive) with batched
+//! verification inside each request. Metrics cover queueing, latency and
+//! per-sampler round counts.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Request, Response, SamplerSpec};
+pub use server::{Coordinator, ServerConfig};

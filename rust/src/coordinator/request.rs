@@ -1,0 +1,47 @@
+//! Request / response types for the serving stack.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::asd::AsdStats;
+
+/// Which sampler serves a request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerSpec {
+    Sequential,
+    /// theta; 0 = ASD-infinity
+    Asd(usize),
+    /// window, tol
+    Picard(usize, f64),
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub variant: String,
+    pub sampler: SamplerSpec,
+    pub seed: u64,
+    /// conditioning row (empty for unconditional variants)
+    pub cond: Vec<f64>,
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub sample: Vec<f64>,
+    /// denoiser evaluations spent on this request
+    pub model_calls: usize,
+    /// parallel rounds spent on this request
+    pub parallel_rounds: usize,
+    /// ASD-specific stats when applicable
+    pub asd_stats: Option<AsdStats>,
+    pub queued_s: f64,
+    pub service_s: f64,
+    pub error: Option<String>,
+}
+
+pub(crate) struct QueuedJob {
+    pub request: Request,
+    pub reply: Sender<Response>,
+    pub enqueued: Instant,
+}

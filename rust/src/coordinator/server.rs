@@ -1,0 +1,390 @@
+//! The coordinator: owns the queue, worker pool and model registry.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+
+use crate::asd::{AsdConfig, AsdEngine, KernelBackend};
+use crate::coordinator::batcher::{next_work_item, WorkItem};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
+use crate::ddpm::{BatchedSequentialSampler, SequentialSampler};
+use crate::model::DenoiseModel;
+use crate::picard::{PicardConfig, PicardSampler};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    /// gang at most this many sequential requests into one lockstep batch
+    pub max_batch: usize,
+    pub enable_batching: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { workers: 2, max_batch: 8, enable_batching: true }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<QueuedJob>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    metrics: Metrics,
+    models: Mutex<HashMap<String, Arc<dyn DenoiseModel>>>,
+    config: ServerConfig,
+    next_id: AtomicU64,
+}
+
+/// The serving coordinator. Models are registered up front (they wrap
+/// either HLO executables or the native oracle); requests are submitted
+/// from any thread and answered over per-request channels.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn new(config: ServerConfig) -> Coordinator {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            metrics: Metrics::default(),
+            models: Mutex::new(HashMap::new()),
+            config: config.clone(),
+            next_id: AtomicU64::new(1),
+        });
+        let mut handles = Vec::new();
+        for w in 0..config.workers.max(1) {
+            let s = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("asd-worker-{w}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker"),
+            );
+        }
+        Coordinator { shared, handles }
+    }
+
+    pub fn register_model(&self, name: &str, model: Arc<dyn DenoiseModel>) {
+        self.shared
+            .models
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), model);
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.shared.models.lock().unwrap().contains_key(name)
+    }
+
+    /// Submit a request; returns the response channel and the assigned id.
+    pub fn submit(&self, mut request: Request) -> (u64, Receiver<Response>) {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        request.id = id;
+        let (tx, rx) = channel();
+        self.shared.metrics.on_submit();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(QueuedJob {
+                request,
+                reply: tx,
+                enqueued: Instant::now(),
+            });
+        }
+        self.shared.cv.notify_one();
+        (id, rx)
+    }
+
+    pub fn metrics(&self) -> crate::coordinator::MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let item = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match next_work_item(&mut q, shared.config.max_batch,
+                                     shared.config.enable_batching) {
+                    Some(item) => break item,
+                    None => q = shared.cv.wait(q).unwrap(),
+                }
+            }
+        };
+        match item {
+            WorkItem::Single(job) => serve_single(&shared, job),
+            WorkItem::SequentialGang(gang) => serve_gang(&shared, gang),
+        }
+    }
+}
+
+fn model_for(shared: &Shared, variant: &str) -> Option<Arc<dyn DenoiseModel>> {
+    shared.models.lock().unwrap().get(variant).cloned()
+}
+
+fn serve_single(shared: &Shared, job: QueuedJob) {
+    let queued_s = job.enqueued.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let req = &job.request;
+    let outcome = match model_for(shared, &req.variant) {
+        None => Err(format!("unknown model '{}'", req.variant)),
+        Some(model) => run_sampler(model, req),
+    };
+    let service_s = t0.elapsed().as_secs_f64();
+    let resp = match outcome {
+        Ok((sample, calls, rounds, asd_stats)) => Response {
+            id: req.id,
+            sample,
+            model_calls: calls,
+            parallel_rounds: rounds,
+            asd_stats,
+            queued_s,
+            service_s,
+            error: None,
+        },
+        Err(e) => Response {
+            id: req.id,
+            sample: vec![],
+            model_calls: 0,
+            parallel_rounds: 0,
+            asd_stats: None,
+            queued_s,
+            service_s,
+            error: Some(e),
+        },
+    };
+    shared.metrics.on_complete(queued_s, service_s, resp.model_calls,
+                               resp.parallel_rounds, resp.error.is_some());
+    let _ = job.reply.send(resp);
+}
+
+type SampleOutcome =
+    std::result::Result<(Vec<f64>, usize, usize, Option<crate::asd::AsdStats>), String>;
+
+fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request) -> SampleOutcome {
+    match req.sampler {
+        SamplerSpec::Sequential => {
+            let sampler = SequentialSampler::new(model);
+            sampler
+                .sample(req.seed, &req.cond)
+                .map(|(y, st)| (y, st.model_calls, st.model_calls, None))
+                .map_err(|e| e.to_string())
+        }
+        SamplerSpec::Asd(theta) => {
+            let mut engine = AsdEngine::new(
+                model,
+                AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+            );
+            engine
+                .sample_cond(req.seed, &req.cond)
+                .map(|out| {
+                    let calls = out.stats.model_calls;
+                    let rounds = out.stats.parallel_rounds;
+                    (out.y0, calls, rounds, Some(out.stats))
+                })
+                .map_err(|e| e.to_string())
+        }
+        SamplerSpec::Picard(window, tol) => {
+            let sampler = PicardSampler::new(
+                model, PicardConfig { window, tol, max_sweeps: 1000 });
+            sampler
+                .sample(req.seed, &req.cond)
+                .map(|(y, st)| (y, st.model_calls, st.parallel_rounds, None))
+                .map_err(|e| e.to_string())
+        }
+    }
+}
+
+fn serve_gang(shared: &Shared, gang: Vec<QueuedJob>) {
+    shared.metrics.on_batch(gang.len());
+    let t0 = Instant::now();
+    let variant = gang[0].request.variant.clone();
+    let model = match model_for(shared, &variant) {
+        Some(m) => m,
+        None => {
+            for job in gang {
+                fail_job(shared, job, &format!("unknown model '{variant}'"));
+            }
+            return;
+        }
+    };
+    let d = model.dim();
+    let c = model.cond_dim();
+    let seeds: Vec<u64> = gang.iter().map(|j| j.request.seed).collect();
+    let mut conds = vec![0.0; gang.len() * c];
+    for (r, job) in gang.iter().enumerate() {
+        if job.request.cond.len() == c {
+            conds[r * c..(r + 1) * c].copy_from_slice(&job.request.cond);
+        }
+    }
+    let sampler = BatchedSequentialSampler::new(model);
+    match sampler.sample_batch(&seeds, &conds) {
+        Ok((ys, st)) => {
+            let service_s = t0.elapsed().as_secs_f64();
+            // per-request accounting: the gang shares the batched calls
+            let per_calls = st.model_calls; // K rounds regardless of gang size
+            for (r, job) in gang.into_iter().enumerate() {
+                let queued_s = job.enqueued.elapsed().as_secs_f64() - service_s;
+                let resp = Response {
+                    id: job.request.id,
+                    sample: ys[r * d..(r + 1) * d].to_vec(),
+                    model_calls: per_calls,
+                    parallel_rounds: per_calls,
+                    asd_stats: None,
+                    queued_s: queued_s.max(0.0),
+                    service_s,
+                    error: None,
+                };
+                shared.metrics.on_complete(resp.queued_s, service_s,
+                                           per_calls, per_calls, false);
+                let _ = job.reply.send(resp);
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in gang {
+                fail_job(shared, job, &msg);
+            }
+        }
+    }
+}
+
+fn fail_job(shared: &Shared, job: QueuedJob, msg: &str) {
+    let queued_s = job.enqueued.elapsed().as_secs_f64();
+    shared.metrics.on_complete(queued_s, 0.0, 0, 0, true);
+    let _ = job.reply.send(Response {
+        id: job.request.id,
+        sample: vec![],
+        model_calls: 0,
+        parallel_rounds: 0,
+        asd_stats: None,
+        queued_s,
+        service_s: 0.0,
+        error: Some(msg.to_string()),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    fn coordinator_with_oracle(workers: usize) -> Coordinator {
+        let c = Coordinator::new(ServerConfig {
+            workers,
+            max_batch: 4,
+            enable_batching: true,
+        });
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
+        c.register_model("gmm", oracle);
+        c
+    }
+
+    fn req(sampler: SamplerSpec, seed: u64) -> Request {
+        Request {
+            id: 0,
+            variant: "gmm".into(),
+            sampler,
+            seed,
+            cond: vec![],
+        }
+    }
+
+    #[test]
+    fn serves_sequential_and_asd() {
+        let c = coordinator_with_oracle(2);
+        let (_, rx1) = c.submit(req(SamplerSpec::Sequential, 1));
+        let (_, rx2) = c.submit(req(SamplerSpec::Asd(8), 2));
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        assert!(r1.error.is_none() && r2.error.is_none());
+        assert_eq!(r1.sample.len(), 2);
+        assert_eq!(r1.model_calls, 40);
+        assert!(r2.parallel_rounds < 40);
+        assert!(r2.asd_stats.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_fails_cleanly() {
+        let c = coordinator_with_oracle(1);
+        let (_, rx) = c.submit(Request {
+            id: 0,
+            variant: "nope".into(),
+            sampler: SamplerSpec::Sequential,
+            seed: 0,
+            cond: vec![],
+        });
+        let r = rx.recv().unwrap();
+        assert!(r.error.unwrap().contains("unknown model"));
+        let m = c.metrics();
+        assert_eq!(m.failed, 1);
+    }
+
+    #[test]
+    fn burst_of_sequential_requests_batches() {
+        let c = coordinator_with_oracle(1);
+        let rxs: Vec<_> = (0..8)
+            .map(|s| c.submit(req(SamplerSpec::Sequential, s)).1)
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none());
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed, 8);
+        // at least one gang formed (worker races may split the burst)
+        assert!(m.batched_requests >= 2, "batched {}", m.batched_requests);
+        c.shutdown();
+    }
+
+    #[test]
+    fn picard_request_works() {
+        let c = coordinator_with_oracle(1);
+        let (_, rx) = c.submit(req(SamplerSpec::Picard(8, 1e-6), 3));
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none());
+        assert!(r.parallel_rounds >= 5);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let c = coordinator_with_oracle(3);
+        let (_, rx) = c.submit(req(SamplerSpec::Sequential, 9));
+        rx.recv().unwrap();
+        c.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,119 @@
+//! Scripted expert (P-controller over the current leg) — mirror of
+//! python envs.expert_action. Used in rust only for env-parity tests and
+//! the expert-baseline row of the robot-control experiments (demos for
+//! training are generated on the python side).
+
+use crate::env::point_mass::{LegKind, PointMassEnv};
+use crate::rng::Philox;
+
+pub const KP: f64 = 4.0;
+pub const GRIP_CLOSE_FRAC: f64 = 0.9;
+
+fn dist(a: &[f64; 2], b: &[f64; 2]) -> f64 {
+    ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt()
+}
+
+/// Expert action; `rng = None` gives the noiseless deterministic expert
+/// (golden traces add noise from an explicit recorded sequence instead).
+pub fn expert_action(env: &PointMassEnv, rng: Option<&mut Philox>) -> Vec<f64> {
+    let s = &env.spec;
+    let mut act = vec![0.0; s.action_dim()];
+    let leg = s.legs.get(env.leg_idx);
+    for a in 0..s.n_arms {
+        let (tgt, grip_cmd) = if let Some(leg) = leg.filter(|l| l.arm == a) {
+            match leg.kind {
+                LegKind::Grasp => {
+                    let close = dist(&env.ee[a], &env.obj)
+                        < leg.tol * GRIP_CLOSE_FRAC;
+                    (env.obj, if close { 1.0 } else { -1.0 })
+                }
+                LegKind::Via => {
+                    let t = leg.target.unwrap();
+                    ([t.0, t.1], 1.0)
+                }
+                LegKind::Place => {
+                    let t = leg.target.unwrap();
+                    let near = dist(&env.ee[a], &[t.0, t.1])
+                        < leg.tol * GRIP_CLOSE_FRAC;
+                    ([t.0, t.1], if near { -1.0 } else { 1.0 })
+                }
+            }
+        } else {
+            (next_target_for_arm(env, a), -1.0)
+        };
+        act[7 * a] = (KP * (tgt[0] - env.ee[a][0])).clamp(-1.0, 1.0);
+        act[7 * a + 1] = (KP * (tgt[1] - env.ee[a][1])).clamp(-1.0, 1.0);
+        act[7 * a + 2] = grip_cmd;
+    }
+    if let Some(rng) = rng {
+        for v in act.iter_mut() {
+            *v = (*v + s.expert_noise * rng.normal()).clamp(-1.0, 1.0);
+        }
+    }
+    act
+}
+
+fn next_target_for_arm(env: &PointMassEnv, arm: usize) -> [f64; 2] {
+    for leg in &env.spec.legs[env.leg_idx.min(env.spec.legs.len())..] {
+        if leg.arm == arm {
+            return match leg.kind {
+                LegKind::Grasp => env.obj,
+                _ => {
+                    let t = leg.target.unwrap();
+                    [t.0, t.1]
+                }
+            };
+        }
+    }
+    env.ee[arm]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::point_mass::TaskSpec;
+
+    #[test]
+    fn noiseless_expert_solves_every_task() {
+        for spec in [TaskSpec::square(), TaskSpec::transport(),
+                     TaskSpec::toolhang()] {
+            let name = spec.name;
+            let mut env = PointMassEnv::new(spec);
+            let mut rng = Philox::new(10, 0);
+            let mut ok = 0;
+            let n = 20;
+            for _ in 0..n {
+                env.reset(&mut rng);
+                while !env.done() {
+                    let a = expert_action(&env, None);
+                    env.step(&a);
+                }
+                ok += env.success() as usize;
+            }
+            assert_eq!(ok, n, "noiseless expert failed on {name}");
+        }
+    }
+
+    #[test]
+    fn noisy_expert_mostly_succeeds() {
+        for spec in [TaskSpec::square(), TaskSpec::transport(),
+                     TaskSpec::toolhang()] {
+            let name = spec.name;
+            let mut env = PointMassEnv::new(spec);
+            let mut rng = Philox::new(11, 0);
+            let mut noise_rng = Philox::new(12, 0);
+            let mut ok = 0;
+            let n = 30;
+            for _ in 0..n {
+                env.reset(&mut rng);
+                while !env.done() {
+                    let a = expert_action(&env, Some(&mut noise_rng));
+                    env.step(&a);
+                }
+                ok += env.success() as usize;
+            }
+            assert!(ok as f64 / n as f64 > 0.6,
+                    "noisy expert only {ok}/{n} on {name}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulated robot-control environments (Robomimic stand-ins).
+//!
+//! Deterministic point-mass kinematics mirrored line-for-line from
+//! python/compile/envs.py (the datagen side); golden traces exported by
+//! aot.py pin the two implementations together
+//! (tests/test_env_parity.rs).
+
+pub mod expert;
+pub mod point_mass;
+pub mod rollout;
+
+pub use expert::expert_action;
+pub use point_mass::{Leg, LegKind, PointMassEnv, TaskSpec, DT};
+pub use rollout::{rollout_policy, DiffusionPolicy, RolloutResult, SamplerKind};

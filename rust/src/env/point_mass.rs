@@ -1,0 +1,360 @@
+//! Point-mass manipulation tasks (mirror of python/compile/envs.py).
+//!
+//! n_arms point masses with 2-D position and binary gripper; action is
+//! 7-D per arm ([dx, dy, grip, 4 unused] — the paper's 7-DoF action
+//! space); an episode is a sequence of legs (GRASP / VIA / PLACE).
+//! Success = all legs done within max_steps. See DESIGN.md §7.
+
+use crate::rng::Philox;
+
+pub const DT: f64 = 0.05;
+pub const ACTION_DIM_PER_ARM: usize = 7;
+pub const CHUNK: usize = 16;
+pub const EXEC_STEPS: usize = 8;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LegKind {
+    Grasp,
+    Via,
+    Place,
+}
+
+#[derive(Debug, Clone)]
+pub struct Leg {
+    pub arm: usize,
+    pub kind: LegKind,
+    pub target: Option<(f64, f64)>,
+    pub tol: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub n_arms: usize,
+    pub obj_box: (f64, f64, f64, f64),
+    pub ee_start: Vec<(f64, f64, f64, f64)>,
+    pub legs: Vec<Leg>,
+    pub max_steps: usize,
+    pub expert_noise: f64,
+}
+
+impl TaskSpec {
+    pub fn action_dim(&self) -> usize {
+        ACTION_DIM_PER_ARM * self.n_arms
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        3 * self.n_arms + 2 + (self.n_arms + 1) + 1 + 2
+    }
+
+    pub fn chunk_dim(&self) -> usize {
+        CHUNK * self.action_dim()
+    }
+
+    pub fn square() -> TaskSpec {
+        TaskSpec {
+            name: "square",
+            n_arms: 1,
+            obj_box: (0.55, 0.15, 0.85, 0.45),
+            ee_start: vec![(0.05, 0.05, 0.30, 0.30)],
+            legs: vec![
+                Leg { arm: 0, kind: LegKind::Grasp, target: None, tol: 0.05 },
+                Leg { arm: 0, kind: LegKind::Place, target: Some((0.30, 0.70)), tol: 0.06 },
+            ],
+            max_steps: 100,
+            expert_noise: 0.07,
+        }
+    }
+
+    pub fn transport() -> TaskSpec {
+        TaskSpec {
+            name: "transport",
+            n_arms: 2,
+            obj_box: (0.10, 0.40, 0.30, 0.60),
+            ee_start: vec![(0.05, 0.05, 0.25, 0.25), (0.75, 0.75, 0.95, 0.95)],
+            legs: vec![
+                Leg { arm: 0, kind: LegKind::Grasp, target: None, tol: 0.05 },
+                Leg { arm: 0, kind: LegKind::Place, target: Some((0.50, 0.50)), tol: 0.05 },
+                Leg { arm: 1, kind: LegKind::Grasp, target: None, tol: 0.05 },
+                Leg { arm: 1, kind: LegKind::Place, target: Some((0.85, 0.50)), tol: 0.07 },
+            ],
+            max_steps: 160,
+            expert_noise: 0.07,
+        }
+    }
+
+    pub fn toolhang() -> TaskSpec {
+        TaskSpec {
+            name: "toolhang",
+            n_arms: 1,
+            obj_box: (0.15, 0.10, 0.45, 0.30),
+            ee_start: vec![(0.60, 0.60, 0.85, 0.85)],
+            legs: vec![
+                Leg { arm: 0, kind: LegKind::Grasp, target: None, tol: 0.035 },
+                Leg { arm: 0, kind: LegKind::Via, target: Some((0.50, 0.35)), tol: 0.035 },
+                Leg { arm: 0, kind: LegKind::Via, target: Some((0.55, 0.75)), tol: 0.035 },
+                Leg { arm: 0, kind: LegKind::Place, target: Some((0.62, 0.80)), tol: 0.035 },
+            ],
+            max_steps: 120,
+            expert_noise: 0.12,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<TaskSpec> {
+        match name {
+            "square" => Some(TaskSpec::square()),
+            "transport" => Some(TaskSpec::transport()),
+            "toolhang" => Some(TaskSpec::toolhang()),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PointMassEnv {
+    pub spec: TaskSpec,
+    pub ee: Vec<[f64; 2]>,
+    pub grip: Vec<bool>,
+    pub obj: [f64; 2],
+    /// -1 = free, else arm index
+    pub carried: i64,
+    pub leg_idx: usize,
+    pub steps: usize,
+    pub failed: bool,
+}
+
+fn dist(a: &[f64; 2], b: &[f64; 2]) -> f64 {
+    ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt()
+}
+
+impl PointMassEnv {
+    pub fn new(spec: TaskSpec) -> PointMassEnv {
+        let n = spec.n_arms;
+        PointMassEnv {
+            spec,
+            ee: vec![[0.0, 0.0]; n],
+            grip: vec![false; n],
+            obj: [0.0, 0.0],
+            carried: -1,
+            leg_idx: 0,
+            steps: 0,
+            failed: false,
+        }
+    }
+
+    pub fn reset(&mut self, rng: &mut Philox) {
+        for (a, b) in self.ee.iter_mut().zip(&self.spec.ee_start) {
+            a[0] = b.0 + rng.uniform() * (b.2 - b.0);
+            a[1] = b.1 + rng.uniform() * (b.3 - b.1);
+        }
+        let b = self.spec.obj_box;
+        self.obj = [b.0 + rng.uniform() * (b.2 - b.0),
+                    b.1 + rng.uniform() * (b.3 - b.1)];
+        self.grip.iter_mut().for_each(|g| *g = false);
+        self.carried = -1;
+        self.leg_idx = 0;
+        self.steps = 0;
+        self.failed = false;
+    }
+
+    /// Reset to an explicit state (golden-trace parity).
+    pub fn reset_to(&mut self, ee: &[[f64; 2]], obj: [f64; 2]) {
+        self.ee.copy_from_slice(ee);
+        self.obj = obj;
+        self.grip.iter_mut().for_each(|g| *g = false);
+        self.carried = -1;
+        self.leg_idx = 0;
+        self.steps = 0;
+        self.failed = false;
+    }
+
+    pub fn obs(&self) -> Vec<f64> {
+        let s = &self.spec;
+        let mut o = Vec::with_capacity(s.obs_dim());
+        for ee in &self.ee {
+            o.push(ee[0]);
+            o.push(ee[1]);
+        }
+        for &g in &self.grip {
+            o.push(if g { 1.0 } else { 0.0 });
+        }
+        o.push(self.obj[0]);
+        o.push(self.obj[1]);
+        for c in -1..(s.n_arms as i64) {
+            o.push(if self.carried == c { 1.0 } else { 0.0 });
+        }
+        o.push(self.leg_idx as f64 / s.legs.len() as f64);
+        let tgt = self.current_target();
+        o.push(tgt[0]);
+        o.push(tgt[1]);
+        o
+    }
+
+    pub fn current_target(&self) -> [f64; 2] {
+        if self.leg_idx < self.spec.legs.len() {
+            let leg = &self.spec.legs[self.leg_idx];
+            match leg.kind {
+                LegKind::Grasp => self.obj,
+                _ => {
+                    let t = leg.target.unwrap();
+                    [t.0, t.1]
+                }
+            }
+        } else {
+            self.obj
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.leg_idx >= self.spec.legs.len() || self.failed
+            || self.steps >= self.spec.max_steps
+    }
+
+    pub fn success(&self) -> bool {
+        self.leg_idx >= self.spec.legs.len() && !self.failed
+    }
+
+    pub fn step(&mut self, action: &[f64]) {
+        let s = self.spec.clone();
+        debug_assert_eq!(action.len(), s.action_dim());
+        self.steps += 1;
+        for a in 0..s.n_arms {
+            let dx = action[7 * a].clamp(-1.0, 1.0);
+            let dy = action[7 * a + 1].clamp(-1.0, 1.0);
+            self.ee[a][0] += DT * dx;
+            self.ee[a][1] += DT * dy;
+            self.grip[a] = action[7 * a + 2] > 0.0;
+        }
+
+        // dropping: the carrier opened its grip
+        if self.carried >= 0 && !self.grip[self.carried as usize] {
+            let dropped_by = self.carried as usize;
+            self.carried = -1;
+            if self.leg_idx < s.legs.len() {
+                let leg = &s.legs[self.leg_idx];
+                if leg.kind == LegKind::Via && leg.arm == dropped_by {
+                    self.failed = true;
+                }
+            }
+        }
+
+        if self.carried >= 0 {
+            self.obj = self.ee[self.carried as usize];
+        }
+
+        if self.leg_idx < s.legs.len() {
+            let leg = &s.legs[self.leg_idx];
+            match leg.kind {
+                LegKind::Grasp => {
+                    if self.carried == -1 && self.grip[leg.arm]
+                        && dist(&self.ee[leg.arm], &self.obj) < leg.tol
+                    {
+                        self.carried = leg.arm as i64;
+                        self.leg_idx += 1;
+                    }
+                }
+                LegKind::Via => {
+                    let t = leg.target.unwrap();
+                    if self.carried == leg.arm as i64
+                        && dist(&self.ee[leg.arm], &[t.0, t.1]) < leg.tol
+                    {
+                        self.leg_idx += 1;
+                    }
+                }
+                LegKind::Place => {
+                    let t = leg.target.unwrap();
+                    if self.carried == -1 && !self.grip[leg.arm]
+                        && dist(&self.obj, &[t.0, t.1]) < leg.tol
+                    {
+                        self.leg_idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_dims_match_spec() {
+        for spec in [TaskSpec::square(), TaskSpec::transport(),
+                     TaskSpec::toolhang()] {
+            let mut env = PointMassEnv::new(spec.clone());
+            let mut rng = Philox::new(1, 0);
+            env.reset(&mut rng);
+            assert_eq!(env.obs().len(), spec.obs_dim(), "{}", spec.name);
+            assert_eq!(spec.action_dim(), 7 * spec.n_arms);
+        }
+    }
+
+    #[test]
+    fn clipping_and_dt() {
+        let mut env = PointMassEnv::new(TaskSpec::square());
+        let mut rng = Philox::new(2, 0);
+        env.reset(&mut rng);
+        let before = env.ee[0];
+        let mut a = vec![0.0; 7];
+        a[0] = 5.0;
+        a[1] = -5.0;
+        env.step(&a);
+        assert!((env.ee[0][0] - before[0] - DT).abs() < 1e-12);
+        assert!((env.ee[0][1] - before[1] + DT).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grasp_carry_place_cycle() {
+        let mut env = PointMassEnv::new(TaskSpec::square());
+        let mut rng = Philox::new(3, 0);
+        env.reset(&mut rng);
+        // teleport the arm onto the object by stepping toward it
+        env.ee[0] = env.obj;
+        let mut a = vec![0.0; 7];
+        a[2] = 1.0; // close grip
+        env.step(&a);
+        assert_eq!(env.carried, 0);
+        assert_eq!(env.leg_idx, 1);
+        // move: object follows
+        a[0] = 1.0;
+        env.step(&a);
+        assert_eq!(env.obj, env.ee[0]);
+        // place: move to target then release
+        env.ee[0] = [0.30, 0.70];
+        a[0] = 0.0;
+        env.step(&a); // settle at target (still gripped)
+        a[2] = -1.0;
+        env.step(&a); // release on target
+        assert!(env.success(), "leg_idx {} failed {}", env.leg_idx, env.failed);
+    }
+
+    #[test]
+    fn via_drop_fails() {
+        let mut env = PointMassEnv::new(TaskSpec::toolhang());
+        let mut rng = Philox::new(4, 0);
+        env.reset(&mut rng);
+        env.ee[0] = env.obj;
+        let mut a = vec![0.0; 7];
+        a[2] = 1.0;
+        env.step(&a);
+        assert_eq!(env.carried, 0);
+        a[2] = -1.0; // open mid-VIA
+        env.step(&a);
+        assert!(env.failed && env.done() && !env.success());
+    }
+
+    #[test]
+    fn timeout_ends_episode() {
+        let spec = TaskSpec::square();
+        let max = spec.max_steps;
+        let mut env = PointMassEnv::new(spec);
+        let mut rng = Philox::new(5, 0);
+        env.reset(&mut rng);
+        let a = vec![0.0; 7];
+        for _ in 0..max {
+            env.step(&a);
+        }
+        assert!(env.done() && !env.success());
+    }
+}

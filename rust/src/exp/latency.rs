@@ -1,0 +1,150 @@
+//! Multi-worker wall-clock model (DESIGN.md §3).
+//!
+//! The paper measures wall-clock speedup on 8 GPUs (images) or one GPU
+//! with batching (policies). This testbed has one CPU core, so measured
+//! wall-clock under-reports parallelism; we therefore report BOTH the
+//! real measured wall-clock and a modeled multi-worker wall-clock built
+//! from measured per-call latencies:
+//!
+//!   T_round(B) = T_call(ceil(B / workers) batch rows)  +  xfer(B)
+//!   xfer(B)    = xfer_per_float * B * d   (inter-process transfer)
+//!
+//! with T_call(b) interpolated from the measured per-batch-size latency
+//! table of the actual HLO executables on this machine.
+
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// measured mean seconds per call, per compiled batch size
+    pub call_s: Vec<(usize, f64)>,
+    /// simulated worker count ("GPUs")
+    pub workers: usize,
+    /// seconds per transferred f32 between workers (paper: PCIe hop)
+    pub xfer_per_float: f64,
+    /// data dimension
+    pub d: usize,
+}
+
+impl LatencyModel {
+    /// Interpolated single-call latency for an arbitrary batch size.
+    pub fn call_latency(&self, batch: usize) -> f64 {
+        if self.call_s.is_empty() {
+            return 0.0;
+        }
+        if let Some(&(_, s)) = self.call_s.iter().find(|(b, _)| *b >= batch) {
+            return s;
+        }
+        // beyond the table: scale the largest entry linearly
+        let &(b_max, s_max) = self.call_s.last().unwrap();
+        s_max * batch as f64 / b_max as f64
+    }
+
+    /// Modeled duration of one parallel round with `batch` model calls
+    /// spread over `workers` devices.
+    pub fn round_s(&self, batch: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let per_worker = batch.div_ceil(self.workers.max(1));
+        let xfer = if batch > 1 {
+            self.xfer_per_float * (batch * self.d) as f64
+        } else {
+            0.0
+        };
+        self.call_latency(per_worker) + xfer
+    }
+
+    /// Modeled wall-clock of a whole run given its per-round batches.
+    pub fn run_s(&self, round_batches: &[usize]) -> f64 {
+        round_batches.iter().map(|&b| self.round_s(b)).sum()
+    }
+
+    /// Sequential baseline: K rounds of batch 1.
+    pub fn sequential_s(&self, k: usize) -> f64 {
+        self.call_latency(1) * k as f64
+    }
+}
+
+/// Measure the per-batch-size call latency table of an HLO model on this
+/// machine (drives the modeled multi-worker wall-clock).
+pub fn measure_call_table(model: &std::sync::Arc<crate::runtime::HloModel>,
+                          reps: usize) -> anyhow::Result<Vec<(usize, f64)>> {
+    use crate::model::DenoiseModel;
+    let d = model.info.d;
+    let c = model.info.cond_dim;
+    let k = model.info.k_steps;
+    let sizes: Vec<usize> = model.info.artifacts.keys().copied().collect();
+    let mut table = Vec::new();
+    for &b in &sizes {
+        let ys = vec![0.1; b * d];
+        let ts = vec![(k / 2) as f64; b];
+        let cond = vec![0.0; b * c];
+        let mut out = vec![0.0; b * d];
+        // warmup (compiles lazily on first call)
+        model.denoise_batch(&ys, &ts, &cond, b, &mut out)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            model.denoise_batch(&ys, &ts, &cond, b, &mut out)?;
+        }
+        table.push((b, t0.elapsed().as_secs_f64() / reps as f64));
+    }
+    Ok(table)
+}
+
+/// Default latency model for a variant: measured call table, the
+/// paper's 8 workers, and a PCIe-class transfer cost per float.
+pub fn default_latency_model(model: &std::sync::Arc<crate::runtime::HloModel>,
+                             workers: usize)
+                             -> anyhow::Result<LatencyModel> {
+    Ok(LatencyModel {
+        call_s: measure_call_table(model, 10)?,
+        workers,
+        xfer_per_float: 2e-9, // ~2 GB/s effective host<->device per float pair
+        d: model.info.d,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> LatencyModel {
+        LatencyModel {
+            call_s: vec![(1, 1e-3), (2, 1.2e-3), (4, 1.6e-3), (8, 2.5e-3)],
+            workers: 4,
+            xfer_per_float: 1e-8,
+            d: 16,
+        }
+    }
+
+    #[test]
+    fn interpolation_picks_next_size() {
+        let m = model();
+        assert_eq!(m.call_latency(1), 1e-3);
+        assert_eq!(m.call_latency(3), 1.6e-3);
+        // beyond the table: linear extrapolation
+        assert!((m.call_latency(16) - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workers_cut_round_latency() {
+        let m = model();
+        // batch 8 over 4 workers: per-worker batch 2 + transfer
+        let r = m.round_s(8);
+        assert!(r < m.call_latency(8), "parallel round must beat 1 worker");
+        assert!(r >= m.call_latency(2));
+    }
+
+    #[test]
+    fn run_and_sequential() {
+        let m = model();
+        let seq = m.sequential_s(100);
+        assert!((seq - 0.1).abs() < 1e-9);
+        let asd = m.run_s(&[1, 7, 1, 7, 1, 7]);
+        assert!(asd < seq);
+    }
+
+    #[test]
+    fn zero_batch_is_free() {
+        assert_eq!(model().round_s(0), 0.0);
+    }
+}

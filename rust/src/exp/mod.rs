@@ -1,0 +1,10 @@
+//! Shared experiment drivers: the code behind every reproduced table
+//! and figure (examples/ and benches/ are thin wrappers over these).
+
+pub mod latency;
+pub mod quality;
+pub mod speedup;
+
+pub use latency::LatencyModel;
+pub use quality::{format_quality_table, QualityRow};
+pub use speedup::{format_rows, sweep_thetas, SpeedupRow};

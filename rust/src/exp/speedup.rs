@@ -1,0 +1,125 @@
+//! Theta-sweep speedup driver (Figures 2, 4, 5).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::asd::{AsdConfig, AsdEngine, KernelBackend};
+use crate::exp::latency::LatencyModel;
+use crate::model::DenoiseModel;
+
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    /// 0 = infinity
+    pub theta: usize,
+    pub algorithmic_speedup: f64,
+    /// measured on this testbed (single device)
+    pub wallclock_speedup_1dev: f64,
+    /// modeled multi-worker wall-clock speedup (DESIGN.md §3)
+    pub wallclock_speedup_modeled: f64,
+    pub acceptance_rate: f64,
+    pub mean_rounds: f64,
+    pub mean_model_calls: f64,
+}
+
+impl SpeedupRow {
+    pub fn label(&self) -> String {
+        if self.theta == 0 {
+            "ASD-inf".to_string()
+        } else {
+            format!("ASD-{}", self.theta)
+        }
+    }
+}
+
+/// Run `n_samples` ASD samplings per theta (plus the sequential baseline)
+/// and aggregate the paper's speedup numbers. `seq_wall_s` must be the
+/// measured per-sample sequential wall-clock on the same model.
+pub fn sweep_thetas(model: Arc<dyn DenoiseModel>, thetas: &[usize],
+                    n_samples: usize, seq_wall_s: f64, seed0: u64,
+                    conds: Option<&[Vec<f64>]>,
+                    latency: &LatencyModel) -> Result<Vec<SpeedupRow>> {
+    let k = model.k_steps();
+    let mut rows = Vec::new();
+    for &theta in thetas {
+        let mut engine = AsdEngine::new(
+            model.clone(),
+            AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+        );
+        let mut rounds = 0usize;
+        let mut calls = 0usize;
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut wall = 0.0;
+        let mut modeled = 0.0;
+        for s in 0..n_samples {
+            let seed = seed0 + s as u64;
+            let out = match conds {
+                Some(cs) => engine.sample_cond(seed, &cs[s % cs.len()])?,
+                None => engine.sample(seed)?,
+            };
+            rounds += out.stats.parallel_rounds;
+            calls += out.stats.model_calls;
+            accepted += out.stats.accepted;
+            rejected += out.stats.rejected;
+            wall += out.wallclock_s;
+            modeled += latency.run_s(&out.stats.round_batches);
+        }
+        let n = n_samples as f64;
+        rows.push(SpeedupRow {
+            theta,
+            algorithmic_speedup: k as f64 / (rounds as f64 / n),
+            wallclock_speedup_1dev: seq_wall_s / (wall / n),
+            wallclock_speedup_modeled: latency.sequential_s(k) / (modeled / n),
+            acceptance_rate: accepted as f64 / (accepted + rejected).max(1) as f64,
+            mean_rounds: rounds as f64 / n,
+            mean_model_calls: calls as f64 / n,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows as the paper-style table.
+pub fn format_rows(k: usize, rows: &[SpeedupRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>12} {:>16} {:>18} {:>12} {:>10}\n",
+        "method", "alg speedup", "wall x (1 dev)", "wall x (modeled)",
+        "acc rate", "rounds"));
+    out.push_str(&format!(
+        "{:<10} {:>12} {:>16} {:>18} {:>12} {:>10}\n",
+        "DDPM", "1.00", "1.00", "1.00", "-", k));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>12.2} {:>16.2} {:>18.2} {:>12.3} {:>10.1}\n",
+            r.label(), r.algorithmic_speedup, r.wallclock_speedup_1dev,
+            r.wallclock_speedup_modeled, r.acceptance_rate, r.mean_rounds));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    #[test]
+    fn sweep_produces_monotone_alg_speedup() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
+        let latency = LatencyModel {
+            call_s: vec![(1, 1e-4), (8, 2e-4), (32, 5e-4)],
+            workers: 8,
+            xfer_per_float: 1e-9,
+            d: 2,
+        };
+        let rows = sweep_thetas(oracle, &[1, 4, 0], 5, 1e-2, 0, None,
+                                &latency).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[1].algorithmic_speedup > rows[0].algorithmic_speedup);
+        assert!(rows[2].algorithmic_speedup >= rows[1].algorithmic_speedup * 0.9);
+        // theta=1 speedup ~1 (every step verified once, tail-chained)
+        assert!(rows[0].algorithmic_speedup <= 1.3);
+        let table = format_rows(60, &rows);
+        assert!(table.contains("ASD-inf"));
+    }
+}

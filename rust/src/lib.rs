@@ -1,0 +1,62 @@
+//! # asd — Autospeculative Decoding for DDPMs
+//!
+//! Production-quality reproduction of *"Diffusion Models are Secretly
+//! Exchangeable: Parallelizing DDPMs via Autospeculation"* (ICML 2025):
+//! error-free parallel DDPM inference with a guaranteed `O(K^{1/3})`
+//! parallel speedup, plus every substrate its evaluation depends on.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — request-path coordinator: the ASD engine
+//!   (Algorithms 1–3), sequential & Picard baselines, serving stack
+//!   (router / batcher / worker pool), simulated robot environments,
+//!   quality metrics, CLI.
+//! * **L2 (python/compile)** — JAX denoiser models, AOT-lowered once to
+//!   HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (fused linear,
+//!   speculation prefix scan, Gaussian rejection sampler).
+//!
+//! Python never runs on the request path: [`runtime`] loads the
+//! artifacts through PJRT and executes them natively.
+
+pub mod asd;
+pub mod coordinator;
+pub mod ddpm;
+pub mod env;
+pub mod exp;
+pub mod math;
+pub mod model;
+pub mod picard;
+pub mod quality;
+pub mod rng;
+pub mod runtime;
+pub mod schedule;
+pub mod util;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::asd::{AsdConfig, AsdEngine, AsdOutput, AsdStats};
+    pub use crate::coordinator::{Coordinator, Request, ServerConfig};
+    pub use crate::ddpm::SequentialSampler;
+    pub use crate::model::{DenoiseModel, Manifest};
+    pub use crate::rng::Philox;
+    pub use crate::runtime::Runtime;
+    pub use crate::schedule::DdpmSchedule;
+}
+
+/// Locate the artifacts directory: `$ASD_ARTIFACTS` or `./artifacts`
+/// relative to the repo root (walking up from the current directory).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ASD_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! `asd` CLI — leader entrypoint for the serving stack and one-shot
+//! sampling.
+//!
+//! Subcommands:
+//!   info                          list artifacts/variants
+//!   sample   --model V [...]      draw samples, print stats
+//!   serve    --model V [...]      run the coordinator on a synthetic
+//!                                 request trace, report latency/throughput
+//!
+//! Examples live in examples/ (quickstart, image_generation,
+//! robot_control, serve, scaling_law).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
+use asd::ddpm::SequentialSampler;
+use asd::model::NativeMlp;
+use asd::runtime::Runtime;
+use asd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "native", "hlo-kernels", "help"]);
+    if args.flag("verbose") {
+        asd::util::log::set_level(asd::util::log::Level::Debug);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "sample" => cmd_sample(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "asd — Autospeculative Decoding for DDPMs\n\n\
+         USAGE: asd <command> [options]\n\n\
+         COMMANDS:\n  \
+         info                       list artifact variants\n  \
+         sample --model <v>         sample; options: --n 4 --theta 8\n    \
+         [--sampler asd|ddpm] [--seed 0] [--native] [--hlo-kernels]\n  \
+         serve  --model <v>         synthetic serving trace; options:\n    \
+         [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    let manifest = asd::model::Manifest::load_default()?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!("{:<18} {:>6} {:>6} {:>6} {:>8} {:>12}", "variant", "d",
+             "cond", "K", "loss", "batches");
+    for (name, v) in &manifest.variants {
+        println!("{:<18} {:>6} {:>6} {:>6} {:>8.3} {:>12}", name, v.d,
+                 v.cond_dim, v.k_steps, v.train_loss,
+                 v.artifacts.keys().map(|b| b.to_string())
+                     .collect::<Vec<_>>().join(","));
+    }
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let variant = args.get("model").context("--model is required")?;
+    let n = args.get_usize("n", 4)?;
+    let theta = args.get_usize("theta", 8)?;
+    let seed0 = args.get_u64("seed", 0)?;
+    let sampler = args.get_or("sampler", "asd");
+
+    let rt = Runtime::load_default()?;
+    let model: Arc<dyn asd::model::DenoiseModel> = if args.flag("native") {
+        let info = rt.manifest.variant(variant)?;
+        NativeMlp::load(info, &rt.manifest.dir)?
+    } else {
+        rt.model(variant)?
+    };
+    let k = model.k_steps();
+    let cond_dim = model.cond_dim();
+    // conditional variants get a class one-hot (--class, default 0)
+    let cls = args.get_usize("class", 0)?;
+    let mut cond = vec![0.0; cond_dim];
+    if cond_dim > 0 {
+        cond[cls.min(cond_dim - 1)] = 1.0;
+    }
+    println!("variant={variant} d={} K={k} sampler={sampler}", model.dim());
+
+    match sampler {
+        "ddpm" => {
+            let s = SequentialSampler::new(model);
+            for i in 0..n {
+                let t0 = std::time::Instant::now();
+                let (y, st) = s.sample(seed0 + i as u64, &cond)?;
+                println!(
+                    "sample {i}: {} model calls, {:.1} ms, y[0..4]={:?}",
+                    st.model_calls,
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    &y[..y.len().min(4)]
+                );
+            }
+        }
+        "asd" => {
+            let backend = if args.flag("hlo-kernels") {
+                KernelBackend::Hlo(rt.kernels(model.dim())?)
+            } else {
+                KernelBackend::Native
+            };
+            let mut e = AsdEngine::new(model,
+                                       AsdConfig { theta, eval_tail: true, backend });
+            for i in 0..n {
+                let out = e.sample_cond(seed0 + i as u64, &cond)?;
+                println!(
+                    "sample {i}: {} rounds ({} calls, {:.2}x alg speedup), \
+                     {:.1} ms, acc {:.3}, y[0..4]={:?}",
+                    out.stats.parallel_rounds,
+                    out.stats.model_calls,
+                    out.stats.algorithmic_speedup(k),
+                    out.wallclock_s * 1e3,
+                    out.stats.acceptance_rate(),
+                    &out.y0[..out.y0.len().min(4)]
+                );
+            }
+        }
+        other => bail!("unknown sampler '{other}' (use asd|ddpm)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let variant = args.get("model").unwrap_or("gmm2d").to_string();
+    let n_requests = args.get_usize("requests", 32)?;
+    let workers = args.get_usize("workers", 2)?;
+    let theta = args.get_usize("theta", 8)?;
+    let asd_frac = args.get_f64("asd-frac", 0.5)?;
+
+    let rt = Runtime::load_default()?;
+    let model = rt.model(&variant)?;
+    model.warmup()?;
+    let cond_dim = model.info.cond_dim;
+    let coordinator = Coordinator::new(ServerConfig {
+        workers,
+        max_batch: 8,
+        enable_batching: true,
+    });
+    coordinator.register_model(&variant, model);
+
+    println!("serving {n_requests} requests on {workers} workers \
+              (asd fraction {asd_frac})");
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let sampler = if (i as f64 / n_requests as f64) < asd_frac {
+            SamplerSpec::Asd(theta)
+        } else {
+            SamplerSpec::Sequential
+        };
+        let mut cond = vec![0.0; cond_dim];
+        if cond_dim > 0 {
+            cond[i % cond_dim] = 1.0; // rotate classes across requests
+        }
+        let (_, rx) = coordinator.submit(Request {
+            id: 0,
+            variant: variant.clone(),
+            sampler,
+            seed: 1000 + i as u64,
+            cond,
+        });
+        rxs.push(rx);
+    }
+    let mut failed = 0;
+    for rx in rxs {
+        let r = rx.recv()?;
+        if r.error.is_some() {
+            failed += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = coordinator.metrics();
+    println!(
+        "done in {elapsed:.2}s — {:.1} req/s, mean latency {:.1} ms \
+         (queue {:.1} ms), {} batched into {} gangs, {failed} failed",
+        n_requests as f64 / elapsed,
+        m.mean_service_ms,
+        m.mean_queue_wait_ms,
+        m.batched_requests,
+        m.batched_groups
+    );
+    coordinator.shutdown();
+    Ok(())
+}

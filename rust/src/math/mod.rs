@@ -1,0 +1,8 @@
+//! Numerical substrate: vector ops, special functions, statistics.
+
+pub mod erf;
+pub mod stats;
+pub mod vec_ops;
+
+pub use erf::{erf, normal_cdf};
+pub use vec_ops::*;

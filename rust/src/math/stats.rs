@@ -1,0 +1,225 @@
+//! Statistics: summary stats, two-sample tests, distribution distances.
+//!
+//! Backs both the quality metrics (FID-proxy, sliced Wasserstein, MMD)
+//! and the statistical assertions in the property tests.
+
+use crate::rng::Philox;
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+pub fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+pub fn variance(v: &[f64]) -> f64 {
+    let m = mean(v);
+    v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (v.len().max(2) - 1) as f64
+}
+
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic (1-D).
+pub fn ks_statistic(a: &[f64], b: &[f64]) -> f64 {
+    let mut sa = a.to_vec();
+    let mut sb = b.to_vec();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < sa.len() && j < sb.len() {
+        if sa[i] <= sb[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+        let fa = i as f64 / sa.len() as f64;
+        let fb = j as f64 / sb.len() as f64;
+        d = d.max((fa - fb).abs());
+    }
+    d
+}
+
+/// Asymptotic two-sample KS critical value at significance `alpha`.
+pub fn ks_critical(n1: usize, n2: usize, alpha: f64) -> f64 {
+    let c = (-(alpha / 2.0).ln() / 2.0).sqrt();
+    c * ((n1 + n2) as f64 / (n1 * n2) as f64).sqrt()
+}
+
+/// Sliced Wasserstein-1 distance between point clouds in R^d:
+/// average over `n_proj` random 1-D projections of the 1-D W1 distance.
+pub fn sliced_wasserstein(a: &[Vec<f64>], b: &[Vec<f64>], n_proj: usize,
+                          seed: u64) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let d = a[0].len();
+    let mut rng = Philox::new(seed, 0x57a7);
+    let mut total = 0.0;
+    for _ in 0..n_proj {
+        let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let n = crate::math::vec_ops::norm(&dir).max(1e-12);
+        for x in &mut dir {
+            *x /= n;
+        }
+        let mut pa: Vec<f64> = a.iter()
+            .map(|r| crate::math::vec_ops::dot(r, &dir)).collect();
+        let mut pb: Vec<f64> = b.iter()
+            .map(|r| crate::math::vec_ops::dot(r, &dir)).collect();
+        pa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        total += w1_sorted(&pa, &pb);
+    }
+    total / n_proj as f64
+}
+
+/// W1 between two sorted 1-D samples (quantile coupling).
+pub fn w1_sorted(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().max(b.len());
+    let mut acc = 0.0;
+    for i in 0..n {
+        let qa = a[(i * a.len()) / n];
+        let qb = b[(i * b.len()) / n];
+        acc += (qa - qb).abs();
+    }
+    acc / n as f64
+}
+
+/// RBF-kernel MMD^2 (biased V-statistic) between two point clouds.
+pub fn mmd_sq_rbf(a: &[Vec<f64>], b: &[Vec<f64>], bandwidth: f64) -> f64 {
+    let g = 1.0 / (2.0 * bandwidth * bandwidth);
+    let k = |x: &[f64], y: &[f64]| {
+        let d2: f64 = x.iter().zip(y).map(|(p, q)| (p - q) * (p - q)).sum();
+        (-g * d2).exp()
+    };
+    let kaa: f64 = a.iter()
+        .map(|x| a.iter().map(|y| k(x, y)).sum::<f64>())
+        .sum::<f64>() / (a.len() * a.len()) as f64;
+    let kbb: f64 = b.iter()
+        .map(|x| b.iter().map(|y| k(x, y)).sum::<f64>())
+        .sum::<f64>() / (b.len() * b.len()) as f64;
+    let kab: f64 = a.iter()
+        .map(|x| b.iter().map(|y| k(x, y)).sum::<f64>())
+        .sum::<f64>() / (a.len() * b.len()) as f64;
+    kaa + kbb - 2.0 * kab
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::normal_vec;
+
+    #[test]
+    fn welford_matches_batch() {
+        let data = [1.0, 2.0, 4.0, 8.0, 16.5];
+        let mut w = Welford::default();
+        for &x in &data {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&data)).abs() < 1e-12);
+        assert!((w.var() - variance(&data)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_same_distribution_small() {
+        let mut rng = Philox::new(1, 0);
+        let a = normal_vec(&mut rng, 2000);
+        let b = normal_vec(&mut rng, 2000);
+        let d = ks_statistic(&a, &b);
+        assert!(d < ks_critical(2000, 2000, 0.001), "d = {d}");
+    }
+
+    #[test]
+    fn ks_different_distribution_large() {
+        let mut rng = Philox::new(2, 0);
+        let a = normal_vec(&mut rng, 1000);
+        let b: Vec<f64> = normal_vec(&mut rng, 1000)
+            .into_iter().map(|x| x + 1.0).collect();
+        assert!(ks_statistic(&a, &b) > ks_critical(1000, 1000, 0.001));
+    }
+
+    #[test]
+    fn w1_shift_identity() {
+        // W1 between N(0,1) samples and the same +c shifted is ~c
+        let mut rng = Philox::new(3, 0);
+        let mut a = normal_vec(&mut rng, 4000);
+        let mut b: Vec<f64> = a.iter().map(|x| x + 0.7).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w1_sorted(&a, &b) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sliced_w_zero_for_identical() {
+        let mut rng = Philox::new(4, 0);
+        let cloud: Vec<Vec<f64>> =
+            (0..200).map(|_| normal_vec(&mut rng, 3)).collect();
+        let d = sliced_wasserstein(&cloud, &cloud, 8, 0);
+        assert!(d < 1e-12);
+    }
+
+    #[test]
+    fn sliced_w_detects_shift() {
+        let mut rng = Philox::new(5, 0);
+        let a: Vec<Vec<f64>> =
+            (0..500).map(|_| normal_vec(&mut rng, 3)).collect();
+        let b: Vec<Vec<f64>> = a.iter()
+            .map(|r| r.iter().map(|x| x + 1.0).collect()).collect();
+        let d = sliced_wasserstein(&a, &b, 16, 0);
+        // E|<1, dir>| over random unit dirs in R^3 is ~0.5-0.6
+        assert!(d > 0.3, "d = {d}");
+    }
+
+    #[test]
+    fn mmd_separates() {
+        let mut rng = Philox::new(6, 0);
+        let a: Vec<Vec<f64>> =
+            (0..150).map(|_| normal_vec(&mut rng, 2)).collect();
+        let b: Vec<Vec<f64>> =
+            (0..150).map(|_| normal_vec(&mut rng, 2)).collect();
+        let c: Vec<Vec<f64>> = a.iter()
+            .map(|r| r.iter().map(|x| x + 2.0).collect()).collect();
+        let same = mmd_sq_rbf(&a, &b, 1.0);
+        let diff = mmd_sq_rbf(&a, &c, 1.0);
+        assert!(diff > 10.0 * same.abs().max(1e-6), "{same} vs {diff}");
+    }
+}

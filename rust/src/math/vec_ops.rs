@@ -1,0 +1,133 @@
+//! Dense vector primitives for the ASD hot path.
+//!
+//! Everything operates on `&[f64]` / `&mut [f64]` slices so the engine
+//! can run allocation-free over preallocated chain buffers.
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+pub fn norm_sq(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum()
+}
+
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    norm_sq(a).sqrt()
+}
+
+#[inline]
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// out = c1 * x + c2 * y
+#[inline]
+pub fn lincomb_into(out: &mut [f64], c1: f64, x: &[f64], c2: f64, y: &[f64]) {
+    debug_assert!(out.len() == x.len() && x.len() == y.len());
+    for i in 0..out.len() {
+        out[i] = c1 * x[i] + c2 * y[i];
+    }
+}
+
+/// out = a + s * b
+#[inline]
+pub fn axpy_into(out: &mut [f64], a: &[f64], s: f64, b: &[f64]) {
+    debug_assert!(out.len() == a.len() && a.len() == b.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + s * b[i];
+    }
+}
+
+/// a += s * b
+#[inline]
+pub fn axpy(a: &mut [f64], s: f64, b: &[f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += s * b[i];
+    }
+}
+
+#[inline]
+pub fn scale(a: &mut [f64], s: f64) {
+    for x in a {
+        *x *= s;
+    }
+}
+
+pub fn mean_axis0(rows: &[Vec<f64>]) -> Vec<f64> {
+    let d = rows[0].len();
+    let mut m = vec![0.0; d];
+    for r in rows {
+        axpy(&mut m, 1.0, r);
+    }
+    scale(&mut m, 1.0 / rows.len() as f64);
+    m
+}
+
+/// Reflection of `xi` along `v` (Alg 3 line 6): xi - 2 v <v,xi>/||v||^2.
+pub fn reflect_into(out: &mut [f64], xi: &[f64], v: &[f64]) {
+    let v_sq = norm_sq(v).max(1e-300);
+    let coef = 2.0 * dot(v, xi) / v_sq;
+    for i in 0..out.len() {
+        out[i] = xi[i] - coef * v[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn basic_ops() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        let mut out = vec![0.0; 2];
+        lincomb_into(&mut out, 2.0, &[1.0, 1.0], 3.0, &[1.0, 2.0]);
+        assert_eq!(out, vec![5.0, 8.0]);
+        axpy_into(&mut out, &[1.0, 1.0], 0.5, &[2.0, 4.0]);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn reflection_is_isometric_involution() {
+        prop::check("reflect", 50, |g| {
+            let d = g.usize_in(1, 16);
+            let xi = g.normal_vec(d);
+            let mut v = g.normal_vec(d);
+            if norm(&v) < 1e-9 {
+                v[0] += 1.0;
+            }
+            let mut r = vec![0.0; d];
+            reflect_into(&mut r, &xi, &v);
+            // isometry
+            assert!((norm(&r) - norm(&xi)).abs() < 1e-9);
+            // involution
+            let mut rr = vec![0.0; d];
+            reflect_into(&mut rr, &r, &v);
+            for i in 0..d {
+                assert!((rr[i] - xi[i]).abs() < 1e-9);
+            }
+            // flips the v-component, keeps the orthogonal part
+            let v_comp = dot(&r, &v) / norm(&v);
+            let xi_comp = dot(&xi, &v) / norm(&v);
+            assert!((v_comp + xi_comp).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn mean_axis0_works() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 6.0]];
+        assert_eq!(mean_axis0(&rows), vec![2.0, 4.0]);
+    }
+}

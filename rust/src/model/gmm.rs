@@ -1,0 +1,354 @@
+//! Analytic Gaussian-mixture oracles.
+//!
+//! For an isotropic GMM target the posterior mean is closed-form under
+//! both parametrizations, giving *exact* (zero network error) models:
+//!
+//! * DDPM form:  y_i = sqrt(abar) x0 + sqrt(1-abar) eps
+//!     r_c ∝ w_c N(y; sqrt(abar) mu_c, (abar sig_c^2 + 1 - abar) I)
+//!     E[x0|y,c] = mu_c + sqrt(abar) sig_c^2 / var_c (y - sqrt(abar) mu_c)
+//! * SL form (Thm 8): y_t = t x* + W_t
+//!     r_c ∝ w_c N(y; t mu_c, (t^2 sig_c^2 + t) I)
+//!     E[x|y,c] = mu_c + t sig_c^2 / (t^2 sig_c^2 + t) (y - t mu_c)
+//!
+//! These drive the Thm-4 scaling benches and the exactness tests — the
+//! algorithmic claims are checked unconfounded by learning error.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::{DenoiseModel, TargetSpec};
+use crate::rng::Philox;
+use crate::schedule::DdpmSchedule;
+
+/// An isotropic Gaussian mixture in R^d.
+#[derive(Debug, Clone)]
+pub struct Gmm {
+    pub d: usize,
+    /// component means, row-major (c, d)
+    pub means: Vec<f64>,
+    pub sigmas: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl Gmm {
+    pub fn new(means: Vec<Vec<f64>>, sigmas: Vec<f64>, weights: Vec<f64>) -> Gmm {
+        let d = means[0].len();
+        let flat: Vec<f64> = means.into_iter().flatten().collect();
+        Gmm { d, means: flat, sigmas, weights }
+    }
+
+    pub fn from_target(t: &TargetSpec) -> Option<Gmm> {
+        match t {
+            TargetSpec::Gmm { means, sigmas, weights } => {
+                Some(Gmm::new(means.clone(), sigmas.clone(), weights.clone()))
+            }
+            _ => None,
+        }
+    }
+
+    /// The paper's gmm2d toy target (8 modes on a circle) for tests.
+    pub fn circle_2d() -> Gmm {
+        let c = 8;
+        let means = (0..c)
+            .map(|i| {
+                let a = 2.0 * std::f64::consts::PI * i as f64 / c as f64;
+                vec![1.5 * a.cos(), 1.5 * a.sin()]
+            })
+            .collect();
+        Gmm::new(means, vec![0.12; c], vec![1.0 / c as f64; c])
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn mean_of(&self, c: usize) -> &[f64] {
+        &self.means[c * self.d..(c + 1) * self.d]
+    }
+
+    /// Draw a sample; returns (x, component).
+    pub fn sample(&self, rng: &mut Philox) -> (Vec<f64>, usize) {
+        let u = rng.uniform();
+        let mut acc = 0.0;
+        let mut comp = self.n_components() - 1;
+        for (c, &w) in self.weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                comp = c;
+                break;
+            }
+        }
+        let mu = self.mean_of(comp);
+        let x = (0..self.d)
+            .map(|i| mu[i] + self.sigmas[comp] * rng.normal())
+            .collect();
+        (x, comp)
+    }
+
+    /// Bayes posterior P(component | x) under the target itself — the
+    /// alignment (CLIP-proxy) metric for conditional variants.
+    pub fn class_posterior(&self, x: &[f64]) -> Vec<f64> {
+        let mut logp: Vec<f64> = (0..self.n_components())
+            .map(|c| {
+                let mu = self.mean_of(c);
+                let s2 = self.sigmas[c] * self.sigmas[c];
+                let d2: f64 = x.iter().zip(mu).map(|(a, b)| (a - b) * (a - b)).sum();
+                self.weights[c].ln() - 0.5 * d2 / s2
+                    - 0.5 * self.d as f64 * s2.ln()
+            })
+            .collect();
+        let mx = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for l in logp.iter_mut() {
+            *l = (*l - mx).exp();
+            sum += *l;
+        }
+        for l in logp.iter_mut() {
+            *l /= sum;
+        }
+        logp
+    }
+
+    /// Posterior mean E[x0 | y, noise level abar] (responsibilities and
+    /// per-component conditional means; `cond_class` restricts to one
+    /// component — the conditional-model case).
+    pub fn ddpm_posterior_mean(&self, y: &[f64], abar: f64,
+                               cond_class: Option<usize>, out: &mut [f64]) {
+        let sa = abar.sqrt();
+        let classes: Vec<usize> = match cond_class {
+            Some(c) => vec![c],
+            None => (0..self.n_components()).collect(),
+        };
+        let mut logr = Vec::with_capacity(classes.len());
+        for &c in &classes {
+            let s2 = self.sigmas[c] * self.sigmas[c];
+            let var = abar * s2 + (1.0 - abar);
+            let mu = self.mean_of(c);
+            let d2: f64 = y.iter().zip(mu).map(|(a, b)| {
+                let diff = a - sa * b;
+                diff * diff
+            }).sum();
+            logr.push(self.weights[c].ln() - 0.5 * d2 / var
+                - 0.5 * self.d as f64 * var.ln());
+        }
+        let mx = logr.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut rs: Vec<f64> = logr.iter().map(|l| (l - mx).exp()).collect();
+        let sum: f64 = rs.iter().sum();
+        for r in rs.iter_mut() {
+            *r /= sum;
+        }
+        out.fill(0.0);
+        for (r, &c) in rs.iter().zip(&classes) {
+            let s2 = self.sigmas[c] * self.sigmas[c];
+            let var = abar * s2 + (1.0 - abar);
+            let gain = sa * s2 / var;
+            let mu = self.mean_of(c);
+            for i in 0..self.d {
+                out[i] += r * (mu[i] + gain * (y[i] - sa * mu[i]));
+            }
+        }
+    }
+
+    /// SL posterior mean m(t, y) (Eq. 4) for the SL-native theory path.
+    pub fn sl_posterior_mean(&self, y: &[f64], t: f64, out: &mut [f64]) {
+        if t <= 0.0 {
+            // t=0: no information; m = prior mean
+            out.fill(0.0);
+            for c in 0..self.n_components() {
+                let mu = self.mean_of(c);
+                for i in 0..self.d {
+                    out[i] += self.weights[c] * mu[i];
+                }
+            }
+            return;
+        }
+        let mut logr = Vec::with_capacity(self.n_components());
+        for c in 0..self.n_components() {
+            let s2 = self.sigmas[c] * self.sigmas[c];
+            let var = t * t * s2 + t;
+            let mu = self.mean_of(c);
+            let d2: f64 = y.iter().zip(mu).map(|(a, b)| {
+                let diff = a - t * b;
+                diff * diff
+            }).sum();
+            logr.push(self.weights[c].ln() - 0.5 * d2 / var
+                - 0.5 * self.d as f64 * var.ln());
+        }
+        let mx = logr.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut rs: Vec<f64> = logr.iter().map(|l| (l - mx).exp()).collect();
+        let sum: f64 = rs.iter().sum();
+        for r in rs.iter_mut() {
+            *r /= sum;
+        }
+        out.fill(0.0);
+        for (c, r) in rs.iter().enumerate() {
+            let s2 = self.sigmas[c] * self.sigmas[c];
+            let gain = t * s2 / (t * t * s2 + t);
+            let mu = self.mean_of(c);
+            for i in 0..self.d {
+                out[i] += r * (mu[i] + gain * (y[i] - t * mu[i]));
+            }
+        }
+    }
+}
+
+/// DDPM-form analytic oracle implementing `DenoiseModel`.
+pub struct GmmDdpmOracle {
+    pub gmm: Gmm,
+    schedule: DdpmSchedule,
+    /// interpret the conditioning one-hot as a class restriction
+    pub conditional: bool,
+}
+
+impl GmmDdpmOracle {
+    pub fn new(gmm: Gmm, k_steps: usize, conditional: bool) -> Arc<GmmDdpmOracle> {
+        Arc::new(GmmDdpmOracle { gmm, schedule: DdpmSchedule::new(k_steps), conditional })
+    }
+}
+
+impl DenoiseModel for GmmDdpmOracle {
+    fn dim(&self) -> usize {
+        self.gmm.d
+    }
+
+    fn cond_dim(&self) -> usize {
+        if self.conditional { self.gmm.n_components() } else { 0 }
+    }
+
+    fn k_steps(&self) -> usize {
+        self.schedule.k_steps
+    }
+
+    fn schedule(&self) -> &DdpmSchedule {
+        &self.schedule
+    }
+
+    fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                     out: &mut [f64]) -> Result<()> {
+        let d = self.gmm.d;
+        let c_dim = self.cond_dim();
+        for r in 0..n {
+            let i = ts[r] as usize;
+            let abar = self.schedule.abar[i - 1];
+            let cls = if self.conditional {
+                let row = &cond[r * c_dim..(r + 1) * c_dim];
+                Some(row.iter().enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(idx, _)| idx).unwrap())
+            } else {
+                None
+            };
+            self.gmm.ddpm_posterior_mean(
+                &ys[r * d..(r + 1) * d], abar, cls, &mut out[r * d..(r + 1) * d]);
+        }
+        Ok(())
+    }
+}
+
+/// SL-form oracle m(t, y) for SL-native sampling (theory benches).
+pub struct GmmSlOracle {
+    pub gmm: Gmm,
+}
+
+impl GmmSlOracle {
+    /// Batched m(t, y).
+    pub fn mean_batch(&self, ys: &[f64], times: &[f64], n: usize, out: &mut [f64]) {
+        let d = self.gmm.d;
+        for r in 0..n {
+            self.gmm.sl_posterior_mean(&ys[r * d..(r + 1) * d], times[r],
+                                       &mut out[r * d..(r + 1) * d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posterior_mean_at_zero_noise_is_identity_ish() {
+        // abar -> 1: y ~= x0, posterior mean should return ~y when y is
+        // exactly on a mode
+        let gmm = Gmm::circle_2d();
+        let mut out = vec![0.0; 2];
+        let y = gmm.mean_of(0).to_vec();
+        gmm.ddpm_posterior_mean(&y, 0.999999, None, &mut out);
+        assert!((out[0] - y[0]).abs() < 1e-3 && (out[1] - y[1]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn posterior_mean_at_full_noise_is_prior_mean() {
+        // abar -> 0: no information; E[x0] = overall mean = 0 for the circle
+        let gmm = Gmm::circle_2d();
+        let mut out = vec![0.0; 2];
+        gmm.ddpm_posterior_mean(&[3.0, -1.0], 1e-12, None, &mut out);
+        // O(sqrt(abar)) residue from the responsibilities' y-dependence
+        assert!(out[0].abs() < 1e-4 && out[1].abs() < 1e-4);
+    }
+
+    #[test]
+    fn conditional_restricts_to_component() {
+        let gmm = Gmm::circle_2d();
+        let mut out = vec![0.0; 2];
+        // far-away y, conditioned on component 3: mean must pull to mu_3
+        gmm.ddpm_posterior_mean(&[0.0, 0.0], 1e-9, Some(3), &mut out);
+        let mu3 = gmm.mean_of(3);
+        assert!((out[0] - mu3[0]).abs() < 1e-6);
+        assert!((out[1] - mu3[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn class_posterior_peaks_at_nearest_mode() {
+        let gmm = Gmm::circle_2d();
+        let p = gmm.class_posterior(gmm.mean_of(5));
+        let argmax = p.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax, 5);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sl_mean_localizes_to_sample() {
+        // large t: m(t, t*x + W_t) ~= x for x on a mode
+        let gmm = Gmm::circle_2d();
+        let x = gmm.mean_of(2);
+        let t = 5000.0;
+        let y: Vec<f64> = x.iter().map(|v| t * v).collect();
+        let mut m = vec![0.0; 2];
+        gmm.sl_posterior_mean(&y, t, &mut m);
+        assert!((m[0] - x[0]).abs() < 1e-3 && (m[1] - x[1]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sl_mean_at_t0_is_prior_mean() {
+        let gmm = Gmm::circle_2d();
+        let mut m = vec![9.0; 2];
+        gmm.sl_posterior_mean(&[0.0, 0.0], 0.0, &mut m);
+        assert!(m[0].abs() < 1e-12 && m[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_hit_modes() {
+        let gmm = Gmm::circle_2d();
+        let mut rng = Philox::new(11, 0);
+        for _ in 0..200 {
+            let (x, c) = gmm.sample(&mut rng);
+            let mu = gmm.mean_of(c);
+            let dist = ((x[0] - mu[0]).powi(2) + (x[1] - mu[1]).powi(2)).sqrt();
+            assert!(dist < 0.12 * 6.0, "sample too far from its mode");
+        }
+    }
+
+    #[test]
+    fn oracle_denoise_model_impl() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 50, false);
+        assert_eq!(oracle.dim(), 2);
+        assert_eq!(oracle.k_steps(), 50);
+        let mut out = vec![0.0; 4];
+        oracle.denoise_batch(&[0.1, 0.2, -0.3, 0.4], &[50.0, 1.0], &[], 2,
+                             &mut out).unwrap();
+        // noise level 50 (max): near prior mean; level 1: near the iterate
+        assert!(out[0].abs() < 0.5);
+    }
+}

@@ -1,0 +1,258 @@
+//! Typed loader for `artifacts/manifest.json` (written by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::schedule::DdpmSchedule;
+use crate::util::Json;
+
+/// Ground-truth target distribution parameters (for quality metrics).
+#[derive(Debug, Clone)]
+pub enum TargetSpec {
+    /// Isotropic GMM: per-component means (row-major), sigmas, weights.
+    Gmm { means: Vec<Vec<f64>>, sigmas: Vec<f64>, weights: Vec<f64> },
+    /// Procedural 8x8 textures.
+    Pixel64 { side: usize, freq: (f64, f64), amp: (f64, f64), noise: f64 },
+    /// A robot-control task (see env module).
+    Env { task: String },
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub d: usize,
+    pub cond_dim: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub temb_dim: usize,
+    pub k_steps: usize,
+    pub train_loss: f64,
+    /// batch size -> HLO artifact filename
+    pub artifacts: BTreeMap<usize, String>,
+    pub weights_file: String,
+    /// [(n_in, n_out)] per linear layer
+    pub weights_layout: Vec<(usize, usize)>,
+    pub abar: Vec<f64>,
+    pub target: TargetSpec,
+    pub env: Option<String>,
+}
+
+impl VariantInfo {
+    pub fn schedule(&self) -> DdpmSchedule {
+        DdpmSchedule::from_abar(self.abar.clone())
+    }
+
+    /// Smallest compiled batch size >= n (None if n exceeds the max).
+    pub fn batch_for(&self, n: usize) -> Option<usize> {
+        self.artifacts.keys().copied().find(|&b| b >= n)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.artifacts.keys().copied().max().unwrap_or(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub beta_start: f64,
+    pub beta_end: f64,
+    pub spec_t: usize,
+    pub chunk: usize,
+    pub exec_steps: usize,
+    pub variants: BTreeMap<String, VariantInfo>,
+    /// d -> speculate / verify kernel artifact filenames
+    pub speculate_kernels: BTreeMap<usize, String>,
+    pub verify_kernels: BTreeMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        let dir = crate::artifacts_dir();
+        Self::load(&dir).with_context(|| {
+            format!(
+                "loading manifest from {} (run `make artifacts` first, or \
+                 set ASD_ARTIFACTS)",
+                dir.display()
+            )
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "unknown variant '{name}' (have: {})",
+                self.variants.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let ver = j.get("format_version")?.as_i64()?;
+        if ver != 1 {
+            bail!("unsupported manifest format_version {ver}");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            variants.insert(name.clone(), parse_variant(name, v)
+                .with_context(|| format!("variant '{name}'"))?);
+        }
+        let parse_kernels = |key: &str| -> Result<BTreeMap<usize, String>> {
+            let mut out = BTreeMap::new();
+            for (d, f) in j.get("kernels")?.get(key)?.as_obj()? {
+                out.insert(d.parse::<usize>()?, f.as_str()?.to_string());
+            }
+            Ok(out)
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            beta_start: j.get("beta_start")?.as_f64()?,
+            beta_end: j.get("beta_end")?.as_f64()?,
+            spec_t: j.get("spec_t")?.as_usize()?,
+            chunk: j.get("chunk")?.as_usize()?,
+            exec_steps: j.get("exec_steps")?.as_usize()?,
+            variants,
+            speculate_kernels: parse_kernels("speculate")?,
+            verify_kernels: parse_kernels("verify")?,
+        })
+    }
+}
+
+fn parse_variant(name: &str, v: &Json) -> Result<VariantInfo> {
+    let mut artifacts = BTreeMap::new();
+    for (b, f) in v.get("artifacts")?.as_obj()? {
+        artifacts.insert(b.parse::<usize>()?, f.as_str()?.to_string());
+    }
+    let layout = v
+        .get("weights_layout")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            let pair = p.as_arr()?;
+            Ok((pair[0].as_usize()?, pair[1].as_usize()?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(VariantInfo {
+        name: name.to_string(),
+        d: v.get("d")?.as_usize()?,
+        cond_dim: v.get("cond_dim")?.as_usize()?,
+        hidden: v.get("hidden")?.as_usize()?,
+        layers: v.get("layers")?.as_usize()?,
+        temb_dim: v.get("temb_dim")?.as_usize()?,
+        k_steps: v.get("k_steps")?.as_usize()?,
+        train_loss: v.get("train_loss")?.as_f64()?,
+        artifacts,
+        weights_file: v.get("weights")?.as_str()?.to_string(),
+        weights_layout: layout,
+        abar: v.get("abar")?.as_f64_vec()?,
+        target: parse_target(v.get("target")?)?,
+        env: v.opt("env").map(|e| e.as_str().map(str::to_string)).transpose()?,
+    })
+}
+
+fn parse_target(t: &Json) -> Result<TargetSpec> {
+    match t.get("kind")?.as_str()? {
+        "gmm" => {
+            let (_, _, _) = t.get("means")?.as_f64_matrix()?;
+            let means = t
+                .get("means")?
+                .as_arr()?
+                .iter()
+                .map(|r| r.as_f64_vec())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TargetSpec::Gmm {
+                means,
+                sigmas: t.get("sigmas")?.as_f64_vec()?,
+                weights: t.get("weights")?.as_f64_vec()?,
+            })
+        }
+        "pixel64" => Ok(TargetSpec::Pixel64 {
+            side: t.get("side")?.as_usize()?,
+            freq: {
+                let f = t.get("freq")?.as_f64_vec()?;
+                (f[0], f[1])
+            },
+            amp: {
+                let a = t.get("amp")?.as_f64_vec()?;
+                (a[0], a[1])
+            },
+            noise: t.get("noise")?.as_f64()?,
+        }),
+        "env" => Ok(TargetSpec::Env {
+            task: t.get("task")?.as_str()?.to_string(),
+        }),
+        k => bail!("unknown target kind '{k}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        Json::parse(
+            r#"{
+            "format_version": 1,
+            "beta_start": 0.0001, "beta_end": 0.02,
+            "spec_t": 32, "batch_sizes": [1, 2], "chunk": 16,
+            "exec_steps": 8,
+            "variants": {
+              "toy": {
+                "d": 2, "cond_dim": 0, "hidden": 8, "layers": 1,
+                "temb_dim": 32, "k_steps": 10, "train_loss": 0.5,
+                "weights": "w.bin",
+                "weights_layout": [[34, 8], [8, 2]],
+                "artifacts": {"1": "a1.hlo.txt", "2": "a2.hlo.txt"},
+                "abar": [0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1, 0.05],
+                "target": {"kind": "gmm", "means": [[1, 0], [0, 1]],
+                           "sigmas": [0.1, 0.1], "weights": [0.5, 0.5]},
+                "env": null
+              }
+            },
+            "kernels": {"speculate": {"2": "s.hlo.txt"},
+                        "verify": {"2": "v.hlo.txt"}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::from_json(Path::new("/tmp"), &mini_manifest()).unwrap();
+        let v = m.variant("toy").unwrap();
+        assert_eq!(v.d, 2);
+        assert_eq!(v.k_steps, 10);
+        assert_eq!(v.batch_for(2), Some(2));
+        assert_eq!(v.batch_for(1), Some(1));
+        assert_eq!(v.batch_for(3), None);
+        assert_eq!(v.max_batch(), 2);
+        assert!(matches!(v.target, TargetSpec::Gmm { .. }));
+        assert!(v.env.is_none());
+        assert_eq!(m.speculate_kernels[&2], "s.hlo.txt");
+    }
+
+    #[test]
+    fn schedule_from_abar_is_consistent() {
+        let m = Manifest::from_json(Path::new("/tmp"), &mini_manifest()).unwrap();
+        let s = m.variant("toy").unwrap().schedule();
+        assert_eq!(s.k_steps, 10);
+        // abar reproduced
+        for (i, &a) in m.variant("toy").unwrap().abar.iter().enumerate() {
+            assert!((s.abar[i] - a).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unknown_variant_error_lists_names() {
+        let m = Manifest::from_json(Path::new("/tmp"), &mini_manifest()).unwrap();
+        let err = m.variant("nope").unwrap_err().to_string();
+        assert!(err.contains("toy"), "{err}");
+    }
+}

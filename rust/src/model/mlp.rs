@@ -1,0 +1,277 @@
+//! Rust-native MLP denoiser forward pass.
+//!
+//! Bit-architecture mirror of python/compile/model.py operating on the
+//! flat `weights_*.bin` buffer (layout: per layer, W row-major then b).
+//! Two roles:
+//! * parity oracle pinning the HLO execution path (tests compare both
+//!   against golden.json forwards), and
+//! * a fast in-process backend (`--backend native`) for experiments that
+//!   need millions of cheap model calls.
+//!
+//! All math in f32 (matching the HLO) then widened to f64 at the edge.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{DenoiseModel, VariantInfo};
+use crate::schedule::DdpmSchedule;
+
+pub const TEMB_DIM: usize = 32;
+
+#[derive(Debug)]
+pub struct NativeMlp {
+    pub d: usize,
+    pub cond_dim: usize,
+    pub k_steps: usize,
+    layers: Vec<Layer>,
+    schedule: DdpmSchedule,
+    /// precomputed sinusoidal frequencies
+    freqs: Vec<f32>,
+}
+
+#[derive(Debug)]
+struct Layer {
+    n_in: usize,
+    n_out: usize,
+    w: Vec<f32>, // row-major (n_in, n_out)
+    b: Vec<f32>,
+}
+
+impl NativeMlp {
+    pub fn load(info: &VariantInfo, artifacts_dir: &Path) -> Result<Arc<NativeMlp>> {
+        let path = artifacts_dir.join(&info.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights file not a multiple of 4 bytes");
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::from_flat(info, &flat)
+    }
+
+    pub fn from_flat(info: &VariantInfo, flat: &[f32]) -> Result<Arc<NativeMlp>> {
+        let mut layers = Vec::new();
+        let mut off = 0usize;
+        for &(n_in, n_out) in &info.weights_layout {
+            let w_end = off + n_in * n_out;
+            let b_end = w_end + n_out;
+            if b_end > flat.len() {
+                bail!("weights file too short: need {b_end}, have {}", flat.len());
+            }
+            layers.push(Layer {
+                n_in,
+                n_out,
+                w: flat[off..w_end].to_vec(),
+                b: flat[w_end..b_end].to_vec(),
+            });
+            off = b_end;
+        }
+        if off != flat.len() {
+            bail!("weights file has {} trailing floats", flat.len() - off);
+        }
+        let half = TEMB_DIM / 2;
+        let freqs = (0..half)
+            .map(|j| (-(10000f32.ln()) * j as f32 / (half - 1) as f32).exp())
+            .collect();
+        Ok(Arc::new(NativeMlp {
+            d: info.d,
+            cond_dim: info.cond_dim,
+            k_steps: info.k_steps,
+            layers,
+            schedule: info.schedule(),
+            freqs,
+        }))
+    }
+
+    /// Input layer width: d + TEMB_DIM + cond_dim.
+    pub fn in_dim(&self) -> usize {
+        self.d + TEMB_DIM + self.cond_dim
+    }
+
+    fn embed_time(&self, t: f32, out: &mut [f32]) {
+        let half = TEMB_DIM / 2;
+        let scaled = t / self.k_steps as f32 * 1000.0;
+        for j in 0..half {
+            let ang = scaled * self.freqs[j];
+            out[j] = ang.sin();
+            out[half + j] = ang.cos();
+        }
+    }
+
+    /// Single forward in f32: input (in_dim), returns x0hat (d).
+    fn forward_one(&self, input: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(input.len(), self.in_dim());
+        // first layer + silu
+        let l0 = &self.layers[0];
+        let mut h = vec![0f32; l0.n_out];
+        linear_silu(input, l0, &mut h);
+        // residual hidden blocks
+        let mut tmp = vec![0f32; l0.n_out];
+        for layer in &self.layers[1..self.layers.len() - 1] {
+            linear_silu(&h, layer, &mut tmp);
+            for i in 0..h.len() {
+                h[i] += tmp[i];
+            }
+        }
+        // output layer, no activation
+        let lo = self.layers.last().unwrap();
+        debug_assert_eq!(out.len(), lo.n_out);
+        linear(&h, lo, out);
+    }
+}
+
+#[inline]
+fn linear(x: &[f32], l: &Layer, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), l.n_in);
+    out.copy_from_slice(&l.b);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &l.w[i * l.n_out..(i + 1) * l.n_out];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+}
+
+#[inline]
+fn linear_silu(x: &[f32], l: &Layer, out: &mut [f32]) {
+    linear(x, l, out);
+    for o in out.iter_mut() {
+        *o = *o / (1.0 + (-*o).exp());
+    }
+}
+
+impl DenoiseModel for NativeMlp {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn cond_dim(&self) -> usize {
+        self.cond_dim
+    }
+
+    fn k_steps(&self) -> usize {
+        self.k_steps
+    }
+
+    fn schedule(&self) -> &DdpmSchedule {
+        &self.schedule
+    }
+
+    fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                     out: &mut [f64]) -> Result<()> {
+        let (d, c) = (self.d, self.cond_dim);
+        debug_assert_eq!(ys.len(), n * d);
+        debug_assert_eq!(cond.len(), n * c);
+        let mut input = vec![0f32; self.in_dim()];
+        let mut x0 = vec![0f32; d];
+        for r in 0..n {
+            for i in 0..d {
+                input[i] = ys[r * d + i] as f32;
+            }
+            let (temb, rest) = input[d..].split_at_mut(TEMB_DIM);
+            self.embed_time(ts[r] as f32, temb);
+            for i in 0..c {
+                rest[i] = cond[r * c + i] as f32;
+            }
+            self.forward_one(&input, &mut x0);
+            for i in 0..d {
+                out[r * d + i] = x0[i] as f64;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::TargetSpec;
+
+    fn toy_info(d: usize, cond: usize, hidden: usize, layers: usize) -> VariantInfo {
+        let mut dims = vec![(d + TEMB_DIM + cond, hidden)];
+        for _ in 1..layers {
+            dims.push((hidden, hidden));
+        }
+        dims.push((hidden, d));
+        VariantInfo {
+            name: "toy".into(),
+            d,
+            cond_dim: cond,
+            hidden,
+            layers,
+            temb_dim: TEMB_DIM,
+            k_steps: 10,
+            train_loss: 0.0,
+            artifacts: Default::default(),
+            weights_file: String::new(),
+            weights_layout: dims,
+            abar: (1..=10).map(|i| 0.95f64.powi(i)).collect(),
+            target: TargetSpec::Env { task: "x".into() },
+            env: None,
+        }
+    }
+
+    fn flat_len(info: &VariantInfo) -> usize {
+        info.weights_layout.iter().map(|(a, b)| a * b + b).sum()
+    }
+
+    #[test]
+    fn zero_weights_zero_output() {
+        let info = toy_info(2, 0, 4, 2);
+        let flat = vec![0f32; flat_len(&info)];
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        let mut out = vec![9.0; 2];
+        mlp.denoise_one(&[1.0, 2.0], 5, &[], &mut out).unwrap();
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn batch_equals_loop() {
+        let info = toy_info(3, 2, 8, 2);
+        let n_w = flat_len(&info);
+        let flat: Vec<f32> = (0..n_w).map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5).collect();
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        let ys = [0.1, -0.2, 0.3, 0.5, 0.6, -0.7];
+        let ts = [3.0, 7.0];
+        let cond = [1.0, 0.0, 0.0, 1.0];
+        let mut batch = vec![0.0; 6];
+        mlp.denoise_batch(&ys, &ts, &cond, 2, &mut batch).unwrap();
+        for r in 0..2 {
+            let mut one = vec![0.0; 3];
+            mlp.denoise_batch(&ys[r * 3..(r + 1) * 3], &ts[r..r + 1],
+                              &cond[r * 2..(r + 1) * 2], 1, &mut one)
+                .unwrap();
+            assert_eq!(&batch[r * 3..(r + 1) * 3], &one[..]);
+        }
+    }
+
+    #[test]
+    fn wrong_length_weights_rejected() {
+        let info = toy_info(2, 0, 4, 1);
+        assert!(NativeMlp::from_flat(&info, &vec![0f32; 3]).is_err());
+        let too_many = vec![0f32; flat_len(&info) + 1];
+        assert!(NativeMlp::from_flat(&info, &too_many).is_err());
+    }
+
+    #[test]
+    fn time_embedding_range_and_distinct() {
+        let info = toy_info(2, 0, 4, 1);
+        let flat = vec![0f32; flat_len(&info)];
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        let mut e1 = vec![0f32; TEMB_DIM];
+        let mut e2 = vec![0f32; TEMB_DIM];
+        mlp.embed_time(1.0, &mut e1);
+        mlp.embed_time(9.0, &mut e2);
+        assert!(e1.iter().all(|v| v.abs() <= 1.0));
+        let diff: f32 = e1.iter().zip(&e2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.1);
+    }
+}

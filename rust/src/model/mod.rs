@@ -1,0 +1,51 @@
+//! Models: the `DenoiseModel` abstraction plus its implementations.
+//!
+//! * [`manifest`] — typed loader for artifacts/manifest.json.
+//! * [`mlp`] — rust-native MLP forward over `weights_*.bin` (parity
+//!   oracle for the HLO path + a fast fallback backend).
+//! * [`gmm`] — analytic posterior-mean oracles for GMM targets (exact
+//!   `E[x0 | y_i]` / SL `m(t, y)`; drives the theory benches with zero
+//!   network error).
+//! * [`targets`] — ground-truth target distributions mirrored from
+//!   python/compile/targets.py (samplers + Bayes class posteriors for
+//!   the quality metrics).
+
+pub mod gmm;
+pub mod manifest;
+pub mod mlp;
+pub mod targets;
+
+use anyhow::Result;
+
+pub use gmm::{Gmm, GmmDdpmOracle, GmmSlOracle};
+pub use manifest::{Manifest, TargetSpec, VariantInfo};
+pub use mlp::NativeMlp;
+
+use crate::schedule::DdpmSchedule;
+
+/// An x0-predicting denoiser with its schedule: the only interface the
+/// samplers (sequential / Picard / ASD) touch. `denoise_batch` is "one
+/// parallel round" of model calls — the unit Theorem 4 counts.
+pub trait DenoiseModel: Send + Sync {
+    /// Data dimension d.
+    fn dim(&self) -> usize;
+    /// Conditioning dimension (0 = unconditional).
+    fn cond_dim(&self) -> usize;
+    /// Number of DDPM steps K.
+    fn k_steps(&self) -> usize;
+    /// The DDPM schedule this model was trained under.
+    fn schedule(&self) -> &DdpmSchedule;
+
+    /// Batched x0hat prediction.
+    ///
+    /// `ys`: n*d row-major iterates; `ts`: n step indices (1..=K);
+    /// `cond`: n*cond_dim conditioning rows; `out`: n*d output buffer.
+    fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                     out: &mut [f64]) -> Result<()>;
+
+    /// Convenience single-call wrapper.
+    fn denoise_one(&self, y: &[f64], t: usize, cond: &[f64],
+                   out: &mut [f64]) -> Result<()> {
+        self.denoise_batch(y, &[t as f64], cond, 1, out)
+    }
+}

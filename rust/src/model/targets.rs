@@ -1,0 +1,92 @@
+//! Ground-truth target samplers mirrored from python/compile/targets.py
+//! (distribution-identical, not sample-identical: rust draws from Philox,
+//! python from numpy — the laws match, which is what the quality metrics
+//! need).
+
+use crate::model::{Gmm, TargetSpec};
+use crate::rng::Philox;
+
+/// Sample `n` ground-truth points from a target spec. For GMM targets
+/// also returns the component labels (for conditional evaluation).
+pub fn sample_target(spec: &TargetSpec, n: usize, rng: &mut Philox)
+                     -> (Vec<Vec<f64>>, Vec<usize>) {
+    match spec {
+        TargetSpec::Gmm { means, sigmas, weights } => {
+            let gmm = Gmm::new(means.clone(), sigmas.clone(), weights.clone());
+            let mut xs = Vec::with_capacity(n);
+            let mut cs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (x, c) = gmm.sample(rng);
+                xs.push(x);
+                cs.push(c);
+            }
+            (xs, cs)
+        }
+        TargetSpec::Pixel64 { side, freq, amp, noise } => {
+            let xs = (0..n).map(|_| pixel_texture(*side, *freq, *amp, *noise, rng))
+                .collect();
+            (xs, vec![0; n])
+        }
+        TargetSpec::Env { .. } => {
+            panic!("env targets are evaluated by rollout, not sampling")
+        }
+    }
+}
+
+/// One procedural texture (oriented sinusoidal grating + pixel noise),
+/// mirroring targets.pixel64_sample.
+pub fn pixel_texture(side: usize, freq: (f64, f64), amp: (f64, f64),
+                     noise: f64, rng: &mut Philox) -> Vec<f64> {
+    let f = freq.0 + rng.uniform() * (freq.1 - freq.0);
+    let psi = rng.uniform() * std::f64::consts::PI;
+    let phase = rng.uniform() * 2.0 * std::f64::consts::PI;
+    let a = amp.0 + rng.uniform() * (amp.1 - amp.0);
+    let (spsi, cpsi) = psi.sin_cos();
+    let mut img = Vec::with_capacity(side * side);
+    for i in 0..side {
+        for j in 0..side {
+            let grid = (cpsi * i as f64 + spsi * j as f64) / side as f64;
+            let v = a * (2.0 * std::f64::consts::PI * f * grid + phase).sin()
+                + noise * rng.normal();
+            img.push(v);
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_texture_stats() {
+        let mut rng = Philox::new(3, 0);
+        let mut all = Vec::new();
+        for _ in 0..200 {
+            let img = pixel_texture(8, (1.0, 3.0), (0.5, 1.0), 0.05, &mut rng);
+            assert_eq!(img.len(), 64);
+            all.extend(img);
+        }
+        // sinusoid with amplitude in [0.5, 1]: mean ~0, |v| <= ~1.2
+        let mean = all.iter().sum::<f64>() / all.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!(all.iter().all(|v| v.abs() < 1.0 + 6.0 * 0.05));
+    }
+
+    #[test]
+    fn gmm_target_sampling() {
+        let spec = TargetSpec::Gmm {
+            means: vec![vec![0.0, 0.0], vec![10.0, 10.0]],
+            sigmas: vec![0.1, 0.1],
+            weights: vec![0.9, 0.1],
+        };
+        let mut rng = Philox::new(4, 0);
+        let (xs, cs) = sample_target(&spec, 2000, &mut rng);
+        let n1 = cs.iter().filter(|&&c| c == 1).count();
+        assert!((n1 as f64 / 2000.0 - 0.1).abs() < 0.03);
+        for (x, &c) in xs.iter().zip(&cs) {
+            let expect = if c == 0 { 0.0 } else { 10.0 };
+            assert!((x[0] - expect).abs() < 1.0);
+        }
+    }
+}

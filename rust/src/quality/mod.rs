@@ -1,0 +1,136 @@
+//! Sample-quality metrics (the paper's CLIP / FID, substituted per
+//! DESIGN.md §4 for the known synthetic targets).
+
+use crate::math::stats::{mmd_sq_rbf, sliced_wasserstein};
+use crate::model::Gmm;
+
+/// CLIP-proxy: mean Bayes-posterior probability of the conditioning
+/// class under the known GMM target (higher = better conditioning
+/// fidelity; the target's own samples score ~1 when modes are separated).
+pub fn alignment_score(gmm: &Gmm, samples: &[Vec<f64>], classes: &[usize]) -> f64 {
+    assert_eq!(samples.len(), classes.len());
+    let mut total = 0.0;
+    for (x, &c) in samples.iter().zip(classes) {
+        total += gmm.class_posterior(x)[c];
+    }
+    total / samples.len() as f64
+}
+
+/// FID-proxy: Frechet distance between Gaussian moment fits of two point
+/// clouds, with diagonal covariances (the full-covariance matrix sqrt is
+/// overkill at d <= 224 sample sizes and the diagonal version preserves
+/// the ranking FID is used for):
+///   d^2 = ||mu1 - mu2||^2 + sum_i (s1_i + s2_i - 2 sqrt(s1_i s2_i))
+pub fn frechet_diag(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let d = a[0].len();
+    let (mu_a, var_a) = moments(a, d);
+    let (mu_b, var_b) = moments(b, d);
+    let mut acc = 0.0;
+    for i in 0..d {
+        let dm = mu_a[i] - mu_b[i];
+        acc += dm * dm;
+        acc += var_a[i] + var_b[i] - 2.0 * (var_a[i] * var_b[i]).sqrt();
+    }
+    acc
+}
+
+fn moments(rows: &[Vec<f64>], d: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = rows.len() as f64;
+    let mut mu = vec![0.0; d];
+    for r in rows {
+        for i in 0..d {
+            mu[i] += r[i];
+        }
+    }
+    mu.iter_mut().for_each(|m| *m /= n);
+    let mut var = vec![0.0; d];
+    for r in rows {
+        for i in 0..d {
+            let x = r[i] - mu[i];
+            var[i] += x * x;
+        }
+    }
+    var.iter_mut().for_each(|v| *v /= (n - 1.0).max(1.0));
+    (mu, var)
+}
+
+/// Sliced Wasserstein-1 (distribution-level check used in Table 1/2
+/// alongside the primary metric).
+pub fn sliced_w(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    sliced_wasserstein(a, b, 32, 7)
+}
+
+/// RBF MMD^2 with the median heuristic bandwidth.
+pub fn mmd(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let bw = median_pairwise(a).max(1e-6);
+    mmd_sq_rbf(a, b, bw)
+}
+
+fn median_pairwise(a: &[Vec<f64>]) -> f64 {
+    let n = a.len().min(100);
+    let mut d = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            d.push(crate::math::vec_ops::dist(&a[i], &a[j]));
+        }
+    }
+    d.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    if d.is_empty() { 1.0 } else { d[d.len() / 2] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    fn cloud(seed: u64, n: usize, d: usize, shift: f64) -> Vec<Vec<f64>> {
+        let mut rng = Philox::new(seed, 0);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() + shift).collect())
+            .collect()
+    }
+
+    #[test]
+    fn frechet_zero_for_same_law() {
+        let a = cloud(1, 800, 4, 0.0);
+        let b = cloud(2, 800, 4, 0.0);
+        assert!(frechet_diag(&a, &b) < 0.05);
+    }
+
+    #[test]
+    fn frechet_detects_shift_and_scale() {
+        let a = cloud(1, 500, 4, 0.0);
+        let shifted = cloud(2, 500, 4, 1.0);
+        assert!(frechet_diag(&a, &shifted) > 2.0);
+        let mut scaled = cloud(3, 500, 4, 0.0);
+        for r in scaled.iter_mut() {
+            r.iter_mut().for_each(|x| *x *= 3.0);
+        }
+        assert!(frechet_diag(&a, &scaled) > 2.0);
+    }
+
+    #[test]
+    fn alignment_score_on_target_samples() {
+        let gmm = Gmm::circle_2d();
+        let mut rng = Philox::new(5, 0);
+        let mut xs = Vec::new();
+        let mut cs = Vec::new();
+        for _ in 0..300 {
+            let (x, c) = gmm.sample(&mut rng);
+            xs.push(x);
+            cs.push(c);
+        }
+        let s = alignment_score(&gmm, &xs, &cs);
+        assert!(s > 0.9, "alignment {s}"); // well-separated modes
+        // wrong labels score badly
+        let wrong: Vec<usize> = cs.iter().map(|c| (c + 4) % 8).collect();
+        assert!(alignment_score(&gmm, &xs, &wrong) < 0.05);
+    }
+
+    #[test]
+    fn mmd_wraps_stats() {
+        let a = cloud(7, 150, 3, 0.0);
+        let b = cloud(8, 150, 3, 2.0);
+        assert!(mmd(&a, &b) > 0.1);
+    }
+}

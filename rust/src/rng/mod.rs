@@ -1,0 +1,52 @@
+//! Counter-based RNG substrate.
+//!
+//! All randomness on the request path — the per-step `(u_i, xi_i)` streams
+//! that drive sequential DDPM, Picard and ASD (DESIGN.md "randomness
+//! contract") — comes from Philox4x32-10, a counter-based generator:
+//! streams are addressable by `(seed, stream, counter)`, so experiments
+//! are exactly reproducible and independent across requests without
+//! shared mutable state.
+
+mod philox;
+
+pub use philox::Philox;
+
+/// Draw a whole standard-normal vector.
+pub fn normal_vec(rng: &mut Philox, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Draw a whole uniform [0,1) vector.
+pub fn uniform_vec(rng: &mut Philox, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Philox::new(7, 0);
+        let n = 200_000;
+        let v = normal_vec(&mut rng, n);
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n - 1) as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        // kurtosis of a standard normal is 3
+        let kurt = v.iter().map(|x| x.powi(4)).sum::<f64>() / n as f64;
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Philox::new(8, 0);
+        let n = 100_000;
+        let v = uniform_vec(&mut rng, n);
+        let mean = v.iter().sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01);
+        assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+}

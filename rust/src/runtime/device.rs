@@ -1,0 +1,284 @@
+//! The device thread: owns all PJRT state, serves execution jobs.
+//!
+//! API: [`DeviceHandle::spawn`] starts the thread; `compile`,
+//! `upload_weights` and `execute` are synchronous RPCs over mpsc
+//! channels. Per-executable wall-clock stats are recorded on the device
+//! side and feed the modeled multi-worker latency (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::host::HostArray;
+
+/// Opaque id of a compiled executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExeId(pub usize);
+
+/// Opaque id of a device-resident buffer set (model weights).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightsId(pub usize);
+
+/// Timing record per executable.
+#[derive(Debug, Clone, Default)]
+pub struct ExeStats {
+    pub calls: u64,
+    pub total_s: f64,
+    pub label: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    pub per_exe: Vec<ExeStats>,
+    pub total_calls: u64,
+}
+
+impl DeviceStats {
+    /// Mean seconds per call for one executable (None if never called).
+    pub fn mean_call_s(&self, exe: ExeId) -> Option<f64> {
+        let s = self.per_exe.get(exe.0)?;
+        if s.calls == 0 {
+            None
+        } else {
+            Some(s.total_s / s.calls as f64)
+        }
+    }
+}
+
+enum Job {
+    Compile {
+        path: PathBuf,
+        label: String,
+        reply: Sender<Result<ExeId>>,
+    },
+    UploadWeights {
+        arrays: Vec<HostArray>,
+        reply: Sender<Result<WeightsId>>,
+    },
+    Execute {
+        exe: ExeId,
+        inputs: Vec<HostArray>,
+        weights: Option<WeightsId>,
+        reply: Sender<Result<Vec<HostArray>>>,
+    },
+}
+
+/// Cloneable handle to the device thread. The sender is wrapped in a
+/// mutex so the handle is `Sync` (mpsc senders are Send but not Sync)
+/// and can live inside `Arc<HloModel>` shared across worker threads.
+pub struct DeviceHandle {
+    tx: Mutex<Sender<Job>>,
+    stats: Arc<Mutex<DeviceStats>>,
+}
+
+impl Clone for DeviceHandle {
+    fn clone(&self) -> DeviceHandle {
+        DeviceHandle {
+            tx: Mutex::new(self.tx.lock().unwrap().clone()),
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+impl DeviceHandle {
+    fn send(&self, job: Job) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow!("device thread gone"))
+    }
+
+    pub fn spawn() -> Result<DeviceHandle> {
+        let (tx, rx) = channel::<Job>();
+        let stats = Arc::new(Mutex::new(DeviceStats::default()));
+        let stats_thread = stats.clone();
+        let (ready_tx, ready_rx) = channel();
+        std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("PJRT init: {e}")));
+                        return;
+                    }
+                };
+                let mut state = DeviceState {
+                    client,
+                    exes: Vec::new(),
+                    weight_sets: Vec::new(),
+                    compiled_paths: HashMap::new(),
+                };
+                while let Ok(job) = rx.recv() {
+                    state.handle(job, &stats_thread);
+                }
+            })?;
+        ready_rx.recv().context("device thread died during init")??;
+        Ok(DeviceHandle { tx: Mutex::new(tx), stats })
+    }
+
+    pub fn compile(&self, path: PathBuf, label: &str) -> Result<ExeId> {
+        let (reply, rx) = channel();
+        self.send(Job::Compile { path, label: label.to_string(), reply })?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    pub fn upload_weights(&self, arrays: Vec<HostArray>) -> Result<WeightsId> {
+        let (reply, rx) = channel();
+        self.send(Job::UploadWeights { arrays, reply })?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    /// Execute: inputs are uploaded, weights (if any) are the persistent
+    /// device buffers appended after the inputs. Returns the flattened
+    /// output tuple as host arrays.
+    pub fn execute(&self, exe: ExeId, inputs: Vec<HostArray>,
+                   weights: Option<WeightsId>) -> Result<Vec<HostArray>> {
+        let (reply, rx) = channel();
+        self.send(Job::Execute { exe, inputs, weights, reply })?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+struct DeviceState {
+    client: xla::PjRtClient,
+    exes: Vec<xla::PjRtLoadedExecutable>,
+    weight_sets: Vec<Vec<xla::PjRtBuffer>>,
+    /// path -> already compiled id (dedup)
+    compiled_paths: HashMap<PathBuf, ExeId>,
+}
+
+impl DeviceState {
+    fn handle(&mut self, job: Job, stats: &Arc<Mutex<DeviceStats>>) {
+        match job {
+            Job::Compile { path, label, reply } => {
+                let _ = reply.send(self.compile(path, label, stats));
+            }
+            Job::UploadWeights { arrays, reply } => {
+                let _ = reply.send(self.upload(arrays));
+            }
+            Job::Execute { exe, inputs, weights, reply } => {
+                let t0 = Instant::now();
+                let result = self.execute(exe, inputs, weights);
+                let dt = t0.elapsed().as_secs_f64();
+                {
+                    let mut s = stats.lock().unwrap();
+                    if let Some(e) = s.per_exe.get_mut(exe.0) {
+                        e.calls += 1;
+                        e.total_s += dt;
+                    }
+                    s.total_calls += 1;
+                }
+                let _ = reply.send(result);
+            }
+        }
+    }
+
+    fn compile(&mut self, path: PathBuf, label: String,
+               stats: &Arc<Mutex<DeviceStats>>) -> Result<ExeId> {
+        if let Some(&id) = self.compiled_paths.get(&path) {
+            return Ok(id);
+        }
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let id = ExeId(self.exes.len());
+        self.exes.push(exe);
+        self.compiled_paths.insert(path, id);
+        stats.lock().unwrap().per_exe.push(ExeStats {
+            calls: 0,
+            total_s: 0.0,
+            label,
+        });
+        Ok(id)
+    }
+
+    fn upload(&mut self, arrays: Vec<HostArray>) -> Result<WeightsId> {
+        let mut bufs = Vec::with_capacity(arrays.len());
+        for a in arrays {
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&a.data, &a.dims, None)
+                    .map_err(|e| anyhow!("uploading weights: {e}"))?,
+            );
+        }
+        let id = WeightsId(self.weight_sets.len());
+        self.weight_sets.push(bufs);
+        Ok(id)
+    }
+
+    fn execute(&mut self, exe: ExeId, inputs: Vec<HostArray>,
+               weights: Option<WeightsId>) -> Result<Vec<HostArray>> {
+        let exe_obj = self
+            .exes
+            .get(exe.0)
+            .ok_or_else(|| anyhow!("bad exe id {exe:?}"))?;
+        let mut arg_bufs = Vec::with_capacity(inputs.len() + 8);
+        for a in &inputs {
+            arg_bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&a.data, &a.dims, None)
+                    .map_err(|e| anyhow!("uploading input: {e}"))?,
+            );
+        }
+        let weight_slice: &[xla::PjRtBuffer] = match weights {
+            Some(id) => self
+                .weight_sets
+                .get(id.0)
+                .ok_or_else(|| anyhow!("bad weights id {id:?}"))?,
+            None => &[],
+        };
+        let arg_refs: Vec<&xla::PjRtBuffer> =
+            arg_bufs.iter().chain(weight_slice.iter()).collect();
+        let results = exe_obj
+            .execute_b(&arg_refs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let first = results
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let mut literal = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e}"))?;
+        // artifacts are lowered with return_tuple=True
+        let parts = literal
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose: {e}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p
+                .array_shape()
+                .map_err(|e| anyhow!("shape: {e}"))?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec: {e}"))?;
+            out.push(HostArray::new(dims, data)?);
+        }
+        if out.is_empty() {
+            bail!("empty output tuple");
+        }
+        Ok(out)
+    }
+}

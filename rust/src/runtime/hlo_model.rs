@@ -1,0 +1,180 @@
+//! HLO-backed denoiser: the production `DenoiseModel` implementation.
+//!
+//! One compiled executable per (variant, batch-size); weights uploaded
+//! once as device-resident buffers. Batches are padded up to the nearest
+//! compiled size and chunked above the maximum (a chunked verify round
+//! still counts as ONE parallel round — the chunks model the paper's
+//! per-GPU shards; see DESIGN.md §3).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{DenoiseModel, VariantInfo};
+use crate::runtime::device::{DeviceHandle, ExeId, WeightsId};
+use crate::runtime::host::HostArray;
+use crate::schedule::DdpmSchedule;
+
+pub struct HloModel {
+    pub info: VariantInfo,
+    device: DeviceHandle,
+    weights: WeightsId,
+    /// compiled executables per batch size (lazy)
+    exes: Mutex<BTreeMap<usize, ExeId>>,
+    artifacts_dir: std::path::PathBuf,
+    schedule: DdpmSchedule,
+}
+
+impl HloModel {
+    pub fn load(device: &DeviceHandle, info: VariantInfo, dir: &Path)
+                -> Result<Arc<HloModel>> {
+        // read + upload weights once
+        let path = dir.join(&info.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expected: usize = info.weights_layout.iter()
+            .map(|&(a, b)| a * b + b).sum();
+        if flat.len() != expected {
+            bail!("weights file for {} has {} floats, expected {expected}",
+                  info.name, flat.len());
+        }
+        let mut arrays = Vec::new();
+        let mut off = 0usize;
+        for &(n_in, n_out) in &info.weights_layout {
+            arrays.push(HostArray::new(vec![n_in, n_out],
+                                       flat[off..off + n_in * n_out].to_vec())?);
+            off += n_in * n_out;
+            arrays.push(HostArray::new(vec![n_out],
+                                       flat[off..off + n_out].to_vec())?);
+            off += n_out;
+        }
+        if off != flat.len() {
+            bail!("weights length mismatch for {}", info.name);
+        }
+        let weights = device.upload_weights(arrays)?;
+        let schedule = info.schedule();
+        Ok(Arc::new(HloModel {
+            info,
+            device: device.clone(),
+            weights,
+            exes: Mutex::new(BTreeMap::new()),
+            artifacts_dir: dir.to_path_buf(),
+            schedule,
+        }))
+    }
+
+    fn exe_for_batch(&self, b: usize) -> Result<ExeId> {
+        if let Some(&id) = self.exes.lock().unwrap().get(&b) {
+            return Ok(id);
+        }
+        let fname = self.info.artifacts.get(&b).with_context(|| {
+            format!("variant {} has no batch-{b} artifact", self.info.name)
+        })?;
+        let label = format!("denoise_{}_b{b}", self.info.name);
+        let id = self
+            .device
+            .compile(self.artifacts_dir.join(fname), &label)?;
+        self.exes.lock().unwrap().insert(b, id);
+        Ok(id)
+    }
+
+    /// Pre-compile all batch sizes (avoids first-call latency spikes).
+    pub fn warmup(&self) -> Result<()> {
+        let sizes: Vec<usize> = self.info.artifacts.keys().copied().collect();
+        for b in sizes {
+            self.exe_for_batch(b)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one padded chunk of at most max_batch rows.
+    fn run_chunk(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                 out: &mut [f64]) -> Result<()> {
+        let d = self.info.d;
+        let c = self.info.cond_dim;
+        let b = self
+            .info
+            .batch_for(n)
+            .with_context(|| format!("no artifact for batch {n}"))?;
+        let exe = self.exe_for_batch(b)?;
+
+        // pad by repeating row 0
+        let mut y32 = Vec::with_capacity(b * d);
+        let mut t32 = Vec::with_capacity(b);
+        let mut c32 = Vec::with_capacity(b * c);
+        for r in 0..b {
+            let src = if r < n { r } else { 0 };
+            y32.extend(ys[src * d..(src + 1) * d].iter().map(|&v| v as f32));
+            t32.push(ts[src] as f32);
+            c32.extend(cond[src * c..(src + 1) * c].iter().map(|&v| v as f32));
+        }
+        let mut inputs = vec![
+            HostArray::new(vec![b, d], y32)?,
+            HostArray::new(vec![b], t32)?,
+        ];
+        if c > 0 {
+            // zero-width cond params are dropped by jax at lowering time
+            inputs.push(HostArray::new(vec![b, c], c32)?);
+        }
+        let outs = self.device.execute(exe, inputs, Some(self.weights))?;
+        let x0 = &outs[0];
+        if x0.dims != [b, d] {
+            bail!("unexpected output dims {:?}", x0.dims);
+        }
+        for r in 0..n {
+            for i in 0..d {
+                out[r * d + i] = x0.data[r * d + i] as f64;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl DenoiseModel for HloModel {
+    fn dim(&self) -> usize {
+        self.info.d
+    }
+
+    fn cond_dim(&self) -> usize {
+        self.info.cond_dim
+    }
+
+    fn k_steps(&self) -> usize {
+        self.info.k_steps
+    }
+
+    fn schedule(&self) -> &DdpmSchedule {
+        &self.schedule
+    }
+
+    fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                     out: &mut [f64]) -> Result<()> {
+        let d = self.info.d;
+        let c = self.info.cond_dim;
+        anyhow::ensure!(ys.len() == n * d, "ys length {} != n*d {}",
+                        ys.len(), n * d);
+        anyhow::ensure!(cond.len() == n * c,
+                        "cond length {} != n*cond_dim {} (model '{}')",
+                        cond.len(), n * c, self.info.name);
+        let max_b = self.info.max_batch();
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(max_b);
+            self.run_chunk(
+                &ys[done * d..(done + take) * d],
+                &ts[done..done + take],
+                &cond[done * c..(done + take) * c],
+                take,
+                &mut out[done * d..(done + take) * d],
+            )?;
+            done += take;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,75 @@
+//! Host-side tensor: the currency between the coordinator and the
+//! device thread (f32, matching the HLO artifacts; f64 engine state is
+//! narrowed at this boundary).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostArray {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostArray {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<HostArray> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("dims {:?} imply {} elements, got {}", dims, n, data.len());
+        }
+        Ok(HostArray { dims, data })
+    }
+
+    pub fn scalar_vec(data: Vec<f32>) -> HostArray {
+        HostArray { dims: vec![data.len()], data }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Result<HostArray> {
+        HostArray::new(vec![rows, cols], data)
+    }
+
+    pub fn from_f64(dims: Vec<usize>, data: &[f64]) -> Result<HostArray> {
+        HostArray::new(dims, data.iter().map(|&x| x as f32).collect())
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> HostArray {
+        let n = dims.iter().product();
+        HostArray { dims, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Copy into an f64 slice.
+    pub fn widen_into(&self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.data.len());
+        for (o, &v) in out.iter_mut().zip(&self.data) {
+            *o = v as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostArray::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostArray::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostArray::new(vec![0], vec![]).is_ok());
+    }
+
+    #[test]
+    fn conversions() {
+        let a = HostArray::from_f64(vec![2], &[1.5, -2.5]).unwrap();
+        assert_eq!(a.data, vec![1.5f32, -2.5f32]);
+        let mut out = [0.0f64; 2];
+        a.widen_into(&mut out);
+        assert_eq!(out, [1.5, -2.5]);
+    }
+}

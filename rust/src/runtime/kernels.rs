@@ -1,0 +1,113 @@
+//! HLO-backed L1 kernels (speculate / GRS verify).
+//!
+//! The default hot path computes these O(theta * d) ops natively in rust
+//! (PJRT dispatch overhead dominates them on this testbed); these
+//! wrappers exercise the full three-layer path (`--kernel-backend hlo`)
+//! and are parity-tested against the native implementations.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::Manifest;
+use crate::runtime::device::{DeviceHandle, ExeId};
+use crate::runtime::host::HostArray;
+
+pub struct HloKernels {
+    pub d: usize,
+    /// fixed speculation-chain length the artifacts were lowered with
+    pub t_steps: usize,
+    device: DeviceHandle,
+    speculate_exe: ExeId,
+    verify_exe: ExeId,
+}
+
+impl HloKernels {
+    pub fn load(device: &DeviceHandle, manifest: &Manifest, d: usize)
+                -> Result<HloKernels> {
+        let sp = manifest.speculate_kernels.get(&d)
+            .with_context(|| format!("no speculate kernel for d={d}"))?;
+        let vf = manifest.verify_kernels.get(&d)
+            .with_context(|| format!("no verify kernel for d={d}"))?;
+        let speculate_exe = device.compile(manifest.dir.join(sp),
+                                           &format!("speculate_d{d}"))?;
+        let verify_exe = device.compile(manifest.dir.join(vf),
+                                        &format!("verify_d{d}"))?;
+        Ok(HloKernels {
+            d,
+            t_steps: manifest.spec_t,
+            device: device.clone(),
+            speculate_exe,
+            verify_exe,
+        })
+    }
+
+    /// Proposal chain (kernel `speculate`): returns (m_hat, y_hat) each
+    /// t_steps*d row-major. Inputs shorter than t_steps are zero-padded
+    /// (padding rows are ignored by the caller).
+    pub fn speculate(&self, y_a: &[f64], x0a: &[f64], c1: &[f64], c2: &[f64],
+                     sigma: &[f64], xi: &[f64])
+                     -> Result<(Vec<f64>, Vec<f64>)> {
+        let t = self.t_steps;
+        let d = self.d;
+        if y_a.len() != d || x0a.len() != d {
+            bail!("bad y_a/x0a length");
+        }
+        let n = c1.len();
+        if n > t {
+            bail!("chain length {n} exceeds kernel T={t}");
+        }
+        let pad = |v: &[f64]| {
+            let mut out: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            out.resize(t, 0.0);
+            out
+        };
+        let mut xi32: Vec<f32> = xi.iter().map(|&x| x as f32).collect();
+        xi32.resize(t * d, 0.0);
+        let inputs = vec![
+            HostArray::from_f64(vec![d], y_a)?,
+            HostArray::from_f64(vec![d], x0a)?,
+            HostArray::scalar_vec(pad(c1)),
+            HostArray::scalar_vec(pad(c2)),
+            HostArray::scalar_vec(pad(sigma)),
+            HostArray::new(vec![t, d], xi32)?,
+        ];
+        let outs = self.device.execute(self.speculate_exe, inputs, None)?;
+        if outs.len() != 2 {
+            bail!("speculate returned {} outputs", outs.len());
+        }
+        let m_hat = outs[0].data[..n * d].iter().map(|&x| x as f64).collect();
+        let y_hat = outs[1].data[..n * d].iter().map(|&x| x as f64).collect();
+        Ok((m_hat, y_hat))
+    }
+
+    /// Batched GRS (kernel `grs_verify`): returns (z, accept) with z
+    /// n*d row-major, accept n flags. Padding rows use sigma=1,
+    /// m_hat=m=0 (always accepted, ignored by the caller).
+    pub fn verify(&self, u: &[f64], xi: &[f64], m_hat: &[f64], m: &[f64],
+                  sigma: &[f64]) -> Result<(Vec<f64>, Vec<bool>)> {
+        let t = self.t_steps;
+        let d = self.d;
+        let n = u.len();
+        if n > t {
+            bail!("batch {n} exceeds kernel T={t}");
+        }
+        let padf = |v: &[f64], fill: f32, len: usize| {
+            let mut out: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            out.resize(len, fill);
+            out
+        };
+        let inputs = vec![
+            HostArray::scalar_vec(padf(u, 0.5, t)),
+            HostArray::new(vec![t, d], padf(xi, 0.0, t * d))?,
+            HostArray::new(vec![t, d], padf(m_hat, 0.0, t * d))?,
+            HostArray::new(vec![t, d], padf(m, 0.0, t * d))?,
+            HostArray::scalar_vec(padf(sigma, 1.0, t)),
+        ];
+        let outs = self.device.execute(self.verify_exe, inputs, None)?;
+        if outs.len() != 2 {
+            bail!("verify returned {} outputs", outs.len());
+        }
+        let z = outs[0].data[..n * d].iter().map(|&x| x as f64).collect();
+        let accept = outs[1].data[..n].iter().map(|&x| x > 0.5).collect();
+        Ok((z, accept))
+    }
+}

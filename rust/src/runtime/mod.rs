@@ -1,0 +1,63 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the
+//! request path (python is never involved here).
+//!
+//! Threading model: one **device thread** owns the `PjRtClient`, every
+//! compiled executable and the device-resident weight buffers (PJRT
+//! handles are not `Send`); the rest of the system talks to it through a
+//! cloneable [`DeviceHandle`] (mpsc). This mirrors a GPU dispatch queue
+//! and centralizes the per-call latency measurements that feed the
+//! multi-worker wall-clock model (DESIGN.md §3).
+
+pub mod device;
+pub mod hlo_model;
+pub mod host;
+pub mod kernels;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use device::{DeviceHandle, DeviceStats, ExeId, WeightsId};
+pub use hlo_model::HloModel;
+pub use host::HostArray;
+pub use kernels::HloKernels;
+
+use crate::model::Manifest;
+
+/// Top-level runtime: manifest + device thread + model cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub device: DeviceHandle,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let dir = manifest.dir.clone();
+        let device = DeviceHandle::spawn()?;
+        Ok(Runtime { manifest, device, artifacts_dir: dir })
+    }
+
+    /// Load the manifest from the default artifacts directory.
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::new(Manifest::load_default()?)
+    }
+
+    /// Build the HLO-backed model for a variant (compiles its denoise
+    /// artifacts lazily; uploads weights once).
+    pub fn model(&self, variant: &str) -> Result<Arc<HloModel>> {
+        let info = self.manifest.variant(variant)?.clone();
+        HloModel::load(&self.device, info, &self.artifacts_dir)
+    }
+
+    /// Load the HLO speculate/verify kernels for dimension `d`.
+    pub fn kernels(&self, d: usize) -> Result<HloKernels> {
+        HloKernels::load(&self.device, &self.manifest, d)
+    }
+
+    /// Snapshot of per-executable timing stats.
+    pub fn device_stats(&self) -> DeviceStats {
+        self.device.stats()
+    }
+}

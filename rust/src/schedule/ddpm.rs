@@ -1,0 +1,146 @@
+//! DDPM linear-beta schedule in x0-prediction form (paper Remark 2).
+//!
+//! Mirrors python/compile/schedule.py exactly; integration tests
+//! cross-check against the abar table exported in manifest.json and the
+//! spot values in golden.json.
+//!
+//! Reverse step (descending index i = K..1; arrays are 0-based at i-1):
+//!   y_{i-1} = c1[i-1] * x0hat(y_i, i) + c2[i-1] * y_i + sigma[i-1] * xi
+
+pub const BETA_START: f64 = 1e-4;
+pub const BETA_END: f64 = 2e-2;
+pub const REF_STEPS: f64 = 1000.0;
+
+#[derive(Debug, Clone)]
+pub struct DdpmSchedule {
+    pub k_steps: usize,
+    pub betas: Vec<f64>,
+    pub alphas: Vec<f64>,
+    pub abar: Vec<f64>,
+    pub abar_prev: Vec<f64>,
+    /// coefficient on x0hat
+    pub c1: Vec<f64>,
+    /// coefficient on the current iterate
+    pub c2: Vec<f64>,
+    /// posterior stddev; sigma[0] == 0 (final step is a Dirac)
+    pub sigma: Vec<f64>,
+}
+
+impl DdpmSchedule {
+    pub fn new(k_steps: usize) -> DdpmSchedule {
+        assert!(k_steps >= 2, "need at least 2 steps");
+        let scale = REF_STEPS / k_steps as f64;
+        let lo = BETA_START * scale;
+        let hi = BETA_END * scale;
+        let mut betas = Vec::with_capacity(k_steps);
+        for i in 0..k_steps {
+            let t = i as f64 / (k_steps - 1) as f64;
+            betas.push((lo + t * (hi - lo)).min(0.999));
+        }
+        Self::from_betas(betas)
+    }
+
+    pub fn from_betas(betas: Vec<f64>) -> DdpmSchedule {
+        let k = betas.len();
+        let alphas: Vec<f64> = betas.iter().map(|b| 1.0 - b).collect();
+        let mut abar = Vec::with_capacity(k);
+        let mut acc = 1.0;
+        for &a in &alphas {
+            acc *= a;
+            abar.push(acc);
+        }
+        let mut abar_prev = Vec::with_capacity(k);
+        abar_prev.push(1.0);
+        abar_prev.extend_from_slice(&abar[..k - 1]);
+        let mut c1 = Vec::with_capacity(k);
+        let mut c2 = Vec::with_capacity(k);
+        let mut sigma = Vec::with_capacity(k);
+        for i in 0..k {
+            let denom = 1.0 - abar[i];
+            c1.push(abar_prev[i].sqrt() * betas[i] / denom);
+            c2.push(alphas[i].sqrt() * (1.0 - abar_prev[i]) / denom);
+            sigma.push(((1.0 - abar_prev[i]) * betas[i] / denom).sqrt());
+        }
+        DdpmSchedule { k_steps: k, betas, alphas, abar, abar_prev, c1, c2, sigma }
+    }
+
+    /// Build from an explicit abar table (e.g. the manifest's) — used to
+    /// guarantee bit-consistency with the python-side training schedule.
+    pub fn from_abar(abar: Vec<f64>) -> DdpmSchedule {
+        let k = abar.len();
+        let mut betas = Vec::with_capacity(k);
+        let mut prev = 1.0;
+        for &a in &abar {
+            betas.push(1.0 - a / prev);
+            prev = a;
+        }
+        Self::from_betas(betas)
+    }
+
+    /// Forward-noising coefficients: y_i = sa * x0 + s1m * eps.
+    pub fn forward_coefs(&self, i: usize) -> (f64, f64) {
+        let a = self.abar[i - 1];
+        (a.sqrt(), (1.0 - a).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posterior_mean_identity() {
+        // c1_i + c2_i sqrt(abar_i) == sqrt(abar_{i-1})
+        for k in [50, 100, 1000] {
+            let s = DdpmSchedule::new(k);
+            for i in 0..k {
+                let lhs = s.c1[i] + s.c2[i] * s.abar[i].sqrt();
+                let rhs = s.abar_prev[i].sqrt();
+                assert!((lhs - rhs).abs() < 1e-10, "k={k} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_variance_identity() {
+        // c2^2 (1-abar) + sigma^2 == 1 - abar_prev
+        for k in [100, 1000] {
+            let s = DdpmSchedule::new(k);
+            for i in 0..k {
+                let lhs = s.c2[i] * s.c2[i] * (1.0 - s.abar[i])
+                    + s.sigma[i] * s.sigma[i];
+                assert!((lhs - (1.0 - s.abar_prev[i])).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_and_bounds() {
+        let s = DdpmSchedule::new(100);
+        assert_eq!(s.sigma[0], 0.0);
+        assert!(s.sigma[1..].iter().all(|&x| x > 0.0));
+        assert!(s.abar.windows(2).all(|w| w[1] < w[0]));
+        assert!(s.abar[99] < 5e-5);
+    }
+
+    #[test]
+    fn from_abar_roundtrip() {
+        let s1 = DdpmSchedule::new(100);
+        let s2 = DdpmSchedule::from_abar(s1.abar.clone());
+        for i in 0..100 {
+            assert!((s1.c1[i] - s2.c1[i]).abs() < 1e-9);
+            assert!((s1.c2[i] - s2.c2[i]).abs() < 1e-9);
+            assert!((s1.sigma[i] - s2.sigma[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_python_linspace() {
+        // python: np.linspace(1e-4*10, 2e-2*10, 100) for K=100
+        let s = DdpmSchedule::new(100);
+        assert!((s.betas[0] - 1e-3).abs() < 1e-12);
+        assert!((s.betas[99] - 0.2).abs() < 1e-12);
+        let mid = 1e-3 + (0.2 - 1e-3) * (50.0 / 99.0);
+        assert!((s.betas[50] - mid).abs() < 1e-12);
+    }
+}

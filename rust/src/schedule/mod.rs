@@ -1,0 +1,8 @@
+//! Noise schedules: DDPM (linear-beta, x0-parametrization coefficients)
+//! and the Stochastic Localization reparametrization (Thm 9).
+
+pub mod ddpm;
+pub mod sl;
+
+pub use ddpm::DdpmSchedule;
+pub use sl::{ddpm_time_of_sl, sl_time_of_ddpm, SlGrid};

@@ -1,0 +1,99 @@
+//! Stochastic Localization time grids + the DDPM<->SL reparametrization
+//! (paper Thm 9): ybar_t = t e^{s(t)} xbar_{s(t)}, s(t) = ln(1 + 1/t)/2.
+//!
+//! The SL-native path drives the theory benches (Thm 4 scaling) with the
+//! analytic GMM posterior-mean oracle: Euler steps
+//!   y_{k+1} = y_k + eta_k m(t_k, y_k) + sqrt(eta_k) xi.
+
+/// s(t) = ln(1 + 1/t)/2: SL time -> OU (DDPM) time.
+pub fn ddpm_time_of_sl(t: f64) -> f64 {
+    0.5 * (1.0 + 1.0 / t).ln()
+}
+
+/// t(s) = 1/(e^{2s} - 1): OU time -> SL time.
+pub fn sl_time_of_ddpm(s: f64) -> f64 {
+    1.0 / (2.0 * s).exp_m1()
+}
+
+/// An SL Euler discretization grid on [t0, t_max].
+#[derive(Debug, Clone)]
+pub struct SlGrid {
+    /// grid points t_0 < t_1 < ... < t_K
+    pub times: Vec<f64>,
+    /// eta_k = t_{k+1} - t_k (len K)
+    pub etas: Vec<f64>,
+}
+
+impl SlGrid {
+    /// Uniform grid: eta = t_max / K starting at t = 0.
+    pub fn uniform(t_max: f64, k_steps: usize) -> SlGrid {
+        let eta = t_max / k_steps as f64;
+        let times: Vec<f64> = (0..=k_steps).map(|k| k as f64 * eta).collect();
+        let etas = vec![eta; k_steps];
+        SlGrid { times, etas }
+    }
+
+    /// Geometric grid from t0 > 0 to t_max (finer early, as DDPM
+    /// schedules effectively are after reparametrization).
+    pub fn geometric(t0: f64, t_max: f64, k_steps: usize) -> SlGrid {
+        assert!(t0 > 0.0 && t_max > t0);
+        let ratio = (t_max / t0).powf(1.0 / k_steps as f64);
+        let mut times = Vec::with_capacity(k_steps + 1);
+        let mut t = t0;
+        for _ in 0..=k_steps {
+            times.push(t);
+            t *= ratio;
+        }
+        let etas = times.windows(2).map(|w| w[1] - w[0]).collect();
+        SlGrid { times, etas }
+    }
+
+    pub fn k_steps(&self) -> usize {
+        self.etas.len()
+    }
+
+    pub fn max_eta(&self) -> f64 {
+        self.etas.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_maps_roundtrip() {
+        for i in 1..50 {
+            let s = i as f64 * 0.1;
+            let t = sl_time_of_ddpm(s);
+            assert!((ddpm_time_of_sl(t) - s).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn time_maps_monotone_inverse() {
+        // larger SL time (more localized) <-> smaller OU time (less noise)
+        assert!(ddpm_time_of_sl(10.0) < ddpm_time_of_sl(0.1));
+        assert!(sl_time_of_ddpm(3.0) < sl_time_of_ddpm(0.5));
+    }
+
+    #[test]
+    fn uniform_grid() {
+        let g = SlGrid::uniform(10.0, 40);
+        assert_eq!(g.k_steps(), 40);
+        assert!((g.times[0]).abs() < 1e-12);
+        assert!((g.times[40] - 10.0).abs() < 1e-9);
+        assert!(g.etas.iter().all(|&e| (e - 0.25).abs() < 1e-12));
+        assert!((g.max_eta() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geometric_grid() {
+        let g = SlGrid::geometric(0.01, 100.0, 64);
+        assert_eq!(g.k_steps(), 64);
+        assert!((g.times[0] - 0.01).abs() < 1e-12);
+        assert!((g.times[64] - 100.0).abs() < 1e-6);
+        // etas increase
+        assert!(g.etas.windows(2).all(|w| w[1] > w[0]));
+    }
+}

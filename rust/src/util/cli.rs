@@ -1,0 +1,155 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()[1..]`; `known_flags` lists options
+    /// that take no value.
+    pub fn parse(raw: impl Iterator<Item = String>, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("--{name} expects an integer, got '{s}'"),
+            },
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("--{name} expects a float, got '{s}'"),
+            },
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("--{name} expects an integer, got '{s}'"),
+            },
+        }
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--thetas 2,4,8`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad list item '{p}' in --{name}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["serve", "--port", "8080", "--verbose"], &["verbose"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--model=latent16", "--theta=8"], &[]);
+        assert_eq!(a.get("model"), Some("latent16"));
+        assert_eq!(a.get_usize("theta", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["--fast", "--k", "100"], &["fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn unknown_flag_at_end_is_flag() {
+        let a = parse(&["--dry-run"], &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--thetas", "2,4, 8"], &[]);
+        assert_eq!(a.get_usize_list("thetas", &[]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("missing", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["--k", "abc"], &[]);
+        assert!(a.get_usize("k", 0).is_err());
+        assert!(a.get_f64("k", 0.0).is_err());
+    }
+}

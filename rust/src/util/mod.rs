@@ -1,0 +1,11 @@
+//! Infrastructure substrates that the offline environment forces us to
+//! hand-roll: JSON, CLI parsing, logging, timing, property testing.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod timer;
+
+pub use json::Json;
+pub use timer::Timer;

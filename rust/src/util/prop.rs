@@ -1,0 +1,101 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |g| ...)` runs a closure over `cases` seeded
+//! generators; a failure reports the offending seed so the case can be
+//! replayed deterministically with `replay(seed, ...)`.
+
+use crate::rng::Philox;
+
+/// Value generator handed to property closures.
+pub struct Gen {
+    pub rng: Philox,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn uniform_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `f` over `cases` random cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000_0000 + case as u64;
+        let mut g = Gen { rng: Philox::new(seed, 0), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut g),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed:#x} (case {case}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F: FnMut(&mut Gen)>(seed: u64, mut f: F) {
+    let mut g = Gen { rng: Philox::new(seed, 0), seed };
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("count", 17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_seed() {
+        check("fails", 5, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < 2.0); // passes
+            if g.seed == 0x5eed_0000_0003 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges", 20, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let v = g.normal_vec(4);
+            assert_eq!(v.len(), 4);
+        });
+    }
+}

@@ -1,0 +1,110 @@
+//! Timing helpers + a tiny bench harness (criterion is unavailable
+//! offline). Used by `benches/*.rs` (all `harness = false`).
+
+use std::time::{Duration, Instant};
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Summary statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub stddev_ms: f64,
+}
+
+impl BenchStats {
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{label:<44} {:>10.3} ms/iter  (median {:>8.3}, min {:>8.3}, max {:>8.3}, n={})",
+            self.mean_ms, self.median_ms, self.min_ms, self.max_ms, self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(&samples)
+}
+
+/// Run `f` until `budget` elapses (at least 3 iterations).
+pub fn bench_for<F: FnMut()>(budget: Duration, mut f: F) -> BenchStats {
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while samples.len() < 3 || t0.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(&samples)
+}
+
+fn summarize(samples: &[f64]) -> BenchStats {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / (n.max(2) - 1) as f64;
+    BenchStats {
+        iters: n,
+        mean_ms: mean,
+        median_ms: sorted[n / 2],
+        min_ms: sorted[0],
+        max_ms: sorted[n - 1],
+        stddev_ms: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iters() {
+        let mut count = 0;
+        let stats = bench(2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(stats.iters, 10);
+        assert!(stats.min_ms <= stats.median_ms);
+        assert!(stats.median_ms <= stats.max_ms);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

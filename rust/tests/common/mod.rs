@@ -1,0 +1,36 @@
+//! Shared helpers for the integration tests.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use asd::runtime::Runtime;
+use asd::util::Json;
+
+pub fn artifacts_dir() -> PathBuf {
+    asd::artifacts_dir()
+}
+
+/// Golden traces exported by aot.py (env traces, model forwards,
+/// schedule spots, ASD trace).
+pub fn golden() -> &'static Json {
+    static GOLDEN: OnceLock<Json> = OnceLock::new();
+    GOLDEN.get_or_init(|| {
+        Json::parse_file(&artifacts_dir().join("golden.json"))
+            .expect("golden.json — run `make artifacts` first")
+    })
+}
+
+/// One shared Runtime per test binary (PJRT init is expensive; the
+/// device thread serializes executions anyway).
+pub fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::load_default().expect("runtime"))
+}
+
+pub fn approx_eq_slice(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}[{i}]: {x} vs {y}");
+    }
+}

@@ -1,0 +1,86 @@
+//! End-to-end ASD parity: replay the golden (u, xi) streams through the
+//! rust engine over the HLO gmm2d model and reproduce the python
+//! reference implementation's outputs, stats and the sequential sample.
+
+mod common;
+
+use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+use asd::ddpm::{NoiseStreams, SequentialSampler};
+use common::{approx_eq_slice, golden, runtime};
+
+fn golden_noise() -> (NoiseStreams, &'static asd::util::Json) {
+    let g = golden().get("asd_gmm2d").unwrap();
+    let y_k = g.get("y_k").unwrap().as_f64_vec().unwrap();
+    let xi: Vec<f64> = g.get("xi").unwrap().as_arr().unwrap()
+        .iter().flat_map(|r| r.as_f64_vec().unwrap()).collect();
+    let u = g.get("u").unwrap().as_f64_vec().unwrap();
+    (NoiseStreams { y_k, xi, u }, g)
+}
+
+#[test]
+fn sequential_matches_python_reference() {
+    let rt = runtime();
+    let model = rt.model("gmm2d").unwrap();
+    let (noise, g) = golden_noise();
+    let sampler = SequentialSampler::new(model);
+    let (y0, stats) = sampler.sample_with_noise(&noise, &[]).unwrap();
+    assert_eq!(stats.model_calls, 100);
+    let want = g.get("sequential_y0").unwrap().as_f64_vec().unwrap();
+    approx_eq_slice(&y0, &want, 5e-3, "sequential y0");
+}
+
+#[test]
+fn asd_traces_match_python_reference() {
+    let rt = runtime();
+    let model = rt.model("gmm2d").unwrap();
+    let (noise, g) = golden_noise();
+    for theta_key in ["4", "8", "0"] {
+        let tr = g.get("asd").unwrap().get(theta_key).unwrap();
+        let theta: usize = theta_key.parse().unwrap();
+        let mut engine = AsdEngine::new(
+            model.clone(),
+            AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+        );
+        let out = engine.sample_with_noise(&noise, &[]).unwrap();
+        let want_y0 = tr.get("y0").unwrap().as_f64_vec().unwrap();
+        approx_eq_slice(&out.y0, &want_y0, 5e-3,
+                        &format!("asd theta={theta_key} y0"));
+        for (field, got) in [
+            ("model_calls", out.stats.model_calls),
+            ("parallel_rounds", out.stats.parallel_rounds),
+            ("iterations", out.stats.iterations),
+            ("accepted", out.stats.accepted),
+            ("rejected", out.stats.rejected),
+        ] {
+            let want = tr.get(field).unwrap().as_usize().unwrap();
+            assert_eq!(got, want,
+                       "asd theta={theta_key} {field}: rust {got} vs py {want}");
+        }
+    }
+}
+
+#[test]
+fn asd_hlo_kernel_backend_matches_native_backend() {
+    let rt = runtime();
+    let model = rt.model("gmm2d").unwrap();
+    let (noise, _) = golden_noise();
+    let mut native = AsdEngine::new(
+        model.clone(),
+        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native },
+    );
+    let mut hlo = AsdEngine::new(
+        model.clone(),
+        AsdConfig {
+            theta: 8,
+            eval_tail: true,
+            backend: KernelBackend::Hlo(rt.kernels(model.info.d).unwrap()),
+        },
+    );
+    let out_n = native.sample_with_noise(&noise, &[]).unwrap();
+    let out_h = hlo.sample_with_noise(&noise, &[]).unwrap();
+    // identical accept/reject paths expected (f32 kernel vs f64 native can
+    // only diverge on knife-edge decisions; this trace has none)
+    assert_eq!(out_n.stats.accepted, out_h.stats.accepted);
+    assert_eq!(out_n.stats.rejected, out_h.stats.rejected);
+    approx_eq_slice(&out_n.y0, &out_h.y0, 1e-3, "hlo vs native backend y0");
+}

@@ -1,0 +1,83 @@
+//! Coordinator end-to-end over real HLO models: concurrent requests,
+//! mixed samplers, dynamic batching, failure handling.
+
+mod common;
+
+use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
+use common::runtime;
+
+fn coordinator() -> Coordinator {
+    let rt = runtime();
+    let c = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        enable_batching: true,
+    });
+    c.register_model("gmm2d", rt.model("gmm2d").unwrap());
+    c
+}
+
+fn req(sampler: SamplerSpec, seed: u64) -> Request {
+    Request { id: 0, variant: "gmm2d".into(), sampler, seed, cond: vec![] }
+}
+
+#[test]
+fn mixed_workload_completes() {
+    let c = coordinator();
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        let sampler = match i % 3 {
+            0 => SamplerSpec::Sequential,
+            1 => SamplerSpec::Asd(8),
+            _ => SamplerSpec::Picard(8, 1e-4),
+        };
+        rxs.push(c.submit(req(sampler, i)).1);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.sample.len(), 2);
+        // samples land near the circle target (radius 1.5 +- slack)
+        let radius = (r.sample[0].powi(2) + r.sample[1].powi(2)).sqrt();
+        assert!((0.5..3.0).contains(&radius), "radius {radius}");
+        ok += 1;
+    }
+    assert_eq!(ok, 12);
+    let m = c.metrics();
+    assert_eq!(m.completed, 12);
+    assert!(m.model_calls > 0);
+    c.shutdown();
+}
+
+#[test]
+fn asd_requests_report_fewer_rounds_than_sequential() {
+    let c = coordinator();
+    let (_, rx_seq) = c.submit(req(SamplerSpec::Sequential, 77));
+    let (_, rx_asd) = c.submit(req(SamplerSpec::Asd(8), 77));
+    let r_seq = rx_seq.recv().unwrap();
+    let r_asd = rx_asd.recv().unwrap();
+    assert_eq!(r_seq.parallel_rounds, 100);
+    assert!(r_asd.parallel_rounds < 50,
+            "asd rounds {}", r_asd.parallel_rounds);
+    let st = r_asd.asd_stats.unwrap();
+    assert!(st.acceptance_rate() > 0.8);
+    c.shutdown();
+}
+
+#[test]
+fn unknown_variant_fails_without_poisoning_the_pool() {
+    let c = coordinator();
+    let (_, bad) = c.submit(Request {
+        id: 0,
+        variant: "missing".into(),
+        sampler: SamplerSpec::Sequential,
+        seed: 0,
+        cond: vec![],
+    });
+    assert!(bad.recv().unwrap().error.is_some());
+    // pool still serves
+    let (_, good) = c.submit(req(SamplerSpec::Sequential, 1));
+    assert!(good.recv().unwrap().error.is_none());
+    c.shutdown();
+}

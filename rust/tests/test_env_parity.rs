@@ -1,0 +1,68 @@
+//! Env parity: the rust point-mass environments must reproduce the
+//! python datagen environments bit-for-bit (golden traces from aot.py).
+
+mod common;
+
+use asd::env::{PointMassEnv, TaskSpec};
+use common::{approx_eq_slice, golden};
+
+fn replay(task: &str) {
+    let g = golden().get("envs").unwrap().get(task).unwrap();
+    let spec = TaskSpec::by_name(task).unwrap();
+    let mut env = PointMassEnv::new(spec.clone());
+
+    let init = g.get("init").unwrap();
+    let ee: Vec<[f64; 2]> = init.get("ee").unwrap().as_arr().unwrap()
+        .iter()
+        .map(|r| {
+            let v = r.as_f64_vec().unwrap();
+            [v[0], v[1]]
+        })
+        .collect();
+    let obj = init.get("obj").unwrap().as_f64_vec().unwrap();
+    env.reset_to(&ee, [obj[0], obj[1]]);
+
+    let obs_seq = g.get("obs").unwrap().as_arr().unwrap();
+    let actions = g.get("actions").unwrap().as_arr().unwrap();
+
+    approx_eq_slice(&env.obs(), &obs_seq[0].as_f64_vec().unwrap(), 1e-9,
+                    &format!("{task} obs[0]"));
+    for (t, a) in actions.iter().enumerate() {
+        env.step(&a.as_f64_vec().unwrap());
+        approx_eq_slice(&env.obs(), &obs_seq[t + 1].as_f64_vec().unwrap(),
+                        1e-9, &format!("{task} obs[{}]", t + 1));
+    }
+    assert_eq!(env.leg_idx as f64,
+               g.get("leg_idx").unwrap().as_f64().unwrap(), "{task} leg_idx");
+    assert_eq!(env.carried as f64,
+               g.get("carried").unwrap().as_f64().unwrap(), "{task} carried");
+    assert_eq!(env.failed,
+               g.get("failed").unwrap().as_bool().unwrap(), "{task} failed");
+}
+
+#[test]
+fn square_trace_parity() {
+    replay("square");
+}
+
+#[test]
+fn transport_trace_parity() {
+    replay("transport");
+}
+
+#[test]
+fn toolhang_trace_parity() {
+    replay("toolhang");
+}
+
+#[test]
+fn obs_dims_match_golden() {
+    let envs = golden().get("envs").unwrap().as_obj().unwrap();
+    for (task, g) in envs {
+        let spec = TaskSpec::by_name(task).unwrap();
+        assert_eq!(spec.obs_dim() as f64,
+                   g.get("obs_dim").unwrap().as_f64().unwrap(), "{task}");
+        assert_eq!(spec.action_dim() as f64,
+                   g.get("action_dim").unwrap().as_f64().unwrap(), "{task}");
+    }
+}

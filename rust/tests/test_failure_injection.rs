@@ -1,0 +1,90 @@
+//! Failure injection: malformed artifacts, truncated weights, bad
+//! requests — errors must surface cleanly and never poison the device
+//! thread or the worker pool.
+
+mod common;
+
+use std::io::Write;
+
+use asd::model::{Manifest, NativeMlp};
+use asd::runtime::HloModel;
+use common::runtime;
+
+#[test]
+fn malformed_hlo_artifact_reports_error_and_device_survives() {
+    let rt = runtime();
+    let dir = std::env::temp_dir().join("asd_bad_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.hlo.txt");
+    let mut f = std::fs::File::create(&bad).unwrap();
+    writeln!(f, "HloModule this is not {{ valid").unwrap();
+    let err = rt.device.compile(bad, "bad").unwrap_err().to_string();
+    assert!(!err.is_empty());
+    // device thread still serves real work afterwards
+    let model = rt.model("gmm2d").unwrap();
+    let mut out = vec![0.0; 2];
+    use asd::model::DenoiseModel;
+    model.denoise_batch(&[0.1, 0.2], &[50.0], &[], 1, &mut out).unwrap();
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn missing_artifact_file_is_a_clean_error() {
+    let rt = runtime();
+    let mut info = rt.manifest.variant("gmm2d").unwrap().clone();
+    info.weights_file = "does_not_exist.bin".into();
+    let err = HloModel::load(&rt.device, info, &rt.manifest.dir);
+    assert!(err.is_err());
+}
+
+#[test]
+fn truncated_weights_rejected_by_native_and_hlo_loaders() {
+    let rt = runtime();
+    let dir = std::env::temp_dir().join("asd_trunc_weights");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut info = rt.manifest.variant("gmm2d").unwrap().clone();
+    // write a too-short weights file
+    std::fs::write(dir.join(&info.weights_file), [0u8; 64]).unwrap();
+    assert!(NativeMlp::load(&info, &dir).is_err());
+    info.weights_file = info.weights_file.clone();
+    assert!(HloModel::load(&rt.device, info, &dir).is_err());
+}
+
+#[test]
+fn manifest_with_missing_keys_is_rejected() {
+    let j = asd::util::Json::parse(r#"{"format_version": 1, "variants": {
+        "x": {"d": 2}}, "kernels": {"speculate": {}, "verify": {}},
+        "beta_start": 0.1, "beta_end": 0.2, "spec_t": 32, "chunk": 16,
+        "exec_steps": 8}"#).unwrap();
+    // direct path: full parse via Manifest requires all fields; simulate
+    // by writing to a temp dir
+    let dir = std::env::temp_dir().join("asd_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), j.to_string()).unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("variant 'x'") || err.contains("missing key"),
+            "{err}");
+}
+
+#[test]
+fn wrong_format_version_rejected() {
+    let dir = std::env::temp_dir().join("asd_bad_version");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"),
+                   r#"{"format_version": 99}"#).unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("format_version"), "{err}");
+}
+
+#[test]
+fn batch_larger_than_compiled_sizes_chunks_not_fails() {
+    use asd::model::DenoiseModel;
+    let rt = runtime();
+    let model = rt.model("gmm2d").unwrap();
+    let n = 70; // > max batch 32 -> 3 chunks
+    let ys = vec![0.0; n * 2];
+    let ts = vec![1.0; n];
+    let mut out = vec![0.0; n * 2];
+    model.denoise_batch(&ys, &ts, &[], n, &mut out).unwrap();
+    assert!(out.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,132 @@
+//! HLO L1 kernel parity across every lowered dimension, plus
+//! property-style sweeps of the runtime padding/chunking invariants.
+
+mod common;
+
+use asd::asd::grs_native;
+use asd::model::DenoiseModel;
+use asd::rng::Philox;
+use common::{approx_eq_slice, runtime};
+
+fn check_kernels_for_dim(d: usize) {
+    let rt = runtime();
+    let kernels = rt.kernels(d).unwrap();
+    let mut rng = Philox::new(d as u64, 0);
+    for t in [1usize, 3, 17, 32] {
+        let y_a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let x0a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let c1: Vec<f64> = (0..t).map(|_| rng.uniform() * 0.2).collect();
+        let c2: Vec<f64> = (0..t).map(|_| 0.8 + rng.uniform() * 0.2).collect();
+        let sigma: Vec<f64> = (0..t).map(|_| rng.uniform() * 0.3).collect();
+        let xi: Vec<f64> = (0..t * d).map(|_| rng.normal()).collect();
+
+        let (m_hlo, y_hlo) = kernels
+            .speculate(&y_a, &x0a, &c1, &c2, &sigma, &xi)
+            .unwrap();
+        // native recurrence
+        let mut m_nat = vec![0.0; t * d];
+        let mut y_nat = vec![0.0; t * d];
+        let mut prev = y_a.clone();
+        for k in 0..t {
+            for i in 0..d {
+                m_nat[k * d + i] = c1[k] * x0a[i] + c2[k] * prev[i];
+                y_nat[k * d + i] = m_nat[k * d + i] + sigma[k] * xi[k * d + i];
+            }
+            prev = y_nat[k * d..(k + 1) * d].to_vec();
+        }
+        approx_eq_slice(&m_hlo, &m_nat, 2e-4, &format!("spec d={d} t={t}"));
+        approx_eq_slice(&y_hlo, &y_nat, 2e-4, &format!("spec-y d={d} t={t}"));
+
+        // verify kernel vs native GRS on the same data
+        let u: Vec<f64> = (0..t).map(|_| rng.uniform()).collect();
+        let m_tgt: Vec<f64> = m_nat.iter().map(|x| x + 0.05).collect();
+        let sig1: Vec<f64> = (0..t).map(|_| 0.2 + rng.uniform()).collect();
+        let (z_hlo, acc_hlo) = kernels
+            .verify(&u, &xi, &m_nat, &m_tgt, &sig1)
+            .unwrap();
+        let mut z = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        for k in 0..t {
+            let ok = grs_native(u[k], &xi[k * d..(k + 1) * d],
+                                &m_nat[k * d..(k + 1) * d],
+                                &m_tgt[k * d..(k + 1) * d], sig1[k],
+                                &mut z, &mut v);
+            assert_eq!(ok, acc_hlo[k], "accept d={d} t={t} row {k}");
+            approx_eq_slice(&z_hlo[k * d..(k + 1) * d], &z, 2e-3,
+                            &format!("verify-z d={d} t={t} row {k}"));
+        }
+    }
+}
+
+#[test]
+fn kernels_d16() {
+    check_kernels_for_dim(16);
+}
+
+#[test]
+fn kernels_d64() {
+    check_kernels_for_dim(64);
+}
+
+#[test]
+fn kernels_d112() {
+    check_kernels_for_dim(112);
+}
+
+#[test]
+fn kernels_d224() {
+    check_kernels_for_dim(224);
+}
+
+#[test]
+fn chain_longer_than_kernel_t_is_rejected() {
+    let rt = runtime();
+    let kernels = rt.kernels(16).unwrap();
+    let too_long = kernels.t_steps + 1;
+    let err = kernels.speculate(&vec![0.0; 16], &vec![0.0; 16],
+                                &vec![0.1; too_long], &vec![0.9; too_long],
+                                &vec![0.1; too_long],
+                                &vec![0.0; too_long * 16]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn padding_rows_do_not_leak_into_results() {
+    // two different paddings of the same 3-row problem must agree
+    let rt = runtime();
+    let model = rt.model("latent16").unwrap();
+    let d = model.dim();
+    let c = model.cond_dim();
+    let mut rng = Philox::new(3, 1);
+    let ys: Vec<f64> = (0..3 * d).map(|_| rng.normal()).collect();
+    let ts = vec![500.0, 2.0, 999.0];
+    let cond = vec![0.1; 3 * c];
+    let mut out_a = vec![0.0; 3 * d];
+    model.denoise_batch(&ys, &ts, &cond, 3, &mut out_a).unwrap();
+    // same rows through batch-1 calls
+    for r in 0..3 {
+        let mut one = vec![0.0; d];
+        model.denoise_batch(&ys[r * d..(r + 1) * d], &ts[r..r + 1],
+                            &cond[r * c..(r + 1) * c], 1, &mut one).unwrap();
+        approx_eq_slice(&out_a[r * d..(r + 1) * d], &one, 1e-5,
+                        &format!("padded row {r}"));
+    }
+}
+
+#[test]
+fn asd_with_hlo_policy_model_smoke() {
+    // full-stack: ASD over an HLO policy model with obs conditioning
+    use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+    let rt = runtime();
+    let model = rt.model("policy_square").unwrap();
+    let c = model.cond_dim();
+    let mut engine = AsdEngine::new(
+        model.clone(),
+        AsdConfig { theta: 16, eval_tail: true, backend: KernelBackend::Native });
+    let obs = vec![0.2; c];
+    let out = engine.sample_cond(5, &obs).unwrap();
+    assert_eq!(out.y0.len(), 112);
+    assert!(out.y0.iter().all(|v| v.is_finite()));
+    assert!(out.stats.parallel_rounds < 100);
+    assert_eq!(out.stats.accepted + out.stats.rejected, 100);
+}

@@ -1,0 +1,161 @@
+//! Property-based sweeps over the pure substrates (no PJRT needed):
+//! JSON roundtrips, quality-metric axioms, batcher invariants under
+//! random queues, Picard-vs-sequential convergence, schedule identities
+//! at random K.
+
+mod common;
+
+use asd::math::stats::{ks_critical, ks_statistic};
+use asd::quality::{frechet_diag, sliced_w};
+use asd::rng::Philox;
+use asd::schedule::DdpmSchedule;
+use asd::util::prop;
+use asd::util::Json;
+
+#[test]
+fn json_roundtrip_random_structures() {
+    prop::check("json-roundtrip", 60, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("reparse failed for {text}: {e}");
+        });
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    });
+}
+
+fn random_json(g: &mut prop::Gen, depth: usize) -> Json {
+    let choice = if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => {
+            // f64s that survive text roundtrips exactly
+            Json::Num((g.f64_in(-1e6, 1e6) * 64.0).round() / 64.0)
+        }
+        3 => {
+            let n = g.usize_in(0, 8);
+            let s: String = (0..n)
+                .map(|_| *g.pick(&['a', 'b', '"', '\\', 'x', '\n', '7']))
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let n = g.usize_in(0, 4);
+            Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.usize_in(0, 4);
+            Json::Obj((0..n)
+                .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                .collect())
+        }
+    }
+}
+
+#[test]
+fn frechet_axioms() {
+    prop::check("frechet-axioms", 25, |g| {
+        let d = g.usize_in(1, 6);
+        let n = 60;
+        let a: Vec<Vec<f64>> = (0..n).map(|_| g.normal_vec(d)).collect();
+        let b: Vec<Vec<f64>> = (0..n)
+            .map(|_| g.normal_vec(d).iter().map(|x| x + 1.0).collect())
+            .collect();
+        // identity of indiscernibles (same cloud)
+        assert!(frechet_diag(&a, &a) < 1e-12);
+        // symmetry
+        let ab = frechet_diag(&a, &b);
+        let ba = frechet_diag(&b, &a);
+        assert!((ab - ba).abs() < 1e-9);
+        // non-negativity + detects the shift
+        assert!(ab > 0.0);
+        // sliced-W symmetric-ish (same projections both ways)
+        let sab = sliced_w(&a, &b);
+        assert!(sab > 0.0);
+        assert!((sab - sliced_w(&b, &a)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn schedule_identities_at_random_k() {
+    prop::check("schedule-identities", 20, |g| {
+        let k = g.usize_in(20, 1500);
+        let s = DdpmSchedule::new(k);
+        for i in 0..k {
+            let mean_id = s.c1[i] + s.c2[i] * s.abar[i].sqrt();
+            assert!((mean_id - s.abar_prev[i].sqrt()).abs() < 1e-9,
+                    "K={k} i={i}");
+            let var_id = s.c2[i] * s.c2[i] * (1.0 - s.abar[i])
+                + s.sigma[i] * s.sigma[i];
+            assert!((var_id - (1.0 - s.abar_prev[i])).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn philox_streams_pass_ks_against_each_other() {
+    // two disjoint streams should be indistinguishable in law
+    let mut a = Philox::new(1, 10);
+    let mut b = Philox::new(1, 11);
+    let n = 20_000;
+    let va: Vec<f64> = (0..n).map(|_| a.normal()).collect();
+    let vb: Vec<f64> = (0..n).map(|_| b.normal()).collect();
+    let d = ks_statistic(&va, &vb);
+    assert!(d < ks_critical(n, n, 0.001), "KS {d}");
+}
+
+#[test]
+fn picard_converges_for_random_gmm_targets() {
+    use asd::ddpm::{NoiseStreams, SequentialSampler};
+    use asd::model::{Gmm, GmmDdpmOracle};
+    use asd::picard::{PicardConfig, PicardSampler};
+
+    prop::check("picard-converges", 6, |g| {
+        let n_comp = g.usize_in(2, 5);
+        let d = 2;
+        let means: Vec<Vec<f64>> = (0..n_comp)
+            .map(|_| g.normal_vec(d).iter().map(|x| 1.5 * x).collect())
+            .collect();
+        let gmm = Gmm::new(means, vec![0.2; n_comp],
+                           vec![1.0 / n_comp as f64; n_comp]);
+        let k = 30;
+        let oracle = GmmDdpmOracle::new(gmm, k, false);
+        let seq = SequentialSampler::new(oracle.clone());
+        let pic = PicardSampler::new(
+            oracle, PicardConfig { window: 6, tol: 1e-10, max_sweeps: 400 });
+        let noise = NoiseStreams::draw(g.seed, 0, k, d);
+        let (a, _) = seq.sample_with_noise(&noise, &[]).unwrap();
+        let (b, _) = pic.sample_with_noise(&noise, &[]).unwrap();
+        assert!(asd::math::vec_ops::dist(&a, &b) < 1e-4,
+                "picard diverged: {a:?} vs {b:?}");
+    });
+}
+
+#[test]
+fn asd_engine_invariants_random_theta() {
+    use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+    use asd::model::{Gmm, GmmDdpmOracle};
+
+    prop::check("asd-invariants", 12, |g| {
+        let k = g.usize_in(10, 120);
+        let theta = *g.pick(&[0usize, 1, 2, 5, 9, 33]);
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), k, false);
+        let mut e = AsdEngine::new(
+            oracle,
+            AsdConfig { theta, eval_tail: g.bool(),
+                        backend: KernelBackend::Native });
+        let out = e.sample(g.seed).unwrap();
+        // every transition consumed exactly once
+        assert_eq!(out.stats.accepted + out.stats.rejected, k);
+        // Lemma 13: >= 1 accept per iteration
+        assert!(out.stats.accepted >= out.stats.iterations);
+        // round bookkeeping is consistent
+        assert_eq!(out.stats.round_batches.len(), out.stats.parallel_rounds);
+        assert_eq!(out.stats.round_batches.iter().sum::<usize>(),
+                   out.stats.model_calls);
+        // sample is finite and 2-D
+        assert_eq!(out.y0.len(), 2);
+        assert!(out.y0.iter().all(|v| v.is_finite()));
+    });
+}

@@ -1,0 +1,174 @@
+//! Runtime integration: the AOT HLO executables must agree with (a) the
+//! golden forwards computed by the python L2 model and (b) the
+//! rust-native MLP oracle, across every variant and batch size.
+
+mod common;
+
+use asd::model::{DenoiseModel, NativeMlp};
+use common::{approx_eq_slice, golden, runtime};
+
+fn golden_cases(variant: &str) -> Vec<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> {
+    let cases = golden()
+        .get("model_forwards").unwrap()
+        .get(variant).unwrap()
+        .as_arr().unwrap();
+    cases
+        .iter()
+        .map(|c| {
+            let flat2 = |key: &str| -> Vec<f64> {
+                c.get(key).unwrap().as_arr().unwrap()
+                    .iter()
+                    .flat_map(|row| row.as_f64_vec().unwrap())
+                    .collect()
+            };
+            (
+                flat2("y"),
+                c.get("t").unwrap().as_f64_vec().unwrap(),
+                flat2("cond"),
+                flat2("x0"),
+            )
+        })
+        .collect()
+}
+
+fn check_variant_against_golden(variant: &str) {
+    let rt = runtime();
+    let hlo = rt.model(variant).expect("load model");
+    let info = rt.manifest.variant(variant).unwrap();
+    let native = NativeMlp::load(info, &rt.manifest.dir).unwrap();
+    let d = info.d;
+    for (case_idx, (y, t, cond, want)) in golden_cases(variant).iter().enumerate() {
+        let n = t.len();
+        let mut out_hlo = vec![0.0; n * d];
+        hlo.denoise_batch(y, t, cond, n, &mut out_hlo).unwrap();
+        approx_eq_slice(&out_hlo, want, 2e-4,
+                        &format!("{variant} case {case_idx} (hlo vs golden)"));
+        let mut out_native = vec![0.0; n * d];
+        native.denoise_batch(y, t, cond, n, &mut out_native).unwrap();
+        approx_eq_slice(&out_native, want, 2e-4,
+                        &format!("{variant} case {case_idx} (native vs golden)"));
+    }
+}
+
+#[test]
+fn gmm2d_forward_parity() {
+    check_variant_against_golden("gmm2d");
+}
+
+#[test]
+fn latent16_forward_parity() {
+    check_variant_against_golden("latent16");
+}
+
+#[test]
+fn pixel64_forward_parity() {
+    check_variant_against_golden("pixel64");
+}
+
+#[test]
+fn policy_forwards_parity() {
+    check_variant_against_golden("policy_square");
+    check_variant_against_golden("policy_transport");
+    check_variant_against_golden("policy_toolhang");
+}
+
+#[test]
+fn batch_padding_and_chunking_consistent() {
+    // results must be independent of which compiled batch size serves a
+    // row: run n=1, n=3 (padded to 4), n=33 (chunked 32+1) and compare
+    let rt = runtime();
+    let model = rt.model("gmm2d").unwrap();
+    let d = model.dim();
+    let n = 33;
+    let ys: Vec<f64> = (0..n * d).map(|i| ((i * 31 % 17) as f64 - 8.0) / 5.0).collect();
+    let ts: Vec<f64> = (0..n).map(|i| (1 + (i * 7) % 100) as f64).collect();
+    let mut all = vec![0.0; n * d];
+    model.denoise_batch(&ys, &ts, &[], n, &mut all).unwrap();
+    for r in [0usize, 2, 31, 32] {
+        let mut one = vec![0.0; d];
+        model.denoise_batch(&ys[r * d..(r + 1) * d], &ts[r..r + 1], &[], 1,
+                            &mut one).unwrap();
+        approx_eq_slice(&all[r * d..(r + 1) * d], &one, 1e-5,
+                        &format!("row {r}"));
+    }
+}
+
+#[test]
+fn schedule_matches_golden_spots() {
+    let g = golden().get("schedule").unwrap();
+    for k in [100usize, 1000] {
+        let s = asd::schedule::DdpmSchedule::new(k);
+        let spot = g.get(&k.to_string()).unwrap();
+        let idx: Vec<usize> = spot.get("idx").unwrap().as_f64_vec().unwrap()
+            .iter().map(|&x| x as usize).collect();
+        for (slot, &i) in idx.iter().enumerate() {
+            for (field, arr) in [("c1", &s.c1), ("c2", &s.c2),
+                                 ("sigma", &s.sigma), ("abar", &s.abar)] {
+                let want = spot.get(field).unwrap().as_arr().unwrap()[slot]
+                    .as_f64().unwrap();
+                let got = arr[i];
+                assert!((got - want).abs() < 1e-9,
+                        "K={k} {field}[{i}]: {got} vs {want}");
+            }
+        }
+    }
+}
+
+#[test]
+fn manifest_abar_matches_rust_schedule() {
+    let rt = runtime();
+    for (name, v) in &rt.manifest.variants {
+        let s = asd::schedule::DdpmSchedule::new(v.k_steps);
+        for (i, &a) in v.abar.iter().enumerate() {
+            assert!((s.abar[i] - a).abs() < 1e-9,
+                    "{name} abar[{i}]: {} vs {a}", s.abar[i]);
+        }
+    }
+}
+
+#[test]
+fn hlo_kernels_match_native() {
+    // speculate + verify HLO kernels vs the engine's native math
+    let rt = runtime();
+    let kernels = rt.kernels(2).unwrap();
+    let d = 2;
+    let t = 5;
+    let y_a = vec![0.3, -0.8];
+    let x0a = vec![1.2, 0.4];
+    let c1: Vec<f64> = (0..t).map(|i| 0.01 * (i + 1) as f64).collect();
+    let c2: Vec<f64> = (0..t).map(|i| 1.0 - 0.005 * (i + 1) as f64).collect();
+    let sigma: Vec<f64> = (0..t).map(|i| 0.05 * (i + 1) as f64).collect();
+    let xi: Vec<f64> = (0..t * d).map(|i| ((i as f64) * 0.37).sin()).collect();
+
+    let (m_hlo, y_hlo) = kernels.speculate(&y_a, &x0a, &c1, &c2, &sigma, &xi)
+        .unwrap();
+    // native recurrence
+    let mut m_nat = vec![0.0; t * d];
+    let mut y_nat = vec![0.0; t * d];
+    let mut prev = y_a.clone();
+    for k in 0..t {
+        for i in 0..d {
+            m_nat[k * d + i] = c1[k] * x0a[i] + c2[k] * prev[i];
+            y_nat[k * d + i] = m_nat[k * d + i] + sigma[k] * xi[k * d + i];
+        }
+        prev = y_nat[k * d..(k + 1) * d].to_vec();
+    }
+    approx_eq_slice(&m_hlo, &m_nat, 1e-4, "speculate m_hat");
+    approx_eq_slice(&y_hlo, &y_nat, 1e-4, "speculate y_hat");
+
+    // verify kernel vs native GRS
+    let u: Vec<f64> = (0..t).map(|i| 0.1 + 0.18 * i as f64).collect();
+    let m_tgt: Vec<f64> = m_nat.iter().map(|&x| x + 0.2).collect();
+    let (z_hlo, acc_hlo) = kernels.verify(&u, &xi, &m_nat, &m_tgt, &sigma)
+        .unwrap();
+    let mut z_buf = vec![0.0; d];
+    let mut v_buf = vec![0.0; d];
+    for k in 0..t {
+        let ok = asd::asd::grs_native(
+            u[k], &xi[k * d..(k + 1) * d], &m_nat[k * d..(k + 1) * d],
+            &m_tgt[k * d..(k + 1) * d], sigma[k], &mut z_buf, &mut v_buf);
+        assert_eq!(ok, acc_hlo[k], "accept flag row {k}");
+        approx_eq_slice(&z_hlo[k * d..(k + 1) * d], &z_buf, 1e-3,
+                        &format!("verify z row {k}"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Statistical integration tests for the paper's core claims, run with
+//! the analytic GMM oracle (no network error):
+//!
+//! * Thm 3: ASD output law == sequential DDPM output law (two-sample KS
+//!   per coordinate + radial statistic).
+//! * Thm 1: SL increments are exchangeable (moment symmetry).
+//! * Thm 12: GRS rejection rate equals the Gaussian TV distance
+//!   (swept over ||v||/sigma by the property harness).
+
+mod common;
+
+use asd::asd::{grs_native, AsdConfig, AsdEngine, KernelBackend};
+use asd::ddpm::SequentialSampler;
+use asd::math::erf::gaussian_tv;
+use asd::math::stats::{ks_critical, ks_statistic};
+use asd::model::{Gmm, GmmDdpmOracle};
+use asd::rng::Philox;
+
+#[test]
+fn asd_law_equals_sequential_law_ks() {
+    let k = 60;
+    let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), k, false);
+    let seq = SequentialSampler::new(oracle.clone());
+    let mut engine = AsdEngine::new(
+        oracle,
+        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native });
+    let n = 500;
+    let mut seq_x = Vec::with_capacity(n);
+    let mut seq_r = Vec::with_capacity(n);
+    let mut asd_x = Vec::with_capacity(n);
+    let mut asd_r = Vec::with_capacity(n);
+    for s in 0..n as u64 {
+        let (y, _) = seq.sample(s, &[]).unwrap();
+        seq_x.push(y[0]);
+        seq_r.push((y[0] * y[0] + y[1] * y[1]).sqrt());
+        let out = engine.sample(1_000_000 + s).unwrap();
+        asd_x.push(out.y0[0]);
+        asd_r.push((out.y0[0].powi(2) + out.y0[1].powi(2)).sqrt());
+    }
+    let crit = ks_critical(n, n, 0.001);
+    let d_x = ks_statistic(&seq_x, &asd_x);
+    let d_r = ks_statistic(&seq_r, &asd_r);
+    assert!(d_x < crit, "x-coordinate KS {d_x} >= {crit}");
+    assert!(d_r < crit, "radius KS {d_r} >= {crit}");
+}
+
+#[test]
+fn sl_increments_are_exchangeable() {
+    // ybar_t = t x* + W_t with x* ~ Rademacher; equal-eta increments
+    // Delta_i = eta x* + sqrt(eta) N(0,1): permutation-invariant moments
+    let mut rng = Philox::new(5, 0);
+    let n = 60_000;
+    let m = 4;
+    let eta: f64 = 0.25;
+    let mut deltas = vec![0.0; n * m];
+    for r in 0..n {
+        let x_star = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        for j in 0..m {
+            deltas[r * m + j] = eta * x_star + eta.sqrt() * rng.normal();
+        }
+    }
+    let pair_moment = |a: usize, b: usize| -> f64 {
+        (0..n).map(|r| deltas[r * m + a] * deltas[r * m + b]).sum::<f64>()
+            / n as f64
+    };
+    let tol = 4.0 / (n as f64).sqrt();
+    let m01 = pair_moment(0, 1);
+    assert!((m01 - pair_moment(1, 2)).abs() < tol);
+    assert!((m01 - pair_moment(0, 3)).abs() < tol);
+    // marginals match too
+    let col = |j: usize| -> Vec<f64> {
+        (0..n).map(|r| deltas[r * m + j]).collect()
+    };
+    let d = ks_statistic(&col(0), &col(3));
+    assert!(d < ks_critical(n, n, 0.001), "KS {d}");
+}
+
+#[test]
+fn grs_rejection_rate_equals_tv_sweep() {
+    // property-style sweep over v and sigma
+    asd::util::prop::check("grs-tv", 6, |g| {
+        let d = g.usize_in(1, 8);
+        let sigma = g.f64_in(0.2, 1.5);
+        let mut m_hat = vec![0.0; d];
+        m_hat[0] = g.f64_in(0.0, 2.0);
+        let m = vec![0.0; d];
+        let n = 12_000;
+        let mut rejects = 0usize;
+        let mut z = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        for _ in 0..n {
+            let xi: Vec<f64> = (0..d).map(|_| g.rng.normal()).collect();
+            let u = g.rng.uniform();
+            if !grs_native(u, &xi, &m_hat, &m, sigma, &mut z, &mut v) {
+                rejects += 1;
+            }
+        }
+        let want = gaussian_tv(m_hat[0], sigma);
+        let got = rejects as f64 / n as f64;
+        assert!((got - want).abs() < 0.02,
+                "reject {got} vs TV {want} (v={}, sigma={sigma})", m_hat[0]);
+    });
+}
+
+#[test]
+fn conditional_oracle_asd_respects_conditioning() {
+    // conditioned on class c, both samplers land near mu_c
+    let k = 60;
+    let gmm = Gmm::circle_2d();
+    let mu3 = gmm.mean_of(3).to_vec();
+    let oracle = GmmDdpmOracle::new(gmm, k, true);
+    let mut cond = vec![0.0; 8];
+    cond[3] = 1.0;
+    let mut engine = AsdEngine::new(
+        oracle,
+        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native });
+    for s in 0..30 {
+        let out = engine.sample_cond(s, &cond).unwrap();
+        let dist = ((out.y0[0] - mu3[0]).powi(2)
+            + (out.y0[1] - mu3[1]).powi(2)).sqrt();
+        assert!(dist < 0.12 * 6.0, "seed {s}: {dist}");
+    }
+}
