@@ -24,7 +24,12 @@ fn main() -> anyhow::Result<()> {
     // 3. ASD: same distribution, far fewer parallel rounds.
     let mut engine = AsdEngine::new(
         model.clone(),
-        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native },
+        AsdConfig {
+            theta: 8,
+            eval_tail: true,
+            backend: KernelBackend::Native,
+            ..Default::default()
+        },
     );
     let out = engine.sample(7)?;
     println!(

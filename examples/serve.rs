@@ -17,11 +17,17 @@ fn main() -> anyhow::Result<()> {
     let workers = args.get_usize("workers", 2)?;
     let theta = args.get_usize("theta", 8)?;
 
+    let pool_size = args.get_usize("pool", 1)?;
+
     let rt = Runtime::load_default()?;
     let coordinator = Coordinator::new(ServerConfig {
         workers,
         max_batch: 8,
         enable_batching: true,
+        pool: asd::runtime::pool::PoolConfig {
+            pool_size,
+            ..Default::default()
+        },
     });
     // serve two real models side by side
     for variant in ["gmm2d", "latent16"] {

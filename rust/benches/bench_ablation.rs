@@ -27,7 +27,8 @@ fn main() -> anyhow::Result<()> {
     let seq = SequentialSampler::new(model.clone());
     let mut engine = AsdEngine::new(
         model.clone(),
-        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native });
+        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native,
+                    ..Default::default() });
     let mut asd_rounds = 0.0;
     let mut asd_calls = 0.0;
     let mut asd_bias = 0.0;
@@ -51,7 +52,8 @@ fn main() -> anyhow::Result<()> {
                          ("Picard tol=3e-2", 3e-2)] {
         let pic = PicardSampler::new(
             model.clone(),
-            PicardConfig { window: 16, tol, max_sweeps: 500 });
+            PicardConfig { window: 16, tol, max_sweeps: 500,
+                           ..Default::default() });
         let mut rounds = 0.0;
         let mut calls = 0.0;
         let mut bias = 0.0;
@@ -77,7 +79,9 @@ fn main() -> anyhow::Result<()> {
     for (label, tail) in [("eval_tail=true", true), ("eval_tail=false", false)] {
         let mut e = AsdEngine::new(
             model.clone(),
-            AsdConfig { theta: 8, eval_tail: tail, backend: KernelBackend::Native });
+            AsdConfig { theta: 8, eval_tail: tail,
+                        backend: KernelBackend::Native,
+                        ..Default::default() });
         let mut rounds = 0.0;
         let mut calls = 0.0;
         for s in 0..n {
@@ -98,7 +102,8 @@ fn main() -> anyhow::Result<()> {
         let mut e = AsdEngine::new(
             model.clone(),
             AsdConfig { theta: fixed, eval_tail: true,
-                        backend: KernelBackend::Native });
+                        backend: KernelBackend::Native,
+                        ..Default::default() });
         let mut rounds = 0.0;
         let mut calls = 0.0;
         for s in 0..n {
@@ -117,7 +122,8 @@ fn main() -> anyhow::Result<()> {
         let mut e = AsdEngine::new(
             model.clone(),
             AsdConfig { theta: ctl.theta(), eval_tail: true,
-                        backend: KernelBackend::Native });
+                        backend: KernelBackend::Native,
+                        ..Default::default() });
         let out = e.sample(s)?;
         ctl.observe(out.stats.accepted, out.stats.rejected);
         rounds += out.stats.parallel_rounds as f64;

@@ -1,0 +1,56 @@
+//! Measured parallel-round execution: wall-clock speedup from the
+//! sharded worker pool, reported next to the algorithmic rounds
+//! speedup — the bench that turns `parallel_rounds` from bookkeeping
+//! into a measured quantity.
+//!
+//! Workload: a wide random GMM oracle (posterior-mean cost scales with
+//! components * d), so per-row denoise work is large enough for
+//! sharding to pay off. Outputs are asserted bit-identical across pool
+//! sizes: the pool buys wall-clock only, never perturbs samples.
+//!
+//! Run: cargo bench --bench bench_parallel
+
+use std::sync::Arc;
+
+use asd::ddpm::BatchedSequentialSampler;
+use asd::exp::speedup::{format_pool_rows, outputs_bit_identical,
+                        sweep_pool_sizes};
+use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle};
+use asd::runtime::pool::{default_threads, PoolConfig};
+use asd::util::timer::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Sharded worker pool — measured vs algorithmic speedup \
+              ({} pool threads available) ===\n", default_threads());
+
+    // --- ASD: verify rounds sharded across the pool -------------------
+    let k = 150;
+    let gmm = Gmm::random(96, 128, 1.5, 7);
+    let model: Arc<dyn DenoiseModel> = GmmDdpmOracle::new(gmm, k, false);
+    let pool_sizes = [1usize, 2, 4, 8];
+    let rows = sweep_pool_sizes(model.clone(), &pool_sizes, 2, 16, 4, 100)?;
+    println!("[ASD theta=16, GMM d=96 x 128 components, K={k}]");
+    print!("{}", format_pool_rows(k, &rows));
+    assert!(outputs_bit_identical(&rows),
+            "sharding changed sample bits: {rows:?}");
+    println!("outputs bit-identical across pool sizes: true\n");
+
+    // --- lockstep batched sequential: one sharded call per step -------
+    println!("[lockstep batched sequential, n=32 chains, same model]");
+    let seeds: Vec<u64> = (0..32).collect();
+    let mut baseline_ms = 0.0;
+    for &p in &pool_sizes {
+        let sampler = BatchedSequentialSampler::with_pool(
+            model.clone(), PoolConfig { pool_size: p, shard_min: 2 });
+        let st = bench(1, 3, || {
+            sampler.sample_batch(&seeds, &[]).unwrap();
+        });
+        if p == 1 {
+            baseline_ms = st.mean_ms;
+        }
+        println!("{}  ({:.2}x vs pool=1)",
+                 st.row(&format!("batched-seq n=32 pool={p}")),
+                 baseline_ms / st.mean_ms.max(1e-12));
+    }
+    Ok(())
+}

@@ -19,7 +19,8 @@ use anyhow::Result;
 use crate::asd::grs::grs_native;
 use crate::ddpm::NoiseStreams;
 use crate::math::vec_ops::lincomb_into;
-use crate::model::DenoiseModel;
+use crate::model::{DenoiseModel, ParallelModel};
+use crate::runtime::pool::PoolConfig;
 use crate::runtime::HloKernels;
 
 /// Which implementation computes the speculation chain and the GRS.
@@ -40,11 +41,24 @@ pub struct AsdConfig {
     /// fully-accepted window chains into the next proposal for free.
     pub eval_tail: bool,
     pub backend: KernelBackend,
+    /// Sharded execution of batched verify rounds on the global worker
+    /// pool; `pool_size <= 1` (default) keeps rounds inline. For
+    /// row-independent native models (analytic oracles, `NativeMlp`)
+    /// sharding never changes sampled bits — only measured round
+    /// latency. HLO-backed models pad batches to compiled sizes, so
+    /// sharding may perturb their f32 outputs within artifact tolerance
+    /// (see `model::parallel`).
+    pub pool: PoolConfig,
 }
 
 impl Default for AsdConfig {
     fn default() -> AsdConfig {
-        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native }
+        AsdConfig {
+            theta: 8,
+            eval_tail: true,
+            backend: KernelBackend::Native,
+            pool: PoolConfig::default(),
+        }
     }
 }
 
@@ -59,6 +73,11 @@ pub struct AsdStats {
     pub rejected: usize,
     /// batch size of each parallel round (for the latency model)
     pub round_batches: Vec<usize>,
+    /// shard occupancy of each parallel round (1 = ran inline; >1 =
+    /// that many worker-pool shards executed the round concurrently)
+    pub round_shards: Vec<usize>,
+    /// measured wall-clock seconds of each parallel round's model calls
+    pub round_latency_s: Vec<f64>,
 }
 
 impl AsdStats {
@@ -70,6 +89,38 @@ impl AsdStats {
     pub fn acceptance_rate(&self) -> f64 {
         let total = self.accepted + self.rejected;
         if total == 0 { 1.0 } else { self.accepted as f64 / total as f64 }
+    }
+
+    /// Mean measured round latency over all rounds (seconds).
+    pub fn mean_round_latency_s(&self) -> f64 {
+        if self.round_latency_s.is_empty() {
+            return 0.0;
+        }
+        self.round_latency_s.iter().sum::<f64>()
+            / self.round_latency_s.len() as f64
+    }
+
+    /// Mean measured latency over batched (verify) rounds only —
+    /// the rounds sharding can actually speed up (seconds).
+    pub fn mean_batched_round_latency_s(&self) -> f64 {
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for (i, &lat) in self.round_latency_s.iter().enumerate() {
+            if self.round_batches.get(i).copied().unwrap_or(1) > 1 {
+                total += lat;
+                n += 1;
+            }
+        }
+        if n == 0 { 0.0 } else { total / n as f64 }
+    }
+
+    /// Mean shard occupancy across rounds (1.0 = fully serial).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.round_shards.is_empty() {
+            return 1.0;
+        }
+        self.round_shards.iter().sum::<usize>() as f64
+            / self.round_shards.len() as f64
     }
 }
 
@@ -97,6 +148,9 @@ pub struct AsdEngine {
 
 impl AsdEngine {
     pub fn new(model: Arc<dyn DenoiseModel>, config: AsdConfig) -> AsdEngine {
+        // sharded verify rounds on the one global pool (no-op wrap when
+        // pool_size <= 1); sharding is bit-transparent to the sampler
+        let model = ParallelModel::wrap(model, config.pool);
         let d = model.dim();
         let k = model.k_steps();
         let c = model.cond_dim();
@@ -169,10 +223,14 @@ impl AsdEngine {
             match x0_cur.take() {
                 Some(v) => x0a.copy_from_slice(&v),
                 None => {
+                    let t_round = std::time::Instant::now();
                     self.model.denoise_one(&y, i_cur, cond, &mut x0a)?;
                     stats.model_calls += 1;
                     stats.parallel_rounds += 1;
                     stats.round_batches.push(1);
+                    stats.round_shards.push(1);
+                    stats.round_latency_s
+                        .push(t_round.elapsed().as_secs_f64());
                 }
             }
 
@@ -206,6 +264,7 @@ impl AsdEngine {
                             .copy_from_slice(cond);
                     }
                 }
+                let t_round = std::time::Instant::now();
                 self.model.denoise_batch(
                     &self.eval_in[..n_eval * d],
                     &self.eval_ts[..n_eval],
@@ -216,6 +275,8 @@ impl AsdEngine {
                 stats.model_calls += n_eval;
                 stats.parallel_rounds += 1;
                 stats.round_batches.push(n_eval);
+                stats.round_shards.push(self.config.pool.shards_for(n_eval));
+                stats.round_latency_s.push(t_round.elapsed().as_secs_f64());
             }
 
             // ---- verifier (Alg 2): sequential scan over parallel GRS ----
@@ -400,5 +461,50 @@ mod tests {
         let sum: usize = out.stats.round_batches.iter().sum();
         assert_eq!(sum, out.stats.model_calls);
         assert_eq!(out.stats.round_batches.len(), out.stats.parallel_rounds);
+    }
+
+    #[test]
+    fn round_stats_vectors_stay_aligned() {
+        let mut e = engine(6, 60);
+        let out = e.sample(11).unwrap();
+        let st = &out.stats;
+        assert_eq!(st.round_shards.len(), st.parallel_rounds);
+        assert_eq!(st.round_latency_s.len(), st.parallel_rounds);
+        // serial config: every round runs inline
+        assert!(st.round_shards.iter().all(|&s| s == 1));
+        assert!(st.round_latency_s.iter().all(|&l| l >= 0.0));
+        assert!(st.mean_round_latency_s() >= 0.0);
+        assert_eq!(st.mean_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn sharded_engine_same_bits_and_occupancy_reported() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
+        let mut serial = AsdEngine::new(
+            oracle.clone(),
+            AsdConfig { theta: 8, ..Default::default() });
+        let mut sharded = AsdEngine::new(
+            oracle,
+            AsdConfig {
+                theta: 8,
+                pool: crate::runtime::pool::PoolConfig {
+                    pool_size: 4,
+                    shard_min: 1,
+                },
+                ..Default::default()
+            });
+        for seed in 0..4 {
+            let a = serial.sample(seed).unwrap();
+            let b = sharded.sample(seed).unwrap();
+            let bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(bits(&a.y0), bits(&b.y0), "seed {seed}");
+            assert_eq!(a.stats.accepted, b.stats.accepted);
+            assert_eq!(a.stats.parallel_rounds, b.stats.parallel_rounds);
+            // batched verify rounds report multi-shard occupancy
+            assert!(b.stats.mean_occupancy() > 1.0,
+                    "occupancy {}", b.stats.mean_occupancy());
+        }
     }
 }

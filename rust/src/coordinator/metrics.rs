@@ -17,6 +17,10 @@ struct Inner {
     service: Welford,
     model_calls: u64,
     parallel_rounds: u64,
+    /// measured per-round model-call latency (ms) across ASD requests
+    round_latency: Welford,
+    /// worker-pool shard occupancy per round (1 = ran inline)
+    shard_occupancy: Welford,
 }
 
 #[derive(Debug, Default)]
@@ -36,6 +40,10 @@ pub struct MetricsSnapshot {
     pub p_like_max_service_ms: f64,
     pub model_calls: u64,
     pub parallel_rounds: u64,
+    /// rounds with measured latency recorded (ASD requests)
+    pub rounds_measured: u64,
+    pub mean_round_latency_ms: f64,
+    pub mean_shard_occupancy: f64,
 }
 
 impl Metrics {
@@ -63,6 +71,18 @@ impl Metrics {
         m.batched_requests += group_size as u64;
     }
 
+    /// Record a request's measured per-round latencies and shard
+    /// occupancies (from `AsdStats`).
+    pub fn on_round_stats(&self, latencies_s: &[f64], shards: &[usize]) {
+        let mut m = self.inner.lock().unwrap();
+        for &l in latencies_s {
+            m.round_latency.push(l * 1e3);
+        }
+        for &s in shards {
+            m.shard_occupancy.push(s as f64);
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -76,6 +96,13 @@ impl Metrics {
             p_like_max_service_ms: m.service.mean() + 2.0 * m.service.std(),
             model_calls: m.model_calls,
             parallel_rounds: m.parallel_rounds,
+            rounds_measured: m.round_latency.n as u64,
+            mean_round_latency_ms: m.round_latency.mean(),
+            mean_shard_occupancy: if m.shard_occupancy.n == 0 {
+                1.0
+            } else {
+                m.shard_occupancy.mean()
+            },
         }
     }
 }
@@ -100,5 +127,19 @@ mod tests {
         assert_eq!(s.parallel_rounds, 110);
         assert_eq!(s.batched_requests, 4);
         assert!((s.mean_service_ms - 15.0).abs() < 1e-9);
+        // no rounds recorded yet: occupancy defaults to serial
+        assert_eq!(s.rounds_measured, 0);
+        assert_eq!(s.mean_shard_occupancy, 1.0);
+    }
+
+    #[test]
+    fn round_stats_aggregate() {
+        let m = Metrics::default();
+        m.on_round_stats(&[0.001, 0.003], &[1, 4]);
+        m.on_round_stats(&[0.002], &[3]);
+        let s = m.snapshot();
+        assert_eq!(s.rounds_measured, 3);
+        assert!((s.mean_round_latency_ms - 2.0).abs() < 1e-9);
+        assert!((s.mean_shard_occupancy - 8.0 / 3.0).abs() < 1e-9);
     }
 }

@@ -14,6 +14,7 @@ use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
 use crate::ddpm::{BatchedSequentialSampler, SequentialSampler};
 use crate::model::DenoiseModel;
 use crate::picard::{PicardConfig, PicardSampler};
+use crate::runtime::pool::PoolConfig;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -21,11 +22,24 @@ pub struct ServerConfig {
     /// gang at most this many sequential requests into one lockstep batch
     pub max_batch: usize,
     pub enable_batching: bool,
+    /// sharding config for every batched denoise call served by this
+    /// coordinator (ASD verify rounds, Picard sweeps, lockstep gangs).
+    /// All workers share the ONE global pool — worker threads gate
+    /// concurrency at the request level, the pool at the row level, so
+    /// cores are never oversubscribed. Bit-transparency holds for
+    /// native row-independent models; HLO models may shift within f32
+    /// padding tolerance (see `model::parallel`).
+    pub pool: PoolConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { workers: 2, max_batch: 8, enable_batching: true }
+        ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            enable_batching: true,
+            pool: PoolConfig::default(),
+        }
     }
 }
 
@@ -160,9 +174,12 @@ fn serve_single(shared: &Shared, job: QueuedJob) {
     let req = &job.request;
     let outcome = match model_for(shared, &req.variant) {
         None => Err(format!("unknown model '{}'", req.variant)),
-        Some(model) => run_sampler(model, req),
+        Some(model) => run_sampler(model, req, shared.config.pool),
     };
     let service_s = t0.elapsed().as_secs_f64();
+    if let Ok((_, _, _, Some(st))) = &outcome {
+        shared.metrics.on_round_stats(&st.round_latency_s, &st.round_shards);
+    }
     let resp = match outcome {
         Ok((sample, calls, rounds, asd_stats)) => Response {
             id: req.id,
@@ -193,7 +210,8 @@ fn serve_single(shared: &Shared, job: QueuedJob) {
 type SampleOutcome =
     std::result::Result<(Vec<f64>, usize, usize, Option<crate::asd::AsdStats>), String>;
 
-fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request) -> SampleOutcome {
+fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
+               pool: PoolConfig) -> SampleOutcome {
     match req.sampler {
         SamplerSpec::Sequential => {
             let sampler = SequentialSampler::new(model);
@@ -205,7 +223,12 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request) -> SampleOutcome {
         SamplerSpec::Asd(theta) => {
             let mut engine = AsdEngine::new(
                 model,
-                AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+                AsdConfig {
+                    theta,
+                    eval_tail: true,
+                    backend: KernelBackend::Native,
+                    pool,
+                },
             );
             engine
                 .sample_cond(req.seed, &req.cond)
@@ -218,7 +241,8 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request) -> SampleOutcome {
         }
         SamplerSpec::Picard(window, tol) => {
             let sampler = PicardSampler::new(
-                model, PicardConfig { window, tol, max_sweeps: 1000 });
+                model,
+                PicardConfig { window, tol, max_sweeps: 1000, pool });
             sampler
                 .sample(req.seed, &req.cond)
                 .map(|(y, st)| (y, st.model_calls, st.parallel_rounds, None))
@@ -249,7 +273,8 @@ fn serve_gang(shared: &Shared, gang: Vec<QueuedJob>) {
             conds[r * c..(r + 1) * c].copy_from_slice(&job.request.cond);
         }
     }
-    let sampler = BatchedSequentialSampler::new(model);
+    let sampler =
+        BatchedSequentialSampler::with_pool(model, shared.config.pool);
     match sampler.sample_batch(&seeds, &conds) {
         Ok((ys, st)) => {
             let service_s = t0.elapsed().as_secs_f64();
@@ -306,6 +331,7 @@ mod tests {
             workers,
             max_batch: 4,
             enable_batching: true,
+            ..Default::default()
         });
         let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
         c.register_model("gmm", oracle);
@@ -386,5 +412,38 @@ mod tests {
         let (_, rx) = c.submit(req(SamplerSpec::Sequential, 9));
         rx.recv().unwrap();
         c.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn sharded_pool_serves_identical_samples_and_records_occupancy() {
+        let serve = |pool: PoolConfig| -> (Vec<f64>, f64) {
+            let c = Coordinator::new(ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                enable_batching: true,
+                pool,
+            });
+            let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
+            c.register_model("gmm", oracle);
+            let mut samples = Vec::new();
+            for seed in 0..4 {
+                let (_, rx) = c.submit(req(SamplerSpec::Asd(8), seed));
+                let r = rx.recv().unwrap();
+                assert!(r.error.is_none());
+                samples.extend(r.sample);
+            }
+            let occ = c.metrics().mean_shard_occupancy;
+            c.shutdown();
+            (samples, occ)
+        };
+        let (inline, occ1) = serve(PoolConfig::default());
+        let (sharded, occ4) =
+            serve(PoolConfig { pool_size: 4, shard_min: 1 });
+        let bits = |v: &[f64]| -> Vec<u64> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&inline), bits(&sharded));
+        assert!((occ1 - 1.0).abs() < 1e-12, "inline occupancy {occ1}");
+        assert!(occ4 > 1.0, "sharded occupancy {occ4}");
     }
 }

@@ -64,7 +64,12 @@ pub fn rollout_policy(policy: &DiffusionPolicy, sampler: SamplerKind,
     let mut engine = match sampler {
         SamplerKind::Asd(theta) => Some(AsdEngine::new(
             policy.model.clone(),
-            AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+            AsdConfig {
+                theta,
+                eval_tail: true,
+                backend: KernelBackend::Native,
+                ..Default::default()
+            },
         )),
         SamplerKind::Sequential => None,
     };

@@ -7,4 +7,5 @@ pub mod speedup;
 
 pub use latency::LatencyModel;
 pub use quality::{format_quality_table, QualityRow};
-pub use speedup::{format_rows, sweep_thetas, SpeedupRow};
+pub use speedup::{format_pool_rows, format_rows, outputs_bit_identical,
+                  sweep_pool_sizes, sweep_thetas, PoolRow, SpeedupRow};

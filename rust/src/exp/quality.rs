@@ -56,7 +56,12 @@ pub fn sample_asd(model: &Arc<dyn DenoiseModel>, theta: usize, n: usize,
                   seed0: u64, conds: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
     let mut engine = AsdEngine::new(
         model.clone(),
-        AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+        AsdConfig {
+            theta,
+            eval_tail: true,
+            backend: KernelBackend::Native,
+            ..Default::default()
+        },
     );
     let mut out = Vec::with_capacity(n);
     for i in 0..n {

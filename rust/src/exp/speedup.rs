@@ -1,4 +1,14 @@
-//! Theta-sweep speedup driver (Figures 2, 4, 5).
+//! Speedup drivers: the theta sweep (Figures 2, 4, 5) and the
+//! pool-size sweep (measured wall-clock vs algorithmic rounds).
+//!
+//! Two speedup columns, two different claims:
+//! * **algorithmic** — `K / parallel_rounds`, the Theorem 4 quantity;
+//!   counts rounds of (possibly batched) model calls, hardware-blind.
+//! * **measured** — real wall-clock against the same sweep at
+//!   `pool_size = 1`, with verify batches physically sharded across the
+//!   global worker pool. This is the column that proves rounds are real
+//!   work, not bookkeeping; outputs stay bit-identical across pool
+//!   sizes (checked via `bits_checksum`).
 
 use std::sync::Arc;
 
@@ -7,6 +17,7 @@ use anyhow::Result;
 use crate::asd::{AsdConfig, AsdEngine, KernelBackend};
 use crate::exp::latency::LatencyModel;
 use crate::model::DenoiseModel;
+use crate::runtime::pool::PoolConfig;
 
 #[derive(Debug, Clone)]
 pub struct SpeedupRow {
@@ -44,7 +55,12 @@ pub fn sweep_thetas(model: Arc<dyn DenoiseModel>, thetas: &[usize],
     for &theta in thetas {
         let mut engine = AsdEngine::new(
             model.clone(),
-            AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+            AsdConfig {
+                theta,
+                eval_tail: true,
+                backend: KernelBackend::Native,
+                ..Default::default()
+            },
         );
         let mut rounds = 0usize;
         let mut calls = 0usize;
@@ -77,6 +93,114 @@ pub fn sweep_thetas(model: Arc<dyn DenoiseModel>, thetas: &[usize],
         });
     }
     Ok(rows)
+}
+
+/// One pool-size sweep point: measured wall-clock next to the
+/// algorithmic rounds speedup, plus a bitwise output checksum proving
+/// sharding left every sample untouched.
+#[derive(Debug, Clone)]
+pub struct PoolRow {
+    pub pool_size: usize,
+    /// `K / mean parallel_rounds` (Theorem 4 quantity; pool-invariant)
+    pub algorithmic_speedup: f64,
+    /// measured wall-clock speedup vs the first (pool_size=1) row
+    pub measured_speedup: f64,
+    pub mean_wall_s: f64,
+    /// mean measured latency of batched (verify) rounds, milliseconds
+    pub mean_round_latency_ms: f64,
+    /// mean shard occupancy across rounds
+    pub mean_occupancy: f64,
+    /// FNV-1a over every output f64 bit pattern (order-sensitive)
+    pub bits_checksum: u64,
+}
+
+/// Sweep worker-pool sizes on a fixed ASD workload. `pool_sizes[0]`
+/// should be 1 — it is the measured baseline the other rows are divided
+/// by. Outputs must be bit-identical across rows (the engine consumes
+/// identical Philox streams; sharding only splits row execution), which
+/// callers can assert via [`outputs_bit_identical`].
+pub fn sweep_pool_sizes(model: Arc<dyn DenoiseModel>, pool_sizes: &[usize],
+                        shard_min: usize, theta: usize, n_samples: usize,
+                        seed0: u64) -> Result<Vec<PoolRow>> {
+    let k = model.k_steps();
+    let mut rows: Vec<PoolRow> = Vec::new();
+    let mut base_wall = 0.0;
+    for &pool_size in pool_sizes {
+        let mut engine = AsdEngine::new(
+            model.clone(),
+            AsdConfig {
+                theta,
+                eval_tail: true,
+                backend: KernelBackend::Native,
+                pool: PoolConfig { pool_size, shard_min },
+            },
+        );
+        // warmup: spin up pool workers / warm caches off the clock
+        engine.sample(seed0)?;
+        let mut wall = 0.0;
+        let mut rounds = 0usize;
+        let mut lat_s = 0.0;
+        let mut lat_samples = 0usize;
+        let mut occ = 0.0;
+        let mut checksum = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+        for s in 0..n_samples {
+            let out = engine.sample(seed0 + s as u64)?;
+            wall += out.wallclock_s;
+            rounds += out.stats.parallel_rounds;
+            if out.stats.round_batches.iter().any(|&b| b > 1) {
+                lat_s += out.stats.mean_batched_round_latency_s();
+                lat_samples += 1;
+            }
+            occ += out.stats.mean_occupancy();
+            for &v in &out.y0 {
+                checksum =
+                    (checksum ^ v.to_bits()).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        let n = n_samples.max(1) as f64;
+        let mean_wall = wall / n;
+        if rows.is_empty() {
+            base_wall = mean_wall;
+        }
+        rows.push(PoolRow {
+            pool_size,
+            algorithmic_speedup: k as f64 / (rounds as f64 / n).max(1e-12),
+            measured_speedup: base_wall / mean_wall.max(1e-12),
+            mean_wall_s: mean_wall,
+            mean_round_latency_ms: if lat_samples > 0 {
+                lat_s / lat_samples as f64 * 1e3
+            } else {
+                0.0
+            },
+            mean_occupancy: occ / n,
+            bits_checksum: checksum,
+        });
+    }
+    Ok(rows)
+}
+
+/// True when every sweep row produced bitwise-identical outputs.
+pub fn outputs_bit_identical(rows: &[PoolRow]) -> bool {
+    rows.windows(2).all(|w| w[0].bits_checksum == w[1].bits_checksum)
+}
+
+/// Render the pool sweep as a table: both speedup columns side by side.
+pub fn format_pool_rows(k: usize, rows: &[PoolRow]) -> String {
+    let base = rows.first().map(|r| r.pool_size).unwrap_or(1);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>12} {:>16} {:>14} {:>12} {:>10}\n",
+        "pool", "alg speedup", "wall x (meas.)", "round ms", "occupancy",
+        "wall ms"));
+    out.push_str(&format!("(K={k}; alg = K/rounds, hardware-blind; \
+                           meas. = wall-clock vs pool={base})\n"));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>12.2} {:>16.2} {:>14.3} {:>12.2} {:>10.1}\n",
+            r.pool_size, r.algorithmic_speedup, r.measured_speedup,
+            r.mean_round_latency_ms, r.mean_occupancy, r.mean_wall_s * 1e3));
+    }
+    out
 }
 
 /// Render rows as the paper-style table.
@@ -121,5 +245,24 @@ mod tests {
         assert!(rows[0].algorithmic_speedup <= 1.3);
         let table = format_rows(60, &rows);
         assert!(table.contains("ASD-inf"));
+    }
+
+    #[test]
+    fn pool_sweep_is_bit_identical_and_reports_both_columns() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 50, false);
+        let rows = sweep_pool_sizes(oracle, &[1, 2, 4], 1, 8, 3, 42).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(outputs_bit_identical(&rows),
+                "sharding changed sample bits: {rows:?}");
+        assert_eq!(rows[0].pool_size, 1);
+        assert!((rows[0].measured_speedup - 1.0).abs() < 1e-9);
+        // algorithmic column is pool-invariant by construction
+        for r in &rows[1..] {
+            assert!((r.algorithmic_speedup - rows[0].algorithmic_speedup)
+                        .abs() < 1e-9);
+        }
+        assert!(rows[2].mean_occupancy > rows[0].mean_occupancy);
+        let table = format_pool_rows(50, &rows);
+        assert!(table.contains("alg speedup") && table.contains("meas."));
     }
 }

@@ -6,6 +6,10 @@
 //!   sample   --model V [...]      draw samples, print stats
 //!   serve    --model V [...]      run the coordinator on a synthetic
 //!                                 request trace, report latency/throughput
+//!   pool     [...]                sweep worker-pool sizes on an analytic
+//!                                 GMM workload: measured wall-clock
+//!                                 speedup next to the algorithmic
+//!                                 rounds speedup (no artifacts needed)
 //!
 //! Examples live in examples/ (quickstart, image_generation,
 //! robot_control, serve, scaling_law).
@@ -31,6 +35,7 @@ fn main() {
         "info" => cmd_info(),
         "sample" => cmd_sample(&args),
         "serve" => cmd_serve(&args),
+        "pool" => cmd_pool(&args),
         _ => {
             print_help();
             Ok(())
@@ -51,7 +56,11 @@ fn print_help() {
          sample --model <v>         sample; options: --n 4 --theta 8\n    \
          [--sampler asd|ddpm] [--seed 0] [--native] [--hlo-kernels]\n  \
          serve  --model <v>         synthetic serving trace; options:\n    \
-         [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n"
+         [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n    \
+         [--pool 1] [--shard-min 2]\n  \
+         pool                       pool-size sweep on an analytic GMM;\n    \
+         [--d 64] [--components 96] [--k 150] [--theta 16] [--n 4]\n    \
+         [--pool-sizes 1,2,4,8] [--shard-min 2]\n"
     );
 }
 
@@ -113,8 +122,14 @@ fn cmd_sample(args: &Args) -> Result<()> {
             } else {
                 KernelBackend::Native
             };
-            let mut e = AsdEngine::new(model,
-                                       AsdConfig { theta, eval_tail: true, backend });
+            let mut e = AsdEngine::new(
+                model,
+                AsdConfig {
+                    theta,
+                    eval_tail: true,
+                    backend,
+                    ..Default::default()
+                });
             for i in 0..n {
                 let out = e.sample_cond(seed0 + i as u64, &cond)?;
                 println!(
@@ -140,6 +155,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", 2)?;
     let theta = args.get_usize("theta", 8)?;
     let asd_frac = args.get_f64("asd-frac", 0.5)?;
+    let pool_size = args.get_usize("pool", 1)?;
+    let shard_min = args.get_usize("shard-min", 2)?;
 
     let rt = Runtime::load_default()?;
     let model = rt.model(&variant)?;
@@ -149,6 +166,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers,
         max_batch: 8,
         enable_batching: true,
+        pool: asd::runtime::pool::PoolConfig { pool_size, shard_min },
     });
     coordinator.register_model(&variant, model);
 
@@ -194,5 +212,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.batched_groups
     );
     coordinator.shutdown();
+    Ok(())
+}
+
+/// Pool-size sweep on a heavy analytic GMM oracle — runs without any
+/// AOT artifacts, so it demonstrates the measured-vs-algorithmic
+/// speedup columns anywhere the crate builds.
+fn cmd_pool(args: &Args) -> Result<()> {
+    let d = args.get_usize("d", 64)?;
+    let components = args.get_usize("components", 96)?;
+    let k = args.get_usize("k", 150)?;
+    let theta = args.get_usize("theta", 16)?;
+    let n = args.get_usize("n", 4)?;
+    let shard_min = args.get_usize("shard-min", 2)?;
+    let pool_sizes = args.get_usize_list("pool-sizes", &[1, 2, 4, 8])?;
+    if pool_sizes.first() != Some(&1) {
+        eprintln!("note: the first --pool-sizes entry is the measured \
+                   baseline (usually 1)");
+    }
+
+    let gmm = asd::model::Gmm::random(d, components, 1.5, 7);
+    let model: Arc<dyn asd::model::DenoiseModel> =
+        asd::model::GmmDdpmOracle::new(gmm, k, false);
+    println!("pool sweep: analytic GMM d={d} components={components} K={k} \
+              theta={theta} samples={n} (pool threads: {})",
+             asd::runtime::pool::default_threads());
+    let rows = asd::exp::speedup::sweep_pool_sizes(
+        model, &pool_sizes, shard_min, theta, n, 100)?;
+    print!("{}", asd::exp::speedup::format_pool_rows(k, &rows));
+    println!("outputs bit-identical across pool sizes: {}",
+             asd::exp::speedup::outputs_bit_identical(&rows));
     Ok(())
 }

@@ -73,6 +73,13 @@ pub fn mean_axis0(rows: &[Vec<f64>]) -> Vec<f64> {
     m
 }
 
+/// Raw IEEE-754 bit patterns of a slice — the currency of the
+/// bit-exactness tests (sharded execution must reproduce serial
+/// output exactly; see runtime::pool).
+pub fn to_bits_vec(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
 /// Reflection of `xi` along `v` (Alg 3 line 6): xi - 2 v <v,xi>/||v||^2.
 pub fn reflect_into(out: &mut [f64], xi: &[f64], v: &[f64]) {
     let v_sq = norm_sq(v).max(1e-300);

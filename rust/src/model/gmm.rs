@@ -59,6 +59,21 @@ impl Gmm {
         Gmm::new(means, vec![0.12; c], vec![1.0 / c as f64; c])
     }
 
+    /// Random isotropic GMM in R^d — the heavy synthetic workload for
+    /// the parallel-execution benches and tests: the posterior-mean cost
+    /// scales with `components * d`, so wide mixtures make per-row
+    /// denoise work big enough for sharding to pay off.
+    pub fn random(d: usize, components: usize, spread: f64, seed: u64) -> Gmm {
+        let mut rng = Philox::new(seed, 77);
+        let means: Vec<Vec<f64>> = (0..components)
+            .map(|_| (0..d).map(|_| spread * rng.normal()).collect())
+            .collect();
+        let sigmas: Vec<f64> =
+            (0..components).map(|_| 0.15 + 0.1 * rng.uniform()).collect();
+        let weights = vec![1.0 / components as f64; components];
+        Gmm::new(means, sigmas, weights)
+    }
+
     pub fn n_components(&self) -> usize {
         self.weights.len()
     }

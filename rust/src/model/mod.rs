@@ -9,10 +9,14 @@
 //! * [`targets`] — ground-truth target distributions mirrored from
 //!   python/compile/targets.py (samplers + Bayes class posteriors for
 //!   the quality metrics).
+//! * [`parallel`] — sharded-execution decorator running `denoise_batch`
+//!   rows concurrently on the global worker pool (bit-identical
+//!   outputs; see rust/src/runtime/pool.rs).
 
 pub mod gmm;
 pub mod manifest;
 pub mod mlp;
+pub mod parallel;
 pub mod targets;
 
 use anyhow::Result;
@@ -20,6 +24,7 @@ use anyhow::Result;
 pub use gmm::{Gmm, GmmDdpmOracle, GmmSlOracle};
 pub use manifest::{Manifest, TargetSpec, VariantInfo};
 pub use mlp::NativeMlp;
+pub use parallel::ParallelModel;
 
 use crate::schedule::DdpmSchedule;
 

@@ -1,0 +1,203 @@
+//! `ParallelModel` — sharded-execution decorator over any
+//! [`DenoiseModel`].
+//!
+//! Wraps an inner model and splits every `denoise_batch(n, ...)` call
+//! into contiguous per-shard row ranges executed concurrently on the
+//! process-global worker pool ([`crate::runtime::pool::global`]). Each
+//! row's computation happens entirely inside the inner model exactly as
+//! it would unsharded, so outputs are **bit-identical for every
+//! `pool_size`** — sharding changes wall-clock, never samples (the
+//! float summation order per sample is untouched).
+//!
+//! HLO-backed models note: `HloModel` pads batches up to the nearest
+//! compiled size, so sharding changes the padding pattern and may
+//! perturb f32 results within artifact tolerance. The bit-exactness
+//! guarantee is for row-independent native models (the analytic oracles
+//! and `NativeMlp`); parity tests pin both.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::DenoiseModel;
+use crate::runtime::pool::{self, PoolConfig};
+use crate::schedule::DdpmSchedule;
+
+/// Raw output pointer smuggled into `Fn` shards; sound because shards
+/// write disjoint row ranges and the pool joins before the call returns.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+pub struct ParallelModel {
+    inner: Arc<dyn DenoiseModel>,
+    pub pool: PoolConfig,
+}
+
+impl ParallelModel {
+    pub fn new(inner: Arc<dyn DenoiseModel>, pool: PoolConfig)
+               -> Arc<ParallelModel> {
+        Arc::new(ParallelModel { inner, pool })
+    }
+
+    /// Wrap only when the config actually shards; `pool_size <= 1`
+    /// returns the inner model untouched (zero overhead).
+    pub fn wrap(inner: Arc<dyn DenoiseModel>, pool: PoolConfig)
+                -> Arc<dyn DenoiseModel> {
+        if pool.parallel() {
+            Arc::new(ParallelModel { inner, pool })
+        } else {
+            inner
+        }
+    }
+
+    /// Shard occupancy an `n`-row call would get.
+    pub fn occupancy(&self, n: usize) -> usize {
+        self.pool.shards_for(n)
+    }
+}
+
+impl DenoiseModel for ParallelModel {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn cond_dim(&self) -> usize {
+        self.inner.cond_dim()
+    }
+
+    fn k_steps(&self) -> usize {
+        self.inner.k_steps()
+    }
+
+    fn schedule(&self) -> &DdpmSchedule {
+        self.inner.schedule()
+    }
+
+    fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                     out: &mut [f64]) -> Result<()> {
+        let shards = self.pool.shards_for(n);
+        if shards <= 1 {
+            return self.inner.denoise_batch(ys, ts, cond, n, out);
+        }
+        let d = self.inner.dim();
+        let c = self.inner.cond_dim();
+        anyhow::ensure!(ys.len() == n * d && ts.len() == n
+                            && cond.len() == n * c && out.len() >= n * d,
+                        "parallel denoise_batch shape mismatch: n={n} d={d} \
+                         c={c} ys={} ts={} cond={} out={}",
+                        ys.len(), ts.len(), cond.len(), out.len());
+        let first_err: std::sync::Mutex<Option<anyhow::Error>> =
+            std::sync::Mutex::new(None);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let inner = &self.inner;
+        pool::global().run_sharded(n, shards, |start, end| {
+            let rows = end - start;
+            // SAFETY: shard ranges are disjoint and the pool joins
+            // before `out` is touched again — no aliasing.
+            let shard_out = unsafe {
+                std::slice::from_raw_parts_mut(
+                    out_ptr.0.add(start * d), rows * d)
+            };
+            if let Err(e) = inner.denoise_batch(
+                &ys[start * d..end * d],
+                &ts[start..end],
+                &cond[start * c..end * c],
+                rows,
+                shard_out,
+            ) {
+                let mut guard = first_err.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some(e);
+                }
+            }
+        });
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    fn oracle(k: usize) -> Arc<GmmDdpmOracle> {
+        GmmDdpmOracle::new(Gmm::circle_2d(), k, false)
+    }
+
+    #[test]
+    fn wrap_is_identity_for_pool_size_one() {
+        let base = oracle(20);
+        let wrapped = ParallelModel::wrap(base.clone(), PoolConfig::default());
+        // same underlying allocation: no decorator layer was added
+        assert_eq!(Arc::as_ptr(&wrapped) as *const (),
+                   Arc::as_ptr(&base) as *const ());
+    }
+
+    #[test]
+    fn sharded_matches_inline_bitwise() {
+        let base = oracle(30);
+        let par = ParallelModel::new(
+            base.clone(), PoolConfig { pool_size: 4, shard_min: 1 });
+        for n in [1usize, 3, 4, 5, 11] {
+            let ys: Vec<f64> =
+                (0..n * 2).map(|i| (i as f64 * 0.37).sin()).collect();
+            let ts: Vec<f64> = (0..n).map(|r| (1 + r % 30) as f64).collect();
+            let mut want = vec![0.0; n * 2];
+            base.denoise_batch(&ys, &ts, &[], n, &mut want).unwrap();
+            let mut got = vec![0.0; n * 2];
+            par.denoise_batch(&ys, &ts, &[], n, &mut got).unwrap();
+            let want_bits: Vec<u64> =
+                want.iter().map(|v| v.to_bits()).collect();
+            let got_bits: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want_bits, got_bits, "n={n}");
+        }
+    }
+
+    #[test]
+    fn delegates_model_metadata() {
+        let base = oracle(25);
+        let par = ParallelModel::new(base.clone(), PoolConfig::sharded(4));
+        assert_eq!(par.dim(), base.dim());
+        assert_eq!(par.cond_dim(), base.cond_dim());
+        assert_eq!(par.k_steps(), 25);
+        assert_eq!(par.schedule().k_steps, 25);
+        assert_eq!(par.occupancy(1), 1);
+        assert!(par.occupancy(16) > 1);
+    }
+
+    #[test]
+    fn shard_errors_surface() {
+        struct Failing(DdpmSchedule);
+        impl DenoiseModel for Failing {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn cond_dim(&self) -> usize {
+                0
+            }
+            fn k_steps(&self) -> usize {
+                self.0.k_steps
+            }
+            fn schedule(&self) -> &DdpmSchedule {
+                &self.0
+            }
+            fn denoise_batch(&self, _ys: &[f64], ts: &[f64], _cond: &[f64],
+                             _n: usize, _out: &mut [f64]) -> Result<()> {
+                anyhow::ensure!(ts[0] > 2.0, "injected failure at t={}", ts[0]);
+                Ok(())
+            }
+        }
+        let par = ParallelModel::new(
+            Arc::new(Failing(DdpmSchedule::new(10))),
+            PoolConfig { pool_size: 4, shard_min: 1 });
+        let ts: Vec<f64> = (1..=8).map(|t| t as f64).collect();
+        let ys = vec![0.0; 16];
+        let mut out = vec![0.0; 16];
+        let err = par.denoise_batch(&ys, &ts, &[], 8, &mut out).unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err:#}");
+    }
+}

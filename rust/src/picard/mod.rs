@@ -18,7 +18,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::ddpm::NoiseStreams;
-use crate::model::DenoiseModel;
+use crate::model::{DenoiseModel, ParallelModel};
+use crate::runtime::pool::PoolConfig;
 
 pub struct PicardConfig {
     /// sliding window size (paper's "parallel degree")
@@ -27,11 +28,19 @@ pub struct PicardConfig {
     pub tol: f64,
     /// hard cap on sweeps per window position (safety)
     pub max_sweeps: usize,
+    /// sharded execution of each window sweep's batched model call on
+    /// the global worker pool (bit-transparent; default inline)
+    pub pool: PoolConfig,
 }
 
 impl Default for PicardConfig {
     fn default() -> PicardConfig {
-        PicardConfig { window: 16, tol: 1e-3, max_sweeps: 1000 }
+        PicardConfig {
+            window: 16,
+            tol: 1e-3,
+            max_sweeps: 1000,
+            pool: PoolConfig::default(),
+        }
     }
 }
 
@@ -49,6 +58,7 @@ pub struct PicardSampler {
 
 impl PicardSampler {
     pub fn new(model: Arc<dyn DenoiseModel>, config: PicardConfig) -> Self {
+        let model = ParallelModel::wrap(model, config.pool);
         PicardSampler { model, config }
     }
 
@@ -193,7 +203,8 @@ mod tests {
         let seq = SequentialSampler::new(oracle.clone());
         let pic = PicardSampler::new(
             oracle,
-            PicardConfig { window: 8, tol: 1e-10, max_sweeps: 500 });
+            PicardConfig { window: 8, tol: 1e-10, max_sweeps: 500,
+                           ..Default::default() });
         for seed in 0..5 {
             let noise = NoiseStreams::draw(seed, 0, 40, 2);
             let (a, _) = seq.sample_with_noise(&noise, &[]).unwrap();
@@ -210,10 +221,12 @@ mod tests {
         let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
         let tight = PicardSampler::new(
             oracle.clone(),
-            PicardConfig { window: 12, tol: 1e-9, max_sweeps: 500 });
+            PicardConfig { window: 12, tol: 1e-9, max_sweeps: 500,
+                           ..Default::default() });
         let loose = PicardSampler::new(
             oracle,
-            PicardConfig { window: 12, tol: 0.05, max_sweeps: 500 });
+            PicardConfig { window: 12, tol: 0.05, max_sweeps: 500,
+                           ..Default::default() });
         let mut rounds_tight = 0;
         let mut rounds_loose = 0;
         let mut err = 0.0;
@@ -233,7 +246,8 @@ mod tests {
     fn rounds_bounded_by_k_times_sweeps() {
         let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
         let pic = PicardSampler::new(
-            oracle, PicardConfig { window: 6, tol: 1e-6, max_sweeps: 100 });
+            oracle, PicardConfig { window: 6, tol: 1e-6, max_sweeps: 100,
+                                   ..Default::default() });
         let (_, stats) = pic.sample(3, &[]).unwrap();
         assert!(stats.parallel_rounds >= 5); // at least one sweep per window
         assert!(stats.model_calls <= 30 * 100);

@@ -12,6 +12,7 @@ pub mod device;
 pub mod hlo_model;
 pub mod host;
 pub mod kernels;
+pub mod pool;
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -22,6 +23,7 @@ pub use device::{DeviceHandle, DeviceStats, ExeId, WeightsId};
 pub use hlo_model::HloModel;
 pub use host::HostArray;
 pub use kernels::HloKernels;
+pub use pool::{PoolConfig, ThreadPool};
 
 use crate::model::Manifest;
 

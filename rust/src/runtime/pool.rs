@@ -1,0 +1,407 @@
+//! Sharded worker-pool execution substrate.
+//!
+//! Until this module existed, every "parallel round" in the repo was
+//! bookkeeping: the ASD verify batch, the Picard window sweep and the
+//! lockstep sequential gang all executed their `denoise_batch` rows
+//! serially on the calling thread, so `parallel_rounds` had no physical
+//! counterpart and wall-clock never tracked Theorem 4. This pool makes
+//! rounds *real*: a batched call is split into contiguous per-shard row
+//! ranges that execute concurrently on a set of persistent worker
+//! threads (std-only: `std::thread` + `Mutex`/`Condvar`, in the spirit
+//! of the mini-rayon registry but self-contained).
+//!
+//! Design rules:
+//! * **One global pool.** All sharded execution in the process runs on
+//!   [`global()`], sized once from `ASD_POOL_THREADS` or the machine's
+//!   available parallelism. Config knobs ([`PoolConfig::pool_size`])
+//!   control how many *shards* a call is split into, never how many OS
+//!   threads exist — so an ASD engine, a Picard sampler and the serving
+//!   coordinator can all be "parallel" without oversubscribing cores.
+//! * **Caller participates.** `run_sharded` enqueues helper entries and
+//!   then works shards itself, so it completes even if every worker is
+//!   busy (or the pool has a single thread). Nested calls from inside a
+//!   worker are deadlock-free for the same reason — the submitting
+//!   thread drains its own shards; nested shards still queue on the
+//!   same fixed worker set, so the OS thread count never grows.
+//! * **Determinism.** Shards are contiguous row ranges executed by the
+//!   wrapped model row-by-row; no cross-row reduction ever moves between
+//!   shards, so outputs are bit-identical for every `pool_size`
+//!   (enforced by tests/test_parallel_determinism.rs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Sharding knobs threaded through `AsdConfig`, `PicardConfig`,
+/// `BatchedSequentialSampler` and `ServerConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Maximum shards a batched call is split into; 0/1 = inline
+    /// (serial) execution, the default.
+    pub pool_size: usize,
+    /// Minimum rows per shard: tiny batches stay inline so sharding
+    /// overhead never dominates cheap rounds.
+    pub shard_min: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { pool_size: 1, shard_min: 2 }
+    }
+}
+
+impl PoolConfig {
+    /// Shorthand for `pool_size` shards with the default `shard_min`.
+    pub fn sharded(pool_size: usize) -> PoolConfig {
+        PoolConfig { pool_size, ..Default::default() }
+    }
+
+    /// Whether this config ever shards.
+    pub fn parallel(&self) -> bool {
+        self.pool_size > 1
+    }
+
+    /// Shard count for an `n`-row batch: capped by `pool_size` and by
+    /// `ceil(n / shard_min)`, so shards carry `shard_min` rows *on
+    /// average* (the last, smallest shard may carry fewer); batches of
+    /// `shard_min` rows or less stay inline (returns 1).
+    pub fn shards_for(&self, n: usize) -> usize {
+        if self.pool_size <= 1 || n <= self.shard_min.max(1) {
+            return 1;
+        }
+        self.pool_size.min(n.div_ceil(self.shard_min.max(1))).max(1)
+    }
+}
+
+/// One sharded call: a type-erased borrowed closure plus claim/latch
+/// state. The closure pointer is only dereferenced while `run_sharded`
+/// is blocked waiting on `done`, which keeps the borrow alive.
+struct Job {
+    f: *const (dyn Fn(usize, usize) + Sync),
+    ranges: Vec<(usize, usize)>,
+    /// next unclaimed shard index
+    next: AtomicUsize,
+    /// shards not yet finished; the thread that finishes the last one
+    /// opens the latch
+    pending: AtomicUsize,
+    poisoned: AtomicBool,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+// SAFETY: `f` points at a `Sync` closure that outlives the job (the
+// submitting thread blocks until `done`); all other state is atomics or
+// lock-guarded.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and execute shards until none remain. Runs on workers and
+    /// on the submitting thread alike.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.ranges.len() {
+                return;
+            }
+            let (start, end) = self.ranges[i];
+            // SAFETY: see the `Send`/`Sync` impls above.
+            let f = unsafe { &*self.f };
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| f(start, end)));
+            if outcome.is_err() {
+                self.poisoned.store(true, Ordering::Relaxed);
+            }
+            // AcqRel: the final decrement observes every shard's writes
+            // through the RMW chain before opening the latch.
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut done = self.done.lock().unwrap();
+                *done = true;
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed set of persistent worker threads executing sharded calls.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` worker threads (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for w in 0..size {
+            let s = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("asd-pool-{w}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Execute `f(start, end)` over `shards` contiguous, balanced,
+    /// disjoint sub-ranges of `0..n`, concurrently on the pool (the
+    /// caller works too). Blocks until every shard finished; panics if
+    /// any shard panicked. Returns the effective shard count.
+    pub fn run_sharded<F: Fn(usize, usize) + Sync>(&self, n: usize,
+                                                   shards: usize, f: F)
+                                                   -> usize {
+        let shards = shards.min(n).max(1);
+        if n == 0 {
+            return 0;
+        }
+        if shards == 1 {
+            f(0, n);
+            return 1;
+        }
+        let base = n / shards;
+        let rem = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for i in 0..shards {
+            let len = base + usize::from(i < rem);
+            ranges.push((start, start + len));
+            start += len;
+        }
+        // Erase the closure's lifetime: the job cannot outlive this
+        // frame because we block on the latch before returning.
+        let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        let f_ptr: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let job = Arc::new(Job {
+            f: f_ptr as *const _,
+            ranges,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(shards),
+            poisoned: AtomicBool::new(false),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            // one helper entry per shard the caller won't take itself,
+            // capped by the worker count — extra entries would only be
+            // popped, see all shards claimed, and go back to sleep
+            let helpers = (shards - 1).min(self.size);
+            for _ in 0..helpers {
+                q.push_back(job.clone());
+            }
+        }
+        self.shared.cv.notify_all();
+        job.work();
+        let mut done = job.done.lock().unwrap();
+        while !*done {
+            done = job.cv.wait(done).unwrap();
+        }
+        if job.poisoned.load(Ordering::Relaxed) {
+            panic!("a pool shard panicked");
+        }
+        shards
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            // hold the queue lock while flipping the flag: a worker that
+            // just observed shutdown=false under this lock is serialized
+            // against us, so it either re-checks and exits or is already
+            // parked in cv.wait when notify_all fires — no lost wakeup
+            let _guard = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job.work();
+    }
+}
+
+/// Worker-thread count for the global pool: `ASD_POOL_THREADS` if set,
+/// else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ASD_POOL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide pool (the "one global pool" rule). Initialized
+/// lazily on first sharded call; never torn down.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for n in [1usize, 2, 3, 5, 7, 16, 33] {
+            for shards in [1usize, 2, 3, 4, 8, 40] {
+                let hits: Vec<AtomicUsize> =
+                    (0..n).map(|_| AtomicUsize::new(0)).collect();
+                let eff = pool.run_sharded(n, shards, |s, e| {
+                    for i in s..e {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(eff >= 1 && eff <= shards.max(1).min(n));
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1,
+                               "index {i} (n={n} shards={shards})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_items_is_a_noop() {
+        let pool = ThreadPool::new(2);
+        let eff = pool.run_sharded(0, 4, |_, _| panic!("must not run"));
+        assert_eq!(eff, 0);
+    }
+
+    #[test]
+    fn results_accumulate_across_shards() {
+        let pool = ThreadPool::new(4);
+        let n = 1000usize;
+        let total = AtomicU64::new(0);
+        pool.run_sharded(n, 4, |s, e| {
+            let part: u64 = (s..e).map(|i| i as u64).sum();
+            total.fetch_add(part, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed),
+                   (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn shard_writes_are_visible_to_caller() {
+        let pool = ThreadPool::new(4);
+        let n = 64usize;
+        let mut out = vec![0.0f64; n];
+        let ptr = out.as_mut_ptr() as usize;
+        pool.run_sharded(n, 8, |s, e| {
+            // disjoint ranges: aliasing-free by construction
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut((ptr as *mut f64).add(s), e - s)
+            };
+            for (off, v) in slice.iter_mut().enumerate() {
+                *v = (s + off) as f64 * 2.0;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f64 * 2.0);
+        }
+    }
+
+    #[test]
+    fn nested_calls_complete() {
+        // a shard issuing its own sharded call must not deadlock: the
+        // inner caller participates and drains its own shards
+        let pool = global();
+        let outer_hits = AtomicUsize::new(0);
+        pool.run_sharded(4, 2, |s, e| {
+            for _ in s..e {
+                let inner_hits = AtomicUsize::new(0);
+                global().run_sharded(6, 3, |is, ie| {
+                    inner_hits.fetch_add(ie - is, Ordering::Relaxed);
+                });
+                assert_eq!(inner_hits.load(Ordering::Relaxed), 6);
+                outer_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(outer_hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool shard panicked")]
+    fn shard_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        pool.run_sharded(8, 4, |s, _| {
+            if s == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = ThreadPool::new(2);
+        let got_panic = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run_sharded(8, 4, |_, _| panic!("boom"));
+            }))
+            .is_err();
+        assert!(got_panic);
+        // workers caught the panic and still serve
+        let count = AtomicUsize::new(0);
+        pool.run_sharded(10, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn shards_for_caps_by_batch_and_min() {
+        let cfg = PoolConfig { pool_size: 8, shard_min: 2 };
+        assert_eq!(cfg.shards_for(0), 1);
+        assert_eq!(cfg.shards_for(1), 1);
+        assert_eq!(cfg.shards_for(2), 1); // n <= shard_min stays inline
+        assert_eq!(cfg.shards_for(3), 2);
+        assert_eq!(cfg.shards_for(7), 4);
+        assert_eq!(cfg.shards_for(100), 8);
+        let inline = PoolConfig::default();
+        assert_eq!(inline.shards_for(100), 1);
+        assert!(!inline.parallel());
+        assert!(PoolConfig::sharded(4).parallel());
+    }
+}

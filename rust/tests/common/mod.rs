@@ -1,4 +1,11 @@
 //! Shared helpers for the integration tests.
+//!
+//! Hardening rule: tests that need the AOT artifacts (golden.json,
+//! manifest + weights) or a live PJRT backend must *skip* — not fail —
+//! when those are absent. The artifacts are produced by the python L2
+//! pipeline (`make artifacts`, needs JAX) and the PJRT backend by the
+//! real `xla` bindings; neither exists in a pure-rust checkout, where
+//! the suite still exercises every native substrate.
 
 use std::path::PathBuf;
 use std::sync::OnceLock;
@@ -6,27 +13,61 @@ use std::sync::OnceLock;
 use asd::runtime::Runtime;
 use asd::util::Json;
 
+#[allow(dead_code)]
 pub fn artifacts_dir() -> PathBuf {
     asd::artifacts_dir()
 }
 
-/// Golden traces exported by aot.py (env traces, model forwards,
-/// schedule spots, ASD trace).
+/// Golden traces exported by aot.py, or `None` when absent (callers
+/// early-return to skip). Logged once per test binary.
+#[allow(dead_code)]
+pub fn try_golden() -> Option<&'static Json> {
+    static GOLDEN: OnceLock<Option<Json>> = OnceLock::new();
+    GOLDEN
+        .get_or_init(|| {
+            let path = artifacts_dir().join("golden.json");
+            match Json::parse_file(&path) {
+                Ok(j) => Some(j),
+                Err(e) => {
+                    eprintln!("skipping golden-trace tests: {e:#} \
+                               (run `make artifacts` to enable)");
+                    None
+                }
+            }
+        })
+        .as_ref()
+}
+
+/// Golden traces; only call after a successful [`try_golden`] guard.
+#[allow(dead_code)]
 pub fn golden() -> &'static Json {
-    static GOLDEN: OnceLock<Json> = OnceLock::new();
-    GOLDEN.get_or_init(|| {
-        Json::parse_file(&artifacts_dir().join("golden.json"))
-            .expect("golden.json — run `make artifacts` first")
-    })
+    try_golden().expect("golden.json — run `make artifacts` first")
 }
 
 /// One shared Runtime per test binary (PJRT init is expensive; the
-/// device thread serializes executions anyway).
-pub fn runtime() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| Runtime::load_default().expect("runtime"))
+/// device thread serializes executions anyway), or `None` when the
+/// artifacts or the PJRT backend are unavailable.
+#[allow(dead_code)]
+pub fn try_runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT-dependent tests: {e:#}");
+            None
+        }
+    })
+    .as_ref()
 }
 
+/// The shared Runtime; only call after a successful [`try_runtime`]
+/// guard.
+#[allow(dead_code)]
+pub fn runtime() -> &'static Runtime {
+    try_runtime().expect("runtime unavailable — artifacts/PJRT missing")
+}
+
+#[allow(dead_code)]
 pub fn approx_eq_slice(a: &[f64], b: &[f64], tol: f64, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length");
     for (i, (x, y)) in a.iter().zip(b).enumerate() {

@@ -6,7 +6,7 @@ mod common;
 
 use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
 use asd::ddpm::{NoiseStreams, SequentialSampler};
-use common::{approx_eq_slice, golden, runtime};
+use common::{approx_eq_slice, golden};
 
 fn golden_noise() -> (NoiseStreams, &'static asd::util::Json) {
     let g = golden().get("asd_gmm2d").unwrap();
@@ -19,7 +19,10 @@ fn golden_noise() -> (NoiseStreams, &'static asd::util::Json) {
 
 #[test]
 fn sequential_matches_python_reference() {
-    let rt = runtime();
+    let Some(rt) = common::try_runtime() else { return };
+    if common::try_golden().is_none() {
+        return;
+    }
     let model = rt.model("gmm2d").unwrap();
     let (noise, g) = golden_noise();
     let sampler = SequentialSampler::new(model);
@@ -31,7 +34,10 @@ fn sequential_matches_python_reference() {
 
 #[test]
 fn asd_traces_match_python_reference() {
-    let rt = runtime();
+    let Some(rt) = common::try_runtime() else { return };
+    if common::try_golden().is_none() {
+        return;
+    }
     let model = rt.model("gmm2d").unwrap();
     let (noise, g) = golden_noise();
     for theta_key in ["4", "8", "0"] {
@@ -39,7 +45,12 @@ fn asd_traces_match_python_reference() {
         let theta: usize = theta_key.parse().unwrap();
         let mut engine = AsdEngine::new(
             model.clone(),
-            AsdConfig { theta, eval_tail: true, backend: KernelBackend::Native },
+            AsdConfig {
+                theta,
+                eval_tail: true,
+                backend: KernelBackend::Native,
+                ..Default::default()
+            },
         );
         let out = engine.sample_with_noise(&noise, &[]).unwrap();
         let want_y0 = tr.get("y0").unwrap().as_f64_vec().unwrap();
@@ -61,12 +72,20 @@ fn asd_traces_match_python_reference() {
 
 #[test]
 fn asd_hlo_kernel_backend_matches_native_backend() {
-    let rt = runtime();
+    let Some(rt) = common::try_runtime() else { return };
+    if common::try_golden().is_none() {
+        return;
+    }
     let model = rt.model("gmm2d").unwrap();
     let (noise, _) = golden_noise();
     let mut native = AsdEngine::new(
         model.clone(),
-        AsdConfig { theta: 8, eval_tail: true, backend: KernelBackend::Native },
+        AsdConfig {
+            theta: 8,
+            eval_tail: true,
+            backend: KernelBackend::Native,
+            ..Default::default()
+        },
     );
     let mut hlo = AsdEngine::new(
         model.clone(),
@@ -74,6 +93,7 @@ fn asd_hlo_kernel_backend_matches_native_backend() {
             theta: 8,
             eval_tail: true,
             backend: KernelBackend::Hlo(rt.kernels(model.info.d).unwrap()),
+            ..Default::default()
         },
     );
     let out_n = native.sample_with_noise(&noise, &[]).unwrap();

@@ -12,6 +12,7 @@ fn coordinator() -> Coordinator {
         workers: 2,
         max_batch: 4,
         enable_batching: true,
+        ..Default::default()
     });
     c.register_model("gmm2d", rt.model("gmm2d").unwrap());
     c
@@ -23,6 +24,9 @@ fn req(sampler: SamplerSpec, seed: u64) -> Request {
 
 #[test]
 fn mixed_workload_completes() {
+    if common::try_runtime().is_none() {
+        return;
+    }
     let c = coordinator();
     let mut rxs = Vec::new();
     for i in 0..12u64 {
@@ -52,6 +56,9 @@ fn mixed_workload_completes() {
 
 #[test]
 fn asd_requests_report_fewer_rounds_than_sequential() {
+    if common::try_runtime().is_none() {
+        return;
+    }
     let c = coordinator();
     let (_, rx_seq) = c.submit(req(SamplerSpec::Sequential, 77));
     let (_, rx_asd) = c.submit(req(SamplerSpec::Asd(8), 77));
@@ -67,6 +74,9 @@ fn asd_requests_report_fewer_rounds_than_sequential() {
 
 #[test]
 fn unknown_variant_fails_without_poisoning_the_pool() {
+    if common::try_runtime().is_none() {
+        return;
+    }
     let c = coordinator();
     let (_, bad) = c.submit(Request {
         id: 0,

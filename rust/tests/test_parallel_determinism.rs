@@ -1,0 +1,185 @@
+//! Sharded execution must never change a sampled bit.
+//!
+//! The worker pool splits batched denoise calls into contiguous row
+//! shards; each row's float summation order stays inside the inner
+//! model, so for any `pool_size` the ASD engine, the Picard sampler and
+//! the lockstep batched sampler must reproduce the `pool_size = 1`
+//! outputs exactly (same Philox streams, same bits) — together with all
+//! accept/reject bookkeeping.
+
+use std::sync::Arc;
+
+use asd::asd::{AsdConfig, AsdEngine};
+use asd::ddpm::{BatchedSequentialSampler, NoiseStreams, SequentialSampler};
+use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle};
+use asd::picard::{PicardConfig, PicardSampler};
+use asd::runtime::pool::PoolConfig;
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+
+fn heavy_oracle(d: usize, components: usize, k: usize)
+                -> Arc<dyn DenoiseModel> {
+    GmmDdpmOracle::new(Gmm::random(d, components, 1.5, 3), k, false)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    asd::math::vec_ops::to_bits_vec(v)
+}
+
+#[test]
+fn asd_bit_identical_across_pool_sizes() {
+    let model = heavy_oracle(16, 12, 80);
+    let mut reference: Option<(Vec<u64>, usize, usize, usize)> = None;
+    for pool_size in POOL_SIZES {
+        let mut engine = AsdEngine::new(
+            model.clone(),
+            AsdConfig {
+                theta: 8,
+                pool: PoolConfig { pool_size, shard_min: 1 },
+                ..Default::default()
+            });
+        let mut all_bits = Vec::new();
+        let mut rounds = 0usize;
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        for seed in 0..6u64 {
+            let out = engine.sample(seed).unwrap();
+            all_bits.extend(bits(&out.y0));
+            rounds += out.stats.parallel_rounds;
+            accepted += out.stats.accepted;
+            rejected += out.stats.rejected;
+            // bookkeeping invariants hold under sharding too
+            assert_eq!(out.stats.round_shards.len(),
+                       out.stats.parallel_rounds);
+            assert_eq!(out.stats.round_latency_s.len(),
+                       out.stats.parallel_rounds);
+        }
+        match &reference {
+            None => reference = Some((all_bits, rounds, accepted, rejected)),
+            Some((b, r, a, j)) => {
+                assert_eq!(&all_bits, b,
+                           "pool_size={pool_size} changed output bits");
+                assert_eq!(rounds, *r, "pool_size={pool_size} rounds");
+                assert_eq!(accepted, *a, "pool_size={pool_size} accepts");
+                assert_eq!(rejected, *j, "pool_size={pool_size} rejects");
+            }
+        }
+    }
+}
+
+#[test]
+fn asd_theta_infinity_bit_identical_across_pool_sizes() {
+    // ASD-inf produces the largest verify batches — the heaviest
+    // sharding pattern
+    let model = heavy_oracle(8, 6, 100);
+    let mut reference: Option<Vec<u64>> = None;
+    for pool_size in POOL_SIZES {
+        let mut engine = AsdEngine::new(
+            model.clone(),
+            AsdConfig {
+                theta: 0,
+                pool: PoolConfig { pool_size, shard_min: 2 },
+                ..Default::default()
+            });
+        let mut all_bits = Vec::new();
+        for seed in 20..24u64 {
+            all_bits.extend(bits(&engine.sample(seed).unwrap().y0));
+        }
+        match &reference {
+            None => reference = Some(all_bits),
+            Some(b) => assert_eq!(&all_bits, b, "pool_size={pool_size}"),
+        }
+    }
+}
+
+#[test]
+fn picard_bit_identical_across_pool_sizes() {
+    let model = heavy_oracle(16, 12, 60);
+    let mut reference: Option<(Vec<u64>, usize)> = None;
+    for pool_size in POOL_SIZES {
+        let sampler = PicardSampler::new(
+            model.clone(),
+            PicardConfig {
+                window: 8,
+                tol: 1e-8,
+                max_sweeps: 400,
+                pool: PoolConfig { pool_size, shard_min: 1 },
+            });
+        let mut all_bits = Vec::new();
+        let mut rounds = 0usize;
+        for seed in 0..4u64 {
+            let noise = NoiseStreams::draw(seed, 0, 60, 16);
+            let (y0, st) = sampler.sample_with_noise(&noise, &[]).unwrap();
+            all_bits.extend(bits(&y0));
+            rounds += st.parallel_rounds;
+        }
+        match &reference {
+            None => reference = Some((all_bits, rounds)),
+            Some((b, r)) => {
+                assert_eq!(&all_bits, b,
+                           "pool_size={pool_size} changed Picard bits");
+                assert_eq!(rounds, *r, "pool_size={pool_size} rounds");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_sequential_bit_identical_across_pool_sizes() {
+    let model = heavy_oracle(16, 12, 40);
+    // odd chain count on purpose: uneven shards
+    let seeds: Vec<u64> = (0..7).collect();
+    let mut reference: Option<Vec<u64>> = None;
+    for pool_size in POOL_SIZES {
+        let sampler = BatchedSequentialSampler::with_pool(
+            model.clone(), PoolConfig { pool_size, shard_min: 1 });
+        let (ys, st) = sampler.sample_batch(&seeds, &[]).unwrap();
+        assert_eq!(st.model_calls, 40);
+        let b = bits(&ys);
+        match &reference {
+            None => reference = Some(b),
+            Some(want) => assert_eq!(&b, want, "pool_size={pool_size}"),
+        }
+    }
+    // and the sharded lockstep result still matches per-request
+    // sampling (tolerance as in the seed's batched_matches_individual)
+    let per_request = SequentialSampler::new(model.clone());
+    let pooled = BatchedSequentialSampler::with_pool(
+        model, PoolConfig { pool_size: 8, shard_min: 1 });
+    let (ys, _) = pooled.sample_batch(&seeds, &[]).unwrap();
+    let d = 16;
+    for (r, &seed) in seeds.iter().enumerate() {
+        let (one, _) = per_request.sample(seed, &[]).unwrap();
+        for i in 0..d {
+            assert!((one[i] - ys[r * d + i]).abs() < 1e-9,
+                    "row {r} dim {i}");
+        }
+    }
+}
+
+#[test]
+fn conditional_asd_bit_identical_across_pool_sizes() {
+    let model: Arc<dyn DenoiseModel> =
+        GmmDdpmOracle::new(Gmm::circle_2d(), 60, true);
+    let mut cond = vec![0.0; 8];
+    cond[5] = 1.0;
+    let mut reference: Option<Vec<u64>> = None;
+    for pool_size in POOL_SIZES {
+        let mut engine = AsdEngine::new(
+            model.clone(),
+            AsdConfig {
+                theta: 8,
+                pool: PoolConfig { pool_size, shard_min: 1 },
+                ..Default::default()
+            });
+        let mut all_bits = Vec::new();
+        for seed in 0..4u64 {
+            all_bits.extend(bits(&engine.sample_cond(seed, &cond)
+                                 .unwrap().y0));
+        }
+        match &reference {
+            None => reference = Some(all_bits),
+            Some(b) => assert_eq!(&all_bits, b, "pool_size={pool_size}"),
+        }
+    }
+}

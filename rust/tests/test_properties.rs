@@ -1,7 +1,9 @@
 //! Property-based sweeps over the pure substrates (no PJRT needed):
 //! JSON roundtrips, quality-metric axioms, batcher invariants under
 //! random queues, Picard-vs-sequential convergence, schedule identities
-//! at random K.
+//! at random K, and worker-pool sharding invariants (sharded ==
+//! unsharded bitwise; GRS accept counts invariant under pool size and
+//! kernel backend).
 
 mod common;
 
@@ -123,7 +125,8 @@ fn picard_converges_for_random_gmm_targets() {
         let oracle = GmmDdpmOracle::new(gmm, k, false);
         let seq = SequentialSampler::new(oracle.clone());
         let pic = PicardSampler::new(
-            oracle, PicardConfig { window: 6, tol: 1e-10, max_sweeps: 400 });
+            oracle, PicardConfig { window: 6, tol: 1e-10, max_sweeps: 400,
+                                   ..Default::default() });
         let noise = NoiseStreams::draw(g.seed, 0, k, d);
         let (a, _) = seq.sample_with_noise(&noise, &[]).unwrap();
         let (b, _) = pic.sample_with_noise(&noise, &[]).unwrap();
@@ -136,15 +139,18 @@ fn picard_converges_for_random_gmm_targets() {
 fn asd_engine_invariants_random_theta() {
     use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
     use asd::model::{Gmm, GmmDdpmOracle};
+    use asd::runtime::pool::PoolConfig;
 
     prop::check("asd-invariants", 12, |g| {
         let k = g.usize_in(10, 120);
         let theta = *g.pick(&[0usize, 1, 2, 5, 9, 33]);
+        let pool_size = *g.pick(&[1usize, 2, 5]);
         let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), k, false);
         let mut e = AsdEngine::new(
             oracle,
             AsdConfig { theta, eval_tail: g.bool(),
-                        backend: KernelBackend::Native });
+                        backend: KernelBackend::Native,
+                        pool: PoolConfig { pool_size, shard_min: 1 } });
         let out = e.sample(g.seed).unwrap();
         // every transition consumed exactly once
         assert_eq!(out.stats.accepted + out.stats.rejected, k);
@@ -154,8 +160,116 @@ fn asd_engine_invariants_random_theta() {
         assert_eq!(out.stats.round_batches.len(), out.stats.parallel_rounds);
         assert_eq!(out.stats.round_batches.iter().sum::<usize>(),
                    out.stats.model_calls);
+        assert_eq!(out.stats.round_shards.len(), out.stats.parallel_rounds);
+        assert_eq!(out.stats.round_latency_s.len(),
+                   out.stats.parallel_rounds);
+        // occupancy never exceeds the configured pool size or the batch
+        for (i, &s) in out.stats.round_shards.iter().enumerate() {
+            assert!(s >= 1 && s <= pool_size.max(1));
+            assert!(s <= out.stats.round_batches[i].max(1));
+        }
         // sample is finite and 2-D
         assert_eq!(out.y0.len(), 2);
         assert!(out.y0.iter().all(|v| v.is_finite()));
     });
+}
+
+#[test]
+fn sharded_denoise_batch_equals_unsharded_bitwise() {
+    use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle, ParallelModel};
+    use asd::runtime::pool::PoolConfig;
+
+    prop::check("pool-shard-parity", 20, |g| {
+        let d = g.usize_in(1, 8);
+        let components = g.usize_in(1, 6);
+        let k = 30;
+        let oracle =
+            GmmDdpmOracle::new(Gmm::random(d, components, 1.2, g.seed),
+                               k, false);
+        let pool_size = g.usize_in(2, 9);
+        let shard_min = g.usize_in(1, 3);
+        // odd batch shapes: 1, pool-1, pool+1, and primes
+        for n in [1usize, pool_size - 1, pool_size + 1, 7, 13] {
+            let n = n.max(1);
+            let ys = g.normal_vec(n * d);
+            let ts: Vec<f64> =
+                (0..n).map(|_| g.usize_in(1, k) as f64).collect();
+            let mut want = vec![0.0; n * d];
+            oracle.denoise_batch(&ys, &ts, &[], n, &mut want).unwrap();
+            let par = ParallelModel::new(
+                oracle.clone(), PoolConfig { pool_size, shard_min });
+            let mut got = vec![0.0; n * d];
+            par.denoise_batch(&ys, &ts, &[], n, &mut got).unwrap();
+            let want_bits: Vec<u64> =
+                want.iter().map(|v| v.to_bits()).collect();
+            let got_bits: Vec<u64> =
+                got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want_bits, got_bits,
+                       "n={n} pool={pool_size} shard_min={shard_min} d={d}");
+        }
+    });
+}
+
+#[test]
+fn grs_acceptance_counts_invariant_under_pool_and_backend() {
+    use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+    use asd::model::{Gmm, GmmDdpmOracle};
+    use asd::runtime::pool::PoolConfig;
+
+    // pool-size invariance (always runnable): the verifier consumes the
+    // same (u, xi) streams whatever the sharding, so accept/reject
+    // counts must match exactly
+    for k in [40usize, 90] {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), k, false);
+        let mut counts = Vec::new();
+        for pool_size in [1usize, 8] {
+            let mut e = AsdEngine::new(
+                oracle.clone(),
+                AsdConfig {
+                    theta: 8,
+                    pool: PoolConfig { pool_size, shard_min: 1 },
+                    ..Default::default()
+                });
+            let mut acc = 0usize;
+            let mut rej = 0usize;
+            for seed in 0..5u64 {
+                let out = e.sample(seed).unwrap();
+                acc += out.stats.accepted;
+                rej += out.stats.rejected;
+            }
+            counts.push((acc, rej));
+        }
+        assert_eq!(counts[0], counts[1], "K={k}: pool changed GRS counts");
+    }
+
+    // kernel-backend invariance (needs compiled HLO kernels; skips
+    // cleanly when the artifacts/PJRT runtime is unavailable)
+    let Some(rt) = common::try_runtime() else {
+        eprintln!("skipping HLO-backend leg: runtime unavailable");
+        return;
+    };
+    let kernels = match rt.kernels(2) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("skipping HLO-backend leg: {e:#}");
+            return;
+        }
+    };
+    let model = rt.model("gmm2d").expect("gmm2d variant");
+    let mut native = AsdEngine::new(
+        model.clone(),
+        AsdConfig { theta: 8, ..Default::default() });
+    let mut hlo = AsdEngine::new(
+        model,
+        AsdConfig {
+            theta: 8,
+            backend: KernelBackend::Hlo(kernels),
+            ..Default::default()
+        });
+    for seed in 0..5u64 {
+        let a = native.sample(seed).unwrap();
+        let b = hlo.sample(seed).unwrap();
+        assert_eq!(a.stats.accepted, b.stats.accepted, "seed {seed}");
+        assert_eq!(a.stats.rejected, b.stats.rejected, "seed {seed}");
+    }
 }

@@ -1,0 +1,229 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline (no crates.io), so the subset
+//! of `anyhow` this workspace actually uses is vendored here: [`Error`],
+//! [`Result`], the [`anyhow!`], [`bail!`] and [`ensure!`] macros, and
+//! the [`Context`] extension trait on `Result` and `Option`.
+//!
+//! Semantics mirror upstream where it matters to callers:
+//! * `Display` prints the outermost message only;
+//! * `{:#}` (alternate) prints the whole context chain `outer: ...: root`;
+//! * `Debug` (what `unwrap()` shows) prints the chain with a
+//!   `Caused by:` trailer;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::fmt;
+
+/// A dynamic error carrying a chain of context messages.
+/// `chain[0]` is the outermost context, `chain.last()` the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (upstream: `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((outer, rest)) => {
+                write!(f, "{outer}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, c) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {c}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// Mirrors upstream: no overlap with the reflexive `From<Error> for Error`
+// because `Error` itself deliberately does NOT implement
+// `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Conversion helper behind [`Context`] (upstream: `ext::StdError`).
+/// Blanket impl for std errors plus a concrete impl for [`Error`]; these
+/// are disjoint because `Error` is not a `std::error::Error`.
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error>;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading weights".to_string())
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading weights");
+        assert_eq!(format!("{e:#}"), "reading weights: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u8> = None;
+        let e = none.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(7).unwrap_err().to_string().contains("unlucky 7"));
+        let e = anyhow!("plain {}", 5);
+        assert_eq!(e.to_string(), "plain 5");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+}

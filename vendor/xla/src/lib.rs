@@ -1,0 +1,142 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real bindings need the XLA/PJRT shared library, which is not
+//! present in this build environment. This stub keeps the whole
+//! workspace compiling with the exact call-site API the runtime layer
+//! uses (`PjRtClient::cpu`, `compile`, `buffer_from_host_buffer`,
+//! `execute_b`, literal decomposition), while `PjRtClient::cpu()`
+//! reports the backend as unavailable. `DeviceHandle::spawn` surfaces
+//! that as a clean error and every PJRT-dependent test skips; the
+//! pure-rust engine, samplers, worker pool and analytic oracles never
+//! touch this crate at runtime.
+//!
+//! To enable the HLO path, replace the `xla` entry in the workspace
+//! `Cargo.toml` with the real bindings — no rust/src changes needed.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "XLA/PJRT backend unavailable (vendored stub build); point the \
+         workspace `xla` dependency at the real bindings to enable the \
+         HLO path"
+            .to_string(),
+    ))
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self, _data: &[T], _dims: &[usize], _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer])
+                     -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = match PjRtClient::cpu() {
+            Ok(_) => panic!("stub must not produce a client"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
