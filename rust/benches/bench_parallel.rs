@@ -1,42 +1,154 @@
-//! Measured parallel-round execution: wall-clock speedup from the
-//! sharded worker pool, reported next to the algorithmic rounds
-//! speedup — the bench that turns `parallel_rounds` from bookkeeping
-//! into a measured quantity.
+//! Measured parallel-round execution: the native MLP's batched GEMM
+//! forward vs its scalar reference, GEMM M-sharding on the worker
+//! pool, and the ASD pool-size sweep (wall-clock next to algorithmic
+//! rounds). Emits the machine-readable `BENCH_parallel.json` artifact
+//! so the perf trajectory is tracked across PRs.
 //!
-//! Workload: a wide random GMM oracle (posterior-mean cost scales with
-//! components * d), so per-row denoise work is large enough for
-//! sharding to pay off. Outputs are asserted bit-identical across pool
-//! sizes: the pool buys wall-clock only, never perturbs samples.
+//! Workloads:
+//! * **native forward** — the default toy MLP variant (d=8, hidden=32,
+//!   3 residual blocks, K=100 — the scale of the repo's real variants,
+//!   where per-row libm exp/sin/cos and per-row scratch allocation
+//!   dominate the row-at-a-time path); `denoise_batch` (GEMM pipeline
+//!   + workspace + temb cache + vectorized SiLU) must beat
+//!   `denoise_batch_ref` by >= 4x rows/s at B >= 64.
+//! * **ASD sweep** — a wide random GMM oracle; outputs are asserted
+//!   bit-identical across pool sizes (the pool buys wall-clock only).
 //!
 //! Run: cargo bench --bench bench_parallel
 
 use std::sync::Arc;
 
 use asd::ddpm::BatchedSequentialSampler;
-use asd::exp::speedup::{format_pool_rows, outputs_bit_identical,
-                        sweep_pool_sizes};
-use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle};
+use asd::exp::speedup::{bench_parallel_json, format_pool_rows,
+                        outputs_bit_identical, sweep_pool_sizes,
+                        write_bench_json, ForwardBenchRow};
+use asd::math::gemm::{gemm_bias_act, gemm_sharded, Epilogue};
+use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle, NativeMlp, VariantInfo,
+                 Workspace};
 use asd::runtime::pool::{default_threads, PoolConfig};
 use asd::util::timer::bench;
 
+/// The default toy variant: a realistically-shaped small denoiser.
+fn toy_mlp(d: usize, hidden: usize, blocks: usize, k_steps: usize)
+           -> Arc<NativeMlp> {
+    let info = VariantInfo::toy("toy-bench", d, 0, hidden, blocks, k_steps);
+    let flat: Vec<f32> = (0..info.weights_len())
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            ((h % 2003) as f32 / 2003.0 - 0.5) * 0.2
+        })
+        .collect();
+    NativeMlp::from_flat(&info, &flat).expect("toy variant")
+}
+
 fn main() -> anyhow::Result<()> {
-    println!("=== Sharded worker pool — measured vs algorithmic speedup \
+    println!("=== Native GEMM forward + sharded worker pool \
               ({} pool threads available) ===\n", default_threads());
+
+    // --- native MLP: GEMM pipeline vs scalar reference ----------------
+    let d = 8usize;
+    let (hidden, blocks, k_steps) = (32usize, 3usize, 100usize);
+    let mlp = toy_mlp(d, hidden, blocks, k_steps);
+    println!("[native MLP d={d} hidden={hidden} blocks={blocks}: \
+              GEMM batch forward vs scalar ref]");
+    let mut forward_rows: Vec<ForwardBenchRow> = Vec::new();
+    let mut speedup_b64 = 0.0f64;
+    for &b in &[1usize, 16, 64, 256] {
+        let ys: Vec<f64> =
+            (0..b * d).map(|i| (i as f64 * 0.37).sin()).collect();
+        let ts: Vec<f64> = (0..b).map(|r| (1 + r % k_steps) as f64).collect();
+        let mut out = vec![0.0; b * d];
+        let mut ws = Workspace::new();
+        let st_ref = bench(3, 20, || {
+            mlp.denoise_batch_ref(&ys, &ts, &[], b, &mut out).unwrap();
+        });
+        let st_gemm = bench(3, 20, || {
+            mlp.denoise_batch_with(&ys, &ts, &[], b, &mut out, &mut ws)
+                .unwrap();
+        });
+        let r_ref = ForwardBenchRow::from_mean_s(
+            "scalar_ref", b, 1, st_ref.mean_ms / 1e3);
+        let r_gemm = ForwardBenchRow::from_mean_s(
+            "gemm", b, 1, st_gemm.mean_ms / 1e3);
+        let x = r_gemm.rows_per_s / r_ref.rows_per_s.max(1e-12);
+        println!("B={b:<5} scalar_ref {:>12.0} rows/s ({:>8.0} ns/row)   \
+                  gemm {:>12.0} rows/s ({:>8.0} ns/row)   {x:.2}x",
+                 r_ref.rows_per_s, r_ref.ns_per_row,
+                 r_gemm.rows_per_s, r_gemm.ns_per_row);
+        if b == 64 {
+            speedup_b64 = x;
+        }
+        forward_rows.push(r_ref);
+        forward_rows.push(r_gemm);
+    }
+    // (the >= 4x floor is asserted at the very end, after
+    // BENCH_parallel.json is written — a regression must not destroy
+    // the artifact needed to diagnose it)
+    println!("GEMM speedup at B=64: {speedup_b64:.2}x (floor: 4x)\n");
+
+    // --- raw GEMM: M-sharding on the global pool ----------------------
+    println!("[raw GEMM 256x256, B=256: M-sharded on the pool]");
+    {
+        let (m, n, k) = (256usize, 256usize, 256usize);
+        let a: Vec<f32> =
+            (0..m * k).map(|i| ((i % 601) as f32 / 601.0) - 0.5).collect();
+        let w: Vec<f32> =
+            (0..k * n).map(|i| ((i % 709) as f32 / 709.0) - 0.5).collect();
+        let bias = vec![0.01f32; n];
+        let mut c = vec![0.0f32; m * n];
+        let mut base_ms = 0.0;
+        for &shards in &[1usize, 2, 4, 8] {
+            let st = bench(2, 10, || {
+                gemm_sharded(m, n, k, &a, &w, Some(&bias), Epilogue::Silu,
+                             None, &mut c, shards);
+            });
+            if shards == 1 {
+                base_ms = st.mean_ms;
+            }
+            println!("{}  ({:.2}x vs serial)",
+                     st.row(&format!("gemm_sharded shards={shards}")),
+                     base_ms / st.mean_ms.max(1e-12));
+            // distinct backend label: these rows measure a standalone
+            // 256^3 GEMM (rows = matrix rows), not the MLP forward —
+            // don't compare their rows/s against scalar_ref/gemm
+            forward_rows.push(ForwardBenchRow::from_mean_s(
+                "raw_gemm_sharded", m, shards, st.mean_ms / 1e3));
+        }
+        // sharded output stays bit-identical to the serial kernel
+        let mut serial = vec![0.0f32; m * n];
+        gemm_bias_act(m, n, k, &a, &w, Some(&bias), Epilogue::Silu, None,
+                      &mut serial);
+        gemm_sharded(m, n, k, &a, &w, Some(&bias), Epilogue::Silu, None,
+                     &mut c, 8);
+        assert_eq!(serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   "gemm_sharded changed bits");
+        println!();
+    }
 
     // --- ASD: verify rounds sharded across the pool -------------------
     let k = 150;
+    let theta = 16;
     let gmm = Gmm::random(96, 128, 1.5, 7);
     let model: Arc<dyn DenoiseModel> = GmmDdpmOracle::new(gmm, k, false);
     let pool_sizes = [1usize, 2, 4, 8];
-    let rows = sweep_pool_sizes(model.clone(), &pool_sizes, 2, 16, 4, 100)?;
-    println!("[ASD theta=16, GMM d=96 x 128 components, K={k}]");
+    let rows = sweep_pool_sizes(model.clone(), &pool_sizes, 2, theta, 4,
+                                100)?;
+    println!("[ASD theta={theta}, GMM d=96 x 128 components, K={k}]");
     print!("{}", format_pool_rows(k, &rows));
     assert!(outputs_bit_identical(&rows),
             "sharding changed sample bits: {rows:?}");
     println!("outputs bit-identical across pool sizes: true\n");
 
+    // --- machine-readable artifact ------------------------------------
+    let doc = bench_parallel_json(&forward_rows, k, theta, &rows);
+    let path = std::path::Path::new("BENCH_parallel.json");
+    write_bench_json(path, &doc)?;
+    println!("wrote {} ({} forward rows, {} sweep rows)",
+             path.display(), forward_rows.len(), rows.len());
+
     // --- lockstep batched sequential: one sharded call per step -------
-    println!("[lockstep batched sequential, n=32 chains, same model]");
+    println!("\n[lockstep batched sequential, n=32 chains, same model]");
     let seeds: Vec<u64> = (0..32).collect();
     let mut baseline_ms = 0.0;
     for &p in &pool_sizes {
@@ -52,5 +164,11 @@ fn main() -> anyhow::Result<()> {
                  st.row(&format!("batched-seq n=32 pool={p}")),
                  baseline_ms / st.mean_ms.max(1e-12));
     }
+
+    // acceptance floor, checked last so every section above ran and
+    // the JSON artifact is already on disk whatever happens here
+    assert!(speedup_b64 >= 4.0,
+            "GEMM forward must be >= 4x the scalar ref at B=64, got \
+             {speedup_b64:.2}x (see BENCH_parallel.json)");
     Ok(())
 }

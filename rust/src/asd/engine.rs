@@ -211,8 +211,10 @@ impl AsdEngine {
         let mut stats = AsdStats::default();
         let mut y = noise.y_k.clone();
         let mut i_cur = k;
-        // x0hat at (y, i_cur) when chained from the previous verify round
-        let mut x0_cur: Option<Vec<f64>> = None;
+        // when true, x0a already holds x0hat at (y, i_cur) — chained
+        // from the previous verify round's accepted tail (no
+        // per-iteration Vec: the tail slot is copied straight into x0a)
+        let mut have_x0 = false;
         let mut x0a = vec![0.0; d];
 
         while i_cur > 0 {
@@ -220,18 +222,15 @@ impl AsdEngine {
             let th = self.theta_for(i_cur);
 
             // ---- proposal round: one model call (Alg 1 line 6) ----
-            match x0_cur.take() {
-                Some(v) => x0a.copy_from_slice(&v),
-                None => {
-                    let t_round = std::time::Instant::now();
-                    self.model.denoise_one(&y, i_cur, cond, &mut x0a)?;
-                    stats.model_calls += 1;
-                    stats.parallel_rounds += 1;
-                    stats.round_batches.push(1);
-                    stats.round_shards.push(1);
-                    stats.round_latency_s
-                        .push(t_round.elapsed().as_secs_f64());
-                }
+            if !have_x0 {
+                let t_round = std::time::Instant::now();
+                self.model.denoise_one(&y, i_cur, cond, &mut x0a)?;
+                stats.model_calls += 1;
+                stats.parallel_rounds += 1;
+                stats.round_batches.push(1);
+                stats.round_shards.push(1);
+                stats.round_latency_s
+                    .push(t_round.elapsed().as_secs_f64());
             }
 
             // ---- speculate (Alg 1 lines 7-9; L1 kernel `speculate`) ----
@@ -281,7 +280,7 @@ impl AsdEngine {
 
             // ---- verifier (Alg 2): sequential scan over parallel GRS ----
             let mut advanced = 0usize;
-            let mut next_x0: Option<Vec<f64>> = None;
+            let mut tail_chained = false;
             for kpos in 0..th {
                 let j = i_cur - kpos; // transition j -> j-1, schedule row j-1
                 let row = j - 1;
@@ -311,10 +310,7 @@ impl AsdEngine {
                 if accept {
                     stats.accepted += 1;
                     if kpos == th - 1 && tail {
-                        // accepted tail: z == y_hat[th-1], whose x0hat is
-                        // the last verify slot
-                        next_x0 = Some(
-                            self.x0_eval[(th - 1) * d..th * d].to_vec());
+                        tail_chained = true;
                     }
                 } else {
                     stats.rejected += 1;
@@ -322,7 +318,12 @@ impl AsdEngine {
                 }
             }
             i_cur -= advanced;
-            x0_cur = next_x0;
+            if tail_chained {
+                // accepted tail: z == y_hat[th-1], whose x0hat is the
+                // last verify slot — reuse it as the next proposal
+                x0a.copy_from_slice(&self.x0_eval[(th - 1) * d..th * d]);
+            }
+            have_x0 = tail_chained;
         }
 
         Ok(AsdOutput {

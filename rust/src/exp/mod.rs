@@ -7,5 +7,6 @@ pub mod speedup;
 
 pub use latency::LatencyModel;
 pub use quality::{format_quality_table, QualityRow};
-pub use speedup::{format_pool_rows, format_rows, outputs_bit_identical,
-                  sweep_pool_sizes, sweep_thetas, PoolRow, SpeedupRow};
+pub use speedup::{bench_parallel_json, format_pool_rows, format_rows,
+                  outputs_bit_identical, sweep_pool_sizes, sweep_thetas,
+                  write_bench_json, ForwardBenchRow, PoolRow, SpeedupRow};

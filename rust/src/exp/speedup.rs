@@ -12,12 +12,13 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::asd::{AsdConfig, AsdEngine, KernelBackend};
 use crate::exp::latency::LatencyModel;
 use crate::model::DenoiseModel;
 use crate::runtime::pool::PoolConfig;
+use crate::util::Json;
 
 #[derive(Debug, Clone)]
 pub struct SpeedupRow {
@@ -184,6 +185,92 @@ pub fn outputs_bit_identical(rows: &[PoolRow]) -> bool {
     rows.windows(2).all(|w| w[0].bits_checksum == w[1].bits_checksum)
 }
 
+/// One native-forward throughput measurement for `BENCH_parallel.json`
+/// (the machine-readable perf trajectory tracked across PRs).
+#[derive(Debug, Clone)]
+pub struct ForwardBenchRow {
+    /// which measurement: "gemm" (MLP batched pipeline) and
+    /// "scalar_ref" (MLP row-at-a-time oracle) are mutually
+    /// comparable — same workload, rows = batch rows. Other labels
+    /// (e.g. "raw_gemm_sharded", a standalone matrix product) are
+    /// their own workload; never compare rows/s across labels unless
+    /// the workload matches.
+    pub backend: String,
+    pub batch: usize,
+    /// shard count for sharded backends (1 = serial)
+    pub pool_size: usize,
+    pub rows_per_s: f64,
+    pub ns_per_row: f64,
+}
+
+impl ForwardBenchRow {
+    /// Build a row from the mean wall-clock of one batched forward.
+    pub fn from_mean_s(backend: &str, batch: usize, pool_size: usize,
+                       mean_iter_s: f64) -> ForwardBenchRow {
+        let rows = batch.max(1) as f64;
+        let s = mean_iter_s.max(1e-12);
+        ForwardBenchRow {
+            backend: backend.to_string(),
+            batch,
+            pool_size,
+            rows_per_s: rows / s,
+            ns_per_row: s * 1e9 / rows,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str(self.backend.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("pool_size", Json::Num(self.pool_size as f64)),
+            ("rows_per_s", Json::Num(self.rows_per_s)),
+            ("ns_per_row", Json::Num(self.ns_per_row)),
+        ])
+    }
+}
+
+fn pool_row_json(r: &PoolRow) -> Json {
+    Json::obj(vec![
+        ("pool_size", Json::Num(r.pool_size as f64)),
+        ("algorithmic_speedup", Json::Num(r.algorithmic_speedup)),
+        ("measured_speedup", Json::Num(r.measured_speedup)),
+        ("mean_wall_s", Json::Num(r.mean_wall_s)),
+        ("mean_round_latency_ms", Json::Num(r.mean_round_latency_ms)),
+        ("mean_occupancy", Json::Num(r.mean_occupancy)),
+        // hex string: u64 checksums don't fit f64-backed JSON numbers
+        ("bits_checksum", Json::Str(format!("{:016x}", r.bits_checksum))),
+    ])
+}
+
+/// Assemble the `BENCH_parallel.json` document: native-forward
+/// throughput rows plus the ASD pool sweep (K/rounds per pool size).
+/// Either section may be empty.
+pub fn bench_parallel_json(forward: &[ForwardBenchRow], k: usize,
+                           theta: usize, pool_rows: &[PoolRow]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("bench_parallel".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("pool_threads",
+         Json::Num(crate::runtime::pool::default_threads() as f64)),
+        ("native_forward",
+         Json::Arr(forward.iter().map(|r| r.to_json()).collect())),
+        ("pool_sweep", Json::obj(vec![
+            ("k", Json::Num(k as f64)),
+            ("theta", Json::Num(theta as f64)),
+            ("outputs_bit_identical",
+             Json::Bool(outputs_bit_identical(pool_rows))),
+            ("rows", Json::Arr(pool_rows.iter().map(pool_row_json)
+                                   .collect())),
+        ])),
+    ])
+}
+
+/// Write a bench document to disk (pretty enough for diffs: one line).
+pub fn write_bench_json(path: &std::path::Path, doc: &Json) -> Result<()> {
+    std::fs::write(path, format!("{doc}\n"))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 /// Render the pool sweep as a table: both speedup columns side by side.
 pub fn format_pool_rows(k: usize, rows: &[PoolRow]) -> String {
     let base = rows.first().map(|r| r.pool_size).unwrap_or(1);
@@ -245,6 +332,39 @@ mod tests {
         assert!(rows[0].algorithmic_speedup <= 1.3);
         let table = format_rows(60, &rows);
         assert!(table.contains("ASD-inf"));
+    }
+
+    #[test]
+    fn bench_json_roundtrips_and_carries_both_sections() {
+        let fwd = vec![
+            ForwardBenchRow::from_mean_s("scalar_ref", 64, 1, 6.4e-3),
+            ForwardBenchRow::from_mean_s("gemm", 64, 1, 1.0e-3),
+        ];
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
+        let rows = sweep_pool_sizes(oracle, &[1, 2], 1, 8, 2, 7).unwrap();
+        let doc = bench_parallel_json(&fwd, 40, 8, &rows);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        let nf = back.get("native_forward").unwrap().as_arr().unwrap();
+        assert_eq!(nf.len(), 2);
+        for r in nf {
+            // rows/s and ns/row stay mutually consistent through the
+            // text roundtrip: rows_per_s * ns_per_row == 1e9
+            let rps = r.get("rows_per_s").unwrap().as_f64().unwrap();
+            let nspr = r.get("ns_per_row").unwrap().as_f64().unwrap();
+            assert!((rps * nspr / 1e9 - 1.0).abs() < 1e-9);
+        }
+        let sweep = back.get("pool_sweep").unwrap();
+        assert_eq!(sweep.get("k").unwrap().as_usize().unwrap(), 40);
+        assert!(sweep.get("outputs_bit_identical").unwrap()
+                    .as_bool().unwrap());
+        let sweep_rows = sweep.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(sweep_rows.len(), 2);
+        // checksums travel as 16-hex-digit strings (u64 doesn't fit an
+        // f64-backed JSON number)
+        let c = sweep_rows[0].get("bits_checksum").unwrap()
+            .as_str().unwrap();
+        assert_eq!(c.len(), 16);
+        assert!(c.chars().all(|ch| ch.is_ascii_hexdigit()));
     }
 
     #[test]

@@ -60,7 +60,7 @@ fn print_help() {
          [--pool 1] [--shard-min 2]\n  \
          pool                       pool-size sweep on an analytic GMM;\n    \
          [--d 64] [--components 96] [--k 150] [--theta 16] [--n 4]\n    \
-         [--pool-sizes 1,2,4,8] [--shard-min 2]\n"
+         [--pool-sizes 1,2,4,8] [--shard-min 2] [--json out.json]\n"
     );
 }
 
@@ -242,5 +242,12 @@ fn cmd_pool(args: &Args) -> Result<()> {
     print!("{}", asd::exp::speedup::format_pool_rows(k, &rows));
     println!("outputs bit-identical across pool sizes: {}",
              asd::exp::speedup::outputs_bit_identical(&rows));
+    if let Some(path) = args.get("json") {
+        let doc = asd::exp::speedup::bench_parallel_json(&[], k, theta,
+                                                         &rows);
+        asd::exp::speedup::write_bench_json(std::path::Path::new(path),
+                                            &doc)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -1,0 +1,418 @@
+//! Cache-blocked, register-tiled f32 GEMM for the native model backend.
+//!
+//! This is the kernel under `NativeMlp::denoise_batch`: every MLP layer
+//! over a `B`-row batch is one `B×n_in · n_in×n_out` matrix product
+//! with a fused bias + activation (+ residual) epilogue, instead of `B`
+//! scalar `linear()` calls. Written as autovectorizer-friendly plain
+//! Rust (no intrinsics, no unsafe in the serial path): exact-length
+//! subslices let LLVM hoist the bounds checks and vectorize the
+//! `j`-loops.
+//!
+//! **Determinism contract.** For every output element `c[i][j]` the
+//! reduction over `p` (the shared dimension) runs in ascending order
+//! starting from the bias, using plain IEEE mul/add (no `mul_add`):
+//!
+//! ```text
+//! acc = bias[j];  for p in 0..k { acc += a[i][p] * b[p][j] }
+//! ```
+//!
+//! Row-blocking (MR), k-panel blocking (KC) and M-dimension sharding
+//! ([`gemm_sharded`]) only regroup *independent* output rows — they
+//! never split or reorder a single element's reduction — so results are
+//! bit-identical across tile shapes and pool sizes, and bit-identical
+//! to [`gemm_ref`] (the naive triple loop with the same reduction
+//! order). tests/test_properties.rs enforces both.
+//!
+//! The SiLU epilogue uses [`exp_fast`] — a branch-free Cody–Waite +
+//! degree-6-polynomial `expf` the autovectorizer can turn into SIMD —
+//! instead of scalar libm `expf`, which would otherwise dominate the
+//! whole layer (a hidden layer is ~`n_in` MACs but only one `exp` per
+//! output, and libm calls never vectorize). `exp_fast` is exact at 0
+//! and within ~2 ulp elsewhere, so the GEMM forward tracks the scalar
+//! libm reference (`NativeMlp::forward_one_ref`) to ~1e-7 relative per
+//! layer — well inside the 1e-5 parity budget and the 2e-4 golden
+//! tolerance.
+
+use crate::runtime::pool;
+
+/// Register-tile height: rows of `A` processed together so each loaded
+/// row of `B` is reused MR times from registers.
+pub const MR: usize = 4;
+
+/// k-panel width (cache block): the slice of `B` touched per pass stays
+/// resident in L1/L2 while MR-row blocks of `A` stream over it.
+const KC: usize = 256;
+
+/// Fused epilogue applied to the accumulator after the reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Epilogue {
+    /// Store bias + A·B as-is (output layers).
+    Linear,
+    /// Store `silu(bias + A·B)` (hidden layers).
+    Silu,
+}
+
+/// Branch-free `expf` approximation (Cody–Waite range reduction +
+/// Cephes degree-6 minimax polynomial, 2^k scaling through the
+/// exponent bits). Select-only control flow, no libm call — so the
+/// epilogue loops vectorize. Exact at 0 (`exp_fast(0.0) == 1.0`),
+/// ~2 ulp on `[-87.33, 88.3]`. Outside that: NaN propagates
+/// (`f32::clamp` keeps NaN), `x > 88.3` (incl. `+inf`) returns `inf`
+/// — saturating ~0.4 *earlier* than libm's 88.7228 overflow point —
+/// and `x < -87.33` flushes to ~min-normal instead of going
+/// subnormal → 0. Both divergences are below 1e-36 absolute once fed
+/// through silu.
+#[inline]
+pub fn exp_fast(x: f32) -> f32 {
+    let xc = x.clamp(-87.33, 88.3); // keeps k = round(x/ln2) <= 127
+    // k = round(x / ln 2) via the 1.5·2^23 shift trick (SSE2-friendly,
+    // unlike f32::round which needs SSE4.1 to stay vectorized)
+    const SHIFT: f32 = 12_582_912.0; // 1.5 * 2^23
+    let kf = (xc * std::f32::consts::LOG2_E + SHIFT) - SHIFT;
+    // two-step range reduction: r = x - k ln 2, |r| <= ln2/2
+    let r = (xc - kf * 0.693_359_375) - kf * (-2.121_944_4e-4);
+    // exp(r) ~= 1 + r + r^2 P(r) (Cephes expf minimax coefficients)
+    let p = 1.987_569_15e-4_f32;
+    let p = p * r + 1.398_199_95e-3;
+    let p = p * r + 8.333_451_9e-3;
+    let p = p * r + 4.166_579_6e-2;
+    let p = p * r + 1.666_666_55e-1;
+    let p = p * r + 5.000_000_1e-1;
+    let poly = (p * r + 1.0) * r + 1.0;
+    // scale by 2^k through the exponent field (k in [-126, 127] after
+    // the clamp, so 127 + k never leaves [1, 254]; NaN casts to 0)
+    let scale = f32::from_bits(((127 + kf as i32) << 23) as u32);
+    let y = poly * scale;
+    // saturate the region the clamp capped straight to inf (libm
+    // overflows at 88.7228; we overflow at the clamp point so there is
+    // no band where the result silently underestimates). NaN fails the
+    // compare and keeps y (= NaN); a float select, so the loop still
+    // vectorizes (cmp + blend).
+    if x > 88.3 { f32::INFINITY } else { y }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    // silu(x) = x / (1 + e^-x). Edge semantics track the libm form:
+    // NaN propagates through both operands, silu(-inf) = -inf/inf =
+    // NaN, silu(+inf) = inf, deep-negative x gives -x/inf = -0.0.
+    x / (1.0 + exp_fast(-x))
+}
+
+/// C[m×n] = epilogue(bias + A[m×k]·B[k×n]) (+ residual), all row-major.
+///
+/// * `bias`: length-`n` row added to every output row before the
+///   reduction (it seeds the accumulator — same order as the scalar
+///   path). `None` seeds with zero.
+/// * `residual`: length `m*n`; when present the epilogue stores
+///   `residual[i][j] + epi(acc)` — the fused skip-connection of the
+///   MLP's hidden blocks.
+///
+/// `c` is fully overwritten; it must not alias `a`, `b` or `residual`.
+pub fn gemm_bias_act(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                     bias: Option<&[f32]>, epi: Epilogue,
+                     residual: Option<&[f32]>, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm: A is not m×k");
+    assert_eq!(b.len(), k * n, "gemm: B is not k×n");
+    assert_eq!(c.len(), m * n, "gemm: C is not m×n");
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n, "gemm: bias is not length n");
+    }
+    if let Some(r) = residual {
+        assert_eq!(r.len(), m * n, "gemm: residual is not m×n");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+
+    // seed the accumulators: C rows start at the bias (or zero)
+    match bias {
+        Some(bias) => {
+            for row in c.chunks_exact_mut(n) {
+                row.copy_from_slice(bias);
+            }
+        }
+        None => c.fill(0.0),
+    }
+
+    // accumulate k-panels in ascending order (the determinism contract)
+    let mut p0 = 0usize;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        let mut i0 = 0usize;
+        while i0 + MR <= m {
+            kernel_mr(n, k, a, b, c, i0, p0, pc);
+            i0 += MR;
+        }
+        while i0 < m {
+            kernel_1(n, k, a, b, c, i0, p0, pc);
+            i0 += 1;
+        }
+        p0 += pc;
+    }
+
+    // epilogue sweep (activation + fused residual add)
+    match (epi, residual) {
+        (Epilogue::Linear, None) => {}
+        (Epilogue::Linear, Some(r)) => {
+            for (ci, &ri) in c.iter_mut().zip(r) {
+                *ci += ri;
+            }
+        }
+        (Epilogue::Silu, None) => {
+            for ci in c.iter_mut() {
+                *ci = silu(*ci);
+            }
+        }
+        (Epilogue::Silu, Some(r)) => {
+            for (ci, &ri) in c.iter_mut().zip(r) {
+                *ci = ri + silu(*ci);
+            }
+        }
+    }
+}
+
+/// MR-row micro-kernel: accumulate `A[i0..i0+MR][p0..p0+pc] · B` into
+/// the MR corresponding C rows. Every row of B loaded once per call is
+/// reused MR times; the j-loops run over exact-length slices so the
+/// autovectorizer sees bounds-check-free contiguous FMA chains.
+#[inline]
+fn kernel_mr(n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32],
+             i0: usize, p0: usize, pc: usize) {
+    let cblk = &mut c[i0 * n..(i0 + MR) * n];
+    let (c0, rest) = cblk.split_at_mut(n);
+    let (c1, rest) = rest.split_at_mut(n);
+    let (c2, c3) = rest.split_at_mut(n);
+    let a0 = &a[i0 * k..i0 * k + k];
+    let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+    let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+    let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+    for p in p0..p0 + pc {
+        let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+        let brow = &b[p * n..p * n + n];
+        for j in 0..n {
+            let bj = brow[j];
+            c0[j] += x0 * bj;
+            c1[j] += x1 * bj;
+            c2[j] += x2 * bj;
+            c3[j] += x3 * bj;
+        }
+    }
+}
+
+/// Single-row remainder kernel (same reduction order as `kernel_mr`).
+#[inline]
+fn kernel_1(n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32],
+            i0: usize, p0: usize, pc: usize) {
+    let crow = &mut c[i0 * n..i0 * n + n];
+    let arow = &a[i0 * k..i0 * k + k];
+    for p in p0..p0 + pc {
+        let x = arow[p];
+        let brow = &b[p * n..p * n + n];
+        for j in 0..n {
+            crow[j] += x * brow[j];
+        }
+    }
+}
+
+/// Plain product without bias/activation.
+pub fn gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+            c: &mut [f32]) {
+    gemm_bias_act(m, n, k, a, b, None, Epilogue::Linear, None, c);
+}
+
+/// Raw output pointer smuggled into `Fn` shards; sound because shards
+/// write disjoint row ranges and the pool joins before `c` is reused.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// [`gemm_bias_act`] with the M dimension split into up to `shards`
+/// contiguous, MR-aligned row ranges executed concurrently on the
+/// process-global worker pool. Output rows are independent (see the
+/// determinism contract above), so the result is bit-identical to the
+/// serial call for every shard count. Returns the effective shard
+/// count.
+pub fn gemm_sharded(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                    bias: Option<&[f32]>, epi: Epilogue,
+                    residual: Option<&[f32]>, c: &mut [f32],
+                    shards: usize) -> usize {
+    if shards <= 1 || m <= MR {
+        gemm_bias_act(m, n, k, a, b, bias, epi, residual, c);
+        return 1;
+    }
+    assert_eq!(a.len(), m * k, "gemm_sharded: A is not m×k");
+    assert_eq!(c.len(), m * n, "gemm_sharded: C is not m×n");
+    if let Some(r) = residual {
+        assert_eq!(r.len(), m * n, "gemm_sharded: residual is not m×n");
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    pool::global().run_sharded_blocks(m, MR, shards, |r0, r1| {
+        let rows = r1 - r0;
+        // SAFETY: shard row ranges are disjoint and the pool joins
+        // before `c` is touched again — no aliasing.
+        let shard_c = unsafe {
+            std::slice::from_raw_parts_mut(c_ptr.0.add(r0 * n), rows * n)
+        };
+        let shard_res = residual.map(|r| &r[r0 * n..r1 * n]);
+        gemm_bias_act(rows, n, k, &a[r0 * k..r1 * k], b, bias, epi,
+                      shard_res, shard_c);
+    })
+}
+
+/// Naive triple-loop reference with the same per-element reduction
+/// order — the oracle the blocked/tiled/sharded kernels are tested
+/// against (bit-exact, not just approximately equal).
+pub fn gemm_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                bias: Option<&[f32]>, epi: Epilogue,
+                residual: Option<&[f32]>, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = bias.map_or(0.0, |bv| bv[j]);
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            if epi == Epilogue::Silu {
+                acc = silu(acc);
+            }
+            if let Some(r) = residual {
+                // same operand order as the fused epilogue: res + act
+                acc = r[i * n + j] + acc;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(len: usize, seed: u32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let v = (i as u32).wrapping_mul(2654435761)
+                    .wrapping_add(seed.wrapping_mul(40503));
+                (v % 2003) as f32 / 2003.0 - 0.5
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn blocked_matches_reference_bitwise_across_shapes() {
+        // odd/rectangular shapes straddling the MR and KC boundaries
+        for &(m, n, k) in &[(0usize, 3usize, 4usize), (1, 1, 1), (1, 7, 5),
+                            (3, 2, 9), (4, 4, 4), (5, 3, 300), (7, 13, 257),
+                            (8, 1, 2), (13, 17, 31)] {
+            let a = fill(m * k, 1);
+            let b = fill(k * n, 2);
+            let bias = fill(n, 3);
+            let res = fill(m * n, 4);
+            for epi in [Epilogue::Linear, Epilogue::Silu] {
+                for (bias_o, res_o) in [(None, None), (Some(&bias), None),
+                                        (Some(&bias), Some(&res))] {
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_ref(m, n, k, &a, &b, bias_o.map(|v| &v[..]), epi,
+                             res_o.map(|v| &v[..]), &mut want);
+                    let mut got = vec![7.0f32; m * n];
+                    gemm_bias_act(m, n, k, &a, &b, bias_o.map(|v| &v[..]),
+                                  epi, res_o.map(|v| &v[..]), &mut got);
+                    assert_eq!(bits(&want), bits(&got),
+                               "m={m} n={n} k={k} epi={epi:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_bitwise() {
+        let (m, n, k) = (37usize, 19usize, 23usize);
+        let a = fill(m * k, 5);
+        let b = fill(k * n, 6);
+        let bias = fill(n, 7);
+        let mut want = vec![0.0f32; m * n];
+        gemm_bias_act(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
+                      &mut want);
+        for shards in [1usize, 2, 3, 8, 64] {
+            let mut got = vec![0.0f32; m * n];
+            let eff = gemm_sharded(m, n, k, &a, &b, Some(&bias),
+                                   Epilogue::Silu, None, &mut got, shards);
+            assert!(eff >= 1);
+            assert_eq!(bits(&want), bits(&got), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn plain_gemm_identity() {
+        // A · I == A
+        let m = 5;
+        let n = 6;
+        let a = fill(m * n, 8);
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut c = vec![0.0f32; m * n];
+        gemm(m, n, n, &a, &eye, &mut c);
+        assert_eq!(bits(&a), bits(&c));
+    }
+
+    #[test]
+    fn silu_epilogue_matches_scalar_definition() {
+        // 1×1 GEMM: c = silu(bias + a*b), silu built on exp_fast
+        let mut c = vec![0.0f32];
+        gemm_bias_act(1, 1, 1, &[2.0], &[3.0], Some(&[0.5]), Epilogue::Silu,
+                      None, &mut c);
+        let x = 0.5f32 + 2.0 * 3.0;
+        assert_eq!(c[0].to_bits(), (x / (1.0 + exp_fast(-x))).to_bits());
+        // and tracks the libm definition well inside the parity budget
+        let libm = x / (1.0 + (-x).exp());
+        assert!((c[0] - libm).abs() <= 1e-6 * libm.abs());
+    }
+
+    #[test]
+    fn exp_fast_is_exact_at_zero_and_tracks_libm() {
+        assert_eq!(exp_fast(0.0), 1.0);
+        assert_eq!(exp_fast(-0.0), 1.0);
+        for i in -8700..=8800 {
+            let x = i as f32 * 0.01; // [-87, 88]: normal-range expf
+            let want = x.exp();
+            let got = exp_fast(x);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-6,
+                    "x={x}: libm {want} vs fast {got} (rel {rel})");
+        }
+        // non-finite / extreme semantics match the libm form
+        assert!(exp_fast(f32::NAN).is_nan());
+        assert_eq!(exp_fast(f32::INFINITY), f32::INFINITY);
+        assert_eq!(exp_fast(100.0), f32::INFINITY); // libm overflow region
+        // saturation starts right at the clamp point — no band where
+        // the result silently underestimates
+        assert_eq!(exp_fast(88.31), f32::INFINITY);
+        assert!(exp_fast(88.3).is_finite());
+        assert!((exp_fast(88.3) / 88.3f32.exp() - 1.0).abs() < 1e-6);
+        assert!(exp_fast(f32::NEG_INFINITY) < 1.2e-38); // flushed, not 0
+        assert!(silu(f32::NAN).is_nan());
+        assert!(silu(f32::NEG_INFINITY).is_nan()); // -inf/inf, as libm
+        assert_eq!(silu(f32::INFINITY), f32::INFINITY);
+        // deep saturation: exact -0.0 on the left (x/inf), identity on
+        // the right (denominator rounds to 1.0)
+        assert_eq!(silu(-200.0), 0.0);
+        assert!(silu(-200.0).is_sign_negative());
+        assert_eq!(silu(200.0), 200.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "A is not m×k")]
+    fn shape_mismatch_panics() {
+        let mut c = vec![0.0f32; 4];
+        gemm(2, 2, 3, &[0.0; 5], &[0.0; 6], &mut c);
+    }
+}

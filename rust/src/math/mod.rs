@@ -1,6 +1,8 @@
-//! Numerical substrate: vector ops, special functions, statistics.
+//! Numerical substrate: vector ops, the batched-GEMM kernel behind the
+//! native model backend, special functions, statistics.
 
 pub mod erf;
+pub mod gemm;
 pub mod stats;
 pub mod vec_ops;
 

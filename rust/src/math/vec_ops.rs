@@ -63,9 +63,15 @@ pub fn scale(a: &mut [f64], s: f64) {
     }
 }
 
+/// Column-wise mean over `rows`. An empty input has no dimensionality,
+/// so it returns the empty vector (the seed indexed `rows[0]` and
+/// panicked) — callers that need a fixed-width zero mean must handle
+/// the empty case themselves.
 pub fn mean_axis0(rows: &[Vec<f64>]) -> Vec<f64> {
-    let d = rows[0].len();
-    let mut m = vec![0.0; d];
+    let Some(first) = rows.first() else {
+        return Vec::new();
+    };
+    let mut m = vec![0.0; first.len()];
     for r in rows {
         axpy(&mut m, 1.0, r);
     }
@@ -82,6 +88,8 @@ pub fn to_bits_vec(v: &[f64]) -> Vec<u64> {
 
 /// Reflection of `xi` along `v` (Alg 3 line 6): xi - 2 v <v,xi>/||v||^2.
 pub fn reflect_into(out: &mut [f64], xi: &[f64], v: &[f64]) {
+    debug_assert_eq!(out.len(), xi.len());
+    debug_assert_eq!(out.len(), v.len());
     let v_sq = norm_sq(v).max(1e-300);
     let coef = 2.0 * dot(v, xi) / v_sq;
     for i in 0..out.len() {
@@ -136,5 +144,13 @@ mod tests {
     fn mean_axis0_works() {
         let rows = vec![vec![1.0, 2.0], vec![3.0, 6.0]];
         assert_eq!(mean_axis0(&rows), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_axis0_empty_input_is_empty_not_a_panic() {
+        let rows: Vec<Vec<f64>> = Vec::new();
+        assert_eq!(mean_axis0(&rows), Vec::<f64>::new());
+        // single empty row is also well-defined
+        assert_eq!(mean_axis0(&[Vec::new()]), Vec::<f64>::new());
     }
 }

@@ -44,6 +44,43 @@ impl VariantInfo {
         DdpmSchedule::from_abar(self.abar.clone())
     }
 
+    /// Synthetic in-memory variant for tests and benches: input layer
+    /// → `blocks` residual hidden blocks → output layer, in exactly
+    /// the layout `NativeMlp::from_flat` validates, with a geometric
+    /// 0.95 `abar` schedule of `k_steps` entries and no artifacts.
+    /// The single source of truth for toy layouts — don't hand-roll
+    /// `weights_layout` in test scaffolding.
+    pub fn toy(name: &str, d: usize, cond_dim: usize, hidden: usize,
+               blocks: usize, k_steps: usize) -> VariantInfo {
+        let temb_dim = crate::model::mlp::TEMB_DIM;
+        let mut layout = vec![(d + temb_dim + cond_dim, hidden)];
+        for _ in 0..blocks {
+            layout.push((hidden, hidden));
+        }
+        layout.push((hidden, d));
+        VariantInfo {
+            name: name.into(),
+            d,
+            cond_dim,
+            hidden,
+            layers: blocks + 1,
+            temb_dim,
+            k_steps,
+            train_loss: 0.0,
+            artifacts: Default::default(),
+            weights_file: String::new(),
+            weights_layout: layout,
+            abar: (1..=k_steps).map(|i| 0.95f64.powi(i as i32)).collect(),
+            target: TargetSpec::Env { task: name.into() },
+            env: None,
+        }
+    }
+
+    /// Total f32 count of the flat weights buffer this layout expects.
+    pub fn weights_len(&self) -> usize {
+        self.weights_layout.iter().map(|(a, b)| a * b + b).sum()
+    }
+
     /// Smallest compiled batch size >= n (None if n exceeds the max).
     pub fn batch_for(&self, n: usize) -> Option<usize> {
         self.artifacts.keys().copied().find(|&b| b >= n)

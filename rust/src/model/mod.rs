@@ -2,7 +2,9 @@
 //!
 //! * [`manifest`] — typed loader for artifacts/manifest.json.
 //! * [`mlp`] — rust-native MLP forward over `weights_*.bin` (parity
-//!   oracle for the HLO path + a fast fallback backend).
+//!   oracle for the HLO path + a fast fallback backend); batched calls
+//!   run as a GEMM pipeline with a reusable workspace (see
+//!   `math::gemm`).
 //! * [`gmm`] — analytic posterior-mean oracles for GMM targets (exact
 //!   `E[x0 | y_i]` / SL `m(t, y)`; drives the theory benches with zero
 //!   network error).
@@ -23,7 +25,7 @@ use anyhow::Result;
 
 pub use gmm::{Gmm, GmmDdpmOracle, GmmSlOracle};
 pub use manifest::{Manifest, TargetSpec, VariantInfo};
-pub use mlp::NativeMlp;
+pub use mlp::{NativeMlp, Workspace};
 pub use parallel::ParallelModel;
 
 use crate::schedule::DdpmSchedule;

@@ -7,7 +7,15 @@
 //! row's computation happens entirely inside the inner model exactly as
 //! it would unsharded, so outputs are **bit-identical for every
 //! `pool_size`** — sharding changes wall-clock, never samples (the
-//! float summation order per sample is untouched).
+//! float summation order per sample is untouched). This composes with
+//! `NativeMlp`'s GEMM batch path: each shard runs the whole pipeline
+//! on its row range against its own thread-local workspace, and the
+//! GEMM reduction order is row-independent by construction (see
+//! `math::gemm`), so wrapping the MLP stays bit-transparent too.
+//! Sharding at the row level (here) rather than inside each layer's
+//! GEMM keeps a shard's activations resident in one core's cache
+//! across all layers; `math::gemm::gemm_sharded` exists for the
+//! complementary case of one very large standalone product.
 //!
 //! HLO-backed models note: `HloModel` pads batches up to the nearest
 //! compiled size, so sharding changes the padding pattern and may

@@ -91,6 +91,17 @@ impl PicardSampler {
         for pos in 0..w {
             ys[pos * d..(pos + 1) * d].copy_from_slice(&base);
         }
+        // conditioning rows never change across sweeps: fill once
+        if c_dim > 0 {
+            for pos in 0..w {
+                cond_rows[pos * c_dim..(pos + 1) * c_dim]
+                    .copy_from_slice(cond);
+            }
+        }
+        // sweep scratch, allocated once per sample (the sweep loop
+        // itself is allocation-free)
+        let mut eval_in = vec![0.0; w * d];
+        let mut acc = vec![0.0; d];
 
         while done < k {
             let w_eff = w.min(k - done);
@@ -98,7 +109,8 @@ impl PicardSampler {
             loop {
                 sweeps_here += 1;
                 stats.sweeps += 1;
-                // one parallel round: x0hat at all window iterates
+                // one parallel round: evaluate x0hat at the *previous*
+                // iterate of every window transition idx -> idx-1
                 for pos in 0..w_eff {
                     let idx = k - done - pos; // DDPM index of the iterate
                     let src: &[f64] = if pos == 0 {
@@ -106,43 +118,26 @@ impl PicardSampler {
                     } else {
                         &ys[(pos - 1) * d..pos * d]
                     };
-                    // x0 eval happens at the *previous* iterate of each
-                    // transition idx -> idx-1
-                    let _ = src;
+                    eval_in[pos * d..(pos + 1) * d].copy_from_slice(src);
                     ts[pos] = idx as f64;
                 }
-                // evaluate model at the iterate for each transition
-                let mut eval_in = vec![0.0; w_eff * d];
-                for pos in 0..w_eff {
-                    let src: &[f64] = if pos == 0 {
-                        &base
-                    } else {
-                        &ys[(pos - 1) * d..pos * d]
-                    };
-                    eval_in[pos * d..(pos + 1) * d].copy_from_slice(src);
-                }
-                if c_dim > 0 {
-                    for pos in 0..w_eff {
-                        cond_rows[pos * c_dim..(pos + 1) * c_dim]
-                            .copy_from_slice(cond);
-                    }
-                }
-                self.model.denoise_batch(&eval_in, &ts[..w_eff],
+                self.model.denoise_batch(&eval_in[..w_eff * d],
+                                         &ts[..w_eff],
                                          &cond_rows[..w_eff * c_dim],
                                          w_eff, &mut x0[..w_eff * d])?;
                 stats.model_calls += w_eff;
                 stats.parallel_rounds += 1;
 
                 // Picard update: accumulate increments from the window head
-                let mut acc = base.clone();
+                acc.copy_from_slice(&base);
                 let mut max_change = 0.0f64;
                 for pos in 0..w_eff {
                     let idx = k - done - pos; // transition idx -> idx-1
                     let row = idx - 1;
-                    let prev: Vec<f64> = if pos == 0 {
-                        base.clone()
+                    let prev: &[f64] = if pos == 0 {
+                        &base
                     } else {
-                        ys[(pos - 1) * d..pos * d].to_vec()
+                        &ys[(pos - 1) * d..pos * d]
                     };
                     let xi = noise.xi_row(row, d);
                     for i in 0..d {
@@ -177,8 +172,7 @@ impl PicardSampler {
             base.copy_from_slice(&ys[(w_eff - 1) * d..w_eff * d]);
             done += w_eff;
             for pos in 0..w.min(k - done) {
-                let src = base.clone();
-                ys[pos * d..(pos + 1) * d].copy_from_slice(&src);
+                ys[pos * d..(pos + 1) * d].copy_from_slice(&base);
             }
         }
         Ok((base, stats))

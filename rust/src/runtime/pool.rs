@@ -222,6 +222,21 @@ impl ThreadPool {
         }
         shards
     }
+
+    /// Like [`run_sharded`](Self::run_sharded), but shard boundaries
+    /// land on multiples of `block` (the last shard absorbs the
+    /// remainder), and `f` receives *item* ranges over `0..n`. Used by
+    /// kernels whose inner loop is register-tiled in blocks of rows
+    /// (e.g. `math::gemm`): aligned boundaries keep every shard on the
+    /// full-width micro-kernel except at the very end of the matrix.
+    pub fn run_sharded_blocks<F: Fn(usize, usize) + Sync>(
+        &self, n: usize, block: usize, shards: usize, f: F) -> usize {
+        let block = block.max(1);
+        let blocks = n.div_ceil(block);
+        self.run_sharded(blocks, shards, |bs, be| {
+            f(bs * block, (be * block).min(n))
+        })
+    }
 }
 
 impl Drop for ThreadPool {
@@ -298,6 +313,32 @@ mod tests {
                 for (i, h) in hits.iter().enumerate() {
                     assert_eq!(h.load(Ordering::Relaxed), 1,
                                "index {i} (n={n} shards={shards})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_sharding_covers_all_items_on_aligned_boundaries() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 1, 3, 4, 5, 16, 17, 31] {
+            for block in [1usize, 2, 4, 7] {
+                for shards in [1usize, 2, 3, 8] {
+                    let hits: Vec<AtomicUsize> =
+                        (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    pool.run_sharded_blocks(n, block, shards, |s, e| {
+                        assert!(s % block == 0,
+                                "unaligned shard start {s} (block {block})");
+                        assert!(e == n || e % block == 0);
+                        for i in s..e {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(h.load(Ordering::Relaxed), 1,
+                                   "item {i} (n={n} block={block} \
+                                    shards={shards})");
+                    }
                 }
             }
         }

@@ -1,9 +1,11 @@
 //! Property-based sweeps over the pure substrates (no PJRT needed):
 //! JSON roundtrips, quality-metric axioms, batcher invariants under
 //! random queues, Picard-vs-sequential convergence, schedule identities
-//! at random K, and worker-pool sharding invariants (sharded ==
-//! unsharded bitwise; GRS accept counts invariant under pool size and
-//! kernel backend).
+//! at random K, GEMM-vs-naive-reference parity (including the sharded
+//! kernel's bitwise pool invariance and the native MLP's GEMM batch
+//! path vs its scalar reference), and worker-pool sharding invariants
+//! (sharded == unsharded bitwise; GRS accept counts invariant under
+//! pool size and kernel backend).
 
 mod common;
 
@@ -171,6 +173,84 @@ fn asd_engine_invariants_random_theta() {
         // sample is finite and 2-D
         assert_eq!(out.y0.len(), 2);
         assert!(out.y0.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn gemm_matches_naive_reference_and_shards_bitwise() {
+    use asd::math::gemm::{gemm_bias_act, gemm_ref, gemm_sharded, Epilogue};
+
+    prop::check("gemm-vs-naive", 40, |g| {
+        // odd/rectangular shapes straddling the register tile (MR=4)
+        // and the k cache panel (KC=256); B=0 and B=1 edge cases
+        let m = *g.pick(&[0usize, 1, 2, 3, 4, 5, 7, 12, 33]);
+        let n = g.usize_in(1, 24);
+        let k = *g.pick(&[1usize, 2, 7, 31, 64, 300]);
+        let to_f32 = |v: Vec<f64>| -> Vec<f32> {
+            v.into_iter().map(|x| x as f32).collect()
+        };
+        let a = to_f32(g.normal_vec(m * k));
+        let b = to_f32(g.normal_vec(k * n));
+        let bias_v = to_f32(g.normal_vec(n));
+        let res_v = to_f32(g.normal_vec(m * n));
+        let bias = g.bool().then_some(&bias_v[..]);
+        let res = g.bool().then_some(&res_v[..]);
+        let epi = if g.bool() { Epilogue::Silu } else { Epilogue::Linear };
+
+        let mut want = vec![0.0f32; m * n];
+        gemm_ref(m, n, k, &a, &b, bias, epi, res, &mut want);
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+
+        let mut got = vec![0.0f32; m * n];
+        gemm_bias_act(m, n, k, &a, &b, bias, epi, res, &mut got);
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want_bits, got_bits,
+                   "blocked kernel diverged: m={m} n={n} k={k} epi={epi:?}");
+
+        // M-sharded execution on the global pool is bit-invariant in
+        // the shard count
+        for shards in [2usize, 3, 8, 64] {
+            let mut sh = vec![0.0f32; m * n];
+            gemm_sharded(m, n, k, &a, &b, bias, epi, res, &mut sh, shards);
+            let sh_bits: Vec<u32> = sh.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want_bits, sh_bits,
+                       "shards={shards} changed bits: m={m} n={n} k={k}");
+        }
+    });
+}
+
+#[test]
+fn native_mlp_gemm_path_matches_scalar_ref() {
+    use asd::model::{DenoiseModel, NativeMlp, VariantInfo};
+
+    prop::check("mlp-gemm-vs-ref", 15, |g| {
+        let d = g.usize_in(1, 6);
+        let cond_dim = *g.pick(&[0usize, 3]);
+        let hidden = g.usize_in(1, 32);
+        let blocks = g.usize_in(0, 3);
+        let k_steps = g.usize_in(5, 40);
+        let info = VariantInfo::toy("prop", d, cond_dim, hidden, blocks,
+                                    k_steps);
+        let flat: Vec<f32> = g.normal_vec(info.weights_len())
+            .into_iter()
+            .map(|v| (v * 0.5) as f32)
+            .collect();
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        for n in [0usize, 1, 3, 4, 5, 17] {
+            let ys = g.normal_vec(n * d);
+            let ts: Vec<f64> =
+                (0..n).map(|_| g.usize_in(1, k_steps) as f64).collect();
+            let cond = g.normal_vec(n * cond_dim);
+            let mut want = vec![0.0; n * d];
+            mlp.denoise_batch_ref(&ys, &ts, &cond, n, &mut want).unwrap();
+            let mut got = vec![0.0; n * d];
+            mlp.denoise_batch(&ys, &ts, &cond, n, &mut got).unwrap();
+            for i in 0..n * d {
+                let tol = 1e-5 * want[i].abs().max(1.0);
+                assert!((want[i] - got[i]).abs() <= tol,
+                        "n={n} i={i}: ref {} vs gemm {}", want[i], got[i]);
+            }
+        }
     });
 }
 
