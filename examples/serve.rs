@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
             pool_size,
             ..Default::default()
         },
+        ..Default::default()
     });
     // serve two real models side by side
     for variant in ["gmm2d", "latent16"] {
@@ -93,8 +94,9 @@ fn main() -> anyhow::Result<()> {
              n_requests as f64 / elapsed);
     println!("mean latency:     {:.1} ms service + {:.1} ms queue",
              m.mean_service_ms, m.mean_queue_wait_ms);
-    println!("dynamic batching: {} requests ganged into {} lockstep groups",
-             m.batched_requests, m.batched_groups);
+    println!("dynamic batching: {} requests fused into {} groups \
+              ({:.1} rows/fused round)",
+             m.batched_requests, m.batched_groups, m.fused_rows_per_round);
     if asd_count > 0 && seq_count > 0 {
         println!(
             "rounds/request:   ASD {:.1} vs sequential {:.1} ({:.2}x fewer)",

@@ -18,7 +18,10 @@
 
 use std::sync::Arc;
 
+use asd::coordinator::ServerConfig;
 use asd::ddpm::BatchedSequentialSampler;
+use asd::exp::serve_bench::{bench_coordinator, bench_coordinator_json,
+                            format_coord_rows};
 use asd::exp::speedup::{bench_parallel_json, format_pool_rows,
                         outputs_bit_identical, sweep_pool_sizes,
                         write_bench_json, ForwardBenchRow};
@@ -146,6 +149,28 @@ fn main() -> anyhow::Result<()> {
     write_bench_json(path, &doc)?;
     println!("wrote {} ({} forward rows, {} sweep rows)",
              path.display(), forward_rows.len(), rows.len());
+
+    // --- coordinator: fused serving on the toy MLP variant ------------
+    // closed-loop mixed traffic (sequential / ASD / Picard) at rising
+    // concurrency; the fused-round row count is the batch the GEMM
+    // forward actually sees. Emits BENCH_coordinator.json.
+    println!("\n[coordinator: fused serving, toy MLP d={d} \
+              hidden={hidden}]");
+    {
+        let coord_model: Arc<dyn DenoiseModel> = mlp.clone();
+        let rows = bench_coordinator(
+            coord_model, "toy-bench", &[1, 8, 64], 64,
+            &ServerConfig { workers: 2, ..Default::default() }, 8)?;
+        print!("{}", format_coord_rows(&rows));
+        let doc = bench_coordinator_json("toy-bench", k_steps, &rows);
+        let coord_path = std::path::Path::new("BENCH_coordinator.json");
+        write_bench_json(coord_path, &doc)?;
+        println!("wrote {}", coord_path.display());
+        // the 64-way burst must actually fuse rows across requests
+        let fused = rows.last().unwrap().fused_rows_per_round;
+        assert!(fused > 1.0,
+                "concurrency 64 served per-request (rows/round {fused:.2})");
+    }
 
     // --- lockstep batched sequential: one sharded call per step -------
     println!("\n[lockstep batched sequential, n=32 chains, same model]");

@@ -22,9 +22,11 @@ use crate::math::vec_ops::lincomb_into;
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::runtime::pool::PoolConfig;
 use crate::runtime::HloKernels;
+use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
 
 /// Which implementation computes the speculation chain and the GRS.
 /// The denoiser itself is always whatever `DenoiseModel` was given.
+#[derive(Clone)]
 pub enum KernelBackend {
     /// Rust-native (default: PJRT dispatch overhead dominates these
     /// O(theta*d) ops on the CPU testbed).
@@ -34,6 +36,7 @@ pub enum KernelBackend {
     Hlo(HloKernels),
 }
 
+#[derive(Clone)]
 pub struct AsdConfig {
     /// Speculation length; 0 = ASD-infinity (speculate to the end).
     pub theta: usize,
@@ -131,10 +134,91 @@ pub struct AsdOutput {
     pub wallclock_s: f64,
 }
 
+/// The ASD engine — a thin [`crate::sampler::drive`] loop over
+/// [`AsdStepMachine`]. Public API (`sample`, `sample_cond`,
+/// `sample_with_noise`) and outputs are unchanged from the closed-loop
+/// implementation it replaced; the machine form exists so the serving
+/// coordinator can fuse many requests' rounds into one batched call.
 pub struct AsdEngine {
     pub model: Arc<dyn DenoiseModel>,
     pub config: AsdConfig,
-    // preallocated chain buffers (sized K x d)
+}
+
+impl AsdEngine {
+    pub fn new(model: Arc<dyn DenoiseModel>, config: AsdConfig) -> AsdEngine {
+        // sharded verify rounds on the one global pool (no-op wrap when
+        // pool_size <= 1); sharding is bit-transparent to the sampler
+        let model = ParallelModel::wrap(model, config.pool);
+        AsdEngine { model, config }
+    }
+
+    /// Sample with a fresh Philox stream for `seed`.
+    pub fn sample(&mut self, seed: u64) -> Result<AsdOutput> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_owned_noise(noise, &[])
+    }
+
+    pub fn sample_cond(&mut self, seed: u64, cond: &[f64]) -> Result<AsdOutput> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_owned_noise(noise, cond)
+    }
+
+    /// Algorithm 1 with explicit noise streams (golden-trace parity).
+    /// Clones the streams for the machine; the `sample`/`sample_cond`
+    /// paths hand theirs over without a copy.
+    pub fn sample_with_noise(&mut self, noise: &NoiseStreams, cond: &[f64])
+                             -> Result<AsdOutput> {
+        self.sample_owned_noise(noise.clone(), cond)
+    }
+
+    fn sample_owned_noise(&mut self, noise: NoiseStreams, cond: &[f64])
+                          -> Result<AsdOutput> {
+        let t_start = std::time::Instant::now();
+        let mut machine = AsdStepMachine::new(
+            self.model.clone(),
+            self.config.theta,
+            self.config.eval_tail,
+            self.config.backend.clone(),
+            noise,
+            cond,
+        )?;
+        let y0 = crate::sampler::drive(&mut machine, &self.model,
+                                       self.config.pool)?;
+        Ok(AsdOutput {
+            y0,
+            stats: machine.into_stats(),
+            wallclock_s: t_start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Where the ASD state machine is between rounds.
+enum AsdPhase {
+    /// demand one proposal row: x0hat at (y, i_cur) — Alg 1 line 6
+    Propose,
+    /// demand `n_eval` verify rows for the speculated chain
+    Verify { th: usize, tail: bool, n_eval: usize },
+    Done,
+}
+
+/// Algorithm 1 (+ Verifier, Algorithm 2) as a poll/resume state
+/// machine. Each demand is one parallel round: a single proposal row,
+/// or the batched verification of a speculated window. All sampler
+/// math (speculation chain, GRS scan) runs inside `resume`; the machine
+/// never calls the model. Demands answered row-for-row reproduce the
+/// closed-loop engine bit-for-bit — regardless of whether the executor
+/// evaluates them solo or fused with other requests' rows (native
+/// models are row-independent; see `model::parallel`).
+pub struct AsdStepMachine {
+    model: Arc<dyn DenoiseModel>,
+    theta: usize,
+    eval_tail: bool,
+    backend: KernelBackend,
+    noise: NoiseStreams,
+    cond: Vec<f64>,
+    // chain buffers (sized K x d, as the closed-loop engine had)
     m_hat: Vec<f64>,
     y_hat: Vec<f64>,
     x0_eval: Vec<f64>,
@@ -144,19 +228,32 @@ pub struct AsdEngine {
     m_buf: Vec<f64>,
     z_buf: Vec<f64>,
     v_buf: Vec<f64>,
+    // loop state
+    y: Vec<f64>,
+    x0a: Vec<f64>,
+    i_cur: usize,
+    have_x0: bool,
+    /// staged proposal timestep (len 1)
+    prop_ts: Vec<f64>,
+    phase: AsdPhase,
+    stats: AsdStats,
 }
 
-impl AsdEngine {
-    pub fn new(model: Arc<dyn DenoiseModel>, config: AsdConfig) -> AsdEngine {
-        // sharded verify rounds on the one global pool (no-op wrap when
-        // pool_size <= 1); sharding is bit-transparent to the sampler
-        let model = ParallelModel::wrap(model, config.pool);
+impl AsdStepMachine {
+    pub fn new(model: Arc<dyn DenoiseModel>, theta: usize, eval_tail: bool,
+               backend: KernelBackend, noise: NoiseStreams, cond: &[f64])
+               -> Result<AsdStepMachine> {
+        anyhow::ensure!(cond.len() == model.cond_dim(),
+                        "conditioning length {} != cond_dim {}",
+                        cond.len(), model.cond_dim());
         let d = model.dim();
         let k = model.k_steps();
         let c = model.cond_dim();
-        AsdEngine {
-            model,
-            config,
+        let mut m = AsdStepMachine {
+            theta,
+            eval_tail,
+            backend,
+            cond: cond.to_vec(),
             m_hat: vec![0.0; k * d],
             y_hat: vec![0.0; k * d],
             x0_eval: vec![0.0; (k + 1) * d],
@@ -166,191 +263,181 @@ impl AsdEngine {
             m_buf: vec![0.0; d],
             z_buf: vec![0.0; d],
             v_buf: vec![0.0; d],
+            y: noise.y_k.clone(),
+            x0a: vec![0.0; d],
+            i_cur: k,
+            have_x0: false,
+            prop_ts: vec![k as f64],
+            phase: if k == 0 { AsdPhase::Done } else { AsdPhase::Propose },
+            noise,
+            model,
+            stats: AsdStats::default(),
+        };
+        if m.i_cur > 0 {
+            m.stats.iterations = 1; // entering the first iteration
         }
+        Ok(m)
+    }
+
+    pub fn stats(&self) -> &AsdStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> AsdStats {
+        self.stats
     }
 
     /// Effective speculation cap per iteration.
     fn theta_for(&self, i_cur: usize) -> usize {
-        let want = if self.config.theta == 0 { i_cur } else { self.config.theta };
-        let capped = match &self.config.backend {
+        let want = if self.theta == 0 { i_cur } else { self.theta };
+        let capped = match &self.backend {
             KernelBackend::Hlo(k) => want.min(k.t_steps),
             KernelBackend::Native => want,
         };
         capped.min(i_cur).max(1)
     }
 
-    /// Sample with a fresh Philox stream for `seed`.
-    pub fn sample(&mut self, seed: u64) -> Result<AsdOutput> {
-        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
-                                       self.model.dim());
-        self.sample_with_noise(&noise, &[])
-    }
+    /// With x0a valid at (y, i_cur): speculate, then either stage the
+    /// verify demand or (when the window needs no verify rows) run the
+    /// scan immediately and fall through to the next iteration.
+    fn advance_from_x0(&mut self) -> Result<()> {
+        loop {
+            let th = self.theta_for(self.i_cur);
+            self.run_speculate(th)?;
 
-    pub fn sample_cond(&mut self, seed: u64, cond: &[f64]) -> Result<AsdOutput> {
-        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
-                                       self.model.dim());
-        self.sample_with_noise(&noise, cond)
-    }
-
-    /// Algorithm 1 with explicit noise streams (golden-trace parity).
-    pub fn sample_with_noise(&mut self, noise: &NoiseStreams, cond: &[f64])
-                             -> Result<AsdOutput> {
-        let t_start = std::time::Instant::now();
-        let d = self.model.dim();
-        let k = self.model.k_steps();
-        anyhow::ensure!(cond.len() == self.model.cond_dim(),
-                        "conditioning length {} != cond_dim {}",
-                        cond.len(), self.model.cond_dim());
-        // borrow the schedule through a cheap Arc clone so the borrow is
-        // not tied to `self` (we mutate chain buffers below); avoids a
-        // ~56 KB schedule copy per sample at K=1000 (EXPERIMENTS §Perf)
-        let model = self.model.clone();
-        let sched = model.schedule();
-        let (c1, c2, sigma) = (&sched.c1, &sched.c2, &sched.sigma);
-
-        let mut stats = AsdStats::default();
-        let mut y = noise.y_k.clone();
-        let mut i_cur = k;
-        // when true, x0a already holds x0hat at (y, i_cur) — chained
-        // from the previous verify round's accepted tail (no
-        // per-iteration Vec: the tail slot is copied straight into x0a)
-        let mut have_x0 = false;
-        let mut x0a = vec![0.0; d];
-
-        while i_cur > 0 {
-            stats.iterations += 1;
-            let th = self.theta_for(i_cur);
-
-            // ---- proposal round: one model call (Alg 1 line 6) ----
-            if !have_x0 {
-                let t_round = std::time::Instant::now();
-                self.model.denoise_one(&y, i_cur, cond, &mut x0a)?;
-                stats.model_calls += 1;
-                stats.parallel_rounds += 1;
-                stats.round_batches.push(1);
-                stats.round_shards.push(1);
-                stats.round_latency_s
-                    .push(t_round.elapsed().as_secs_f64());
-            }
-
-            // ---- speculate (Alg 1 lines 7-9; L1 kernel `speculate`) ----
-            // chain position k covers transition j -> j-1, j = i_cur - k
-            self.run_speculate(&y, &x0a, i_cur, th, c1, c2, sigma, noise)?;
-
-            // ---- verify round: parallel batch of model calls ----
             // positions 1..th-1 evaluate x0hat at the proposed points
             // (position 0 reuses x0a — Lemma 13); `eval_tail` adds the
             // final chain point so an all-accept window chains onward.
-            let tail = self.config.eval_tail && i_cur - th > 0 && th >= 1;
+            let tail = self.eval_tail && self.i_cur - th > 0 && th >= 1;
             let n_eval = (th - 1) + tail as usize;
             if n_eval > 0 {
+                let d = self.model.dim();
                 for (slot, kpos) in (1..th).enumerate() {
-                    let j = i_cur - kpos; // transition j -> j-1
-                    self.eval_in[slot * d..(slot + 1) * d]
-                        .copy_from_slice(&self.y_hat[(kpos - 1) * d..kpos * d]);
+                    let j = self.i_cur - kpos; // transition j -> j-1
+                    self.eval_in[slot * d..(slot + 1) * d].copy_from_slice(
+                        &self.y_hat[(kpos - 1) * d..kpos * d]);
                     self.eval_ts[slot] = j as f64;
                 }
                 if tail {
                     let slot = th - 1;
-                    self.eval_in[slot * d..(slot + 1) * d]
-                        .copy_from_slice(&self.y_hat[(th - 1) * d..th * d]);
-                    self.eval_ts[slot] = (i_cur - th) as f64;
+                    self.eval_in[slot * d..(slot + 1) * d].copy_from_slice(
+                        &self.y_hat[(th - 1) * d..th * d]);
+                    self.eval_ts[slot] = (self.i_cur - th) as f64;
                 }
                 let c_dim = self.model.cond_dim();
                 if c_dim > 0 {
                     for slot in 0..n_eval {
                         self.eval_cond[slot * c_dim..(slot + 1) * c_dim]
-                            .copy_from_slice(cond);
+                            .copy_from_slice(&self.cond);
                     }
                 }
-                let t_round = std::time::Instant::now();
-                self.model.denoise_batch(
-                    &self.eval_in[..n_eval * d],
-                    &self.eval_ts[..n_eval],
-                    &self.eval_cond[..n_eval * c_dim.max(0)],
-                    n_eval,
-                    &mut self.x0_eval[..n_eval * d],
-                )?;
-                stats.model_calls += n_eval;
-                stats.parallel_rounds += 1;
-                stats.round_batches.push(n_eval);
-                stats.round_shards.push(self.config.pool.shards_for(n_eval));
-                stats.round_latency_s.push(t_round.elapsed().as_secs_f64());
+                self.phase = AsdPhase::Verify { th, tail, n_eval };
+                return Ok(());
             }
 
-            // ---- verifier (Alg 2): sequential scan over parallel GRS ----
-            let mut advanced = 0usize;
-            let mut tail_chained = false;
-            for kpos in 0..th {
-                let j = i_cur - kpos; // transition j -> j-1, schedule row j-1
-                let row = j - 1;
-                // target mean: c1 x0hat(y_base, j) + c2 y_base
-                let x0_at: &[f64] = if kpos == 0 {
-                    &x0a
-                } else {
-                    &self.x0_eval[(kpos - 1) * d..kpos * d]
-                };
-                let y_base: &[f64] = if kpos == 0 {
-                    &y
-                } else {
-                    &self.y_hat[(kpos - 1) * d..kpos * d]
-                };
-                lincomb_into(&mut self.m_buf, c1[row], x0_at, c2[row], y_base);
-                let accept = grs_native(
-                    noise.u[row],
-                    noise.xi_row(row, d),
-                    &self.m_hat[kpos * d..(kpos + 1) * d],
-                    &self.m_buf,
-                    sigma[row],
-                    &mut self.z_buf,
-                    &mut self.v_buf,
-                );
-                y.copy_from_slice(&self.z_buf);
-                advanced += 1;
-                if accept {
-                    stats.accepted += 1;
-                    if kpos == th - 1 && tail {
-                        tail_chained = true;
-                    }
-                } else {
-                    stats.rejected += 1;
-                    break;
-                }
+            // zero-eval window (th == 1, no tail): scan right away
+            self.scan(th, false);
+            if !self.next_iteration() {
+                return Ok(()); // Done or Propose staged
             }
-            i_cur -= advanced;
-            if tail_chained {
-                // accepted tail: z == y_hat[th-1], whose x0hat is the
-                // last verify slot — reuse it as the next proposal
-                x0a.copy_from_slice(&self.x0_eval[(th - 1) * d..th * d]);
-            }
-            have_x0 = tail_chained;
+            // have_x0 carried over (cannot actually happen without a
+            // tail slot, but the loop keeps it structurally safe)
         }
-
-        Ok(AsdOutput {
-            y0: y,
-            stats,
-            wallclock_s: t_start.elapsed().as_secs_f64(),
-        })
     }
 
-    fn run_speculate(&mut self, y: &[f64], x0a: &[f64], i_cur: usize,
-                     th: usize, c1: &[f64], c2: &[f64], sigma: &[f64],
-                     noise: &NoiseStreams) -> Result<()> {
+    /// Verifier scan (Alg 2): sequential GRS over the window.
+    fn scan(&mut self, th: usize, tail: bool) {
         let d = self.model.dim();
-        match &self.config.backend {
+        let model = self.model.clone();
+        let sched = model.schedule();
+        let (c1, c2, sigma) = (&sched.c1, &sched.c2, &sched.sigma);
+        let mut advanced = 0usize;
+        let mut tail_chained = false;
+        for kpos in 0..th {
+            let j = self.i_cur - kpos; // transition j -> j-1, schedule row j-1
+            let row = j - 1;
+            // target mean: c1 x0hat(y_base, j) + c2 y_base
+            let x0_at: &[f64] = if kpos == 0 {
+                &self.x0a
+            } else {
+                &self.x0_eval[(kpos - 1) * d..kpos * d]
+            };
+            let y_base: &[f64] = if kpos == 0 {
+                &self.y
+            } else {
+                &self.y_hat[(kpos - 1) * d..kpos * d]
+            };
+            lincomb_into(&mut self.m_buf, c1[row], x0_at, c2[row], y_base);
+            let accept = grs_native(
+                self.noise.u[row],
+                self.noise.xi_row(row, d),
+                &self.m_hat[kpos * d..(kpos + 1) * d],
+                &self.m_buf,
+                sigma[row],
+                &mut self.z_buf,
+                &mut self.v_buf,
+            );
+            self.y.copy_from_slice(&self.z_buf);
+            advanced += 1;
+            if accept {
+                self.stats.accepted += 1;
+                if kpos == th - 1 && tail {
+                    tail_chained = true;
+                }
+            } else {
+                self.stats.rejected += 1;
+                break;
+            }
+        }
+        self.i_cur -= advanced;
+        if tail_chained {
+            // accepted tail: z == y_hat[th-1], whose x0hat is the last
+            // verify slot — reuse it as the next proposal
+            self.x0a.copy_from_slice(&self.x0_eval[(th - 1) * d..th * d]);
+        }
+        self.have_x0 = tail_chained;
+    }
+
+    /// After a scan: stage the next iteration. Returns `true` when the
+    /// caller (`advance_from_x0`) should keep going because `x0a` is
+    /// already valid for the new iteration.
+    fn next_iteration(&mut self) -> bool {
+        if self.i_cur == 0 {
+            self.phase = AsdPhase::Done;
+            return false;
+        }
+        self.stats.iterations += 1;
+        if self.have_x0 {
+            true
+        } else {
+            self.prop_ts[0] = self.i_cur as f64;
+            self.phase = AsdPhase::Propose;
+            false
+        }
+    }
+
+    /// Speculation chain (Alg 1 lines 7-9; L1 kernel `speculate`):
+    /// chain position k covers transition j -> j-1, j = i_cur - k.
+    fn run_speculate(&mut self, th: usize) -> Result<()> {
+        let d = self.model.dim();
+        let i_cur = self.i_cur;
+        let model = self.model.clone();
+        let sched = model.schedule();
+        let (c1, c2, sigma) = (&sched.c1, &sched.c2, &sched.sigma);
+        match &self.backend {
             KernelBackend::Native => {
                 // y_hat[k] = c1 x0a + c2 y_hat[k-1] + sigma xi
                 for kpos in 0..th {
                     let row = i_cur - kpos - 1;
                     let (head, tail_buf) = self.y_hat.split_at_mut(kpos * d);
                     let y_prev: &[f64] = if kpos == 0 {
-                        y
+                        &self.y
                     } else {
                         &head[(kpos - 1) * d..kpos * d]
                     };
                     let m_slice = &mut self.m_hat[kpos * d..(kpos + 1) * d];
-                    lincomb_into(m_slice, c1[row], x0a, c2[row], y_prev);
-                    let xi = noise.xi_row(row, d);
+                    lincomb_into(m_slice, c1[row], &self.x0a, c2[row], y_prev);
+                    let xi = self.noise.xi_row(row, d);
                     let y_slice = &mut tail_buf[..d];
                     for i in 0..d {
                         y_slice[i] = m_slice[i] + sigma[row] * xi[i];
@@ -367,15 +454,76 @@ impl AsdEngine {
                     c1v.push(c1[row]);
                     c2v.push(c2[row]);
                     sv.push(sigma[row]);
-                    xiv.extend_from_slice(noise.xi_row(row, d));
+                    xiv.extend_from_slice(self.noise.xi_row(row, d));
                 }
                 let (m_hat, y_hat) =
-                    kernels.speculate(y, x0a, &c1v, &c2v, &sv, &xiv)?;
+                    kernels.speculate(&self.y, &self.x0a, &c1v, &c2v, &sv,
+                                      &xiv)?;
                 self.m_hat[..th * d].copy_from_slice(&m_hat);
                 self.y_hat[..th * d].copy_from_slice(&y_hat);
             }
         }
         Ok(())
+    }
+}
+
+impl StepSampler for AsdStepMachine {
+    fn poll(&mut self) -> Result<SamplerPoll<'_>> {
+        let d = self.model.dim();
+        let c_dim = self.model.cond_dim();
+        match self.phase {
+            AsdPhase::Done => Ok(SamplerPoll::Done(&self.y)),
+            AsdPhase::Propose => Ok(SamplerPoll::Demand(DenoiseDemand {
+                ys: &self.y,
+                ts: &self.prop_ts,
+                cond: &self.cond,
+                n: 1,
+            })),
+            AsdPhase::Verify { n_eval, .. } => {
+                Ok(SamplerPoll::Demand(DenoiseDemand {
+                    ys: &self.eval_in[..n_eval * d],
+                    ts: &self.eval_ts[..n_eval],
+                    cond: &self.eval_cond[..n_eval * c_dim],
+                    n: n_eval,
+                }))
+            }
+        }
+    }
+
+    fn resume(&mut self, x0: &[f64], exec: RoundExec) -> Result<()> {
+        let d = self.model.dim();
+        match self.phase {
+            AsdPhase::Done => anyhow::bail!("resume after Done"),
+            AsdPhase::Propose => {
+                anyhow::ensure!(x0.len() == d,
+                                "proposal row length {} != d {d}", x0.len());
+                self.x0a.copy_from_slice(x0);
+                self.stats.model_calls += 1;
+                self.stats.parallel_rounds += 1;
+                self.stats.round_batches.push(1);
+                self.stats.round_shards.push(exec.shards);
+                self.stats.round_latency_s.push(exec.latency_s);
+                self.advance_from_x0()
+            }
+            AsdPhase::Verify { th, tail, n_eval } => {
+                anyhow::ensure!(x0.len() == n_eval * d,
+                                "verify rows length {} != {}", x0.len(),
+                                n_eval * d);
+                self.x0_eval[..n_eval * d].copy_from_slice(x0);
+                self.stats.model_calls += n_eval;
+                self.stats.parallel_rounds += 1;
+                self.stats.round_batches.push(n_eval);
+                self.stats.round_shards.push(exec.shards);
+                self.stats.round_latency_s.push(exec.latency_s);
+                self.scan(th, tail);
+                if self.next_iteration() {
+                    // tail-chained: x0a already valid, keep advancing
+                    self.advance_from_x0()
+                } else {
+                    Ok(())
+                }
+            }
+        }
     }
 }
 

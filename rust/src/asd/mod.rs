@@ -14,6 +14,7 @@ pub mod grs;
 pub mod sl_engine;
 
 pub use adaptive::AdaptiveTheta;
-pub use engine::{AsdConfig, AsdEngine, AsdOutput, AsdStats, KernelBackend};
+pub use engine::{AsdConfig, AsdEngine, AsdOutput, AsdStats, AsdStepMachine,
+                 KernelBackend};
 pub use grs::grs_native;
-pub use sl_engine::{SlAsd, SlAsdStats, SlSequential};
+pub use sl_engine::{SlAsd, SlAsdStats, SlAsdStepMachine, SlSequential};

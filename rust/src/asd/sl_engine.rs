@@ -15,6 +15,8 @@ use crate::asd::grs::grs_native;
 use crate::math::vec_ops::axpy_into;
 use crate::model::GmmSlOracle;
 use crate::rng::Philox;
+use crate::runtime::pool::PoolConfig;
+use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
 use crate::schedule::SlGrid;
 
 pub struct SlSequential<'a> {
@@ -62,104 +64,256 @@ pub struct SlAsd<'a> {
 
 impl<'a> SlAsd<'a> {
     /// ASD over the SL Euler chain. Exactly Algorithm 1 with
-    /// b(eta, y) = y + eta m(t, y) and sigma_k = sqrt(eta_k).
+    /// b(eta, y) = y + eta m(t, y) and sigma_k = sqrt(eta_k). A thin
+    /// [`crate::sampler::drive_with`] loop over [`SlAsdStepMachine`],
+    /// evaluating each demanded row against the analytic oracle.
     pub fn sample(&self, seed: u64) -> (Vec<f64>, SlAsdStats) {
         let d = self.oracle.gmm.d;
-        let k = self.grid.k_steps();
+        let mut machine = SlAsdStepMachine::new(self.grid, self.theta,
+                                               d, seed);
+        let gmm = &self.oracle.gmm;
+        let y0 = crate::sampler::drive_with(
+            &mut machine, d, PoolConfig::default(),
+            |ys, ts, _cond, n, out| {
+                for r in 0..n {
+                    gmm.sl_posterior_mean(&ys[r * d..(r + 1) * d], ts[r],
+                                          &mut out[r * d..(r + 1) * d]);
+                }
+                Ok(())
+            })
+            .expect("SL oracle evaluation is infallible");
+        (y0, machine.into_stats())
+    }
+}
+
+/// Where the SL-ASD state machine is between rounds.
+enum SlPhase {
+    /// demand the drift m(t_a, y_a) — one row
+    Propose,
+    /// demand drifts at the th-1 proposed chain points
+    Verify { th: usize },
+    Done,
+}
+
+/// SL-native ASD as a poll/resume state machine (same shape as the
+/// DDPM [`crate::asd::engine::AsdStepMachine`]): demands are drift
+/// evaluations m(t, y) instead of x0hat rows, with `ts` carrying the
+/// continuous localization times. Bit-identical to the closed loop it
+/// replaced.
+pub struct SlAsdStepMachine {
+    times: Vec<f64>,
+    etas: Vec<f64>,
+    theta: usize,
+    d: usize,
+    // pre-drawn per-step noise (same contract as the DDPM engine)
+    xi: Vec<f64>,
+    u: Vec<f64>,
+    y: Vec<f64>,
+    a: usize,
+    m_a: Vec<f64>,
+    m_hat: Vec<f64>,
+    y_hat: Vec<f64>,
+    evals: Vec<f64>,
+    m_buf: Vec<f64>,
+    z_buf: Vec<f64>,
+    v_buf: Vec<f64>,
+    /// staged proposal time (len 1)
+    prop_ts: Vec<f64>,
+    /// staged verify times (len th-1)
+    eval_ts: Vec<f64>,
+    /// the localized sample y_{t_K} / t_K, filled at Done
+    y0: Vec<f64>,
+    phase: SlPhase,
+    stats: SlAsdStats,
+}
+
+impl SlAsdStepMachine {
+    pub fn new(grid: &SlGrid, theta: usize, d: usize, seed: u64)
+               -> SlAsdStepMachine {
+        let k = grid.k_steps();
         let mut rng = Philox::new(seed, 1);
-        // pre-draw the per-step noise (same contract as the DDPM engine)
         let xi: Vec<f64> = (0..k * d).map(|_| rng.normal()).collect();
         let u: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
-
-        let mut stats = SlAsdStats::default();
-        let mut y = vec![0.0; d];
-        let mut a = 0usize; // current grid index
-        let mut m_a = vec![0.0; d];
-        let mut m_hat = vec![0.0; k * d];
-        let mut y_hat = vec![0.0; k * d];
-        let mut evals = vec![0.0; k * d];
-        let mut m_buf = vec![0.0; d];
-        let mut z_buf = vec![0.0; d];
-        let mut v_buf = vec![0.0; d];
-
-        while a < k {
-            stats.iterations += 1;
-            let want = if self.theta == 0 { k - a } else { self.theta };
-            let th = want.min(k - a).max(1);
-
-            // proposal round: one oracle call at (t_a, y_a)
-            self.oracle.gmm.sl_posterior_mean(&y, self.grid.times[a], &mut m_a);
-            stats.oracle_calls += 1;
-            stats.parallel_rounds += 1;
-
-            // speculate: frozen drift m_a
-            for kpos in 0..th {
-                let step = a + kpos;
-                let eta = self.grid.etas[step];
-                let (mh, yh) = (&mut m_hat[kpos * d..(kpos + 1) * d],
-                                kpos * d);
-                let y_prev: Vec<f64> = if kpos == 0 {
-                    y.clone()
-                } else {
-                    y_hat[(kpos - 1) * d..kpos * d].to_vec()
-                };
-                axpy_into(mh, &y_prev, eta, &m_a);
-                let se = eta.sqrt();
-                for i in 0..d {
-                    y_hat[yh + i] = mh[i] + se * xi[step * d + i];
-                }
-            }
-
-            // verify round: oracle at proposed points (positions 1..th-1;
-            // position 0's target mean equals the proposal mean exactly)
-            if th > 1 {
-                for kpos in 1..th {
-                    let step = a + kpos;
-                    self.oracle.gmm.sl_posterior_mean(
-                        &y_hat[(kpos - 1) * d..kpos * d],
-                        self.grid.times[step],
-                        &mut evals[kpos * d..(kpos + 1) * d],
-                    );
-                }
-                stats.oracle_calls += th - 1;
-                stats.parallel_rounds += 1;
-            }
-
-            // verifier scan
-            let mut advanced = 0usize;
-            for kpos in 0..th {
-                let step = a + kpos;
-                let eta = self.grid.etas[step];
-                let sigma = eta.sqrt();
-                let y_base: Vec<f64> = if kpos == 0 {
-                    y.clone()
-                } else {
-                    y_hat[(kpos - 1) * d..kpos * d].to_vec()
-                };
-                let drift: &[f64] = if kpos == 0 {
-                    &m_a
-                } else {
-                    &evals[kpos * d..(kpos + 1) * d]
-                };
-                axpy_into(&mut m_buf, &y_base, eta, drift);
-                let accept = grs_native(
-                    u[step], &xi[step * d..(step + 1) * d],
-                    &m_hat[kpos * d..(kpos + 1) * d], &m_buf, sigma,
-                    &mut z_buf, &mut v_buf,
-                );
-                y.copy_from_slice(&z_buf);
-                advanced += 1;
-                if accept {
-                    stats.accepted += 1;
-                } else {
-                    stats.rejected += 1;
-                    break;
-                }
-            }
-            a += advanced;
+        let mut m = SlAsdStepMachine {
+            times: grid.times.clone(),
+            etas: grid.etas.clone(),
+            theta,
+            d,
+            xi,
+            u,
+            y: vec![0.0; d],
+            a: 0,
+            m_a: vec![0.0; d],
+            m_hat: vec![0.0; k * d],
+            y_hat: vec![0.0; k * d],
+            evals: vec![0.0; k * d],
+            m_buf: vec![0.0; d],
+            z_buf: vec![0.0; d],
+            v_buf: vec![0.0; d],
+            prop_ts: vec![0.0],
+            eval_ts: vec![0.0; k],
+            y0: vec![0.0; d],
+            phase: if k == 0 { SlPhase::Done } else { SlPhase::Propose },
+            stats: SlAsdStats::default(),
+        };
+        if k > 0 {
+            m.stats.iterations = 1; // entering the first iteration
+            m.prop_ts[0] = m.times[0];
+        } else {
+            m.finalize();
         }
-        let t_final = *self.grid.times.last().unwrap();
-        (y.iter().map(|v| v / t_final).collect(), stats)
+        m
+    }
+
+    pub fn stats(&self) -> &SlAsdStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> SlAsdStats {
+        self.stats
+    }
+
+    fn k_steps(&self) -> usize {
+        self.times.len()
+    }
+
+    fn th(&self) -> usize {
+        let k = self.k_steps();
+        let want = if self.theta == 0 { k - self.a } else { self.theta };
+        want.min(k - self.a).max(1)
+    }
+
+    fn finalize(&mut self) {
+        let t_final = self.times.last().copied().unwrap_or(1.0);
+        for i in 0..self.d {
+            self.y0[i] = self.y[i] / t_final;
+        }
+        self.phase = SlPhase::Done;
+    }
+
+    /// Verifier scan over the speculated window, then stage the next
+    /// iteration's proposal (or finish).
+    fn scan_and_advance(&mut self, th: usize) {
+        let d = self.d;
+        let mut advanced = 0usize;
+        for kpos in 0..th {
+            let step = self.a + kpos;
+            let eta = self.etas[step];
+            let sigma = eta.sqrt();
+            let y_base: &[f64] = if kpos == 0 {
+                &self.y
+            } else {
+                &self.y_hat[(kpos - 1) * d..kpos * d]
+            };
+            let drift: &[f64] = if kpos == 0 {
+                &self.m_a
+            } else {
+                &self.evals[kpos * d..(kpos + 1) * d]
+            };
+            axpy_into(&mut self.m_buf, y_base, eta, drift);
+            let accept = grs_native(
+                self.u[step], &self.xi[step * d..(step + 1) * d],
+                &self.m_hat[kpos * d..(kpos + 1) * d], &self.m_buf, sigma,
+                &mut self.z_buf, &mut self.v_buf,
+            );
+            self.y.copy_from_slice(&self.z_buf);
+            advanced += 1;
+            if accept {
+                self.stats.accepted += 1;
+            } else {
+                self.stats.rejected += 1;
+                break;
+            }
+        }
+        self.a += advanced;
+        if self.a >= self.k_steps() {
+            self.finalize();
+        } else {
+            self.stats.iterations += 1;
+            self.prop_ts[0] = self.times[self.a];
+            self.phase = SlPhase::Propose;
+        }
+    }
+}
+
+impl StepSampler for SlAsdStepMachine {
+    fn poll(&mut self) -> anyhow::Result<SamplerPoll<'_>> {
+        let d = self.d;
+        match self.phase {
+            SlPhase::Done => Ok(SamplerPoll::Done(&self.y0)),
+            SlPhase::Propose => Ok(SamplerPoll::Demand(DenoiseDemand {
+                ys: &self.y,
+                ts: &self.prop_ts,
+                cond: &[],
+                n: 1,
+            })),
+            SlPhase::Verify { th } => {
+                // rows 0..th-1 of the chain, evaluated at times a+1..a+th
+                Ok(SamplerPoll::Demand(DenoiseDemand {
+                    ys: &self.y_hat[..(th - 1) * d],
+                    ts: &self.eval_ts[..th - 1],
+                    cond: &[],
+                    n: th - 1,
+                }))
+            }
+        }
+    }
+
+    fn resume(&mut self, m: &[f64], _exec: RoundExec) -> anyhow::Result<()> {
+        let d = self.d;
+        match self.phase {
+            SlPhase::Done => anyhow::bail!("resume after Done"),
+            SlPhase::Propose => {
+                anyhow::ensure!(m.len() == d,
+                                "proposal row length {} != d {d}", m.len());
+                self.m_a.copy_from_slice(m);
+                self.stats.oracle_calls += 1;
+                self.stats.parallel_rounds += 1;
+                let th = self.th();
+
+                // speculate: frozen drift m_a
+                for kpos in 0..th {
+                    let step = self.a + kpos;
+                    let eta = self.etas[step];
+                    let (head, tail_buf) = self.y_hat.split_at_mut(kpos * d);
+                    let y_prev: &[f64] = if kpos == 0 {
+                        &self.y
+                    } else {
+                        &head[(kpos - 1) * d..kpos * d]
+                    };
+                    let mh = &mut self.m_hat[kpos * d..(kpos + 1) * d];
+                    axpy_into(mh, y_prev, eta, &self.m_a);
+                    let se = eta.sqrt();
+                    let y_slice = &mut tail_buf[..d];
+                    for i in 0..d {
+                        y_slice[i] = mh[i] + se * self.xi[step * d + i];
+                    }
+                }
+
+                if th > 1 {
+                    // verify round: oracle at proposed points (positions
+                    // 1..th-1; position 0's target mean equals the
+                    // proposal mean exactly)
+                    for kpos in 1..th {
+                        self.eval_ts[kpos - 1] = self.times[self.a + kpos];
+                    }
+                    self.phase = SlPhase::Verify { th };
+                } else {
+                    self.scan_and_advance(th);
+                }
+                Ok(())
+            }
+            SlPhase::Verify { th } => {
+                anyhow::ensure!(m.len() == (th - 1) * d,
+                                "verify rows length {} != {}", m.len(),
+                                (th - 1) * d);
+                self.evals[d..th * d].copy_from_slice(m);
+                self.stats.oracle_calls += th - 1;
+                self.stats.parallel_rounds += 1;
+                self.scan_and_advance(th);
+                Ok(())
+            }
+        }
     }
 }
 

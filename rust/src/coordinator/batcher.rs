@@ -1,58 +1,75 @@
-//! Dynamic batcher: gangs compatible queued requests.
+//! Dynamic batcher: forms *fusion groups* of queued requests.
 //!
-//! Sequential DDPM requests to the same variant advance in lockstep, so
-//! they can share one batched denoise call per step — the classic
-//! continuous-batching win. ASD requests are adaptive (each follows its
-//! own accept/reject path) and run per-request; their parallelism is the
-//! *within*-request batched verification.
+//! Since the samplers became poll-style state machines
+//! (`sampler::StepSampler`), every request — ASD verify rounds, Picard
+//! sweeps and lockstep sequential steps alike — expresses each parallel
+//! round as a row demand, so any set of same-variant requests can share
+//! one fused `denoise_batch` call per round. The batcher therefore no
+//! longer special-cases sequential requests: it extracts the maximal
+//! *compatible prefix* (same variant, any sampler) from the queue
+//! front.
+//!
+//! Prefix extraction is order-stable by construction: jobs are only
+//! ever popped from the front, so neither the served set nor the
+//! remaining queue is ever reordered, and a request can never be
+//! overtaken by a later arrival of a different variant (the seed's
+//! mid-queue `VecDeque::remove` scan could invert service order across
+//! variants, and paid O(n) per extraction). Requests for *other*
+//! variants that are interleaved at the front simply start their own
+//! group on the next worker.
 
 use std::collections::VecDeque;
 
-use crate::coordinator::request::{QueuedJob, SamplerSpec};
+use crate::coordinator::request::QueuedJob;
 
 /// A unit of worker execution.
 pub(crate) enum WorkItem {
+    /// one request, served by its closed `run()` driver (batching off)
     Single(QueuedJob),
-    /// lockstep gang of sequential requests to the same variant
-    SequentialGang(Vec<QueuedJob>),
+    /// same-variant fusion group (any mix of samplers), arrival order;
+    /// may grow mid-flight via continuous admission
+    /// ([`take_compatible_prefix`])
+    Fused(Vec<QueuedJob>),
 }
 
-/// Pop the next work item, ganging sequential requests for the same
-/// variant (up to `max_batch`). Caller holds the queue lock.
+/// Pop the next work item: the front job plus the maximal same-variant
+/// prefix behind it (up to `max_batch` requests total). Caller holds
+/// the queue lock.
 pub(crate) fn next_work_item(queue: &mut VecDeque<QueuedJob>, max_batch: usize,
                              batching: bool) -> Option<WorkItem> {
     let first = queue.pop_front()?;
-    if !batching || first.request.sampler != SamplerSpec::Sequential
-        || max_batch <= 1
-    {
+    if !batching || max_batch <= 1 {
         return Some(WorkItem::Single(first));
     }
     let variant = first.request.variant.clone();
-    let mut gang = vec![first];
-    let mut idx = 0;
-    while gang.len() < max_batch && idx < queue.len() {
-        let compatible = {
-            let job = &queue[idx];
-            job.request.sampler == SamplerSpec::Sequential
-                && job.request.variant == variant
-        };
-        if compatible {
-            gang.push(queue.remove(idx).unwrap());
-        } else {
-            idx += 1;
-        }
+    let mut group = vec![first];
+    take_compatible_prefix(queue, &variant, max_batch - 1, &mut group);
+    Some(WorkItem::Fused(group))
+}
+
+/// Move up to `max` jobs from the queue *front* into `out` while they
+/// match `variant`. Order-stable: taken jobs keep arrival order and the
+/// remaining queue is untouched beyond the popped prefix. Also the
+/// continuous-admission primitive: a worker mid-group calls this each
+/// tick to absorb newly arrived compatible requests. Returns how many
+/// jobs were taken.
+pub(crate) fn take_compatible_prefix(queue: &mut VecDeque<QueuedJob>,
+                                     variant: &str, max: usize,
+                                     out: &mut Vec<QueuedJob>) -> usize {
+    let mut taken = 0usize;
+    while taken < max
+        && queue.front().is_some_and(|j| j.request.variant == variant)
+    {
+        out.push(queue.pop_front().unwrap());
+        taken += 1;
     }
-    if gang.len() == 1 {
-        Some(WorkItem::Single(gang.pop().unwrap()))
-    } else {
-        Some(WorkItem::SequentialGang(gang))
-    }
+    taken
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Request;
+    use crate::coordinator::request::{Request, SamplerSpec};
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
@@ -74,33 +91,45 @@ mod tests {
     }
 
     #[test]
-    fn gangs_same_variant_sequential() {
+    fn fuses_same_variant_prefix_across_sampler_kinds() {
         let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(job("a", SamplerSpec::Asd(8)));
         q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Picard(8, 1e-6)));
         q.push_back(job("b", SamplerSpec::Sequential));
-        q.push_back(job("a", SamplerSpec::Sequential));
-        q.push_back(job("a", SamplerSpec::Asd(4)));
-        let item = next_work_item(&mut q, 8, true).unwrap();
-        match item {
-            WorkItem::SequentialGang(g) => {
-                assert_eq!(g.len(), 2);
+        match next_work_item(&mut q, 8, true).unwrap() {
+            WorkItem::Fused(g) => {
+                assert_eq!(g.len(), 3);
                 assert!(g.iter().all(|j| j.request.variant == "a"));
+                // arrival order preserved inside the group
+                assert!(matches!(g[0].request.sampler, SamplerSpec::Asd(8)));
+                assert!(matches!(g[1].request.sampler,
+                                 SamplerSpec::Sequential));
             }
-            _ => panic!("expected gang"),
+            _ => panic!("expected fused group"),
         }
-        // remaining: b sequential, a asd
-        assert_eq!(q.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].request.variant, "b");
     }
 
     #[test]
-    fn asd_requests_stay_single() {
+    fn extraction_is_order_stable_across_variants() {
+        // [a, a, b, a]: the group must stop at b — the trailing a is NOT
+        // pulled over b's head (the seed's mid-queue scan did that,
+        // letting late arrivals overtake b).
         let mut q: VecDeque<QueuedJob> = VecDeque::new();
-        q.push_back(job("a", SamplerSpec::Asd(8)));
-        q.push_back(job("a", SamplerSpec::Asd(8)));
+        q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("b", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Sequential));
         match next_work_item(&mut q, 8, true).unwrap() {
-            WorkItem::Single(j) => assert_eq!(j.request.variant, "a"),
-            _ => panic!("asd must not gang"),
+            WorkItem::Fused(g) => assert_eq!(g.len(), 2),
+            _ => panic!("expected fused group"),
         }
+        // remaining queue keeps arrival order: b then a
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].request.variant, "b");
+        assert_eq!(q[1].request.variant, "a");
     }
 
     #[test]
@@ -110,10 +139,22 @@ mod tests {
             q.push_back(job("a", SamplerSpec::Sequential));
         }
         match next_work_item(&mut q, 4, true).unwrap() {
-            WorkItem::SequentialGang(g) => assert_eq!(g.len(), 4),
+            WorkItem::Fused(g) => assert_eq!(g.len(), 4),
             _ => panic!(),
         }
         assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn single_job_forms_a_growable_group() {
+        // a lone request still goes through the fused path, so
+        // continuous admission can add later arrivals mid-flight
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(job("a", SamplerSpec::Sequential));
+        match next_work_item(&mut q, 8, true).unwrap() {
+            WorkItem::Fused(g) => assert_eq!(g.len(), 1),
+            _ => panic!("expected fused group"),
+        }
     }
 
     #[test]
@@ -123,6 +164,23 @@ mod tests {
         q.push_back(job("a", SamplerSpec::Sequential));
         assert!(matches!(next_work_item(&mut q, 8, false).unwrap(),
                          WorkItem::Single(_)));
+    }
+
+    #[test]
+    fn admission_takes_only_the_compatible_prefix() {
+        let mut q: VecDeque<QueuedJob> = VecDeque::new();
+        q.push_back(job("a", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Asd(4)));
+        q.push_back(job("b", SamplerSpec::Sequential));
+        q.push_back(job("a", SamplerSpec::Sequential));
+        let mut out = Vec::new();
+        assert_eq!(take_compatible_prefix(&mut q, "a", 8, &mut out), 2);
+        assert_eq!(out.len(), 2);
+        assert_eq!(q.len(), 2);
+        // capped admission
+        let mut out2 = Vec::new();
+        assert_eq!(take_compatible_prefix(&mut q, "b", 0, &mut out2), 0);
+        assert_eq!(q.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,433 @@
+//! `FusionScheduler` — round-synchronous cross-request batch fusion.
+//!
+//! One scheduler owns the in-flight requests of a same-variant fusion
+//! group. Each [`FusionScheduler::tick`]:
+//!
+//! 1. polls every request's sampler state machine for its
+//!    `DenoiseDemand` (finished machines are retired and answered),
+//! 2. packs all demanded rows into one contiguous mega-batch,
+//! 3. issues a single fused `denoise_batch` call (through the group's
+//!    `ParallelModel` wrapper, so the one global worker pool shards the
+//!    fused rows), and
+//! 4. scatters the results back, resuming every machine.
+//!
+//! **Fairness:** every in-flight request contributes to and is resumed
+//! from *every* tick — a sequential request's one row rides the same
+//! round as an ASD request's theta-row verify batch, so no request
+//! starves while another speculates. Per-request row demands are
+//! bounded (1, theta, or the Picard window), so no single request can
+//! monopolize a round either.
+//!
+//! **Determinism:** machines consume only their own pre-drawn Philox
+//! streams, and native models are row-independent (`model::parallel`),
+//! so fused execution produces bit-identical samples to solo execution
+//! — enforced by tests/test_fusion_determinism.rs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::asd::engine::AsdStepMachine;
+use crate::asd::AsdStats;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{QueuedJob, Response, SamplerSpec};
+use crate::ddpm::{NoiseStreams, SequentialStepMachine};
+use crate::model::DenoiseModel;
+use crate::picard::PicardStepMachine;
+use crate::runtime::pool::PoolConfig;
+use crate::sampler::{RoundExec, SamplerPoll, StepSampler};
+
+/// Per-request sampler state machine (concrete enum so finished
+/// machines can surface their sampler-specific stats without downcasts).
+pub(crate) enum Machine {
+    Sequential(SequentialStepMachine),
+    Asd(Box<AsdStepMachine>),
+    Picard(PicardStepMachine),
+}
+
+impl Machine {
+    /// Build the machine for a request. `model` is the group's shared
+    /// (possibly `ParallelModel`-wrapped) model — machines only read
+    /// its metadata and schedule, never call it.
+    pub(crate) fn for_request(model: Arc<dyn DenoiseModel>,
+                              sampler: SamplerSpec, seed: u64, cond: &[f64])
+                              -> Result<Machine> {
+        let noise = NoiseStreams::draw(seed, 0, model.k_steps(), model.dim());
+        // machine parameters come from the canonical per-spec configs
+        // (SamplerSpec::asd_config / picard_config) — the same source
+        // server::run_sampler builds its engines from, so fused and
+        // solo execution of a request can never drift apart. The pool
+        // field is irrelevant here: machines never call the model.
+        Ok(match sampler {
+            SamplerSpec::Sequential => Machine::Sequential(
+                SequentialStepMachine::new(model, noise, cond)?),
+            SamplerSpec::Asd(theta) => {
+                let cfg = SamplerSpec::asd_config(theta,
+                                                  PoolConfig::default());
+                Machine::Asd(Box::new(AsdStepMachine::new(
+                    model, cfg.theta, cfg.eval_tail, cfg.backend, noise,
+                    cond)?))
+            }
+            SamplerSpec::Picard(window, tol) => {
+                let cfg = SamplerSpec::picard_config(window, tol,
+                                                     PoolConfig::default());
+                Machine::Picard(PicardStepMachine::new(
+                    model, cfg.window, cfg.tol, cfg.max_sweeps, noise,
+                    cond)?)
+            }
+        })
+    }
+
+    fn as_step(&mut self) -> &mut dyn StepSampler {
+        match self {
+            Machine::Sequential(m) => m,
+            Machine::Asd(m) => m.as_mut(),
+            Machine::Picard(m) => m,
+        }
+    }
+
+    /// (model_calls, parallel_rounds, asd_stats) for the response.
+    fn outcome(self) -> (usize, usize, Option<AsdStats>) {
+        match self {
+            Machine::Sequential(m) => {
+                let st = m.into_stats();
+                (st.model_calls, st.model_calls, None)
+            }
+            Machine::Asd(m) => {
+                let st = m.into_stats();
+                (st.model_calls, st.parallel_rounds, Some(st))
+            }
+            Machine::Picard(m) => {
+                let st = m.into_stats();
+                (st.model_calls, st.parallel_rounds, None)
+            }
+        }
+    }
+}
+
+struct ActiveRequest {
+    job: QueuedJob,
+    machine: Machine,
+    /// queue wait, frozen at admission
+    queued_s: f64,
+    admitted: Instant,
+}
+
+pub(crate) struct FusionScheduler {
+    model: Arc<dyn DenoiseModel>,
+    pool: PoolConfig,
+    active: Vec<ActiveRequest>,
+    // mega-batch staging, reused across ticks
+    ys: Vec<f64>,
+    ts: Vec<f64>,
+    cond: Vec<f64>,
+    out: Vec<f64>,
+    /// (active index, row offset, rows) per demanding request this tick
+    spans: Vec<(usize, usize, usize)>,
+}
+
+impl FusionScheduler {
+    /// `model` should already be `ParallelModel`-wrapped with `pool` so
+    /// fused rounds shard on the global worker pool.
+    pub(crate) fn new(model: Arc<dyn DenoiseModel>, pool: PoolConfig)
+                      -> FusionScheduler {
+        FusionScheduler {
+            model,
+            pool,
+            active: Vec::new(),
+            ys: Vec::new(),
+            ts: Vec::new(),
+            cond: Vec::new(),
+            out: Vec::new(),
+            spans: Vec::new(),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Admit a request: build its machine, or answer immediately with
+    /// the construction error (bad conditioning shape, ...).
+    pub(crate) fn admit(&mut self, job: QueuedJob, metrics: &Metrics) {
+        let queued_s = job.enqueued.elapsed().as_secs_f64();
+        match Machine::for_request(self.model.clone(), job.request.sampler,
+                                   job.request.seed, &job.request.cond) {
+            Ok(machine) => self.active.push(ActiveRequest {
+                job,
+                machine,
+                queued_s,
+                admitted: Instant::now(),
+            }),
+            Err(e) => {
+                metrics.on_complete(queued_s, 0.0, 0, 0, true);
+                let _ = job.reply.send(Response::failed(job.request.id,
+                                                        queued_s,
+                                                        &e.to_string()));
+            }
+        }
+    }
+
+    /// One fused round: poll all, retire finished, evaluate the fused
+    /// batch, scatter results. Returns the number of requests completed
+    /// this tick. On a model error the whole group fails (they shared
+    /// the call) and is drained.
+    pub(crate) fn tick(&mut self, metrics: &Metrics) -> usize {
+        let d = self.model.dim();
+        let c = self.model.cond_dim();
+        self.ys.clear();
+        self.ts.clear();
+        self.cond.clear();
+        self.spans.clear();
+
+        // poll phase: collect demands; retire machines that are done
+        let mut completed = 0usize;
+        let mut idx = 0usize;
+        while idx < self.active.len() {
+            let poll = match self.active[idx].machine.as_step().poll() {
+                Ok(p) => p,
+                Err(e) => {
+                    let msg = e.to_string();
+                    self.fail_at(idx, &msg, metrics);
+                    continue;
+                }
+            };
+            match poll {
+                SamplerPoll::Done(y0) => {
+                    let sample = y0.to_vec();
+                    self.finish_at(idx, sample, metrics);
+                    completed += 1;
+                    // swap_remove moved another request into `idx`
+                }
+                SamplerPoll::Demand(dem) => {
+                    let off = self.ts.len();
+                    self.ys.extend_from_slice(dem.ys);
+                    self.ts.extend_from_slice(dem.ts);
+                    self.cond.extend_from_slice(dem.cond);
+                    self.spans.push((idx, off, dem.n));
+                    idx += 1;
+                }
+            }
+        }
+        if self.spans.is_empty() {
+            return completed;
+        }
+
+        // fused mega-call: one parallel round for the whole group
+        let n_total = self.ts.len();
+        debug_assert_eq!(self.ys.len(), n_total * d);
+        debug_assert_eq!(self.cond.len(), n_total * c);
+        if self.out.len() < n_total * d {
+            self.out.resize(n_total * d, 0.0);
+        }
+        let t0 = Instant::now();
+        let shards = self.pool.shards_for(n_total);
+        if let Err(e) = self.model.denoise_batch(&self.ys, &self.ts,
+                                                 &self.cond, n_total,
+                                                 &mut self.out[..n_total * d])
+        {
+            let msg = e.to_string();
+            self.fail_all(&msg, metrics);
+            return completed;
+        }
+        let exec = RoundExec {
+            latency_s: t0.elapsed().as_secs_f64(),
+            shards,
+        };
+        metrics.on_fused_round(n_total, self.spans.len(), shards);
+
+        // scatter phase: resume every demanding machine with its rows.
+        // Failures are answered immediately but removed only after the
+        // loop, so the span indices stay valid throughout.
+        let mut failed: Vec<usize> = Vec::new();
+        for &(idx, off, rows) in &self.spans {
+            let slice = &self.out[off * d..(off + rows) * d];
+            if let Err(e) = self.active[idx].machine.as_step()
+                .resume(slice, exec)
+            {
+                let ar = &self.active[idx];
+                metrics.on_complete(ar.queued_s,
+                                    ar.admitted.elapsed().as_secs_f64(),
+                                    0, 0, true);
+                let _ = ar.job.reply.send(Response::failed(
+                    ar.job.request.id, ar.queued_s, &e.to_string()));
+                failed.push(idx);
+            }
+        }
+        // remove highest-index first so earlier indices stay stable
+        failed.sort_unstable_by(|a, b| b.cmp(a));
+        for idx in failed {
+            self.active.swap_remove(idx);
+        }
+        completed
+    }
+
+    /// Answer and remove the request at `idx` (success).
+    fn finish_at(&mut self, idx: usize, sample: Vec<f64>,
+                 metrics: &Metrics) {
+        let ar = self.active.swap_remove(idx);
+        let service_s = ar.admitted.elapsed().as_secs_f64();
+        let (calls, rounds, asd_stats) = ar.machine.outcome();
+        if let Some(st) = &asd_stats {
+            metrics.on_round_stats(&st.round_latency_s, &st.round_shards);
+        }
+        metrics.on_complete(ar.queued_s, service_s, calls, rounds, false);
+        let _ = ar.job.reply.send(Response {
+            id: ar.job.request.id,
+            sample,
+            model_calls: calls,
+            parallel_rounds: rounds,
+            asd_stats,
+            queued_s: ar.queued_s,
+            service_s,
+            rejected: false,
+            error: None,
+        });
+    }
+
+    /// Answer and remove the request at `idx` (failure).
+    fn fail_at(&mut self, idx: usize, msg: &str, metrics: &Metrics) {
+        let ar = self.active.swap_remove(idx);
+        metrics.on_complete(ar.queued_s, ar.admitted.elapsed().as_secs_f64(),
+                            0, 0, true);
+        let _ = ar.job.reply.send(Response::failed(ar.job.request.id,
+                                                   ar.queued_s, msg));
+    }
+
+    /// Fail every in-flight request (shared model call errored).
+    pub(crate) fn fail_all(&mut self, msg: &str, metrics: &Metrics) {
+        for ar in self.active.drain(..) {
+            metrics.on_complete(ar.queued_s,
+                                ar.admitted.elapsed().as_secs_f64(), 0, 0,
+                                true);
+            let _ = ar.job.reply.send(Response::failed(ar.job.request.id,
+                                                       ar.queued_s, msg));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::ddpm::SequentialSampler;
+    use crate::model::{Gmm, GmmDdpmOracle};
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn queued(variant: &str, sampler: SamplerSpec, seed: u64)
+              -> (QueuedJob, Receiver<Response>) {
+        let (tx, rx) = channel();
+        (QueuedJob {
+            request: Request {
+                id: seed,
+                variant: variant.into(),
+                sampler,
+                seed,
+                cond: vec![],
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }, rx)
+    }
+
+    #[test]
+    fn fused_sequential_pair_runs_lockstep_and_matches_solo() {
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model.clone(),
+                                             PoolConfig::default());
+        let (j1, rx1) = queued("gmm", SamplerSpec::Sequential, 5);
+        let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 6);
+        sched.admit(j1, &metrics);
+        sched.admit(j2, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 100, "fused group failed to drain");
+        }
+        // K demand ticks + 1 retire tick
+        assert_eq!(ticks, 31);
+        let solo = SequentialSampler::new(model);
+        for (rx, seed) in [(rx1, 5u64), (rx2, 6u64)] {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.model_calls, 30);
+            let (want, _) = solo.sample(seed, &[]).unwrap();
+            let bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(bits(&r.sample), bits(&want), "seed {seed}");
+        }
+        // every lockstep round fused both requests' rows
+        let m = metrics.snapshot();
+        assert_eq!(m.fused_rounds, 30);
+        assert!((m.fused_rows_per_round - 2.0).abs() < 1e-12,
+                "rows/round {}", m.fused_rows_per_round);
+    }
+
+    #[test]
+    fn mixed_group_completes_and_no_request_starves() {
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model, PoolConfig::default());
+        let (j1, rx1) = queued("gmm", SamplerSpec::Asd(8), 1);
+        let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 2);
+        let (j3, rx3) = queued("gmm", SamplerSpec::Picard(8, 1e-6), 3);
+        sched.admit(j1, &metrics);
+        sched.admit(j2, &metrics);
+        sched.admit(j3, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 10_000, "mixed group failed to drain");
+        }
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        let r3 = rx3.recv().unwrap();
+        assert!(r1.error.is_none() && r2.error.is_none()
+                && r3.error.is_none());
+        assert!(r1.asd_stats.is_some());
+        // the sequential request needs exactly K rounds; the group must
+        // not have made it wait for the others to finish first
+        assert_eq!(r2.model_calls, 40);
+        assert!(r1.parallel_rounds < 40, "asd {}", r1.parallel_rounds);
+        assert!(r3.parallel_rounds >= 5);
+        // while >= 2 requests were in flight, rounds were fused
+        let m = metrics.snapshot();
+        assert!(m.fused_rows_per_round > 1.0,
+                "rows/round {}", m.fused_rows_per_round);
+    }
+
+    #[test]
+    fn bad_conditioning_is_answered_at_admission() {
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model, PoolConfig::default());
+        let (tx, rx) = channel();
+        sched.admit(QueuedJob {
+            request: Request {
+                id: 7,
+                variant: "gmm".into(),
+                sampler: SamplerSpec::Sequential,
+                seed: 0,
+                cond: vec![1.0, 2.0], // model is unconditional
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }, &metrics);
+        assert!(sched.is_empty());
+        let r = rx.recv().unwrap();
+        assert!(r.error.unwrap().contains("cond_dim"));
+        assert_eq!(metrics.snapshot().failed, 1);
+    }
+}

@@ -9,6 +9,8 @@ use crate::math::stats::Welford;
 #[derive(Debug, Default)]
 struct Inner {
     submitted: u64,
+    /// turned away by bounded admission (`max_queue_depth`)
+    rejected: u64,
     completed: u64,
     failed: u64,
     batched_groups: u64,
@@ -21,6 +23,14 @@ struct Inner {
     round_latency: Welford,
     /// worker-pool shard occupancy per round (1 = ran inline)
     shard_occupancy: Welford,
+    /// fused coordinator rounds (one mega denoise_batch per tick)
+    fused_rounds: u64,
+    /// total rows across all fused rounds
+    fused_rows: u64,
+    /// requests contributing rows, per fused round
+    fused_requests: Welford,
+    /// worker-pool shards per fused round
+    fused_shards: Welford,
 }
 
 #[derive(Debug, Default)]
@@ -31,6 +41,7 @@ pub struct Metrics {
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
+    pub rejected: u64,
     pub completed: u64,
     pub failed: u64,
     pub batched_groups: u64,
@@ -44,11 +55,36 @@ pub struct MetricsSnapshot {
     pub rounds_measured: u64,
     pub mean_round_latency_ms: f64,
     pub mean_shard_occupancy: f64,
+    /// fused coordinator rounds executed (one mega-call per tick)
+    pub fused_rounds: u64,
+    /// mean rows per fused round — the batch the kernels actually see;
+    /// > 1 means cross-request fusion is happening
+    pub fused_rows_per_round: f64,
+    /// mean requests contributing to each fused round
+    pub mean_fused_requests_per_round: f64,
+    /// mean worker-pool shard occupancy of fused rounds
+    pub fused_occupancy: f64,
 }
 
 impl Metrics {
     pub fn on_submit(&self) {
         self.inner.lock().unwrap().submitted += 1;
+    }
+
+    /// Bounded admission turned a request away.
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One fused coordinator round: `rows` total rows from `requests`
+    /// in-flight requests, executed as `shards` pool shards.
+    pub fn on_fused_round(&self, rows: usize, requests: usize,
+                          shards: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.fused_rounds += 1;
+        m.fused_rows += rows as u64;
+        m.fused_requests.push(requests as f64);
+        m.fused_shards.push(shards as f64);
     }
 
     pub fn on_complete(&self, queued_s: f64, service_s: f64,
@@ -71,6 +107,12 @@ impl Metrics {
         m.batched_requests += group_size as u64;
     }
 
+    /// Continuous admission added `n` requests to an in-flight fusion
+    /// group (they batch with the group but don't form a new one).
+    pub fn on_fused_admit(&self, n: usize) {
+        self.inner.lock().unwrap().batched_requests += n as u64;
+    }
+
     /// Record a request's measured per-round latencies and shard
     /// occupancies (from `AsdStats`).
     pub fn on_round_stats(&self, latencies_s: &[f64], shards: &[usize]) {
@@ -87,6 +129,7 @@ impl Metrics {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
             submitted: m.submitted,
+            rejected: m.rejected,
             completed: m.completed,
             failed: m.failed,
             batched_groups: m.batched_groups,
@@ -102,6 +145,18 @@ impl Metrics {
                 1.0
             } else {
                 m.shard_occupancy.mean()
+            },
+            fused_rounds: m.fused_rounds,
+            fused_rows_per_round: if m.fused_rounds == 0 {
+                0.0
+            } else {
+                m.fused_rows as f64 / m.fused_rounds as f64
+            },
+            mean_fused_requests_per_round: m.fused_requests.mean(),
+            fused_occupancy: if m.fused_shards.n == 0 {
+                1.0
+            } else {
+                m.fused_shards.mean()
             },
         }
     }
@@ -130,6 +185,24 @@ mod tests {
         // no rounds recorded yet: occupancy defaults to serial
         assert_eq!(s.rounds_measured, 0);
         assert_eq!(s.mean_shard_occupancy, 1.0);
+    }
+
+    #[test]
+    fn fused_round_and_rejection_metrics_aggregate() {
+        let m = Metrics::default();
+        let s0 = m.snapshot();
+        assert_eq!(s0.fused_rounds, 0);
+        assert_eq!(s0.fused_rows_per_round, 0.0);
+        assert_eq!(s0.fused_occupancy, 1.0);
+        m.on_fused_round(6, 3, 2);
+        m.on_fused_round(2, 1, 1);
+        m.on_reject();
+        let s = m.snapshot();
+        assert_eq!(s.fused_rounds, 2);
+        assert!((s.fused_rows_per_round - 4.0).abs() < 1e-12);
+        assert!((s.mean_fused_requests_per_round - 2.0).abs() < 1e-12);
+        assert!((s.fused_occupancy - 1.5).abs() < 1e-12);
+        assert_eq!(s.rejected, 1);
     }
 
     #[test]

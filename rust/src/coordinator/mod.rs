@@ -1,14 +1,19 @@
-//! L3 serving stack: request router + dynamic batcher + worker pool.
+//! L3 serving stack: request router + fusion batcher + worker pool.
 //!
-//! vLLM-router-shaped: clients submit sampling [`Request`]s; a shared
-//! FIFO feeds a pool of worker threads; compatible *sequential* requests
-//! to the same variant are ganged into lockstep batches (one batched
-//! denoise call per step across requests), while ASD requests run
-//! per-request (their control flow is adaptive) with batched
-//! verification inside each request. Metrics cover queueing, latency and
-//! per-sampler round counts.
+//! Round-synchronous fused-batch engine: clients submit sampling
+//! [`Request`]s; a bounded FIFO feeds a pool of worker threads; each
+//! worker serves a same-variant *fusion group* — ASD, Picard and
+//! sequential requests alike, factored as `sampler::StepSampler` state
+//! machines — by collecting every in-flight request's row demand each
+//! tick and running ONE fused `denoise_batch` mega-call per round
+//! ([`fusion::FusionScheduler`]), absorbing newly queued compatible
+//! requests mid-flight (continuous batching). Native-model outputs are
+//! bit-identical to per-request execution (row independence; see
+//! `model::parallel`). Metrics cover queueing, latency, per-sampler
+//! round counts, fused-round occupancy and admission rejections.
 
 pub mod batcher;
+pub(crate) mod fusion;
 pub mod metrics;
 pub mod request;
 pub mod server;

@@ -3,7 +3,9 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::asd::AsdStats;
+use crate::asd::{AsdConfig, AsdStats, KernelBackend};
+use crate::picard::PicardConfig;
+use crate::runtime::pool::PoolConfig;
 
 /// Which sampler serves a request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -13,6 +15,29 @@ pub enum SamplerSpec {
     Asd(usize),
     /// window, tol
     Picard(usize, f64),
+}
+
+impl SamplerSpec {
+    /// The ONE canonical ASD config the coordinator serves requests
+    /// with. Both execution paths — the per-request engines
+    /// (`server::run_sampler`, batching off) and the fused machines
+    /// (`fusion::Machine::for_request`) — must build from here, or the
+    /// same request could sample different bits depending on which
+    /// path served it.
+    pub(crate) fn asd_config(theta: usize, pool: PoolConfig) -> AsdConfig {
+        AsdConfig {
+            theta,
+            eval_tail: true,
+            backend: KernelBackend::Native,
+            pool,
+        }
+    }
+
+    /// Canonical Picard config; see [`SamplerSpec::asd_config`].
+    pub(crate) fn picard_config(window: usize, tol: f64, pool: PoolConfig)
+                                -> PicardConfig {
+        PicardConfig { window, tol, pool, ..PicardConfig::default() }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -37,7 +62,39 @@ pub struct Response {
     pub asd_stats: Option<AsdStats>,
     pub queued_s: f64,
     pub service_s: f64,
+    /// true when admission control turned the request away (queue full)
+    /// without ever scheduling it; `error` carries the reason
+    pub rejected: bool,
     pub error: Option<String>,
+}
+
+impl Response {
+    /// A failed (but admitted) request.
+    pub fn failed(id: u64, queued_s: f64, msg: &str) -> Response {
+        Response {
+            id,
+            sample: vec![],
+            model_calls: 0,
+            parallel_rounds: 0,
+            asd_stats: None,
+            queued_s,
+            service_s: 0.0,
+            rejected: false,
+            error: Some(msg.to_string()),
+        }
+    }
+
+    /// Bounded-admission rejection: the queue was at
+    /// `ServerConfig::max_queue_depth` when the request arrived.
+    pub fn rejected(id: u64, depth: usize, max_depth: usize) -> Response {
+        Response {
+            rejected: true,
+            error: Some(format!(
+                "rejected: queue depth {depth} at max_queue_depth \
+                 {max_depth}")),
+            ..Response::failed(id, 0.0, "")
+        }
+    }
 }
 
 pub(crate) struct QueuedJob {

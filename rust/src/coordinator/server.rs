@@ -7,28 +7,36 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 
-use crate::asd::{AsdConfig, AsdEngine, KernelBackend};
-use crate::coordinator::batcher::{next_work_item, WorkItem};
+use crate::asd::AsdEngine;
+use crate::coordinator::batcher::{next_work_item, take_compatible_prefix,
+                                  WorkItem};
+use crate::coordinator::fusion::FusionScheduler;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
-use crate::ddpm::{BatchedSequentialSampler, SequentialSampler};
-use crate::model::DenoiseModel;
-use crate::picard::{PicardConfig, PicardSampler};
+use crate::ddpm::SequentialSampler;
+use crate::model::{DenoiseModel, ParallelModel};
+use crate::picard::PicardSampler;
 use crate::runtime::pool::PoolConfig;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub workers: usize,
-    /// gang at most this many sequential requests into one lockstep batch
+    /// fuse at most this many concurrent requests into one round-
+    /// synchronous group (any sampler mix; see `coordinator::fusion`)
     pub max_batch: usize,
     pub enable_batching: bool,
+    /// bounded admission: submissions beyond this queue depth are
+    /// answered immediately with a rejected [`Response`] instead of
+    /// growing the queue without limit
+    pub max_queue_depth: usize,
     /// sharding config for every batched denoise call served by this
-    /// coordinator (ASD verify rounds, Picard sweeps, lockstep gangs).
-    /// All workers share the ONE global pool — worker threads gate
-    /// concurrency at the request level, the pool at the row level, so
-    /// cores are never oversubscribed. Bit-transparency holds for
-    /// native row-independent models; HLO models may shift within f32
-    /// padding tolerance (see `model::parallel`).
+    /// coordinator (each fusion group's fused round, or the per-request
+    /// batched calls when batching is disabled). All workers share the
+    /// ONE global pool — worker threads gate concurrency at the request
+    /// level, the pool at the row level, so cores are never
+    /// oversubscribed. Bit-transparency holds for native
+    /// row-independent models; HLO models may shift within f32 padding
+    /// tolerance (see `model::parallel`).
     pub pool: PoolConfig,
 }
 
@@ -38,6 +46,7 @@ impl Default for ServerConfig {
             workers: 2,
             max_batch: 8,
             enable_batching: true,
+            max_queue_depth: 1024,
             pool: PoolConfig::default(),
         }
     }
@@ -97,7 +106,11 @@ impl Coordinator {
         self.shared.models.lock().unwrap().contains_key(name)
     }
 
-    /// Submit a request; returns the response channel and the assigned id.
+    /// Submit a request; returns the response channel and the assigned
+    /// id. When the queue is at `max_queue_depth` the request is not
+    /// enqueued: a rejected [`Response`] is delivered on the channel
+    /// immediately (bounded admission — a loaded coordinator sheds
+    /// traffic instead of accumulating unbounded latency).
     pub fn submit(&self, mut request: Request) -> (u64, Receiver<Response>) {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         request.id = id;
@@ -105,6 +118,14 @@ impl Coordinator {
         self.shared.metrics.on_submit();
         {
             let mut q = self.shared.queue.lock().unwrap();
+            let depth = q.len();
+            if depth >= self.shared.config.max_queue_depth {
+                drop(q);
+                self.shared.metrics.on_reject();
+                let _ = tx.send(Response::rejected(
+                    id, depth, self.shared.config.max_queue_depth));
+                return (id, rx);
+            }
             q.push_back(QueuedJob {
                 request,
                 reply: tx,
@@ -159,7 +180,7 @@ fn worker_loop(shared: Arc<Shared>) {
         };
         match item {
             WorkItem::Single(job) => serve_single(&shared, job),
-            WorkItem::SequentialGang(gang) => serve_gang(&shared, gang),
+            WorkItem::Fused(group) => serve_fused(&shared, group),
         }
     }
 }
@@ -189,17 +210,12 @@ fn serve_single(shared: &Shared, job: QueuedJob) {
             asd_stats,
             queued_s,
             service_s,
+            rejected: false,
             error: None,
         },
         Err(e) => Response {
-            id: req.id,
-            sample: vec![],
-            model_calls: 0,
-            parallel_rounds: 0,
-            asd_stats: None,
-            queued_s,
             service_s,
-            error: Some(e),
+            ..Response::failed(req.id, queued_s, &e)
         },
     };
     shared.metrics.on_complete(queued_s, service_s, resp.model_calls,
@@ -221,15 +237,10 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
                 .map_err(|e| e.to_string())
         }
         SamplerSpec::Asd(theta) => {
+            // canonical config shared with the fused path — see
+            // SamplerSpec::asd_config
             let mut engine = AsdEngine::new(
-                model,
-                AsdConfig {
-                    theta,
-                    eval_tail: true,
-                    backend: KernelBackend::Native,
-                    pool,
-                },
-            );
+                model, SamplerSpec::asd_config(theta, pool));
             engine
                 .sample_cond(req.seed, &req.cond)
                 .map(|out| {
@@ -241,8 +252,7 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
         }
         SamplerSpec::Picard(window, tol) => {
             let sampler = PicardSampler::new(
-                model,
-                PicardConfig { window, tol, max_sweeps: 1000, pool });
+                model, SamplerSpec::picard_config(window, tol, pool));
             sampler
                 .sample(req.seed, &req.cond)
                 .map(|(y, st)| (y, st.model_calls, st.parallel_rounds, None))
@@ -251,80 +261,76 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
     }
 }
 
-fn serve_gang(shared: &Shared, gang: Vec<QueuedJob>) {
-    shared.metrics.on_batch(gang.len());
-    let t0 = Instant::now();
-    let variant = gang[0].request.variant.clone();
+/// Serve a fusion group round-synchronously: every tick collects each
+/// in-flight request's row demand, runs ONE fused `denoise_batch`, and
+/// scatters results. Between ticks the worker absorbs newly queued
+/// same-variant requests from the *front* of the shared queue
+/// (continuous batching) — only the front, so requests for other
+/// variants are never overtaken (see `batcher::take_compatible_prefix`).
+fn serve_fused(shared: &Shared, group: Vec<QueuedJob>) {
+    let variant = group[0].request.variant.clone();
     let model = match model_for(shared, &variant) {
         Some(m) => m,
         None => {
-            for job in gang {
-                fail_job(shared, job, &format!("unknown model '{variant}'"));
+            let msg = format!("unknown model '{variant}'");
+            for job in group {
+                fail_job(shared, job, &msg);
             }
             return;
         }
     };
-    let d = model.dim();
-    let c = model.cond_dim();
-    let seeds: Vec<u64> = gang.iter().map(|j| j.request.seed).collect();
-    let mut conds = vec![0.0; gang.len() * c];
-    for (r, job) in gang.iter().enumerate() {
-        if job.request.cond.len() == c {
-            conds[r * c..(r + 1) * c].copy_from_slice(&job.request.cond);
-        }
+    // one ParallelModel wrapper for the whole group: fused rounds shard
+    // on the global pool exactly like solo engines' batched rounds
+    let model = ParallelModel::wrap(model, shared.config.pool);
+    let mut sched = FusionScheduler::new(model, shared.config.pool);
+    // `counted` tracks whether this group has been recorded as a batch:
+    // a singleton group only becomes one when admission grows it, at
+    // which point its founding member(s) must be counted too.
+    let mut counted = group.len() >= 2;
+    if counted {
+        shared.metrics.on_batch(group.len());
     }
-    let sampler =
-        BatchedSequentialSampler::with_pool(model, shared.config.pool);
-    match sampler.sample_batch(&seeds, &conds) {
-        Ok((ys, st)) => {
-            let service_s = t0.elapsed().as_secs_f64();
-            // per-request accounting: the gang shares the batched calls
-            let per_calls = st.model_calls; // K rounds regardless of gang size
-            for (r, job) in gang.into_iter().enumerate() {
-                let queued_s = job.enqueued.elapsed().as_secs_f64() - service_s;
-                let resp = Response {
-                    id: job.request.id,
-                    sample: ys[r * d..(r + 1) * d].to_vec(),
-                    model_calls: per_calls,
-                    parallel_rounds: per_calls,
-                    asd_stats: None,
-                    queued_s: queued_s.max(0.0),
-                    service_s,
-                    error: None,
-                };
-                shared.metrics.on_complete(resp.queued_s, service_s,
-                                           per_calls, per_calls, false);
-                let _ = job.reply.send(resp);
+    for job in group {
+        sched.admit(job, &shared.metrics);
+    }
+    while !sched.is_empty() {
+        // continuous admission: absorb compatible front-of-queue
+        // arrivals up to the fusion cap
+        let room = shared.config.max_batch.saturating_sub(sched.len());
+        if room > 0 {
+            let mut admitted = Vec::new();
+            {
+                let mut q = shared.queue.lock().unwrap();
+                take_compatible_prefix(&mut q, &variant, room, &mut admitted);
+            }
+            if !admitted.is_empty() {
+                if counted {
+                    shared.metrics.on_fused_admit(admitted.len());
+                } else {
+                    shared.metrics.on_batch(sched.len() + admitted.len());
+                    counted = true;
+                }
+                for job in admitted {
+                    sched.admit(job, &shared.metrics);
+                }
             }
         }
-        Err(e) => {
-            let msg = e.to_string();
-            for job in gang {
-                fail_job(shared, job, &msg);
-            }
-        }
+        sched.tick(&shared.metrics);
     }
 }
 
 fn fail_job(shared: &Shared, job: QueuedJob, msg: &str) {
     let queued_s = job.enqueued.elapsed().as_secs_f64();
     shared.metrics.on_complete(queued_s, 0.0, 0, 0, true);
-    let _ = job.reply.send(Response {
-        id: job.request.id,
-        sample: vec![],
-        model_calls: 0,
-        parallel_rounds: 0,
-        asd_stats: None,
-        queued_s,
-        service_s: 0.0,
-        error: Some(msg.to_string()),
-    });
+    let _ = job.reply.send(Response::failed(job.request.id, queued_s, msg));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::{Gmm, GmmDdpmOracle};
+    use crate::schedule::DdpmSchedule;
+    use anyhow::Result;
 
     fn coordinator_with_oracle(workers: usize) -> Coordinator {
         let c = Coordinator::new(ServerConfig {
@@ -406,6 +412,132 @@ mod tests {
         c.shutdown();
     }
 
+    /// Test model whose denoise calls block until the gate opens —
+    /// lets a test hold a worker busy so the queue actually fills.
+    struct GatedModel {
+        sched: DdpmSchedule,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl GatedModel {
+        fn open(gate: &Arc<(Mutex<bool>, Condvar)>) {
+            let (lock, cv) = gate.as_ref();
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+    }
+
+    impl crate::model::DenoiseModel for GatedModel {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn cond_dim(&self) -> usize {
+            0
+        }
+        fn k_steps(&self) -> usize {
+            self.sched.k_steps
+        }
+        fn schedule(&self) -> &DdpmSchedule {
+            &self.sched
+        }
+        fn denoise_batch(&self, _ys: &[f64], _ts: &[f64], _cond: &[f64],
+                         n: usize, out: &mut [f64]) -> Result<()> {
+            let (lock, cv) = self.gate.as_ref();
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            out[..n].fill(0.0);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn bounded_admission_rejects_when_queue_is_full() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 1, // no fusion: the worker blocks on one request
+            enable_batching: true,
+            max_queue_depth: 2,
+            ..Default::default()
+        });
+        c.register_model("gated", Arc::new(GatedModel {
+            sched: DdpmSchedule::new(2),
+            gate: gate.clone(),
+        }));
+        let req = |seed| Request {
+            id: 0,
+            variant: "gated".into(),
+            sampler: SamplerSpec::Sequential,
+            seed,
+            cond: vec![],
+        };
+        // r1 is picked up by the worker and blocks inside the model
+        let (_, rx1) = c.submit(req(1));
+        for _ in 0..200 {
+            if c.queue_depth() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(c.queue_depth(), 0, "worker never picked up r1");
+        // r2, r3 fill the queue to max_queue_depth
+        let (_, rx2) = c.submit(req(2));
+        let (_, rx3) = c.submit(req(3));
+        assert_eq!(c.queue_depth(), 2);
+        // r4 must be rejected immediately, without blocking
+        let (_, rx4) = c.submit(req(4));
+        let r4 = rx4.recv().unwrap();
+        assert!(r4.rejected);
+        assert!(r4.error.unwrap().contains("max_queue_depth"));
+        let m = c.metrics();
+        assert_eq!(m.rejected, 1);
+        // open the gate: the admitted requests all complete
+        GatedModel::open(&gate);
+        for rx in [rx1, rx2, rx3] {
+            let r = rx.recv().unwrap();
+            assert!(!r.rejected);
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        assert_eq!(c.metrics().completed, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mixed_samplers_fuse_into_mega_rounds() {
+        // one worker, burst of all three sampler kinds on one variant:
+        // the coordinator must fuse their rounds (rows/round > 1)
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 16,
+            enable_batching: true,
+            ..Default::default()
+        });
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
+        c.register_model("gmm", oracle);
+        let rxs: Vec<_> = (0..9)
+            .map(|i| {
+                let sampler = match i % 3 {
+                    0 => SamplerSpec::Sequential,
+                    1 => SamplerSpec::Asd(8),
+                    _ => SamplerSpec::Picard(8, 1e-6),
+                };
+                c.submit(req(sampler, 100 + i as u64)).1
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed, 9);
+        assert!(m.fused_rounds > 0);
+        assert!(m.fused_rows_per_round > 1.0,
+                "rows/round {}", m.fused_rows_per_round);
+        c.shutdown();
+    }
+
     #[test]
     fn shutdown_joins_workers() {
         let c = coordinator_with_oracle(3);
@@ -422,6 +554,7 @@ mod tests {
                 max_batch: 4,
                 enable_batching: true,
                 pool,
+                ..Default::default()
             });
             let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
             c.register_model("gmm", oracle);

@@ -9,10 +9,12 @@ use crate::math::vec_ops::lincomb_into;
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::rng::Philox;
 use crate::runtime::pool::PoolConfig;
+use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
 
 /// Per-request noise streams (the "randomness contract"): `xi[j]` and
 /// `u[j]` are consumed by the transition to index j (0-based row of the
 /// schedule arrays), identically across sequential / Picard / ASD.
+#[derive(Clone)]
 pub struct NoiseStreams {
     pub y_k: Vec<f64>,
     /// K*d row-major; row j drives transition (j+1) -> j
@@ -35,7 +37,8 @@ impl NoiseStreams {
     }
 }
 
-/// Sequential ancestral sampler.
+/// Sequential ancestral sampler — a thin driver over
+/// [`SequentialStepMachine`].
 pub struct SequentialSampler {
     pub model: Arc<dyn DenoiseModel>,
 }
@@ -51,47 +54,113 @@ impl SequentialSampler {
     }
 
     /// Sample with explicit noise streams; `cond` is empty when the
-    /// model is unconditional. Returns (y_0, stats).
+    /// model is unconditional. Returns (y_0, stats). Clones the streams
+    /// for the machine; `sample` hands its own over without a copy.
     pub fn sample_with_noise(&self, noise: &NoiseStreams, cond: &[f64])
                              -> Result<(Vec<f64>, SeqStats)> {
-        let d = self.model.dim();
-        let k = self.model.k_steps();
-        anyhow::ensure!(cond.len() == self.model.cond_dim(),
-                        "conditioning length {} != cond_dim {}",
-                        cond.len(), self.model.cond_dim());
-        let model = self.model.clone();
-        let s = model.schedule(); // borrow, not clone (hot path)
-        let mut y = noise.y_k.clone();
-        let mut x0 = vec![0.0; d];
-        let mut next = vec![0.0; d];
-        let mut stats = SeqStats::default();
-        for i in (1..=k).rev() {
-            self.model.denoise_one(&y, i, cond, &mut x0)?;
-            stats.model_calls += 1;
-            let j = i - 1;
-            lincomb_into(&mut next, s.c1[j], &x0, s.c2[j], &y);
-            if s.sigma[j] > 0.0 {
-                let xi = noise.xi_row(j, d);
-                for idx in 0..d {
-                    next[idx] += s.sigma[j] * xi[idx];
-                }
-            }
-            std::mem::swap(&mut y, &mut next);
-        }
-        Ok((y, stats))
+        self.sample_owned_noise(noise.clone(), cond)
     }
 
     pub fn sample(&self, seed: u64, cond: &[f64]) -> Result<(Vec<f64>, SeqStats)> {
         let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
                                        self.model.dim());
-        self.sample_with_noise(&noise, cond)
+        self.sample_owned_noise(noise, cond)
+    }
+
+    fn sample_owned_noise(&self, noise: NoiseStreams, cond: &[f64])
+                          -> Result<(Vec<f64>, SeqStats)> {
+        let mut machine = SequentialStepMachine::new(
+            self.model.clone(), noise, cond)?;
+        let y = crate::sampler::drive(&mut machine, &self.model,
+                                      PoolConfig::default())?;
+        Ok((y, machine.into_stats()))
+    }
+}
+
+/// Sequential ancestral sampling as a poll/resume state machine: one
+/// single-row demand per DDPM step. Bit-identical to the closed loop it
+/// replaced — the transition applies `lincomb_into` then adds
+/// `sigma * xi`, in that order, exactly as before.
+pub struct SequentialStepMachine {
+    model: Arc<dyn DenoiseModel>,
+    noise: NoiseStreams,
+    cond: Vec<f64>,
+    y: Vec<f64>,
+    next: Vec<f64>,
+    /// staged demand timestep (len 1)
+    ts: Vec<f64>,
+    /// current DDPM index; the next demand evaluates x0hat at (y, i_cur)
+    i_cur: usize,
+    stats: SeqStats,
+}
+
+impl SequentialStepMachine {
+    pub fn new(model: Arc<dyn DenoiseModel>, noise: NoiseStreams,
+               cond: &[f64]) -> Result<SequentialStepMachine> {
+        anyhow::ensure!(cond.len() == model.cond_dim(),
+                        "conditioning length {} != cond_dim {}",
+                        cond.len(), model.cond_dim());
+        let k = model.k_steps();
+        Ok(SequentialStepMachine {
+            y: noise.y_k.clone(),
+            next: vec![0.0; model.dim()],
+            ts: vec![k as f64],
+            i_cur: k,
+            cond: cond.to_vec(),
+            model,
+            noise,
+            stats: SeqStats::default(),
+        })
+    }
+
+    pub fn stats(&self) -> &SeqStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> SeqStats {
+        self.stats
+    }
+}
+
+impl StepSampler for SequentialStepMachine {
+    fn poll(&mut self) -> Result<SamplerPoll<'_>> {
+        if self.i_cur == 0 {
+            return Ok(SamplerPoll::Done(&self.y));
+        }
+        Ok(SamplerPoll::Demand(DenoiseDemand {
+            ys: &self.y,
+            ts: &self.ts,
+            cond: &self.cond,
+            n: 1,
+        }))
+    }
+
+    fn resume(&mut self, x0: &[f64], _exec: RoundExec) -> Result<()> {
+        let d = self.model.dim();
+        anyhow::ensure!(self.i_cur > 0, "resume after Done");
+        anyhow::ensure!(x0.len() == d, "resume row length {} != d {d}",
+                        x0.len());
+        self.stats.model_calls += 1;
+        let s = self.model.schedule();
+        let j = self.i_cur - 1;
+        lincomb_into(&mut self.next, s.c1[j], x0, s.c2[j], &self.y);
+        if s.sigma[j] > 0.0 {
+            let xi = self.noise.xi_row(j, d);
+            for idx in 0..d {
+                self.next[idx] += s.sigma[j] * xi[idx];
+            }
+        }
+        std::mem::swap(&mut self.y, &mut self.next);
+        self.i_cur -= 1;
+        self.ts[0] = self.i_cur as f64;
+        Ok(())
     }
 }
 
 /// Lockstep-batched sequential sampler: n chains advance together, one
-/// batched model call per step (the coordinator's throughput mode for
-/// baseline sampling; ASD remains per-request because its control flow
-/// is adaptive).
+/// batched model call per step. (The serving coordinator now fuses
+/// arbitrary sampler mixes through `StepSampler` machines instead; this
+/// stays as the direct API for bulk baseline sampling and the benches.)
 pub struct BatchedSequentialSampler {
     pub model: Arc<dyn DenoiseModel>,
 }
@@ -191,6 +260,42 @@ mod tests {
             v.iter().map(|x| x.to_bits()).collect()
         };
         assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn step_machine_demands_descending_steps_and_matches_sampler() {
+        use crate::sampler::{RoundExec, SamplerPoll, StepSampler};
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
+        let noise = NoiseStreams::draw(4, 0, 20, 2);
+        // drive the machine by hand, checking the demand protocol
+        let mut m = SequentialStepMachine::new(oracle.clone(),
+                                               noise.clone(), &[]).unwrap();
+        let mut expect_t = 20.0;
+        let mut x0 = vec![0.0; 2];
+        loop {
+            let (ys, t) = match m.poll().unwrap() {
+                SamplerPoll::Done(_) => break,
+                SamplerPoll::Demand(dem) => {
+                    assert_eq!(dem.n, 1);
+                    assert_eq!(dem.ts[0], expect_t);
+                    (dem.ys.to_vec(), dem.ts[0])
+                }
+            };
+            oracle.denoise_one(&ys, t as usize, &[], &mut x0).unwrap();
+            m.resume(&x0, RoundExec::inline()).unwrap();
+            expect_t -= 1.0;
+        }
+        assert_eq!(expect_t, 0.0);
+        assert_eq!(m.stats().model_calls, 20);
+        // hand-driven result is bit-identical to the sampler entry point
+        let machine_y = match m.poll().unwrap() {
+            SamplerPoll::Done(y) => y.to_vec(),
+            _ => unreachable!(),
+        };
+        let sampler = SequentialSampler::new(oracle);
+        let (want, _) = sampler.sample_with_noise(&noise, &[]).unwrap();
+        assert_eq!(crate::math::vec_ops::to_bits_vec(&machine_y),
+                   crate::math::vec_ops::to_bits_vec(&want));
     }
 
     #[test]

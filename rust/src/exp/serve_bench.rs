@@ -1,0 +1,212 @@
+//! Coordinator throughput/latency bench — the `BENCH_coordinator.json`
+//! emitter tracked across PRs (the serving-layer sibling of
+//! `BENCH_parallel.json`).
+//!
+//! Closed-loop load generator: at each concurrency level c it keeps
+//! waves of c requests in flight against a fresh coordinator (mixed
+//! sequential / ASD / Picard traffic on one variant) and reports
+//! requests/s, p50/p99 end-to-end latency, and the fused-round shape
+//! (`fused_rows_per_round`, occupancy) that shows cross-request fusion
+//! actually saturating the batch dimension.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
+use crate::model::DenoiseModel;
+use crate::util::Json;
+
+/// One concurrency level's measurements.
+#[derive(Debug, Clone)]
+pub struct CoordBenchRow {
+    pub concurrency: usize,
+    pub requests: usize,
+    pub requests_per_s: f64,
+    /// end-to-end (queue + service) latency percentiles
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// mean rows per fused round — the batch the kernels actually see
+    pub fused_rows_per_round: f64,
+    /// mean worker-pool shard occupancy of fused rounds
+    pub fused_occupancy: f64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+}
+
+/// Nearest-rank percentile (q in [0, 1]) over a sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Traffic mix: rotate sequential / ASD / Picard, like the e2e tests.
+fn sampler_for(i: usize, theta: usize) -> SamplerSpec {
+    match i % 3 {
+        0 => SamplerSpec::Sequential,
+        1 => SamplerSpec::Asd(theta),
+        _ => SamplerSpec::Picard(8, 1e-4),
+    }
+}
+
+/// Run the closed-loop bench at each concurrency level. Every level
+/// gets a fresh coordinator (fresh metrics) serving `model` as
+/// `variant`; `n_requests` total requests are pushed through in waves
+/// of `concurrency`.
+pub fn bench_coordinator(model: Arc<dyn DenoiseModel>, variant: &str,
+                         concurrencies: &[usize], n_requests: usize,
+                         config: &ServerConfig, theta: usize)
+                         -> Result<Vec<CoordBenchRow>> {
+    let cond_dim = model.cond_dim();
+    let mut rows = Vec::new();
+    for &concurrency in concurrencies {
+        let concurrency = concurrency.max(1);
+        let n = n_requests.max(concurrency);
+        let c = Coordinator::new(ServerConfig {
+            // fuse up to the full wave; keep the configured caps
+            // otherwise
+            max_batch: config.max_batch.max(concurrency),
+            ..config.clone()
+        });
+        c.register_model(variant, model.clone());
+        let mut latencies_s: Vec<f64> = Vec::with_capacity(n);
+        let mut submitted = 0usize;
+        let t0 = std::time::Instant::now();
+        while submitted < n {
+            let wave = concurrency.min(n - submitted);
+            let mut rxs = Vec::with_capacity(wave);
+            for w in 0..wave {
+                let i = submitted + w;
+                let mut cond = vec![0.0; cond_dim];
+                if cond_dim > 0 {
+                    cond[i % cond_dim] = 1.0;
+                }
+                rxs.push(c.submit(Request {
+                    id: 0,
+                    variant: variant.to_string(),
+                    sampler: sampler_for(i, theta),
+                    seed: 10_000 + i as u64,
+                    cond,
+                }).1);
+            }
+            for rx in rxs {
+                let r = rx.recv()?;
+                if r.error.is_none() {
+                    latencies_s.push(r.queued_s + r.service_s);
+                }
+            }
+            submitted += wave;
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+        let m = c.metrics();
+        c.shutdown();
+        latencies_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rows.push(CoordBenchRow {
+            concurrency,
+            requests: n,
+            requests_per_s: n as f64 / wall_s,
+            p50_latency_ms: percentile(&latencies_s, 0.50) * 1e3,
+            p99_latency_ms: percentile(&latencies_s, 0.99) * 1e3,
+            fused_rows_per_round: m.fused_rows_per_round,
+            fused_occupancy: m.fused_occupancy,
+            completed: m.completed,
+            failed: m.failed,
+            rejected: m.rejected,
+        });
+    }
+    Ok(rows)
+}
+
+fn row_json(r: &CoordBenchRow) -> Json {
+    Json::obj(vec![
+        ("concurrency", Json::Num(r.concurrency as f64)),
+        ("requests", Json::Num(r.requests as f64)),
+        ("requests_per_s", Json::Num(r.requests_per_s)),
+        ("p50_latency_ms", Json::Num(r.p50_latency_ms)),
+        ("p99_latency_ms", Json::Num(r.p99_latency_ms)),
+        ("fused_rows_per_round", Json::Num(r.fused_rows_per_round)),
+        ("fused_occupancy", Json::Num(r.fused_occupancy)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("failed", Json::Num(r.failed as f64)),
+        ("rejected", Json::Num(r.rejected as f64)),
+    ])
+}
+
+/// Assemble the `BENCH_coordinator.json` document.
+pub fn bench_coordinator_json(variant: &str, k: usize,
+                              rows: &[CoordBenchRow]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("bench_coordinator".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("variant", Json::Str(variant.to_string())),
+        ("k", Json::Num(k as f64)),
+        ("pool_threads",
+         Json::Num(crate::runtime::pool::default_threads() as f64)),
+        ("rows", Json::Arr(rows.iter().map(row_json).collect())),
+    ])
+}
+
+/// Render the bench as a table.
+pub fn format_coord_rows(rows: &[CoordBenchRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>10} {:>10} {:>10} {:>12} {:>10}\n",
+        "concurrency", "req/s", "p50 ms", "p99 ms", "rows/round", "occup."));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>10.1} {:>10.2} {:>10.2} {:>12.2} {:>10.2}\n",
+            r.concurrency, r.requests_per_s, r.p50_latency_ms,
+            r.p99_latency_ms, r.fused_rows_per_round, r.fused_occupancy));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn bench_runs_and_roundtrips_json() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
+        let rows = bench_coordinator(oracle, "gmm", &[1, 4], 8,
+                                     &ServerConfig {
+                                         workers: 1,
+                                         ..Default::default()
+                                     }, 8)
+            .unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.completed, r.requests as u64);
+            assert_eq!(r.failed, 0);
+            assert!(r.requests_per_s > 0.0);
+            assert!(r.p99_latency_ms >= r.p50_latency_ms);
+        }
+        // concurrency 4 must actually fuse rows
+        assert!(rows[1].fused_rows_per_round > 1.0,
+                "rows/round {}", rows[1].fused_rows_per_round);
+        let doc = bench_coordinator_json("gmm", 30, &rows);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
+                   "bench_coordinator");
+        let rs = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[1].get("concurrency").unwrap().as_usize().unwrap(), 4);
+        let table = format_coord_rows(&rows);
+        assert!(table.contains("rows/round"));
+    }
+}

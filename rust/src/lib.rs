@@ -29,6 +29,7 @@ pub mod picard;
 pub mod quality;
 pub mod rng;
 pub mod runtime;
+pub mod sampler;
 pub mod schedule;
 pub mod util;
 
@@ -40,6 +41,8 @@ pub mod prelude {
     pub use crate::model::{DenoiseModel, Manifest};
     pub use crate::rng::Philox;
     pub use crate::runtime::Runtime;
+    pub use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll,
+                             StepSampler};
     pub use crate::schedule::DdpmSchedule;
 }
 

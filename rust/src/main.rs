@@ -26,7 +26,8 @@ use asd::runtime::Runtime;
 use asd::util::cli::Args;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "native", "hlo-kernels", "help"]);
+    let args = Args::from_env(&["verbose", "native", "hlo-kernels", "help",
+                                "analytic"]);
     if args.flag("verbose") {
         asd::util::log::set_level(asd::util::log::Level::Debug);
     }
@@ -57,7 +58,10 @@ fn print_help() {
          [--sampler asd|ddpm] [--seed 0] [--native] [--hlo-kernels]\n  \
          serve  --model <v>         synthetic serving trace; options:\n    \
          [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n    \
-         [--pool 1] [--shard-min 2]\n  \
+         [--pool 1] [--shard-min 2] [--max-batch 8]\n    \
+         [--max-queue-depth 1024] [--analytic] (GMM oracle, no\n    \
+         artifacts) [--json BENCH_coordinator.json]\n    \
+         [--concurrency 1,8,64] [--bench-requests 32]\n  \
          pool                       pool-size sweep on an analytic GMM;\n    \
          [--d 64] [--components 96] [--k 150] [--theta 16] [--n 4]\n    \
          [--pool-sizes 1,2,4,8] [--shard-min 2] [--json out.json]\n"
@@ -150,25 +154,42 @@ fn cmd_sample(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let variant = args.get("model").unwrap_or("gmm2d").to_string();
     let n_requests = args.get_usize("requests", 32)?;
     let workers = args.get_usize("workers", 2)?;
     let theta = args.get_usize("theta", 8)?;
     let asd_frac = args.get_f64("asd-frac", 0.5)?;
     let pool_size = args.get_usize("pool", 1)?;
     let shard_min = args.get_usize("shard-min", 2)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let max_queue_depth = args.get_usize("max-queue-depth", 1024)?;
 
-    let rt = Runtime::load_default()?;
-    let model = rt.model(&variant)?;
-    model.warmup()?;
-    let cond_dim = model.info.cond_dim;
-    let coordinator = Coordinator::new(ServerConfig {
+    let config = ServerConfig {
         workers,
-        max_batch: 8,
+        max_batch,
         enable_batching: true,
+        max_queue_depth,
         pool: asd::runtime::pool::PoolConfig { pool_size, shard_min },
-    });
-    coordinator.register_model(&variant, model);
+    };
+
+    // --analytic serves a GMM posterior-mean oracle: no AOT artifacts
+    // needed, so the serving stack (and its CI smoke) runs anywhere
+    let (variant, model, cond_dim): (String, Arc<dyn asd::model::DenoiseModel>,
+                                     usize) = if args.flag("analytic") {
+        let k = args.get_usize("k", 60)?;
+        let m: Arc<dyn asd::model::DenoiseModel> =
+            asd::model::GmmDdpmOracle::new(asd::model::Gmm::circle_2d(), k,
+                                           false);
+        ("gmm-analytic".to_string(), m, 0)
+    } else {
+        let variant = args.get("model").unwrap_or("gmm2d").to_string();
+        let rt = Runtime::load_default()?;
+        let model = rt.model(&variant)?;
+        model.warmup()?;
+        let cond_dim = model.info.cond_dim;
+        (variant, model, cond_dim)
+    };
+    let coordinator = Coordinator::new(config.clone());
+    coordinator.register_model(&variant, model.clone());
 
     println!("serving {n_requests} requests on {workers} workers \
               (asd fraction {asd_frac})");
@@ -204,14 +225,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = coordinator.metrics();
     println!(
         "done in {elapsed:.2}s — {:.1} req/s, mean latency {:.1} ms \
-         (queue {:.1} ms), {} batched into {} gangs, {failed} failed",
+         (queue {:.1} ms), {} batched into {} fusion groups \
+         ({:.1} rows/fused round, occupancy {:.2}), {failed} failed, \
+         {} rejected",
         n_requests as f64 / elapsed,
         m.mean_service_ms,
         m.mean_queue_wait_ms,
         m.batched_requests,
-        m.batched_groups
+        m.batched_groups,
+        m.fused_rows_per_round,
+        m.fused_occupancy,
+        m.rejected
     );
     coordinator.shutdown();
+
+    // --json: run the concurrency-sweep bench and emit
+    // BENCH_coordinator.json (requests/s, fused rows/round, p50/p99)
+    if let Some(path) = args.get("json") {
+        let concurrencies =
+            args.get_usize_list("concurrency", &[1, 8, 64])?;
+        let bench_requests = args.get_usize("bench-requests",
+                                            n_requests.max(16))?;
+        let rows = asd::exp::serve_bench::bench_coordinator(
+            model.clone(), &variant, &concurrencies, bench_requests,
+            &config, theta)?;
+        print!("{}", asd::exp::serve_bench::format_coord_rows(&rows));
+        let doc = asd::exp::serve_bench::bench_coordinator_json(
+            &variant, model.k_steps(), &rows);
+        asd::exp::speedup::write_bench_json(std::path::Path::new(path),
+                                            &doc)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -20,7 +20,9 @@ use anyhow::Result;
 use crate::ddpm::NoiseStreams;
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::runtime::pool::PoolConfig;
+use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
 
+#[derive(Debug, Clone, Copy)]
 pub struct PicardConfig {
     /// sliding window size (paper's "parallel degree")
     pub window: usize,
@@ -63,34 +65,78 @@ impl PicardSampler {
     }
 
     /// Sample with explicit noise; same randomness contract as the other
-    /// samplers (xi row j drives transition j+1 -> j).
+    /// samplers (xi row j drives transition j+1 -> j). Clones the
+    /// streams for the machine; `sample` hands its own over copy-free.
     pub fn sample_with_noise(&self, noise: &NoiseStreams, cond: &[f64])
                              -> Result<(Vec<f64>, PicardStats)> {
-        let d = self.model.dim();
-        let k = self.model.k_steps();
-        let model = self.model.clone();
-        let sched = model.schedule(); // borrow, not clone
-        let mut stats = PicardStats::default();
+        self.sample_owned_noise(noise.clone(), cond)
+    }
 
-        // iterates y[pos] approximates y at DDPM index (k - pos);
-        // pos 0 is the known start y_K.
-        // We process a sliding window of `window` unknown entries.
-        let w = self.config.window.min(k);
-        let mut base = noise.y_k.clone(); // converged prefix head: index k - done
-        let mut done = 0usize; // transitions finalized
-        // window state: guesses for y at indices k-done-1 .. k-done-w
+    pub fn sample(&self, seed: u64, cond: &[f64]) -> Result<(Vec<f64>, PicardStats)> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_owned_noise(noise, cond)
+    }
+
+    fn sample_owned_noise(&self, noise: NoiseStreams, cond: &[f64])
+                          -> Result<(Vec<f64>, PicardStats)> {
+        let mut machine = PicardStepMachine::new(
+            self.model.clone(), self.config.window, self.config.tol,
+            self.config.max_sweeps, noise, cond)?;
+        let y = crate::sampler::drive(&mut machine, &self.model,
+                                      self.config.pool)?;
+        Ok((y, machine.into_stats()))
+    }
+}
+
+/// Picard iteration as a poll/resume state machine: each demand is one
+/// sliding-window sweep (`w_eff` rows, one parallel round); `resume`
+/// applies the Picard update and either stages the next sweep or slides
+/// the window. Bit-identical to the closed-loop sampler it replaced.
+pub struct PicardStepMachine {
+    model: Arc<dyn DenoiseModel>,
+    w: usize,
+    tol: f64,
+    max_sweeps: usize,
+    noise: NoiseStreams,
+    // iterates y[pos] approximates y at DDPM index (k - done - pos - 1);
+    // `base` is the converged prefix head at index k - done.
+    base: Vec<f64>,
+    done: usize,
+    ys: Vec<f64>,
+    new_ys: Vec<f64>,
+    sweeps_here: usize,
+    // staged demand: previous iterates of the window transitions
+    eval_in: Vec<f64>,
+    ts: Vec<f64>,
+    cond_rows: Vec<f64>,
+    acc: Vec<f64>,
+    finished: bool,
+    stats: PicardStats,
+}
+
+impl PicardStepMachine {
+    pub fn new(model: Arc<dyn DenoiseModel>, window: usize, tol: f64,
+               max_sweeps: usize, noise: NoiseStreams, cond: &[f64])
+               -> Result<PicardStepMachine> {
+        anyhow::ensure!(cond.len() == model.cond_dim(),
+                        "conditioning length {} != cond_dim {}",
+                        cond.len(), model.cond_dim());
+        // window = 0 would stage empty sweeps and underflow at the
+        // window slide; reject it up front (a clean per-request error,
+        // not a worker-killing panic)
+        anyhow::ensure!(window >= 1, "Picard window must be >= 1");
+        let d = model.dim();
+        let k = model.k_steps();
+        let c_dim = model.cond_dim();
+        let w = window.min(k);
+        let base = noise.y_k.clone();
         let mut ys = vec![0.0; w * d];
-        let mut new_ys = vec![0.0; w * d];
-        // initialize guesses with the frozen-drift chain from base
-        let mut ts = vec![0.0; w];
-        let mut x0 = vec![0.0; w * d];
-        let mut cond_rows = vec![0.0; w * cond.len().max(1)];
-        let c_dim = self.model.cond_dim();
-
         // initial guess: copy base forward (cheap, no model calls)
         for pos in 0..w {
             ys[pos * d..(pos + 1) * d].copy_from_slice(&base);
         }
+        let mut cond_rows = vec![0.0; w * cond.len().max(1)];
         // conditioning rows never change across sweeps: fill once
         if c_dim > 0 {
             for pos in 0..w {
@@ -98,90 +144,140 @@ impl PicardSampler {
                     .copy_from_slice(cond);
             }
         }
-        // sweep scratch, allocated once per sample (the sweep loop
-        // itself is allocation-free)
-        let mut eval_in = vec![0.0; w * d];
-        let mut acc = vec![0.0; d];
-
-        while done < k {
-            let w_eff = w.min(k - done);
-            let mut sweeps_here = 0usize;
-            loop {
-                sweeps_here += 1;
-                stats.sweeps += 1;
-                // one parallel round: evaluate x0hat at the *previous*
-                // iterate of every window transition idx -> idx-1
-                for pos in 0..w_eff {
-                    let idx = k - done - pos; // DDPM index of the iterate
-                    let src: &[f64] = if pos == 0 {
-                        &base
-                    } else {
-                        &ys[(pos - 1) * d..pos * d]
-                    };
-                    eval_in[pos * d..(pos + 1) * d].copy_from_slice(src);
-                    ts[pos] = idx as f64;
-                }
-                self.model.denoise_batch(&eval_in[..w_eff * d],
-                                         &ts[..w_eff],
-                                         &cond_rows[..w_eff * c_dim],
-                                         w_eff, &mut x0[..w_eff * d])?;
-                stats.model_calls += w_eff;
-                stats.parallel_rounds += 1;
-
-                // Picard update: accumulate increments from the window head
-                acc.copy_from_slice(&base);
-                let mut max_change = 0.0f64;
-                for pos in 0..w_eff {
-                    let idx = k - done - pos; // transition idx -> idx-1
-                    let row = idx - 1;
-                    let prev: &[f64] = if pos == 0 {
-                        &base
-                    } else {
-                        &ys[(pos - 1) * d..pos * d]
-                    };
-                    let xi = noise.xi_row(row, d);
-                    for i in 0..d {
-                        let drift = (sched.c2[row] - 1.0) * prev[i]
-                            + sched.c1[row] * x0[pos * d + i]
-                            + if sched.sigma[row] > 0.0 {
-                                sched.sigma[row] * xi[i]
-                            } else {
-                                0.0
-                            };
-                        acc[i] += drift;
-                    }
-                    let slice = &mut new_ys[pos * d..(pos + 1) * d];
-                    let mut change = 0.0;
-                    for i in 0..d {
-                        let delta = acc[i] - ys[pos * d + i];
-                        change += delta * delta;
-                        slice[i] = acc[i];
-                    }
-                    max_change = max_change.max((change / d as f64).sqrt());
-                }
-                std::mem::swap(&mut ys, &mut new_ys);
-
-                if max_change < self.config.tol
-                    || sweeps_here >= self.config.max_sweeps
-                {
-                    break;
-                }
-            }
-            // slide: finalize the whole window (it converged under tol)
-            let w_eff = w.min(k - done);
-            base.copy_from_slice(&ys[(w_eff - 1) * d..w_eff * d]);
-            done += w_eff;
-            for pos in 0..w.min(k - done) {
-                ys[pos * d..(pos + 1) * d].copy_from_slice(&base);
-            }
+        let mut m = PicardStepMachine {
+            w,
+            tol,
+            max_sweeps,
+            base,
+            done: 0,
+            ys,
+            new_ys: vec![0.0; w * d],
+            sweeps_here: 0,
+            eval_in: vec![0.0; w * d],
+            ts: vec![0.0; w],
+            cond_rows,
+            acc: vec![0.0; d],
+            finished: k == 0,
+            noise,
+            stats: PicardStats::default(),
+            model,
+        };
+        if !m.finished {
+            m.stage_sweep();
         }
-        Ok((base, stats))
+        Ok(m)
     }
 
-    pub fn sample(&self, seed: u64, cond: &[f64]) -> Result<(Vec<f64>, PicardStats)> {
-        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
-                                       self.model.dim());
-        self.sample_with_noise(&noise, cond)
+    pub fn stats(&self) -> &PicardStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> PicardStats {
+        self.stats
+    }
+
+    fn w_eff(&self) -> usize {
+        self.w.min(self.model.k_steps() - self.done)
+    }
+
+    /// Stage the next sweep's demand: the *previous* iterate of every
+    /// window transition idx -> idx-1.
+    fn stage_sweep(&mut self) {
+        let d = self.model.dim();
+        let k = self.model.k_steps();
+        let w_eff = self.w_eff();
+        for pos in 0..w_eff {
+            let idx = k - self.done - pos; // DDPM index of the iterate
+            let src: &[f64] = if pos == 0 {
+                &self.base
+            } else {
+                &self.ys[(pos - 1) * d..pos * d]
+            };
+            self.eval_in[pos * d..(pos + 1) * d].copy_from_slice(src);
+            self.ts[pos] = idx as f64;
+        }
+    }
+}
+
+impl StepSampler for PicardStepMachine {
+    fn poll(&mut self) -> Result<SamplerPoll<'_>> {
+        if self.finished {
+            return Ok(SamplerPoll::Done(&self.base));
+        }
+        let d = self.model.dim();
+        let c_dim = self.model.cond_dim();
+        let w_eff = self.w_eff();
+        Ok(SamplerPoll::Demand(DenoiseDemand {
+            ys: &self.eval_in[..w_eff * d],
+            ts: &self.ts[..w_eff],
+            cond: &self.cond_rows[..w_eff * c_dim],
+            n: w_eff,
+        }))
+    }
+
+    fn resume(&mut self, x0: &[f64], _exec: RoundExec) -> Result<()> {
+        anyhow::ensure!(!self.finished, "resume after Done");
+        let d = self.model.dim();
+        let k = self.model.k_steps();
+        let w_eff = self.w_eff();
+        anyhow::ensure!(x0.len() == w_eff * d,
+                        "sweep rows length {} != {}", x0.len(), w_eff * d);
+        self.sweeps_here += 1;
+        self.stats.sweeps += 1;
+        self.stats.model_calls += w_eff;
+        self.stats.parallel_rounds += 1;
+
+        let model = self.model.clone();
+        let sched = model.schedule();
+        // Picard update: accumulate increments from the window head
+        self.acc.copy_from_slice(&self.base);
+        let mut max_change = 0.0f64;
+        for pos in 0..w_eff {
+            let idx = k - self.done - pos; // transition idx -> idx-1
+            let row = idx - 1;
+            let prev: &[f64] = if pos == 0 {
+                &self.base
+            } else {
+                &self.ys[(pos - 1) * d..pos * d]
+            };
+            let xi = self.noise.xi_row(row, d);
+            for i in 0..d {
+                let drift = (sched.c2[row] - 1.0) * prev[i]
+                    + sched.c1[row] * x0[pos * d + i]
+                    + if sched.sigma[row] > 0.0 {
+                        sched.sigma[row] * xi[i]
+                    } else {
+                        0.0
+                    };
+                self.acc[i] += drift;
+            }
+            let slice = &mut self.new_ys[pos * d..(pos + 1) * d];
+            let mut change = 0.0;
+            for i in 0..d {
+                let delta = self.acc[i] - self.ys[pos * d + i];
+                change += delta * delta;
+                slice[i] = self.acc[i];
+            }
+            max_change = max_change.max((change / d as f64).sqrt());
+        }
+        std::mem::swap(&mut self.ys, &mut self.new_ys);
+
+        if max_change < self.tol || self.sweeps_here >= self.max_sweeps {
+            // slide: finalize the whole window (it converged under tol)
+            self.base.copy_from_slice(&self.ys[(w_eff - 1) * d..w_eff * d]);
+            self.done += w_eff;
+            self.sweeps_here = 0;
+            if self.done == k {
+                self.finished = true;
+                return Ok(());
+            }
+            let w_next = self.w.min(k - self.done);
+            for pos in 0..w_next {
+                self.ys[pos * d..(pos + 1) * d].copy_from_slice(&self.base);
+            }
+        }
+        self.stage_sweep();
+        Ok(())
     }
 }
 
@@ -234,6 +330,15 @@ mod tests {
         }
         assert!(rounds_loose < rounds_tight);
         assert!(err > 1e-6, "loose Picard should leave some bias");
+    }
+
+    #[test]
+    fn zero_window_is_a_clean_error_not_a_panic() {
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        let pic = PicardSampler::new(
+            oracle, PicardConfig { window: 0, ..Default::default() });
+        let err = pic.sample(1, &[]).unwrap_err();
+        assert!(err.to_string().contains("window"), "{err:#}");
     }
 
     #[test]

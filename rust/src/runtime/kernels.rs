@@ -11,6 +11,7 @@ use crate::model::Manifest;
 use crate::runtime::device::{DeviceHandle, ExeId};
 use crate::runtime::host::HostArray;
 
+#[derive(Clone)]
 pub struct HloKernels {
     pub d: usize,
     /// fixed speculation-chain length the artifacts were lowered with

@@ -1,0 +1,245 @@
+//! `StepSampler` — poll-style sampler state machines.
+//!
+//! The paper's exchangeability result makes the *parallel round* (one
+//! batched denoiser call) the unit of work, not the per-request loop.
+//! Every sampler in this crate (sequential DDPM, Picard, ASD, SL-ASD)
+//! is therefore factored into a state machine that, instead of calling
+//! the model itself, *demands* the rows it needs evaluated this round
+//! and is *resumed* with the results:
+//!
+//! ```text
+//!   loop {
+//!       match machine.poll()? {
+//!           SamplerPoll::Done(y0)    => return y0,
+//!           SamplerPoll::Demand(dem) => {
+//!               x0 = denoise_batch(dem.ys, dem.ts, dem.cond, dem.n);
+//!               machine.resume(&x0, exec)?;
+//!           }
+//!       }
+//!   }
+//! ```
+//!
+//! The classic `run()` entry points ([`crate::ddpm::SequentialSampler`],
+//! [`crate::picard::PicardSampler`], [`crate::asd::AsdEngine`]) are thin
+//! drivers over their machines ([`drive`]), so solo execution is
+//! unchanged. The serving win is that an *external* executor — the
+//! coordinator's `FusionScheduler` — can hold many machines for
+//! different requests, collect all their demands each tick, evaluate
+//! them in one fused `denoise_batch` mega-call, and scatter the results
+//! back. Because every machine consumes only its own pre-drawn Philox
+//! noise and the native models are row-independent (see
+//! `model::parallel`), fused execution is bit-identical to solo
+//! execution — batching changes wall-clock, never samples.
+//!
+//! Contract:
+//! * `poll` is cheap and idempotent: it returns the same demand until
+//!   `resume` is called (demands are staged by the previous `resume` /
+//!   the constructor, never recomputed inside `poll`).
+//! * `resume(x0, exec)` must receive exactly `n * d` values laid out as
+//!   the demand's rows; `exec` reports how the round was executed
+//!   (latency, worker-pool shards) for stats that need it.
+//! * Machines never call the model; they only do O(theta * d) sampler
+//!   math (speculation chains, GRS scans, Picard updates) in `resume`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::DenoiseModel;
+use crate::runtime::pool::PoolConfig;
+
+/// The rows a sampler needs evaluated in the current parallel round.
+/// All slices borrow the machine's internal staging buffers.
+pub struct DenoiseDemand<'a> {
+    /// `n * d` row-major iterates
+    pub ys: &'a [f64],
+    /// `n` step indices / times
+    pub ts: &'a [f64],
+    /// `n * cond_dim` conditioning rows (empty when unconditional)
+    pub cond: &'a [f64],
+    /// number of rows demanded
+    pub n: usize,
+}
+
+/// Result of polling a sampler state machine.
+pub enum SamplerPoll<'a> {
+    /// the machine needs these rows denoised before it can advance
+    Demand(DenoiseDemand<'a>),
+    /// sampling finished; the final `y_0` (borrowed from the machine)
+    Done(&'a [f64]),
+}
+
+/// How the executor ran the round the machine is being resumed from —
+/// recorded into per-request stats (`AsdStats::round_latency_s` /
+/// `round_shards`). A fused executor reports the *fused* call's values.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundExec {
+    /// measured wall-clock seconds of the round's model call
+    pub latency_s: f64,
+    /// worker-pool shards the round's batch was split into (1 = inline)
+    pub shards: usize,
+}
+
+impl RoundExec {
+    /// An inline, unmeasured round (unit tests / synthetic resumes).
+    pub fn inline() -> RoundExec {
+        RoundExec { latency_s: 0.0, shards: 1 }
+    }
+}
+
+/// A sampler factored as a poll/resume state machine. See the module
+/// docs for the contract.
+pub trait StepSampler {
+    /// Current demand, or `Done` with the finished sample. Idempotent
+    /// until the next `resume`.
+    fn poll(&mut self) -> Result<SamplerPoll<'_>>;
+
+    /// Advance the machine with the `n * d` x0hat rows answering the
+    /// last demand.
+    fn resume(&mut self, x0: &[f64], exec: RoundExec) -> Result<()>;
+}
+
+/// Drive a machine to completion against an arbitrary row evaluator
+/// (`eval(ys, ts, cond, n, out)`), measuring per-round latency and
+/// reporting `pool`-derived shard counts. This is the substrate both
+/// for [`drive`] (a `DenoiseModel` evaluator) and for samplers whose
+/// evaluator is not a `DenoiseModel` (the SL oracle in
+/// `asd::sl_engine`).
+pub fn drive_with<F>(machine: &mut dyn StepSampler, d: usize,
+                     pool: PoolConfig, mut eval: F) -> Result<Vec<f64>>
+where
+    F: FnMut(&[f64], &[f64], &[f64], usize, &mut [f64]) -> Result<()>,
+{
+    let mut out: Vec<f64> = Vec::new();
+    loop {
+        let n;
+        let t0;
+        match machine.poll()? {
+            SamplerPoll::Done(y0) => return Ok(y0.to_vec()),
+            SamplerPoll::Demand(dem) => {
+                n = dem.n;
+                let need = n * d;
+                if out.len() < need {
+                    out.resize(need, 0.0);
+                }
+                t0 = std::time::Instant::now();
+                eval(dem.ys, dem.ts, dem.cond, n, &mut out[..need])?;
+            }
+        }
+        let exec = RoundExec {
+            latency_s: t0.elapsed().as_secs_f64(),
+            shards: pool.shards_for(n),
+        };
+        machine.resume(&out[..n * d], exec)?;
+    }
+}
+
+/// Drive a machine to completion against a `DenoiseModel` (solo
+/// execution — one request, one machine, one model call per round).
+pub fn drive(machine: &mut dyn StepSampler, model: &Arc<dyn DenoiseModel>,
+             pool: PoolConfig) -> Result<Vec<f64>> {
+    let d = model.dim();
+    drive_with(machine, d, pool,
+               |ys, ts, cond, n, out| model.denoise_batch(ys, ts, cond, n, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two-round toy machine: demands one row, then its double, then is
+    /// done with the sum — exercises the poll/resume protocol itself.
+    struct Toy {
+        stage: usize,
+        ys: Vec<f64>,
+        ts: Vec<f64>,
+        acc: Vec<f64>,
+        execs: Vec<RoundExec>,
+    }
+
+    impl StepSampler for Toy {
+        fn poll(&mut self) -> Result<SamplerPoll<'_>> {
+            if self.stage >= 2 {
+                return Ok(SamplerPoll::Done(&self.acc));
+            }
+            Ok(SamplerPoll::Demand(DenoiseDemand {
+                ys: &self.ys,
+                ts: &self.ts,
+                cond: &[],
+                n: 1,
+            }))
+        }
+
+        fn resume(&mut self, x0: &[f64], exec: RoundExec) -> Result<()> {
+            anyhow::ensure!(x0.len() == 2, "row shape");
+            for i in 0..2 {
+                self.acc[i] += x0[i];
+                self.ys[i] = 2.0 * x0[i];
+            }
+            self.stage += 1;
+            self.ts[0] += 1.0;
+            self.execs.push(exec);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn drive_with_runs_machine_to_done() {
+        let mut m = Toy {
+            stage: 0,
+            ys: vec![1.0, 2.0],
+            ts: vec![0.0],
+            acc: vec![0.0, 0.0],
+            execs: vec![],
+        };
+        // evaluator: identity on ys
+        let y0 = drive_with(&mut m, 2, PoolConfig::default(),
+                            |ys, _ts, _c, n, out| {
+                                out[..n * 2].copy_from_slice(&ys[..n * 2]);
+                                Ok(())
+                            })
+            .unwrap();
+        // round 1 adds [1,2]; round 2 adds [2,4]
+        assert_eq!(y0, vec![3.0, 6.0]);
+        assert_eq!(m.execs.len(), 2);
+        assert!(m.execs.iter().all(|e| e.shards == 1));
+        // poll is idempotent after Done
+        assert!(matches!(m.poll().unwrap(), SamplerPoll::Done(_)));
+    }
+
+    #[test]
+    fn poll_is_idempotent_between_resumes() {
+        let mut m = Toy {
+            stage: 0,
+            ys: vec![5.0, 7.0],
+            ts: vec![3.0],
+            acc: vec![0.0, 0.0],
+            execs: vec![],
+        };
+        for _ in 0..3 {
+            match m.poll().unwrap() {
+                SamplerPoll::Demand(d) => {
+                    assert_eq!(d.ys, &[5.0, 7.0]);
+                    assert_eq!(d.ts, &[3.0]);
+                    assert_eq!(d.n, 1);
+                }
+                _ => panic!("expected demand"),
+            }
+        }
+    }
+
+    #[test]
+    fn drive_surfaces_eval_errors() {
+        let mut m = Toy {
+            stage: 0,
+            ys: vec![1.0, 1.0],
+            ts: vec![0.0],
+            acc: vec![0.0, 0.0],
+            execs: vec![],
+        };
+        let err = drive_with(&mut m, 2, PoolConfig::default(),
+                             |_, _, _, _, _| anyhow::bail!("injected"))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected"));
+    }
+}

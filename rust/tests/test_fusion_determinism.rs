@@ -1,0 +1,220 @@
+//! Fused coordinator execution must never change a sampled bit.
+//!
+//! Extends tests/test_parallel_determinism.rs from the worker-pool
+//! layer up to the serving layer: a mixed burst (ASD + Picard +
+//! sequential on one variant) served through the coordinator's fused
+//! mega-batches must reproduce, bit for bit, the samples each request
+//! would get from its solo sampler — at every pool size. This holds
+//! because each request's `StepSampler` machine consumes only its own
+//! Philox streams and native models are row-independent
+//! (`model::parallel`), so fusing rows across requests changes
+//! wall-clock, never samples.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use asd::asd::{AsdConfig, AsdEngine};
+use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
+use asd::ddpm::SequentialSampler;
+use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle};
+use asd::picard::{PicardConfig, PicardSampler};
+use asd::runtime::pool::PoolConfig;
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+const K: usize = 50;
+
+fn model() -> Arc<dyn DenoiseModel> {
+    GmmDdpmOracle::new(Gmm::random(8, 6, 1.5, 3), K, false)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    asd::math::vec_ops::to_bits_vec(v)
+}
+
+/// The burst: 3 of each sampler kind, same specs the coordinator's
+/// fusion layer builds machines with.
+fn burst_specs() -> Vec<(SamplerSpec, u64)> {
+    (0..9u64)
+        .map(|i| {
+            let spec = match i % 3 {
+                0 => SamplerSpec::Sequential,
+                1 => SamplerSpec::Asd(8),
+                _ => SamplerSpec::Picard(8, 1e-6),
+            };
+            (spec, 1000 + i)
+        })
+        .collect()
+}
+
+/// Solo reference sample for one (spec, seed), no coordinator involved.
+fn solo_sample(model: &Arc<dyn DenoiseModel>, spec: SamplerSpec, seed: u64)
+               -> Vec<f64> {
+    match spec {
+        SamplerSpec::Sequential => {
+            SequentialSampler::new(model.clone()).sample(seed, &[])
+                .unwrap().0
+        }
+        SamplerSpec::Asd(theta) => {
+            let mut e = AsdEngine::new(
+                model.clone(), AsdConfig { theta, ..Default::default() });
+            e.sample(seed).unwrap().y0
+        }
+        SamplerSpec::Picard(window, tol) => {
+            let p = PicardSampler::new(
+                model.clone(),
+                PicardConfig { window, tol, max_sweeps: 1000,
+                               ..Default::default() });
+            p.sample(seed, &[]).unwrap().0
+        }
+    }
+}
+
+#[test]
+fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
+    let model = model();
+    let specs = burst_specs();
+    let want: Vec<Vec<u64>> = specs.iter()
+        .map(|&(spec, seed)| bits(&solo_sample(&model, spec, seed)))
+        .collect();
+
+    for pool_size in POOL_SIZES {
+        let c = Coordinator::new(ServerConfig {
+            workers: 2,
+            max_batch: 16,
+            enable_batching: true,
+            pool: PoolConfig { pool_size, shard_min: 1 },
+            ..Default::default()
+        });
+        c.register_model("gmm", model.clone());
+        let mut rxs = Vec::new();
+        for &(spec, seed) in &specs {
+            rxs.push(c.submit(Request {
+                id: 0,
+                variant: "gmm".into(),
+                sampler: spec,
+                seed,
+                cond: vec![],
+            }).1);
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "pool={pool_size} req {i}: {:?}",
+                    r.error);
+            assert_eq!(bits(&r.sample), want[i],
+                       "pool_size={pool_size} request {i} \
+                        ({:?}) changed bits vs solo run", specs[i].0);
+        }
+        c.shutdown();
+    }
+}
+
+#[test]
+fn fused_burst_actually_fuses_rows_per_round() {
+    // acceptance criterion: a mixed burst through one worker must be
+    // served via fused mega-batches with fused_rows_per_round > 1
+    let model = model();
+    let c = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 16,
+        enable_batching: true,
+        ..Default::default()
+    });
+    c.register_model("gmm", model);
+    let rxs: Vec<_> = burst_specs().into_iter()
+        .map(|(spec, seed)| {
+            c.submit(Request {
+                id: 0,
+                variant: "gmm".into(),
+                sampler: spec,
+                seed,
+                cond: vec![],
+            }).1
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().error.is_none());
+    }
+    let m = c.metrics();
+    assert_eq!(m.completed, 9);
+    assert!(m.fused_rounds > 0, "no fused rounds ran");
+    assert!(m.fused_rows_per_round > 1.0,
+            "fused_rows_per_round {} — burst was served per-request",
+            m.fused_rows_per_round);
+    c.shutdown();
+}
+
+#[test]
+fn solo_sized_group_matches_dedicated_engines_repeatedly() {
+    // fusion groups of size 1 (requests trickling in) must also stay
+    // bit-identical to the engines — the degenerate fused path
+    let model = model();
+    let c = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 8,
+        enable_batching: true,
+        ..Default::default()
+    });
+    c.register_model("gmm", model.clone());
+    for &(spec, seed) in &burst_specs()[..3] {
+        let (_, rx) = c.submit(Request {
+            id: 0,
+            variant: "gmm".into(),
+            sampler: spec,
+            seed,
+            cond: vec![],
+        });
+        // recv before the next submit: each request runs alone
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(bits(&r.sample), bits(&solo_sample(&model, spec, seed)),
+                   "solo-group {spec:?} changed bits");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn conditional_requests_fuse_bit_identically() {
+    // conditional oracle: every fused row carries its request's own
+    // conditioning; scattering must not mix them up
+    let model: Arc<dyn DenoiseModel> =
+        GmmDdpmOracle::new(Gmm::circle_2d(), 40, true);
+    let c_dim = model.cond_dim();
+    let mk_cond = |cls: usize| -> Vec<f64> {
+        let mut v = vec![0.0; c_dim];
+        v[cls % c_dim] = 1.0;
+        v
+    };
+    // solo references
+    let mut want: HashMap<u64, Vec<u64>> = HashMap::new();
+    for i in 0..6u64 {
+        let cond = mk_cond(i as usize);
+        let mut e = AsdEngine::new(
+            model.clone(), AsdConfig { theta: 6, ..Default::default() });
+        want.insert(i, bits(&e.sample_cond(i, &cond).unwrap().y0));
+    }
+    let c = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 8,
+        enable_batching: true,
+        ..Default::default()
+    });
+    c.register_model("gmm", model);
+    let rxs: Vec<_> = (0..6u64)
+        .map(|i| {
+            (i, c.submit(Request {
+                id: 0,
+                variant: "gmm".into(),
+                sampler: SamplerSpec::Asd(6),
+                seed: i,
+                cond: mk_cond(i as usize),
+            }).1)
+        })
+        .collect();
+    for (i, rx) in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(&bits(&r.sample), want.get(&i).unwrap(),
+                   "request {i}: fused conditioning mismatch");
+    }
+    c.shutdown();
+}
