@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         },
         ..Default::default()
-    });
+    })?;
     // serve two real models side by side
     for variant in ["gmm2d", "latent16"] {
         let m = rt.model(variant)?;

@@ -162,7 +162,7 @@ fn main() -> anyhow::Result<()> {
             coord_model, "toy-bench", &[1, 8, 64], 64,
             &ServerConfig { workers: 2, ..Default::default() }, 8)?;
         print!("{}", format_coord_rows(&rows));
-        let doc = bench_coordinator_json("toy-bench", k_steps, &rows);
+        let doc = bench_coordinator_json("toy-bench", k_steps, &rows, None);
         let coord_path = std::path::Path::new("BENCH_coordinator.json");
         write_bench_json(coord_path, &doc)?;
         println!("wrote {}", coord_path.display());

@@ -22,7 +22,8 @@ use crate::math::vec_ops::lincomb_into;
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::runtime::pool::PoolConfig;
 use crate::runtime::HloKernels;
-use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
+use crate::sampler::{ArenaSpan, DenoiseDemand, RoundArena, RoundExec,
+                     SamplerPoll, StepSampler};
 
 /// Which implementation computes the speculation chain and the GRS.
 /// The denoiser itself is always whatever `DenoiseModel` was given.
@@ -236,6 +237,11 @@ pub struct AsdStepMachine {
     /// staged proposal timestep (len 1)
     prop_ts: Vec<f64>,
     phase: AsdPhase,
+    /// whether the internal eval buffers hold the current Verify
+    /// demand. Staging is deferred to `poll` so the arena path
+    /// (`poll_into`) can write the verify rows straight from `y_hat`
+    /// into the arena without ever touching the eval buffers.
+    staged: bool,
     stats: AsdStats,
 }
 
@@ -269,6 +275,7 @@ impl AsdStepMachine {
             have_x0: false,
             prop_ts: vec![k as f64],
             phase: if k == 0 { AsdPhase::Done } else { AsdPhase::Propose },
+            staged: false,
             noise,
             model,
             stats: AsdStats::default(),
@@ -308,30 +315,14 @@ impl AsdStepMachine {
             // positions 1..th-1 evaluate x0hat at the proposed points
             // (position 0 reuses x0a — Lemma 13); `eval_tail` adds the
             // final chain point so an all-accept window chains onward.
+            // The demand rows themselves are written lazily — straight
+            // into the executor's arena by `poll_into`, or into the
+            // eval buffers by the compatibility `poll`.
             let tail = self.eval_tail && self.i_cur - th > 0 && th >= 1;
             let n_eval = (th - 1) + tail as usize;
             if n_eval > 0 {
-                let d = self.model.dim();
-                for (slot, kpos) in (1..th).enumerate() {
-                    let j = self.i_cur - kpos; // transition j -> j-1
-                    self.eval_in[slot * d..(slot + 1) * d].copy_from_slice(
-                        &self.y_hat[(kpos - 1) * d..kpos * d]);
-                    self.eval_ts[slot] = j as f64;
-                }
-                if tail {
-                    let slot = th - 1;
-                    self.eval_in[slot * d..(slot + 1) * d].copy_from_slice(
-                        &self.y_hat[(th - 1) * d..th * d]);
-                    self.eval_ts[slot] = (self.i_cur - th) as f64;
-                }
-                let c_dim = self.model.cond_dim();
-                if c_dim > 0 {
-                    for slot in 0..n_eval {
-                        self.eval_cond[slot * c_dim..(slot + 1) * c_dim]
-                            .copy_from_slice(&self.cond);
-                    }
-                }
                 self.phase = AsdPhase::Verify { th, tail, n_eval };
+                self.staged = false;
                 return Ok(());
             }
 
@@ -416,6 +407,54 @@ impl AsdStepMachine {
         }
     }
 
+    /// Write the current Verify demand's rows into arbitrary target
+    /// slices (sized exactly `n_eval`): the arena's reserved row range
+    /// or the internal eval buffers. Reads only the speculation chain
+    /// — identical values either way.
+    fn write_verify_rows(&self, th: usize, tail: bool, n_eval: usize,
+                         ys: &mut [f64], ts: &mut [f64], cond: &mut [f64]) {
+        let d = self.model.dim();
+        for (slot, kpos) in (1..th).enumerate() {
+            let j = self.i_cur - kpos; // transition j -> j-1
+            ys[slot * d..(slot + 1) * d].copy_from_slice(
+                &self.y_hat[(kpos - 1) * d..kpos * d]);
+            ts[slot] = j as f64;
+        }
+        if tail {
+            let slot = th - 1;
+            ys[slot * d..(slot + 1) * d].copy_from_slice(
+                &self.y_hat[(th - 1) * d..th * d]);
+            ts[slot] = (self.i_cur - th) as f64;
+        }
+        let c_dim = self.model.cond_dim();
+        if c_dim > 0 {
+            for slot in 0..n_eval {
+                cond[slot * c_dim..(slot + 1) * c_dim]
+                    .copy_from_slice(&self.cond);
+            }
+        }
+    }
+
+    /// Compatibility staging for the slice-based `poll`: materialize
+    /// the Verify demand in the internal eval buffers.
+    fn stage_verify(&mut self) {
+        if let AsdPhase::Verify { th, tail, n_eval } = self.phase {
+            let mut ys = std::mem::take(&mut self.eval_in);
+            let mut ts = std::mem::take(&mut self.eval_ts);
+            let mut cond = std::mem::take(&mut self.eval_cond);
+            let d = self.model.dim();
+            let c_dim = self.model.cond_dim();
+            self.write_verify_rows(th, tail, n_eval,
+                                   &mut ys[..n_eval * d],
+                                   &mut ts[..n_eval],
+                                   &mut cond[..n_eval * c_dim]);
+            self.eval_in = ys;
+            self.eval_ts = ts;
+            self.eval_cond = cond;
+            self.staged = true;
+        }
+    }
+
     /// Speculation chain (Alg 1 lines 7-9; L1 kernel `speculate`):
     /// chain position k covers transition j -> j-1, j = i_cur - k.
     fn run_speculate(&mut self, th: usize) -> Result<()> {
@@ -469,6 +508,9 @@ impl AsdStepMachine {
 
 impl StepSampler for AsdStepMachine {
     fn poll(&mut self) -> Result<SamplerPoll<'_>> {
+        if matches!(self.phase, AsdPhase::Verify { .. }) && !self.staged {
+            self.stage_verify();
+        }
         let d = self.model.dim();
         let c_dim = self.model.cond_dim();
         match self.phase {
@@ -486,6 +528,30 @@ impl StepSampler for AsdStepMachine {
                     cond: &self.eval_cond[..n_eval * c_dim],
                     n: n_eval,
                 }))
+            }
+        }
+    }
+
+    /// Arena path: the proposal row or the whole verify window is
+    /// written straight from the speculation chain into the arena's
+    /// reserved row range — the eval staging buffers are bypassed
+    /// entirely (no pack copy).
+    fn poll_into(&mut self, arena: &mut RoundArena)
+                 -> Result<Option<ArenaSpan>> {
+        match self.phase {
+            AsdPhase::Done => Ok(None),
+            AsdPhase::Propose => {
+                let (span, rows) = arena.reserve(1);
+                rows.ys.copy_from_slice(&self.y);
+                rows.ts[0] = self.prop_ts[0];
+                rows.cond.copy_from_slice(&self.cond);
+                Ok(Some(span))
+            }
+            AsdPhase::Verify { th, tail, n_eval } => {
+                let (span, rows) = arena.reserve(n_eval);
+                self.write_verify_rows(th, tail, n_eval, rows.ys, rows.ts,
+                                       rows.cond);
+                Ok(Some(span))
             }
         }
     }

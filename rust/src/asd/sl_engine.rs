@@ -16,7 +16,8 @@ use crate::math::vec_ops::axpy_into;
 use crate::model::GmmSlOracle;
 use crate::rng::Philox;
 use crate::runtime::pool::PoolConfig;
-use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
+use crate::sampler::{ArenaSpan, DenoiseDemand, RoundArena, RoundExec,
+                     SamplerPoll, StepSampler};
 use crate::schedule::SlGrid;
 
 pub struct SlSequential<'a> {
@@ -73,7 +74,7 @@ impl<'a> SlAsd<'a> {
                                                d, seed);
         let gmm = &self.oracle.gmm;
         let y0 = crate::sampler::drive_with(
-            &mut machine, d, PoolConfig::default(),
+            &mut machine, d, 0, PoolConfig::default(),
             |ys, ts, _cond, n, out| {
                 for r in 0..n {
                     gmm.sl_posterior_mean(&ys[r * d..(r + 1) * d], ts[r],
@@ -255,6 +256,31 @@ impl StepSampler for SlAsdStepMachine {
                     cond: &[],
                     n: th - 1,
                 }))
+            }
+        }
+    }
+
+    /// Arena path: proposal / verify rows written straight from the
+    /// machine's chain into the arena's reserved row range (the verify
+    /// times are computed in place — `eval_ts` staging bypassed).
+    fn poll_into(&mut self, arena: &mut RoundArena)
+                 -> anyhow::Result<Option<ArenaSpan>> {
+        let d = self.d;
+        match self.phase {
+            SlPhase::Done => Ok(None),
+            SlPhase::Propose => {
+                let (span, rows) = arena.reserve(1);
+                rows.ys.copy_from_slice(&self.y);
+                rows.ts[0] = self.prop_ts[0];
+                Ok(Some(span))
+            }
+            SlPhase::Verify { th } => {
+                let (span, rows) = arena.reserve(th - 1);
+                rows.ys.copy_from_slice(&self.y_hat[..(th - 1) * d]);
+                for kpos in 1..th {
+                    rows.ts[kpos - 1] = self.times[self.a + kpos];
+                }
+                Ok(Some(span))
             }
         }
     }

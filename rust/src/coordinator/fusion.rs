@@ -1,18 +1,30 @@
-//! `FusionScheduler` — round-synchronous cross-request batch fusion.
+//! `FusionScheduler` — round-synchronous cross-request batch fusion on
+//! the [`RoundArena`](crate::sampler::RoundArena) data plane.
 //!
-//! One scheduler owns the in-flight requests of a same-variant fusion
-//! group. Each [`FusionScheduler::tick`]:
+//! One scheduler owns the in-flight requests of a serving lane (one
+//! lane per variant — see `coordinator::lanes`). A round is three
+//! phases, split so a lane driver can co-schedule *many* lanes' rounds
+//! on the one global pool inside a single tick:
 //!
-//! 1. polls every request's sampler state machine for its
-//!    `DenoiseDemand` (finished machines are retired and answered),
-//! 2. packs all demanded rows into one contiguous mega-batch,
-//! 3. issues a single fused `denoise_batch` call (through the group's
-//!    `ParallelModel` wrapper, so the one global worker pool shards the
-//!    fused rows), and
-//! 4. scatters the results back, resuming every machine.
+//! 1. [`FusionScheduler::begin_round`] — poll phase: retire finished
+//!    machines (answer their requests), then have every in-flight
+//!    machine write its demanded rows **directly into the lane's
+//!    arena** (`StepSampler::poll_into`; no mega-batch pack copy).
+//! 2. [`FusionScheduler::execute_round`] — one fused `denoise_round`
+//!    over the arena (through the lane's `ParallelModel` wrapper, so
+//!    the global worker pool shards the fused rows; the native backend
+//!    converts f64→f32 once into the arena's per-lane GEMM workspace).
+//!    Runs lock-free — safe to execute concurrently with other lanes.
+//! 3. [`FusionScheduler::finish_round`] — scatter phase: resume every
+//!    machine from a *view* into the arena's output region
+//!    (`StepSampler::resume_from`; no scatter copy).
+//!
+//! The arena and workspace persist across rounds and across fusion
+//! groups, so the steady-state fused path performs zero heap
+//! allocations per round.
 //!
 //! **Fairness:** every in-flight request contributes to and is resumed
-//! from *every* tick — a sequential request's one row rides the same
+//! from *every* round — a sequential request's one row rides the same
 //! round as an ASD request's theta-row verify batch, so no request
 //! starves while another speculates. Per-request row demands are
 //! bounded (1, theta, or the Picard window), so no single request can
@@ -36,7 +48,8 @@ use crate::ddpm::{NoiseStreams, SequentialStepMachine};
 use crate::model::DenoiseModel;
 use crate::picard::PicardStepMachine;
 use crate::runtime::pool::PoolConfig;
-use crate::sampler::{RoundExec, SamplerPoll, StepSampler};
+use crate::sampler::{ArenaSpan, RoundArena, RoundExec, SamplerPoll,
+                     StepSampler};
 
 /// Per-request sampler state machine (concrete enum so finished
 /// machines can surface their sampler-specific stats without downcasts).
@@ -47,7 +60,7 @@ pub(crate) enum Machine {
 }
 
 impl Machine {
-    /// Build the machine for a request. `model` is the group's shared
+    /// Build the machine for a request. `model` is the lane's shared
     /// (possibly `ParallelModel`-wrapped) model — machines only read
     /// its metadata and schedule, never call it.
     pub(crate) fn for_request(model: Arc<dyn DenoiseModel>,
@@ -117,30 +130,35 @@ struct ActiveRequest {
 pub(crate) struct FusionScheduler {
     model: Arc<dyn DenoiseModel>,
     pool: PoolConfig,
+    /// the lane label this scheduler reports per-lane metrics under
+    lane: String,
     active: Vec<ActiveRequest>,
-    // mega-batch staging, reused across ticks
-    ys: Vec<f64>,
-    ts: Vec<f64>,
-    cond: Vec<f64>,
-    out: Vec<f64>,
-    /// (active index, row offset, rows) per demanding request this tick
-    spans: Vec<(usize, usize, usize)>,
+    /// round staging arena, reused across rounds and fusion groups
+    arena: RoundArena,
+    /// (active index, arena span) per demanding request this round
+    spans: Vec<(usize, ArenaSpan)>,
+    /// execution report staged between `execute_round` and
+    /// `finish_round`
+    round: Option<RoundExec>,
+    /// fused-call error staged for `finish_round` to fail the group
+    round_err: Option<String>,
 }
 
 impl FusionScheduler {
     /// `model` should already be `ParallelModel`-wrapped with `pool` so
     /// fused rounds shard on the global worker pool.
-    pub(crate) fn new(model: Arc<dyn DenoiseModel>, pool: PoolConfig)
-                      -> FusionScheduler {
+    pub(crate) fn new(model: Arc<dyn DenoiseModel>, pool: PoolConfig,
+                      lane: &str) -> FusionScheduler {
+        let arena = RoundArena::for_model(model.as_ref());
         FusionScheduler {
             model,
             pool,
+            lane: lane.to_string(),
             active: Vec::new(),
-            ys: Vec::new(),
-            ts: Vec::new(),
-            cond: Vec::new(),
-            out: Vec::new(),
+            arena,
             spans: Vec::new(),
+            round: None,
+            round_err: None,
         }
     }
 
@@ -158,12 +176,15 @@ impl FusionScheduler {
         let queued_s = job.enqueued.elapsed().as_secs_f64();
         match Machine::for_request(self.model.clone(), job.request.sampler,
                                    job.request.seed, &job.request.cond) {
-            Ok(machine) => self.active.push(ActiveRequest {
-                job,
-                machine,
-                queued_s,
-                admitted: Instant::now(),
-            }),
+            Ok(machine) => {
+                metrics.on_lane_admit(&self.lane, queued_s);
+                self.active.push(ActiveRequest {
+                    job,
+                    machine,
+                    queued_s,
+                    admitted: Instant::now(),
+                });
+            }
             Err(e) => {
                 metrics.on_complete(queued_s, 0.0, 0, 0, true);
                 let _ = job.reply.send(Response::failed(job.request.id,
@@ -173,82 +194,111 @@ impl FusionScheduler {
         }
     }
 
-    /// One fused round: poll all, retire finished, evaluate the fused
-    /// batch, scatter results. Returns the number of requests completed
-    /// this tick. On a model error the whole group fails (they shared
-    /// the call) and is drained.
-    pub(crate) fn tick(&mut self, metrics: &Metrics) -> usize {
-        let d = self.model.dim();
-        let c = self.model.cond_dim();
-        self.ys.clear();
-        self.ts.clear();
-        self.cond.clear();
+    /// Phase 1 — poll: retire finished machines (answering their
+    /// requests), then stage every remaining machine's demand directly
+    /// into the arena. Returns the number of requests completed.
+    pub(crate) fn begin_round(&mut self, metrics: &Metrics) -> usize {
+        self.arena.begin_round();
         self.spans.clear();
-
-        // poll phase: collect demands; retire machines that are done
+        self.round = None;
+        self.round_err = None;
         let mut completed = 0usize;
         let mut idx = 0usize;
         while idx < self.active.len() {
-            let poll = match self.active[idx].machine.as_step().poll() {
-                Ok(p) => p,
+            match self.active[idx].machine.as_step()
+                .poll_into(&mut self.arena)
+            {
                 Err(e) => {
                     let msg = e.to_string();
                     self.fail_at(idx, &msg, metrics);
-                    continue;
+                    // swap_remove moved an unpolled request into `idx`
                 }
-            };
-            match poll {
-                SamplerPoll::Done(y0) => {
-                    let sample = y0.to_vec();
-                    self.finish_at(idx, sample, metrics);
-                    completed += 1;
-                    // swap_remove moved another request into `idx`
+                Ok(None) => {
+                    // done: fetch the final sample through `poll`
+                    match self.active[idx].machine.as_step().poll() {
+                        Ok(SamplerPoll::Done(y0)) => {
+                            let sample = y0.to_vec();
+                            self.finish_at(idx, sample, metrics);
+                            completed += 1;
+                        }
+                        Ok(SamplerPoll::Demand(_)) => {
+                            self.fail_at(idx,
+                                         "machine demanded rows after \
+                                          reporting done", metrics);
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            self.fail_at(idx, &msg, metrics);
+                        }
+                    }
                 }
-                SamplerPoll::Demand(dem) => {
-                    let off = self.ts.len();
-                    self.ys.extend_from_slice(dem.ys);
-                    self.ts.extend_from_slice(dem.ts);
-                    self.cond.extend_from_slice(dem.cond);
-                    self.spans.push((idx, off, dem.n));
+                Ok(Some(span)) => {
+                    self.spans.push((idx, span));
                     idx += 1;
                 }
             }
         }
-        if self.spans.is_empty() {
-            return completed;
-        }
+        completed
+    }
 
-        // fused mega-call: one parallel round for the whole group
-        let n_total = self.ts.len();
-        debug_assert_eq!(self.ys.len(), n_total * d);
-        debug_assert_eq!(self.cond.len(), n_total * c);
-        if self.out.len() < n_total * d {
-            self.out.resize(n_total * d, 0.0);
+    /// Whether phase 1 staged any rows (so a round must execute).
+    pub(crate) fn has_round(&self) -> bool {
+        !self.spans.is_empty()
+    }
+
+    /// Phase 2 — execute the fused call over the arena. Takes no locks
+    /// and touches only lane-owned state, so lane drivers co-schedule
+    /// many lanes' `execute_round`s concurrently on the global pool.
+    /// Panics inside the model call (including re-raised pool shard
+    /// panics) are contained here and fail the group like an `Err` —
+    /// a panicking model must not unwind the lane driver, which would
+    /// leave this lane's variant claimed and unservable forever.
+    pub(crate) fn execute_round(&mut self) {
+        if self.spans.is_empty() {
+            return;
         }
         let t0 = Instant::now();
-        let shards = self.pool.shards_for(n_total);
-        if let Err(e) = self.model.denoise_batch(&self.ys, &self.ts,
-                                                 &self.cond, n_total,
-                                                 &mut self.out[..n_total * d])
-        {
-            let msg = e.to_string();
-            self.fail_all(&msg, metrics);
-            return completed;
+        let shards = self.pool.shards_for(self.arena.rows());
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                self.model.denoise_round(&mut self.arena)
+            }));
+        match outcome {
+            Ok(Ok(())) => {
+                self.round = Some(RoundExec {
+                    latency_s: t0.elapsed().as_secs_f64(),
+                    shards,
+                });
+            }
+            Ok(Err(e)) => self.round_err = Some(e.to_string()),
+            Err(_) => {
+                self.round_err =
+                    Some("model call panicked during fused round".into());
+            }
         }
-        let exec = RoundExec {
-            latency_s: t0.elapsed().as_secs_f64(),
-            shards,
-        };
-        metrics.on_fused_round(n_total, self.spans.len(), shards);
+    }
 
-        // scatter phase: resume every demanding machine with its rows.
+    /// Phase 3 — scatter: resume every demanding machine from its view
+    /// into the arena's output region. On a fused-call error the whole
+    /// group fails (they shared the call) and is drained.
+    pub(crate) fn finish_round(&mut self, metrics: &Metrics) {
+        if self.spans.is_empty() {
+            return;
+        }
+        if let Some(msg) = self.round_err.take() {
+            self.fail_all(&msg, metrics);
+            return;
+        }
+        let exec = self.round.take()
+            .expect("finish_round without execute_round");
+        metrics.on_fused_round(&self.lane, self.arena.rows(),
+                               self.spans.len(), exec.shards);
         // Failures are answered immediately but removed only after the
         // loop, so the span indices stay valid throughout.
         let mut failed: Vec<usize> = Vec::new();
-        for &(idx, off, rows) in &self.spans {
-            let slice = &self.out[off * d..(off + rows) * d];
+        for &(idx, span) in &self.spans {
             if let Err(e) = self.active[idx].machine.as_step()
-                .resume(slice, exec)
+                .resume_from(&self.arena, span, exec)
             {
                 let ar = &self.active[idx];
                 metrics.on_complete(ar.queued_s,
@@ -264,6 +314,15 @@ impl FusionScheduler {
         for idx in failed {
             self.active.swap_remove(idx);
         }
+        self.spans.clear();
+    }
+
+    /// One full round — poll, execute, scatter — for single-lane
+    /// drivers and tests. Returns the number of requests completed.
+    pub(crate) fn tick(&mut self, metrics: &Metrics) -> usize {
+        let completed = self.begin_round(metrics);
+        self.execute_round();
+        self.finish_round(metrics);
         completed
     }
 
@@ -308,6 +367,7 @@ impl FusionScheduler {
             let _ = ar.job.reply.send(Response::failed(ar.job.request.id,
                                                        ar.queued_s, msg));
         }
+        self.spans.clear();
     }
 }
 
@@ -341,7 +401,7 @@ mod tests {
             GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
         let metrics = Metrics::default();
         let mut sched = FusionScheduler::new(model.clone(),
-                                             PoolConfig::default());
+                                             PoolConfig::default(), "gmm");
         let (j1, rx1) = queued("gmm", SamplerSpec::Sequential, 5);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 6);
         sched.admit(j1, &metrics);
@@ -370,6 +430,11 @@ mod tests {
         assert_eq!(m.fused_rounds, 30);
         assert!((m.fused_rows_per_round - 2.0).abs() < 1e-12,
                 "rows/round {}", m.fused_rows_per_round);
+        // the lane label carries the per-lane aggregates
+        let lane = m.lane("gmm").unwrap();
+        assert_eq!(lane.fused_rounds, 30);
+        assert_eq!(lane.admitted, 2);
+        assert!((lane.fused_rows_per_round - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -377,7 +442,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, PoolConfig::default());
+        let mut sched = FusionScheduler::new(model, PoolConfig::default(),
+                                             "gmm");
         let (j1, rx1) = queued("gmm", SamplerSpec::Asd(8), 1);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 2);
         let (j3, rx3) = queued("gmm", SamplerSpec::Picard(8, 1e-6), 3);
@@ -412,7 +478,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, PoolConfig::default());
+        let mut sched = FusionScheduler::new(model, PoolConfig::default(),
+                                             "gmm");
         let (tx, rx) = channel();
         sched.admit(QueuedJob {
             request: Request {
@@ -429,5 +496,32 @@ mod tests {
         let r = rx.recv().unwrap();
         assert!(r.error.unwrap().contains("cond_dim"));
         assert_eq!(metrics.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn split_phases_equal_one_tick() {
+        // a lane driver calling begin/execute/finish must behave
+        // exactly like the one-shot tick
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model, PoolConfig::default(),
+                                             "gmm");
+        let (j, rx) = queued("gmm", SamplerSpec::Sequential, 9);
+        sched.admit(j, &metrics);
+        let mut rounds = 0usize;
+        while !sched.is_empty() {
+            sched.begin_round(&metrics);
+            if sched.has_round() {
+                rounds += 1;
+            }
+            sched.execute_round();
+            sched.finish_round(&metrics);
+            assert!(rounds <= 20, "failed to drain");
+        }
+        assert_eq!(rounds, 20);
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.model_calls, 20);
     }
 }

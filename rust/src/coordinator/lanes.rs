@@ -1,0 +1,441 @@
+//! Variant-keyed lane scheduling: per-variant admission queues and
+//! claimable serving lanes.
+//!
+//! The pre-lane coordinator extracted *same-variant prefixes* from one
+//! global FIFO, so a mixed-variant workload suffered cross-variant
+//! head-of-line blocking: a worker drove one variant's fusion group to
+//! completion while every other variant's requests sat behind it. The
+//! lane scheduler removes both the prefix scan and the blocking:
+//!
+//! * **Variant-keyed queues** ([`LaneState`]): `submit` enqueues into
+//!   the request's own variant queue — no cross-variant ordering
+//!   exists, so no arrival can sit behind another variant's burst.
+//!   Bounded admission (`max_queue_depth`) counts the *total* queued
+//!   jobs across variants.
+//! * **One lane per variant** ([`Lane`]): a lane owns the variant's
+//!   model `Arc` (snapshotted once at lane creation — the models map
+//!   is never locked on the round hot path), its `ParallelModel`
+//!   wrapper, and its arena-based `FusionScheduler` (round arena +
+//!   GEMM workspace persist across ticks and fusion groups: zero
+//!   steady-state allocations).
+//! * **Claim/release**: a worker *claims* every busy, unclaimed lane
+//!   it can and drives them together — each tick polls **all** held
+//!   lanes, then co-schedules their fused `denoise_round` calls
+//!   concurrently on the one global pool
+//!   (`server::tick_lanes`). Two variants' rounds therefore run inside
+//!   the same tick window even on a single worker; with more workers,
+//!   lanes spread dynamically. A drained lane whose queue is empty is
+//!   released back to the table for any worker to claim later.
+//!
+//! Per-variant FIFO order is preserved (each queue is popped from the
+//! front only); cross-variant order is intentionally abandoned — lanes
+//! make it meaningless, which is exactly the point.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::coordinator::fusion::FusionScheduler;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::QueuedJob;
+use crate::model::{DenoiseModel, ParallelModel};
+use crate::runtime::pool::PoolConfig;
+
+/// One variant's serving lane: the variant's model snapshot (wrapped
+/// for pool sharding) plus its arena-based fusion scheduler. Created
+/// lazily on the first request for the variant and kept for the
+/// coordinator's lifetime, so its arena and workspace amortize to zero
+/// allocations per round.
+pub(crate) struct Lane {
+    pub variant: String,
+    sched: FusionScheduler,
+    /// whether the current fusion group has been counted in the
+    /// batched_groups metrics (a group is >= 2 concurrent requests)
+    counted: bool,
+}
+
+impl Lane {
+    /// Build the lane for `variant`, snapshotting the model `Arc` once
+    /// — round execution never touches the registry again.
+    pub(crate) fn new(variant: &str, model: Arc<dyn DenoiseModel>,
+                      pool: PoolConfig) -> Lane {
+        // one ParallelModel wrapper per lane: fused rounds shard on the
+        // global pool exactly like solo engines' batched rounds
+        let model = ParallelModel::wrap(model, pool);
+        Lane {
+            variant: variant.to_string(),
+            sched: FusionScheduler::new(model, pool, variant),
+            counted: false,
+        }
+    }
+
+    pub(crate) fn in_flight(&self) -> usize {
+        self.sched.len()
+    }
+
+    pub(crate) fn is_idle(&self) -> bool {
+        self.sched.is_empty()
+    }
+
+    /// Admit a batch of queued jobs into the lane's fused scheduler
+    /// (draining `jobs`, whose allocation the caller reuses across
+    /// ticks), keeping the group-formation counters consistent with the
+    /// pre-lane batcher: the first time a group reaches >= 2 concurrent
+    /// requests it counts as one batched group (founding members
+    /// included); later admissions into a counted group count as fused
+    /// admits.
+    pub(crate) fn admit(&mut self, jobs: &mut Vec<QueuedJob>,
+                        metrics: &Metrics) {
+        if jobs.is_empty() {
+            return;
+        }
+        if self.sched.is_empty() {
+            self.counted = false; // a drained lane starts a new group
+        }
+        let new_total = self.sched.len() + jobs.len();
+        if !self.counted && new_total >= 2 {
+            metrics.on_batch(new_total);
+            self.counted = true;
+        } else if self.counted {
+            metrics.on_fused_admit(jobs.len());
+        }
+        for job in jobs.drain(..) {
+            self.sched.admit(job, metrics);
+        }
+    }
+
+    /// Phase 1 of a tick: retire finished requests, stage demands into
+    /// the lane arena.
+    pub(crate) fn begin_round(&mut self, metrics: &Metrics) {
+        self.sched.begin_round(metrics);
+    }
+
+    /// Whether this lane staged rows and needs its fused call executed.
+    pub(crate) fn has_round(&self) -> bool {
+        self.sched.has_round()
+    }
+
+    /// Phase 2: the lane's fused model call. Lock-free; co-scheduled
+    /// across lanes on the global pool by `server::tick_lanes`.
+    pub(crate) fn execute_round(&mut self) {
+        self.sched.execute_round();
+    }
+
+    /// Phase 3: resume machines from the arena's output region.
+    pub(crate) fn finish_round(&mut self, metrics: &Metrics) {
+        self.sched.finish_round(metrics);
+    }
+
+    /// Fail every in-flight request on this lane (a sampler machine
+    /// panicked mid-round: its state is unusable, so the whole group is
+    /// answered with an error instead of stranding clients).
+    pub(crate) fn fail_all(&mut self, msg: &str, metrics: &Metrics) {
+        self.sched.fail_all(msg, metrics);
+    }
+}
+
+/// The coordinator's shared scheduling state, guarded by ONE mutex:
+/// per-variant admission queues plus the lane table. A lane slot is
+/// either parked (`Some(lane)` — claimable) or held by a worker
+/// (`None`). Missing entries mean the lane hasn't been created yet.
+pub(crate) struct LaneState {
+    queues: HashMap<String, VecDeque<QueuedJob>>,
+    /// total queued jobs across variants (bounded admission)
+    depth: usize,
+    slots: HashMap<String, Option<Box<Lane>>>,
+}
+
+/// Result of trying to claim a variant's lane.
+pub(crate) enum LaneClaim {
+    /// the lane existed and is now held by the caller
+    Claimed(Box<Lane>),
+    /// no lane yet — the slot is now marked held; the caller must
+    /// create the lane (or `abandon` on unknown model)
+    Create,
+    /// another worker holds the lane
+    Busy,
+}
+
+impl LaneState {
+    pub(crate) fn new() -> LaneState {
+        LaneState {
+            queues: HashMap::new(),
+            depth: 0,
+            slots: HashMap::new(),
+        }
+    }
+
+    /// Total queued jobs across all variants.
+    pub(crate) fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub(crate) fn enqueue(&mut self, job: QueuedJob) {
+        self.depth += 1;
+        self.queues
+            .entry(job.request.variant.clone())
+            .or_default()
+            .push_back(job);
+    }
+
+    pub(crate) fn has_queued(&self, variant: &str) -> bool {
+        self.queues.get(variant).is_some_and(|q| !q.is_empty())
+    }
+
+    /// Pop up to `max` front jobs for `variant` into `out` (arrival
+    /// order). Returns how many were taken.
+    pub(crate) fn take(&mut self, variant: &str, max: usize,
+                       out: &mut Vec<QueuedJob>) -> usize {
+        let Some(q) = self.queues.get_mut(variant) else { return 0 };
+        let mut taken = 0usize;
+        while taken < max {
+            let Some(job) = q.pop_front() else { break };
+            out.push(job);
+            taken += 1;
+        }
+        self.depth -= taken;
+        taken
+    }
+
+    /// Variants that currently have queued jobs, collected into the
+    /// caller's reusable buffer (String allocations are recycled across
+    /// calls — the per-tick claim scan stays allocation-free in steady
+    /// state).
+    pub(crate) fn queued_variants(&self, out: &mut Vec<String>) {
+        collect_names(self.queues.iter()
+                          .filter(|(_, q)| !q.is_empty())
+                          .map(|(v, _)| v),
+                      out);
+    }
+
+    /// Variants whose *parked* lanes still hold in-flight machines.
+    /// Normal releases only park drained lanes, so this is non-empty
+    /// only after a panic recovery (`server::LaneGuard`) parked a lane
+    /// mid-flight — gather scans it so those requests resume instead of
+    /// stranding their clients.
+    pub(crate) fn parked_nonidle(&self, out: &mut Vec<String>) {
+        collect_names(self.slots.iter()
+                          .filter(|(_, slot)| {
+                              slot.as_ref().is_some_and(|l| !l.is_idle())
+                          })
+                          .map(|(v, _)| v),
+                      out);
+    }
+
+    /// Pop the single globally-oldest queued job (by request id — ids
+    /// are assigned monotonically at submission). The batching-off /
+    /// `max_batch == 1` serving path.
+    pub(crate) fn pop_oldest(&mut self) -> Option<QueuedJob> {
+        let variant = self.queues.iter()
+            .filter_map(|(v, q)| q.front().map(|j| (j.request.id, v)))
+            .min()
+            .map(|(_, v)| v.clone())?;
+        let job = self.queues.get_mut(&variant)?.pop_front()?;
+        self.depth -= 1;
+        Some(job)
+    }
+
+    /// Try to claim `variant`'s lane (see [`LaneClaim`]).
+    pub(crate) fn claim(&mut self, variant: &str) -> LaneClaim {
+        match self.slots.get_mut(variant) {
+            Some(slot) => match slot.take() {
+                Some(lane) => LaneClaim::Claimed(lane),
+                None => LaneClaim::Busy,
+            },
+            None => {
+                self.slots.insert(variant.to_string(), None);
+                LaneClaim::Create
+            }
+        }
+    }
+
+    /// Park a held lane back into the table.
+    pub(crate) fn release(&mut self, lane: Box<Lane>) {
+        let variant = lane.variant.clone();
+        self.slots.insert(variant, Some(lane));
+    }
+
+    /// Undo a `LaneClaim::Create` whose model turned out unknown.
+    pub(crate) fn abandon(&mut self, variant: &str) {
+        self.slots.remove(variant);
+    }
+
+    /// Drain every queued job for `variant` (unknown-model failure).
+    pub(crate) fn drain_variant(&mut self, variant: &str)
+                                -> Vec<QueuedJob> {
+        let Some(q) = self.queues.get_mut(variant) else {
+            return Vec::new();
+        };
+        let jobs: Vec<QueuedJob> = q.drain(..).collect();
+        self.depth -= jobs.len();
+        jobs
+    }
+}
+
+/// Fill `out` with the iterated names, recycling its existing String
+/// allocations (clear + push_str instead of fresh clones).
+fn collect_names<'a>(names: impl Iterator<Item = &'a String>,
+                     out: &mut Vec<String>) {
+    let mut n = 0usize;
+    for name in names {
+        if n < out.len() {
+            out[n].clear();
+            out[n].push_str(name);
+        } else {
+            out.push(name.clone());
+        }
+        n += 1;
+    }
+    out.truncate(n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Request, SamplerSpec};
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn job(variant: &str, id: u64) -> QueuedJob {
+        let (tx, _rx) = channel();
+        // leak the receiver: these tests never reply
+        std::mem::forget(_rx);
+        QueuedJob {
+            request: Request {
+                id,
+                variant: variant.into(),
+                sampler: SamplerSpec::Sequential,
+                seed: 0,
+                cond: vec![],
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn queues_are_variant_keyed_and_depth_counts_all() {
+        let mut st = LaneState::new();
+        st.enqueue(job("a", 1));
+        st.enqueue(job("b", 2));
+        st.enqueue(job("a", 3));
+        assert_eq!(st.depth(), 3);
+        assert!(st.has_queued("a"));
+        assert!(st.has_queued("b"));
+        assert!(!st.has_queued("c"));
+        // taking from `a` never disturbs `b` — no cross-variant
+        // head-of-line blocking at the queue level
+        let mut out = Vec::new();
+        assert_eq!(st.take("a", 8, &mut out), 2);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].request.id, 1); // arrival order within lane
+        assert_eq!(out[1].request.id, 3);
+        assert_eq!(st.depth(), 1);
+        assert!(st.has_queued("b"));
+    }
+
+    #[test]
+    fn take_respects_cap() {
+        let mut st = LaneState::new();
+        for i in 0..10 {
+            st.enqueue(job("a", i));
+        }
+        let mut out = Vec::new();
+        assert_eq!(st.take("a", 4, &mut out), 4);
+        assert_eq!(st.depth(), 6);
+        assert_eq!(st.take("missing", 4, &mut out), 0);
+    }
+
+    #[test]
+    fn queued_variants_lists_nonempty_lanes_only() {
+        let mut st = LaneState::new();
+        st.enqueue(job("a", 1));
+        st.enqueue(job("b", 2));
+        let mut out = Vec::new();
+        st.take("b", 8, &mut out);
+        let mut variants = Vec::new();
+        st.queued_variants(&mut variants);
+        assert_eq!(variants, vec!["a".to_string()]);
+        // the scratch buffer recycles: growing and shrinking result
+        // sets stay correct across calls
+        st.enqueue(job("b", 9));
+        st.queued_variants(&mut variants);
+        variants.sort();
+        assert_eq!(variants, vec!["a".to_string(), "b".to_string()]);
+        st.take("a", 8, &mut out);
+        st.take("b", 8, &mut out);
+        st.queued_variants(&mut variants);
+        assert!(variants.is_empty());
+    }
+
+    #[test]
+    fn parked_nonidle_flags_only_lanes_with_in_flight_machines() {
+        use crate::coordinator::metrics::Metrics;
+        use crate::model::{Gmm, GmmDdpmOracle};
+        let mut st = LaneState::new();
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        // an idle parked lane is NOT flagged
+        st.release(Box::new(Lane::new("idle", model.clone(),
+                                      PoolConfig::default())));
+        let mut out = Vec::new();
+        st.parked_nonidle(&mut out);
+        assert!(out.is_empty());
+        // a parked lane with an in-flight machine IS flagged (the
+        // panic-recovery path)
+        let metrics = Metrics::default();
+        let mut lane = Box::new(Lane::new("busy", model,
+                                          PoolConfig::default()));
+        let mut batch = vec![job("busy", 1)];
+        lane.admit(&mut batch, &metrics);
+        assert!(!lane.is_idle());
+        st.release(lane);
+        st.parked_nonidle(&mut out);
+        assert_eq!(out, vec!["busy".to_string()]);
+    }
+
+    #[test]
+    fn pop_oldest_orders_across_variants_by_id() {
+        let mut st = LaneState::new();
+        st.enqueue(job("b", 5));
+        st.enqueue(job("a", 3));
+        st.enqueue(job("b", 7));
+        assert_eq!(st.pop_oldest().unwrap().request.id, 3);
+        assert_eq!(st.pop_oldest().unwrap().request.id, 5);
+        assert_eq!(st.pop_oldest().unwrap().request.id, 7);
+        assert!(st.pop_oldest().is_none());
+        assert_eq!(st.depth(), 0);
+    }
+
+    #[test]
+    fn claim_release_cycle_is_exclusive() {
+        use crate::model::{Gmm, GmmDdpmOracle};
+        let mut st = LaneState::new();
+        // first claim of an unknown variant asks for creation and
+        // blocks other claimants
+        assert!(matches!(st.claim("a"), LaneClaim::Create));
+        assert!(matches!(st.claim("a"), LaneClaim::Busy));
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        let lane = Box::new(Lane::new("a", model, PoolConfig::default()));
+        st.release(lane);
+        // parked lane is claimable exactly once
+        assert!(matches!(st.claim("a"), LaneClaim::Claimed(_)));
+        assert!(matches!(st.claim("a"), LaneClaim::Busy));
+        // abandoning a failed creation makes the variant claimable anew
+        st.abandon("a");
+        assert!(matches!(st.claim("a"), LaneClaim::Create));
+    }
+
+    #[test]
+    fn drain_variant_empties_one_queue_only() {
+        let mut st = LaneState::new();
+        st.enqueue(job("a", 1));
+        st.enqueue(job("a", 2));
+        st.enqueue(job("b", 3));
+        let drained = st.drain_variant("a");
+        assert_eq!(drained.len(), 2);
+        assert_eq!(st.depth(), 1);
+        assert!(st.has_queued("b"));
+        assert!(st.drain_variant("missing").is_empty());
+    }
+}

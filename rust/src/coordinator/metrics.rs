@@ -1,10 +1,35 @@
-//! Serving metrics: counters + latency aggregates, cheap to update from
-//! every worker (single short-lived mutex; the hot path does sampling,
-//! not metric churn).
+//! Serving metrics: global counters + latency aggregates, plus
+//! per-lane aggregates (one lane per served variant — see
+//! `coordinator::lanes`). Cheap to update from every worker (single
+//! short-lived mutex; the hot path does sampling, not metric churn).
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::math::stats::Welford;
+
+/// Per-lane (per-variant) round aggregates: how saturated each lane's
+/// fused rounds run, how long its requests queue, and the elapsed-time
+/// window its rounds executed in. Overlapping windows across lanes are
+/// the observable proof that two variants' rounds ran concurrently
+/// inside the same tick window instead of behind each other.
+#[derive(Debug, Default)]
+struct LaneAgg {
+    fused_rounds: u64,
+    fused_rows: u64,
+    /// requests contributing rows, per round
+    requests: Welford,
+    /// worker-pool shards per round
+    shards: Welford,
+    /// queue wait at lane admission (ms)
+    queue_wait: Welford,
+    admitted: u64,
+    /// elapsed seconds (since coordinator start) of the first/last
+    /// fused round this lane executed
+    first_round_s: f64,
+    last_round_s: f64,
+}
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -23,7 +48,7 @@ struct Inner {
     round_latency: Welford,
     /// worker-pool shard occupancy per round (1 = ran inline)
     shard_occupancy: Welford,
-    /// fused coordinator rounds (one mega denoise_batch per tick)
+    /// fused coordinator rounds (one mega denoise call per lane tick)
     fused_rounds: u64,
     /// total rows across all fused rounds
     fused_rows: u64,
@@ -31,11 +56,57 @@ struct Inner {
     fused_requests: Welford,
     /// worker-pool shards per fused round
     fused_shards: Welford,
+    /// per-variant lane aggregates
+    lanes: BTreeMap<String, LaneAgg>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// coordinator birth — the zero point of the per-lane round windows
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// One lane's aggregates in a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct LaneSnapshot {
+    /// the variant this lane serves
+    pub lane: String,
+    pub fused_rounds: u64,
+    /// mean rows per fused round on this lane (> 1 = cross-request
+    /// fusion on this lane)
+    pub fused_rows_per_round: f64,
+    pub mean_requests_per_round: f64,
+    /// mean worker-pool shard occupancy of this lane's rounds
+    pub occupancy: f64,
+    /// mean queue wait of requests admitted to this lane (ms)
+    pub mean_queue_wait_ms: f64,
+    /// requests admitted into this lane's fused scheduler
+    pub admitted: u64,
+    /// elapsed ms (since coordinator start) of the lane's first fused
+    /// round — with `last_round_ms` this is the lane's activity window
+    pub first_round_ms: f64,
+    pub last_round_ms: f64,
+}
+
+impl LaneSnapshot {
+    /// Whether this lane's round window overlaps `other`'s — i.e. both
+    /// lanes made progress within the same tick window.
+    pub fn overlaps(&self, other: &LaneSnapshot) -> bool {
+        self.fused_rounds > 0
+            && other.fused_rounds > 0
+            && self.first_round_ms <= other.last_round_ms
+            && other.first_round_ms <= self.last_round_ms
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -55,7 +126,7 @@ pub struct MetricsSnapshot {
     pub rounds_measured: u64,
     pub mean_round_latency_ms: f64,
     pub mean_shard_occupancy: f64,
-    /// fused coordinator rounds executed (one mega-call per tick)
+    /// fused coordinator rounds executed (one mega-call per lane tick)
     pub fused_rounds: u64,
     /// mean rows per fused round — the batch the kernels actually see;
     /// > 1 means cross-request fusion is happening
@@ -64,6 +135,15 @@ pub struct MetricsSnapshot {
     pub mean_fused_requests_per_round: f64,
     /// mean worker-pool shard occupancy of fused rounds
     pub fused_occupancy: f64,
+    /// per-variant lane aggregates, sorted by lane name
+    pub lanes: Vec<LaneSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// The lane snapshot for `variant`, if it ever admitted a request.
+    pub fn lane(&self, variant: &str) -> Option<&LaneSnapshot> {
+        self.lanes.iter().find(|l| l.lane == variant)
+    }
 }
 
 impl Metrics {
@@ -76,15 +156,34 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// One fused coordinator round: `rows` total rows from `requests`
+    /// One fused round on `lane`: `rows` total rows from `requests`
     /// in-flight requests, executed as `shards` pool shards.
-    pub fn on_fused_round(&self, rows: usize, requests: usize,
+    pub fn on_fused_round(&self, lane: &str, rows: usize, requests: usize,
                           shards: usize) {
+        let now_s = self.started.elapsed().as_secs_f64();
         let mut m = self.inner.lock().unwrap();
         m.fused_rounds += 1;
         m.fused_rows += rows as u64;
         m.fused_requests.push(requests as f64);
         m.fused_shards.push(shards as f64);
+        let agg = lane_agg(&mut m, lane);
+        if agg.fused_rounds == 0 {
+            agg.first_round_s = now_s;
+        }
+        agg.last_round_s = now_s;
+        agg.fused_rounds += 1;
+        agg.fused_rows += rows as u64;
+        agg.requests.push(requests as f64);
+        agg.shards.push(shards as f64);
+    }
+
+    /// A request entered `lane`'s fused scheduler after waiting
+    /// `queued_s` in the admission queue.
+    pub fn on_lane_admit(&self, lane: &str, queued_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let agg = lane_agg(&mut m, lane);
+        agg.admitted += 1;
+        agg.queue_wait.push(queued_s * 1e3);
     }
 
     pub fn on_complete(&self, queued_s: f64, service_s: f64,
@@ -158,8 +257,40 @@ impl Metrics {
             } else {
                 m.fused_shards.mean()
             },
+            lanes: m.lanes.iter()
+                .map(|(name, a)| LaneSnapshot {
+                    lane: name.clone(),
+                    fused_rounds: a.fused_rounds,
+                    fused_rows_per_round: if a.fused_rounds == 0 {
+                        0.0
+                    } else {
+                        a.fused_rows as f64 / a.fused_rounds as f64
+                    },
+                    mean_requests_per_round: a.requests.mean(),
+                    occupancy: if a.shards.n == 0 {
+                        1.0
+                    } else {
+                        a.shards.mean()
+                    },
+                    mean_queue_wait_ms: a.queue_wait.mean(),
+                    admitted: a.admitted,
+                    first_round_ms: a.first_round_s * 1e3,
+                    last_round_ms: a.last_round_s * 1e3,
+                })
+                .collect(),
         }
     }
+}
+
+/// The lane's aggregate slot, allocating the `String` key only on the
+/// lane's very first event — every later round stays allocation-free
+/// (`on_fused_round` runs once per lane per tick on the serving hot
+/// path).
+fn lane_agg<'a>(m: &'a mut Inner, lane: &str) -> &'a mut LaneAgg {
+    if !m.lanes.contains_key(lane) {
+        m.lanes.insert(lane.to_string(), LaneAgg::default());
+    }
+    m.lanes.get_mut(lane).unwrap()
 }
 
 #[cfg(test)]
@@ -185,6 +316,7 @@ mod tests {
         // no rounds recorded yet: occupancy defaults to serial
         assert_eq!(s.rounds_measured, 0);
         assert_eq!(s.mean_shard_occupancy, 1.0);
+        assert!(s.lanes.is_empty());
     }
 
     #[test]
@@ -194,8 +326,8 @@ mod tests {
         assert_eq!(s0.fused_rounds, 0);
         assert_eq!(s0.fused_rows_per_round, 0.0);
         assert_eq!(s0.fused_occupancy, 1.0);
-        m.on_fused_round(6, 3, 2);
-        m.on_fused_round(2, 1, 1);
+        m.on_fused_round("a", 6, 3, 2);
+        m.on_fused_round("a", 2, 1, 1);
         m.on_reject();
         let s = m.snapshot();
         assert_eq!(s.fused_rounds, 2);
@@ -214,5 +346,48 @@ mod tests {
         assert_eq!(s.rounds_measured, 3);
         assert!((s.mean_round_latency_ms - 2.0).abs() < 1e-9);
         assert!((s.mean_shard_occupancy - 8.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lane_aggregates_split_by_variant() {
+        let m = Metrics::default();
+        m.on_lane_admit("a", 0.002);
+        m.on_lane_admit("a", 0.004);
+        m.on_lane_admit("b", 0.010);
+        m.on_fused_round("a", 6, 2, 2);
+        m.on_fused_round("a", 4, 2, 1);
+        m.on_fused_round("b", 3, 1, 1);
+        let s = m.snapshot();
+        assert_eq!(s.lanes.len(), 2);
+        let a = s.lane("a").unwrap();
+        let b = s.lane("b").unwrap();
+        assert_eq!(a.fused_rounds, 2);
+        assert!((a.fused_rows_per_round - 5.0).abs() < 1e-12);
+        assert!((a.mean_requests_per_round - 2.0).abs() < 1e-12);
+        assert!((a.occupancy - 1.5).abs() < 1e-12);
+        assert!((a.mean_queue_wait_ms - 3.0).abs() < 1e-9);
+        assert_eq!(a.admitted, 2);
+        assert_eq!(b.fused_rounds, 1);
+        assert_eq!(b.admitted, 1);
+        // global aggregates still cover both lanes
+        assert_eq!(s.fused_rounds, 3);
+        // both lanes ran rounds; their windows are well-formed
+        assert!(a.last_round_ms >= a.first_round_ms);
+        assert!(a.overlaps(b) || !a.overlaps(b)); // structural smoke
+        assert!(s.lane("c").is_none());
+    }
+
+    #[test]
+    fn lane_window_overlap_detects_concurrent_progress() {
+        let m = Metrics::default();
+        m.on_fused_round("a", 1, 1, 1);
+        m.on_fused_round("b", 1, 1, 1);
+        m.on_fused_round("a", 1, 1, 1);
+        let s = m.snapshot();
+        let a = s.lane("a").unwrap();
+        let b = s.lane("b").unwrap();
+        // b's single round falls inside a's [first, last] window
+        assert!(a.overlaps(b));
+        assert!(b.overlaps(a));
     }
 }

@@ -1,23 +1,27 @@
-//! L3 serving stack: request router + fusion batcher + worker pool.
+//! L3 serving stack: request router + variant lanes + worker pool.
 //!
-//! Round-synchronous fused-batch engine: clients submit sampling
-//! [`Request`]s; a bounded FIFO feeds a pool of worker threads; each
-//! worker serves a same-variant *fusion group* — ASD, Picard and
-//! sequential requests alike, factored as `sampler::StepSampler` state
-//! machines — by collecting every in-flight request's row demand each
-//! tick and running ONE fused `denoise_batch` mega-call per round
-//! ([`fusion::FusionScheduler`]), absorbing newly queued compatible
-//! requests mid-flight (continuous batching). Native-model outputs are
+//! Lane-scheduled, round-synchronous fused-batch engine: clients
+//! submit sampling [`Request`]s into *variant-keyed* queues; each
+//! registered variant is served by its own lane ([`lanes`]) holding
+//! the variant's model snapshot and an arena-based fusion scheduler
+//! ([`fusion::FusionScheduler`]). Workers claim busy lanes and drive
+//! them together: every tick polls ALL held lanes — ASD, Picard and
+//! sequential requests alike, factored as `sampler::StepSampler`
+//! machines writing demands straight into the lane's `RoundArena` —
+//! then co-schedules the per-lane fused `denoise_round` calls on the
+//! one global pool, so a mixed-variant workload never suffers
+//! cross-variant head-of-line blocking. Native-model outputs are
 //! bit-identical to per-request execution (row independence; see
 //! `model::parallel`). Metrics cover queueing, latency, per-sampler
-//! round counts, fused-round occupancy and admission rejections.
+//! round counts, fused-round occupancy, admission rejections, and
+//! per-lane aggregates ([`metrics::LaneSnapshot`]).
 
-pub mod batcher;
 pub(crate) mod fusion;
+pub(crate) mod lanes;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{LaneSnapshot, Metrics, MetricsSnapshot};
 pub use request::{Request, Response, SamplerSpec};
 pub use server::{Coordinator, ServerConfig};

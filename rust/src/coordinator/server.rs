@@ -1,38 +1,40 @@
-//! The coordinator: owns the queue, worker pool and model registry.
+//! The coordinator: owns the lane state (variant-keyed queues + lane
+//! table), worker pool and model registry.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use anyhow::Result;
 
 use crate::asd::AsdEngine;
-use crate::coordinator::batcher::{next_work_item, take_compatible_prefix,
-                                  WorkItem};
-use crate::coordinator::fusion::FusionScheduler;
+use crate::coordinator::lanes::{Lane, LaneClaim, LaneState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
 use crate::ddpm::SequentialSampler;
-use crate::model::{DenoiseModel, ParallelModel};
+use crate::model::DenoiseModel;
 use crate::picard::PicardSampler;
-use crate::runtime::pool::PoolConfig;
+use crate::runtime::pool::{self, PoolConfig};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub workers: usize,
-    /// fuse at most this many concurrent requests into one round-
-    /// synchronous group (any sampler mix; see `coordinator::fusion`)
+    /// fuse at most this many concurrent requests into one lane's
+    /// round-synchronous group (any sampler mix; see
+    /// `coordinator::fusion`)
     pub max_batch: usize,
     pub enable_batching: bool,
-    /// bounded admission: submissions beyond this queue depth are
-    /// answered immediately with a rejected [`Response`] instead of
-    /// growing the queue without limit
+    /// bounded admission: submissions beyond this *total* queue depth
+    /// (summed across variant lanes) are answered immediately with a
+    /// rejected [`Response`] instead of growing the queues without
+    /// limit
     pub max_queue_depth: usize,
     /// sharding config for every batched denoise call served by this
-    /// coordinator (each fusion group's fused round, or the per-request
+    /// coordinator (each lane's fused round, or the per-request
     /// batched calls when batching is disabled). All workers share the
-    /// ONE global pool — worker threads gate concurrency at the request
+    /// ONE global pool — worker threads gate concurrency at the lane
     /// level, the pool at the row level, so cores are never
     /// oversubscribed. Bit-transparency holds for native
     /// row-independent models; HLO models may shift within f32 padding
@@ -52,11 +54,33 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Reject degenerate configs up front: a zero here used to mean a
+    /// coordinator that either silently clamped (`workers`) or wedged /
+    /// rejected everything (`max_batch`, `max_queue_depth`).
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.workers >= 1,
+                        "ServerConfig::workers must be >= 1 (got 0)");
+        anyhow::ensure!(self.max_batch >= 1,
+                        "ServerConfig::max_batch must be >= 1 (got 0)");
+        anyhow::ensure!(self.max_queue_depth >= 1,
+                        "ServerConfig::max_queue_depth must be >= 1 \
+                         (got 0)");
+        Ok(())
+    }
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<QueuedJob>>,
+    /// variant-keyed queues + lane table, under ONE mutex (paired with
+    /// `cv`). Held only for queue/claim bookkeeping — never across a
+    /// model call.
+    state: Mutex<LaneState>,
     cv: Condvar,
     shutdown: AtomicBool,
     metrics: Metrics,
+    /// model registry. Locked at registration and once per lane
+    /// creation (the lane snapshots its model `Arc`) — never on the
+    /// round hot path.
     models: Mutex<HashMap<String, Arc<dyn DenoiseModel>>>,
     config: ServerConfig,
     next_id: AtomicU64,
@@ -64,16 +88,23 @@ struct Shared {
 
 /// The serving coordinator. Models are registered up front (they wrap
 /// either HLO executables or the native oracle); requests are submitted
-/// from any thread and answered over per-request channels.
+/// from any thread and answered over per-request channels. Each
+/// registered variant is served by its own lane (`coordinator::lanes`):
+/// workers claim busy lanes and co-schedule their fused rounds on the
+/// global pool, so no variant ever waits behind another variant's
+/// burst.
 pub struct Coordinator {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    pub fn new(config: ServerConfig) -> Coordinator {
+    /// Build the coordinator, validating the config (degenerate values
+    /// like `max_batch: 0` are a clean error, not silent misbehavior).
+    pub fn new(config: ServerConfig) -> Result<Coordinator> {
+        config.validate()?;
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            state: Mutex::new(LaneState::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             metrics: Metrics::default(),
@@ -82,7 +113,7 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
         });
         let mut handles = Vec::new();
-        for w in 0..config.workers.max(1) {
+        for w in 0..config.workers {
             let s = shared.clone();
             handles.push(
                 std::thread::Builder::new()
@@ -91,7 +122,7 @@ impl Coordinator {
                     .expect("spawn worker"),
             );
         }
-        Coordinator { shared, handles }
+        Ok(Coordinator { shared, handles })
     }
 
     pub fn register_model(&self, name: &str, model: Arc<dyn DenoiseModel>) {
@@ -107,26 +138,27 @@ impl Coordinator {
     }
 
     /// Submit a request; returns the response channel and the assigned
-    /// id. When the queue is at `max_queue_depth` the request is not
-    /// enqueued: a rejected [`Response`] is delivered on the channel
-    /// immediately (bounded admission — a loaded coordinator sheds
-    /// traffic instead of accumulating unbounded latency).
+    /// id. When the total queued depth is at `max_queue_depth` the
+    /// request is not enqueued: a rejected [`Response`] is delivered on
+    /// the channel immediately (bounded admission — a loaded
+    /// coordinator sheds traffic instead of accumulating unbounded
+    /// latency).
     pub fn submit(&self, mut request: Request) -> (u64, Receiver<Response>) {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         request.id = id;
         let (tx, rx) = channel();
         self.shared.metrics.on_submit();
         {
-            let mut q = self.shared.queue.lock().unwrap();
-            let depth = q.len();
+            let mut st = self.shared.state.lock().unwrap();
+            let depth = st.depth();
             if depth >= self.shared.config.max_queue_depth {
-                drop(q);
+                drop(st);
                 self.shared.metrics.on_reject();
                 let _ = tx.send(Response::rejected(
                     id, depth, self.shared.config.max_queue_depth));
                 return (id, rx);
             }
-            q.push_back(QueuedJob {
+            st.enqueue(QueuedJob {
                 request,
                 reply: tx,
                 enqueued: Instant::now(),
@@ -140,8 +172,9 @@ impl Coordinator {
         self.shared.metrics.snapshot()
     }
 
+    /// Total queued (not yet admitted) jobs across all variant lanes.
     pub fn queue_depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        self.shared.state.lock().unwrap().depth()
     }
 
     pub fn shutdown(mut self) {
@@ -164,24 +197,317 @@ impl Drop for Coordinator {
 }
 
 fn worker_loop(shared: Arc<Shared>) {
+    if !shared.config.enable_batching || shared.config.max_batch <= 1 {
+        return single_loop(shared);
+    }
+    lane_loop(shared);
+}
+
+/// Batching disabled (or `max_batch == 1`): serve one request at a
+/// time with dedicated solo engines, oldest-first across variants.
+fn single_loop(shared: Arc<Shared>) {
     loop {
-        let item = {
-            let mut q = shared.queue.lock().unwrap();
+        let job = {
+            let mut st = shared.state.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                match next_work_item(&mut q, shared.config.max_batch,
-                                     shared.config.enable_batching) {
-                    Some(item) => break item,
-                    None => q = shared.cv.wait(q).unwrap(),
+                match st.pop_oldest() {
+                    Some(job) => break job,
+                    None => st = shared.cv.wait(st).unwrap(),
                 }
             }
         };
-        match item {
-            WorkItem::Single(job) => serve_single(&shared, job),
-            WorkItem::Fused(group) => serve_fused(&shared, group),
+        serve_single(&shared, job);
+    }
+}
+
+/// Jobs popped for a lane this worker holds, tagged with the `held`
+/// index, lane-contiguous (a flat, reusable buffer — the machines are
+/// built outside the state lock, since construction does Philox
+/// draws).
+type Admissions = Vec<(usize, QueuedJob)>;
+
+/// Holds a worker's claimed lanes and releases them back to the lane
+/// table if the worker unwinds. Without this, a panic escaping a tick
+/// (a machine-math bug, a poisoned metrics mutex, ...) would leave
+/// every held lane's slot claimed forever — the variant could never be
+/// served again and its queue would pin `max_queue_depth` budget.
+/// Normal control flow drains `lanes` itself, making the drop a no-op.
+struct LaneGuard<'a> {
+    shared: &'a Shared,
+    lanes: Vec<Box<Lane>>,
+}
+
+impl Drop for LaneGuard<'_> {
+    fn drop(&mut self) {
+        if self.lanes.is_empty() {
+            return;
         }
+        // a panicking sibling may have poisoned the state mutex; still
+        // recover the guard — a poisoned queue table beats permanently
+        // unservable variants
+        let mut st = match self.shared.state.lock() {
+            Ok(st) => st,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for lane in self.lanes.drain(..) {
+            st.release(lane);
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// The lane-scheduling worker loop: claim every busy, unclaimed lane,
+/// then drive all held lanes tick by tick — each tick polls ALL lanes
+/// and co-schedules their fused rounds on the one global pool
+/// ([`tick_lanes`]), so a worker holding two variants' lanes advances
+/// both inside the same tick instead of serving them back to back.
+/// All loop bookkeeping buffers are worker-local and reused across
+/// ticks; the per-round data plane itself (arena + workspace, inside
+/// each lane) allocates nothing in steady state.
+fn lane_loop(shared: Arc<Shared>) {
+    let mut guard = LaneGuard { shared: &*shared, lanes: Vec::new() };
+    let held = &mut guard.lanes;
+    let mut admissions: Admissions = Vec::new();
+    let mut failures: Vec<(QueuedJob, String)> = Vec::new();
+    let mut variants: Vec<String> = Vec::new();
+    let mut jobs: Vec<QueuedJob> = Vec::new();
+    let mut batch: Vec<QueuedJob> = Vec::new();
+    let mut busy: Vec<*mut Lane> = Vec::new();
+    loop {
+        // ---- blocking claim: wait until some lane has work ----
+        {
+            let mut st = guard.shared.state.lock().unwrap();
+            loop {
+                if guard.shared.shutdown.load(Ordering::SeqCst) {
+                    for lane in held.drain(..) {
+                        st.release(lane);
+                    }
+                    return;
+                }
+                gather(guard.shared, &mut st, held, &mut admissions,
+                       &mut failures, &mut variants, &mut jobs);
+                if !held.is_empty() || !failures.is_empty() {
+                    break;
+                }
+                st = guard.shared.cv.wait(st).unwrap();
+            }
+        }
+        answer_failures(guard.shared, &mut failures);
+        apply_admissions(guard.shared, held, &mut admissions, &mut batch);
+
+        // ---- drive the held lanes until they all drain ----
+        while !held.is_empty() {
+            tick_lanes(held, &guard.shared.metrics, &mut busy);
+            {
+                let mut st = guard.shared.state.lock().unwrap();
+                if guard.shared.shutdown.load(Ordering::SeqCst) {
+                    // wind down: finish in-flight machines only — park
+                    // drained lanes, admit nothing new
+                    let mut i = 0;
+                    while i < held.len() {
+                        if held[i].is_idle() {
+                            st.release(held.swap_remove(i));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                } else {
+                    // park lanes that drained and have no queued work;
+                    // top up / newly claim the rest (continuous
+                    // admission + cross-variant pickup)
+                    let mut i = 0;
+                    while i < held.len() {
+                        if held[i].is_idle()
+                            && !st.has_queued(&held[i].variant)
+                        {
+                            st.release(held.swap_remove(i));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    gather(guard.shared, &mut st, held, &mut admissions,
+                           &mut failures, &mut variants, &mut jobs);
+                }
+            }
+            answer_failures(guard.shared, &mut failures);
+            apply_admissions(guard.shared, held, &mut admissions,
+                             &mut batch);
+        }
+    }
+}
+
+/// Under the state lock: top up every held lane from its variant queue
+/// and claim any other busy, unclaimed lane (creating it — with its
+/// model `Arc` snapshot — on first use). Popped jobs land flat in
+/// `admissions` keyed by `held` index; unknown-variant jobs land in
+/// `failures`. Machine construction and response sends happen outside
+/// the lock. `jobs` is a reusable scratch buffer.
+fn gather(shared: &Shared, st: &mut LaneState, held: &mut Vec<Box<Lane>>,
+          admissions: &mut Admissions,
+          failures: &mut Vec<(QueuedJob, String)>,
+          variants: &mut Vec<String>, jobs: &mut Vec<QueuedJob>) {
+    let max_batch = shared.config.max_batch;
+    // 1) continuous admission into lanes this worker already holds
+    for (i, lane) in held.iter().enumerate() {
+        let room = max_batch.saturating_sub(lane.in_flight());
+        if room == 0 {
+            continue;
+        }
+        jobs.clear();
+        if st.take(&lane.variant, room, jobs) > 0 {
+            admissions.extend(jobs.drain(..).map(|j| (i, j)));
+        }
+    }
+    // 2) claim lanes for every other variant with queued work
+    // (`variants` recycles its String buffers across ticks)
+    st.queued_variants(variants);
+    for vi in 0..variants.len() {
+        let variant = variants[vi].as_str();
+        if held.iter().any(|l| l.variant == variant) {
+            continue; // held but out of room this tick
+        }
+        let lane = match st.claim(variant) {
+            LaneClaim::Busy => continue, // another worker drives it
+            LaneClaim::Claimed(lane) => lane,
+            LaneClaim::Create => {
+                // snapshot the model Arc once per lane — the registry
+                // is never locked again for this variant's rounds. The
+                // slot is already marked held; if the lookup or lane
+                // construction unwinds (poisoned registry mutex, model
+                // metadata panic) the marker must be abandoned, or the
+                // variant would answer Busy forever.
+                let built = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        shared.models.lock().unwrap().get(variant).cloned()
+                            .map(|m| Box::new(Lane::new(
+                                variant, m, shared.config.pool)))
+                    }));
+                match built {
+                    Ok(Some(lane)) => lane,
+                    Ok(None) => {
+                        st.abandon(variant);
+                        let msg = format!("unknown model '{variant}'");
+                        for job in st.drain_variant(variant) {
+                            failures.push((job, msg.clone()));
+                        }
+                        continue;
+                    }
+                    Err(panic) => {
+                        st.abandon(variant);
+                        std::panic::resume_unwind(panic);
+                    }
+                }
+            }
+        };
+        let room = max_batch.saturating_sub(lane.in_flight());
+        jobs.clear();
+        st.take(variant, room, jobs);
+        let idx = held.len();
+        held.push(lane);
+        admissions.extend(jobs.drain(..).map(|j| (idx, j)));
+    }
+    // 3) panic-recovery backstop: adopt parked lanes that still hold
+    // in-flight machines (only possible when LaneGuard parked a
+    // panicking worker's lanes mid-flight) so their admitted requests
+    // keep making progress instead of stranding their clients
+    st.parked_nonidle(variants);
+    for vi in 0..variants.len() {
+        let variant = variants[vi].as_str();
+        if held.iter().any(|l| l.variant == variant) {
+            continue;
+        }
+        if let LaneClaim::Claimed(lane) = st.claim(variant) {
+            held.push(lane);
+        }
+    }
+}
+
+fn answer_failures(shared: &Shared, failures: &mut Vec<(QueuedJob, String)>) {
+    for (job, msg) in failures.drain(..) {
+        fail_job(shared, job, &msg);
+    }
+}
+
+/// Build machines for freshly popped jobs (outside the state lock),
+/// batch-admitting per lane so group-formation metrics see whole
+/// batches. `batch` is a reusable scratch buffer; `admissions` entries
+/// are lane-contiguous by construction (gather appends per lane).
+fn apply_admissions(shared: &Shared, held: &mut [Box<Lane>],
+                    admissions: &mut Admissions,
+                    batch: &mut Vec<QueuedJob>) {
+    let mut iter = admissions.drain(..).peekable();
+    while let Some((idx, job)) = iter.next() {
+        batch.clear();
+        batch.push(job);
+        while iter.peek().is_some_and(|&(next_idx, _)| next_idx == idx) {
+            batch.push(iter.next().unwrap().1);
+        }
+        held[idx].admit(batch, &shared.metrics);
+    }
+}
+
+/// Raw lane pointers smuggled into the pool's `Fn` tasks; sound because
+/// every index is executed exactly once (disjoint task ranges), the
+/// lanes are distinct boxed allocations, and the pool joins before the
+/// pointer array drops.
+struct SendLanes(*mut *mut Lane);
+unsafe impl Send for SendLanes {}
+unsafe impl Sync for SendLanes {}
+
+/// One co-scheduled tick over this worker's held lanes:
+/// 1. poll phase (serial — cheap sampler math): every lane retires
+///    finished machines and stages demands into its own arena;
+/// 2. execute phase: ALL busy lanes' fused `denoise_round` calls run
+///    concurrently as tasks on the one global pool (each call may
+///    itself shard rows on the same pool — nested sharding is
+///    deadlock-free, see `runtime::pool`), so two variants' rounds
+///    share the tick's wall-clock instead of queueing behind each
+///    other;
+/// 3. scatter phase (serial): machines resume from arena output views.
+///
+/// `busy` is a caller-owned scratch buffer of lane pointers, reused
+/// across ticks. A panic in a lane's sampler math (poll or resume)
+/// fails that lane's whole group cleanly instead of unwinding the
+/// worker — the other held lanes keep ticking. (Model-call panics are
+/// already contained inside `execute_round`.)
+fn tick_lanes(held: &mut [Box<Lane>], metrics: &Metrics,
+              busy: &mut Vec<*mut Lane>) {
+    for lane in held.iter_mut() {
+        guard_phase(lane, metrics, "poll", |l| l.begin_round(metrics));
+    }
+    busy.clear();
+    busy.extend(held.iter_mut()
+        .filter(|l| l.has_round())
+        .map(|l| &mut **l as *mut Lane));
+    if !busy.is_empty() {
+        // run_tasks already degenerates to an inline call for a single
+        // lane (no queue-lock round-trip; see ThreadPool::run_sharded)
+        let lanes = SendLanes(busy.as_mut_ptr());
+        pool::global().run_tasks(busy.len(), |i| {
+            // SAFETY: see `SendLanes`
+            unsafe { (*(*lanes.0.add(i))).execute_round() };
+        });
+    }
+    for lane in held.iter_mut() {
+        guard_phase(lane, metrics, "resume", |l| l.finish_round(metrics));
+    }
+}
+
+/// Run one serial tick phase on a lane, converting a sampler-machine
+/// panic into a clean whole-group failure (the panicking machine's
+/// state is unusable; stranding its group's clients would be worse).
+fn guard_phase<F: FnOnce(&mut Lane)>(lane: &mut Box<Lane>,
+                                     metrics: &Metrics, phase: &str, f: F) {
+    let outcome = std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| f(lane)));
+    if outcome.is_err() {
+        lane.fail_all(
+            &format!("sampler machine panicked during fused {phase}"),
+            metrics);
     }
 }
 
@@ -261,64 +587,6 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
     }
 }
 
-/// Serve a fusion group round-synchronously: every tick collects each
-/// in-flight request's row demand, runs ONE fused `denoise_batch`, and
-/// scatters results. Between ticks the worker absorbs newly queued
-/// same-variant requests from the *front* of the shared queue
-/// (continuous batching) — only the front, so requests for other
-/// variants are never overtaken (see `batcher::take_compatible_prefix`).
-fn serve_fused(shared: &Shared, group: Vec<QueuedJob>) {
-    let variant = group[0].request.variant.clone();
-    let model = match model_for(shared, &variant) {
-        Some(m) => m,
-        None => {
-            let msg = format!("unknown model '{variant}'");
-            for job in group {
-                fail_job(shared, job, &msg);
-            }
-            return;
-        }
-    };
-    // one ParallelModel wrapper for the whole group: fused rounds shard
-    // on the global pool exactly like solo engines' batched rounds
-    let model = ParallelModel::wrap(model, shared.config.pool);
-    let mut sched = FusionScheduler::new(model, shared.config.pool);
-    // `counted` tracks whether this group has been recorded as a batch:
-    // a singleton group only becomes one when admission grows it, at
-    // which point its founding member(s) must be counted too.
-    let mut counted = group.len() >= 2;
-    if counted {
-        shared.metrics.on_batch(group.len());
-    }
-    for job in group {
-        sched.admit(job, &shared.metrics);
-    }
-    while !sched.is_empty() {
-        // continuous admission: absorb compatible front-of-queue
-        // arrivals up to the fusion cap
-        let room = shared.config.max_batch.saturating_sub(sched.len());
-        if room > 0 {
-            let mut admitted = Vec::new();
-            {
-                let mut q = shared.queue.lock().unwrap();
-                take_compatible_prefix(&mut q, &variant, room, &mut admitted);
-            }
-            if !admitted.is_empty() {
-                if counted {
-                    shared.metrics.on_fused_admit(admitted.len());
-                } else {
-                    shared.metrics.on_batch(sched.len() + admitted.len());
-                    counted = true;
-                }
-                for job in admitted {
-                    sched.admit(job, &shared.metrics);
-                }
-            }
-        }
-        sched.tick(&shared.metrics);
-    }
-}
-
 fn fail_job(shared: &Shared, job: QueuedJob, msg: &str) {
     let queued_s = job.enqueued.elapsed().as_secs_f64();
     shared.metrics.on_complete(queued_s, 0.0, 0, 0, true);
@@ -338,7 +606,7 @@ mod tests {
             max_batch: 4,
             enable_batching: true,
             ..Default::default()
-        });
+        }).unwrap();
         let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
         c.register_model("gmm", oracle);
         c
@@ -351,6 +619,18 @@ mod tests {
             sampler,
             seed,
             cond: vec![],
+        }
+    }
+
+    #[test]
+    fn degenerate_configs_are_clean_errors() {
+        for cfg in [
+            ServerConfig { workers: 0, ..Default::default() },
+            ServerConfig { max_batch: 0, ..Default::default() },
+            ServerConfig { max_queue_depth: 0, ..Default::default() },
+        ] {
+            let err = Coordinator::new(cfg).err().expect("must reject");
+            assert!(err.to_string().contains("must be >= 1"), "{err:#}");
         }
     }
 
@@ -383,6 +663,8 @@ mod tests {
         assert!(r.error.unwrap().contains("unknown model"));
         let m = c.metrics();
         assert_eq!(m.failed, 1);
+        // the failed variant never created a lane
+        assert!(m.lane("nope").is_none());
     }
 
     #[test]
@@ -397,8 +679,13 @@ mod tests {
         }
         let m = c.metrics();
         assert_eq!(m.completed, 8);
-        // at least one gang formed (worker races may split the burst)
+        // at least one fusion group formed (worker races may split the
+        // burst)
         assert!(m.batched_requests >= 2, "batched {}", m.batched_requests);
+        // the lane reports its own round aggregates
+        let lane = m.lane("gmm").unwrap();
+        assert!(lane.fused_rounds > 0);
+        assert_eq!(lane.admitted, 8);
         c.shutdown();
     }
 
@@ -461,7 +748,7 @@ mod tests {
             enable_batching: true,
             max_queue_depth: 2,
             ..Default::default()
-        });
+        }).unwrap();
         c.register_model("gated", Arc::new(GatedModel {
             sched: DdpmSchedule::new(2),
             gate: gate.clone(),
@@ -513,7 +800,7 @@ mod tests {
             max_batch: 16,
             enable_batching: true,
             ..Default::default()
-        });
+        }).unwrap();
         let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
         c.register_model("gmm", oracle);
         let rxs: Vec<_> = (0..9)
@@ -539,6 +826,50 @@ mod tests {
     }
 
     #[test]
+    fn two_variant_burst_progresses_both_lanes_in_one_tick_window() {
+        // ONE worker, two variants submitted together: the lane
+        // scheduler must interleave both lanes' rounds (the pre-lane
+        // batcher served variant b only after variant a fully drained)
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            enable_batching: true,
+            ..Default::default()
+        }).unwrap();
+        c.register_model("a", GmmDdpmOracle::new(Gmm::circle_2d(), 60,
+                                                 false));
+        c.register_model("b", GmmDdpmOracle::new(Gmm::random(3, 4, 1.5, 9),
+                                                 60, false));
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            let variant = if i % 2 == 0 { "a" } else { "b" };
+            rxs.push(c.submit(Request {
+                id: 0,
+                variant: variant.into(),
+                sampler: SamplerSpec::Sequential,
+                seed: 50 + i,
+                cond: vec![],
+            }).1);
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().error.is_none());
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed, 8);
+        let a = m.lane("a").expect("lane a");
+        let b = m.lane("b").expect("lane b");
+        assert!(a.fused_rounds > 0 && b.fused_rounds > 0);
+        // the single worker must have driven both lanes concurrently:
+        // their round windows overlap instead of running back to back
+        assert!(a.overlaps(b),
+                "lanes ran sequentially: a=[{:.2},{:.2}]ms \
+                 b=[{:.2},{:.2}]ms",
+                a.first_round_ms, a.last_round_ms, b.first_round_ms,
+                b.last_round_ms);
+        c.shutdown();
+    }
+
+    #[test]
     fn shutdown_joins_workers() {
         let c = coordinator_with_oracle(3);
         let (_, rx) = c.submit(req(SamplerSpec::Sequential, 9));
@@ -555,7 +886,7 @@ mod tests {
                 enable_batching: true,
                 pool,
                 ..Default::default()
-            });
+            }).unwrap();
             let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
             c.register_model("gmm", oracle);
             let mut samples = Vec::new();

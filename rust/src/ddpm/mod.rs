@@ -9,7 +9,8 @@ use crate::math::vec_ops::lincomb_into;
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::rng::Philox;
 use crate::runtime::pool::PoolConfig;
-use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
+use crate::sampler::{ArenaSpan, DenoiseDemand, RoundArena, RoundExec,
+                     SamplerPoll, StepSampler};
 
 /// Per-request noise streams (the "randomness contract"): `xi[j]` and
 /// `u[j]` are consumed by the transition to index j (0-based row of the
@@ -133,6 +134,21 @@ impl StepSampler for SequentialStepMachine {
             cond: &self.cond,
             n: 1,
         }))
+    }
+
+    /// Arena path: write the one demanded row straight into the arena
+    /// (the single copy any executor needs — there is no intermediate
+    /// staging or mega-batch pack behind it).
+    fn poll_into(&mut self, arena: &mut RoundArena)
+                 -> Result<Option<ArenaSpan>> {
+        if self.i_cur == 0 {
+            return Ok(None);
+        }
+        let (span, rows) = arena.reserve(1);
+        rows.ys.copy_from_slice(&self.y);
+        rows.ts[0] = self.ts[0];
+        rows.cond.copy_from_slice(&self.cond);
+        Ok(Some(span))
     }
 
     fn resume(&mut self, x0: &[f64], _exec: RoundExec) -> Result<()> {

@@ -9,7 +9,8 @@ pub mod speedup;
 pub use latency::LatencyModel;
 pub use quality::{format_quality_table, QualityRow};
 pub use serve_bench::{bench_coordinator, bench_coordinator_json,
-                      format_coord_rows, CoordBenchRow};
+                      bench_mixed_variants, format_coord_rows,
+                      format_lanes, CoordBenchRow, MixedVariantBench};
 pub use speedup::{bench_parallel_json, format_pool_rows, format_rows,
                   outputs_bit_identical, sweep_pool_sizes, sweep_thetas,
                   write_bench_json, ForwardBenchRow, PoolRow, SpeedupRow};

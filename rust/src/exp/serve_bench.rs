@@ -2,18 +2,29 @@
 //! emitter tracked across PRs (the serving-layer sibling of
 //! `BENCH_parallel.json`).
 //!
-//! Closed-loop load generator: at each concurrency level c it keeps
-//! waves of c requests in flight against a fresh coordinator (mixed
-//! sequential / ASD / Picard traffic on one variant) and reports
-//! requests/s, p50/p99 end-to-end latency, and the fused-round shape
-//! (`fused_rows_per_round`, occupancy) that shows cross-request fusion
-//! actually saturating the batch dimension.
+//! Two scenarios:
+//! * **Closed-loop concurrency sweep** ([`bench_coordinator`]): at each
+//!   concurrency level c it keeps waves of c requests in flight against
+//!   a fresh coordinator (mixed sequential / ASD / Picard traffic on
+//!   one variant) and reports requests/s, p50/p99 end-to-end latency,
+//!   the fused-round shape (`fused_rows_per_round`, occupancy) and the
+//!   per-lane aggregates.
+//! * **Mixed-variant lanes** ([`bench_mixed_variants`]): concurrent
+//!   bursts on several registered variants through ONE coordinator,
+//!   reporting each lane's fused-round shape, queue wait and — the
+//!   no-head-of-line-blocking proof — whether every lane's round
+//!   window overlapped the others' (both lanes progressed within the
+//!   same tick window instead of running back to back).
+//!
+//! Schema v2: rows carry a `lanes` array; the document carries an
+//! optional `mixed_variants` section.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
+use crate::coordinator::{Coordinator, LaneSnapshot, Request, SamplerSpec,
+                         ServerConfig};
 use crate::model::DenoiseModel;
 use crate::util::Json;
 
@@ -33,6 +44,24 @@ pub struct CoordBenchRow {
     pub completed: u64,
     pub failed: u64,
     pub rejected: u64,
+    /// per-lane aggregates (one lane in this single-variant sweep)
+    pub lanes: Vec<LaneSnapshot>,
+}
+
+/// Result of the mixed-variant lane scenario.
+#[derive(Debug, Clone)]
+pub struct MixedVariantBench {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub requests_per_s: f64,
+    pub completed: u64,
+    pub failed: u64,
+    /// per-variant lane aggregates
+    pub lanes: Vec<LaneSnapshot>,
+    /// every pair of lanes' fused-round windows overlapped: all
+    /// variants progressed within the same tick window (no
+    /// cross-variant head-of-line blocking)
+    pub lanes_overlap: bool,
 }
 
 /// Nearest-rank percentile (q in [0, 1]) over a sorted slice.
@@ -53,6 +82,14 @@ fn sampler_for(i: usize, theta: usize) -> SamplerSpec {
     }
 }
 
+fn one_hot(cond_dim: usize, i: usize) -> Vec<f64> {
+    let mut cond = vec![0.0; cond_dim];
+    if cond_dim > 0 {
+        cond[i % cond_dim] = 1.0;
+    }
+    cond
+}
+
 /// Run the closed-loop bench at each concurrency level. Every level
 /// gets a fresh coordinator (fresh metrics) serving `model` as
 /// `variant`; `n_requests` total requests are pushed through in waves
@@ -71,7 +108,7 @@ pub fn bench_coordinator(model: Arc<dyn DenoiseModel>, variant: &str,
             // otherwise
             max_batch: config.max_batch.max(concurrency),
             ..config.clone()
-        });
+        })?;
         c.register_model(variant, model.clone());
         let mut latencies_s: Vec<f64> = Vec::with_capacity(n);
         let mut submitted = 0usize;
@@ -81,16 +118,12 @@ pub fn bench_coordinator(model: Arc<dyn DenoiseModel>, variant: &str,
             let mut rxs = Vec::with_capacity(wave);
             for w in 0..wave {
                 let i = submitted + w;
-                let mut cond = vec![0.0; cond_dim];
-                if cond_dim > 0 {
-                    cond[i % cond_dim] = 1.0;
-                }
                 rxs.push(c.submit(Request {
                     id: 0,
                     variant: variant.to_string(),
                     sampler: sampler_for(i, theta),
                     seed: 10_000 + i as u64,
-                    cond,
+                    cond: one_hot(cond_dim, i),
                 }).1);
             }
             for rx in rxs {
@@ -116,9 +149,73 @@ pub fn bench_coordinator(model: Arc<dyn DenoiseModel>, variant: &str,
             completed: m.completed,
             failed: m.failed,
             rejected: m.rejected,
+            lanes: m.lanes,
         });
     }
     Ok(rows)
+}
+
+/// Mixed-variant closed-loop scenario: one coordinator serving every
+/// `(name, model)` pair, `n_per_variant` requests per variant submitted
+/// interleaved (round-robin across variants, rotating samplers within
+/// each). The returned per-lane windows prove — or disprove — that all
+/// lanes progressed concurrently.
+pub fn bench_mixed_variants(models: &[(String, Arc<dyn DenoiseModel>)],
+                            n_per_variant: usize, config: &ServerConfig,
+                            theta: usize) -> Result<MixedVariantBench> {
+    anyhow::ensure!(!models.is_empty(), "need at least one variant");
+    let c = Coordinator::new(config.clone())?;
+    for (name, model) in models {
+        c.register_model(name, model.clone());
+    }
+    let n_total = n_per_variant.max(1) * models.len();
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n_total);
+    for i in 0..n_per_variant.max(1) {
+        for (name, model) in models {
+            rxs.push(c.submit(Request {
+                id: 0,
+                variant: name.clone(),
+                sampler: sampler_for(i, theta),
+                seed: 20_000 + rxs.len() as u64,
+                cond: one_hot(model.cond_dim(), i),
+            }).1);
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv()?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+    let m = c.metrics();
+    c.shutdown();
+    let lanes = m.lanes;
+    let lanes_overlap = lanes.len() >= 2
+        && lanes.iter().enumerate().all(|(i, a)| {
+            lanes.iter().skip(i + 1).all(|b| a.overlaps(b))
+        });
+    Ok(MixedVariantBench {
+        requests: n_total,
+        wall_s,
+        requests_per_s: n_total as f64 / wall_s,
+        completed: m.completed,
+        failed: m.failed,
+        lanes,
+        lanes_overlap,
+    })
+}
+
+fn lane_json(l: &LaneSnapshot) -> Json {
+    Json::obj(vec![
+        ("lane", Json::Str(l.lane.clone())),
+        ("fused_rounds", Json::Num(l.fused_rounds as f64)),
+        ("fused_rows_per_round", Json::Num(l.fused_rows_per_round)),
+        ("mean_requests_per_round", Json::Num(l.mean_requests_per_round)),
+        ("occupancy", Json::Num(l.occupancy)),
+        ("mean_queue_wait_ms", Json::Num(l.mean_queue_wait_ms)),
+        ("admitted", Json::Num(l.admitted as f64)),
+        ("first_round_ms", Json::Num(l.first_round_ms)),
+        ("last_round_ms", Json::Num(l.last_round_ms)),
+    ])
 }
 
 fn row_json(r: &CoordBenchRow) -> Json {
@@ -133,21 +230,39 @@ fn row_json(r: &CoordBenchRow) -> Json {
         ("completed", Json::Num(r.completed as f64)),
         ("failed", Json::Num(r.failed as f64)),
         ("rejected", Json::Num(r.rejected as f64)),
+        ("lanes", Json::Arr(r.lanes.iter().map(lane_json).collect())),
     ])
 }
 
-/// Assemble the `BENCH_coordinator.json` document.
-pub fn bench_coordinator_json(variant: &str, k: usize,
-                              rows: &[CoordBenchRow]) -> Json {
+fn mixed_json(b: &MixedVariantBench) -> Json {
     Json::obj(vec![
+        ("requests", Json::Num(b.requests as f64)),
+        ("requests_per_s", Json::Num(b.requests_per_s)),
+        ("completed", Json::Num(b.completed as f64)),
+        ("failed", Json::Num(b.failed as f64)),
+        ("lanes_overlap", Json::Bool(b.lanes_overlap)),
+        ("lanes", Json::Arr(b.lanes.iter().map(lane_json).collect())),
+    ])
+}
+
+/// Assemble the `BENCH_coordinator.json` document (schema v2: per-row
+/// `lanes` arrays + optional `mixed_variants` section).
+pub fn bench_coordinator_json(variant: &str, k: usize,
+                              rows: &[CoordBenchRow],
+                              mixed: Option<&MixedVariantBench>) -> Json {
+    let mut fields = vec![
         ("bench", Json::Str("bench_coordinator".into())),
-        ("schema_version", Json::Num(1.0)),
+        ("schema_version", Json::Num(2.0)),
         ("variant", Json::Str(variant.to_string())),
         ("k", Json::Num(k as f64)),
         ("pool_threads",
          Json::Num(crate::runtime::pool::default_threads() as f64)),
         ("rows", Json::Arr(rows.iter().map(row_json).collect())),
-    ])
+    ];
+    if let Some(b) = mixed {
+        fields.push(("mixed_variants", mixed_json(b)));
+    }
+    Json::obj(fields)
 }
 
 /// Render the bench as a table.
@@ -161,6 +276,22 @@ pub fn format_coord_rows(rows: &[CoordBenchRow]) -> String {
             "{:<12} {:>10.1} {:>10.2} {:>10.2} {:>12.2} {:>10.2}\n",
             r.concurrency, r.requests_per_s, r.p50_latency_ms,
             r.p99_latency_ms, r.fused_rows_per_round, r.fused_occupancy));
+    }
+    out
+}
+
+/// Render per-lane aggregates as a table.
+pub fn format_lanes(lanes: &[LaneSnapshot]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>12} {:>8} {:>12} {:>18}\n",
+        "lane", "rounds", "rows/round", "occup.", "queue ms",
+        "window ms"));
+    for l in lanes {
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>12.2} {:>8.2} {:>12.2} {:>8.1}..{:<8.1}\n",
+            l.lane, l.fused_rounds, l.fused_rows_per_round, l.occupancy,
+            l.mean_queue_wait_ms, l.first_round_ms, l.last_round_ms));
     }
     out
 }
@@ -196,17 +327,66 @@ mod tests {
             assert!(r.requests_per_s > 0.0);
             assert!(r.p99_latency_ms >= r.p50_latency_ms);
         }
-        // concurrency 4 must actually fuse rows
+        // concurrency 4 must actually fuse rows, and the lane array
+        // carries the single lane's aggregates
         assert!(rows[1].fused_rows_per_round > 1.0,
                 "rows/round {}", rows[1].fused_rows_per_round);
-        let doc = bench_coordinator_json("gmm", 30, &rows);
+        assert_eq!(rows[1].lanes.len(), 1);
+        assert_eq!(rows[1].lanes[0].lane, "gmm");
+        assert!(rows[1].lanes[0].fused_rounds > 0);
+        let doc = bench_coordinator_json("gmm", 30, &rows, None);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_coordinator");
+        assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
+                   2);
         let rs = back.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[1].get("concurrency").unwrap().as_usize().unwrap(), 4);
+        let lanes = rs[1].get("lanes").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 1);
+        assert!(lanes[0].get("fused_rows_per_round").unwrap()
+                    .as_f64().unwrap() > 1.0);
+        assert!(lanes[0].get("mean_queue_wait_ms").is_ok());
         let table = format_coord_rows(&rows);
         assert!(table.contains("rows/round"));
+    }
+
+    #[test]
+    fn mixed_variant_bench_reports_overlapping_lanes() {
+        // ONE worker, two variants: the lane scheduler must progress
+        // both lanes inside the same tick window
+        let a: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 50, false);
+        let b: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::random(3, 4, 1.5, 11), 50, false);
+        let models = vec![("gmm-a".to_string(), a),
+                          ("gmm-b".to_string(), b)];
+        let bench = bench_mixed_variants(&models, 6, &ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            ..Default::default()
+        }, 8).unwrap();
+        assert_eq!(bench.requests, 12);
+        assert_eq!(bench.completed, 12);
+        assert_eq!(bench.failed, 0);
+        assert_eq!(bench.lanes.len(), 2);
+        for lane in &bench.lanes {
+            assert!(lane.fused_rounds > 0, "lane {} never fused",
+                    lane.lane);
+            assert!(lane.fused_rows_per_round > 1.0,
+                    "lane {} rows/round {}", lane.lane,
+                    lane.fused_rows_per_round);
+        }
+        assert!(bench.lanes_overlap,
+                "lanes ran back to back: {:?}", bench.lanes);
+        // document embeds the mixed section
+        let doc = bench_coordinator_json("mixed", 50, &[], Some(&bench));
+        let back = Json::parse(&doc.to_string()).unwrap();
+        let mixed = back.get("mixed_variants").unwrap();
+        assert!(mixed.get("lanes_overlap").unwrap().as_bool().unwrap());
+        assert_eq!(mixed.get("lanes").unwrap().as_arr().unwrap().len(), 2);
+        let table = format_lanes(&bench.lanes);
+        assert!(table.contains("gmm-a") && table.contains("gmm-b"));
     }
 }

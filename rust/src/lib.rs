@@ -8,8 +8,8 @@
 //! Three-layer architecture (see DESIGN.md):
 //! * **L3 (this crate)** — request-path coordinator: the ASD engine
 //!   (Algorithms 1–3), sequential & Picard baselines, serving stack
-//!   (router / batcher / worker pool), simulated robot environments,
-//!   quality metrics, CLI.
+//!   (router / variant lanes / worker pool), simulated robot
+//!   environments, quality metrics, CLI.
 //! * **L2 (python/compile)** — JAX denoiser models, AOT-lowered once to
 //!   HLO text artifacts.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (fused linear,
@@ -41,8 +41,8 @@ pub mod prelude {
     pub use crate::model::{DenoiseModel, Manifest};
     pub use crate::rng::Philox;
     pub use crate::runtime::Runtime;
-    pub use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll,
-                             StepSampler};
+    pub use crate::sampler::{ArenaSpan, DenoiseDemand, RoundArena,
+                             RoundExec, SamplerPoll, StepSampler};
     pub use crate::schedule::DdpmSchedule;
 }
 

@@ -60,7 +60,8 @@ fn print_help() {
          [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n    \
          [--pool 1] [--shard-min 2] [--max-batch 8]\n    \
          [--max-queue-depth 1024] [--analytic] (GMM oracle, no\n    \
-         artifacts) [--json BENCH_coordinator.json]\n    \
+         artifacts) [--analytic-variants 2] (mixed-variant lanes)\n    \
+         [--json BENCH_coordinator.json]\n    \
          [--concurrency 1,8,64] [--bench-requests 32]\n  \
          pool                       pool-size sweep on an analytic GMM;\n    \
          [--d 64] [--components 96] [--k 150] [--theta 16] [--n 4]\n    \
@@ -171,28 +172,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pool: asd::runtime::pool::PoolConfig { pool_size, shard_min },
     };
 
-    // --analytic serves a GMM posterior-mean oracle: no AOT artifacts
-    // needed, so the serving stack (and its CI smoke) runs anywhere
-    let (variant, model, cond_dim): (String, Arc<dyn asd::model::DenoiseModel>,
-                                     usize) = if args.flag("analytic") {
+    // --analytic serves GMM posterior-mean oracles: no AOT artifacts
+    // needed, so the serving stack (and its CI smoke) runs anywhere.
+    // --analytic-variants N registers N distinct oracle variants so
+    // the mixed-variant lane scheduler is exercised end to end.
+    let mut models: Vec<(String, Arc<dyn asd::model::DenoiseModel>)> =
+        Vec::new();
+    if args.flag("analytic") {
         let k = args.get_usize("k", 60)?;
-        let m: Arc<dyn asd::model::DenoiseModel> =
-            asd::model::GmmDdpmOracle::new(asd::model::Gmm::circle_2d(), k,
-                                           false);
-        ("gmm-analytic".to_string(), m, 0)
+        let n_variants = args.get_usize("analytic-variants", 1)?.max(1);
+        for v in 0..n_variants {
+            let gmm = if v == 0 {
+                asd::model::Gmm::circle_2d()
+            } else {
+                asd::model::Gmm::random(2, 4 + v, 1.5, 7 + v as u64)
+            };
+            let m: Arc<dyn asd::model::DenoiseModel> =
+                asd::model::GmmDdpmOracle::new(gmm, k, false);
+            models.push((format!("gmm-analytic-{v}"), m));
+        }
     } else {
         let variant = args.get("model").unwrap_or("gmm2d").to_string();
         let rt = Runtime::load_default()?;
         let model = rt.model(&variant)?;
         model.warmup()?;
-        let cond_dim = model.info.cond_dim;
-        (variant, model, cond_dim)
-    };
-    let coordinator = Coordinator::new(config.clone());
-    coordinator.register_model(&variant, model.clone());
+        let model: Arc<dyn asd::model::DenoiseModel> = model;
+        models.push((variant, model));
+    }
+    let coordinator = Coordinator::new(config.clone())?;
+    for (name, model) in &models {
+        coordinator.register_model(name, model.clone());
+    }
 
     println!("serving {n_requests} requests on {workers} workers \
-              (asd fraction {asd_frac})");
+              across {} variant lane(s) (asd fraction {asd_frac})",
+             models.len());
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for i in 0..n_requests {
@@ -201,6 +215,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             SamplerSpec::Sequential
         };
+        // rotate requests across the registered variants
+        let (variant, model) = &models[i % models.len()];
+        let cond_dim = model.cond_dim();
         let mut cond = vec![0.0; cond_dim];
         if cond_dim > 0 {
             cond[i % cond_dim] = 1.0; // rotate classes across requests
@@ -237,21 +254,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.fused_occupancy,
         m.rejected
     );
+    if !m.lanes.is_empty() {
+        print!("{}", asd::exp::serve_bench::format_lanes(&m.lanes));
+    }
     coordinator.shutdown();
 
-    // --json: run the concurrency-sweep bench and emit
-    // BENCH_coordinator.json (requests/s, fused rows/round, p50/p99)
+    // --json: run the concurrency-sweep bench (first variant) plus —
+    // with >= 2 variants — the mixed-variant lane scenario, and emit
+    // BENCH_coordinator.json (schema v2: per-lane occupancy/queue-wait)
     if let Some(path) = args.get("json") {
         let concurrencies =
             args.get_usize_list("concurrency", &[1, 8, 64])?;
         let bench_requests = args.get_usize("bench-requests",
                                             n_requests.max(16))?;
+        let (variant, model) = &models[0];
         let rows = asd::exp::serve_bench::bench_coordinator(
-            model.clone(), &variant, &concurrencies, bench_requests,
+            model.clone(), variant, &concurrencies, bench_requests,
             &config, theta)?;
         print!("{}", asd::exp::serve_bench::format_coord_rows(&rows));
+        let mixed = if models.len() >= 2 {
+            let b = asd::exp::serve_bench::bench_mixed_variants(
+                &models, bench_requests.div_ceil(models.len()).max(2),
+                &config, theta)?;
+            println!("mixed-variant lanes (overlap: {}):",
+                     b.lanes_overlap);
+            print!("{}", asd::exp::serve_bench::format_lanes(&b.lanes));
+            Some(b)
+        } else {
+            None
+        };
         let doc = asd::exp::serve_bench::bench_coordinator_json(
-            &variant, model.k_steps(), &rows);
+            variant, model.k_steps(), &rows, mixed.as_ref());
         asd::exp::speedup::write_bench_json(std::path::Path::new(path),
                                             &doc)?;
         println!("wrote {path}");

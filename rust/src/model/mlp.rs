@@ -375,6 +375,18 @@ impl DenoiseModel for NativeMlp {
             self.denoise_batch_with(ys, ts, cond, n, out, &mut ws.borrow_mut())
         })
     }
+
+    /// Arena rounds run the GEMM pipeline against the *arena's*
+    /// workspace: the whole round's f64→f32 conversion packs once into
+    /// the per-lane buffers, which persist across rounds/ticks (the
+    /// thread-local workspace stays the target for sharded sub-calls,
+    /// where each pool worker needs its own scratch). Bit-identical to
+    /// `denoise_batch` — the workspace is pure scratch.
+    fn denoise_round(&self, arena: &mut crate::sampler::RoundArena)
+                     -> Result<()> {
+        let (ys, ts, cond, n, out, ws) = arena.round_io_ws();
+        self.denoise_batch_with(ys, ts, cond, n, out, ws)
+    }
 }
 
 #[cfg(test)]
@@ -491,6 +503,38 @@ mod tests {
             let mut b = vec![0.0; n * 2];
             mlp.denoise_batch(&ys, &ts, &[], n, &mut b).unwrap();
             assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn arena_round_matches_batch_bitwise() {
+        // the per-lane arena workspace path must produce the exact bits
+        // of the thread-local denoise_batch path (workspace is scratch)
+        use crate::model::DenoiseModel;
+        use crate::sampler::RoundArena;
+        let info = toy_info(3, 2, 8, 3);
+        let flat = pseudo_weights(flat_len(&info));
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        let mut arena = RoundArena::new(3, 2);
+        for n in [5usize, 1, 9] {
+            let ys: Vec<f64> =
+                (0..n * 3).map(|i| (i as f64 * 0.23).sin()).collect();
+            let ts: Vec<f64> = (0..n).map(|r| (1 + r % 10) as f64).collect();
+            let cond: Vec<f64> =
+                (0..n * 2).map(|i| (i as f64 * 0.11).cos()).collect();
+            let mut want = vec![0.0; n * 3];
+            mlp.denoise_batch(&ys, &ts, &cond, n, &mut want).unwrap();
+            arena.begin_round();
+            let (span, rows) = arena.reserve(n);
+            rows.ys.copy_from_slice(&ys);
+            rows.ts.copy_from_slice(&ts);
+            rows.cond.copy_from_slice(&cond);
+            mlp.denoise_round(&mut arena).unwrap();
+            let got = arena.out_rows(span);
+            for i in 0..n * 3 {
+                assert_eq!(want[i].to_bits(), got[i].to_bits(),
+                           "n={n} i={i}");
+            }
         }
     }
 

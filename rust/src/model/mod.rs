@@ -28,6 +28,7 @@ pub use manifest::{Manifest, TargetSpec, VariantInfo};
 pub use mlp::{NativeMlp, Workspace};
 pub use parallel::ParallelModel;
 
+use crate::sampler::RoundArena;
 use crate::schedule::DdpmSchedule;
 
 /// An x0-predicting denoiser with its schedule: the only interface the
@@ -49,6 +50,19 @@ pub trait DenoiseModel: Send + Sync {
     /// `cond`: n*cond_dim conditioning rows; `out`: n*d output buffer.
     fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
                      out: &mut [f64]) -> Result<()>;
+
+    /// Execute one staged arena round: consume the arena's input
+    /// region and fill its output region in place (the zero-copy round
+    /// data plane — see `sampler::RoundArena`). The default forwards to
+    /// `denoise_batch` on the arena's views; backends with a cheaper
+    /// arena path override it (`ParallelModel` shards arena rows on the
+    /// global pool, `NativeMlp` converts f64→f32 once per round into
+    /// the arena's GEMM workspace). Must be bit-identical to the
+    /// `denoise_batch` form.
+    fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
+        let (ys, ts, cond, n, out) = arena.round_io();
+        self.denoise_batch(ys, ts, cond, n, out)
+    }
 
     /// Convenience single-call wrapper.
     fn denoise_one(&self, y: &[f64], t: usize, cond: &[f64],

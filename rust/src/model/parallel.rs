@@ -29,6 +29,7 @@ use anyhow::Result;
 
 use crate::model::DenoiseModel;
 use crate::runtime::pool::{self, PoolConfig};
+use crate::sampler::RoundArena;
 use crate::schedule::DdpmSchedule;
 
 /// Raw output pointer smuggled into `Fn` shards; sound because shards
@@ -125,6 +126,20 @@ impl DenoiseModel for ParallelModel {
             None => Ok(()),
         }
     }
+
+    /// Arena rounds shard exactly like slice rounds: the arena's input
+    /// region is split into contiguous per-shard row ranges (pure
+    /// subslicing — no staging copies, no allocations). An inline round
+    /// (`shards <= 1`) is handed to the inner model's own arena path,
+    /// so the native backend consumes the arena's per-lane GEMM
+    /// workspace instead of its thread-local one.
+    fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
+        if self.pool.shards_for(arena.rows()) <= 1 {
+            return self.inner.denoise_round(arena);
+        }
+        let (ys, ts, cond, n, out) = arena.round_io();
+        self.denoise_batch(ys, ts, cond, n, out)
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +177,31 @@ mod tests {
                 want.iter().map(|v| v.to_bits()).collect();
             let got_bits: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
             assert_eq!(want_bits, got_bits, "n={n}");
+        }
+    }
+
+    #[test]
+    fn arena_round_matches_slice_batch_bitwise() {
+        let base = oracle(30);
+        let par = ParallelModel::new(
+            base.clone(), PoolConfig { pool_size: 4, shard_min: 1 });
+        for n in [1usize, 3, 7] {
+            let ys: Vec<f64> =
+                (0..n * 2).map(|i| (i as f64 * 0.53).cos()).collect();
+            let ts: Vec<f64> = (0..n).map(|r| (1 + r % 30) as f64).collect();
+            let mut want = vec![0.0; n * 2];
+            par.denoise_batch(&ys, &ts, &[], n, &mut want).unwrap();
+            let mut arena = RoundArena::new(2, 0);
+            arena.begin_round();
+            let (span, rows) = arena.reserve(n);
+            rows.ys.copy_from_slice(&ys);
+            rows.ts.copy_from_slice(&ts);
+            par.denoise_round(&mut arena).unwrap();
+            let got = arena.out_rows(span);
+            let bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(bits(&want), bits(got), "n={n}");
         }
     }
 

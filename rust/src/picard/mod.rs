@@ -20,7 +20,8 @@ use anyhow::Result;
 use crate::ddpm::NoiseStreams;
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::runtime::pool::PoolConfig;
-use crate::sampler::{DenoiseDemand, RoundExec, SamplerPoll, StepSampler};
+use crate::sampler::{ArenaSpan, DenoiseDemand, RoundArena, RoundExec,
+                     SamplerPoll, StepSampler};
 
 #[derive(Debug, Clone, Copy)]
 pub struct PicardConfig {
@@ -112,6 +113,10 @@ pub struct PicardStepMachine {
     cond_rows: Vec<f64>,
     acc: Vec<f64>,
     finished: bool,
+    /// whether `eval_in`/`ts` hold the current sweep demand. Staging is
+    /// deferred to `poll` so the arena path (`poll_into`) writes sweep
+    /// rows straight from the iterates into the arena instead.
+    staged: bool,
     stats: PicardStats,
 }
 
@@ -158,13 +163,11 @@ impl PicardStepMachine {
             cond_rows,
             acc: vec![0.0; d],
             finished: k == 0,
+            staged: false,
             noise,
             stats: PicardStats::default(),
             model,
         };
-        if !m.finished {
-            m.stage_sweep();
-        }
         Ok(m)
     }
 
@@ -180,12 +183,14 @@ impl PicardStepMachine {
         self.w.min(self.model.k_steps() - self.done)
     }
 
-    /// Stage the next sweep's demand: the *previous* iterate of every
-    /// window transition idx -> idx-1.
-    fn stage_sweep(&mut self) {
+    /// Write the next sweep's demand — the *previous* iterate of every
+    /// window transition idx -> idx-1 — into arbitrary target slices
+    /// (sized exactly `w_eff`): the arena's reserved row range or the
+    /// internal staging buffers.
+    fn write_sweep_rows(&self, w_eff: usize, ys: &mut [f64],
+                        ts: &mut [f64]) {
         let d = self.model.dim();
         let k = self.model.k_steps();
-        let w_eff = self.w_eff();
         for pos in 0..w_eff {
             let idx = k - self.done - pos; // DDPM index of the iterate
             let src: &[f64] = if pos == 0 {
@@ -193,9 +198,22 @@ impl PicardStepMachine {
             } else {
                 &self.ys[(pos - 1) * d..pos * d]
             };
-            self.eval_in[pos * d..(pos + 1) * d].copy_from_slice(src);
-            self.ts[pos] = idx as f64;
+            ys[pos * d..(pos + 1) * d].copy_from_slice(src);
+            ts[pos] = idx as f64;
         }
+    }
+
+    /// Compatibility staging for the slice-based `poll`.
+    fn stage_sweep(&mut self) {
+        let d = self.model.dim();
+        let w_eff = self.w_eff();
+        let mut ys = std::mem::take(&mut self.eval_in);
+        let mut ts = std::mem::take(&mut self.ts);
+        self.write_sweep_rows(w_eff, &mut ys[..w_eff * d],
+                              &mut ts[..w_eff]);
+        self.eval_in = ys;
+        self.ts = ts;
+        self.staged = true;
     }
 }
 
@@ -203,6 +221,9 @@ impl StepSampler for PicardStepMachine {
     fn poll(&mut self) -> Result<SamplerPoll<'_>> {
         if self.finished {
             return Ok(SamplerPoll::Done(&self.base));
+        }
+        if !self.staged {
+            self.stage_sweep();
         }
         let d = self.model.dim();
         let c_dim = self.model.cond_dim();
@@ -213,6 +234,21 @@ impl StepSampler for PicardStepMachine {
             cond: &self.cond_rows[..w_eff * c_dim],
             n: w_eff,
         }))
+    }
+
+    /// Arena path: stage the sweep rows straight into the arena's
+    /// reserved row range (internal staging buffers bypassed).
+    fn poll_into(&mut self, arena: &mut RoundArena)
+                 -> Result<Option<ArenaSpan>> {
+        if self.finished {
+            return Ok(None);
+        }
+        let c_dim = self.model.cond_dim();
+        let w_eff = self.w_eff();
+        let (span, rows) = arena.reserve(w_eff);
+        self.write_sweep_rows(w_eff, rows.ys, rows.ts);
+        rows.cond.copy_from_slice(&self.cond_rows[..w_eff * c_dim]);
+        Ok(Some(span))
     }
 
     fn resume(&mut self, x0: &[f64], _exec: RoundExec) -> Result<()> {
@@ -276,7 +312,8 @@ impl StepSampler for PicardStepMachine {
                 self.ys[pos * d..(pos + 1) * d].copy_from_slice(&self.base);
             }
         }
-        self.stage_sweep();
+        // the next demand is staged lazily by poll / poll_into
+        self.staged = false;
         Ok(())
     }
 }

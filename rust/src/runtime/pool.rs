@@ -237,6 +237,22 @@ impl ThreadPool {
             f(bs * block, (be * block).min(n))
         })
     }
+
+    /// Run `n` independent *tasks* concurrently (`f(i)` once for each
+    /// `i in 0..n`), the caller participating as usual. Task
+    /// granularity — one shard per task — for co-scheduling
+    /// heterogeneous work items on the one global pool: e.g. the
+    /// coordinator executes every serving lane's fused round as one
+    /// task per tick, so two variants' rounds share wall-clock instead
+    /// of queueing behind each other. Tasks may issue nested sharded
+    /// calls (deadlock-free; see module docs).
+    pub fn run_tasks<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        self.run_sharded(n, n, |s, e| {
+            for i in s..e {
+                f(i);
+            }
+        });
+    }
 }
 
 impl Drop for ThreadPool {
@@ -342,6 +358,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn run_tasks_executes_each_task_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 1, 2, 5, 17] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_tasks(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} (n={n})");
+            }
+        }
+        // tasks nesting sharded calls complete (the lane tick pattern)
+        let total = AtomicUsize::new(0);
+        global().run_tasks(3, |_| {
+            global().run_sharded(8, 4, |s, e| {
+                total.fetch_add(e - s, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 24);
     }
 
     #[test]

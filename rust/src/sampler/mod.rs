@@ -1,4 +1,6 @@
-//! `StepSampler` — poll-style sampler state machines.
+//! `StepSampler` — poll-style sampler state machines — and
+//! [`RoundArena`], the zero-copy round data plane between them and the
+//! batched denoiser call.
 //!
 //! The paper's exchangeability result makes the *parallel round* (one
 //! batched denoiser call) the unit of work, not the per-request loop.
@@ -9,35 +11,53 @@
 //!
 //! ```text
 //!   loop {
-//!       match machine.poll()? {
-//!           SamplerPoll::Done(y0)    => return y0,
-//!           SamplerPoll::Demand(dem) => {
-//!               x0 = denoise_batch(dem.ys, dem.ts, dem.cond, dem.n);
-//!               machine.resume(&x0, exec)?;
+//!       arena.begin_round();
+//!       match machine.poll_into(&mut arena)? {
+//!           None       => return arena-independent final sample,
+//!           Some(span) => {
+//!               model.denoise_round(&mut arena)?;     // fused GEMM call
+//!               machine.resume_from(&arena, span, exec)?;
 //!           }
 //!       }
 //!   }
 //! ```
 //!
+//! **The arena data plane.** A [`RoundArena`] owns the staged round:
+//! row-major iterates, timesteps, conditioning rows and the output
+//! region, plus the GEMM [`Workspace`](crate::model::Workspace) the
+//! native backend converts into. Machines write their demanded rows
+//! *directly* into arena row ranges ([`StepSampler::poll_into`]) and
+//! are resumed from *views* into the arena's output region
+//! ([`StepSampler::resume_from`]) — there is no intermediate mega-batch
+//! pack and no scatter copy. The model side consumes the arena through
+//! [`crate::model::DenoiseModel::denoise_round`]: `ParallelModel`
+//! shards arena rows on the global pool, `NativeMlp` converts f64→f32
+//! once per round into the arena's workspace. All buffers grow to the
+//! high-water round size and are reused, so the steady-state fused path
+//! performs zero heap allocations per round.
+//!
 //! The classic `run()` entry points ([`crate::ddpm::SequentialSampler`],
 //! [`crate::picard::PicardSampler`], [`crate::asd::AsdEngine`]) are thin
-//! drivers over their machines ([`drive`]), so solo execution is
-//! unchanged. The serving win is that an *external* executor — the
-//! coordinator's `FusionScheduler` — can hold many machines for
-//! different requests, collect all their demands each tick, evaluate
-//! them in one fused `denoise_batch` mega-call, and scatter the results
-//! back. Because every machine consumes only its own pre-drawn Philox
-//! noise and the native models are row-independent (see
-//! `model::parallel`), fused execution is bit-identical to solo
-//! execution — batching changes wall-clock, never samples.
+//! drivers over their machines ([`drive`]) and run on the same arena
+//! path, so the golden-trace and determinism suites pin it end to end.
+//! The serving win is that an *external* executor — the coordinator's
+//! per-variant lanes (`coordinator::lanes`) — can hold many machines
+//! for different requests, stage all their demands in one arena per
+//! tick, evaluate them in one fused `denoise_round` mega-call, and
+//! resume every machine from its span. Because every machine consumes
+//! only its own pre-drawn Philox noise and the native models are
+//! row-independent (see `model::parallel`), fused execution is
+//! bit-identical to solo execution — batching changes wall-clock, never
+//! samples.
 //!
 //! Contract:
 //! * `poll` is cheap and idempotent: it returns the same demand until
-//!   `resume` is called (demands are staged by the previous `resume` /
-//!   the constructor, never recomputed inside `poll`).
-//! * `resume(x0, exec)` must receive exactly `n * d` values laid out as
-//!   the demand's rows; `exec` reports how the round was executed
-//!   (latency, worker-pool shards) for stats that need it.
+//!   `resume` is called. `poll_into` stages the same rows the
+//!   compatibility `poll` would return, written straight into the
+//!   arena; a machine must support interleaving both forms.
+//! * `resume(x0, exec)` / `resume_from(arena, span, exec)` must receive
+//!   exactly the rows answering the last demand; `exec` reports how the
+//!   round was executed (latency, worker-pool shards) for stats.
 //! * Machines never call the model; they only do O(theta * d) sampler
 //!   math (speculation chains, GRS scans, Picard updates) in `resume`.
 
@@ -45,7 +65,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::model::DenoiseModel;
+use crate::model::{DenoiseModel, Workspace};
 use crate::runtime::pool::PoolConfig;
 
 /// The rows a sampler needs evaluated in the current parallel round.
@@ -87,8 +107,179 @@ impl RoundExec {
     }
 }
 
+/// A contiguous row range a machine reserved in a [`RoundArena`] for
+/// the current round. Returned by [`StepSampler::poll_into`] and handed
+/// back to [`StepSampler::resume_from`] to locate the output rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaSpan {
+    /// first row of the range
+    pub off: usize,
+    /// number of rows
+    pub rows: usize,
+}
+
+/// Mutable views over a freshly reserved arena row range — the machine
+/// writes its demand straight into these (no staging copy).
+pub struct ArenaRowsMut<'a> {
+    /// `rows * d` row-major iterates
+    pub ys: &'a mut [f64],
+    /// `rows` step indices / times
+    pub ts: &'a mut [f64],
+    /// `rows * cond_dim` conditioning rows
+    pub cond: &'a mut [f64],
+}
+
+/// The round staging arena: the zero-copy data plane from sampler
+/// machines down to the fused GEMM call.
+///
+/// One arena per execution lane (a solo driver, or one serving-lane
+/// variant in the coordinator). Per round: `begin_round` resets the row
+/// cursor, every machine `poll_into`s its rows, the model consumes the
+/// input region and fills the output region (`denoise_round`), and
+/// machines resume from output views. Buffers — including the GEMM
+/// [`Workspace`] the native backend packs f32 inputs into — grow to the
+/// high-water round size and are reused across rounds/ticks: the
+/// steady-state fused path allocates nothing.
+pub struct RoundArena {
+    d: usize,
+    c: usize,
+    ys: Vec<f64>,
+    ts: Vec<f64>,
+    cond: Vec<f64>,
+    out: Vec<f64>,
+    rows: usize,
+    ws: Workspace,
+}
+
+impl RoundArena {
+    pub fn new(d: usize, cond_dim: usize) -> RoundArena {
+        RoundArena {
+            d,
+            c: cond_dim,
+            ys: Vec::new(),
+            ts: Vec::new(),
+            cond: Vec::new(),
+            out: Vec::new(),
+            rows: 0,
+            ws: Workspace::new(),
+        }
+    }
+
+    /// Arena shaped for `model`'s row layout.
+    pub fn for_model(model: &dyn DenoiseModel) -> RoundArena {
+        RoundArena::new(model.dim(), model.cond_dim())
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn cond_dim(&self) -> usize {
+        self.c
+    }
+
+    /// Rows staged in the current round.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Start a new round: forget the previous round's rows but keep
+    /// every buffer's capacity (and the workspace) for reuse.
+    pub fn begin_round(&mut self) {
+        self.rows = 0;
+    }
+
+    /// Reserve `n` rows and return mutable views for the caller to
+    /// write its demand into. Grows buffers only past their high-water
+    /// mark (amortized; zero steady-state allocations).
+    pub fn reserve(&mut self, n: usize) -> (ArenaSpan, ArenaRowsMut<'_>) {
+        let off = self.rows;
+        let end = off + n;
+        grow(&mut self.ys, end * self.d);
+        grow(&mut self.ts, end);
+        grow(&mut self.cond, end * self.c);
+        grow(&mut self.out, end * self.d);
+        self.rows = end;
+        (
+            ArenaSpan { off, rows: n },
+            ArenaRowsMut {
+                ys: &mut self.ys[off * self.d..end * self.d],
+                ts: &mut self.ts[off..end],
+                cond: &mut self.cond[off * self.c..end * self.c],
+            },
+        )
+    }
+
+    /// Stage a prepared [`DenoiseDemand`] — the compatibility path the
+    /// default [`StepSampler::poll_into`] shim uses for machines that
+    /// only implement `poll`.
+    pub fn push_demand(&mut self, dem: &DenoiseDemand<'_>)
+                       -> Result<ArenaSpan> {
+        anyhow::ensure!(dem.ys.len() == dem.n * self.d
+                            && dem.ts.len() == dem.n
+                            && dem.cond.len() == dem.n * self.c,
+                        "demand shape mismatch: n={} d={} c={} ys={} ts={} \
+                         cond={}",
+                        dem.n, self.d, self.c, dem.ys.len(), dem.ts.len(),
+                        dem.cond.len());
+        let (span, rows) = self.reserve(dem.n);
+        rows.ys.copy_from_slice(dem.ys);
+        rows.ts.copy_from_slice(dem.ts);
+        rows.cond.copy_from_slice(dem.cond);
+        Ok(span)
+    }
+
+    /// The staged round as model-call views: `(ys, ts, cond, n, out)`.
+    pub fn round_io(&mut self) -> (&[f64], &[f64], &[f64], usize,
+                                   &mut [f64]) {
+        let n = self.rows;
+        (
+            &self.ys[..n * self.d],
+            &self.ts[..n],
+            &self.cond[..n * self.c],
+            n,
+            &mut self.out[..n * self.d],
+        )
+    }
+
+    /// Like [`round_io`](Self::round_io), plus the arena's GEMM
+    /// workspace — the native backend's f64→f32 conversion target
+    /// (per-lane, reused across rounds).
+    pub fn round_io_ws(&mut self) -> (&[f64], &[f64], &[f64], usize,
+                                      &mut [f64], &mut Workspace) {
+        let n = self.rows;
+        (
+            &self.ys[..n * self.d],
+            &self.ts[..n],
+            &self.cond[..n * self.c],
+            n,
+            &mut self.out[..n * self.d],
+            &mut self.ws,
+        )
+    }
+
+    /// Output rows for a span — the view a machine is resumed from.
+    pub fn out_rows(&self, span: ArenaSpan) -> &[f64] {
+        &self.out[span.off * self.d..(span.off + span.rows) * self.d]
+    }
+}
+
+fn grow(v: &mut Vec<f64>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
 /// A sampler factored as a poll/resume state machine. See the module
-/// docs for the contract.
+/// docs for the contract. `poll`/`resume` are the classic slice-based
+/// form (kept as the compatibility surface for hand-driven tests and
+/// external impls); `poll_into`/`resume_from` are the arena data plane
+/// every driver and the serving lanes use — machines override them to
+/// write demands straight into arena row ranges.
 pub trait StepSampler {
     /// Current demand, or `Done` with the finished sample. Idempotent
     /// until the next `resume`.
@@ -97,50 +288,89 @@ pub trait StepSampler {
     /// Advance the machine with the `n * d` x0hat rows answering the
     /// last demand.
     fn resume(&mut self, x0: &[f64], exec: RoundExec) -> Result<()>;
+
+    /// Stage the current demand directly into `arena` row ranges and
+    /// return the reserved span, or `None` when the machine is done
+    /// (fetch the final sample via `poll`). The default shim routes
+    /// through `poll` + a copy; machines override it to write in place.
+    fn poll_into(&mut self, arena: &mut RoundArena)
+                 -> Result<Option<ArenaSpan>> {
+        match self.poll()? {
+            SamplerPoll::Done(_) => Ok(None),
+            SamplerPoll::Demand(dem) => Ok(Some(arena.push_demand(&dem)?)),
+        }
+    }
+
+    /// Resume from the arena's output region for `span` (the rows
+    /// reserved by the matching `poll_into`).
+    fn resume_from(&mut self, arena: &RoundArena, span: ArenaSpan,
+                   exec: RoundExec) -> Result<()> {
+        self.resume(arena.out_rows(span), exec)
+    }
 }
 
 /// Drive a machine to completion against an arbitrary row evaluator
 /// (`eval(ys, ts, cond, n, out)`), measuring per-round latency and
-/// reporting `pool`-derived shard counts. This is the substrate both
-/// for [`drive`] (a `DenoiseModel` evaluator) and for samplers whose
-/// evaluator is not a `DenoiseModel` (the SL oracle in
-/// `asd::sl_engine`).
+/// reporting `pool`-derived shard counts. Runs on the arena data plane
+/// (one arena for the whole drive). This is the substrate for samplers
+/// whose evaluator is not a `DenoiseModel` (the SL oracle in
+/// `asd::sl_engine`); [`drive`] covers the `DenoiseModel` case.
 pub fn drive_with<F>(machine: &mut dyn StepSampler, d: usize,
-                     pool: PoolConfig, mut eval: F) -> Result<Vec<f64>>
+                     cond_dim: usize, pool: PoolConfig, mut eval: F)
+                     -> Result<Vec<f64>>
 where
     F: FnMut(&[f64], &[f64], &[f64], usize, &mut [f64]) -> Result<()>,
 {
-    let mut out: Vec<f64> = Vec::new();
+    let mut arena = RoundArena::new(d, cond_dim);
     loop {
-        let n;
-        let t0;
-        match machine.poll()? {
-            SamplerPoll::Done(y0) => return Ok(y0.to_vec()),
-            SamplerPoll::Demand(dem) => {
-                n = dem.n;
-                let need = n * d;
-                if out.len() < need {
-                    out.resize(need, 0.0);
-                }
-                t0 = std::time::Instant::now();
-                eval(dem.ys, dem.ts, dem.cond, n, &mut out[..need])?;
-            }
+        arena.begin_round();
+        let span = match machine.poll_into(&mut arena)? {
+            None => return finished_sample(&mut *machine),
+            Some(span) => span,
+        };
+        let t0 = std::time::Instant::now();
+        {
+            let (ys, ts, cond, n, out) = arena.round_io();
+            eval(ys, ts, cond, n, out)?;
         }
         let exec = RoundExec {
             latency_s: t0.elapsed().as_secs_f64(),
-            shards: pool.shards_for(n),
+            shards: pool.shards_for(span.rows),
         };
-        machine.resume(&out[..n * d], exec)?;
+        machine.resume_from(&arena, span, exec)?;
     }
 }
 
 /// Drive a machine to completion against a `DenoiseModel` (solo
-/// execution — one request, one machine, one model call per round).
+/// execution — one request, one machine, one fused `denoise_round` per
+/// round, on the same arena path the serving lanes use).
 pub fn drive(machine: &mut dyn StepSampler, model: &Arc<dyn DenoiseModel>,
              pool: PoolConfig) -> Result<Vec<f64>> {
-    let d = model.dim();
-    drive_with(machine, d, pool,
-               |ys, ts, cond, n, out| model.denoise_batch(ys, ts, cond, n, out))
+    let mut arena = RoundArena::for_model(model.as_ref());
+    loop {
+        arena.begin_round();
+        let span = match machine.poll_into(&mut arena)? {
+            None => return finished_sample(&mut *machine),
+            Some(span) => span,
+        };
+        let t0 = std::time::Instant::now();
+        model.denoise_round(&mut arena)?;
+        let exec = RoundExec {
+            latency_s: t0.elapsed().as_secs_f64(),
+            shards: pool.shards_for(span.rows),
+        };
+        machine.resume_from(&arena, span, exec)?;
+    }
+}
+
+/// Fetch the final sample after `poll_into` reported done.
+fn finished_sample(machine: &mut dyn StepSampler) -> Result<Vec<f64>> {
+    match machine.poll()? {
+        SamplerPoll::Done(y0) => Ok(y0.to_vec()),
+        SamplerPoll::Demand(_) => {
+            anyhow::bail!("machine demanded rows after reporting done")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -148,7 +378,8 @@ mod tests {
     use super::*;
 
     /// Two-round toy machine: demands one row, then its double, then is
-    /// done with the sum — exercises the poll/resume protocol itself.
+    /// done with the sum — exercises the poll/resume protocol itself
+    /// (and, through the default shims, the arena protocol).
     struct Toy {
         stage: usize,
         ys: Vec<f64>,
@@ -183,17 +414,21 @@ mod tests {
         }
     }
 
-    #[test]
-    fn drive_with_runs_machine_to_done() {
-        let mut m = Toy {
+    fn toy() -> Toy {
+        Toy {
             stage: 0,
             ys: vec![1.0, 2.0],
             ts: vec![0.0],
             acc: vec![0.0, 0.0],
             execs: vec![],
-        };
+        }
+    }
+
+    #[test]
+    fn drive_with_runs_machine_to_done() {
+        let mut m = toy();
         // evaluator: identity on ys
-        let y0 = drive_with(&mut m, 2, PoolConfig::default(),
+        let y0 = drive_with(&mut m, 2, 0, PoolConfig::default(),
                             |ys, _ts, _c, n, out| {
                                 out[..n * 2].copy_from_slice(&ys[..n * 2]);
                                 Ok(())
@@ -230,16 +465,98 @@ mod tests {
 
     #[test]
     fn drive_surfaces_eval_errors() {
-        let mut m = Toy {
-            stage: 0,
-            ys: vec![1.0, 1.0],
-            ts: vec![0.0],
-            acc: vec![0.0, 0.0],
-            execs: vec![],
-        };
-        let err = drive_with(&mut m, 2, PoolConfig::default(),
+        let mut m = toy();
+        let err = drive_with(&mut m, 2, 0, PoolConfig::default(),
                              |_, _, _, _, _| anyhow::bail!("injected"))
             .unwrap_err();
         assert!(err.to_string().contains("injected"));
+    }
+
+    #[test]
+    fn arena_reserve_lays_rows_out_contiguously() {
+        let mut a = RoundArena::new(3, 2);
+        a.begin_round();
+        let (s1, rows1) = a.reserve(2);
+        rows1.ys.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        rows1.ts.copy_from_slice(&[9.0, 8.0]);
+        rows1.cond.copy_from_slice(&[0.1, 0.2, 0.3, 0.4]);
+        let (s2, rows2) = a.reserve(1);
+        rows2.ys.copy_from_slice(&[7.0, 8.0, 9.0]);
+        rows2.ts[0] = 7.0;
+        rows2.cond.copy_from_slice(&[0.5, 0.6]);
+        assert_eq!(s1, ArenaSpan { off: 0, rows: 2 });
+        assert_eq!(s2, ArenaSpan { off: 2, rows: 1 });
+        assert_eq!(a.rows(), 3);
+        let (ys, ts, cond, n, out) = a.round_io();
+        assert_eq!(n, 3);
+        assert_eq!(ys, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(ts, &[9.0, 8.0, 7.0]);
+        assert_eq!(cond, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        assert_eq!(out.len(), 9);
+        out.copy_from_slice(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.out_rows(s2), &[6.0, 7.0, 8.0]);
+        assert_eq!(a.out_rows(s1), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn arena_reuses_capacity_across_rounds() {
+        let mut a = RoundArena::new(2, 0);
+        a.begin_round();
+        let _ = a.reserve(8);
+        let cap = (a.ys.capacity(), a.ts.capacity(), a.out.capacity());
+        for _ in 0..5 {
+            a.begin_round();
+            let _ = a.reserve(3);
+            let _ = a.reserve(5);
+            assert_eq!(a.rows(), 8);
+        }
+        // shrinking/regrowing rounds never reallocate past high water
+        assert_eq!(cap,
+                   (a.ys.capacity(), a.ts.capacity(), a.out.capacity()));
+    }
+
+    #[test]
+    fn push_demand_validates_shapes() {
+        let mut a = RoundArena::new(2, 1);
+        a.begin_round();
+        let bad = DenoiseDemand { ys: &[1.0], ts: &[1.0], cond: &[0.0],
+                                  n: 1 };
+        assert!(a.push_demand(&bad).is_err());
+        let good = DenoiseDemand { ys: &[1.0, 2.0], ts: &[3.0],
+                                   cond: &[0.5], n: 1 };
+        let span = a.push_demand(&good).unwrap();
+        assert_eq!(span, ArenaSpan { off: 0, rows: 1 });
+        let (ys, ts, cond, n, _) = a.round_io();
+        assert_eq!((ys, ts, cond, n),
+                   (&[1.0, 2.0][..], &[3.0][..], &[0.5][..], 1));
+    }
+
+    #[test]
+    fn default_poll_into_shim_matches_poll() {
+        let mut m = toy();
+        let mut a = RoundArena::new(2, 0);
+        a.begin_round();
+        let span = m.poll_into(&mut a).unwrap().unwrap();
+        assert_eq!(span, ArenaSpan { off: 0, rows: 1 });
+        {
+            let (ys, ts, _c, n, out) = a.round_io();
+            assert_eq!(ys, &[1.0, 2.0]);
+            assert_eq!(ts, &[0.0]);
+            out[..n * 2].copy_from_slice(&ys[..n * 2]);
+        }
+        m.resume_from(&a, span, RoundExec::inline()).unwrap();
+        assert_eq!(m.acc, vec![1.0, 2.0]);
+        assert_eq!(m.ys, vec![2.0, 4.0]);
+        // done: poll_into returns None, poll still yields the sample
+        a.begin_round();
+        let span = m.poll_into(&mut a).unwrap().unwrap();
+        {
+            let (ys, _t, _c, n, out) = a.round_io();
+            out[..n * 2].copy_from_slice(&ys[..n * 2]);
+        }
+        m.resume_from(&a, span, RoundExec::inline()).unwrap();
+        a.begin_round();
+        assert!(m.poll_into(&mut a).unwrap().is_none());
+        assert!(matches!(m.poll().unwrap(), SamplerPoll::Done(_)));
     }
 }

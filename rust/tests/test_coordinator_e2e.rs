@@ -13,7 +13,7 @@ fn coordinator() -> Coordinator {
         max_batch: 4,
         enable_batching: true,
         ..Default::default()
-    });
+    }).unwrap();
     c.register_model("gmm2d", rt.model("gmm2d").unwrap());
     c
 }

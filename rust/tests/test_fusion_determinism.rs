@@ -16,7 +16,7 @@ use std::sync::Arc;
 use asd::asd::{AsdConfig, AsdEngine};
 use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
 use asd::ddpm::SequentialSampler;
-use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle};
+use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle, NativeMlp, VariantInfo};
 use asd::picard::{PicardConfig, PicardSampler};
 use asd::runtime::pool::PoolConfig;
 
@@ -84,7 +84,7 @@ fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
             enable_batching: true,
             pool: PoolConfig { pool_size, shard_min: 1 },
             ..Default::default()
-        });
+        }).unwrap();
         c.register_model("gmm", model.clone());
         let mut rxs = Vec::new();
         for &(spec, seed) in &specs {
@@ -108,6 +108,91 @@ fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
     }
 }
 
+/// A toy in-memory MLP variant (NativeMlp GEMM backend) for the
+/// mixed-variant burst: same layout the benches use, pseudo-random
+/// weights, K = 40.
+fn toy_mlp() -> Arc<dyn DenoiseModel> {
+    let info = VariantInfo::toy("toy", 3, 0, 16, 1, 40);
+    let n_w = info.weights_len();
+    let flat: Vec<f32> =
+        (0..n_w).map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5).collect();
+    NativeMlp::from_flat(&info, &flat).unwrap()
+}
+
+#[test]
+fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
+    // acceptance criterion: a concurrent two-variant burst (analytic
+    // GMM oracle + toy NativeMlp, all three sampler kinds) must be
+    // bit-identical to solo execution at pool sizes 1/2/8, AND both
+    // variant lanes must fuse rows (no lane served per-request, no
+    // cross-variant head-of-line blocking)
+    let gmm = model();
+    let mlp = toy_mlp();
+    let variants: [(&str, &Arc<dyn DenoiseModel>); 2] =
+        [("gmm", &gmm), ("toy", &mlp)];
+    // 6 requests per variant, rotating sampler kinds, interleaved
+    let burst: Vec<(usize, SamplerSpec, u64)> = (0..12u64)
+        .map(|i| {
+            let spec = match (i / 2) % 3 {
+                0 => SamplerSpec::Sequential,
+                1 => SamplerSpec::Asd(8),
+                _ => SamplerSpec::Picard(8, 1e-6),
+            };
+            ((i % 2) as usize, spec, 3000 + i)
+        })
+        .collect();
+    let want: Vec<Vec<u64>> = burst.iter()
+        .map(|&(v, spec, seed)| {
+            bits(&solo_sample(variants[v].1, spec, seed))
+        })
+        .collect();
+
+    for pool_size in POOL_SIZES {
+        let c = Coordinator::new(ServerConfig {
+            workers: 2,
+            max_batch: 16,
+            enable_batching: true,
+            pool: PoolConfig { pool_size, shard_min: 1 },
+            ..Default::default()
+        }).unwrap();
+        for (name, m) in variants {
+            c.register_model(name, (*m).clone());
+        }
+        let rxs: Vec<_> = burst.iter()
+            .map(|&(v, spec, seed)| {
+                c.submit(Request {
+                    id: 0,
+                    variant: variants[v].0.into(),
+                    sampler: spec,
+                    seed,
+                    cond: vec![],
+                }).1
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "pool={pool_size} req {i}: {:?}",
+                    r.error);
+            assert_eq!(bits(&r.sample), want[i],
+                       "pool_size={pool_size} request {i} \
+                        (variant {}, {:?}) changed bits vs solo run",
+                       variants[burst[i].0].0, burst[i].1);
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed, 12);
+        for (name, _) in variants {
+            let lane = m.lane(name)
+                .unwrap_or_else(|| panic!("no lane '{name}'"));
+            assert!(lane.fused_rounds > 0,
+                    "pool={pool_size} lane '{name}' never ran a round");
+            assert!(lane.fused_rows_per_round > 1.0,
+                    "pool={pool_size} lane '{name}' served per-request \
+                     (rows/round {})", lane.fused_rows_per_round);
+        }
+        c.shutdown();
+    }
+}
+
 #[test]
 fn fused_burst_actually_fuses_rows_per_round() {
     // acceptance criterion: a mixed burst through one worker must be
@@ -118,7 +203,7 @@ fn fused_burst_actually_fuses_rows_per_round() {
         max_batch: 16,
         enable_batching: true,
         ..Default::default()
-    });
+    }).unwrap();
     c.register_model("gmm", model);
     let rxs: Vec<_> = burst_specs().into_iter()
         .map(|(spec, seed)| {
@@ -153,7 +238,7 @@ fn solo_sized_group_matches_dedicated_engines_repeatedly() {
         max_batch: 8,
         enable_batching: true,
         ..Default::default()
-    });
+    }).unwrap();
     c.register_model("gmm", model.clone());
     for &(spec, seed) in &burst_specs()[..3] {
         let (_, rx) = c.submit(Request {
@@ -197,7 +282,7 @@ fn conditional_requests_fuse_bit_identically() {
         max_batch: 8,
         enable_batching: true,
         ..Default::default()
-    });
+    }).unwrap();
     c.register_model("gmm", model);
     let rxs: Vec<_> = (0..6u64)
         .map(|i| {

@@ -1,5 +1,5 @@
 //! Property-based sweeps over the pure substrates (no PJRT needed):
-//! JSON roundtrips, quality-metric axioms, batcher invariants under
+//! JSON roundtrips, quality-metric axioms, lane-queue invariants under
 //! random queues, Picard-vs-sequential convergence, schedule identities
 //! at random K, GEMM-vs-naive-reference parity (including the sharded
 //! kernel's bitwise pool invariance and the native MLP's GEMM batch
