@@ -11,8 +11,17 @@
 //!   dominate the row-at-a-time path); `denoise_batch` (GEMM pipeline
 //!   + workspace + temb cache + vectorized SiLU) must beat
 //!   `denoise_batch_ref` by >= 4x rows/s at B >= 64.
+//! * **GEMM shape grid** — ref / v1 / packed / packed+2D-sharded over
+//!   square training-ish shapes and small-M serve shapes (m ∈ {4, 16,
+//!   64}); emits `BENCH_gemm.json` with GFLOP/s per kernel generation.
 //! * **ASD sweep** — a wide random GMM oracle; outputs are asserted
 //!   bit-identical across pool sizes (the pool buys wall-clock only).
+//!
+//! Hard perf floors (the `>= 4x` GEMM-vs-scalar assert, the fused-rows
+//! assert, the small-M packed-2D gain) read their thresholds from
+//! `ASD_BENCH_MIN_SPEEDUP` / `ASD_BENCH_MIN_FUSED_ROWS` /
+//! `ASD_BENCH_MIN_GEMM_GAIN` with the historical values as defaults,
+//! so shared CI runners can relax them without editing the bench.
 //!
 //! Run: cargo bench --bench bench_parallel
 
@@ -23,8 +32,9 @@ use asd::ddpm::BatchedSequentialSampler;
 use asd::exp::serve_bench::{bench_coordinator, bench_coordinator_json,
                             format_coord_rows};
 use asd::exp::speedup::{bench_parallel_json, format_pool_rows,
-                        outputs_bit_identical, sweep_pool_sizes,
-                        write_bench_json, ForwardBenchRow};
+                        gemm_serve_shapes, outputs_bit_identical,
+                        run_gemm_grid, sweep_pool_sizes, write_bench_json,
+                        ForwardBenchRow, GemmBenchRow};
 use asd::math::gemm::{gemm_bias_act, gemm_sharded, Epilogue};
 use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle, NativeMlp, VariantInfo,
                  Workspace};
@@ -42,6 +52,13 @@ fn toy_mlp(d: usize, hidden: usize, blocks: usize, k_steps: usize)
         })
         .collect();
     NativeMlp::from_flat(&info, &flat).expect("toy variant")
+}
+
+/// Acceptance-floor override for shared/noisy CI runners: thresholds
+/// come from the environment with the historical values as defaults,
+/// so a loaded runner can relax them without editing the bench.
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -129,6 +146,33 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
 
+    // --- GEMM shape grid: ref / v1 / packed / packed+2D-sharded -------
+    // square training-ish shapes AND the small-M serve shapes where the
+    // 2-D (M×N) split is what keeps the pool busy. Emits BENCH_gemm.json
+    // (every kernel's output is bit-checked against gemm_ref inside the
+    // grid runner before its timing counts).
+    let tile_shards = default_threads().clamp(1, 8);
+    println!("[GEMM shape grid, tile_shards={tile_shards}]");
+    let gemm_rows = run_gemm_grid(tile_shards, 2, 8,
+                                  std::path::Path::new("BENCH_gemm.json"))?;
+    println!();
+    // worst small-M (m <= 16) packed2d-vs-v1 ratio, asserted at the end
+    let gflops = |rows: &[GemmBenchRow], m: usize, kernel: &str| -> f64 {
+        rows.iter()
+            .find(|r| r.m == m && r.kernel == kernel)
+            .map(|r| r.gflops)
+            .unwrap_or(0.0)
+    };
+    let small_m_gain = gemm_serve_shapes()
+        .iter()
+        .filter(|(m, _, _)| *m <= 16)
+        .map(|&(m, _, _)| {
+            gflops(&gemm_rows, m, "packed2d")
+                / gflops(&gemm_rows, m, "v1").max(1e-12)
+        })
+        .fold(f64::INFINITY, f64::min);
+    println!("worst small-M packed2d/v1 gain: {small_m_gain:.2}x\n");
+
     // --- ASD: verify rounds sharded across the pool -------------------
     let k = 150;
     let theta = 16;
@@ -167,9 +211,12 @@ fn main() -> anyhow::Result<()> {
         write_bench_json(coord_path, &doc)?;
         println!("wrote {}", coord_path.display());
         // the 64-way burst must actually fuse rows across requests
+        // (floor overridable for shared runners — see env_f64)
         let fused = rows.last().unwrap().fused_rows_per_round;
-        assert!(fused > 1.0,
-                "concurrency 64 served per-request (rows/round {fused:.2})");
+        let min_fused = env_f64("ASD_BENCH_MIN_FUSED_ROWS", 1.0);
+        assert!(fused > min_fused,
+                "concurrency 64 served per-request (rows/round {fused:.2}, \
+                 floor {min_fused:.2})");
     }
 
     // --- lockstep batched sequential: one sharded call per step -------
@@ -190,10 +237,22 @@ fn main() -> anyhow::Result<()> {
                  baseline_ms / st.mean_ms.max(1e-12));
     }
 
-    // acceptance floor, checked last so every section above ran and
-    // the JSON artifact is already on disk whatever happens here
-    assert!(speedup_b64 >= 4.0,
-            "GEMM forward must be >= 4x the scalar ref at B=64, got \
-             {speedup_b64:.2}x (see BENCH_parallel.json)");
+    // acceptance floors, checked last so every section above ran and
+    // the JSON artifacts are already on disk whatever happens here.
+    // Thresholds read from the environment (defaults keep the
+    // historical values) so shared CI runners can relax them.
+    let min_speedup = env_f64("ASD_BENCH_MIN_SPEEDUP", 4.0);
+    assert!(speedup_b64 >= min_speedup,
+            "GEMM forward must be >= {min_speedup:.2}x the scalar ref at \
+             B=64, got {speedup_b64:.2}x (see BENCH_parallel.json)");
+    // packed+2D must beat the v1 kernel at small-M serve shapes once
+    // the pool is real (>= 4 workers); floor 1.0 = parity, overridable
+    if tile_shards >= 4 {
+        let min_gain = env_f64("ASD_BENCH_MIN_GEMM_GAIN", 1.0);
+        assert!(small_m_gain >= min_gain,
+                "packed+2D GEMM must reach {min_gain:.2}x the v1 kernel \
+                 at small-M serve shapes with {tile_shards} tile shards, \
+                 got {small_m_gain:.2}x (see BENCH_gemm.json)");
+    }
     Ok(())
 }

@@ -129,7 +129,6 @@ struct ActiveRequest {
 
 pub(crate) struct FusionScheduler {
     model: Arc<dyn DenoiseModel>,
-    pool: PoolConfig,
     /// the lane label this scheduler reports per-lane metrics under
     lane: String,
     active: Vec<ActiveRequest>,
@@ -145,14 +144,19 @@ pub(crate) struct FusionScheduler {
 }
 
 impl FusionScheduler {
-    /// `model` should already be `ParallelModel`-wrapped with `pool` so
-    /// fused rounds shard on the global worker pool.
-    pub(crate) fn new(model: Arc<dyn DenoiseModel>, pool: PoolConfig,
-                      lane: &str) -> FusionScheduler {
-        let arena = RoundArena::for_model(model.as_ref());
+    /// `model` should already be `ParallelModel`-wrapped so fused
+    /// rounds shard on the global worker pool (reported occupancy
+    /// comes from `model.round_shards`). `arena_byte_cap`
+    /// bounds the lane arena's grow-to-high-water buffers: once the
+    /// lane drains, a footprint past the cap is released instead of
+    /// pinning a burst's memory forever (0 = unbounded, the pre-cap
+    /// behavior).
+    pub(crate) fn new(model: Arc<dyn DenoiseModel>, lane: &str,
+                      arena_byte_cap: usize) -> FusionScheduler {
+        let mut arena = RoundArena::for_model(model.as_ref());
+        arena.set_byte_cap(arena_byte_cap);
         FusionScheduler {
             model,
-            pool,
             lane: lane.to_string(),
             active: Vec::new(),
             arena,
@@ -238,6 +242,11 @@ impl FusionScheduler {
                 }
             }
         }
+        if self.active.is_empty() {
+            // lane drained: release an over-cap burst footprint (no-op
+            // while under the byte cap or uncapped)
+            self.arena.shrink_to_cap();
+        }
         completed
     }
 
@@ -258,7 +267,10 @@ impl FusionScheduler {
             return;
         }
         let t0 = Instant::now();
-        let shards = self.pool.shards_for(self.arena.rows());
+        // the model's own routing decision (row shards, or the 2-D
+        // tile budget for small-M tiled rounds) — not shards_for,
+        // which under-reports occupancy for tiled rounds
+        let shards = self.model.round_shards(self.arena.rows());
         let outcome = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
                 self.model.denoise_round(&mut self.arena)
@@ -292,7 +304,9 @@ impl FusionScheduler {
         let exec = self.round.take()
             .expect("finish_round without execute_round");
         metrics.on_fused_round(&self.lane, self.arena.rows(),
-                               self.spans.len(), exec.shards);
+                               self.spans.len(), exec.shards,
+                               self.arena.high_water_bytes()
+                                   .max(self.arena.bytes()));
         // Failures are answered immediately but removed only after the
         // loop, so the span indices stay valid throughout.
         let mut failed: Vec<usize> = Vec::new();
@@ -400,8 +414,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model.clone(),
-                                             PoolConfig::default(), "gmm");
+        let mut sched = FusionScheduler::new(model.clone(), "gmm", 0);
         let (j1, rx1) = queued("gmm", SamplerSpec::Sequential, 5);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 6);
         sched.admit(j1, &metrics);
@@ -442,8 +455,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, PoolConfig::default(),
-                                             "gmm");
+        let mut sched = FusionScheduler::new(model, "gmm", 0);
         let (j1, rx1) = queued("gmm", SamplerSpec::Asd(8), 1);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 2);
         let (j3, rx3) = queued("gmm", SamplerSpec::Picard(8, 1e-6), 3);
@@ -474,12 +486,36 @@ mod tests {
     }
 
     #[test]
+    fn drained_lane_releases_an_over_cap_arena() {
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 15, false);
+        let metrics = Metrics::default();
+        // a 1-byte cap: any staged round overflows it, so the drain
+        // must release the buffers entirely
+        let mut sched = FusionScheduler::new(model, "gmm", 1);
+        let (j, rx) = queued("gmm", SamplerSpec::Sequential, 4);
+        sched.admit(j, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 100, "failed to drain");
+        }
+        assert!(rx.recv().unwrap().error.is_none());
+        assert_eq!(sched.arena.bytes(), 0,
+                   "drained lane kept an over-cap arena");
+        // the burst footprint reached metrics before the release
+        let hw = metrics.snapshot().lane("gmm").unwrap()
+            .arena_high_water_bytes;
+        assert!(hw > 0, "lane high-water gauge never recorded");
+    }
+
+    #[test]
     fn bad_conditioning_is_answered_at_admission() {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, PoolConfig::default(),
-                                             "gmm");
+        let mut sched = FusionScheduler::new(model, "gmm", 0);
         let (tx, rx) = channel();
         sched.admit(QueuedJob {
             request: Request {
@@ -505,8 +541,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, PoolConfig::default(),
-                                             "gmm");
+        let mut sched = FusionScheduler::new(model, "gmm", 0);
         let (j, rx) = queued("gmm", SamplerSpec::Sequential, 9);
         sched.admit(j, &metrics);
         let mut rounds = 0usize;

@@ -56,14 +56,16 @@ pub(crate) struct Lane {
 impl Lane {
     /// Build the lane for `variant`, snapshotting the model `Arc` once
     /// — round execution never touches the registry again.
+    /// `arena_byte_cap` bounds the lane arena's burst footprint
+    /// (`ServerConfig::arena_byte_cap`; 0 = unbounded).
     pub(crate) fn new(variant: &str, model: Arc<dyn DenoiseModel>,
-                      pool: PoolConfig) -> Lane {
+                      pool: PoolConfig, arena_byte_cap: usize) -> Lane {
         // one ParallelModel wrapper per lane: fused rounds shard on the
         // global pool exactly like solo engines' batched rounds
         let model = ParallelModel::wrap(model, pool);
         Lane {
             variant: variant.to_string(),
-            sched: FusionScheduler::new(model, pool, variant),
+            sched: FusionScheduler::new(model, variant, arena_byte_cap),
             counted: false,
         }
     }
@@ -376,7 +378,7 @@ mod tests {
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         // an idle parked lane is NOT flagged
         st.release(Box::new(Lane::new("idle", model.clone(),
-                                      PoolConfig::default())));
+                                      PoolConfig::default(), 0)));
         let mut out = Vec::new();
         st.parked_nonidle(&mut out);
         assert!(out.is_empty());
@@ -384,7 +386,7 @@ mod tests {
         // panic-recovery path)
         let metrics = Metrics::default();
         let mut lane = Box::new(Lane::new("busy", model,
-                                          PoolConfig::default()));
+                                          PoolConfig::default(), 0));
         let mut batch = vec![job("busy", 1)];
         lane.admit(&mut batch, &metrics);
         assert!(!lane.is_idle());
@@ -416,7 +418,8 @@ mod tests {
         assert!(matches!(st.claim("a"), LaneClaim::Busy));
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
-        let lane = Box::new(Lane::new("a", model, PoolConfig::default()));
+        let lane = Box::new(Lane::new("a", model, PoolConfig::default(),
+                                      0));
         st.release(lane);
         // parked lane is claimable exactly once
         assert!(matches!(st.claim("a"), LaneClaim::Claimed(_)));

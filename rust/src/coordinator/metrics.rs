@@ -29,6 +29,9 @@ struct LaneAgg {
     /// fused round this lane executed
     first_round_s: f64,
     last_round_s: f64,
+    /// largest round-arena footprint (staging buffers + GEMM
+    /// workspace) this lane ever reported, bytes
+    arena_high_water_bytes: u64,
 }
 
 #[derive(Debug, Default)]
@@ -96,6 +99,10 @@ pub struct LaneSnapshot {
     /// round — with `last_round_ms` this is the lane's activity window
     pub first_round_ms: f64,
     pub last_round_ms: f64,
+    /// high-water bytes of this lane's round arena (staging buffers +
+    /// GEMM workspace) — what a burst leaves resident until the lane
+    /// drains past `ServerConfig::arena_byte_cap` and releases
+    pub arena_high_water_bytes: u64,
 }
 
 impl LaneSnapshot {
@@ -157,9 +164,10 @@ impl Metrics {
     }
 
     /// One fused round on `lane`: `rows` total rows from `requests`
-    /// in-flight requests, executed as `shards` pool shards.
+    /// in-flight requests, executed as `shards` pool shards while the
+    /// lane's round arena held `arena_bytes` at its high-water mark.
     pub fn on_fused_round(&self, lane: &str, rows: usize, requests: usize,
-                          shards: usize) {
+                          shards: usize, arena_bytes: usize) {
         let now_s = self.started.elapsed().as_secs_f64();
         let mut m = self.inner.lock().unwrap();
         m.fused_rounds += 1;
@@ -175,6 +183,8 @@ impl Metrics {
         agg.fused_rows += rows as u64;
         agg.requests.push(requests as f64);
         agg.shards.push(shards as f64);
+        agg.arena_high_water_bytes =
+            agg.arena_high_water_bytes.max(arena_bytes as u64);
     }
 
     /// A request entered `lane`'s fused scheduler after waiting
@@ -276,6 +286,7 @@ impl Metrics {
                     admitted: a.admitted,
                     first_round_ms: a.first_round_s * 1e3,
                     last_round_ms: a.last_round_s * 1e3,
+                    arena_high_water_bytes: a.arena_high_water_bytes,
                 })
                 .collect(),
         }
@@ -326,8 +337,8 @@ mod tests {
         assert_eq!(s0.fused_rounds, 0);
         assert_eq!(s0.fused_rows_per_round, 0.0);
         assert_eq!(s0.fused_occupancy, 1.0);
-        m.on_fused_round("a", 6, 3, 2);
-        m.on_fused_round("a", 2, 1, 1);
+        m.on_fused_round("a", 6, 3, 2, 4096);
+        m.on_fused_round("a", 2, 1, 1, 1024);
         m.on_reject();
         let s = m.snapshot();
         assert_eq!(s.fused_rounds, 2);
@@ -354,9 +365,9 @@ mod tests {
         m.on_lane_admit("a", 0.002);
         m.on_lane_admit("a", 0.004);
         m.on_lane_admit("b", 0.010);
-        m.on_fused_round("a", 6, 2, 2);
-        m.on_fused_round("a", 4, 2, 1);
-        m.on_fused_round("b", 3, 1, 1);
+        m.on_fused_round("a", 6, 2, 2, 2048);
+        m.on_fused_round("a", 4, 2, 1, 4096);
+        m.on_fused_round("b", 3, 1, 1, 512);
         let s = m.snapshot();
         assert_eq!(s.lanes.len(), 2);
         let a = s.lane("a").unwrap();
@@ -369,6 +380,9 @@ mod tests {
         assert_eq!(a.admitted, 2);
         assert_eq!(b.fused_rounds, 1);
         assert_eq!(b.admitted, 1);
+        // arena high water is a per-lane max gauge
+        assert_eq!(a.arena_high_water_bytes, 4096);
+        assert_eq!(b.arena_high_water_bytes, 512);
         // global aggregates still cover both lanes
         assert_eq!(s.fused_rounds, 3);
         // both lanes ran rounds; their windows are well-formed
@@ -380,9 +394,9 @@ mod tests {
     #[test]
     fn lane_window_overlap_detects_concurrent_progress() {
         let m = Metrics::default();
-        m.on_fused_round("a", 1, 1, 1);
-        m.on_fused_round("b", 1, 1, 1);
-        m.on_fused_round("a", 1, 1, 1);
+        m.on_fused_round("a", 1, 1, 1, 0);
+        m.on_fused_round("b", 1, 1, 1, 0);
+        m.on_fused_round("a", 1, 1, 1, 0);
         let s = m.snapshot();
         let a = s.lane("a").unwrap();
         let b = s.lane("b").unwrap();

@@ -40,6 +40,13 @@ pub struct ServerConfig {
     /// row-independent models; HLO models may shift within f32 padding
     /// tolerance (see `model::parallel`).
     pub pool: PoolConfig,
+    /// byte budget per lane for the round arena + GEMM workspace
+    /// (which grow to the high-water round size): once a lane drains,
+    /// a footprint past this cap is released instead of pinning a
+    /// burst's memory for the coordinator's lifetime. 0 = unbounded
+    /// (the pre-cap behavior). Surfaced per lane as
+    /// `LaneSnapshot::arena_high_water_bytes`.
+    pub arena_byte_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -50,6 +57,7 @@ impl Default for ServerConfig {
             enable_batching: true,
             max_queue_depth: 1024,
             pool: PoolConfig::default(),
+            arena_byte_cap: 64 << 20, // 64 MiB per lane
         }
     }
 }
@@ -384,7 +392,8 @@ fn gather(shared: &Shared, st: &mut LaneState, held: &mut Vec<Box<Lane>>,
                     std::panic::AssertUnwindSafe(|| {
                         shared.models.lock().unwrap().get(variant).cloned()
                             .map(|m| Box::new(Lane::new(
-                                variant, m, shared.config.pool)))
+                                variant, m, shared.config.pool,
+                                shared.config.arena_byte_cap)))
                     }));
                 match built {
                     Ok(Some(lane)) => lane,

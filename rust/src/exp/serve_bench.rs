@@ -215,6 +215,8 @@ fn lane_json(l: &LaneSnapshot) -> Json {
         ("admitted", Json::Num(l.admitted as f64)),
         ("first_round_ms", Json::Num(l.first_round_ms)),
         ("last_round_ms", Json::Num(l.last_round_ms)),
+        ("arena_high_water_bytes",
+         Json::Num(l.arena_high_water_bytes as f64)),
     ])
 }
 
@@ -284,14 +286,16 @@ pub fn format_coord_rows(rows: &[CoordBenchRow]) -> String {
 pub fn format_lanes(lanes: &[LaneSnapshot]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<16} {:>8} {:>12} {:>8} {:>12} {:>18}\n",
+        "{:<16} {:>8} {:>12} {:>8} {:>12} {:>18} {:>12}\n",
         "lane", "rounds", "rows/round", "occup.", "queue ms",
-        "window ms"));
+        "window ms", "arena KiB"));
     for l in lanes {
         out.push_str(&format!(
-            "{:<16} {:>8} {:>12.2} {:>8.2} {:>12.2} {:>8.1}..{:<8.1}\n",
+            "{:<16} {:>8} {:>12.2} {:>8.2} {:>12.2} {:>8.1}..{:<8.1} \
+             {:>12.1}\n",
             l.lane, l.fused_rounds, l.fused_rows_per_round, l.occupancy,
-            l.mean_queue_wait_ms, l.first_round_ms, l.last_round_ms));
+            l.mean_queue_wait_ms, l.first_round_ms, l.last_round_ms,
+            l.arena_high_water_bytes as f64 / 1024.0));
     }
     out
 }

@@ -229,6 +229,190 @@ impl ForwardBenchRow {
     }
 }
 
+/// One GEMM shape-grid measurement for `BENCH_gemm.json`: a single
+/// `(m, n, k)` product timed under one kernel generation.
+///
+/// Kernels: `"ref"` (naive triple loop), `"v1"` (PR-2 cache-blocked
+/// MR-row kernel over row-major B), `"packed"` (prepacked KC×NR panel
+/// kernel, serial), `"packed2d"` (packed kernel 2-D M×N-sharded on the
+/// global pool — `pool_size` carries the tile-shard budget). All four
+/// compute bit-identical outputs; only wall-clock differs.
+#[derive(Debug, Clone)]
+pub struct GemmBenchRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub kernel: String,
+    /// tile-shard budget (1 = serial)
+    pub pool_size: usize,
+    pub mean_ms: f64,
+    /// 2·m·n·k / wall-clock
+    pub gflops: f64,
+}
+
+impl GemmBenchRow {
+    pub fn from_mean_ms(m: usize, n: usize, k: usize, kernel: &str,
+                        pool_size: usize, mean_ms: f64) -> GemmBenchRow {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        GemmBenchRow {
+            m,
+            n,
+            k,
+            kernel: kernel.to_string(),
+            pool_size,
+            mean_ms,
+            gflops: flops / (mean_ms.max(1e-9) * 1e-3) / 1e9,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("m", Json::Num(self.m as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("pool_size", Json::Num(self.pool_size as f64)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("gflops", Json::Num(self.gflops)),
+        ])
+    }
+}
+
+/// Square, training-ish GEMM shapes (big batches; the M dimension
+/// alone fills the pool).
+pub fn gemm_square_shapes() -> Vec<(usize, usize, usize)> {
+    vec![(128, 128, 128), (256, 256, 256)]
+}
+
+/// Small-M serving shapes — the fused-round products where serve-time
+/// rounds are tens of rows against hidden-width weight panels, and the
+/// 2-D (M×N) split is what keeps the pool busy.
+pub fn gemm_serve_shapes() -> Vec<(usize, usize, usize)> {
+    vec![(4, 256, 256), (16, 256, 256), (64, 256, 256)]
+}
+
+/// Time the four kernel generations over a shape grid (bias + SiLU
+/// epilogue — the hidden-layer workload). `tile_shards` is the
+/// `packed2d` shard budget; `warmup`/`iters` feed `util::timer::bench`.
+/// Every kernel's output is checked bit-identical to `gemm_ref` before
+/// its timing is recorded — a wrong-fast kernel must not produce a
+/// plausible-looking row.
+pub fn bench_gemm_grid(shapes: &[(usize, usize, usize)], tile_shards: usize,
+                       warmup: usize, iters: usize)
+                       -> Result<Vec<GemmBenchRow>> {
+    use crate::math::gemm::{gemm_bias_act, gemm_packed_bias_act,
+                            gemm_packed_sharded, gemm_ref, Epilogue,
+                            PackedB};
+    use crate::util::timer::bench;
+
+    // a zero iteration count would panic inside the bench harness's
+    // empty-sample summary; one measured iteration is the floor
+    let iters = iters.max(1);
+    let mut rows = Vec::new();
+    for &(m, n, k) in shapes {
+        let a: Vec<f32> =
+            (0..m * k).map(|i| ((i % 601) as f32 / 601.0) - 0.5).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| ((i % 709) as f32 / 709.0) - 0.5).collect();
+        let bias: Vec<f32> =
+            (0..n).map(|i| ((i % 53) as f32 / 53.0) - 0.5).collect();
+        let pb = PackedB::pack(k, n, &b);
+        let mut c = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
+                 &mut want);
+        let want_bits: Vec<u32> =
+            want.iter().map(|v| v.to_bits()).collect();
+        let check = |c: &[f32], kernel: &str| -> Result<()> {
+            let got: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+            anyhow::ensure!(got == want_bits,
+                            "{kernel} kernel diverged from gemm_ref at \
+                             m={m} n={n} k={k}");
+            Ok(())
+        };
+
+        let st = bench(warmup, iters, || {
+            gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
+                     &mut c);
+        });
+        check(&c, "ref")?;
+        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "ref", 1, st.mean_ms));
+
+        let st = bench(warmup, iters, || {
+            gemm_bias_act(m, n, k, &a, &b, Some(&bias), Epilogue::Silu,
+                          None, &mut c);
+        });
+        check(&c, "v1")?;
+        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "v1", 1, st.mean_ms));
+
+        let st = bench(warmup, iters, || {
+            gemm_packed_bias_act(m, n, k, &a, &pb, Some(&bias),
+                                 Epilogue::Silu, None, &mut c);
+        });
+        check(&c, "packed")?;
+        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "packed", 1,
+                                             st.mean_ms));
+
+        let st = bench(warmup, iters, || {
+            gemm_packed_sharded(m, n, k, &a, &pb, Some(&bias),
+                                Epilogue::Silu, None, &mut c, tile_shards);
+        });
+        check(&c, "packed2d")?;
+        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "packed2d",
+                                             tile_shards, st.mean_ms));
+    }
+    Ok(rows)
+}
+
+/// The full GEMM-grid pipeline shared by `benches/bench_parallel.rs`
+/// and `asd pool --gemm-grid`: run the square + small-M serve shapes,
+/// print the table, write the `BENCH_gemm.json` document to `path`,
+/// and return the rows (for the bench's acceptance floors). One
+/// definition, so the CLI artifact and the bench artifact can never
+/// silently diverge.
+pub fn run_gemm_grid(tile_shards: usize, warmup: usize, iters: usize,
+                     path: &std::path::Path) -> Result<Vec<GemmBenchRow>> {
+    let mut shapes = gemm_square_shapes();
+    shapes.extend(gemm_serve_shapes());
+    let rows = bench_gemm_grid(&shapes, tile_shards, warmup, iters)?;
+    print!("{}", format_gemm_rows(&rows));
+    write_bench_json(path, &bench_gemm_json(&rows, tile_shards))?;
+    println!("wrote {} ({} rows)", path.display(), rows.len());
+    Ok(rows)
+}
+
+/// Assemble the `BENCH_gemm.json` document (GFLOP/s per kernel
+/// generation over the shape grid).
+pub fn bench_gemm_json(rows: &[GemmBenchRow], tile_shards: usize) -> Json {
+    use crate::math::gemm::{KC, MR, NR};
+    Json::obj(vec![
+        ("bench", Json::Str("bench_gemm".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("pool_threads",
+         Json::Num(crate::runtime::pool::default_threads() as f64)),
+        ("tile_shards", Json::Num(tile_shards as f64)),
+        ("mr", Json::Num(MR as f64)),
+        ("nr", Json::Num(NR as f64)),
+        ("kc", Json::Num(KC as f64)),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+/// Render the GEMM grid as a table, one line per (shape, kernel).
+pub fn format_gemm_rows(rows: &[GemmBenchRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<18} {:<10} {:>6} {:>12} {:>10}\n",
+                          "shape (m n k)", "kernel", "tiles", "ms/call",
+                          "GFLOP/s"));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<18} {:<10} {:>6} {:>12.4} {:>10.2}\n",
+            format!("{}x{}x{}", r.m, r.n, r.k), r.kernel, r.pool_size,
+            r.mean_ms, r.gflops));
+    }
+    out
+}
+
 fn pool_row_json(r: &PoolRow) -> Json {
     Json::obj(vec![
         ("pool_size", Json::Num(r.pool_size as f64)),
@@ -365,6 +549,36 @@ mod tests {
             .as_str().unwrap();
         assert_eq!(c.len(), 16);
         assert!(c.chars().all(|ch| ch.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn gemm_grid_measures_all_four_kernels_and_serializes() {
+        // tiny odd shape: correctness (bit-check vs gemm_ref inside
+        // the grid runner) + schema, not speed
+        let rows = bench_gemm_grid(&[(5, 9, 17)], 4, 0, 1).unwrap();
+        assert_eq!(rows.len(), 4);
+        let kernels: Vec<&str> =
+            rows.iter().map(|r| r.kernel.as_str()).collect();
+        assert_eq!(kernels, ["ref", "v1", "packed", "packed2d"]);
+        for r in &rows {
+            assert!(r.gflops > 0.0, "{r:?}");
+            assert_eq!((r.m, r.n, r.k), (5, 9, 17));
+        }
+        assert_eq!(rows[3].pool_size, 4);
+        let doc = bench_gemm_json(&rows, 4);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
+                   "bench_gemm");
+        assert_eq!(back.get("nr").unwrap().as_usize().unwrap(),
+                   crate::math::gemm::NR);
+        assert_eq!(back.get("kc").unwrap().as_usize().unwrap(),
+                   crate::math::gemm::KC);
+        let rs = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs[2].get("kernel").unwrap().as_str().unwrap(),
+                   "packed");
+        let table = format_gemm_rows(&rows);
+        assert!(table.contains("packed2d") && table.contains("GFLOP/s"));
     }
 
     #[test]

@@ -27,7 +27,7 @@ use asd::util::cli::Args;
 
 fn main() {
     let args = Args::from_env(&["verbose", "native", "hlo-kernels", "help",
-                                "analytic"]);
+                                "analytic", "gemm-grid"]);
     if args.flag("verbose") {
         asd::util::log::set_level(asd::util::log::Level::Debug);
     }
@@ -59,13 +59,16 @@ fn print_help() {
          serve  --model <v>         synthetic serving trace; options:\n    \
          [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n    \
          [--pool 1] [--shard-min 2] [--max-batch 8]\n    \
-         [--max-queue-depth 1024] [--analytic] (GMM oracle, no\n    \
+         [--max-queue-depth 1024] [--arena-cap-mb 64] (per-lane round\n    \
+         arena byte cap; 0 = unbounded) [--analytic] (GMM oracle, no\n    \
          artifacts) [--analytic-variants 2] (mixed-variant lanes)\n    \
          [--json BENCH_coordinator.json]\n    \
          [--concurrency 1,8,64] [--bench-requests 32]\n  \
          pool                       pool-size sweep on an analytic GMM;\n    \
          [--d 64] [--components 96] [--k 150] [--theta 16] [--n 4]\n    \
-         [--pool-sizes 1,2,4,8] [--shard-min 2] [--json out.json]\n"
+         [--pool-sizes 1,2,4,8] [--shard-min 2] [--json out.json]\n    \
+         [--gemm-grid] (time ref/v1/packed/packed2d GEMM kernels over\n    \
+         the shape grid) [--gemm-json BENCH_gemm.json] [--gemm-reps 3]\n"
     );
 }
 
@@ -163,6 +166,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shard_min = args.get_usize("shard-min", 2)?;
     let max_batch = args.get_usize("max-batch", 8)?;
     let max_queue_depth = args.get_usize("max-queue-depth", 1024)?;
+    let arena_cap_mb = args.get_usize("arena-cap-mb", 64)?;
 
     let config = ServerConfig {
         workers,
@@ -170,6 +174,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         enable_batching: true,
         max_queue_depth,
         pool: asd::runtime::pool::PoolConfig { pool_size, shard_min },
+        // 0 disables the cap (lanes grow to high water forever)
+        arena_byte_cap: arena_cap_mb << 20,
     };
 
     // --analytic serves GMM posterior-mean oracles: no AOT artifacts
@@ -325,6 +331,22 @@ fn cmd_pool(args: &Args) -> Result<()> {
         asd::exp::speedup::write_bench_json(std::path::Path::new(path),
                                             &doc)?;
         println!("wrote {path}");
+    }
+
+    // --gemm-grid / --gemm-json: time the GEMM kernel generations
+    // (ref / v1 / packed / packed+2D-sharded) over the square + small-M
+    // serve shape grid and emit BENCH_gemm.json — artifact-free, so CI
+    // smokes the packed kernel end to end anywhere the crate builds
+    if args.flag("gemm-grid") || args.get("gemm-json").is_some() {
+        let tile_shards = pool_sizes.iter().copied().max()
+            .unwrap_or_else(asd::runtime::pool::default_threads)
+            .max(1);
+        let reps = args.get_usize("gemm-reps", 3)?.max(1);
+        println!("\nGEMM shape grid (tile_shards={tile_shards}, \
+                  reps={reps}):");
+        let gemm_path = args.get("gemm-json").unwrap_or("BENCH_gemm.json");
+        asd::exp::speedup::run_gemm_grid(
+            tile_shards, 1, reps, std::path::Path::new(gemm_path))?;
     }
     Ok(())
 }

@@ -4,9 +4,24 @@
 //! over a `B`-row batch is one `B×n_in · n_in×n_out` matrix product
 //! with a fused bias + activation (+ residual) epilogue, instead of `B`
 //! scalar `linear()` calls. Written as autovectorizer-friendly plain
-//! Rust (no intrinsics, no unsafe in the serial path): exact-length
-//! subslices let LLVM hoist the bounds checks and vectorize the
-//! `j`-loops.
+//! Rust (no intrinsics, no unsafe in the micro-kernels): exact-length
+//! subslices and fixed-size register tiles let LLVM hoist the bounds
+//! checks and vectorize the `j`-loops.
+//!
+//! Two kernel generations live here:
+//!
+//! * **v1** ([`gemm_bias_act`]) — MR-row register blocking over the
+//!   caller's row-major `B`. Every micro-block re-streams `B` rows from
+//!   memory.
+//! * **v2 packed** ([`PackedB`] + [`gemm_packed_bias_act`]) — BLIS-style
+//!   prepacked panels: `B` is repacked **once** (at model load for MLP
+//!   weights) into `KC×NR` column panels, and an `MR×NR` register-tiled
+//!   micro-kernel accumulates into a local C tile that stays in
+//!   registers for a whole k-panel. Panel loads are contiguous
+//!   exact-`NR` slices, so the hot loop is pure SIMD FMA with no
+//!   strided traffic — the win is largest for the small-M GEMMs of
+//!   fused serving rounds, where v1's bandwidth is wasted re-streaming
+//!   weights.
 //!
 //! **Determinism contract.** For every output element `c[i][j]` the
 //! reduction over `p` (the shared dimension) runs in ascending order
@@ -16,12 +31,17 @@
 //! acc = bias[j];  for p in 0..k { acc += a[i][p] * b[p][j] }
 //! ```
 //!
-//! Row-blocking (MR), k-panel blocking (KC) and M-dimension sharding
-//! ([`gemm_sharded`]) only regroup *independent* output rows — they
-//! never split or reorder a single element's reduction — so results are
-//! bit-identical across tile shapes and pool sizes, and bit-identical
-//! to [`gemm_ref`] (the naive triple loop with the same reduction
-//! order). tests/test_properties.rs enforces both.
+//! Row-blocking (MR), column panels (NR), k-panel blocking (KC) and
+//! 2-D M×N sharding ([`gemm_sharded`], [`gemm_packed_sharded`]) only
+//! regroup *independent* output elements — they never split or reorder
+//! a single element's reduction. The packed micro-kernel loads each
+//! MR×NR C tile into a register tile once per k-panel and replays the
+//! identical ascending-`p` add/mul sequence there before storing back,
+//! which is the same IEEE op stream per element as the in-memory v1
+//! accumulation. So every kernel here is **bit-identical to
+//! [`gemm_ref`]** (the naive triple loop with the same reduction
+//! order), for every tile shape and every shard count.
+//! tests/test_properties.rs enforces all of it.
 //!
 //! The SiLU epilogue uses [`exp_fast`] — a branch-free Cody–Waite +
 //! degree-6-polynomial `expf` the autovectorizer can turn into SIMD —
@@ -36,12 +56,18 @@
 use crate::runtime::pool;
 
 /// Register-tile height: rows of `A` processed together so each loaded
-/// row of `B` is reused MR times from registers.
+/// row (v1) or panel row (packed) of `B` is reused MR times from
+/// registers.
 pub const MR: usize = 4;
 
-/// k-panel width (cache block): the slice of `B` touched per pass stays
-/// resident in L1/L2 while MR-row blocks of `A` stream over it.
-const KC: usize = 256;
+/// Column-panel width of the packed layout: the packed micro-kernel
+/// produces an MR×NR C tile per k-panel pass, reading exact-`NR`
+/// contiguous panel rows (one SIMD-friendly slice per `p`).
+pub const NR: usize = 8;
+
+/// k-panel height (cache block): the slice of `B` touched per pass
+/// stays resident in L1/L2 while MR-row blocks of `A` stream over it.
+pub const KC: usize = 256;
 
 /// Fused epilogue applied to the accumulator after the reduction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,6 +125,109 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + exp_fast(-x))
 }
 
+/// Disjoint-region view of `C` handed to tile shards. Every tile owns
+/// an exclusive rows×columns rectangle no other tile touches, so the
+/// per-row slices materialized through [`CView::row`] never alias —
+/// the same argument the M-sharded v1 made for whole rows, extended to
+/// column ranges (a row-range `&mut` subslice can't express "columns
+/// j0..j1 of rows r0..r1", hence the raw pointer).
+struct CView {
+    ptr: *mut f32,
+    n: usize,
+}
+
+unsafe impl Send for CView {}
+unsafe impl Sync for CView {}
+
+impl CView {
+    /// Columns `j0..j0+jw` of row `i` as an exclusive slice.
+    ///
+    /// SAFETY: the caller must own `[i*n + j0, i*n + j0 + jw)`
+    /// exclusively while the returned slice lives, and the underlying
+    /// buffer must outlive the pool join (both hold for tile shards:
+    /// tiles are pairwise disjoint and the submitting thread blocks
+    /// until every shard finished).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row(&self, i: usize, j0: usize, jw: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.n + j0), jw)
+    }
+}
+
+/// Seed the `[r0, r1) × [j0, j1)` region of C with the bias row (or
+/// zero) — the reduction's starting value, same order as the scalar
+/// path.
+fn region_seed(cv: &CView, r0: usize, r1: usize, j0: usize, j1: usize,
+               bias: Option<&[f32]>) {
+    for i in r0..r1 {
+        // SAFETY: this tile owns the region (see CView::row).
+        let row = unsafe { cv.row(i, j0, j1 - j0) };
+        match bias {
+            Some(bv) => row.copy_from_slice(&bv[j0..j1]),
+            None => row.fill(0.0),
+        }
+    }
+}
+
+/// Apply the fused epilogue (activation + residual add) to the
+/// `[r0, r1) × [j0, j1)` region of C.
+fn region_epilogue(cv: &CView, n: usize, r0: usize, r1: usize, j0: usize,
+                   j1: usize, epi: Epilogue, residual: Option<&[f32]>) {
+    let jw = j1 - j0;
+    for i in r0..r1 {
+        // SAFETY: this tile owns the region (see CView::row).
+        let row = unsafe { cv.row(i, j0, jw) };
+        match (epi, residual) {
+            (Epilogue::Linear, None) => {}
+            (Epilogue::Linear, Some(r)) => {
+                let rrow = &r[i * n + j0..i * n + j1];
+                for (ci, &ri) in row.iter_mut().zip(rrow) {
+                    *ci += ri;
+                }
+            }
+            (Epilogue::Silu, None) => {
+                for ci in row.iter_mut() {
+                    *ci = silu(*ci);
+                }
+            }
+            (Epilogue::Silu, Some(r)) => {
+                let rrow = &r[i * n + j0..i * n + j1];
+                for (ci, &ri) in row.iter_mut().zip(rrow) {
+                    *ci = ri + silu(*ci);
+                }
+            }
+        }
+    }
+}
+
+/// Full bias→accumulate→epilogue computation of one C region against
+/// the *unpacked* row-major `B` (the v1 kernel, generalized to column
+/// ranges so 2-D shards can call it per tile).
+fn unpacked_region(n: usize, k: usize, a: &[f32], b: &[f32],
+                   bias: Option<&[f32]>, epi: Epilogue,
+                   residual: Option<&[f32]>, cv: &CView, r0: usize,
+                   r1: usize, j0: usize, j1: usize) {
+    if r1 <= r0 || j1 <= j0 {
+        return;
+    }
+    region_seed(cv, r0, r1, j0, j1, bias);
+    // accumulate k-panels in ascending order (the determinism contract)
+    let mut p0 = 0usize;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        let mut i0 = r0;
+        while i0 + MR <= r1 {
+            kernel_mr(n, k, a, b, cv, i0, p0, pc, j0, j1);
+            i0 += MR;
+        }
+        while i0 < r1 {
+            kernel_1(n, k, a, b, cv, i0, p0, pc, j0, j1);
+            i0 += 1;
+        }
+        p0 += pc;
+    }
+    region_epilogue(cv, n, r0, r1, j0, j1, epi, residual);
+}
+
 /// C[m×n] = epilogue(bias + A[m×k]·B[k×n]) (+ residual), all row-major.
 ///
 /// * `bias`: length-`n` row added to every output row before the
@@ -124,73 +253,32 @@ pub fn gemm_bias_act(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
     if m == 0 || n == 0 {
         return;
     }
-
-    // seed the accumulators: C rows start at the bias (or zero)
-    match bias {
-        Some(bias) => {
-            for row in c.chunks_exact_mut(n) {
-                row.copy_from_slice(bias);
-            }
-        }
-        None => c.fill(0.0),
-    }
-
-    // accumulate k-panels in ascending order (the determinism contract)
-    let mut p0 = 0usize;
-    while p0 < k {
-        let pc = KC.min(k - p0);
-        let mut i0 = 0usize;
-        while i0 + MR <= m {
-            kernel_mr(n, k, a, b, c, i0, p0, pc);
-            i0 += MR;
-        }
-        while i0 < m {
-            kernel_1(n, k, a, b, c, i0, p0, pc);
-            i0 += 1;
-        }
-        p0 += pc;
-    }
-
-    // epilogue sweep (activation + fused residual add)
-    match (epi, residual) {
-        (Epilogue::Linear, None) => {}
-        (Epilogue::Linear, Some(r)) => {
-            for (ci, &ri) in c.iter_mut().zip(r) {
-                *ci += ri;
-            }
-        }
-        (Epilogue::Silu, None) => {
-            for ci in c.iter_mut() {
-                *ci = silu(*ci);
-            }
-        }
-        (Epilogue::Silu, Some(r)) => {
-            for (ci, &ri) in c.iter_mut().zip(r) {
-                *ci = ri + silu(*ci);
-            }
-        }
-    }
+    let cv = CView { ptr: c.as_mut_ptr(), n };
+    unpacked_region(n, k, a, b, bias, epi, residual, &cv, 0, m, 0, n);
 }
 
-/// MR-row micro-kernel: accumulate `A[i0..i0+MR][p0..p0+pc] · B` into
-/// the MR corresponding C rows. Every row of B loaded once per call is
-/// reused MR times; the j-loops run over exact-length slices so the
+/// MR-row micro-kernel over columns `[j0, j1)`: accumulate
+/// `A[i0..i0+MR][p0..p0+pc] · B[.., j0..j1]` into the MR corresponding
+/// C row slices. Every B row slice loaded once per call is reused MR
+/// times; the j-loops run over exact-length slices so the
 /// autovectorizer sees bounds-check-free contiguous FMA chains.
 #[inline]
-fn kernel_mr(n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32],
-             i0: usize, p0: usize, pc: usize) {
-    let cblk = &mut c[i0 * n..(i0 + MR) * n];
-    let (c0, rest) = cblk.split_at_mut(n);
-    let (c1, rest) = rest.split_at_mut(n);
-    let (c2, c3) = rest.split_at_mut(n);
+fn kernel_mr(n: usize, k: usize, a: &[f32], b: &[f32], cv: &CView,
+             i0: usize, p0: usize, pc: usize, j0: usize, j1: usize) {
+    let jw = j1 - j0;
+    // SAFETY: rows i0..i0+MR × columns j0..j1 belong to this tile.
+    let (c0, c1, c2, c3) = unsafe {
+        (cv.row(i0, j0, jw), cv.row(i0 + 1, j0, jw), cv.row(i0 + 2, j0, jw),
+         cv.row(i0 + 3, j0, jw))
+    };
     let a0 = &a[i0 * k..i0 * k + k];
     let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
     let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
     let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
     for p in p0..p0 + pc {
         let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
-        let brow = &b[p * n..p * n + n];
-        for j in 0..n {
+        let brow = &b[p * n + j0..p * n + j1];
+        for j in 0..jw {
             let bj = brow[j];
             c0[j] += x0 * bj;
             c1[j] += x1 * bj;
@@ -202,14 +290,16 @@ fn kernel_mr(n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32],
 
 /// Single-row remainder kernel (same reduction order as `kernel_mr`).
 #[inline]
-fn kernel_1(n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32],
-            i0: usize, p0: usize, pc: usize) {
-    let crow = &mut c[i0 * n..i0 * n + n];
+fn kernel_1(n: usize, k: usize, a: &[f32], b: &[f32], cv: &CView,
+            i0: usize, p0: usize, pc: usize, j0: usize, j1: usize) {
+    let jw = j1 - j0;
+    // SAFETY: row i0 × columns j0..j1 belong to this tile.
+    let crow = unsafe { cv.row(i0, j0, jw) };
     let arow = &a[i0 * k..i0 * k + k];
     for p in p0..p0 + pc {
         let x = arow[p];
-        let brow = &b[p * n..p * n + n];
-        for j in 0..n {
+        let brow = &b[p * n + j0..p * n + j1];
+        for j in 0..jw {
             crow[j] += x * brow[j];
         }
     }
@@ -221,48 +311,282 @@ pub fn gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
     gemm_bias_act(m, n, k, a, b, None, Epilogue::Linear, None, c);
 }
 
-/// Raw output pointer smuggled into `Fn` shards; sound because shards
-/// write disjoint row ranges and the pool joins before `c` is reused.
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+// ---------------------------------------------------------------------
+// v2: prepacked KC×NR column panels + MR×NR register-tiled micro-kernel
+// ---------------------------------------------------------------------
 
-/// [`gemm_bias_act`] with the M dimension split into up to `shards`
-/// contiguous, MR-aligned row ranges executed concurrently on the
-/// process-global worker pool. Output rows are independent (see the
-/// determinism contract above), so the result is bit-identical to the
-/// serial call for every shard count. Returns the effective shard
-/// count.
+/// A weight matrix repacked once into KC×NR column panels — the
+/// load-time half of the v2 kernel.
+///
+/// Layout: the `k` rows are cut into KC-high k-panels (ascending), and
+/// within each k-panel the `n` columns into NR-wide column panels;
+/// each `(k-panel, column-panel)` block stores its `pc × NR` floats
+/// contiguously, panel-row-major:
+///
+/// ```text
+/// data[p0 * n_padded  +  jp * pc * NR  +  (p - p0) * NR  +  (j - jp*NR)]
+/// ```
+///
+/// The last column panel is zero-padded to NR (padding columns are
+/// computed in registers and never stored), so every panel row the
+/// micro-kernel touches is one exact-`NR` contiguous slice. `n_padded`
+/// is `n` rounded up to NR, and `p0 * n_padded` is exactly the size of
+/// all preceding k-panels.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    /// n rounded up to the next NR multiple (floats per packed k-row)
+    n_padded: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Repack a row-major `k×n` matrix. O(k·n) copy, done once per
+    /// matrix lifetime (model load for MLP weights).
+    pub fn pack(k: usize, n: usize, b: &[f32]) -> PackedB {
+        assert_eq!(b.len(), k * n, "PackedB: B is not k×n");
+        let n_padded = n.div_ceil(NR) * NR;
+        let mut data = vec![0.0f32; k * n_padded];
+        let mut p0 = 0usize;
+        while p0 < k {
+            let pc = KC.min(k - p0);
+            let base = p0 * n_padded;
+            for jp in 0..n_padded / NR {
+                let j0 = jp * NR;
+                let jw = NR.min(n - j0);
+                let panel = &mut data[base + jp * pc * NR..][..pc * NR];
+                for dp in 0..pc {
+                    panel[dp * NR..dp * NR + jw].copy_from_slice(
+                        &b[(p0 + dp) * n + j0..(p0 + dp) * n + j0 + jw]);
+                }
+            }
+            p0 += pc;
+        }
+        PackedB { k, n, n_padded, data }
+    }
+
+    /// Rows of the packed matrix (the GEMM's shared dimension).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Columns of the packed matrix (the GEMM's output width).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes held by the packed buffer (the load-time memory cost:
+    /// `k * round_up(n, NR) * 4`).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// The `pc × NR` panel for k-panel starting at `p0` (height `pc`)
+    /// and column panel `jp`.
+    #[inline]
+    fn panel(&self, p0: usize, pc: usize, jp: usize) -> &[f32] {
+        let base = p0 * self.n_padded + jp * pc * NR;
+        &self.data[base..base + pc * NR]
+    }
+}
+
+/// Full bias→accumulate→epilogue computation of one C region against a
+/// [`PackedB`]. `j0` must be NR-aligned; `j1` is NR-aligned or `n`
+/// (both guaranteed by [`pool::ThreadPool::run_sharded_tiles`] and the
+/// serial entry).
+fn packed_region(n: usize, k: usize, a: &[f32], pb: &PackedB,
+                 bias: Option<&[f32]>, epi: Epilogue,
+                 residual: Option<&[f32]>, cv: &CView, r0: usize, r1: usize,
+                 j0: usize, j1: usize) {
+    if r1 <= r0 || j1 <= j0 {
+        return;
+    }
+    debug_assert_eq!(j0 % NR, 0, "packed tile start must be NR-aligned");
+    region_seed(cv, r0, r1, j0, j1, bias);
+    let (jp0, jp1) = (j0 / NR, j1.div_ceil(NR));
+    // k-panels ascending (the determinism contract); within a k-panel
+    // each MR×NR C tile accumulates ascending-p in registers, which is
+    // the identical per-element IEEE op sequence
+    let mut p0 = 0usize;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        for jp in jp0..jp1 {
+            let jcol = jp * NR;
+            let jw = NR.min(j1 - jcol);
+            let panel = pb.panel(p0, pc, jp);
+            let mut i0 = r0;
+            while i0 + MR <= r1 {
+                kernel_packed_mr(k, a, panel, cv, i0, jcol, jw, p0, pc);
+                i0 += MR;
+            }
+            while i0 < r1 {
+                kernel_packed_1(k, a, panel, cv, i0, jcol, jw, p0, pc);
+                i0 += 1;
+            }
+        }
+        p0 += pc;
+    }
+    region_epilogue(cv, n, r0, r1, j0, j1, epi, residual);
+}
+
+/// MR×NR register-tiled packed micro-kernel: load the C tile into a
+/// local `[ [f32; NR]; MR ]` (zero in the padding lanes), replay the
+/// ascending-p accumulation against exact-`NR` panel rows entirely in
+/// registers, store the valid `jw` columns back. Padding lanes
+/// accumulate `x * 0.0` and are never stored. The per-element op
+/// sequence matches the v1 in-memory accumulation bit for bit.
+#[inline]
+fn kernel_packed_mr(k: usize, a: &[f32], panel: &[f32], cv: &CView,
+                    i0: usize, jcol: usize, jw: usize, p0: usize,
+                    pc: usize) {
+    // SAFETY: rows i0..i0+MR × columns jcol..jcol+jw belong to this
+    // tile.
+    let (c0, c1, c2, c3) = unsafe {
+        (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+         cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw))
+    };
+    let mut t = [[0.0f32; NR]; MR];
+    t[0][..jw].copy_from_slice(c0);
+    t[1][..jw].copy_from_slice(c1);
+    t[2][..jw].copy_from_slice(c2);
+    t[3][..jw].copy_from_slice(c3);
+    let a0 = &a[i0 * k..i0 * k + k];
+    let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+    let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+    let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+    for dp in 0..pc {
+        let brow: &[f32; NR] =
+            panel[dp * NR..(dp + 1) * NR].try_into().unwrap();
+        let p = p0 + dp;
+        let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+        for j in 0..NR {
+            let bj = brow[j];
+            t[0][j] += x0 * bj;
+            t[1][j] += x1 * bj;
+            t[2][j] += x2 * bj;
+            t[3][j] += x3 * bj;
+        }
+    }
+    c0.copy_from_slice(&t[0][..jw]);
+    c1.copy_from_slice(&t[1][..jw]);
+    c2.copy_from_slice(&t[2][..jw]);
+    c3.copy_from_slice(&t[3][..jw]);
+}
+
+/// Single-row packed remainder kernel (same reduction order).
+#[inline]
+fn kernel_packed_1(k: usize, a: &[f32], panel: &[f32], cv: &CView,
+                   i0: usize, jcol: usize, jw: usize, p0: usize,
+                   pc: usize) {
+    // SAFETY: row i0 × columns jcol..jcol+jw belong to this tile.
+    let crow = unsafe { cv.row(i0, jcol, jw) };
+    let mut t = [0.0f32; NR];
+    t[..jw].copy_from_slice(crow);
+    let arow = &a[i0 * k..i0 * k + k];
+    for dp in 0..pc {
+        let brow: &[f32; NR] =
+            panel[dp * NR..(dp + 1) * NR].try_into().unwrap();
+        let x = arow[p0 + dp];
+        for j in 0..NR {
+            t[j] += x * brow[j];
+        }
+    }
+    crow.copy_from_slice(&t[..jw]);
+}
+
+fn assert_packed_shapes(m: usize, n: usize, k: usize, a: &[f32],
+                        pb: &PackedB, bias: Option<&[f32]>,
+                        residual: Option<&[f32]>, c: &[f32]) {
+    assert_eq!(a.len(), m * k, "packed gemm: A is not m×k");
+    assert_eq!(pb.k, k, "packed gemm: PackedB k mismatch");
+    assert_eq!(pb.n, n, "packed gemm: PackedB n mismatch");
+    assert_eq!(c.len(), m * n, "packed gemm: C is not m×n");
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n, "packed gemm: bias is not length n");
+    }
+    if let Some(r) = residual {
+        assert_eq!(r.len(), m * n, "packed gemm: residual is not m×n");
+    }
+}
+
+/// [`gemm_bias_act`] against a [`PackedB`] — the serial v2 kernel.
+/// Bit-identical to [`gemm_ref`] (see the module contract).
+pub fn gemm_packed_bias_act(m: usize, n: usize, k: usize, a: &[f32],
+                            pb: &PackedB, bias: Option<&[f32]>,
+                            epi: Epilogue, residual: Option<&[f32]>,
+                            c: &mut [f32]) {
+    assert_packed_shapes(m, n, k, a, pb, bias, residual, c);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let cv = CView { ptr: c.as_mut_ptr(), n };
+    packed_region(n, k, a, pb, bias, epi, residual, &cv, 0, m, 0, n);
+}
+
+/// [`gemm_packed_bias_act`] with the output split into a 2-D grid of
+/// MR-aligned row ranges × NR-panel-aligned column ranges executed
+/// concurrently on the process-global worker pool
+/// ([`pool::ThreadPool::run_sharded_tiles`]). Small-M products — the
+/// fused serving rounds — still occupy the whole pool through their
+/// column panels. Each C tile is owned by exactly one worker and every
+/// element's reduction is computed whole inside its tile, so the
+/// result is bit-identical to the serial call for every shard count.
+/// Returns the effective tile count.
+pub fn gemm_packed_sharded(m: usize, n: usize, k: usize, a: &[f32],
+                           pb: &PackedB, bias: Option<&[f32]>,
+                           epi: Epilogue, residual: Option<&[f32]>,
+                           c: &mut [f32], shards: usize) -> usize {
+    if shards <= 1 || (m <= MR && n <= NR) || m == 0 || n == 0 {
+        gemm_packed_bias_act(m, n, k, a, pb, bias, epi, residual, c);
+        return 1;
+    }
+    assert_packed_shapes(m, n, k, a, pb, bias, residual, c);
+    let cv = CView { ptr: c.as_mut_ptr(), n };
+    pool::global()
+        .run_sharded_tiles(m, MR, n, NR, shards, |r0, r1, j0, j1| {
+            packed_region(n, k, a, pb, bias, epi, residual, &cv, r0, r1,
+                          j0, j1);
+        })
+        .max(1)
+}
+
+/// [`gemm_bias_act`] (the unpacked v1 kernel) with the output split
+/// into a 2-D grid of MR-aligned row ranges × NR-aligned column ranges
+/// executed concurrently on the process-global worker pool. Until this
+/// PR the split was M-only, which left the pool mostly idle on the
+/// small-M products of fused serving rounds. Bit-identical to the
+/// serial call for every shard count (tiles own whole elements).
+/// Returns the effective tile count.
 pub fn gemm_sharded(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
                     bias: Option<&[f32]>, epi: Epilogue,
                     residual: Option<&[f32]>, c: &mut [f32],
                     shards: usize) -> usize {
-    if shards <= 1 || m <= MR {
+    if shards <= 1 || (m <= MR && n <= NR) || m == 0 || n == 0 {
         gemm_bias_act(m, n, k, a, b, bias, epi, residual, c);
         return 1;
     }
     assert_eq!(a.len(), m * k, "gemm_sharded: A is not m×k");
+    assert_eq!(b.len(), k * n, "gemm_sharded: B is not k×n");
     assert_eq!(c.len(), m * n, "gemm_sharded: C is not m×n");
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n, "gemm_sharded: bias is not length n");
+    }
     if let Some(r) = residual {
         assert_eq!(r.len(), m * n, "gemm_sharded: residual is not m×n");
     }
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    pool::global().run_sharded_blocks(m, MR, shards, |r0, r1| {
-        let rows = r1 - r0;
-        // SAFETY: shard row ranges are disjoint and the pool joins
-        // before `c` is touched again — no aliasing.
-        let shard_c = unsafe {
-            std::slice::from_raw_parts_mut(c_ptr.0.add(r0 * n), rows * n)
-        };
-        let shard_res = residual.map(|r| &r[r0 * n..r1 * n]);
-        gemm_bias_act(rows, n, k, &a[r0 * k..r1 * k], b, bias, epi,
-                      shard_res, shard_c);
-    })
+    let cv = CView { ptr: c.as_mut_ptr(), n };
+    pool::global()
+        .run_sharded_tiles(m, MR, n, NR, shards, |r0, r1, j0, j1| {
+            unpacked_region(n, k, a, b, bias, epi, residual, &cv, r0, r1,
+                            j0, j1);
+        })
+        .max(1)
 }
 
 /// Naive triple-loop reference with the same per-element reduction
-/// order — the oracle the blocked/tiled/sharded kernels are tested
-/// against (bit-exact, not just approximately equal).
+/// order — the oracle the blocked/tiled/packed/sharded kernels are
+/// tested against (bit-exact, not just approximately equal).
 pub fn gemm_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
                 bias: Option<&[f32]>, epi: Epilogue,
                 residual: Option<&[f32]>, c: &mut [f32]) {
@@ -305,12 +629,16 @@ mod tests {
         v.iter().map(|x| x.to_bits()).collect()
     }
 
+    /// Shapes straddling the MR (4), NR (8) and KC (256) boundaries.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (0, 3, 4), (1, 1, 1), (1, 7, 5), (3, 2, 9), (4, 4, 4), (4, 8, 8),
+        (5, 3, 300), (5, 9, 17), (7, 13, 257), (8, 1, 2), (8, 16, 256),
+        (13, 17, 31), (4, 24, 256),
+    ];
+
     #[test]
     fn blocked_matches_reference_bitwise_across_shapes() {
-        // odd/rectangular shapes straddling the MR and KC boundaries
-        for &(m, n, k) in &[(0usize, 3usize, 4usize), (1, 1, 1), (1, 7, 5),
-                            (3, 2, 9), (4, 4, 4), (5, 3, 300), (7, 13, 257),
-                            (8, 1, 2), (13, 17, 31)] {
+        for &(m, n, k) in SHAPES {
             let a = fill(m * k, 1);
             let b = fill(k * n, 2);
             let bias = fill(n, 3);
@@ -332,6 +660,34 @@ mod tests {
     }
 
     #[test]
+    fn packed_matches_reference_bitwise_across_shapes() {
+        for &(m, n, k) in SHAPES {
+            let a = fill(m * k, 11);
+            let b = fill(k * n, 12);
+            let bias = fill(n, 13);
+            let res = fill(m * n, 14);
+            let pb = PackedB::pack(k, n, &b);
+            assert_eq!(pb.k(), k);
+            assert_eq!(pb.n(), n);
+            assert_eq!(pb.bytes(), k * n.div_ceil(NR) * NR * 4);
+            for epi in [Epilogue::Linear, Epilogue::Silu] {
+                for (bias_o, res_o) in [(None, None), (Some(&bias), None),
+                                        (Some(&bias), Some(&res))] {
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_ref(m, n, k, &a, &b, bias_o.map(|v| &v[..]), epi,
+                             res_o.map(|v| &v[..]), &mut want);
+                    let mut got = vec![7.0f32; m * n];
+                    gemm_packed_bias_act(m, n, k, &a, &pb,
+                                         bias_o.map(|v| &v[..]), epi,
+                                         res_o.map(|v| &v[..]), &mut got);
+                    assert_eq!(bits(&want), bits(&got),
+                               "packed m={m} n={n} k={k} epi={epi:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn sharded_matches_serial_bitwise() {
         let (m, n, k) = (37usize, 19usize, 23usize);
         let a = fill(m * k, 5);
@@ -347,6 +703,49 @@ mod tests {
             assert!(eff >= 1);
             assert_eq!(bits(&want), bits(&got), "shards={shards}");
         }
+    }
+
+    #[test]
+    fn packed_sharded_is_bit_invariant_in_shard_count() {
+        // odd/rectangular shapes, including the small-M serve shape
+        // whose parallelism comes entirely from column panels
+        for &(m, n, k) in &[(4usize, 96usize, 64usize), (37, 19, 23),
+                            (16, 40, 300), (5, 64, 16)] {
+            let a = fill(m * k, 21);
+            let b = fill(k * n, 22);
+            let bias = fill(n, 23);
+            let res = fill(m * n, 24);
+            let pb = PackedB::pack(k, n, &b);
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu,
+                     Some(&res), &mut want);
+            for shards in [1usize, 2, 8, 64] {
+                let mut got = vec![0.0f32; m * n];
+                let eff = gemm_packed_sharded(m, n, k, &a, &pb, Some(&bias),
+                                              Epilogue::Silu, Some(&res),
+                                              &mut got, shards);
+                assert!(eff >= 1 && eff <= shards.max(1));
+                assert_eq!(bits(&want), bits(&got),
+                           "m={m} n={n} k={k} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_m_sharding_tiles_column_panels() {
+        // m=4 is a single MR block: v1's M-only split would have run
+        // serial; the 2-D grid must still fan out over column panels
+        let (m, n, k) = (4usize, 128usize, 32usize);
+        let a = fill(m * k, 31);
+        let b = fill(k * n, 32);
+        let pb = PackedB::pack(k, n, &b);
+        let mut want = vec![0.0f32; m * n];
+        gemm_ref(m, n, k, &a, &b, None, Epilogue::Linear, None, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        let eff = gemm_packed_sharded(m, n, k, &a, &pb, None,
+                                      Epilogue::Linear, None, &mut got, 8);
+        assert!(eff > 1, "small-M product did not tile over N (eff={eff})");
+        assert_eq!(bits(&want), bits(&got));
     }
 
     #[test]
@@ -414,5 +813,14 @@ mod tests {
     fn shape_mismatch_panics() {
         let mut c = vec![0.0f32; 4];
         gemm(2, 2, 3, &[0.0; 5], &[0.0; 6], &mut c);
+    }
+
+    #[test]
+    #[should_panic(expected = "PackedB k mismatch")]
+    fn packed_shape_mismatch_panics() {
+        let pb = PackedB::pack(3, 2, &[0.0; 6]);
+        let mut c = vec![0.0f32; 4];
+        gemm_packed_bias_act(2, 2, 2, &[0.0; 4], &pb, None,
+                             Epilogue::Linear, None, &mut c);
     }
 }

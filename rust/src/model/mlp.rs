@@ -12,16 +12,21 @@
 //! batch input matrix `[x ‖ temb ‖ cond]` is packed once into a
 //! reusable [`Workspace`], then every layer runs as one
 //! `B×n_in · n_in×n_out` product with a fused bias + SiLU (+ residual)
-//! epilogue. Sinusoidal time embeddings for the `k_steps` integer
-//! timesteps are precomputed at load. The pre-GEMM scalar path survives
-//! as [`NativeMlp::forward_one_ref`] / [`NativeMlp::denoise_batch_ref`]
-//! — the parity oracle the pipeline is tested against. Both paths
-//! reduce each output element in the same ascending-input order; the
-//! GEMM path's SiLU uses the vectorizable `math::gemm::exp_fast`
-//! (~1e-7 relative per layer) where the reference calls libm `expf`,
-//! so parity holds to 1e-5 relative rather than bitwise. Pool-size
-//! invariance of `denoise_batch` itself *is* bitwise: sharding only
-//! regroups independent rows of one fixed path.
+//! epilogue. Every layer's weight matrix is repacked **once at load**
+//! into KC×NR column panels (`math::gemm::PackedB`), so the per-round
+//! kernel is the prepacked MR×NR register-tiled micro-kernel; the flat
+//! row-major copy is kept only for the scalar reference path
+//! ([`NativeMlp::forward_one_ref`] — the HLO parity oracle). Sinusoidal
+//! time embeddings for the `k_steps` integer timesteps are precomputed
+//! at load. Both paths reduce each output element in the same
+//! ascending-input order; the GEMM path's SiLU uses the vectorizable
+//! `math::gemm::exp_fast` (~1e-7 relative per layer) where the
+//! reference calls libm `expf`, so parity holds to 1e-5 relative
+//! rather than bitwise. Pool-size invariance of `denoise_batch` itself
+//! *is* bitwise, both for row sharding (`ParallelModel`) and for the
+//! in-layer 2-D GEMM tiling ([`NativeMlp::denoise_batch_tiled`]):
+//! sharding only regroups independent output elements of one fixed
+//! reduction order.
 //!
 //! All math in f32 (matching the HLO) then widened to f64 at the edge.
 
@@ -31,7 +36,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::math::gemm::{gemm_bias_act, Epilogue};
+use crate::math::gemm::{gemm_packed_sharded, Epilogue, PackedB};
 use crate::model::{DenoiseModel, VariantInfo};
 use crate::schedule::DdpmSchedule;
 
@@ -66,6 +71,27 @@ impl Workspace {
         grow(&mut self.h, n * hidden);
         grow(&mut self.tmp, n * hidden);
         grow(&mut self.out32, n * d_out);
+    }
+
+    /// Bytes currently held by the scratch buffers (capacity, not
+    /// round usage) — the high-water footprint a burst leaves behind.
+    pub fn bytes(&self) -> usize {
+        (self.input.capacity() + self.h.capacity() + self.tmp.capacity()
+         + self.out32.capacity()) * std::mem::size_of::<f32>()
+    }
+
+    /// Release the scratch buffers when they hold more than `cap`
+    /// bytes (no-op otherwise). They regrow to the next batch's needs
+    /// — call only between rounds, when the scratch contents are dead.
+    pub fn shrink_to_cap(&mut self, cap: usize) {
+        if self.bytes() <= cap {
+            return;
+        }
+        for v in [&mut self.input, &mut self.h, &mut self.tmp,
+                  &mut self.out32] {
+            v.clear();
+            v.shrink_to_fit();
+        }
     }
 }
 
@@ -104,7 +130,17 @@ pub struct NativeMlp {
 struct Layer {
     n_in: usize,
     n_out: usize,
-    w: Vec<f32>, // row-major (n_in, n_out)
+    /// flat row-major (n_in, n_out) copy — kept only for the scalar
+    /// reference path (`forward_one_ref` / `denoise_batch_ref`, the
+    /// HLO parity oracle). Deliberate ~2x weight memory at load: the
+    /// oracle must read the exact bytes the artifacts shipped, and
+    /// reconstructing rows from the packed panels would put a strided
+    /// unpack (or per-call scratch) inside the reference path the
+    /// parity tests are supposed to keep dead simple.
+    w: Vec<f32>,
+    /// the same weights repacked once at load into KC×NR column panels
+    /// — what every GEMM-pipeline round actually reads
+    wp: PackedB,
     b: Vec<f32>,
 }
 
@@ -132,10 +168,12 @@ impl NativeMlp {
             if b_end > flat.len() {
                 bail!("weights file too short: need {b_end}, have {}", flat.len());
             }
+            let w = flat[off..w_end].to_vec();
             layers.push(Layer {
                 n_in,
                 n_out,
-                w: flat[off..w_end].to_vec(),
+                wp: PackedB::pack(n_in, n_out, &w),
+                w,
                 b: flat[w_end..b_end].to_vec(),
             });
             off = b_end;
@@ -259,11 +297,27 @@ impl NativeMlp {
     }
 
     /// The GEMM pipeline with a caller-owned workspace: pack the batch
-    /// input matrix once, then one `gemm_bias_act` per layer with the
+    /// input matrix once, then one packed-panel GEMM per layer with the
     /// epilogue fused (SiLU on hidden layers, residual add on blocks).
+    /// Serial GEMMs; see [`denoise_batch_tiled`](Self::
+    /// denoise_batch_tiled) for the 2-D sharded form.
     pub fn denoise_batch_with(&self, ys: &[f64], ts: &[f64], cond: &[f64],
                               n: usize, out: &mut [f64], ws: &mut Workspace)
                               -> Result<()> {
+        self.denoise_batch_tiled(ys, ts, cond, n, out, ws, 1)
+    }
+
+    /// [`denoise_batch_with`](Self::denoise_batch_with) with each
+    /// layer's GEMM split into up to `tile_shards` MR×NR-aligned M×N
+    /// tiles on the global worker pool (`gemm_packed_sharded`). Small
+    /// batches — fused serving rounds — parallelize over the weight
+    /// matrix's column panels even when they have too few rows to
+    /// row-shard. Bit-identical to the serial pipeline for every
+    /// `tile_shards` (tiles never split an element's reduction).
+    pub fn denoise_batch_tiled(&self, ys: &[f64], ts: &[f64], cond: &[f64],
+                               n: usize, out: &mut [f64],
+                               ws: &mut Workspace, tile_shards: usize)
+                               -> Result<()> {
         let (d, c) = (self.d, self.cond_dim);
         let in_dim = self.in_dim();
         let hidden = self.hidden;
@@ -292,22 +346,22 @@ impl NativeMlp {
 
         // input layer: h = silu(input · W0 + b0)
         let first = &self.layers[0];
-        gemm_bias_act(n, hidden, in_dim, &ws.input[..n * in_dim], &first.w,
-                      Some(&first.b), Epilogue::Silu, None,
-                      &mut ws.h[..n * hidden]);
+        gemm_packed_sharded(n, hidden, in_dim, &ws.input[..n * in_dim],
+                            &first.wp, Some(&first.b), Epilogue::Silu, None,
+                            &mut ws.h[..n * hidden], tile_shards);
         // residual blocks: h = h + silu(h · W + b), fused epilogue
         for layer in &self.layers[1..self.layers.len() - 1] {
-            gemm_bias_act(n, hidden, hidden, &ws.h[..n * hidden], &layer.w,
-                          Some(&layer.b), Epilogue::Silu,
-                          Some(&ws.h[..n * hidden]),
-                          &mut ws.tmp[..n * hidden]);
+            gemm_packed_sharded(n, hidden, hidden, &ws.h[..n * hidden],
+                                &layer.wp, Some(&layer.b), Epilogue::Silu,
+                                Some(&ws.h[..n * hidden]),
+                                &mut ws.tmp[..n * hidden], tile_shards);
             std::mem::swap(&mut ws.h, &mut ws.tmp);
         }
         // output layer: no activation
         let last = self.layers.last().unwrap();
-        gemm_bias_act(n, d, hidden, &ws.h[..n * hidden], &last.w,
-                      Some(&last.b), Epilogue::Linear, None,
-                      &mut ws.out32[..n * d]);
+        gemm_packed_sharded(n, d, hidden, &ws.h[..n * hidden], &last.wp,
+                            Some(&last.b), Epilogue::Linear, None,
+                            &mut ws.out32[..n * d], tile_shards);
         for (o, &v) in out[..n * d].iter_mut().zip(&ws.out32[..n * d]) {
             *o = v as f64;
         }
@@ -384,8 +438,20 @@ impl DenoiseModel for NativeMlp {
     /// `denoise_batch` — the workspace is pure scratch.
     fn denoise_round(&self, arena: &mut crate::sampler::RoundArena)
                      -> Result<()> {
+        self.denoise_round_tiled(arena, 1)
+    }
+
+    /// The packed pipeline tiles its layer GEMMs over M×N, so small-M
+    /// rounds can use the whole pool — `ParallelModel` routes them
+    /// here.
+    fn supports_round_tiling(&self) -> bool {
+        true
+    }
+
+    fn denoise_round_tiled(&self, arena: &mut crate::sampler::RoundArena,
+                           tile_shards: usize) -> Result<()> {
         let (ys, ts, cond, n, out, ws) = arena.round_io_ws();
-        self.denoise_batch_with(ys, ts, cond, n, out, ws)
+        self.denoise_batch_tiled(ys, ts, cond, n, out, ws, tile_shards)
     }
 }
 
@@ -485,6 +551,54 @@ mod tests {
                            "row {r} dim {i}");
             }
         }
+    }
+
+    #[test]
+    fn tiled_pipeline_is_bitwise_invariant_in_tile_shards() {
+        // the 2-D GEMM tiling inside the pipeline must never change a
+        // bit — this is what lets ParallelModel hand small-M serving
+        // rounds to the backend's own tiling
+        let info = toy_info(3, 2, 16, 3);
+        let flat = pseudo_weights(flat_len(&info));
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        let mut ws = Workspace::new();
+        for n in [1usize, 2, 4, 5, 11] {
+            let ys: Vec<f64> =
+                (0..n * 3).map(|i| (i as f64 * 0.19).sin()).collect();
+            let ts: Vec<f64> = (0..n).map(|r| (1 + r % 10) as f64).collect();
+            let cond: Vec<f64> =
+                (0..n * 2).map(|i| (i as f64 * 0.07).cos()).collect();
+            let mut want = vec![0.0; n * 3];
+            mlp.denoise_batch_with(&ys, &ts, &cond, n, &mut want, &mut ws)
+                .unwrap();
+            for shards in [2usize, 8] {
+                let mut got = vec![0.0; n * 3];
+                mlp.denoise_batch_tiled(&ys, &ts, &cond, n, &mut got,
+                                        &mut ws, shards)
+                    .unwrap();
+                for i in 0..n * 3 {
+                    assert_eq!(want[i].to_bits(), got[i].to_bits(),
+                               "n={n} shards={shards} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_bytes_and_shrink_to_cap() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.bytes(), 0);
+        ws.ensure(64, 10, 32, 4);
+        let grown = ws.bytes();
+        assert!(grown >= 64 * (10 + 32 + 32 + 4) * 4);
+        // under the cap: untouched
+        ws.shrink_to_cap(grown);
+        assert_eq!(ws.bytes(), grown);
+        // over the cap: released entirely, then regrows on demand
+        ws.shrink_to_cap(grown - 1);
+        assert_eq!(ws.bytes(), 0);
+        ws.ensure(8, 10, 32, 4);
+        assert!(ws.bytes() > 0);
     }
 
     #[test]

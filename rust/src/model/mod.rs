@@ -64,6 +64,36 @@ pub trait DenoiseModel: Send + Sync {
         self.denoise_batch(ys, ts, cond, n, out)
     }
 
+    /// Whether [`denoise_round_tiled`](Self::denoise_round_tiled) has a
+    /// real 2-D tiled implementation. `ParallelModel` uses this to
+    /// route small-M rounds — too few rows to fill the pool with row
+    /// shards — to the backend's own M×N GEMM tiling instead of
+    /// row-sharding them (or running them inline). Default: no.
+    fn supports_round_tiling(&self) -> bool {
+        false
+    }
+
+    /// Worker-pool shards a `denoise_round` over an `n`-row arena
+    /// would occupy — stats only (`RoundExec::shards`, lane occupancy
+    /// metrics). The default is serial; `ParallelModel` overrides it
+    /// with the same routing decision `denoise_round` makes (row
+    /// shards, or the 2-D tile budget for small-M tiled rounds), so
+    /// reported occupancy tracks what actually ran.
+    fn round_shards(&self, _n: usize) -> usize {
+        1
+    }
+
+    /// Like [`denoise_round`](Self::denoise_round), but hinted to split
+    /// each internal GEMM into up to `tile_shards` MR×NR-aligned M×N
+    /// tiles on the global worker pool (`math::gemm::
+    /// gemm_packed_sharded`). The default ignores the hint. Must be
+    /// bit-identical to `denoise_round` — tiles never split an
+    /// element's reduction.
+    fn denoise_round_tiled(&self, arena: &mut RoundArena,
+                           _tile_shards: usize) -> Result<()> {
+        self.denoise_round(arena)
+    }
+
     /// Convenience single-call wrapper.
     fn denoise_one(&self, y: &[f64], t: usize, cond: &[f64],
                    out: &mut [f64]) -> Result<()> {

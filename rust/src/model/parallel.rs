@@ -64,6 +64,17 @@ impl ParallelModel {
     pub fn occupancy(&self, n: usize) -> usize {
         self.pool.shards_for(n)
     }
+
+    /// The single routing predicate `denoise_round` and `round_shards`
+    /// share: a round that would row-shard (past the `shard_min`
+    /// inline guard) but can't fill the pool goes to the backend's
+    /// 2-D GEMM tiling instead.
+    fn takes_tiled_route(&self, n: usize) -> bool {
+        let shards = self.pool.shards_for(n);
+        shards < self.pool.pool_size
+            && n > self.pool.shard_min.max(1)
+            && self.inner.supports_round_tiling()
+    }
 }
 
 impl DenoiseModel for ParallelModel {
@@ -129,16 +140,44 @@ impl DenoiseModel for ParallelModel {
 
     /// Arena rounds shard exactly like slice rounds: the arena's input
     /// region is split into contiguous per-shard row ranges (pure
-    /// subslicing — no staging copies, no allocations). An inline round
-    /// (`shards <= 1`) is handed to the inner model's own arena path,
-    /// so the native backend consumes the arena's per-lane GEMM
-    /// workspace instead of its thread-local one.
+    /// subslicing — no staging copies, no allocations). Rounds with too
+    /// few rows to fill the pool with row shards are handed whole to
+    /// the inner model — with the configured `pool_size` as a 2-D GEMM
+    /// tile-shard hint when the backend supports it
+    /// (`DenoiseModel::denoise_round_tiled`; the native MLP tiles each
+    /// layer product over M×N, so a 4-row fused serving round still
+    /// occupies the whole pool through its column panels). Either way
+    /// the inner model consumes the arena's per-lane GEMM workspace,
+    /// and outputs stay bit-identical to inline execution.
     fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
-        if self.pool.shards_for(arena.rows()) <= 1 {
+        let n = arena.rows();
+        // `takes_tiled_route` keeps the shards_for inline guard:
+        // rounds small enough that PoolConfig promises inline execution
+        // ("sharding overhead never dominates cheap rounds") stay
+        // inline on the tiled route too — only rounds that would
+        // row-shard but can't fill the pool get handed to the backend.
+        if self.takes_tiled_route(n) {
+            // row shards alone can't fill the pool: let the backend
+            // tile its GEMMs over M×N instead
+            return self.inner.denoise_round_tiled(arena,
+                                                  self.pool.pool_size);
+        }
+        if self.pool.shards_for(n) <= 1 {
             return self.inner.denoise_round(arena);
         }
         let (ys, ts, cond, n, out) = arena.round_io();
         self.denoise_batch(ys, ts, cond, n, out)
+    }
+
+    /// Stats-only view of the routing above: the tile budget for
+    /// tiled rounds, the row-shard count otherwise — so occupancy
+    /// metrics report what actually ran.
+    fn round_shards(&self, n: usize) -> usize {
+        if self.takes_tiled_route(n) {
+            self.pool.pool_size
+        } else {
+            self.pool.shards_for(n)
+        }
     }
 }
 
@@ -202,6 +241,43 @@ mod tests {
                 v.iter().map(|x| x.to_bits()).collect()
             };
             assert_eq!(bits(&want), bits(got), "n={n}");
+        }
+    }
+
+    #[test]
+    fn small_rounds_route_to_backend_tiling_bit_identically() {
+        use crate::model::{NativeMlp, VariantInfo};
+        // a native MLP supports 2-D round tiling; rounds too small to
+        // row-shard must still produce the exact inline bits through
+        // the tiled route
+        let info = VariantInfo::toy("tile", 3, 0, 16, 2, 10);
+        let flat: Vec<f32> = (0..info.weights_len())
+            .map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5)
+            .collect();
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        assert!(mlp.supports_round_tiling());
+        // shard_min 1: n=1 stays inline (the shards_for inline guard),
+        // n in {2, 4} row-shards to < pool_size and takes the tiled
+        // route — both must produce the exact inline bits
+        let par = ParallelModel::new(
+            mlp.clone(), PoolConfig { pool_size: 8, shard_min: 1 });
+        for n in [1usize, 2, 4] {
+            let ys: Vec<f64> =
+                (0..n * 3).map(|i| (i as f64 * 0.31).sin()).collect();
+            let ts: Vec<f64> = (0..n).map(|r| (1 + r % 10) as f64).collect();
+            let mut want = vec![0.0; n * 3];
+            mlp.denoise_batch(&ys, &ts, &[], n, &mut want).unwrap();
+            let mut arena = RoundArena::new(3, 0);
+            arena.begin_round();
+            let (span, rows) = arena.reserve(n);
+            rows.ys.copy_from_slice(&ys);
+            rows.ts.copy_from_slice(&ts);
+            par.denoise_round(&mut arena).unwrap();
+            let got = arena.out_rows(span);
+            for i in 0..n * 3 {
+                assert_eq!(want[i].to_bits(), got[i].to_bits(),
+                           "n={n} i={i}");
+            }
         }
     }
 

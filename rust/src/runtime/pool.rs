@@ -225,17 +225,74 @@ impl ThreadPool {
 
     /// Like [`run_sharded`](Self::run_sharded), but shard boundaries
     /// land on multiples of `block` (the last shard absorbs the
-    /// remainder), and `f` receives *item* ranges over `0..n`. Used by
-    /// kernels whose inner loop is register-tiled in blocks of rows
-    /// (e.g. `math::gemm`): aligned boundaries keep every shard on the
-    /// full-width micro-kernel except at the very end of the matrix.
+    /// remainder), and `f` receives *item* ranges over `0..n`. Aligned
+    /// boundaries keep block-tiled kernels on their full-width
+    /// micro-kernel except at the very end of the range. A thin 1-D
+    /// view over [`run_sharded_tiles`](Self::run_sharded_tiles)
+    /// (degenerate single-column grid), kept as the simpler API for
+    /// callers without a second dimension.
     pub fn run_sharded_blocks<F: Fn(usize, usize) + Sync>(
         &self, n: usize, block: usize, shards: usize, f: F) -> usize {
-        let block = block.max(1);
-        let blocks = n.div_ceil(block);
-        self.run_sharded(blocks, shards, |bs, be| {
-            f(bs * block, (be * block).min(n))
-        })
+        self.run_sharded_tiles(n, block, 1, 1, shards,
+                               |r0, r1, _c0, _c1| f(r0, r1))
+    }
+
+    /// 2-D tile scheduler: split the `m × n` iteration space into a
+    /// grid of up to `shards` rectangular tiles — row boundaries on
+    /// multiples of `m_block`, column boundaries on multiples of
+    /// `n_block` (the last tile in each dimension absorbs the
+    /// remainder) — and execute `f(r0, r1, c0, c1)` for every tile
+    /// concurrently on the pool (caller participating). Each output
+    /// tile is owned by exactly one worker, so kernels whose elements
+    /// are computed whole inside a tile stay bit-invariant in the
+    /// shard count.
+    ///
+    /// The grid prefers splitting M first (a row-range tile streams
+    /// fewer A rows and reuses each B panel across its whole range) and
+    /// overflows the leftover parallelism into N only when M alone
+    /// cannot fill `shards` — the small-M serving-round case that an
+    /// M-only split would leave running serial. Returns the effective
+    /// tile count.
+    pub fn run_sharded_tiles<F: Fn(usize, usize, usize, usize) + Sync>(
+        &self, m: usize, m_block: usize, n: usize, n_block: usize,
+        shards: usize, f: F) -> usize {
+        if m == 0 || n == 0 {
+            return 0;
+        }
+        let (mbs, nbs) = (m_block.max(1), n_block.max(1));
+        let (mb, nb) = (m.div_ceil(mbs), n.div_ceil(nbs));
+        let shards = shards.max(1);
+        let sm = mb.min(shards);
+        let sn = nb.min((shards / sm).max(1));
+        let tiles = sm * sn;
+        if tiles <= 1 {
+            f(0, m, 0, n);
+            return 1;
+        }
+        // balanced block-aligned ranges per dimension (parts <= blocks,
+        // so every range is non-empty)
+        let ranges = |items: usize, blocks: usize, bsz: usize,
+                      parts: usize| -> Vec<(usize, usize)> {
+            let (base, rem) = (blocks / parts, blocks % parts);
+            let mut out = Vec::with_capacity(parts);
+            let mut b0 = 0usize;
+            for i in 0..parts {
+                let len = base + usize::from(i < rem);
+                out.push((b0 * bsz, ((b0 + len) * bsz).min(items)));
+                b0 += len;
+            }
+            out
+        };
+        let rrows = ranges(m, mb, mbs, sm);
+        let rcols = ranges(n, nb, nbs, sn);
+        self.run_sharded(tiles, tiles, |s, e| {
+            for t in s..e {
+                let (r0, r1) = rrows[t / sn];
+                let (c0, c1) = rcols[t % sn];
+                f(r0, r1, c0, c1);
+            }
+        });
+        tiles
     }
 
     /// Run `n` independent *tasks* concurrently (`f(i)` once for each
@@ -358,6 +415,56 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tile_sharding_covers_every_cell_exactly_once_on_aligned_bounds() {
+        let pool = ThreadPool::new(3);
+        for (m, n) in [(0usize, 5usize), (5, 0), (1, 1), (4, 128), (37, 19),
+                       (16, 40), (3, 9)] {
+            for (mb, nb) in [(1usize, 1usize), (4, 8), (7, 3)] {
+                for shards in [1usize, 2, 8, 64] {
+                    let hits: Vec<AtomicUsize> =
+                        (0..m * n).map(|_| AtomicUsize::new(0)).collect();
+                    let eff = pool.run_sharded_tiles(
+                        m, mb, n, nb, shards, |r0, r1, c0, c1| {
+                            assert!(r0 % mb == 0 && c0 % nb == 0,
+                                    "unaligned tile start ({r0},{c0})");
+                            assert!(r1 == m || r1 % mb == 0);
+                            assert!(c1 == n || c1 % nb == 0);
+                            for i in r0..r1 {
+                                for j in c0..c1 {
+                                    hits[i * n + j]
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        });
+                    if m == 0 || n == 0 {
+                        assert_eq!(eff, 0);
+                        continue;
+                    }
+                    assert!(eff >= 1 && eff <= shards.max(1),
+                            "eff={eff} shards={shards}");
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(h.load(Ordering::Relaxed), 1,
+                                   "cell {i} (m={m} n={n} mb={mb} nb={nb} \
+                                    shards={shards})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_grid_fans_out_over_columns_when_m_is_one_block() {
+        // the small-M serving case: a single row block must still
+        // produce > 1 tile by splitting the column dimension
+        let pool = ThreadPool::new(3);
+        let eff = pool.run_sharded_tiles(4, 4, 64, 8, 8, |_, _, _, _| {});
+        assert!(eff > 1, "single-row-block grid stayed serial (eff={eff})");
+        // and a square grid fills the shard budget without exceeding it
+        let eff = pool.run_sharded_tiles(64, 4, 64, 8, 8, |_, _, _, _| {});
+        assert!(eff >= 8 / 2 && eff <= 8);
     }
 
     #[test]

@@ -149,6 +149,13 @@ pub struct RoundArena {
     out: Vec<f64>,
     rows: usize,
     ws: Workspace,
+    /// grow-to-high-water byte budget: past this, [`shrink_to_cap`]
+    /// (called by owners at idle points) releases the buffers instead
+    /// of pinning a burst's footprint forever. 0 = unbounded.
+    byte_cap: usize,
+    /// largest total footprint ([`bytes`]) ever observed — surfaced
+    /// per lane in coordinator metrics
+    high_water_bytes: usize,
 }
 
 impl RoundArena {
@@ -162,6 +169,8 @@ impl RoundArena {
             out: Vec::new(),
             rows: 0,
             ws: Workspace::new(),
+            byte_cap: 0,
+            high_water_bytes: 0,
         }
     }
 
@@ -187,9 +196,53 @@ impl RoundArena {
         self.rows == 0
     }
 
+    /// Byte budget for [`shrink_to_cap`](Self::shrink_to_cap); 0 (the
+    /// default) keeps the pre-cap grow-forever behavior.
+    pub fn set_byte_cap(&mut self, cap: usize) {
+        self.byte_cap = cap;
+    }
+
+    pub fn byte_cap(&self) -> usize {
+        self.byte_cap
+    }
+
+    /// Total bytes currently held: the four f64 staging buffers plus
+    /// the GEMM workspace (all capacity, not round usage).
+    pub fn bytes(&self) -> usize {
+        (self.ys.capacity() + self.ts.capacity() + self.cond.capacity()
+         + self.out.capacity()) * std::mem::size_of::<f64>()
+            + self.ws.bytes()
+    }
+
+    /// Largest [`bytes`](Self::bytes) footprint ever observed
+    /// (sampled at round boundaries, so it includes the workspace
+    /// growth of the previous round's model call).
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water_bytes
+    }
+
+    /// Release every buffer when the footprint exceeds the byte cap
+    /// (no-op when uncapped or under cap). Buffers regrow to the next
+    /// rounds' needs — callers invoke this at idle points (a drained
+    /// serving lane, the end of a drive), never mid-round: the current
+    /// round's staged rows are discarded.
+    pub fn shrink_to_cap(&mut self) {
+        if self.byte_cap == 0 || self.bytes() <= self.byte_cap {
+            return;
+        }
+        for v in [&mut self.ys, &mut self.ts, &mut self.cond,
+                  &mut self.out] {
+            v.clear();
+            v.shrink_to_fit();
+        }
+        self.ws.shrink_to_cap(0);
+        self.rows = 0;
+    }
+
     /// Start a new round: forget the previous round's rows but keep
     /// every buffer's capacity (and the workspace) for reuse.
     pub fn begin_round(&mut self) {
+        self.high_water_bytes = self.high_water_bytes.max(self.bytes());
         self.rows = 0;
     }
 
@@ -343,9 +396,15 @@ where
 
 /// Drive a machine to completion against a `DenoiseModel` (solo
 /// execution — one request, one machine, one fused `denoise_round` per
-/// round, on the same arena path the serving lanes use).
+/// round, on the same arena path the serving lanes use). Reported
+/// round shards come from the model's own routing decision
+/// (`DenoiseModel::round_shards`: row shards, or the 2-D tile budget
+/// for small-M tiled rounds) — engines hand the same `PoolConfig` to
+/// their `ParallelModel` wrapper and to this driver, so the `_pool`
+/// parameter stays only as API-compat for callers without a wrapper
+/// (an unwrapped model runs inline and now truthfully reports 1).
 pub fn drive(machine: &mut dyn StepSampler, model: &Arc<dyn DenoiseModel>,
-             pool: PoolConfig) -> Result<Vec<f64>> {
+             _pool: PoolConfig) -> Result<Vec<f64>> {
     let mut arena = RoundArena::for_model(model.as_ref());
     loop {
         arena.begin_round();
@@ -357,7 +416,7 @@ pub fn drive(machine: &mut dyn StepSampler, model: &Arc<dyn DenoiseModel>,
         model.denoise_round(&mut arena)?;
         let exec = RoundExec {
             latency_s: t0.elapsed().as_secs_f64(),
-            shards: pool.shards_for(span.rows),
+            shards: model.round_shards(span.rows),
         };
         machine.resume_from(&arena, span, exec)?;
     }
@@ -513,6 +572,36 @@ mod tests {
         // shrinking/regrowing rounds never reallocate past high water
         assert_eq!(cap,
                    (a.ys.capacity(), a.ts.capacity(), a.out.capacity()));
+    }
+
+    #[test]
+    fn arena_byte_cap_bounds_the_high_water_footprint() {
+        let mut a = RoundArena::new(4, 0);
+        assert_eq!(a.byte_cap(), 0);
+        assert_eq!(a.bytes(), 0);
+        // uncapped: shrink_to_cap is a no-op however large we grow
+        a.begin_round();
+        let _ = a.reserve(128);
+        a.begin_round(); // samples high water at the round boundary
+        let grown = a.bytes();
+        assert!(grown >= 128 * 4 * 8);
+        assert!(a.high_water_bytes() >= grown);
+        a.shrink_to_cap();
+        assert_eq!(a.bytes(), grown, "uncapped arena must never shrink");
+        // capped: under-cap footprints stay, over-cap ones release
+        a.set_byte_cap(grown);
+        a.shrink_to_cap();
+        assert_eq!(a.bytes(), grown);
+        a.set_byte_cap(grown - 1);
+        a.shrink_to_cap();
+        assert_eq!(a.bytes(), 0, "over-cap arena must release buffers");
+        // high water survives the shrink (it is a lifetime gauge) and
+        // the arena regrows transparently
+        assert!(a.high_water_bytes() >= grown);
+        a.begin_round();
+        let (span, _) = a.reserve(3);
+        assert_eq!(span.rows, 3);
+        assert_eq!(a.rows(), 3);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Property-based sweeps over the pure substrates (no PJRT needed):
 //! JSON roundtrips, quality-metric axioms, lane-queue invariants under
 //! random queues, Picard-vs-sequential convergence, schedule identities
-//! at random K, GEMM-vs-naive-reference parity (including the sharded
-//! kernel's bitwise pool invariance and the native MLP's GEMM batch
-//! path vs its scalar reference), and worker-pool sharding invariants
+//! at random K, GEMM-vs-naive-reference parity (v1, prepacked-panel
+//! and 2-D M×N-sharded kernels all bitwise vs `gemm_ref`; the native
+//! MLP's packed GEMM batch path vs its scalar reference, incl. tiled
+//! bit-invariance), `exp_fast` edge semantics + a max-ulp sweep vs
+//! libm, and worker-pool sharding invariants
 //! (sharded == unsharded bitwise; GRS accept counts invariant under
 //! pool size and kernel backend).
 
@@ -178,11 +180,14 @@ fn asd_engine_invariants_random_theta() {
 
 #[test]
 fn gemm_matches_naive_reference_and_shards_bitwise() {
-    use asd::math::gemm::{gemm_bias_act, gemm_ref, gemm_sharded, Epilogue};
+    use asd::math::gemm::{gemm_bias_act, gemm_packed_bias_act,
+                          gemm_packed_sharded, gemm_ref, gemm_sharded,
+                          Epilogue, PackedB};
 
     prop::check("gemm-vs-naive", 40, |g| {
-        // odd/rectangular shapes straddling the register tile (MR=4)
-        // and the k cache panel (KC=256); B=0 and B=1 edge cases
+        // odd/rectangular shapes straddling the register tile (MR=4),
+        // the packed column panel (NR=8) and the k cache panel
+        // (KC=256); B=0 and B=1 edge cases
         let m = *g.pick(&[0usize, 1, 2, 3, 4, 5, 7, 12, 33]);
         let n = g.usize_in(1, 24);
         let k = *g.pick(&[1usize, 2, 7, 31, 64, 300]);
@@ -207,21 +212,127 @@ fn gemm_matches_naive_reference_and_shards_bitwise() {
         assert_eq!(want_bits, got_bits,
                    "blocked kernel diverged: m={m} n={n} k={k} epi={epi:?}");
 
-        // M-sharded execution on the global pool is bit-invariant in
-        // the shard count
+        // the prepacked-panel kernel is bit-identical to the naive
+        // reference by construction
+        let pb = PackedB::pack(k, n, &b);
+        let mut packed = vec![0.0f32; m * n];
+        gemm_packed_bias_act(m, n, k, &a, &pb, bias, epi, res, &mut packed);
+        let packed_bits: Vec<u32> =
+            packed.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want_bits, packed_bits,
+                   "packed kernel diverged: m={m} n={n} k={k} epi={epi:?}");
+
+        // 2-D (M×N) sharded execution on the global pool is
+        // bit-invariant in the shard count, for both kernel generations
         for shards in [2usize, 3, 8, 64] {
             let mut sh = vec![0.0f32; m * n];
             gemm_sharded(m, n, k, &a, &b, bias, epi, res, &mut sh, shards);
             let sh_bits: Vec<u32> = sh.iter().map(|v| v.to_bits()).collect();
             assert_eq!(want_bits, sh_bits,
                        "shards={shards} changed bits: m={m} n={n} k={k}");
+            let mut psh = vec![0.0f32; m * n];
+            gemm_packed_sharded(m, n, k, &a, &pb, bias, epi, res, &mut psh,
+                                shards);
+            let psh_bits: Vec<u32> =
+                psh.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want_bits, psh_bits,
+                       "packed shards={shards} changed bits: m={m} n={n} \
+                        k={k}");
         }
     });
 }
 
 #[test]
+fn packed_gemm_2d_sharding_is_pool_invariant_at_serve_shapes() {
+    use asd::math::gemm::{gemm_packed_sharded, gemm_ref, Epilogue,
+                          PackedB};
+
+    // the small-M serving shapes the 2-D scheduler exists for: a
+    // single MR row block fans out over NR column panels; pool sizes
+    // 1/2/8 must produce identical bits
+    for &(m, n, k) in &[(4usize, 96usize, 64usize), (2, 64, 300),
+                        (16, 40, 17)] {
+        let a: Vec<f32> =
+            (0..m * k).map(|i| ((i % 211) as f32 / 211.0) - 0.5).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| ((i % 223) as f32 / 223.0) - 0.5).collect();
+        let bias: Vec<f32> =
+            (0..n).map(|i| ((i % 19) as f32 / 19.0) - 0.5).collect();
+        let pb = PackedB::pack(k, n, &b);
+        let mut want = vec![0.0f32; m * n];
+        gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
+                 &mut want);
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        for pool in [1usize, 2, 8] {
+            let mut got = vec![0.0f32; m * n];
+            let eff = gemm_packed_sharded(m, n, k, &a, &pb, Some(&bias),
+                                          Epilogue::Silu, None, &mut got,
+                                          pool);
+            assert!(eff >= 1 && eff <= pool.max(1));
+            let got_bits: Vec<u32> =
+                got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want_bits, got_bits,
+                       "m={m} n={n} k={k} pool={pool}");
+        }
+    }
+}
+
+#[test]
+fn exp_fast_edge_semantics_and_max_ulp_vs_libm() {
+    use asd::math::gemm::exp_fast;
+
+    // exactness at 0 (both signs)
+    assert_eq!(exp_fast(0.0).to_bits(), 1.0f32.to_bits());
+    assert_eq!(exp_fast(-0.0).to_bits(), 1.0f32.to_bits());
+    // NaN propagation
+    assert!(exp_fast(f32::NAN).is_nan());
+    // +overflow saturation: inf at and past libm's 88.7228 overflow
+    // point, and — by the documented early-saturation contract — from
+    // the 88.3 clamp point on (no band that silently underestimates)
+    assert_eq!(exp_fast(88.73), f32::INFINITY);
+    assert_eq!(exp_fast(150.0), f32::INFINITY);
+    assert_eq!(exp_fast(f32::MAX), f32::INFINITY);
+    assert_eq!(exp_fast(f32::INFINITY), f32::INFINITY);
+    assert_eq!(exp_fast(88.301), f32::INFINITY);
+    assert!(exp_fast(88.29).is_finite());
+    // -overflow: flushes to ~min-normal — strictly positive, never 0
+    // or negative, monotone-safe for the silu denominator
+    for x in [-87.34f32, -100.0, -1e4, f32::NEG_INFINITY] {
+        let y = exp_fast(x);
+        assert!(y > 0.0 && y < 1.3e-38, "exp_fast({x}) = {y}");
+    }
+    // max-ulp sweep vs libm over the satellite's [-87.3, 88.7] band.
+    // Inside the clamp ([-87.3, 88.3]) exp_fast must track libm to a
+    // few ulp; past 88.3 it deliberately saturates to +inf (asserted
+    // exactly), which libm only reaches at 88.7228.
+    let (lo, hi) = (-87.3f64, 88.7f64);
+    let steps = 200_000usize;
+    let mut max_ulp = 0u32;
+    let mut worst = 0.0f32;
+    for i in 0..=steps {
+        let x = (lo + (hi - lo) * i as f64 / steps as f64) as f32;
+        let got = exp_fast(x);
+        if x > 88.3 {
+            assert_eq!(got, f32::INFINITY, "x={x} must saturate");
+            continue;
+        }
+        let want = x.exp(); // libm expf
+        assert!(want.is_finite() && want > 0.0);
+        // both positive normals: bit distance == ulp distance
+        let ulp = want.to_bits().abs_diff(got.to_bits());
+        if ulp > max_ulp {
+            max_ulp = ulp;
+            worst = x;
+        }
+    }
+    assert!(max_ulp <= 16,
+            "exp_fast drifted {max_ulp} ulp from libm at x={worst} \
+             (contract: ~2 ulp, budget 16)");
+}
+
+#[test]
 fn native_mlp_gemm_path_matches_scalar_ref() {
-    use asd::model::{DenoiseModel, NativeMlp, VariantInfo};
+    use asd::model::{DenoiseModel, NativeMlp, VariantInfo, Workspace};
 
     prop::check("mlp-gemm-vs-ref", 15, |g| {
         let d = g.usize_in(1, 6);
@@ -249,6 +360,20 @@ fn native_mlp_gemm_path_matches_scalar_ref() {
                 let tol = 1e-5 * want[i].abs().max(1.0);
                 assert!((want[i] - got[i]).abs() <= tol,
                         "n={n} i={i}: ref {} vs gemm {}", want[i], got[i]);
+            }
+            // the packed pipeline's in-layer 2-D GEMM tiling must be
+            // BIT-identical to the serial packed path (not just within
+            // the exp_fast tolerance)
+            let mut ws = Workspace::new();
+            for shards in [2usize, 8] {
+                let mut tiled = vec![0.0; n * d];
+                mlp.denoise_batch_tiled(&ys, &ts, &cond, n, &mut tiled,
+                                        &mut ws, shards)
+                    .unwrap();
+                for i in 0..n * d {
+                    assert_eq!(got[i].to_bits(), tiled[i].to_bits(),
+                               "tiled n={n} shards={shards} i={i}");
+                }
             }
         }
     });
