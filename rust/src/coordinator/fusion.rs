@@ -1,10 +1,12 @@
-//! `FusionScheduler` — round-synchronous cross-request batch fusion on
-//! the [`RoundArena`](crate::sampler::RoundArena) data plane.
+//! `FusionScheduler` — cross-request batch fusion on the
+//! [`RoundArena`](crate::sampler::RoundArena) data plane.
 //!
 //! One scheduler owns the in-flight requests of a serving lane (one
 //! lane per variant — see `coordinator::lanes`). A round is three
-//! phases, split so a lane driver can co-schedule *many* lanes' rounds
-//! on the one global pool inside a single tick:
+//! phases, split so a lane driver can submit *many* lanes' rounds to
+//! the one global pool as independent, continuously executing round
+//! tasks (`server::Driver` — no global tick, no barrier between
+//! lanes):
 //!
 //! 1. [`FusionScheduler::begin_round`] — poll phase: retire finished
 //!    machines (answer their requests), then have every in-flight

@@ -16,15 +16,16 @@
 //!   model `Arc` (snapshotted once at lane creation — the models map
 //!   is never locked on the round hot path), its `ParallelModel`
 //!   wrapper, and its arena-based `FusionScheduler` (round arena +
-//!   GEMM workspace persist across ticks and fusion groups: zero
+//!   GEMM workspace persist across rounds and fusion groups: zero
 //!   steady-state allocations).
 //! * **Claim/release**: a worker *claims* every busy, unclaimed lane
-//!   it can and drives them together — each tick polls **all** held
-//!   lanes, then co-schedules their fused `denoise_round` calls
-//!   concurrently on the one global pool
-//!   (`server::tick_lanes`). Two variants' rounds therefore run inside
-//!   the same tick window even on a single worker; with more workers,
-//!   lanes spread dynamically. A drained lane whose queue is empty is
+//!   it can and drives them together — each lane's fused
+//!   `denoise_round` is submitted to the one global pool as an
+//!   independent round task the moment the lane stages rows, and
+//!   re-submitted the moment it completes (`server::Driver`; no global
+//!   tick). Two variants' rounds therefore overlap even on a single
+//!   worker, each cycling at its own cadence; with more workers, lanes
+//!   spread dynamically. A drained lane whose queue is empty is
 //!   released back to the table for any worker to claim later.
 //!
 //! Per-variant FIFO order is preserved (each queue is popped from the
@@ -80,7 +81,7 @@ impl Lane {
 
     /// Admit a batch of queued jobs into the lane's fused scheduler
     /// (draining `jobs`, whose allocation the caller reuses across
-    /// ticks), keeping the group-formation counters consistent with the
+    /// rounds), keeping the group-formation counters consistent with the
     /// pre-lane batcher: the first time a group reaches >= 2 concurrent
     /// requests it counts as one batched group (founding members
     /// included); later admissions into a counted group count as fused
@@ -105,8 +106,8 @@ impl Lane {
         }
     }
 
-    /// Phase 1 of a tick: retire finished requests, stage demands into
-    /// the lane arena.
+    /// Phase 1 of a round: retire finished requests, stage demands
+    /// into the lane arena.
     pub(crate) fn begin_round(&mut self, metrics: &Metrics) {
         self.sched.begin_round(metrics);
     }
@@ -116,8 +117,9 @@ impl Lane {
         self.sched.has_round()
     }
 
-    /// Phase 2: the lane's fused model call. Lock-free; co-scheduled
-    /// across lanes on the global pool by `server::tick_lanes`.
+    /// Phase 2: the lane's fused model call. Lock-free; runs as an
+    /// independent round task on the global pool (`server::Driver`),
+    /// concurrently with other lanes' rounds.
     pub(crate) fn execute_round(&mut self) {
         self.sched.execute_round();
     }
@@ -200,8 +202,8 @@ impl LaneState {
 
     /// Variants that currently have queued jobs, collected into the
     /// caller's reusable buffer (String allocations are recycled across
-    /// calls — the per-tick claim scan stays allocation-free in steady
-    /// state).
+    /// calls — the per-round claim scan stays allocation-free in
+    /// steady state).
     pub(crate) fn queued_variants(&self, out: &mut Vec<String>) {
         collect_names(self.queues.iter()
                           .filter(|(_, q)| !q.is_empty())
@@ -211,7 +213,7 @@ impl LaneState {
 
     /// Variants whose *parked* lanes still hold in-flight machines.
     /// Normal releases only park drained lanes, so this is non-empty
-    /// only after a panic recovery (`server::LaneGuard`) parked a lane
+    /// only after a panic recovery (`server::Driver`'s drop) parked a lane
     /// mid-flight — gather scans it so those requests resume instead of
     /// stranding their clients.
     pub(crate) fn parked_nonidle(&self, out: &mut Vec<String>) {

@@ -4,16 +4,18 @@
 //! short-lived mutex; the hot path does sampling, not metric churn).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use crate::math::stats::Welford;
+use crate::runtime::pool::{self, PoolStats};
 
 /// Per-lane (per-variant) round aggregates: how saturated each lane's
 /// fused rounds run, how long its requests queue, and the elapsed-time
 /// window its rounds executed in. Overlapping windows across lanes are
 /// the observable proof that two variants' rounds ran concurrently
-/// inside the same tick window instead of behind each other.
+/// (continuous round tasks on the shared pool) instead of behind each
+/// other.
 #[derive(Debug, Default)]
 struct LaneAgg {
     fused_rounds: u64,
@@ -68,6 +70,12 @@ pub struct Metrics {
     inner: Mutex<Inner>,
     /// coordinator birth — the zero point of the per-lane round windows
     started: Instant,
+    /// global-pool counters at coordinator birth: snapshots report the
+    /// delta, i.e. this coordinator's share of scheduler activity
+    /// (other pool users in the same process inflate it — the counters
+    /// are process-global — so treat the values as lower-bounded
+    /// activity, not an exact attribution)
+    pool_base: PoolStats,
 }
 
 impl Default for Metrics {
@@ -75,6 +83,10 @@ impl Default for Metrics {
         Metrics {
             inner: Mutex::new(Inner::default()),
             started: Instant::now(),
+            // global_stats() reads counters without spawning the pool:
+            // a coordinator that never runs a fused round never forces
+            // worker threads into existence
+            pool_base: pool::global_stats(),
         }
     }
 }
@@ -144,6 +156,11 @@ pub struct MetricsSnapshot {
     pub fused_occupancy: f64,
     /// per-variant lane aggregates, sorted by lane name
     pub lanes: Vec<LaneSnapshot>,
+    /// work-stealing scheduler activity since coordinator start
+    /// (entries executed / stolen across deques / pushed through the
+    /// injector / lane round tasks), from the process-global pool
+    /// counters — see `runtime::pool::PoolStats`
+    pub pool: PoolStats,
 }
 
 impl MetricsSnapshot {
@@ -154,13 +171,22 @@ impl MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Lock the aggregate table, recovering from poisoning: a worker
+    /// that panics while holding the metrics mutex must not take every
+    /// other worker's metric updates (and `snapshot`) down with it —
+    /// the aggregates are plain counters, valid at every intermediate
+    /// state.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn on_submit(&self) {
-        self.inner.lock().unwrap().submitted += 1;
+        self.lock().submitted += 1;
     }
 
     /// Bounded admission turned a request away.
     pub fn on_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.lock().rejected += 1;
     }
 
     /// One fused round on `lane`: `rows` total rows from `requests`
@@ -169,7 +195,7 @@ impl Metrics {
     pub fn on_fused_round(&self, lane: &str, rows: usize, requests: usize,
                           shards: usize, arena_bytes: usize) {
         let now_s = self.started.elapsed().as_secs_f64();
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.fused_rounds += 1;
         m.fused_rows += rows as u64;
         m.fused_requests.push(requests as f64);
@@ -190,7 +216,7 @@ impl Metrics {
     /// A request entered `lane`'s fused scheduler after waiting
     /// `queued_s` in the admission queue.
     pub fn on_lane_admit(&self, lane: &str, queued_s: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         let agg = lane_agg(&mut m, lane);
         agg.admitted += 1;
         agg.queue_wait.push(queued_s * 1e3);
@@ -198,7 +224,7 @@ impl Metrics {
 
     pub fn on_complete(&self, queued_s: f64, service_s: f64,
                        model_calls: usize, rounds: usize, failed: bool) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         if failed {
             m.failed += 1;
         } else {
@@ -211,7 +237,7 @@ impl Metrics {
     }
 
     pub fn on_batch(&self, group_size: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.batched_groups += 1;
         m.batched_requests += group_size as u64;
     }
@@ -219,13 +245,13 @@ impl Metrics {
     /// Continuous admission added `n` requests to an in-flight fusion
     /// group (they batch with the group but don't form a new one).
     pub fn on_fused_admit(&self, n: usize) {
-        self.inner.lock().unwrap().batched_requests += n as u64;
+        self.lock().batched_requests += n as u64;
     }
 
     /// Record a request's measured per-round latencies and shard
     /// occupancies (from `AsdStats`).
     pub fn on_round_stats(&self, latencies_s: &[f64], shards: &[usize]) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         for &l in latencies_s {
             m.round_latency.push(l * 1e3);
         }
@@ -235,7 +261,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         MetricsSnapshot {
             submitted: m.submitted,
             rejected: m.rejected,
@@ -289,6 +315,7 @@ impl Metrics {
                     arena_high_water_bytes: a.arena_high_water_bytes,
                 })
                 .collect(),
+            pool: pool::global_stats().since(&self.pool_base),
         }
     }
 }

@@ -1,20 +1,24 @@
 //! L3 serving stack: request router + variant lanes + worker pool.
 //!
-//! Lane-scheduled, round-synchronous fused-batch engine: clients
-//! submit sampling [`Request`]s into *variant-keyed* queues; each
-//! registered variant is served by its own lane ([`lanes`]) holding
-//! the variant's model snapshot and an arena-based fusion scheduler
+//! Lane-scheduled, continuously-fused batch engine: clients submit
+//! sampling [`Request`]s into *variant-keyed* queues; each registered
+//! variant is served by its own lane ([`lanes`]) holding the variant's
+//! model snapshot and an arena-based fusion scheduler
 //! ([`fusion::FusionScheduler`]). Workers claim busy lanes and drive
-//! them together: every tick polls ALL held lanes — ASD, Picard and
+//! them as independent round tasks on the one global work-stealing
+//! pool (`server::Driver`): a lane's fused `denoise_round` is
+//! submitted the moment the lane stages rows — ASD, Picard and
 //! sequential requests alike, factored as `sampler::StepSampler`
 //! machines writing demands straight into the lane's `RoundArena` —
-//! then co-schedules the per-lane fused `denoise_round` calls on the
-//! one global pool, so a mixed-variant workload never suffers
-//! cross-variant head-of-line blocking. Native-model outputs are
-//! bit-identical to per-request execution (row independence; see
-//! `model::parallel`). Metrics cover queueing, latency, per-sampler
-//! round counts, fused-round occupancy, admission rejections, and
-//! per-lane aggregates ([`metrics::LaneSnapshot`]).
+//! and re-submitted the moment it completes, with no global tick and
+//! no barrier, so a mixed-variant workload never suffers cross-variant
+//! head-of-line blocking and a straggler lane never stalls its
+//! siblings. Native-model outputs are bit-identical to per-request
+//! execution for every pool size and steal schedule (row independence;
+//! see `model::parallel`). Metrics cover queueing, latency,
+//! per-sampler round counts, fused-round occupancy, admission
+//! rejections, per-lane aggregates ([`metrics::LaneSnapshot`]) and the
+//! pool's scheduler counters ([`MetricsSnapshot::pool`]).
 
 pub(crate) mod fusion;
 pub(crate) mod lanes;

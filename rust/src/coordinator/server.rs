@@ -22,8 +22,7 @@ use crate::runtime::pool::{self, PoolConfig};
 pub struct ServerConfig {
     pub workers: usize,
     /// fuse at most this many concurrent requests into one lane's
-    /// round-synchronous group (any sampler mix; see
-    /// `coordinator::fusion`)
+    /// fused round group (any sampler mix; see `coordinator::fusion`)
     pub max_batch: usize,
     pub enable_batching: bool,
     /// bounded admission: submissions beyond this *total* queue depth
@@ -98,9 +97,10 @@ struct Shared {
 /// either HLO executables or the native oracle); requests are submitted
 /// from any thread and answered over per-request channels. Each
 /// registered variant is served by its own lane (`coordinator::lanes`):
-/// workers claim busy lanes and co-schedule their fused rounds on the
-/// global pool, so no variant ever waits behind another variant's
-/// burst.
+/// workers claim busy lanes and submit each lane's fused round to the
+/// global pool as an independent task ([`Driver`]) — rounds run
+/// continuously with no tick barrier, so no variant ever waits behind
+/// another variant's burst or straggler round.
 pub struct Coordinator {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -157,7 +157,7 @@ impl Coordinator {
         let (tx, rx) = channel();
         self.shared.metrics.on_submit();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_state(&self.shared);
             let depth = st.depth();
             if depth >= self.shared.config.max_queue_depth {
                 drop(st);
@@ -182,7 +182,7 @@ impl Coordinator {
 
     /// Total queued (not yet admitted) jobs across all variant lanes.
     pub fn queue_depth(&self) -> usize {
-        self.shared.state.lock().unwrap().depth()
+        lock_state(&self.shared).depth()
     }
 
     pub fn shutdown(mut self) {
@@ -216,14 +216,14 @@ fn worker_loop(shared: Arc<Shared>) {
 fn single_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_state(&shared);
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
                 match st.pop_oldest() {
                     Some(job) => break job,
-                    None => st = shared.cv.wait(st).unwrap(),
+                    None => st = wait_state(&shared, st),
                 }
             }
         };
@@ -231,37 +231,349 @@ fn single_loop(shared: Arc<Shared>) {
     }
 }
 
-/// Jobs popped for a lane this worker holds, tagged with the `held`
-/// index, lane-contiguous (a flat, reusable buffer — the machines are
-/// built outside the state lock, since construction does Philox
+/// Jobs popped for a lane this driver holds, tagged with the lane's
+/// slot index, slot-contiguous (a flat, reusable buffer — the machines
+/// are built outside the state lock, since construction does Philox
 /// draws).
 type Admissions = Vec<(usize, QueuedJob)>;
 
-/// Holds a worker's claimed lanes and releases them back to the lane
-/// table if the worker unwinds. Without this, a panic escaping a tick
-/// (a machine-math bug, a poisoned metrics mutex, ...) would leave
-/// every held lane's slot claimed forever — the variant could never be
-/// served again and its queue would pin `max_queue_depth` budget.
-/// Normal control flow drains `lanes` itself, making the drop a no-op.
-struct LaneGuard<'a> {
-    shared: &'a Shared,
-    lanes: Vec<Box<Lane>>,
+/// Lock the coordinator state, recovering the guard if a panicking
+/// sibling poisoned the mutex: the queue tables stay structurally
+/// valid (panics never unwind mid-mutation under this lock), and a
+/// recovered guard beats permanently unservable variants or a cascade
+/// of worker deaths.
+fn lock_state(shared: &Shared) -> std::sync::MutexGuard<'_, LaneState> {
+    shared.state.lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
-impl Drop for LaneGuard<'_> {
+/// `cv.wait` on the state lock with the same poison recovery as
+/// [`lock_state`].
+fn wait_state<'a>(shared: &'a Shared,
+                  st: std::sync::MutexGuard<'a, LaneState>)
+                  -> std::sync::MutexGuard<'a, LaneState> {
+    shared.cv.wait(st)
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A raw lane pointer smuggled into a round task's closure; sound
+/// because the driver keeps the boxed lane alive — and never touches
+/// it — from submission until the task's key is drained from the
+/// driver's round group (enforced by the `inflight` flags; see
+/// [`Driver`]).
+struct SendLane(*mut Lane);
+unsafe impl Send for SendLane {}
+
+/// One worker's continuous round runtime over its claimed lanes.
+///
+/// Replaces the tick-synchronous `tick_lanes` barrier: each held
+/// lane's fused round is submitted to the global pool as an
+/// independent round task the moment the lane stages rows
+/// ([`Driver::pump`]), and the lane is re-polled and re-submitted the
+/// moment its completion is drained ([`Driver::wait_and_finish`]) —
+/// while sibling lanes' rounds are still executing. A straggler lane
+/// therefore delays nobody: fast lanes cycle at their own cadence,
+/// idle pool workers steal whatever is queued (the driver itself helps
+/// while blocked in `wait_rounds`), and the only per-lane
+/// serialization left is the cheap poll/resume sampler math on this
+/// driver thread.
+///
+/// Slots are stable: `held[i]` keeps its index for the lane's whole
+/// claim (freed slots recycle through a free list) because in-flight
+/// round tasks address their lane by slot key. An in-flight slot's
+/// `Box<Lane>` is mutably aliased by its round task, so the driver
+/// never reads it — `names[i]` carries the variant for bookkeeping
+/// that must run mid-flight.
+///
+/// Dropping the driver (normal return or unwind) first waits out every
+/// in-flight round, then parks all held lanes back in the table — the
+/// panic-recovery role the old `LaneGuard` played, extended to never
+/// release a lane whose round still executes on the pool.
+struct Driver<'a> {
+    shared: &'a Shared,
+    held: Vec<Option<Box<Lane>>>,
+    /// slot -> variant name, readable while the lane box is aliased
+    names: Vec<Option<String>>,
+    /// slot has a submitted round task whose completion is undrained
+    inflight: Vec<bool>,
+    free: Vec<usize>,
+    n_held: usize,
+    n_inflight: usize,
+    group: pool::RoundGroup,
+    /// `wait_rounds` drain buffer, reused across rounds
+    done: Vec<(usize, bool)>,
+}
+
+impl<'a> Driver<'a> {
+    fn new(shared: &'a Shared) -> Driver<'a> {
+        Driver {
+            shared,
+            held: Vec::new(),
+            names: Vec::new(),
+            inflight: Vec::new(),
+            free: Vec::new(),
+            n_held: 0,
+            n_inflight: 0,
+            group: pool::RoundGroup::new(),
+            done: Vec::new(),
+        }
+    }
+
+    fn holds_variant(&self, variant: &str) -> bool {
+        self.names.iter().any(|n| n.as_deref() == Some(variant))
+    }
+
+    /// Install a claimed lane in a stable slot, returning its index.
+    fn place(&mut self, lane: Box<Lane>) -> usize {
+        self.n_held += 1;
+        match self.free.pop() {
+            Some(i) => {
+                self.names[i] = Some(lane.variant.clone());
+                self.held[i] = Some(lane);
+                self.inflight[i] = false;
+                i
+            }
+            None => {
+                self.names.push(Some(lane.variant.clone()));
+                self.held.push(Some(lane));
+                self.inflight.push(false);
+                self.held.len() - 1
+            }
+        }
+    }
+
+    /// Under the state lock: top up every held, not-in-flight lane
+    /// from its variant queue and claim any other busy, unclaimed lane
+    /// (creating it — with its model `Arc` snapshot — on first use).
+    /// Popped jobs land flat in `admissions` keyed by slot index;
+    /// unknown-variant jobs land in `failures`. Machine construction
+    /// and response sends happen outside the lock. An in-flight lane
+    /// is never touched (its round task owns the `&mut`): its queued
+    /// jobs wait at most one round for the completion to drain.
+    fn gather(&mut self, st: &mut LaneState, admissions: &mut Admissions,
+              failures: &mut Vec<(QueuedJob, String)>,
+              variants: &mut Vec<String>, jobs: &mut Vec<QueuedJob>) {
+        let shared = self.shared;
+        let max_batch = shared.config.max_batch;
+        // 1) continuous admission into lanes this driver already holds
+        for i in 0..self.held.len() {
+            if self.inflight[i] {
+                continue;
+            }
+            let Some(lane) = self.held[i].as_ref() else { continue };
+            let room = max_batch.saturating_sub(lane.in_flight());
+            if room == 0 {
+                continue;
+            }
+            jobs.clear();
+            if st.take(&lane.variant, room, jobs) > 0 {
+                admissions.extend(jobs.drain(..).map(|j| (i, j)));
+            }
+        }
+        // 2) claim lanes for every other variant with queued work
+        // (`variants` recycles its String buffers across rounds)
+        st.queued_variants(variants);
+        for vi in 0..variants.len() {
+            let variant = variants[vi].as_str();
+            if self.holds_variant(variant) {
+                continue; // held but out of room, or mid-round
+            }
+            let lane = match st.claim(variant) {
+                LaneClaim::Busy => continue, // another worker drives it
+                LaneClaim::Claimed(lane) => lane,
+                LaneClaim::Create => {
+                    // snapshot the model Arc once per lane — the
+                    // registry is never locked again for this
+                    // variant's rounds. The slot is already marked
+                    // held; if the lookup or lane construction unwinds
+                    // (poisoned registry mutex, model metadata panic)
+                    // the marker must be abandoned, or the variant
+                    // would answer Busy forever.
+                    let built = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            shared.models.lock().unwrap().get(variant)
+                                .cloned()
+                                .map(|m| Box::new(Lane::new(
+                                    variant, m, shared.config.pool,
+                                    shared.config.arena_byte_cap)))
+                        }));
+                    match built {
+                        Ok(Some(lane)) => lane,
+                        Ok(None) => {
+                            st.abandon(variant);
+                            let msg = format!("unknown model '{variant}'");
+                            for job in st.drain_variant(variant) {
+                                failures.push((job, msg.clone()));
+                            }
+                            continue;
+                        }
+                        Err(panic) => {
+                            st.abandon(variant);
+                            std::panic::resume_unwind(panic);
+                        }
+                    }
+                }
+            };
+            let room = max_batch.saturating_sub(lane.in_flight());
+            jobs.clear();
+            st.take(variant, room, jobs);
+            let idx = self.place(lane);
+            admissions.extend(jobs.drain(..).map(|j| (idx, j)));
+        }
+        // 3) panic-recovery backstop: adopt parked lanes that still
+        // hold in-flight machines (only possible when a panicking
+        // driver parked lanes mid-flight) so their admitted requests
+        // keep making progress instead of stranding their clients
+        st.parked_nonidle(variants);
+        for vi in 0..variants.len() {
+            let variant = variants[vi].as_str();
+            if self.holds_variant(variant) {
+                continue;
+            }
+            if let LaneClaim::Claimed(lane) = st.claim(variant) {
+                self.place(lane);
+            }
+        }
+    }
+
+    /// Build machines for freshly popped jobs (outside the state
+    /// lock), batch-admitting per lane so group-formation metrics see
+    /// whole batches. `batch` is a reusable scratch buffer;
+    /// `admissions` entries are slot-contiguous by construction
+    /// (gather appends per lane) and only ever target lanes that are
+    /// not in flight.
+    fn apply_admissions(&mut self, admissions: &mut Admissions,
+                        batch: &mut Vec<QueuedJob>) {
+        let mut iter = admissions.drain(..).peekable();
+        while let Some((idx, job)) = iter.next() {
+            batch.clear();
+            batch.push(job);
+            while iter.peek().is_some_and(|&(next, _)| next == idx) {
+                batch.push(iter.next().unwrap().1);
+            }
+            debug_assert!(!self.inflight[idx],
+                          "admission into an in-flight lane");
+            self.held[idx].as_mut().expect("admission into empty slot")
+                .admit(batch, &self.shared.metrics);
+        }
+    }
+
+    /// Poll every held, not-in-flight lane (retiring finished machines
+    /// and staging demands) and submit a round task for each lane that
+    /// staged rows. The task executes the lane's fused call on
+    /// whichever pool thread pops it; completions drain through
+    /// [`Self::wait_and_finish`]. Lanes already mid-round are skipped —
+    /// that is what makes rounds continuous instead of tick-aligned.
+    fn pump(&mut self) {
+        let metrics = &self.shared.metrics;
+        for i in 0..self.held.len() {
+            if self.inflight[i] {
+                continue;
+            }
+            let Some(lane) = self.held[i].as_mut() else { continue };
+            guard_phase(lane, metrics, "poll", |l| l.begin_round(metrics));
+            if !lane.has_round() {
+                continue;
+            }
+            let ptr = SendLane(&mut **lane as *mut Lane);
+            pool::global().submit_round(
+                &self.group, i,
+                Box::new(move || {
+                    // SAFETY: see SendLane — the driver neither touches
+                    // nor drops this lane until the key drains from its
+                    // group
+                    let lane = unsafe { &mut *ptr.0 };
+                    lane.execute_round();
+                }));
+            self.inflight[i] = true;
+            self.n_inflight += 1;
+        }
+    }
+
+    /// Block until at least one submitted round completes (helping the
+    /// pool execute queued work while blocked — see
+    /// `ThreadPool::wait_rounds`), then run the scatter phase for every
+    /// completed lane. Sibling lanes' rounds keep executing throughout:
+    /// there is no barrier anywhere in this path.
+    fn wait_and_finish(&mut self) {
+        let metrics = &self.shared.metrics;
+        self.done.clear();
+        pool::global().wait_rounds(&self.group, &mut self.done);
+        for k in 0..self.done.len() {
+            let (key, panicked) = self.done[k];
+            self.inflight[key] = false;
+            self.n_inflight -= 1;
+            let lane = self.held[key].as_mut()
+                .expect("round completion for an empty slot");
+            if panicked {
+                // the round task itself panicked (execute_round already
+                // contains model-call panics, so this is scheduler
+                // bookkeeping gone wrong): mid-round machines are
+                // unusable — fail the group, keep the lane servable
+                lane.fail_all(
+                    "lane round task panicked during fused execute",
+                    metrics);
+            } else {
+                guard_phase(lane, metrics, "resume",
+                            |l| l.finish_round(metrics));
+            }
+        }
+    }
+
+    /// Under the state lock: park every held lane that drained and (in
+    /// normal operation) has no queued work; during wind-down park
+    /// every drained lane unconditionally. In-flight lanes are never
+    /// released — their round task still owns the `&mut`.
+    fn release_drained(&mut self, st: &mut LaneState, wind_down: bool) {
+        for i in 0..self.held.len() {
+            if self.inflight[i] {
+                continue;
+            }
+            let Some(lane) = self.held[i].as_ref() else { continue };
+            if !lane.is_idle() {
+                continue;
+            }
+            if !wind_down && st.has_queued(&lane.variant) {
+                continue;
+            }
+            st.release(self.held[i].take().unwrap());
+            self.names[i] = None;
+            self.free.push(i);
+            self.n_held -= 1;
+        }
+    }
+}
+
+impl Drop for Driver<'_> {
     fn drop(&mut self) {
-        if self.lanes.is_empty() {
+        // 1) wait out in-flight round tasks: a lane whose fused call
+        // still executes on the pool must not be parked (the task holds
+        // a &mut into the box). Completions always arrive — the global
+        // pool is never torn down and round-task panics are contained.
+        while self.n_inflight > 0 {
+            self.done.clear();
+            pool::global().wait_rounds(&self.group, &mut self.done);
+            for k in 0..self.done.len() {
+                let key = self.done[k].0;
+                if self.inflight[key] {
+                    self.inflight[key] = false;
+                    self.n_inflight -= 1;
+                }
+            }
+        }
+        if self.n_held == 0 {
             return;
         }
-        // a panicking sibling may have poisoned the state mutex; still
-        // recover the guard — a poisoned queue table beats permanently
-        // unservable variants
-        let mut st = match self.shared.state.lock() {
-            Ok(st) => st,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        for lane in self.lanes.drain(..) {
-            st.release(lane);
+        // 2) park every held lane — even non-idle ones. This drop runs
+        // on unwind too: a panicking driver's lanes must go back to the
+        // table, where gather's parked_nonidle backstop lets another
+        // worker adopt them; a claimed-forever slot would make the
+        // variant unservable and pin queue budget.
+        let mut st = lock_state(self.shared);
+        for slot in self.held.iter_mut() {
+            if let Some(lane) = slot.take() {
+                st.release(lane);
+            }
         }
         drop(st);
         self.shared.cv.notify_all();
@@ -269,168 +581,59 @@ impl Drop for LaneGuard<'_> {
 }
 
 /// The lane-scheduling worker loop: claim every busy, unclaimed lane,
-/// then drive all held lanes tick by tick — each tick polls ALL lanes
-/// and co-schedules their fused rounds on the one global pool
-/// ([`tick_lanes`]), so a worker holding two variants' lanes advances
-/// both inside the same tick instead of serving them back to back.
-/// All loop bookkeeping buffers are worker-local and reused across
-/// ticks; the per-round data plane itself (arena + workspace, inside
-/// each lane) allocates nothing in steady state.
+/// then drive all held lanes continuously — each lane's fused round is
+/// an independent task on the one global pool ([`Driver`]), finished
+/// and re-submitted the moment it completes. There is no global tick
+/// and no barrier: a straggler lane's round never gates its siblings'.
+/// All loop bookkeeping buffers are worker-local and reused; the
+/// per-round data plane itself (arena + workspace, inside each lane)
+/// allocates nothing in steady state.
 fn lane_loop(shared: Arc<Shared>) {
-    let mut guard = LaneGuard { shared: &*shared, lanes: Vec::new() };
-    let held = &mut guard.lanes;
+    let mut driver = Driver::new(&shared);
     let mut admissions: Admissions = Vec::new();
     let mut failures: Vec<(QueuedJob, String)> = Vec::new();
     let mut variants: Vec<String> = Vec::new();
     let mut jobs: Vec<QueuedJob> = Vec::new();
     let mut batch: Vec<QueuedJob> = Vec::new();
-    let mut busy: Vec<*mut Lane> = Vec::new();
     loop {
         // ---- blocking claim: wait until some lane has work ----
         {
-            let mut st = guard.shared.state.lock().unwrap();
+            let mut st = lock_state(&shared);
             loop {
-                if guard.shared.shutdown.load(Ordering::SeqCst) {
-                    for lane in held.drain(..) {
-                        st.release(lane);
-                    }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    // no lanes are held here: the drive loop below only
+                    // exits once every held lane drained and was parked
                     return;
                 }
-                gather(guard.shared, &mut st, held, &mut admissions,
-                       &mut failures, &mut variants, &mut jobs);
-                if !held.is_empty() || !failures.is_empty() {
+                driver.gather(&mut st, &mut admissions, &mut failures,
+                              &mut variants, &mut jobs);
+                if driver.n_held > 0 || !failures.is_empty() {
                     break;
                 }
-                st = guard.shared.cv.wait(st).unwrap();
+                st = wait_state(&shared, st);
             }
         }
-        answer_failures(guard.shared, &mut failures);
-        apply_admissions(guard.shared, held, &mut admissions, &mut batch);
+        answer_failures(&shared, &mut failures);
+        driver.apply_admissions(&mut admissions, &mut batch);
 
-        // ---- drive the held lanes until they all drain ----
-        while !held.is_empty() {
-            tick_lanes(held, &guard.shared.metrics, &mut busy);
+        // ---- continuous drive: no global tick ----
+        while driver.n_held > 0 {
+            driver.pump();
+            if driver.n_inflight > 0 {
+                driver.wait_and_finish();
+            }
             {
-                let mut st = guard.shared.state.lock().unwrap();
-                if guard.shared.shutdown.load(Ordering::SeqCst) {
-                    // wind down: finish in-flight machines only — park
-                    // drained lanes, admit nothing new
-                    let mut i = 0;
-                    while i < held.len() {
-                        if held[i].is_idle() {
-                            st.release(held.swap_remove(i));
-                        } else {
-                            i += 1;
-                        }
-                    }
-                } else {
-                    // park lanes that drained and have no queued work;
-                    // top up / newly claim the rest (continuous
-                    // admission + cross-variant pickup)
-                    let mut i = 0;
-                    while i < held.len() {
-                        if held[i].is_idle()
-                            && !st.has_queued(&held[i].variant)
-                        {
-                            st.release(held.swap_remove(i));
-                        } else {
-                            i += 1;
-                        }
-                    }
-                    gather(guard.shared, &mut st, held, &mut admissions,
-                           &mut failures, &mut variants, &mut jobs);
+                let mut st = lock_state(&shared);
+                let wind_down = shared.shutdown.load(Ordering::SeqCst);
+                driver.release_drained(&mut st, wind_down);
+                if !wind_down {
+                    // continuous admission + cross-variant pickup
+                    driver.gather(&mut st, &mut admissions, &mut failures,
+                                  &mut variants, &mut jobs);
                 }
             }
-            answer_failures(guard.shared, &mut failures);
-            apply_admissions(guard.shared, held, &mut admissions,
-                             &mut batch);
-        }
-    }
-}
-
-/// Under the state lock: top up every held lane from its variant queue
-/// and claim any other busy, unclaimed lane (creating it — with its
-/// model `Arc` snapshot — on first use). Popped jobs land flat in
-/// `admissions` keyed by `held` index; unknown-variant jobs land in
-/// `failures`. Machine construction and response sends happen outside
-/// the lock. `jobs` is a reusable scratch buffer.
-fn gather(shared: &Shared, st: &mut LaneState, held: &mut Vec<Box<Lane>>,
-          admissions: &mut Admissions,
-          failures: &mut Vec<(QueuedJob, String)>,
-          variants: &mut Vec<String>, jobs: &mut Vec<QueuedJob>) {
-    let max_batch = shared.config.max_batch;
-    // 1) continuous admission into lanes this worker already holds
-    for (i, lane) in held.iter().enumerate() {
-        let room = max_batch.saturating_sub(lane.in_flight());
-        if room == 0 {
-            continue;
-        }
-        jobs.clear();
-        if st.take(&lane.variant, room, jobs) > 0 {
-            admissions.extend(jobs.drain(..).map(|j| (i, j)));
-        }
-    }
-    // 2) claim lanes for every other variant with queued work
-    // (`variants` recycles its String buffers across ticks)
-    st.queued_variants(variants);
-    for vi in 0..variants.len() {
-        let variant = variants[vi].as_str();
-        if held.iter().any(|l| l.variant == variant) {
-            continue; // held but out of room this tick
-        }
-        let lane = match st.claim(variant) {
-            LaneClaim::Busy => continue, // another worker drives it
-            LaneClaim::Claimed(lane) => lane,
-            LaneClaim::Create => {
-                // snapshot the model Arc once per lane — the registry
-                // is never locked again for this variant's rounds. The
-                // slot is already marked held; if the lookup or lane
-                // construction unwinds (poisoned registry mutex, model
-                // metadata panic) the marker must be abandoned, or the
-                // variant would answer Busy forever.
-                let built = std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(|| {
-                        shared.models.lock().unwrap().get(variant).cloned()
-                            .map(|m| Box::new(Lane::new(
-                                variant, m, shared.config.pool,
-                                shared.config.arena_byte_cap)))
-                    }));
-                match built {
-                    Ok(Some(lane)) => lane,
-                    Ok(None) => {
-                        st.abandon(variant);
-                        let msg = format!("unknown model '{variant}'");
-                        for job in st.drain_variant(variant) {
-                            failures.push((job, msg.clone()));
-                        }
-                        continue;
-                    }
-                    Err(panic) => {
-                        st.abandon(variant);
-                        std::panic::resume_unwind(panic);
-                    }
-                }
-            }
-        };
-        let room = max_batch.saturating_sub(lane.in_flight());
-        jobs.clear();
-        st.take(variant, room, jobs);
-        let idx = held.len();
-        held.push(lane);
-        admissions.extend(jobs.drain(..).map(|j| (idx, j)));
-    }
-    // 3) panic-recovery backstop: adopt parked lanes that still hold
-    // in-flight machines (only possible when LaneGuard parked a
-    // panicking worker's lanes mid-flight) so their admitted requests
-    // keep making progress instead of stranding their clients
-    st.parked_nonidle(variants);
-    for vi in 0..variants.len() {
-        let variant = variants[vi].as_str();
-        if held.iter().any(|l| l.variant == variant) {
-            continue;
-        }
-        if let LaneClaim::Claimed(lane) = st.claim(variant) {
-            held.push(lane);
+            answer_failures(&shared, &mut failures);
+            driver.apply_admissions(&mut admissions, &mut batch);
         }
     }
 }
@@ -438,71 +641,6 @@ fn gather(shared: &Shared, st: &mut LaneState, held: &mut Vec<Box<Lane>>,
 fn answer_failures(shared: &Shared, failures: &mut Vec<(QueuedJob, String)>) {
     for (job, msg) in failures.drain(..) {
         fail_job(shared, job, &msg);
-    }
-}
-
-/// Build machines for freshly popped jobs (outside the state lock),
-/// batch-admitting per lane so group-formation metrics see whole
-/// batches. `batch` is a reusable scratch buffer; `admissions` entries
-/// are lane-contiguous by construction (gather appends per lane).
-fn apply_admissions(shared: &Shared, held: &mut [Box<Lane>],
-                    admissions: &mut Admissions,
-                    batch: &mut Vec<QueuedJob>) {
-    let mut iter = admissions.drain(..).peekable();
-    while let Some((idx, job)) = iter.next() {
-        batch.clear();
-        batch.push(job);
-        while iter.peek().is_some_and(|&(next_idx, _)| next_idx == idx) {
-            batch.push(iter.next().unwrap().1);
-        }
-        held[idx].admit(batch, &shared.metrics);
-    }
-}
-
-/// Raw lane pointers smuggled into the pool's `Fn` tasks; sound because
-/// every index is executed exactly once (disjoint task ranges), the
-/// lanes are distinct boxed allocations, and the pool joins before the
-/// pointer array drops.
-struct SendLanes(*mut *mut Lane);
-unsafe impl Send for SendLanes {}
-unsafe impl Sync for SendLanes {}
-
-/// One co-scheduled tick over this worker's held lanes:
-/// 1. poll phase (serial — cheap sampler math): every lane retires
-///    finished machines and stages demands into its own arena;
-/// 2. execute phase: ALL busy lanes' fused `denoise_round` calls run
-///    concurrently as tasks on the one global pool (each call may
-///    itself shard rows on the same pool — nested sharding is
-///    deadlock-free, see `runtime::pool`), so two variants' rounds
-///    share the tick's wall-clock instead of queueing behind each
-///    other;
-/// 3. scatter phase (serial): machines resume from arena output views.
-///
-/// `busy` is a caller-owned scratch buffer of lane pointers, reused
-/// across ticks. A panic in a lane's sampler math (poll or resume)
-/// fails that lane's whole group cleanly instead of unwinding the
-/// worker — the other held lanes keep ticking. (Model-call panics are
-/// already contained inside `execute_round`.)
-fn tick_lanes(held: &mut [Box<Lane>], metrics: &Metrics,
-              busy: &mut Vec<*mut Lane>) {
-    for lane in held.iter_mut() {
-        guard_phase(lane, metrics, "poll", |l| l.begin_round(metrics));
-    }
-    busy.clear();
-    busy.extend(held.iter_mut()
-        .filter(|l| l.has_round())
-        .map(|l| &mut **l as *mut Lane));
-    if !busy.is_empty() {
-        // run_tasks already degenerates to an inline call for a single
-        // lane (no queue-lock round-trip; see ThreadPool::run_sharded)
-        let lanes = SendLanes(busy.as_mut_ptr());
-        pool::global().run_tasks(busy.len(), |i| {
-            // SAFETY: see `SendLanes`
-            unsafe { (*(*lanes.0.add(i))).execute_round() };
-        });
-    }
-    for lane in held.iter_mut() {
-        guard_phase(lane, metrics, "resume", |l| l.finish_round(metrics));
     }
 }
 
@@ -875,6 +1013,87 @@ mod tests {
                  b=[{:.2},{:.2}]ms",
                 a.first_round_ms, a.last_round_ms, b.first_round_ms,
                 b.last_round_ms);
+        c.shutdown();
+    }
+
+    /// Test model whose denoise calls sleep — a controlled straggler
+    /// lane for the no-barrier test below.
+    struct SlowModel {
+        sched: DdpmSchedule,
+        delay: std::time::Duration,
+    }
+
+    impl crate::model::DenoiseModel for SlowModel {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn cond_dim(&self) -> usize {
+            0
+        }
+        fn k_steps(&self) -> usize {
+            self.sched.k_steps
+        }
+        fn schedule(&self) -> &DdpmSchedule {
+            &self.sched
+        }
+        fn denoise_batch(&self, _ys: &[f64], _ts: &[f64], _cond: &[f64],
+                         n: usize, out: &mut [f64]) -> Result<()> {
+            std::thread::sleep(self.delay);
+            out[..n].fill(0.0);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn single_worker_lanes_overlap_without_tick_barrier() {
+        // ONE coordinator worker holding a straggler lane (every round
+        // sleeps) and a fast lane. Under the old tick-synchronous
+        // lane_loop every fast round barriered on a slow round, so the
+        // fast lane's round window stretched to the slow lane's. The
+        // continuous Driver must let the fast lane drain at its own
+        // cadence while the straggler is still mid-burst: its window
+        // must be a small fraction of the slow lane's, not ~equal.
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            enable_batching: true,
+            ..Default::default()
+        }).unwrap();
+        c.register_model("slow", Arc::new(SlowModel {
+            sched: DdpmSchedule::new(30),
+            delay: std::time::Duration::from_millis(4),
+        }));
+        c.register_model("fast",
+                         GmmDdpmOracle::new(Gmm::circle_2d(), 25, false));
+        let mk = |variant: &str, seed| Request {
+            id: 0,
+            variant: variant.into(),
+            sampler: SamplerSpec::Sequential,
+            seed,
+            cond: vec![],
+        };
+        let (_, rx_slow) = c.submit(mk("slow", 1));
+        let (_, rx_fast) = c.submit(mk("fast", 2));
+        assert!(rx_fast.recv().unwrap().error.is_none());
+        assert!(rx_slow.recv().unwrap().error.is_none());
+        let m = c.metrics();
+        let slow = m.lane("slow").expect("slow lane");
+        let fast = m.lane("fast").expect("fast lane");
+        assert!(slow.overlaps(fast),
+                "lanes ran back to back: slow=[{:.2},{:.2}]ms \
+                 fast=[{:.2},{:.2}]ms",
+                slow.first_round_ms, slow.last_round_ms,
+                fast.first_round_ms, fast.last_round_ms);
+        let slow_window = slow.last_round_ms - slow.first_round_ms;
+        let fast_window = fast.last_round_ms - fast.first_round_ms;
+        assert!(slow_window >= 50.0,
+                "straggler finished implausibly fast: {slow_window:.2}ms");
+        assert!(fast_window < slow_window * 0.5,
+                "fast lane was gated by the straggler (tick barrier): \
+                 fast window {fast_window:.2}ms vs slow window \
+                 {slow_window:.2}ms");
+        // lane rounds flowed through the pool's round-task registry
+        assert!(m.pool.rounds > 0, "no round tasks recorded");
         c.shutdown();
     }
 

@@ -13,11 +13,14 @@
 //!   bursts on several registered variants through ONE coordinator,
 //!   reporting each lane's fused-round shape, queue wait and — the
 //!   no-head-of-line-blocking proof — whether every lane's round
-//!   window overlapped the others' (both lanes progressed within the
-//!   same tick window instead of running back to back).
+//!   window overlapped the others' (lanes' round tasks ran
+//!   concurrently instead of back to back).
 //!
-//! Schema v2: rows carry a `lanes` array; the document carries an
-//! optional `mixed_variants` section.
+//! Schema v3: rows carry a `lanes` array and a `pool` object with the
+//! work-stealing scheduler's counters (entries executed / stolen /
+//! injected, lane round tasks) accumulated over that row's run; the
+//! document carries an optional `mixed_variants` section with its own
+//! `pool` object.
 
 use std::sync::Arc;
 
@@ -26,6 +29,7 @@ use anyhow::Result;
 use crate::coordinator::{Coordinator, LaneSnapshot, Request, SamplerSpec,
                          ServerConfig};
 use crate::model::DenoiseModel;
+use crate::runtime::pool::PoolStats;
 use crate::util::Json;
 
 /// One concurrency level's measurements.
@@ -46,6 +50,9 @@ pub struct CoordBenchRow {
     pub rejected: u64,
     /// per-lane aggregates (one lane in this single-variant sweep)
     pub lanes: Vec<LaneSnapshot>,
+    /// work-stealing scheduler counters accumulated during this level
+    /// (process-global, so a lower bound on this run's activity)
+    pub pool: PoolStats,
 }
 
 /// Result of the mixed-variant lane scenario.
@@ -59,9 +66,11 @@ pub struct MixedVariantBench {
     /// per-variant lane aggregates
     pub lanes: Vec<LaneSnapshot>,
     /// every pair of lanes' fused-round windows overlapped: all
-    /// variants progressed within the same tick window (no
-    /// cross-variant head-of-line blocking)
+    /// variants' round tasks ran concurrently (no cross-variant
+    /// head-of-line blocking, no tick barrier)
     pub lanes_overlap: bool,
+    /// work-stealing scheduler counters accumulated during the run
+    pub pool: PoolStats,
 }
 
 /// Nearest-rank percentile (q in [0, 1]) over a sorted slice.
@@ -150,6 +159,7 @@ pub fn bench_coordinator(model: Arc<dyn DenoiseModel>, variant: &str,
             failed: m.failed,
             rejected: m.rejected,
             lanes: m.lanes,
+            pool: m.pool,
         });
     }
     Ok(rows)
@@ -201,6 +211,7 @@ pub fn bench_mixed_variants(models: &[(String, Arc<dyn DenoiseModel>)],
         failed: m.failed,
         lanes,
         lanes_overlap,
+        pool: m.pool,
     })
 }
 
@@ -220,6 +231,15 @@ fn lane_json(l: &LaneSnapshot) -> Json {
     ])
 }
 
+fn pool_json(p: &PoolStats) -> Json {
+    Json::obj(vec![
+        ("executed", Json::Num(p.executed as f64)),
+        ("stolen", Json::Num(p.stolen as f64)),
+        ("injected", Json::Num(p.injected as f64)),
+        ("rounds", Json::Num(p.rounds as f64)),
+    ])
+}
+
 fn row_json(r: &CoordBenchRow) -> Json {
     Json::obj(vec![
         ("concurrency", Json::Num(r.concurrency as f64)),
@@ -233,6 +253,7 @@ fn row_json(r: &CoordBenchRow) -> Json {
         ("failed", Json::Num(r.failed as f64)),
         ("rejected", Json::Num(r.rejected as f64)),
         ("lanes", Json::Arr(r.lanes.iter().map(lane_json).collect())),
+        ("pool", pool_json(&r.pool)),
     ])
 }
 
@@ -244,17 +265,19 @@ fn mixed_json(b: &MixedVariantBench) -> Json {
         ("failed", Json::Num(b.failed as f64)),
         ("lanes_overlap", Json::Bool(b.lanes_overlap)),
         ("lanes", Json::Arr(b.lanes.iter().map(lane_json).collect())),
+        ("pool", pool_json(&b.pool)),
     ])
 }
 
-/// Assemble the `BENCH_coordinator.json` document (schema v2: per-row
-/// `lanes` arrays + optional `mixed_variants` section).
+/// Assemble the `BENCH_coordinator.json` document (schema v3: per-row
+/// `lanes` arrays + `pool` scheduler counters + optional
+/// `mixed_variants` section).
 pub fn bench_coordinator_json(variant: &str, k: usize,
                               rows: &[CoordBenchRow],
                               mixed: Option<&MixedVariantBench>) -> Json {
     let mut fields = vec![
         ("bench", Json::Str("bench_coordinator".into())),
-        ("schema_version", Json::Num(2.0)),
+        ("schema_version", Json::Num(3.0)),
         ("variant", Json::Str(variant.to_string())),
         ("k", Json::Num(k as f64)),
         ("pool_threads",
@@ -343,7 +366,7 @@ mod tests {
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_coordinator");
         assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
-                   2);
+                   3);
         let rs = back.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[1].get("concurrency").unwrap().as_usize().unwrap(), 4);
@@ -352,14 +375,19 @@ mod tests {
         assert!(lanes[0].get("fused_rows_per_round").unwrap()
                     .as_f64().unwrap() > 1.0);
         assert!(lanes[0].get("mean_queue_wait_ms").is_ok());
+        // the scheduler counters rode along: fused rounds flow through
+        // the pool's round-task registry
+        let pool = rs[1].get("pool").unwrap();
+        assert!(pool.get("rounds").unwrap().as_f64().unwrap() > 0.0);
+        assert!(pool.get("executed").unwrap().as_f64().unwrap() > 0.0);
         let table = format_coord_rows(&rows);
         assert!(table.contains("rows/round"));
     }
 
     #[test]
     fn mixed_variant_bench_reports_overlapping_lanes() {
-        // ONE worker, two variants: the lane scheduler must progress
-        // both lanes inside the same tick window
+        // ONE worker, two variants: the lane driver must progress both
+        // lanes concurrently (overlapping round windows)
         let a: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 50, false);
         let b: Arc<dyn DenoiseModel> =
@@ -390,6 +418,8 @@ mod tests {
         let mixed = back.get("mixed_variants").unwrap();
         assert!(mixed.get("lanes_overlap").unwrap().as_bool().unwrap());
         assert_eq!(mixed.get("lanes").unwrap().as_arr().unwrap().len(), 2);
+        assert!(mixed.get("pool").unwrap().get("rounds").unwrap()
+                    .as_f64().unwrap() > 0.0);
         let table = format_lanes(&bench.lanes);
         assert!(table.contains("gmm-a") && table.contains("gmm-b"));
     }

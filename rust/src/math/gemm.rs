@@ -527,12 +527,15 @@ pub fn gemm_packed_bias_act(m: usize, n: usize, k: usize, a: &[f32],
 /// [`gemm_packed_bias_act`] with the output split into a 2-D grid of
 /// MR-aligned row ranges × NR-panel-aligned column ranges executed
 /// concurrently on the process-global worker pool
-/// ([`pool::ThreadPool::run_sharded_tiles`]). Small-M products — the
-/// fused serving rounds — still occupy the whole pool through their
-/// column panels. Each C tile is owned by exactly one worker and every
-/// element's reduction is computed whole inside its tile, so the
-/// result is bit-identical to the serial call for every shard count.
-/// Returns the effective tile count.
+/// ([`pool::ThreadPool::run_sharded_tiles`], which searches M×N
+/// factorizations to fill every shard — e.g. 4 row blocks on 6 shards
+/// run as a 3×2 grid, not a 4×1 grid with two workers idle). Small-M
+/// products — the fused serving rounds — still occupy the whole pool
+/// through their column panels. Each C tile is owned by exactly one
+/// task and every element's reduction is computed whole inside its
+/// tile, so the result is bit-identical to the serial call for every
+/// shard count and every steal schedule. Returns the effective tile
+/// count.
 pub fn gemm_packed_sharded(m: usize, n: usize, k: usize, a: &[f32],
                            pb: &PackedB, bias: Option<&[f32]>,
                            epi: Epilogue, residual: Option<&[f32]>,
@@ -553,11 +556,11 @@ pub fn gemm_packed_sharded(m: usize, n: usize, k: usize, a: &[f32],
 
 /// [`gemm_bias_act`] (the unpacked v1 kernel) with the output split
 /// into a 2-D grid of MR-aligned row ranges × NR-aligned column ranges
-/// executed concurrently on the process-global worker pool. Until this
-/// PR the split was M-only, which left the pool mostly idle on the
-/// small-M products of fused serving rounds. Bit-identical to the
-/// serial call for every shard count (tiles own whole elements).
-/// Returns the effective tile count.
+/// executed concurrently on the process-global worker pool (same
+/// utilization-maximizing grid search as [`gemm_packed_sharded`]).
+/// Bit-identical to the serial call for every shard count and steal
+/// schedule (tiles own whole elements). Returns the effective tile
+/// count.
 pub fn gemm_sharded(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
                     bias: Option<&[f32]>, epi: Epilogue,
                     residual: Option<&[f32]>, c: &mut [f32],

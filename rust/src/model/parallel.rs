@@ -6,8 +6,11 @@
 //! process-global worker pool ([`crate::runtime::pool::global`]). Each
 //! row's computation happens entirely inside the inner model exactly as
 //! it would unsharded, so outputs are **bit-identical for every
-//! `pool_size`** — sharding changes wall-clock, never samples (the
-//! float summation order per sample is untouched). This composes with
+//! `pool_size` and every work-stealing schedule** — the pool decides
+//! *which thread* runs a shard (stealing moves shards between workers
+//! under load), never the shard partition or any reduction order, so
+//! scheduling changes wall-clock, never samples (the float summation
+//! order per sample is untouched). This composes with
 //! `NativeMlp`'s GEMM batch path: each shard runs the whole pipeline
 //! on its row range against its own thread-local workspace, and the
 //! GEMM reduction order is row-independent by construction (see

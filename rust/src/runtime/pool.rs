@@ -1,14 +1,46 @@
-//! Sharded worker-pool execution substrate.
+//! Work-stealing execution substrate: sharded calls + lane round tasks.
 //!
 //! Until this module existed, every "parallel round" in the repo was
 //! bookkeeping: the ASD verify batch, the Picard window sweep and the
 //! lockstep sequential gang all executed their `denoise_batch` rows
 //! serially on the calling thread, so `parallel_rounds` had no physical
 //! counterpart and wall-clock never tracked Theorem 4. This pool makes
-//! rounds *real*: a batched call is split into contiguous per-shard row
-//! ranges that execute concurrently on a set of persistent worker
-//! threads (std-only: `std::thread` + `Mutex`/`Condvar`, in the spirit
-//! of the mini-rayon registry but self-contained).
+//! rounds *real*: work executes concurrently on a set of persistent
+//! worker threads (std-only: `std::thread` + `Mutex`/`Condvar`, in the
+//! shape of the mini-rayon registry — a global injector plus one deque
+//! per worker — but self-contained).
+//!
+//! Two kinds of work ride the same deques:
+//!
+//! * **Sharded calls** ([`ThreadPool::run_sharded`] and its block/tile
+//!   variants): a batched call split into contiguous row ranges (or
+//!   2-D tiles). The queued entries are *claim hints* — whoever pops
+//!   one claims shards from the job's atomic counter until none remain,
+//!   so a stale hint is a no-op and the caller always completes by
+//!   claiming shards itself.
+//! * **Round tasks** ([`ThreadPool::submit_round`]): one-shot closures
+//!   (a serving lane's fused round) submitted asynchronously; their
+//!   completions are reported to a [`RoundGroup`] mailbox that the
+//!   submitting driver drains with [`ThreadPool::wait_rounds`].
+//!
+//! Scheduling topology (the work-stealing part):
+//!
+//! * A thread that is not a pool worker pushes to the **global
+//!   injector**; a pool worker pushes to **its own deque**.
+//! * A worker pops its own deque LIFO (locality), then the injector
+//!   FIFO, then **steals** from sibling deques FIFO. Idle workers
+//!   therefore drain whichever worker (or lane) is hottest — a fused
+//!   round that shards its GEMM enqueues tile hints on the executing
+//!   worker's deque, and every idle thread converges on them.
+//! * A driver blocked in `wait_rounds` **helps**: it executes queued
+//!   entries instead of idling, preferring the *newest* injected entry
+//!   (LIFO) — its own just-submitted short rounds — while workers take
+//!   the oldest (FIFO), which keeps the blocked driver off the
+//!   long-running straggler round whenever there is a choice.
+//! * Parking is latch-style: a worker that finds every queue empty
+//!   registers as a sleeper and re-checks the pending-entry count under
+//!   the sleep lock before waiting, so a concurrent push can never be
+//!   lost.
 //!
 //! Design rules:
 //! * **One global pool.** All sharded execution in the process runs on
@@ -17,20 +49,45 @@
 //!   control how many *shards* a call is split into, never how many OS
 //!   threads exist — so an ASD engine, a Picard sampler and the serving
 //!   coordinator can all be "parallel" without oversubscribing cores.
-//! * **Caller participates.** `run_sharded` enqueues helper entries and
+//! * **Caller participates.** `run_sharded` enqueues claim hints and
 //!   then works shards itself, so it completes even if every worker is
 //!   busy (or the pool has a single thread). Nested calls from inside a
 //!   worker are deadlock-free for the same reason — the submitting
 //!   thread drains its own shards; nested shards still queue on the
 //!   same fixed worker set, so the OS thread count never grows.
-//! * **Determinism.** Shards are contiguous row ranges executed by the
-//!   wrapped model row-by-row; no cross-row reduction ever moves between
-//!   shards, so outputs are bit-identical for every `pool_size`
-//!   (enforced by tests/test_parallel_determinism.rs).
+//! * **Determinism.** Stealing moves *which thread* runs a shard or
+//!   tile, never how the work is partitioned: shards are contiguous row
+//!   ranges executed row-by-row, each 2-D tile is owned by exactly one
+//!   executor, and no cross-row reduction ever moves between shards —
+//!   so outputs are bit-identical for every pool size and every steal
+//!   schedule (enforced by tests/test_parallel_determinism.rs).
+//! * **Poison recovery.** All pool mutexes are locked through
+//!   [`lock_recover`]: a panicking thread must degrade that panic's own
+//!   call, never cascade into pool-wide worker death or a
+//!   panic-in-drop abort (user closures are additionally wrapped in
+//!   `catch_unwind`, so poisoning is rare to begin with).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// Lock a mutex, recovering the guard if a panicking thread poisoned
+/// it. Every closure the pool executes runs under `catch_unwind`, so a
+/// poisoned pool mutex means a panic escaped in bookkeeping code that
+/// only pushes/pops structurally-valid entries — recovering beats the
+/// old behavior (`.unwrap()` everywhere), where one poisoned mutex
+/// killed every worker that touched it and made `Drop` abort the
+/// process via panic-in-drop.
+fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait` with the same poison recovery as [`lock_recover`].
+fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>)
+                       -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Sharding knobs threaded through `AsdConfig`, `PicardConfig`,
 /// `BatchedSequentialSampler` and `ServerConfig`.
@@ -115,7 +172,7 @@ impl Job {
             // AcqRel: the final decrement observes every shard's writes
             // through the RMW chain before opening the latch.
             if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                let mut done = self.done.lock().unwrap();
+                let mut done = lock_recover(&self.done);
                 *done = true;
                 self.cv.notify_all();
             }
@@ -123,13 +180,247 @@ impl Job {
     }
 }
 
-struct PoolShared {
-    queue: Mutex<VecDeque<Arc<Job>>>,
+/// Shared completion mailbox between a driver and its submitted round
+/// tasks.
+struct GroupShared {
+    /// `(key, panicked)` completions not yet drained by `wait_rounds`
+    done: Mutex<Vec<(usize, bool)>>,
     cv: Condvar,
-    shutdown: AtomicBool,
 }
 
-/// A fixed set of persistent worker threads executing sharded calls.
+/// Completion mailbox for [`ThreadPool::submit_round`] tasks: a driver
+/// creates one group, submits any number of keyed round closures
+/// against it, and drains finished keys with
+/// [`ThreadPool::wait_rounds`]. Each submitted key is reported exactly
+/// once, with a flag saying whether the closure panicked (the panic is
+/// contained — it never unwinds a pool worker).
+pub struct RoundGroup {
+    shared: Arc<GroupShared>,
+}
+
+impl RoundGroup {
+    pub fn new() -> RoundGroup {
+        RoundGroup {
+            shared: Arc::new(GroupShared {
+                done: Mutex::new(Vec::new()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+}
+
+impl Default for RoundGroup {
+    fn default() -> RoundGroup {
+        RoundGroup::new()
+    }
+}
+
+/// One queued unit of work.
+enum Entry {
+    /// Claim hint for a sharded call: executing it claims and works
+    /// shards from the job's counter until none remain. Stale hints
+    /// (job already fully claimed) are no-ops by construction.
+    Shards(Arc<Job>),
+    /// One lane round: runs exactly once, then reports
+    /// `(key, panicked)` to its group's mailbox.
+    Round {
+        f: Box<dyn FnOnce() + Send>,
+        key: usize,
+        group: Arc<GroupShared>,
+    },
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    /// entries executed (both kinds, all threads)
+    executed: AtomicU64,
+    /// entries taken from a sibling worker's deque (true steals)
+    stolen: AtomicU64,
+    /// entries pushed from non-worker threads via the injector
+    injected: AtomicU64,
+    /// round tasks executed to completion
+    rounds: AtomicU64,
+}
+
+/// Monotone scheduling counters, snapshotted by [`ThreadPool::stats`]
+/// (process-lifetime totals for the global pool; see
+/// [`global_stats`]). `stolen / executed` is the observable steal rate;
+/// `rounds` counts lane round tasks, the coordinator's unit of fused
+/// work.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub executed: u64,
+    pub stolen: u64,
+    pub injected: u64,
+    pub rounds: u64,
+}
+
+impl PoolStats {
+    /// Counter deltas since an earlier snapshot (saturating — safe even
+    /// if `base` came from a different pool generation).
+    pub fn since(&self, base: &PoolStats) -> PoolStats {
+        PoolStats {
+            executed: self.executed.saturating_sub(base.executed),
+            stolen: self.stolen.saturating_sub(base.stolen),
+            injected: self.injected.saturating_sub(base.injected),
+            rounds: self.rounds.saturating_sub(base.rounds),
+        }
+    }
+}
+
+struct PoolShared {
+    /// entries from non-worker threads; workers drain it FIFO, helping
+    /// drivers drain it LIFO (see module docs)
+    injector: Mutex<VecDeque<Entry>>,
+    /// one deque per worker: owner pushes/pops the back, thieves pop
+    /// the front
+    deques: Vec<Mutex<VecDeque<Entry>>>,
+    /// entries pushed but not yet popped, across injector + deques;
+    /// incremented *before* the push so a worker never parks while an
+    /// in-flight push is about to land
+    pending: AtomicUsize,
+    /// sleep latch: workers park on `wake` under `sleep`, re-checking
+    /// `pending`/`shutdown` after registering in `sleepers`
+    sleep: Mutex<()>,
+    wake: Condvar,
+    sleepers: AtomicUsize,
+    shutdown: AtomicBool,
+    stats: Counters,
+}
+
+thread_local! {
+    /// `(pool identity, worker index)` when this thread is a pool
+    /// worker; pool identity 0 = not a worker.
+    static WORKER_ID: Cell<(usize, usize)> = Cell::new((0, 0));
+}
+
+/// This thread's worker index in `shared`'s pool, if it is one of its
+/// workers (routes pushes to the own deque and own-deque pops).
+fn own_index(shared: &PoolShared) -> Option<usize> {
+    let (pool, idx) = WORKER_ID.with(|c| c.get());
+    (pool == shared as *const PoolShared as usize).then_some(idx)
+}
+
+/// Enqueue an entry: a worker keeps it local (own deque, LIFO end),
+/// everyone else goes through the injector. Wakes one parked worker.
+fn push_entry(shared: &PoolShared, entry: Entry) {
+    // pending++ strictly before the push: a worker that observes the
+    // count under the sleep lock rescans instead of parking, so the
+    // entry cannot be stranded in a queue full of sleepers
+    shared.pending.fetch_add(1, Ordering::SeqCst);
+    match own_index(shared) {
+        Some(w) => lock_recover(&shared.deques[w]).push_back(entry),
+        None => {
+            lock_recover(&shared.injector).push_back(entry);
+            shared.stats.injected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if shared.sleepers.load(Ordering::SeqCst) > 0 {
+        // take the sleep lock so the notify is serialized against a
+        // worker between its pending re-check and its cv.wait
+        let _g = lock_recover(&shared.sleep);
+        shared.wake.notify_one();
+    }
+}
+
+/// Scheduling role of the thread scanning for work: a pool worker pops
+/// the injector oldest-first, a helping driver newest-first (its own
+/// just-submitted rounds — keeping the blocked driver off straggler
+/// rounds whenever there is a choice).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Scan {
+    Worker(usize),
+    Helper,
+}
+
+/// Find one entry: own deque (LIFO), then injector, then steal from
+/// sibling deques (FIFO, round-robin from the scanner's successor).
+fn find_work(shared: &PoolShared, scan: Scan) -> Option<Entry> {
+    let own = match scan {
+        Scan::Worker(w) => {
+            if let Some(e) = lock_recover(&shared.deques[w]).pop_back() {
+                shared.pending.fetch_sub(1, Ordering::SeqCst);
+                return Some(e);
+            }
+            Some(w)
+        }
+        Scan::Helper => None,
+    };
+    {
+        let mut inj = lock_recover(&shared.injector);
+        let e = match scan {
+            Scan::Worker(_) => inj.pop_front(),
+            Scan::Helper => inj.pop_back(),
+        };
+        if let Some(e) = e {
+            drop(inj);
+            shared.pending.fetch_sub(1, Ordering::SeqCst);
+            return Some(e);
+        }
+    }
+    let n = shared.deques.len();
+    let start = own.map_or(0, |w| w + 1);
+    for k in 0..n {
+        let v = (start + k) % n;
+        if own == Some(v) {
+            continue;
+        }
+        if let Some(e) = lock_recover(&shared.deques[v]).pop_front() {
+            shared.pending.fetch_sub(1, Ordering::SeqCst);
+            shared.stats.stolen.fetch_add(1, Ordering::Relaxed);
+            return Some(e);
+        }
+    }
+    None
+}
+
+/// Execute one entry. Round-task panics are contained here and
+/// reported through the group mailbox; shard panics are contained in
+/// [`Job::work`].
+fn execute_entry(shared: &PoolShared, entry: Entry) {
+    shared.stats.executed.fetch_add(1, Ordering::Relaxed);
+    match entry {
+        Entry::Shards(job) => job.work(),
+        Entry::Round { f, key, group } => {
+            shared.stats.rounds.fetch_add(1, Ordering::Relaxed);
+            let panicked = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(f)).is_err();
+            let mut done = lock_recover(&group.done);
+            done.push((key, panicked));
+            group.cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, index: usize) {
+    WORKER_ID.with(|c| {
+        c.set((shared.as_ref() as *const PoolShared as usize, index));
+    });
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(entry) = find_work(&shared, Scan::Worker(index)) {
+            execute_entry(&shared, entry);
+            continue;
+        }
+        // park: register as a sleeper, then re-check under the sleep
+        // lock — a pusher increments `pending` before reading
+        // `sleepers`, so one side always sees the other (no lost
+        // wakeup); a push landing mid-scan is caught by the re-check
+        let guard = lock_recover(&shared.sleep);
+        shared.sleepers.fetch_add(1, Ordering::SeqCst);
+        if !shared.shutdown.load(Ordering::SeqCst)
+            && shared.pending.load(Ordering::SeqCst) == 0
+        {
+            drop(wait_recover(&shared.wake, guard));
+        }
+        shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A fixed set of persistent worker threads executing sharded calls
+/// and round tasks over work-stealing deques.
 pub struct ThreadPool {
     shared: Arc<PoolShared>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -141,9 +432,15 @@ impl ThreadPool {
     pub fn new(size: usize) -> ThreadPool {
         let size = size.max(1);
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..size).map(|_| Mutex::new(VecDeque::new()))
+                .collect(),
+            pending: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
+            stats: Counters::default(),
         });
         let mut workers = Vec::with_capacity(size);
         for w in 0..size {
@@ -151,7 +448,7 @@ impl ThreadPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("asd-pool-{w}"))
-                    .spawn(move || worker_loop(s))
+                    .spawn(move || worker_loop(s, w))
                     .expect("spawn pool worker"),
             );
         }
@@ -161,6 +458,17 @@ impl ThreadPool {
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Snapshot the pool's scheduling counters.
+    pub fn stats(&self) -> PoolStats {
+        let c = &self.shared.stats;
+        PoolStats {
+            executed: c.executed.load(Ordering::Relaxed),
+            stolen: c.stolen.load(Ordering::Relaxed),
+            injected: c.injected.load(Ordering::Relaxed),
+            rounds: c.rounds.load(Ordering::Relaxed),
+        }
     }
 
     /// Execute `f(start, end)` over `shards` contiguous, balanced,
@@ -201,22 +509,19 @@ impl ThreadPool {
             done: Mutex::new(false),
             cv: Condvar::new(),
         });
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            // one helper entry per shard the caller won't take itself,
-            // capped by the worker count — extra entries would only be
-            // popped, see all shards claimed, and go back to sleep
-            let helpers = (shards - 1).min(self.size);
-            for _ in 0..helpers {
-                q.push_back(job.clone());
-            }
+        // one claim hint per shard the caller won't take itself, capped
+        // by the worker count — extra hints would only be popped, see
+        // all shards claimed, and be dropped as no-ops
+        let helpers = (shards - 1).min(self.size);
+        for _ in 0..helpers {
+            push_entry(&self.shared, Entry::Shards(job.clone()));
         }
-        self.shared.cv.notify_all();
         job.work();
-        let mut done = job.done.lock().unwrap();
+        let mut done = lock_recover(&job.done);
         while !*done {
-            done = job.cv.wait(done).unwrap();
+            done = wait_recover(&job.cv, done);
         }
+        drop(done);
         if job.poisoned.load(Ordering::Relaxed) {
             panic!("a pool shard panicked");
         }
@@ -243,16 +548,19 @@ impl ThreadPool {
     /// `n_block` (the last tile in each dimension absorbs the
     /// remainder) — and execute `f(r0, r1, c0, c1)` for every tile
     /// concurrently on the pool (caller participating). Each output
-    /// tile is owned by exactly one worker, so kernels whose elements
+    /// tile is owned by exactly one executor, so kernels whose elements
     /// are computed whole inside a tile stay bit-invariant in the
-    /// shard count.
+    /// shard count *and* in the steal schedule.
     ///
-    /// The grid prefers splitting M first (a row-range tile streams
-    /// fewer A rows and reuses each B panel across its whole range) and
-    /// overflows the leftover parallelism into N only when M alone
-    /// cannot fill `shards` — the small-M serving-round case that an
-    /// M-only split would leave running serial. Returns the effective
-    /// tile count.
+    /// The grid is the `sm × sn` factorization (`sm` row splits ≤ the
+    /// row-block count, `sn` column splits ≤ the column-block count)
+    /// that maximizes tile count within the `shards` budget, breaking
+    /// ties toward more M splits (a row-range tile streams fewer A rows
+    /// and reuses each B panel across its whole range). The previous
+    /// greedy pick `sm = mb.min(shards); sn = shards / sm` dropped
+    /// parallelism whenever `shards % sm != 0` — e.g. 4 row blocks on a
+    /// 6-shard budget produced a 4×1 grid (4 tiles, 2 idle workers)
+    /// where 3×2 fills all 6. Returns the effective tile count.
     pub fn run_sharded_tiles<F: Fn(usize, usize, usize, usize) + Sync>(
         &self, m: usize, m_block: usize, n: usize, n_block: usize,
         shards: usize, f: F) -> usize {
@@ -262,8 +570,15 @@ impl ThreadPool {
         let (mbs, nbs) = (m_block.max(1), n_block.max(1));
         let (mb, nb) = (m.div_ceil(mbs), n.div_ceil(nbs));
         let shards = shards.max(1);
-        let sm = mb.min(shards);
-        let sn = nb.min((shards / sm).max(1));
+        // exhaustive factorization search — O(min(mb, shards)), and
+        // shards is small (a worker-count budget)
+        let (mut sm, mut sn) = (1usize, 1usize);
+        for cm in 1..=mb.min(shards) {
+            let cn = nb.min(shards / cm);
+            if cm * cn > sm * sn || (cm * cn == sm * sn && cm > sm) {
+                (sm, sn) = (cm, cn);
+            }
+        }
         let tiles = sm * sn;
         if tiles <= 1 {
             f(0, m, 0, n);
@@ -298,11 +613,12 @@ impl ThreadPool {
     /// Run `n` independent *tasks* concurrently (`f(i)` once for each
     /// `i in 0..n`), the caller participating as usual. Task
     /// granularity — one shard per task — for co-scheduling
-    /// heterogeneous work items on the one global pool: e.g. the
-    /// coordinator executes every serving lane's fused round as one
-    /// task per tick, so two variants' rounds share wall-clock instead
-    /// of queueing behind each other. Tasks may issue nested sharded
-    /// calls (deadlock-free; see module docs).
+    /// heterogeneous work items on the one global pool. Synchronous (a
+    /// barrier over all `n`); the coordinator's lane runtime uses the
+    /// asynchronous [`submit_round`](Self::submit_round) /
+    /// [`wait_rounds`](Self::wait_rounds) pair instead, which has no
+    /// such barrier. Tasks may issue nested sharded calls
+    /// (deadlock-free; see module docs).
     pub fn run_tasks<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
         self.run_sharded(n, n, |s, e| {
             for i in s..e {
@@ -310,59 +626,130 @@ impl ThreadPool {
             }
         });
     }
+
+    /// Submit one round task tagged `key`: `f` runs exactly once on
+    /// whichever thread pops it (a pool worker, or a driver helping in
+    /// [`wait_rounds`](Self::wait_rounds)), then `(key, panicked)` is
+    /// reported to `group`. Panics inside `f` are contained and
+    /// reported, never unwound into the executing thread's loop.
+    ///
+    /// Asynchronous: this returns immediately. The submitting driver
+    /// owns the key space and must keep whatever `f` captures alive
+    /// (and untouched) until the key is drained from `group`.
+    pub fn submit_round(&self, group: &RoundGroup, key: usize,
+                        f: Box<dyn FnOnce() + Send>) {
+        push_entry(&self.shared, Entry::Round {
+            f,
+            key,
+            group: group.shared.clone(),
+        });
+    }
+
+    /// Block until `group` has at least one completed round, draining
+    /// every available `(key, panicked)` completion into `out` (append;
+    /// the caller clears). While waiting the driver *helps*: it
+    /// executes queued pool entries — preferring the newest injected
+    /// entry, i.e. its own just-submitted rounds — instead of idling,
+    /// so a single-worker pool still overlaps a driver's lanes. Only
+    /// call with at least one undrained key in flight, or this blocks
+    /// forever. Returns the number of completions drained.
+    pub fn wait_rounds(&self, group: &RoundGroup,
+                       out: &mut Vec<(usize, bool)>) -> usize {
+        loop {
+            {
+                let mut done = lock_recover(&group.shared.done);
+                if !done.is_empty() {
+                    let n = done.len();
+                    out.append(&mut done);
+                    return n;
+                }
+            }
+            if let Some(entry) = find_work(&self.shared, Scan::Helper) {
+                execute_entry(&self.shared, entry);
+                continue;
+            }
+            // nothing to help with: park on the group mailbox — the
+            // completing thread notifies under the same lock, so the
+            // re-check below cannot miss it
+            let done = lock_recover(&group.shared.done);
+            if done.is_empty() {
+                drop(wait_recover(&group.shared.cv, done));
+            }
+        }
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            // hold the queue lock while flipping the flag: a worker that
-            // just observed shutdown=false under this lock is serialized
-            // against us, so it either re-checks and exits or is already
-            // parked in cv.wait when notify_all fires — no lost wakeup
-            let _guard = self.shared.queue.lock().unwrap();
+            // flip the flag under the sleep lock: a worker between its
+            // pending re-check and cv.wait is serialized against us, so
+            // it either sees shutdown or is already parked when
+            // notify_all fires — no lost wakeup
+            let _guard = lock_recover(&self.shared.sleep);
             self.shared.shutdown.store(true, Ordering::SeqCst);
         }
-        self.shared.cv.notify_all();
+        self.shared.wake.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(shared: Arc<PoolShared>) {
-    loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(job) = q.pop_front() {
-                    break job;
-                }
-                q = shared.cv.wait(q).unwrap();
-            }
-        };
-        job.work();
+/// Interpret an `ASD_POOL_THREADS` value: `Ok(n >= 1)`, or a
+/// diagnostic for unusable values (not an integer, or zero — a
+/// zero-thread pool cannot exist, so treating `0` as "decide for me"
+/// silently would hide the typo).
+pub fn parse_pool_threads(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err("ASD_POOL_THREADS=0 is not a valid worker count \
+                      (need >= 1)"
+            .to_string()),
+        Ok(n) => Ok(n),
+        Err(e) => Err(format!(
+            "ASD_POOL_THREADS='{raw}' is not a worker count ({e})")),
     }
 }
 
-/// Worker-thread count for the global pool: `ASD_POOL_THREADS` if set,
-/// else the machine's available parallelism.
+/// Worker-thread count for the global pool: `ASD_POOL_THREADS` if set
+/// and valid, else the machine's available parallelism. An *invalid*
+/// value no longer falls through silently — it is reported once to
+/// stderr, because a typo'd `ASD_POOL_THREADS=o8` silently running on
+/// all cores (or a benchmark matrix silently ignoring its pin) is
+/// exactly the kind of misconfiguration that invalidates measurements.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("ASD_POOL_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    let fallback = || {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    match std::env::var("ASD_POOL_THREADS") {
+        Ok(raw) => match parse_pool_threads(&raw) {
+            Ok(n) => n,
+            Err(msg) => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!("[asd::runtime::pool] {msg}; falling back \
+                               to available parallelism");
+                });
+                fallback()
+            }
+        },
+        Err(_) => fallback(),
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
 
 /// The process-wide pool (the "one global pool" rule). Initialized
 /// lazily on first sharded call; never torn down.
 pub fn global() -> &'static ThreadPool {
-    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
     GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// The global pool's scheduling counters — zeros if no sharded call
+/// ever forced pool creation (metrics readers must not themselves spawn
+/// the worker set).
+pub fn global_stats() -> PoolStats {
+    GLOBAL.get().map(ThreadPool::stats).unwrap_or_default()
 }
 
 #[cfg(test)]
@@ -468,6 +855,34 @@ mod tests {
     }
 
     #[test]
+    fn tile_grid_factorization_maximizes_utilization() {
+        let pool = ThreadPool::new(3);
+        // the regression case: 4 row blocks (m=16, m_block=4) on a
+        // 6-shard budget. The old greedy pick produced a 4×1 grid (4
+        // tiles, 2 idle workers); the factorization search must find
+        // 3×2 = 6.
+        let tiles = AtomicUsize::new(0);
+        let eff = pool.run_sharded_tiles(16, 4, 48, 8, 6, |_, _, _, _| {
+            tiles.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(eff, 6, "factorization left shards idle");
+        assert_eq!(tiles.load(Ordering::Relaxed), 6);
+        // when an exact fill is impossible, it still maximizes: 3 row
+        // blocks × 1 column block on 2 shards → 2×1
+        assert_eq!(pool.run_sharded_tiles(3, 1, 1, 1, 2, |_, _, _, _| {}),
+                   2);
+        // ties break toward M splits: 8×8 blocks on 8 shards is 8×1,
+        // never 1×8 or 2×4 (full-M split streams B panels once)
+        let mut max_rows = 0usize;
+        let rows = Mutex::new(&mut max_rows);
+        pool.run_sharded_tiles(8, 1, 8, 1, 8, |r0, r1, _, _| {
+            let mut g = rows.lock().unwrap();
+            **g = (**g).max(r1 - r0);
+        });
+        assert_eq!(max_rows, 1, "tie did not prefer the M split");
+    }
+
+    #[test]
     fn run_tasks_executes_each_task_exactly_once() {
         let pool = ThreadPool::new(3);
         for n in [0usize, 1, 2, 5, 17] {
@@ -480,7 +895,7 @@ mod tests {
                 assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} (n={n})");
             }
         }
-        // tasks nesting sharded calls complete (the lane tick pattern)
+        // tasks nesting sharded calls complete (the lane round pattern)
         let total = AtomicUsize::new(0);
         global().run_tasks(3, |_| {
             global().run_sharded(8, 4, |s, e| {
@@ -575,6 +990,219 @@ mod tests {
             count.fetch_add(e - s, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn panic_in_one_shard_leaves_pool_serviceable_under_stress() {
+        // the poison-cascade regression: repeated panic-in-one-shard
+        // waves must leave every worker alive and the pool fully
+        // serviceable — both for sharded calls and for round tasks
+        let pool = ThreadPool::new(3);
+        for wave in 0..20usize {
+            let got_panic = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    pool.run_sharded(12, 6, |s, _| {
+                        if s == 4 {
+                            panic!("shard boom {wave}");
+                        }
+                    });
+                }))
+                .is_err();
+            assert!(got_panic, "wave {wave} swallowed the shard panic");
+            let count = AtomicUsize::new(0);
+            pool.run_sharded(9, 3, |s, e| {
+                count.fetch_add(e - s, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 9, "wave {wave}");
+        }
+        let group = RoundGroup::new();
+        pool.submit_round(&group, 0, Box::new(|| {}));
+        let mut out = Vec::new();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(0, false)]);
+    }
+
+    #[test]
+    fn pool_recovers_poisoned_mutexes() {
+        // deliberately poison the pool's own mutexes (panic while
+        // holding each guard) and verify the pool still schedules and
+        // drops cleanly — the old `.unwrap()` guards turned this state
+        // into pool-wide worker death plus a panic-in-drop abort
+        let pool = ThreadPool::new(2);
+        for which in 0..3usize {
+            let shared = pool.shared.clone();
+            let _ = std::thread::spawn(move || {
+                let _g = match which {
+                    0 => lock_recover(&shared.injector),
+                    1 => {
+                        let _s = lock_recover(&shared.sleep);
+                        panic!("poison sleep");
+                    }
+                    _ => lock_recover(&shared.deques[0]),
+                };
+                panic!("poison queue {which}");
+            })
+            .join();
+        }
+        assert!(pool.shared.injector.is_poisoned());
+        assert!(pool.shared.sleep.is_poisoned());
+        assert!(pool.shared.deques[0].is_poisoned());
+        // sharded calls still complete through the poisoned locks
+        let count = AtomicUsize::new(0);
+        pool.run_sharded(16, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+        // round tasks too
+        let group = RoundGroup::new();
+        pool.submit_round(&group, 9, Box::new(|| {}));
+        let mut out = Vec::new();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(9, false)]);
+        drop(pool); // must not panic-in-drop on the poisoned mutexes
+    }
+
+    #[test]
+    fn round_tasks_complete_and_report_their_keys() {
+        let pool = ThreadPool::new(2);
+        let group = RoundGroup::new();
+        let hits: Vec<AtomicUsize> =
+            (0..5).map(|_| AtomicUsize::new(0)).collect();
+        let hits = Arc::new(hits);
+        for key in 0..5usize {
+            let h = hits.clone();
+            pool.submit_round(&group, key, Box::new(move || {
+                h[key].fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        let mut out = Vec::new();
+        while out.len() < 5 {
+            pool.wait_rounds(&group, &mut out);
+        }
+        let mut keys: Vec<usize> = out.iter().map(|&(k, _)| k).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![0, 1, 2, 3, 4]);
+        assert!(out.iter().all(|&(_, panicked)| !panicked));
+        for (key, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "round {key}");
+        }
+        let stats = pool.stats();
+        assert!(stats.rounds >= 5, "rounds executed {}", stats.rounds);
+        assert!(stats.injected >= 5, "injected {}", stats.injected);
+        assert!(stats.executed >= 5, "executed {}", stats.executed);
+    }
+
+    #[test]
+    fn round_task_panic_is_reported_not_fatal() {
+        let pool = ThreadPool::new(2);
+        let group = RoundGroup::new();
+        pool.submit_round(&group, 3, Box::new(|| panic!("round boom")));
+        let mut out = Vec::new();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(3, true)]);
+        // the executing thread survived; both work kinds still serve
+        pool.submit_round(&group, 4, Box::new(|| {}));
+        out.clear();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(4, false)]);
+        let count = AtomicUsize::new(0);
+        pool.run_sharded(8, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn waiting_driver_helps_execute_rounds() {
+        // single-worker pool: occupy the worker with a gated round,
+        // then submit a second round — the driver blocked in
+        // wait_rounds must steal and execute it itself (this is the
+        // property that keeps a one-thread pool's lanes overlapped)
+        let pool = ThreadPool::new(1);
+        let group = RoundGroup::new();
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        pool.submit_round(&group, 0, Box::new(move || {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }));
+        // let the worker pop the gated round before queueing the next
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        // safety net: a detached opener fires the gate eventually, so a
+        // helping-logic regression fails the assertion instead of
+        // hanging the suite
+        let g = gate.clone();
+        let _opener = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_secs(10));
+            let (lock, cv) = &*g;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        pool.submit_round(&group, 1, Box::new(|| {}));
+        let mut out = Vec::new();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(1, false)],
+                   "driver did not execute the queued round itself");
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        while !out.iter().any(|&(k, _)| k == 0) {
+            pool.wait_rounds(&group, &mut out);
+        }
+    }
+
+    #[test]
+    fn workers_steal_across_deques() {
+        // a round task executing on one worker shards a nested call:
+        // its claim hints land on that worker's own deque, and the
+        // sibling workers must steal them (observable in the stolen
+        // counter — with 4 workers and repeated 8-way jobs inside a
+        // round, at least one hint is overwhelmingly likely stolen; a
+        // zero steal count would mean the topology is wired wrong)
+        let pool = ThreadPool::new(4);
+        let group = RoundGroup::new();
+        let total = Arc::new(AtomicUsize::new(0));
+        let t = total.clone();
+        // pool reference smuggled as a raw pointer: the test blocks in
+        // wait_rounds until the round completes, outliving the task
+        struct SendPool(*const ThreadPool);
+        unsafe impl Send for SendPool {}
+        let p = SendPool(&pool as *const ThreadPool);
+        pool.submit_round(&group, 0, Box::new(move || {
+            let pool = unsafe { &*p.0 };
+            for _ in 0..50 {
+                pool.run_sharded(64, 8, |s, e| {
+                    t.fetch_add(e - s, Ordering::Relaxed);
+                    std::thread::sleep(
+                        std::time::Duration::from_micros(200));
+                });
+            }
+        }));
+        let mut out = Vec::new();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(0, false)]);
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 64);
+        let stats = pool.stats();
+        assert!(stats.stolen > 0,
+                "no steals across {} executed entries", stats.executed);
+    }
+
+    #[test]
+    fn pool_threads_parsing() {
+        assert_eq!(parse_pool_threads("8"), Ok(8));
+        assert_eq!(parse_pool_threads(" 4 "), Ok(4));
+        assert_eq!(parse_pool_threads("1"), Ok(1));
+        // zero is invalid, not "one" and not "auto"
+        assert!(parse_pool_threads("0").unwrap_err().contains(">= 1"));
+        // garbage is diagnosed, not swallowed
+        assert!(parse_pool_threads("o8").unwrap_err().contains("o8"));
+        assert!(parse_pool_threads("").is_err());
+        assert!(parse_pool_threads("-2").is_err());
+        // unset (whatever the ambient env) always yields a usable count
+        assert!(default_threads() >= 1);
     }
 
     #[test]

@@ -10,10 +10,12 @@
 use std::sync::Arc;
 
 use asd::asd::{AsdConfig, AsdEngine};
+use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
 use asd::ddpm::{BatchedSequentialSampler, NoiseStreams, SequentialSampler};
 use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle};
 use asd::picard::{PicardConfig, PicardSampler};
 use asd::runtime::pool::PoolConfig;
+use asd::schedule::DdpmSchedule;
 
 const POOL_SIZES: [usize; 3] = [1, 2, 8];
 
@@ -155,6 +157,139 @@ fn batched_sequential_bit_identical_across_pool_sizes() {
                     "row {r} dim {i}");
         }
     }
+}
+
+/// Steal-schedule leg: a mixed ASD + Picard + sequential burst served
+/// through the full coordinator (two variants, two workers, fused
+/// lanes, round tasks on the work-stealing pool) must return
+/// bit-identical samples per request across row-shard pool sizes 1/2/8
+/// AND across repeated runs — every repetition samples a different
+/// steal/fusion/admission schedule, none of which may touch a bit.
+#[test]
+fn coordinator_burst_bit_identical_across_pool_sizes_and_schedules() {
+    let model_a: Arc<dyn DenoiseModel> =
+        GmmDdpmOracle::new(Gmm::random(8, 6, 1.5, 41), 50, false);
+    let model_b: Arc<dyn DenoiseModel> =
+        GmmDdpmOracle::new(Gmm::circle_2d(), 50, false);
+    let run = |pool_size: usize| -> Vec<Vec<u64>> {
+        let c = Coordinator::new(ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            enable_batching: true,
+            pool: PoolConfig { pool_size, shard_min: 1 },
+            ..Default::default()
+        }).unwrap();
+        c.register_model("a", model_a.clone());
+        c.register_model("b", model_b.clone());
+        let rxs: Vec<_> = (0..12u64)
+            .map(|i| {
+                let sampler = match i % 3 {
+                    0 => SamplerSpec::Sequential,
+                    1 => SamplerSpec::Asd(8),
+                    _ => SamplerSpec::Picard(8, 1e-8),
+                };
+                let variant = if i % 2 == 0 { "a" } else { "b" };
+                c.submit(Request {
+                    id: 0,
+                    variant: variant.into(),
+                    sampler,
+                    seed: 300 + i,
+                    cond: vec![],
+                }).1
+            })
+            .collect();
+        let out: Vec<Vec<u64>> = rxs.into_iter()
+            .map(|rx| {
+                let r = rx.recv().unwrap();
+                assert!(r.error.is_none(), "{:?}", r.error);
+                bits(&r.sample)
+            })
+            .collect();
+        c.shutdown();
+        out
+    };
+    let reference = run(1);
+    for pool_size in POOL_SIZES {
+        for rep in 0..3 {
+            let got = run(pool_size);
+            assert_eq!(got, reference,
+                       "pool_size={pool_size} rep={rep} changed bits");
+        }
+    }
+}
+
+/// A denoiser that sleeps per round — a controlled straggler lane.
+struct SleepyModel {
+    sched: DdpmSchedule,
+    delay: std::time::Duration,
+}
+
+impl DenoiseModel for SleepyModel {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn cond_dim(&self) -> usize {
+        0
+    }
+    fn k_steps(&self) -> usize {
+        self.sched.k_steps
+    }
+    fn schedule(&self) -> &DdpmSchedule {
+        &self.sched
+    }
+    fn denoise_batch(&self, _ys: &[f64], _ts: &[f64], _cond: &[f64],
+                     n: usize, out: &mut [f64]) -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        out[..n].fill(0.0);
+        Ok(())
+    }
+}
+
+/// End-to-end proof the tick barrier is gone: with ONE coordinator
+/// worker holding a straggler lane and a fast lane, the fast lane must
+/// drain in a small fraction of the straggler's round window (the old
+/// tick-synchronous driver stretched the fast lane to ~the straggler's
+/// window, one barriered round at a time). Runs for any
+/// ASD_POOL_THREADS — at one pool thread the driver itself executes
+/// round tasks while it waits.
+#[test]
+fn single_worker_two_lane_burst_overlaps_without_barrier() {
+    let c = Coordinator::new(ServerConfig {
+        workers: 1,
+        max_batch: 8,
+        enable_batching: true,
+        ..Default::default()
+    }).unwrap();
+    c.register_model("straggler", Arc::new(SleepyModel {
+        sched: DdpmSchedule::new(30),
+        delay: std::time::Duration::from_millis(4),
+    }));
+    c.register_model("fast", GmmDdpmOracle::new(Gmm::circle_2d(), 25,
+                                                false));
+    let mk = |variant: &str, seed| Request {
+        id: 0,
+        variant: variant.into(),
+        sampler: SamplerSpec::Sequential,
+        seed,
+        cond: vec![],
+    };
+    let (_, rx_slow) = c.submit(mk("straggler", 1));
+    let (_, rx_fast) = c.submit(mk("fast", 2));
+    assert!(rx_fast.recv().unwrap().error.is_none());
+    assert!(rx_slow.recv().unwrap().error.is_none());
+    let m = c.metrics();
+    let slow = m.lane("straggler").expect("straggler lane");
+    let fast = m.lane("fast").expect("fast lane");
+    assert!(slow.overlaps(fast), "lanes ran back to back");
+    let slow_window = slow.last_round_ms - slow.first_round_ms;
+    let fast_window = fast.last_round_ms - fast.first_round_ms;
+    assert!(slow_window >= 50.0,
+            "straggler finished implausibly fast: {slow_window:.2}ms");
+    assert!(fast_window < slow_window * 0.5,
+            "fast lane was gated by the straggler (tick barrier): \
+             fast {fast_window:.2}ms vs slow {slow_window:.2}ms");
+    assert!(m.pool.rounds > 0, "rounds did not flow through the pool");
+    c.shutdown();
 }
 
 #[test]
