@@ -15,6 +15,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
 use crate::ddpm::SequentialSampler;
 use crate::model::DenoiseModel;
+use crate::math::isa::KernelPolicy;
 use crate::picard::PicardSampler;
 use crate::runtime::pool::{self, PoolConfig};
 
@@ -46,6 +47,15 @@ pub struct ServerConfig {
     /// (the pre-cap behavior). Surfaced per lane as
     /// `LaneSnapshot::arena_high_water_bytes`.
     pub arena_byte_cap: usize,
+    /// GEMM kernel policy for native models *loaded by this server's
+    /// frontend* (`--native` serving): requested ISA + packed-panel
+    /// precision, resolved once per model at load (see `math::isa`).
+    /// Determines the determinism tier the deployment advertises —
+    /// bit-exact, reproducible-given-config, or
+    /// quantized-with-error-bound. Models registered directly by
+    /// callers carry their own policy; this field does not rewrite
+    /// them.
+    pub kernel: KernelPolicy,
 }
 
 impl Default for ServerConfig {
@@ -57,6 +67,7 @@ impl Default for ServerConfig {
             max_queue_depth: 1024,
             pool: PoolConfig::default(),
             arena_byte_cap: 64 << 20, // 64 MiB per lane
+            kernel: KernelPolicy::default(),
         }
     }
 }

@@ -117,6 +117,74 @@ pub fn make_class_conds(model: &Arc<dyn DenoiseModel>, n: usize)
     (conds, classes)
 }
 
+/// Quantized-tier quality leg on the GMM analytic workload: the same
+/// fixed native MLP sampled under f32, f16, and int8 packed panels,
+/// plus an f32 *reseed* row that calibrates pure sampling noise.
+/// Absolute scores are irrelevant here (the toy MLP is untrained) —
+/// the claim under test is that panel quantization shifts the score
+/// distribution by no more than seed noise does, so the
+/// quantized-with-error-bound tier is statistically indistinguishable
+/// from f32 at sampling time. Returns the target plus rows in order:
+/// `native-f32`, `native-f32-reseed`, `native-f16`, `native-int8`.
+pub fn quantized_tier_rows(n: usize, seed0: u64)
+                           -> Result<(TargetSpec, Vec<QualityRow>)> {
+    use crate::math::isa::{IsaRequest, KernelPolicy, Precision};
+    use crate::model::{NativeMlp, VariantInfo};
+    let gmm = Gmm::circle_2d();
+    let target = TargetSpec::Gmm {
+        means: (0..8).map(|c| gmm.mean_of(c).to_vec()).collect(),
+        sigmas: gmm.sigmas.clone(),
+        weights: gmm.weights.clone(),
+    };
+    let info = VariantInfo::toy("quant-tier", 2, 0, 24, 1, 20);
+    let flat: Vec<f32> = (0..info.weights_len())
+        .map(|i| ((((i * 37) % 101) as f32 / 101.0) - 0.5) * 0.6)
+        .collect();
+    let mut rows = Vec::new();
+    for (method, precision, seed) in [
+        ("native-f32", Precision::F32, seed0),
+        ("native-f32-reseed", Precision::F32, seed0 + 7919),
+        ("native-f16", Precision::F16, seed0),
+        ("native-int8", Precision::Int8, seed0),
+    ] {
+        let policy = KernelPolicy { isa: IsaRequest::Auto, precision };
+        let model: Arc<dyn DenoiseModel> =
+            NativeMlp::from_flat_with(&info, &flat, policy)?;
+        let samples = sample_ddpm(&model, n, seed, &[])?;
+        rows.push(score(&target, samples, None, method, 1));
+    }
+    Ok((target, rows))
+}
+
+/// Assert rows from [`quantized_tier_rows`] are statistically
+/// indistinguishable: per metric, each quantized row may differ from
+/// the f32 row by at most a few reseed-noise widths plus a small
+/// absolute floor (the floor keeps a near-zero noise estimate from
+/// turning sampling jitter into a failure).
+pub fn quantized_indistinguishable(rows: &[QualityRow]) -> Result<()> {
+    anyhow::ensure!(rows.len() >= 3,
+                    "need f32, f32-reseed, and quantized rows (got {})",
+                    rows.len());
+    let base = &rows[0];
+    let reseed = &rows[1];
+    for quant in &rows[2..] {
+        for (name, a, b, noise) in [
+            ("sliced_w", base.sliced_w, quant.sliced_w,
+             (base.sliced_w - reseed.sliced_w).abs()),
+            ("frechet", base.frechet, quant.frechet,
+             (base.frechet - reseed.frechet).abs()),
+        ] {
+            let bound = 4.0 * noise + 0.15 * a.abs().max(1.0);
+            anyhow::ensure!((a - b).abs() <= bound,
+                            "{} {name}: |{b} - {a}| = {} exceeds the \
+                             indistinguishability bound {bound} \
+                             (reseed noise {noise})",
+                            quant.method, (a - b).abs());
+        }
+    }
+    Ok(())
+}
+
 pub fn format_quality_table(rows: &[QualityRow], metric_name: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!("{:<12} {:>14} {:>12} {:>12} {:>8}\n", "method",
@@ -155,5 +223,20 @@ mod tests {
         assert!(row_a.frechet < 0.3, "asd frechet {}", row_a.frechet);
         let table = format_quality_table(&[row_d, row_a], "align");
         assert!(table.contains("ASD-8"));
+    }
+
+    #[test]
+    fn quantized_tiers_are_statistically_indistinguishable() {
+        let (_, rows) = quantized_tier_rows(160, 5).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].method, "native-f32");
+        assert_eq!(rows[2].method, "native-f16");
+        for r in &rows {
+            assert!(r.frechet.is_finite() && r.sliced_w.is_finite(),
+                    "{r:?}");
+        }
+        quantized_indistinguishable(&rows).unwrap();
+        let table = format_quality_table(&rows, "align");
+        assert!(table.contains("native-int8"));
     }
 }

@@ -229,20 +229,30 @@ impl ForwardBenchRow {
     }
 }
 
-/// One GEMM shape-grid measurement for `BENCH_gemm.json`: a single
-/// `(m, n, k)` product timed under one kernel generation.
+/// One GEMM shape-grid measurement for `BENCH_gemm.json` (schema v2):
+/// a single `(m, n, k)` product timed under one kernel generation on
+/// one ISA/precision pairing.
 ///
 /// Kernels: `"ref"` (naive triple loop), `"v1"` (PR-2 cache-blocked
 /// MR-row kernel over row-major B), `"packed"` (prepacked KC×NR panel
-/// kernel, serial), `"packed2d"` (packed kernel 2-D M×N-sharded on the
-/// global pool — `pool_size` carries the tile-shard budget). All four
-/// compute bit-identical outputs; only wall-clock differs.
+/// kernel, serial — one row per ISA × panel precision the host can
+/// run), `"packed2d"` (packed kernel 2-D M×N-sharded on the global
+/// pool — `pool_size` carries the tile-shard budget). Each row is
+/// parity-checked per its determinism tier before timing: portable
+/// f32 bit-identical to `gemm_ref`, SIMD f32 within the FMA tolerance
+/// *and* bit-stable across reruns, f16/int8 within the quantization
+/// tolerance (see `math::isa::gemm_rel_tolerance`).
 #[derive(Debug, Clone)]
 pub struct GemmBenchRow {
     pub m: usize,
     pub n: usize,
     pub k: usize,
     pub kernel: String,
+    /// instruction set the kernel ran on: "portable" | "avx2" | "neon"
+    pub isa: String,
+    /// packed-panel store: "f32" | "f16" | "int8" (ref/v1 read
+    /// row-major f32 B and always report "f32")
+    pub precision: String,
     /// tile-shard budget (1 = serial)
     pub pool_size: usize,
     pub mean_ms: f64,
@@ -251,14 +261,18 @@ pub struct GemmBenchRow {
 }
 
 impl GemmBenchRow {
+    #[allow(clippy::too_many_arguments)]
     pub fn from_mean_ms(m: usize, n: usize, k: usize, kernel: &str,
-                        pool_size: usize, mean_ms: f64) -> GemmBenchRow {
+                        isa: &str, precision: &str, pool_size: usize,
+                        mean_ms: f64) -> GemmBenchRow {
         let flops = 2.0 * m as f64 * n as f64 * k as f64;
         GemmBenchRow {
             m,
             n,
             k,
             kernel: kernel.to_string(),
+            isa: isa.to_string(),
+            precision: precision.to_string(),
             pool_size,
             mean_ms,
             gflops: flops / (mean_ms.max(1e-9) * 1e-3) / 1e9,
@@ -271,6 +285,8 @@ impl GemmBenchRow {
             ("n", Json::Num(self.n as f64)),
             ("k", Json::Num(self.k as f64)),
             ("kernel", Json::Str(self.kernel.clone())),
+            ("isa", Json::Str(self.isa.clone())),
+            ("precision", Json::Str(self.precision.clone())),
             ("pool_size", Json::Num(self.pool_size as f64)),
             ("mean_ms", Json::Num(self.mean_ms)),
             ("gflops", Json::Num(self.gflops)),
@@ -291,23 +307,34 @@ pub fn gemm_serve_shapes() -> Vec<(usize, usize, usize)> {
     vec![(4, 256, 256), (16, 256, 256), (64, 256, 256)]
 }
 
-/// Time the four kernel generations over a shape grid (bias + SiLU
+/// Time the kernel generations over a shape grid (bias + SiLU
 /// epilogue — the hidden-layer workload). `tile_shards` is the
 /// `packed2d` shard budget; `warmup`/`iters` feed `util::timer::bench`.
-/// Every kernel's output is checked bit-identical to `gemm_ref` before
-/// its timing is recorded — a wrong-fast kernel must not produce a
-/// plausible-looking row.
+///
+/// The packed kernel is timed once per (ISA × panel precision) the
+/// host can run — portable × {f32, f16, int8} everywhere, plus the
+/// detected SIMD ISA's rows on capable hosts. Every row is
+/// parity-checked per its determinism tier before its timing is
+/// recorded — a wrong-fast kernel must not produce a
+/// plausible-looking row: portable f32 must match `gemm_ref`
+/// bit-for-bit; SIMD f32 must land within the FMA-contraction
+/// tolerance *and* reproduce its own bits on a rerun; f16/int8 must
+/// land within the quantization tolerance. `packed2d` (active ISA,
+/// f32) must match the serial same-config product bit-for-bit —
+/// sharding may never move a bit within a fixed kernel config.
 pub fn bench_gemm_grid(shapes: &[(usize, usize, usize)], tile_shards: usize,
                        warmup: usize, iters: usize)
                        -> Result<Vec<GemmBenchRow>> {
-    use crate::math::gemm::{gemm_bias_act, gemm_packed_bias_act,
-                            gemm_packed_sharded, gemm_ref, Epilogue,
+    use crate::math::gemm::{gemm_bias_act, gemm_packed_bias_act_on,
+                            gemm_packed_sharded_on, gemm_ref, Epilogue,
                             PackedB};
+    use crate::math::isa::{detect_isa, gemm_rel_tolerance, Isa, Precision};
     use crate::util::timer::bench;
 
     // a zero iteration count would panic inside the bench harness's
     // empty-sample summary; one measured iteration is the floor
     let iters = iters.max(1);
+    let active = detect_isa();
     let mut rows = Vec::new();
     for &(m, n, k) in shapes {
         let a: Vec<f32> =
@@ -316,18 +343,27 @@ pub fn bench_gemm_grid(shapes: &[(usize, usize, usize)], tile_shards: usize,
             (0..k * n).map(|i| ((i % 709) as f32 / 709.0) - 0.5).collect();
         let bias: Vec<f32> =
             (0..n).map(|i| ((i % 53) as f32 / 53.0) - 0.5).collect();
-        let pb = PackedB::pack(k, n, &b);
         let mut c = vec![0.0f32; m * n];
         let mut want = vec![0.0f32; m * n];
         gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
                  &mut want);
         let want_bits: Vec<u32> =
             want.iter().map(|v| v.to_bits()).collect();
-        let check = |c: &[f32], kernel: &str| -> Result<()> {
+        let check_bits = |c: &[f32], kernel: &str| -> Result<()> {
             let got: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
             anyhow::ensure!(got == want_bits,
                             "{kernel} kernel diverged from gemm_ref at \
                              m={m} n={n} k={k}");
+            Ok(())
+        };
+        let check_tol = |c: &[f32], tol: f64, label: &str| -> Result<()> {
+            for (i, (&got, &wv)) in c.iter().zip(&want).enumerate() {
+                let bound = tol * (wv.abs() as f64).max(1.0);
+                anyhow::ensure!(((got - wv).abs() as f64) <= bound,
+                                "{label} kernel outside its tier \
+                                 tolerance at m={m} n={n} k={k} i={i}: \
+                                 got {got}, ref {wv}, tol {tol}");
+            }
             Ok(())
         };
 
@@ -335,30 +371,78 @@ pub fn bench_gemm_grid(shapes: &[(usize, usize, usize)], tile_shards: usize,
             gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
                      &mut c);
         });
-        check(&c, "ref")?;
-        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "ref", 1, st.mean_ms));
+        check_bits(&c, "ref")?;
+        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "ref", "portable",
+                                             "f32", 1, st.mean_ms));
 
         let st = bench(warmup, iters, || {
             gemm_bias_act(m, n, k, &a, &b, Some(&bias), Epilogue::Silu,
                           None, &mut c);
         });
-        check(&c, "v1")?;
-        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "v1", 1, st.mean_ms));
+        check_bits(&c, "v1")?;
+        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "v1", "portable",
+                                             "f32", 1, st.mean_ms));
 
-        let st = bench(warmup, iters, || {
-            gemm_packed_bias_act(m, n, k, &a, &pb, Some(&bias),
-                                 Epilogue::Silu, None, &mut c);
-        });
-        check(&c, "packed")?;
-        rows.push(GemmBenchRow::from_mean_ms(m, n, k, "packed", 1,
-                                             st.mean_ms));
+        // serial packed kernel: every ISA × precision the host can run
+        let mut isas = vec![Isa::Portable];
+        if active != Isa::Portable {
+            isas.push(active);
+        }
+        for &isa in &isas {
+            for precision in
+                [Precision::F32, Precision::F16, Precision::Int8]
+            {
+                let pb = PackedB::pack_as(k, n, &b, precision);
+                let label = format!("packed[{isa}/{precision}]");
+                let st = bench(warmup, iters, || {
+                    gemm_packed_bias_act_on(isa, m, n, k, &a, &pb,
+                                            Some(&bias), Epilogue::Silu,
+                                            None, &mut c);
+                });
+                let tol = gemm_rel_tolerance(isa, precision);
+                if tol == 0.0 {
+                    // bit-exact tier: portable f32 is today's contract
+                    check_bits(&c, &label)?;
+                } else {
+                    check_tol(&c, tol, &label)?;
+                    // reproducible-given-config: rerunning the same
+                    // kernel config must reproduce the exact bits
+                    let bits: Vec<u32> =
+                        c.iter().map(|v| v.to_bits()).collect();
+                    gemm_packed_bias_act_on(isa, m, n, k, &a, &pb,
+                                            Some(&bias), Epilogue::Silu,
+                                            None, &mut c);
+                    let again: Vec<u32> =
+                        c.iter().map(|v| v.to_bits()).collect();
+                    anyhow::ensure!(bits == again,
+                                    "{label} kernel is not bit-stable \
+                                     across reruns at m={m} n={n} k={k}");
+                }
+                rows.push(GemmBenchRow::from_mean_ms(
+                    m, n, k, "packed", isa.name(), precision.name(), 1,
+                    st.mean_ms));
+            }
+        }
 
+        // 2-D sharded packed kernel on the active ISA (f32 panels):
+        // shard-count invariance is bitwise within a fixed config
+        let pb = PackedB::pack(k, n, &b);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_packed_bias_act_on(active, m, n, k, &a, &pb, Some(&bias),
+                                Epilogue::Silu, None, &mut serial);
         let st = bench(warmup, iters, || {
-            gemm_packed_sharded(m, n, k, &a, &pb, Some(&bias),
-                                Epilogue::Silu, None, &mut c, tile_shards);
+            gemm_packed_sharded_on(active, m, n, k, &a, &pb, Some(&bias),
+                                   Epilogue::Silu, None, &mut c,
+                                   tile_shards);
         });
-        check(&c, "packed2d")?;
+        let serial_bits: Vec<u32> =
+            serial.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+        anyhow::ensure!(got == serial_bits,
+                        "packed2d sharding moved a bit vs the serial \
+                         same-config product at m={m} n={n} k={k}");
         rows.push(GemmBenchRow::from_mean_ms(m, n, k, "packed2d",
+                                             active.name(), "f32",
                                              tile_shards, st.mean_ms));
     }
     Ok(rows)
@@ -382,14 +466,17 @@ pub fn run_gemm_grid(tile_shards: usize, warmup: usize, iters: usize,
 }
 
 /// Assemble the `BENCH_gemm.json` document (GFLOP/s per kernel
-/// generation over the shape grid).
+/// generation × ISA × precision over the shape grid). Schema v2 adds
+/// per-row `isa`/`precision` fields and the top-level `isa_detected`.
 pub fn bench_gemm_json(rows: &[GemmBenchRow], tile_shards: usize) -> Json {
     use crate::math::gemm::{KC, MR, NR};
     Json::obj(vec![
         ("bench", Json::Str("bench_gemm".into())),
-        ("schema_version", Json::Num(1.0)),
+        ("schema_version", Json::Num(2.0)),
         ("pool_threads",
          Json::Num(crate::runtime::pool::default_threads() as f64)),
+        ("isa_detected",
+         Json::Str(crate::math::isa::detect_isa().name().into())),
         ("tile_shards", Json::Num(tile_shards as f64)),
         ("mr", Json::Num(MR as f64)),
         ("nr", Json::Num(NR as f64)),
@@ -398,17 +485,19 @@ pub fn bench_gemm_json(rows: &[GemmBenchRow], tile_shards: usize) -> Json {
     ])
 }
 
-/// Render the GEMM grid as a table, one line per (shape, kernel).
+/// Render the GEMM grid as a table, one line per (shape, kernel, ISA,
+/// precision).
 pub fn format_gemm_rows(rows: &[GemmBenchRow]) -> String {
     let mut out = String::new();
-    out.push_str(&format!("{:<18} {:<10} {:>6} {:>12} {:>10}\n",
-                          "shape (m n k)", "kernel", "tiles", "ms/call",
-                          "GFLOP/s"));
+    out.push_str(&format!("{:<18} {:<10} {:<10} {:<10} {:>6} {:>12} \
+                           {:>10}\n",
+                          "shape (m n k)", "kernel", "isa", "precision",
+                          "tiles", "ms/call", "GFLOP/s"));
     for r in rows {
         out.push_str(&format!(
-            "{:<18} {:<10} {:>6} {:>12.4} {:>10.2}\n",
-            format!("{}x{}x{}", r.m, r.n, r.k), r.kernel, r.pool_size,
-            r.mean_ms, r.gflops));
+            "{:<18} {:<10} {:<10} {:<10} {:>6} {:>12.4} {:>10.2}\n",
+            format!("{}x{}x{}", r.m, r.n, r.k), r.kernel, r.isa,
+            r.precision, r.pool_size, r.mean_ms, r.gflops));
     }
     out
 }
@@ -552,33 +641,56 @@ mod tests {
     }
 
     #[test]
-    fn gemm_grid_measures_all_four_kernels_and_serializes() {
-        // tiny odd shape: correctness (bit-check vs gemm_ref inside
-        // the grid runner) + schema, not speed
+    fn gemm_grid_measures_every_kernel_generation_and_serializes() {
+        // tiny odd shape: correctness (per-tier parity checks inside
+        // the grid runner) + schema, not speed. Host-agnostic: a
+        // portable-only host produces 6 rows per shape (ref, v1,
+        // packed × 3 precisions, packed2d), a SIMD host 9 (+ the
+        // active ISA's 3 packed rows).
         let rows = bench_gemm_grid(&[(5, 9, 17)], 4, 0, 1).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert!(rows.len() == 6 || rows.len() == 9, "{}", rows.len());
         let kernels: Vec<&str> =
             rows.iter().map(|r| r.kernel.as_str()).collect();
-        assert_eq!(kernels, ["ref", "v1", "packed", "packed2d"]);
+        for kernel in ["ref", "v1", "packed", "packed2d"] {
+            assert!(kernels.contains(&kernel), "missing {kernel}");
+        }
+        for precision in ["f32", "f16", "int8"] {
+            assert!(rows.iter().any(|r| r.kernel == "packed"
+                                        && r.precision == precision),
+                    "missing packed/{precision} row");
+        }
         for r in &rows {
             assert!(r.gflops > 0.0, "{r:?}");
             assert_eq!((r.m, r.n, r.k), (5, 9, 17));
+            assert!(["portable", "avx2", "neon"]
+                        .contains(&r.isa.as_str()), "{r:?}");
         }
-        assert_eq!(rows[3].pool_size, 4);
+        let last = rows.last().unwrap();
+        assert_eq!((last.kernel.as_str(), last.pool_size),
+                   ("packed2d", 4));
         let doc = bench_gemm_json(&rows, 4);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_gemm");
+        assert_eq!(back.get("schema_version").unwrap()
+                       .as_usize().unwrap(), 2);
+        assert_eq!(back.get("isa_detected").unwrap().as_str().unwrap(),
+                   crate::math::isa::detect_isa().name());
         assert_eq!(back.get("nr").unwrap().as_usize().unwrap(),
                    crate::math::gemm::NR);
         assert_eq!(back.get("kc").unwrap().as_usize().unwrap(),
                    crate::math::gemm::KC);
         let rs = back.get("rows").unwrap().as_arr().unwrap();
-        assert_eq!(rs.len(), 4);
-        assert_eq!(rs[2].get("kernel").unwrap().as_str().unwrap(),
-                   "packed");
+        assert_eq!(rs.len(), rows.len());
+        for (j, r) in rows.iter().enumerate() {
+            assert_eq!(rs[j].get("isa").unwrap().as_str().unwrap(),
+                       r.isa);
+            assert_eq!(rs[j].get("precision").unwrap().as_str().unwrap(),
+                       r.precision);
+        }
         let table = format_gemm_rows(&rows);
-        assert!(table.contains("packed2d") && table.contains("GFLOP/s"));
+        assert!(table.contains("packed2d") && table.contains("GFLOP/s")
+                && table.contains("precision") && table.contains("int8"));
     }
 
     #[test]

@@ -21,9 +21,27 @@ use anyhow::{bail, Context, Result};
 use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
 use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
 use asd::ddpm::SequentialSampler;
+use asd::math::isa::{IsaRequest, KernelPolicy, Precision};
 use asd::model::NativeMlp;
 use asd::runtime::Runtime;
 use asd::util::cli::Args;
+
+/// Parse `--gemm-isa` / `--gemm-precision` into the [`KernelPolicy`]
+/// handed to native model loads. Unset flags keep the defaults
+/// (auto-detected ISA, f32 panels); the `ASD_GEMM_ISA` env var still
+/// overrides the ISA at resolve time (see `math::isa`).
+fn kernel_policy_from_args(args: &Args) -> Result<KernelPolicy> {
+    let mut policy = KernelPolicy::default();
+    if let Some(s) = args.get("gemm-isa") {
+        policy.isa = IsaRequest::parse(s).with_context(
+            || format!("bad --gemm-isa '{s}' (use auto|portable|avx2|neon)"))?;
+    }
+    if let Some(s) = args.get("gemm-precision") {
+        policy.precision = Precision::parse(s).with_context(
+            || format!("bad --gemm-precision '{s}' (use f32|f16|int8)"))?;
+    }
+    Ok(policy)
+}
 
 fn main() {
     let args = Args::from_env(&["verbose", "native", "hlo-kernels", "help",
@@ -55,10 +73,13 @@ fn print_help() {
          COMMANDS:\n  \
          info                       list artifact variants\n  \
          sample --model <v>         sample; options: --n 4 --theta 8\n    \
-         [--sampler asd|ddpm] [--seed 0] [--native] [--hlo-kernels]\n  \
+         [--sampler asd|ddpm] [--seed 0] [--native] [--hlo-kernels]\n    \
+         [--gemm-isa auto|portable|avx2|neon] (native GEMM kernels)\n    \
+         [--gemm-precision f32|f16|int8] (native packed-panel store)\n  \
          serve  --model <v>         synthetic serving trace; options:\n    \
          [--requests 32] [--workers 2] [--asd-frac 0.5] [--theta 8]\n    \
-         [--pool 1] [--shard-min 2] [--max-batch 8]\n    \
+         [--pool 1] [--shard-min 2] [--max-batch 8] [--native]\n    \
+         [--gemm-isa ...] [--gemm-precision ...] (native backend)\n    \
          [--max-queue-depth 1024] [--arena-cap-mb 64] (per-lane round\n    \
          arena byte cap; 0 = unbounded) [--analytic] (GMM oracle, no\n    \
          artifacts) [--analytic-variants 2] (mixed-variant lanes)\n    \
@@ -96,7 +117,12 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let rt = Runtime::load_default()?;
     let model: Arc<dyn asd::model::DenoiseModel> = if args.flag("native") {
         let info = rt.manifest.variant(variant)?;
-        NativeMlp::load(info, &rt.manifest.dir)?
+        let policy = kernel_policy_from_args(args)?;
+        let mlp = NativeMlp::load_with(info, &rt.manifest.dir, policy)?;
+        println!("native backend: isa={} precision={} tier={}",
+                 mlp.isa(), mlp.kernel_policy().precision,
+                 mlp.determinism_tier());
+        mlp
     } else {
         rt.model(variant)?
     };
@@ -176,6 +202,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pool: asd::runtime::pool::PoolConfig { pool_size, shard_min },
         // 0 disables the cap (lanes grow to high water forever)
         arena_byte_cap: arena_cap_mb << 20,
+        kernel: kernel_policy_from_args(args)?,
     };
 
     // --analytic serves GMM posterior-mean oracles: no AOT artifacts
@@ -200,9 +227,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         let variant = args.get("model").unwrap_or("gmm2d").to_string();
         let rt = Runtime::load_default()?;
-        let model = rt.model(&variant)?;
-        model.warmup()?;
-        let model: Arc<dyn asd::model::DenoiseModel> = model;
+        let model: Arc<dyn asd::model::DenoiseModel> =
+            if args.flag("native") {
+                // native backend honors the server's kernel policy:
+                // the resolved ISA/precision (and therefore the
+                // determinism tier) are fixed per deployment
+                let info = rt.manifest.variant(&variant)?;
+                let mlp = NativeMlp::load_with(info, &rt.manifest.dir,
+                                               config.kernel)?;
+                println!("native backend: isa={} precision={} tier={}",
+                         mlp.isa(), mlp.kernel_policy().precision,
+                         mlp.determinism_tier());
+                mlp
+            } else {
+                let model = rt.model(&variant)?;
+                model.warmup()?;
+                model
+            };
         models.push((variant, model));
     }
     let coordinator = Coordinator::new(config.clone())?;

@@ -3,10 +3,12 @@
 //! This is the kernel under `NativeMlp::denoise_batch`: every MLP layer
 //! over a `B`-row batch is one `B×n_in · n_in×n_out` matrix product
 //! with a fused bias + activation (+ residual) epilogue, instead of `B`
-//! scalar `linear()` calls. Written as autovectorizer-friendly plain
-//! Rust (no intrinsics, no unsafe in the micro-kernels): exact-length
-//! subslices and fixed-size register tiles let LLVM hoist the bounds
-//! checks and vectorize the `j`-loops.
+//! scalar `linear()` calls. The portable kernels are
+//! autovectorizer-friendly plain Rust (exact-length subslices and
+//! fixed-size register tiles let LLVM hoist the bounds checks and
+//! vectorize the `j`-loops); the packed path additionally has explicit
+//! `std::arch` micro-kernels (AVX2+FMA on x86-64, NEON on aarch64)
+//! selected at runtime through [`crate::math::isa`].
 //!
 //! Two kernel generations live here:
 //!
@@ -23,25 +25,46 @@
 //!   fused serving rounds, where v1's bandwidth is wasted re-streaming
 //!   weights.
 //!
-//! **Determinism contract.** For every output element `c[i][j]` the
-//! reduction over `p` (the shared dimension) runs in ascending order
-//! starting from the bias, using plain IEEE mul/add (no `mul_add`):
+//! **Determinism contract (tiered — see [`crate::math::isa`]).** For
+//! every output element `c[i][j]` the reduction over `p` (the shared
+//! dimension) runs in ascending order starting from the bias. The
+//! portable kernels use plain IEEE mul/add (no `mul_add`):
 //!
 //! ```text
 //! acc = bias[j];  for p in 0..k { acc += a[i][p] * b[p][j] }
 //! ```
 //!
 //! Row-blocking (MR), column panels (NR), k-panel blocking (KC) and
-//! 2-D M×N sharding ([`gemm_sharded`], [`gemm_packed_sharded`]) only
+//! 2-D M×N sharding ([`gemm_sharded`], [`gemm_packed_sharded_on`]) only
 //! regroup *independent* output elements — they never split or reorder
 //! a single element's reduction. The packed micro-kernel loads each
 //! MR×NR C tile into a register tile once per k-panel and replays the
-//! identical ascending-`p` add/mul sequence there before storing back,
-//! which is the same IEEE op stream per element as the in-memory v1
-//! accumulation. So every kernel here is **bit-identical to
-//! [`gemm_ref`]** (the naive triple loop with the same reduction
-//! order), for every tile shape and every shard count.
-//! tests/test_properties.rs enforces all of it.
+//! identical ascending-`p` sequence there before storing back. From
+//! that shared skeleton the three determinism tiers follow:
+//!
+//! * **bit-exact** — the portable f32 kernels
+//!   ([`Isa::Portable`][crate::math::isa::Isa], the default for the
+//!   plain `gemm_packed_bias_act` / `gemm_packed_sharded` entries)
+//!   replay the same IEEE op stream per element as v1 and are
+//!   **bit-identical to [`gemm_ref`]** for every tile shape and shard
+//!   count, on every host. This is the seed contract, unchanged.
+//! * **reproducible-given-config** — the SIMD f32 kernels fuse the
+//!   mul/add into FMA, so bits differ from `gemm_ref`; but IEEE FMA is
+//!   exactly rounded, the remainder rows run a one-row *vector* kernel
+//!   with the same per-lane op stream as an MR-block lane, tile row
+//!   starts are always MR-aligned and column starts NR-aligned, and
+//!   the kernel is picked once per GEMM call ([`Isa`] argument of
+//!   [`gemm_packed_bias_act_on`]) — never per tile. Hence for a fixed
+//!   resolved ISA the output is bit-stable across shard counts, tile
+//!   grids and steal schedules.
+//! * **quantized-with-error-bound** — f16/int8 [`PackedB`] stores
+//!   ([`PackedB::pack_as`]) dequantize inside the kernel (f16 per
+//!   element before the FMA; int8 per k-panel in the epilogue). They
+//!   track `gemm_ref` within
+//!   [`crate::math::isa::gemm_rel_tolerance`] and are still
+//!   shard/schedule bit-stable for a fixed config.
+//!
+//! tests/test_properties.rs and the in-module tests enforce all of it.
 //!
 //! The SiLU epilogue uses [`exp_fast`] — a branch-free Cody–Waite +
 //! degree-6-polynomial `expf` the autovectorizer can turn into SIMD —
@@ -53,6 +76,7 @@
 //! layer — well inside the 1e-5 parity budget and the 2e-4 golden
 //! tolerance.
 
+use crate::math::isa::{f16_to_f32, f32_to_f16, Isa, Precision};
 use crate::runtime::pool;
 
 /// Register-tile height: rows of `A` processed together so each loaded
@@ -332,38 +356,143 @@ pub fn gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
 /// micro-kernel touches is one exact-`NR` contiguous slice. `n_padded`
 /// is `n` rounded up to NR, and `p0 * n_padded` is exactly the size of
 /// all preceding k-panels.
+///
+/// Besides the full-f32 store the panels can be packed at reduced
+/// precision ([`PackedB::pack_as`]):
+///
+/// * **f16** — the same layout holding IEEE binary16 bit patterns
+///   (`u16`), half the L2 footprint. Dequant (`f16_to_f32`, exact) is
+///   fused into the kernel's panel-row load.
+/// * **int8** — the same layout holding `i8` quants, plus one f32
+///   scale per `(k-panel, column)` (`scales[(p0/KC) * n_padded + j]`,
+///   where `scale = colmax/127` over that k-panel's column and
+///   `q = round(w/scale)`), a quarter the footprint. The kernel
+///   accumulates `a · q` into a zeroed register tile per k-panel and
+///   applies `C[i][j] += t[i][j] * scale[j]` as a fused dequant
+///   epilogue. An all-zero column (in particular the zero padding)
+///   gets `scale = 0`, so its dequantized value is exactly `0.0`.
+#[derive(Debug, Clone)]
+enum PanelStore {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+/// See [`PanelStore`] docs above for the reduced-precision variants.
 #[derive(Debug, Clone)]
 pub struct PackedB {
     k: usize,
     n: usize,
-    /// n rounded up to the next NR multiple (floats per packed k-row)
+    /// n rounded up to the next NR multiple (elements per packed k-row)
     n_padded: usize,
-    data: Vec<f32>,
+    store: PanelStore,
+}
+
+/// Walk the packed layout's `(k-panel × column-panel)` blocks in store
+/// order, handing each one `(p0, pc, j0, jw, base, panel_len)`. The
+/// per-k-panel flat base and panel length are computed once per
+/// k-panel (not per column panel), and the bounds are debug-asserted
+/// against the buffer size so a precision variant can't silently read
+/// or write past the zero padding.
+fn for_each_panel(k: usize, n: usize, n_padded: usize,
+                  mut f: impl FnMut(usize, usize, usize, usize, usize,
+                                    usize)) {
+    let total = k * n_padded;
+    let mut p0 = 0usize;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        // hoisted per k-panel: all preceding k-panels occupy exactly
+        // p0 * n_padded elements, and every panel in this k-panel is
+        // pc * NR long
+        let kp_base = p0 * n_padded;
+        let panel_len = pc * NR;
+        for jp in 0..n_padded / NR {
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let base = kp_base + jp * panel_len;
+            debug_assert!(
+                base + panel_len <= total,
+                "packed panel (p0={p0}, jp={jp}) overruns the buffer"
+            );
+            f(p0, pc, j0, jw, base, panel_len);
+        }
+        p0 += pc;
+    }
 }
 
 impl PackedB {
-    /// Repack a row-major `k×n` matrix. O(k·n) copy, done once per
-    /// matrix lifetime (model load for MLP weights).
+    /// Repack a row-major `k×n` matrix at full f32 precision. O(k·n)
+    /// copy, done once per matrix lifetime (model load for MLP
+    /// weights).
     pub fn pack(k: usize, n: usize, b: &[f32]) -> PackedB {
+        PackedB::pack_as(k, n, b, Precision::F32)
+    }
+
+    /// Repack at the given panel precision (see the type docs for the
+    /// quantization schemes).
+    pub fn pack_as(k: usize, n: usize, b: &[f32],
+                   precision: Precision) -> PackedB {
         assert_eq!(b.len(), k * n, "PackedB: B is not k×n");
         let n_padded = n.div_ceil(NR) * NR;
-        let mut data = vec![0.0f32; k * n_padded];
-        let mut p0 = 0usize;
-        while p0 < k {
-            let pc = KC.min(k - p0);
-            let base = p0 * n_padded;
-            for jp in 0..n_padded / NR {
-                let j0 = jp * NR;
-                let jw = NR.min(n - j0);
-                let panel = &mut data[base + jp * pc * NR..][..pc * NR];
-                for dp in 0..pc {
-                    panel[dp * NR..dp * NR + jw].copy_from_slice(
-                        &b[(p0 + dp) * n + j0..(p0 + dp) * n + j0 + jw]);
-                }
+        let store = match precision {
+            Precision::F32 => {
+                let mut data = vec![0.0f32; k * n_padded];
+                for_each_panel(k, n, n_padded, |p0, pc, j0, jw, base,
+                                                panel_len| {
+                    let panel = &mut data[base..base + panel_len];
+                    for dp in 0..pc {
+                        panel[dp * NR..dp * NR + jw].copy_from_slice(
+                            &b[(p0 + dp) * n + j0..][..jw]);
+                    }
+                });
+                PanelStore::F32(data)
             }
-            p0 += pc;
-        }
-        PackedB { k, n, n_padded, data }
+            Precision::F16 => {
+                let mut data = vec![0u16; k * n_padded];
+                for_each_panel(k, n, n_padded, |p0, pc, j0, jw, base,
+                                                panel_len| {
+                    let panel = &mut data[base..base + panel_len];
+                    for dp in 0..pc {
+                        let src = &b[(p0 + dp) * n + j0..][..jw];
+                        for (dst, &w) in
+                            panel[dp * NR..dp * NR + jw].iter_mut()
+                                                        .zip(src) {
+                            *dst = f32_to_f16(w);
+                        }
+                    }
+                });
+                PanelStore::F16(data)
+            }
+            Precision::Int8 => {
+                let mut q = vec![0i8; k * n_padded];
+                let mut scales = vec![0.0f32; k.div_ceil(KC) * n_padded];
+                for_each_panel(k, n, n_padded, |p0, pc, j0, jw, base,
+                                                panel_len| {
+                    let srow = (p0 / KC) * n_padded;
+                    let panel = &mut q[base..base + panel_len];
+                    for dj in 0..jw {
+                        let j = j0 + dj;
+                        let mut colmax = 0.0f32;
+                        for dp in 0..pc {
+                            colmax = colmax.max(b[(p0 + dp) * n + j].abs());
+                        }
+                        let scale = colmax / 127.0;
+                        scales[srow + j] = scale;
+                        if scale == 0.0 {
+                            continue; // all-zero column: q stays 0
+                        }
+                        for dp in 0..pc {
+                            let w = b[(p0 + dp) * n + j];
+                            panel[dp * NR + dj] =
+                                (w / scale).round().clamp(-127.0, 127.0)
+                                    as i8;
+                        }
+                    }
+                });
+                PanelStore::Int8 { q, scales }
+            }
+        };
+        PackedB { k, n, n_padded, store }
     }
 
     /// Rows of the packed matrix (the GEMM's shared dimension).
@@ -376,26 +505,97 @@ impl PackedB {
         self.n
     }
 
-    /// Bytes held by the packed buffer (the load-time memory cost:
-    /// `k * round_up(n, NR) * 4`).
-    pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+    /// Precision the panels are stored at.
+    pub fn precision(&self) -> Precision {
+        match &self.store {
+            PanelStore::F32(_) => Precision::F32,
+            PanelStore::F16(_) => Precision::F16,
+            PanelStore::Int8 { .. } => Precision::Int8,
+        }
     }
 
-    /// The `pc × NR` panel for k-panel starting at `p0` (height `pc`)
-    /// and column panel `jp`.
+    /// Bytes held by the packed store (the load-time memory cost;
+    /// `k * round_up(n, NR) * 4` for f32, half that for f16, about a
+    /// quarter for int8).
+    pub fn bytes(&self) -> usize {
+        match &self.store {
+            PanelStore::F32(d) => d.len() * 4,
+            PanelStore::F16(d) => d.len() * 2,
+            PanelStore::Int8 { q, scales } => q.len() + scales.len() * 4,
+        }
+    }
+
+    /// The value the kernels will use for element `(p, j)` after
+    /// dequantization, including the zero-padding columns
+    /// (`j < n_padded`). Test/oracle accessor, not a hot path.
+    pub fn stored(&self, p: usize, j: usize) -> f32 {
+        assert!(p < self.k && j < self.n_padded, "stored({p},{j}) oob");
+        let p0 = (p / KC) * KC;
+        let pc = KC.min(self.k - p0);
+        let jp = j / NR;
+        let idx = self.panel_base(p0, pc, jp) + (p - p0) * NR + (j % NR);
+        match &self.store {
+            PanelStore::F32(d) => d[idx],
+            PanelStore::F16(d) => f16_to_f32(d[idx]),
+            PanelStore::Int8 { q, scales } => {
+                q[idx] as f32 * scales[(p0 / KC) * self.n_padded + j]
+            }
+        }
+    }
+
+    /// Flat offset of the panel for k-panel starting at `p0` (height
+    /// `pc`) and column panel `jp`, bounds-asserted in debug builds.
     #[inline]
-    fn panel(&self, p0: usize, pc: usize, jp: usize) -> &[f32] {
+    fn panel_base(&self, p0: usize, pc: usize, jp: usize) -> usize {
         let base = p0 * self.n_padded + jp * pc * NR;
-        &self.data[base..base + pc * NR]
+        debug_assert!(base + pc * NR <= self.k * self.n_padded,
+                      "packed panel (p0={p0}, jp={jp}) overruns the buffer");
+        base
+    }
+
+    /// The `pc × NR` f32 panel (panics if stored at another precision
+    /// — the dispatch table matches on the store first).
+    #[inline]
+    fn panel_f32(&self, p0: usize, pc: usize, jp: usize) -> &[f32] {
+        let base = self.panel_base(p0, pc, jp);
+        match &self.store {
+            PanelStore::F32(d) => &d[base..base + pc * NR],
+            _ => unreachable!("panel_f32 on non-f32 store"),
+        }
+    }
+
+    /// The `pc × NR` binary16 panel.
+    #[inline]
+    fn panel_f16(&self, p0: usize, pc: usize, jp: usize) -> &[u16] {
+        let base = self.panel_base(p0, pc, jp);
+        match &self.store {
+            PanelStore::F16(d) => &d[base..base + pc * NR],
+            _ => unreachable!("panel_f16 on non-f16 store"),
+        }
+    }
+
+    /// The `pc × NR` int8 panel plus its NR per-column dequant scales.
+    #[inline]
+    fn panel_i8(&self, p0: usize, pc: usize, jp: usize)
+                -> (&[i8], &[f32]) {
+        let base = self.panel_base(p0, pc, jp);
+        match &self.store {
+            PanelStore::Int8 { q, scales } => {
+                let srow = (p0 / KC) * self.n_padded + jp * NR;
+                (&q[base..base + pc * NR], &scales[srow..srow + NR])
+            }
+            _ => unreachable!("panel_i8 on non-int8 store"),
+        }
     }
 }
 
 /// Full bias→accumulate→epilogue computation of one C region against a
 /// [`PackedB`]. `j0` must be NR-aligned; `j1` is NR-aligned or `n`
 /// (both guaranteed by [`pool::ThreadPool::run_sharded_tiles`] and the
-/// serial entry).
-fn packed_region(n: usize, k: usize, a: &[f32], pb: &PackedB,
+/// serial entry). `isa` selects the micro-kernel for the whole region
+/// — the caller resolved it once per GEMM call, so every tile of one
+/// product runs the same kernel.
+fn packed_region(isa: Isa, n: usize, k: usize, a: &[f32], pb: &PackedB,
                  bias: Option<&[f32]>, epi: Epilogue,
                  residual: Option<&[f32]>, cv: &CView, r0: usize, r1: usize,
                  j0: usize, j1: usize) {
@@ -407,27 +607,132 @@ fn packed_region(n: usize, k: usize, a: &[f32], pb: &PackedB,
     let (jp0, jp1) = (j0 / NR, j1.div_ceil(NR));
     // k-panels ascending (the determinism contract); within a k-panel
     // each MR×NR C tile accumulates ascending-p in registers, which is
-    // the identical per-element IEEE op sequence
+    // the identical per-element op sequence for every tiling
     let mut p0 = 0usize;
     while p0 < k {
         let pc = KC.min(k - p0);
         for jp in jp0..jp1 {
             let jcol = jp * NR;
             let jw = NR.min(j1 - jcol);
-            let panel = pb.panel(p0, pc, jp);
-            let mut i0 = r0;
-            while i0 + MR <= r1 {
-                kernel_packed_mr(k, a, panel, cv, i0, jcol, jw, p0, pc);
-                i0 += MR;
-            }
-            while i0 < r1 {
-                kernel_packed_1(k, a, panel, cv, i0, jcol, jw, p0, pc);
-                i0 += 1;
-            }
+            run_panel_rows(isa, k, a, pb, cv, r0, r1, jcol, jw, p0, pc,
+                           jp);
         }
         p0 += pc;
     }
     region_epilogue(cv, n, r0, r1, j0, j1, epi, residual);
+}
+
+/// The kernel dispatch table: one `(store precision, resolved ISA)`
+/// match selecting the micro-kernel that sweeps rows `[r0, r1)` of one
+/// `(k-panel × column-panel)` block. SIMD arms exist only on their
+/// architecture (`#[cfg]` on the match arm); everything else falls
+/// through to the portable kernels, which accept every store. The
+/// f16 AVX2 kernel additionally needs F16C for the (exact) hardware
+/// dequant — without it f16 routes portable; NEON runs f32 only.
+#[inline]
+#[allow(unused_variables)] // `isa` is unused on non-SIMD architectures
+fn run_panel_rows(isa: Isa, k: usize, a: &[f32], pb: &PackedB,
+                  cv: &CView, r0: usize, r1: usize, jcol: usize,
+                  jw: usize, p0: usize, pc: usize, jp: usize) {
+    match &pb.store {
+        PanelStore::F32(_) => {
+            let panel = pb.panel_f32(p0, pc, jp);
+            match isa {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: `isa` is only ever Avx2 when the host
+                // supports AVX2+FMA (resolve() guarantees it)
+                Isa::Avx2 => unsafe {
+                    avx2::run_rows_f32(k, a, panel, cv, r0, r1, jcol, jw,
+                                       p0, pc)
+                },
+                #[cfg(target_arch = "aarch64")]
+                // SAFETY: NEON is baseline on aarch64
+                Isa::Neon => unsafe {
+                    neon::run_rows_f32(k, a, panel, cv, r0, r1, jcol, jw,
+                                       p0, pc)
+                },
+                _ => run_rows_f32_portable(k, a, panel, cv, r0, r1, jcol,
+                                           jw, p0, pc),
+            }
+        }
+        PanelStore::F16(_) => {
+            let panel = pb.panel_f16(p0, pc, jp);
+            match isa {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: as above, plus the F16C guard for vcvtph2ps
+                Isa::Avx2 if crate::math::isa::host_has_f16c() => unsafe {
+                    avx2::run_rows_f16(k, a, panel, cv, r0, r1, jcol, jw,
+                                       p0, pc)
+                },
+                _ => run_rows_f16_portable(k, a, panel, cv, r0, r1, jcol,
+                                           jw, p0, pc),
+            }
+        }
+        PanelStore::Int8 { .. } => {
+            let (panel, scales) = pb.panel_i8(p0, pc, jp);
+            match isa {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: as above
+                Isa::Avx2 => unsafe {
+                    avx2::run_rows_i8(k, a, panel, scales, cv, r0, r1,
+                                      jcol, jw, p0, pc)
+                },
+                _ => run_rows_i8_portable(k, a, panel, scales, cv, r0, r1,
+                                          jcol, jw, p0, pc),
+            }
+        }
+    }
+}
+
+/// Portable f32 row sweep: MR-row register tiles plus single-row
+/// remainder, identical op stream to v1 (the bit-exact tier).
+fn run_rows_f32_portable(k: usize, a: &[f32], panel: &[f32], cv: &CView,
+                         r0: usize, r1: usize, jcol: usize, jw: usize,
+                         p0: usize, pc: usize) {
+    let mut i0 = r0;
+    while i0 + MR <= r1 {
+        kernel_packed_mr(k, a, panel, cv, i0, jcol, jw, p0, pc);
+        i0 += MR;
+    }
+    while i0 < r1 {
+        kernel_packed_1(k, a, panel, cv, i0, jcol, jw, p0, pc);
+        i0 += 1;
+    }
+}
+
+/// Portable f16 row sweep: each panel row is dequantized into a local
+/// `[f32; NR]` (exact, so this matches the f32 portable kernel run on
+/// the dequantized matrix bit for bit) and accumulated exactly like
+/// the f32 kernel.
+fn run_rows_f16_portable(k: usize, a: &[f32], panel: &[u16], cv: &CView,
+                         r0: usize, r1: usize, jcol: usize, jw: usize,
+                         p0: usize, pc: usize) {
+    let mut i0 = r0;
+    while i0 + MR <= r1 {
+        kernel_packed_mr_f16(k, a, panel, cv, i0, jcol, jw, p0, pc);
+        i0 += MR;
+    }
+    while i0 < r1 {
+        kernel_packed_1_f16(k, a, panel, cv, i0, jcol, jw, p0, pc);
+        i0 += 1;
+    }
+}
+
+/// Portable int8 row sweep: raw `a · q` accumulation into a zeroed
+/// register tile, per-column scale applied once per k-panel as the
+/// fused dequant epilogue.
+fn run_rows_i8_portable(k: usize, a: &[f32], panel: &[i8], scales: &[f32],
+                        cv: &CView, r0: usize, r1: usize, jcol: usize,
+                        jw: usize, p0: usize, pc: usize) {
+    let mut i0 = r0;
+    while i0 + MR <= r1 {
+        kernel_packed_mr_i8(k, a, panel, scales, cv, i0, jcol, jw, p0, pc);
+        i0 += MR;
+    }
+    while i0 < r1 {
+        kernel_packed_1_i8(k, a, panel, scales, cv, i0, jcol, jw, p0, pc);
+        i0 += 1;
+    }
 }
 
 /// MR×NR register-tiled packed micro-kernel: load the C tile into a
@@ -495,6 +800,424 @@ fn kernel_packed_1(k: usize, a: &[f32], panel: &[f32], cv: &CView,
     crow.copy_from_slice(&t[..jw]);
 }
 
+/// MR×NR f16 micro-kernel: [`kernel_packed_mr`] with an exact
+/// per-panel-row dequant in front of the accumulation.
+#[inline]
+fn kernel_packed_mr_f16(k: usize, a: &[f32], panel: &[u16], cv: &CView,
+                        i0: usize, jcol: usize, jw: usize, p0: usize,
+                        pc: usize) {
+    // SAFETY: rows i0..i0+MR × columns jcol..jcol+jw belong to this
+    // tile.
+    let (c0, c1, c2, c3) = unsafe {
+        (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+         cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw))
+    };
+    let mut t = [[0.0f32; NR]; MR];
+    t[0][..jw].copy_from_slice(c0);
+    t[1][..jw].copy_from_slice(c1);
+    t[2][..jw].copy_from_slice(c2);
+    t[3][..jw].copy_from_slice(c3);
+    let a0 = &a[i0 * k..i0 * k + k];
+    let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+    let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+    let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+    for dp in 0..pc {
+        let praw: &[u16; NR] =
+            panel[dp * NR..(dp + 1) * NR].try_into().unwrap();
+        let mut brow = [0.0f32; NR];
+        for j in 0..NR {
+            brow[j] = f16_to_f32(praw[j]);
+        }
+        let p = p0 + dp;
+        let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+        for j in 0..NR {
+            let bj = brow[j];
+            t[0][j] += x0 * bj;
+            t[1][j] += x1 * bj;
+            t[2][j] += x2 * bj;
+            t[3][j] += x3 * bj;
+        }
+    }
+    c0.copy_from_slice(&t[0][..jw]);
+    c1.copy_from_slice(&t[1][..jw]);
+    c2.copy_from_slice(&t[2][..jw]);
+    c3.copy_from_slice(&t[3][..jw]);
+}
+
+/// Single-row f16 remainder kernel (same reduction order).
+#[inline]
+fn kernel_packed_1_f16(k: usize, a: &[f32], panel: &[u16], cv: &CView,
+                       i0: usize, jcol: usize, jw: usize, p0: usize,
+                       pc: usize) {
+    // SAFETY: row i0 × columns jcol..jcol+jw belong to this tile.
+    let crow = unsafe { cv.row(i0, jcol, jw) };
+    let mut t = [0.0f32; NR];
+    t[..jw].copy_from_slice(crow);
+    let arow = &a[i0 * k..i0 * k + k];
+    for dp in 0..pc {
+        let praw: &[u16; NR] =
+            panel[dp * NR..(dp + 1) * NR].try_into().unwrap();
+        let x = arow[p0 + dp];
+        for j in 0..NR {
+            t[j] += x * f16_to_f32(praw[j]);
+        }
+    }
+    crow.copy_from_slice(&t[..jw]);
+}
+
+/// MR×NR int8 micro-kernel. Unlike the float kernels, the register
+/// tile starts at zero and accumulates the *raw* `a · q` products for
+/// this k-panel; the per-column scale is applied once at the end and
+/// added into C (`C[i][j] += t[i][j] * scale[j]`) — the fused dequant
+/// epilogue. Padding columns have `scale = 0` and are never stored.
+#[inline]
+fn kernel_packed_mr_i8(k: usize, a: &[f32], panel: &[i8], scales: &[f32],
+                       cv: &CView, i0: usize, jcol: usize, jw: usize,
+                       p0: usize, pc: usize) {
+    // SAFETY: rows i0..i0+MR × columns jcol..jcol+jw belong to this
+    // tile.
+    let (c0, c1, c2, c3) = unsafe {
+        (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+         cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw))
+    };
+    let mut t = [[0.0f32; NR]; MR];
+    let a0 = &a[i0 * k..i0 * k + k];
+    let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+    let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+    let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+    for dp in 0..pc {
+        let praw: &[i8; NR] =
+            panel[dp * NR..(dp + 1) * NR].try_into().unwrap();
+        let p = p0 + dp;
+        let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+        for j in 0..NR {
+            let qj = praw[j] as f32;
+            t[0][j] += x0 * qj;
+            t[1][j] += x1 * qj;
+            t[2][j] += x2 * qj;
+            t[3][j] += x3 * qj;
+        }
+    }
+    for j in 0..jw {
+        let s = scales[j];
+        c0[j] += t[0][j] * s;
+        c1[j] += t[1][j] * s;
+        c2[j] += t[2][j] * s;
+        c3[j] += t[3][j] * s;
+    }
+}
+
+/// Single-row int8 remainder kernel (same raw-accumulate + fused
+/// dequant structure).
+#[inline]
+fn kernel_packed_1_i8(k: usize, a: &[f32], panel: &[i8], scales: &[f32],
+                      cv: &CView, i0: usize, jcol: usize, jw: usize,
+                      p0: usize, pc: usize) {
+    // SAFETY: row i0 × columns jcol..jcol+jw belong to this tile.
+    let crow = unsafe { cv.row(i0, jcol, jw) };
+    let mut t = [0.0f32; NR];
+    let arow = &a[i0 * k..i0 * k + k];
+    for dp in 0..pc {
+        let praw: &[i8; NR] =
+            panel[dp * NR..(dp + 1) * NR].try_into().unwrap();
+        let x = arow[p0 + dp];
+        for j in 0..NR {
+            t[j] += x * praw[j] as f32;
+        }
+    }
+    for j in 0..jw {
+        crow[j] += t[j] * scales[j];
+    }
+}
+
+/// AVX2+FMA micro-kernels (x86-64). One 256-bit vector holds a full
+/// NR=8 panel row, so an MR×NR C tile is four `__m256` accumulators
+/// and the hot loop is four `vfmadd231ps` per panel row. Remainder
+/// rows (`m % MR`) run a one-row *vector* kernel — the identical
+/// per-lane op stream as one lane of the MR kernel — so a row's bits
+/// never depend on which kernel processed it (the
+/// reproducible-given-config argument; see the module docs). Partial
+/// column panels (`jw < NR`) bounce through a stack `[f32; NR]` so
+/// loads/stores never touch C memory outside the tile; the padding
+/// lanes compute `x * 0.0` and are discarded.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{CView, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// Load a (possibly partial) C row into a full vector; missing
+    /// lanes are zero and are never stored back.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_c(row: &[f32]) -> __m256 {
+        if row.len() == NR {
+            _mm256_loadu_ps(row.as_ptr())
+        } else {
+            let mut buf = [0.0f32; NR];
+            buf[..row.len()].copy_from_slice(row);
+            _mm256_loadu_ps(buf.as_ptr())
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_c(v: __m256, row: &mut [f32]) {
+        if row.len() == NR {
+            _mm256_storeu_ps(row.as_mut_ptr(), v);
+        } else {
+            let mut buf = [0.0f32; NR];
+            _mm256_storeu_ps(buf.as_mut_ptr(), v);
+            let w = row.len();
+            row.copy_from_slice(&buf[..w]);
+        }
+    }
+
+    /// f32 panels: C-tile FMA accumulation.
+    ///
+    /// SAFETY: caller must have verified AVX2+FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn run_rows_f32(k: usize, a: &[f32], panel: &[f32],
+                                      cv: &CView, r0: usize, r1: usize,
+                                      jcol: usize, jw: usize, p0: usize,
+                                      pc: usize) {
+        let mut i0 = r0;
+        while i0 + MR <= r1 {
+            let (c0, c1, c2, c3) =
+                (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+                 cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw));
+            let (mut v0, mut v1, mut v2, mut v3) =
+                (load_c(c0), load_c(c1), load_c(c2), load_c(c3));
+            let a0 = &a[i0 * k..i0 * k + k];
+            let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+            let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+            let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+            for dp in 0..pc {
+                let b = _mm256_loadu_ps(panel.as_ptr().add(dp * NR));
+                let p = p0 + dp;
+                v0 = _mm256_fmadd_ps(_mm256_set1_ps(a0[p]), b, v0);
+                v1 = _mm256_fmadd_ps(_mm256_set1_ps(a1[p]), b, v1);
+                v2 = _mm256_fmadd_ps(_mm256_set1_ps(a2[p]), b, v2);
+                v3 = _mm256_fmadd_ps(_mm256_set1_ps(a3[p]), b, v3);
+            }
+            store_c(v0, c0);
+            store_c(v1, c1);
+            store_c(v2, c2);
+            store_c(v3, c3);
+            i0 += MR;
+        }
+        while i0 < r1 {
+            let c0 = cv.row(i0, jcol, jw);
+            let mut v0 = load_c(c0);
+            let a0 = &a[i0 * k..i0 * k + k];
+            for dp in 0..pc {
+                let b = _mm256_loadu_ps(panel.as_ptr().add(dp * NR));
+                v0 = _mm256_fmadd_ps(_mm256_set1_ps(a0[p0 + dp]), b, v0);
+            }
+            store_c(v0, c0);
+            i0 += 1;
+        }
+    }
+
+    /// f16 panels: `vcvtph2ps` (F16C) widens a panel row — the
+    /// hardware convert is exact, identical to the scalar
+    /// `f16_to_f32` — then the same FMA accumulation as f32.
+    ///
+    /// SAFETY: caller must have verified AVX2+FMA+F16C support.
+    #[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+    pub(super) unsafe fn run_rows_f16(k: usize, a: &[f32], panel: &[u16],
+                                      cv: &CView, r0: usize, r1: usize,
+                                      jcol: usize, jw: usize, p0: usize,
+                                      pc: usize) {
+        let mut i0 = r0;
+        while i0 + MR <= r1 {
+            let (c0, c1, c2, c3) =
+                (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+                 cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw));
+            let (mut v0, mut v1, mut v2, mut v3) =
+                (load_c(c0), load_c(c1), load_c(c2), load_c(c3));
+            let a0 = &a[i0 * k..i0 * k + k];
+            let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+            let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+            let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+            for dp in 0..pc {
+                let b = _mm256_cvtph_ps(_mm_loadu_si128(
+                    panel.as_ptr().add(dp * NR) as *const __m128i));
+                let p = p0 + dp;
+                v0 = _mm256_fmadd_ps(_mm256_set1_ps(a0[p]), b, v0);
+                v1 = _mm256_fmadd_ps(_mm256_set1_ps(a1[p]), b, v1);
+                v2 = _mm256_fmadd_ps(_mm256_set1_ps(a2[p]), b, v2);
+                v3 = _mm256_fmadd_ps(_mm256_set1_ps(a3[p]), b, v3);
+            }
+            store_c(v0, c0);
+            store_c(v1, c1);
+            store_c(v2, c2);
+            store_c(v3, c3);
+            i0 += MR;
+        }
+        while i0 < r1 {
+            let c0 = cv.row(i0, jcol, jw);
+            let mut v0 = load_c(c0);
+            let a0 = &a[i0 * k..i0 * k + k];
+            for dp in 0..pc {
+                let b = _mm256_cvtph_ps(_mm_loadu_si128(
+                    panel.as_ptr().add(dp * NR) as *const __m128i));
+                v0 = _mm256_fmadd_ps(_mm256_set1_ps(a0[p0 + dp]), b, v0);
+            }
+            store_c(v0, c0);
+            i0 += 1;
+        }
+    }
+
+    /// int8 panels: sign-extend 8 quants to i32, convert to f32 (both
+    /// exact), raw-accumulate with FMA, then the fused dequant
+    /// epilogue `C += tile * scale`.
+    ///
+    /// SAFETY: caller must have verified AVX2+FMA support; `scales`
+    /// must be exactly NR long.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn run_rows_i8(k: usize, a: &[f32], panel: &[i8],
+                                     scales: &[f32], cv: &CView,
+                                     r0: usize, r1: usize, jcol: usize,
+                                     jw: usize, p0: usize, pc: usize) {
+        let sv = _mm256_loadu_ps(scales.as_ptr());
+        let mut i0 = r0;
+        while i0 + MR <= r1 {
+            let (c0, c1, c2, c3) =
+                (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+                 cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw));
+            let (mut t0, mut t1, mut t2, mut t3) =
+                (_mm256_setzero_ps(), _mm256_setzero_ps(),
+                 _mm256_setzero_ps(), _mm256_setzero_ps());
+            let a0 = &a[i0 * k..i0 * k + k];
+            let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+            let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+            let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+            for dp in 0..pc {
+                let b = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(
+                    _mm_loadl_epi64(
+                        panel.as_ptr().add(dp * NR) as *const __m128i)));
+                let p = p0 + dp;
+                t0 = _mm256_fmadd_ps(_mm256_set1_ps(a0[p]), b, t0);
+                t1 = _mm256_fmadd_ps(_mm256_set1_ps(a1[p]), b, t1);
+                t2 = _mm256_fmadd_ps(_mm256_set1_ps(a2[p]), b, t2);
+                t3 = _mm256_fmadd_ps(_mm256_set1_ps(a3[p]), b, t3);
+            }
+            store_c(_mm256_fmadd_ps(t0, sv, load_c(c0)), c0);
+            store_c(_mm256_fmadd_ps(t1, sv, load_c(c1)), c1);
+            store_c(_mm256_fmadd_ps(t2, sv, load_c(c2)), c2);
+            store_c(_mm256_fmadd_ps(t3, sv, load_c(c3)), c3);
+            i0 += MR;
+        }
+        while i0 < r1 {
+            let c0 = cv.row(i0, jcol, jw);
+            let mut t0 = _mm256_setzero_ps();
+            let a0 = &a[i0 * k..i0 * k + k];
+            for dp in 0..pc {
+                let b = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(
+                    _mm_loadl_epi64(
+                        panel.as_ptr().add(dp * NR) as *const __m128i)));
+                t0 = _mm256_fmadd_ps(_mm256_set1_ps(a0[p0 + dp]), b, t0);
+            }
+            store_c(_mm256_fmadd_ps(t0, sv, load_c(c0)), c0);
+            i0 += 1;
+        }
+    }
+}
+
+/// NEON micro-kernels (aarch64). An NR=8 panel row is two 128-bit
+/// vectors; `vfmaq_n_f32` broadcasts the A scalar. f32 panels only —
+/// f16/int8 stores route to the portable kernels on aarch64 (stable
+/// Rust has no vector f16 loads there, and the quantized tiers'
+/// contract is a tolerance, not bits, so the portable fallback is
+/// always valid). Same one-row vector remainder argument as the AVX2
+/// kernels.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{CView, MR, NR};
+    use std::arch::aarch64::*;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn load_c(row: &[f32]) -> (float32x4_t, float32x4_t) {
+        if row.len() == NR {
+            (vld1q_f32(row.as_ptr()), vld1q_f32(row.as_ptr().add(4)))
+        } else {
+            let mut buf = [0.0f32; NR];
+            buf[..row.len()].copy_from_slice(row);
+            (vld1q_f32(buf.as_ptr()), vld1q_f32(buf.as_ptr().add(4)))
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn store_c(lo: float32x4_t, hi: float32x4_t, row: &mut [f32]) {
+        if row.len() == NR {
+            vst1q_f32(row.as_mut_ptr(), lo);
+            vst1q_f32(row.as_mut_ptr().add(4), hi);
+        } else {
+            let mut buf = [0.0f32; NR];
+            vst1q_f32(buf.as_mut_ptr(), lo);
+            vst1q_f32(buf.as_mut_ptr().add(4), hi);
+            let w = row.len();
+            row.copy_from_slice(&buf[..w]);
+        }
+    }
+
+    /// SAFETY: NEON is baseline on aarch64.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn run_rows_f32(k: usize, a: &[f32], panel: &[f32],
+                                      cv: &CView, r0: usize, r1: usize,
+                                      jcol: usize, jw: usize, p0: usize,
+                                      pc: usize) {
+        let mut i0 = r0;
+        while i0 + MR <= r1 {
+            let (c0, c1, c2, c3) =
+                (cv.row(i0, jcol, jw), cv.row(i0 + 1, jcol, jw),
+                 cv.row(i0 + 2, jcol, jw), cv.row(i0 + 3, jcol, jw));
+            let (mut v0l, mut v0h) = load_c(c0);
+            let (mut v1l, mut v1h) = load_c(c1);
+            let (mut v2l, mut v2h) = load_c(c2);
+            let (mut v3l, mut v3h) = load_c(c3);
+            let a0 = &a[i0 * k..i0 * k + k];
+            let a1 = &a[(i0 + 1) * k..(i0 + 1) * k + k];
+            let a2 = &a[(i0 + 2) * k..(i0 + 2) * k + k];
+            let a3 = &a[(i0 + 3) * k..(i0 + 3) * k + k];
+            for dp in 0..pc {
+                let bl = vld1q_f32(panel.as_ptr().add(dp * NR));
+                let bh = vld1q_f32(panel.as_ptr().add(dp * NR + 4));
+                let p = p0 + dp;
+                v0l = vfmaq_n_f32(v0l, bl, a0[p]);
+                v0h = vfmaq_n_f32(v0h, bh, a0[p]);
+                v1l = vfmaq_n_f32(v1l, bl, a1[p]);
+                v1h = vfmaq_n_f32(v1h, bh, a1[p]);
+                v2l = vfmaq_n_f32(v2l, bl, a2[p]);
+                v2h = vfmaq_n_f32(v2h, bh, a2[p]);
+                v3l = vfmaq_n_f32(v3l, bl, a3[p]);
+                v3h = vfmaq_n_f32(v3h, bh, a3[p]);
+            }
+            store_c(v0l, v0h, c0);
+            store_c(v1l, v1h, c1);
+            store_c(v2l, v2h, c2);
+            store_c(v3l, v3h, c3);
+            i0 += MR;
+        }
+        while i0 < r1 {
+            let c0 = cv.row(i0, jcol, jw);
+            let (mut vl, mut vh) = load_c(c0);
+            let a0 = &a[i0 * k..i0 * k + k];
+            for dp in 0..pc {
+                let bl = vld1q_f32(panel.as_ptr().add(dp * NR));
+                let bh = vld1q_f32(panel.as_ptr().add(dp * NR + 4));
+                let x = a0[p0 + dp];
+                vl = vfmaq_n_f32(vl, bl, x);
+                vh = vfmaq_n_f32(vh, bh, x);
+            }
+            store_c(vl, vh, c0);
+            i0 += 1;
+        }
+    }
+}
+
 fn assert_packed_shapes(m: usize, n: usize, k: usize, a: &[f32],
                         pb: &PackedB, bias: Option<&[f32]>,
                         residual: Option<&[f32]>, c: &[f32]) {
@@ -510,18 +1233,32 @@ fn assert_packed_shapes(m: usize, n: usize, k: usize, a: &[f32],
     }
 }
 
-/// [`gemm_bias_act`] against a [`PackedB`] — the serial v2 kernel.
-/// Bit-identical to [`gemm_ref`] (see the module contract).
-pub fn gemm_packed_bias_act(m: usize, n: usize, k: usize, a: &[f32],
-                            pb: &PackedB, bias: Option<&[f32]>,
-                            epi: Epilogue, residual: Option<&[f32]>,
-                            c: &mut [f32]) {
+/// [`gemm_bias_act`] against a [`PackedB`] — the serial v2 kernel,
+/// with the micro-kernel selected by `isa` (resolve it once per model
+/// via [`crate::math::isa::KernelPolicy::resolve_isa`]; an ISA the
+/// host can't run must never reach here — `resolve` guarantees that).
+/// With `Isa::Portable` and an f32 store this is bit-identical to
+/// [`gemm_ref`]; see the module contract for the other tiers.
+pub fn gemm_packed_bias_act_on(isa: Isa, m: usize, n: usize, k: usize,
+                               a: &[f32], pb: &PackedB,
+                               bias: Option<&[f32]>, epi: Epilogue,
+                               residual: Option<&[f32]>, c: &mut [f32]) {
     assert_packed_shapes(m, n, k, a, pb, bias, residual, c);
     if m == 0 || n == 0 {
         return;
     }
     let cv = CView { ptr: c.as_mut_ptr(), n };
-    packed_region(n, k, a, pb, bias, epi, residual, &cv, 0, m, 0, n);
+    packed_region(isa, n, k, a, pb, bias, epi, residual, &cv, 0, m, 0, n);
+}
+
+/// [`gemm_packed_bias_act_on`] on the portable kernels — the bit-exact
+/// entry existing callers and tests rely on.
+pub fn gemm_packed_bias_act(m: usize, n: usize, k: usize, a: &[f32],
+                            pb: &PackedB, bias: Option<&[f32]>,
+                            epi: Epilogue, residual: Option<&[f32]>,
+                            c: &mut [f32]) {
+    gemm_packed_bias_act_on(Isa::Portable, m, n, k, a, pb, bias, epi,
+                            residual, c);
 }
 
 /// [`gemm_packed_bias_act`] with the output split into a 2-D grid of
@@ -533,25 +1270,39 @@ pub fn gemm_packed_bias_act(m: usize, n: usize, k: usize, a: &[f32],
 /// products — the fused serving rounds — still occupy the whole pool
 /// through their column panels. Each C tile is owned by exactly one
 /// task and every element's reduction is computed whole inside its
-/// tile, so the result is bit-identical to the serial call for every
-/// shard count and every steal schedule. Returns the effective tile
-/// count.
-pub fn gemm_packed_sharded(m: usize, n: usize, k: usize, a: &[f32],
-                           pb: &PackedB, bias: Option<&[f32]>,
-                           epi: Epilogue, residual: Option<&[f32]>,
-                           c: &mut [f32], shards: usize) -> usize {
+/// tile, so the result is bit-identical to the serial
+/// [`gemm_packed_bias_act_on`] call *with the same `isa`* for every
+/// shard count and every steal schedule — the kernel is fixed for the
+/// whole product, so tiling can't change which instruction stream a
+/// row sees. Returns the effective tile count.
+pub fn gemm_packed_sharded_on(isa: Isa, m: usize, n: usize, k: usize,
+                              a: &[f32], pb: &PackedB,
+                              bias: Option<&[f32]>, epi: Epilogue,
+                              residual: Option<&[f32]>, c: &mut [f32],
+                              shards: usize) -> usize {
     if shards <= 1 || (m <= MR && n <= NR) || m == 0 || n == 0 {
-        gemm_packed_bias_act(m, n, k, a, pb, bias, epi, residual, c);
+        gemm_packed_bias_act_on(isa, m, n, k, a, pb, bias, epi, residual,
+                                c);
         return 1;
     }
     assert_packed_shapes(m, n, k, a, pb, bias, residual, c);
     let cv = CView { ptr: c.as_mut_ptr(), n };
     pool::global()
         .run_sharded_tiles(m, MR, n, NR, shards, |r0, r1, j0, j1| {
-            packed_region(n, k, a, pb, bias, epi, residual, &cv, r0, r1,
-                          j0, j1);
+            packed_region(isa, n, k, a, pb, bias, epi, residual, &cv, r0,
+                          r1, j0, j1);
         })
         .max(1)
+}
+
+/// [`gemm_packed_sharded_on`] on the portable kernels (bit-exact
+/// tier).
+pub fn gemm_packed_sharded(m: usize, n: usize, k: usize, a: &[f32],
+                           pb: &PackedB, bias: Option<&[f32]>,
+                           epi: Epilogue, residual: Option<&[f32]>,
+                           c: &mut [f32], shards: usize) -> usize {
+    gemm_packed_sharded_on(Isa::Portable, m, n, k, a, pb, bias, epi,
+                           residual, c, shards)
 }
 
 /// [`gemm_bias_act`] (the unpacked v1 kernel) with the output split
@@ -825,5 +1576,195 @@ mod tests {
         let mut c = vec![0.0f32; 4];
         gemm_packed_bias_act(2, 2, 2, &[0.0; 4], &pb, None,
                              Epilogue::Linear, None, &mut c);
+    }
+
+    // -- determinism-tier tests (quantized stores + ISA dispatch) -----
+
+    use crate::math::isa::{detect_isa, gemm_rel_tolerance};
+
+    /// NR-straddling shapes incl. a KC-straddling k, as the quantized
+    /// round-trip property demands.
+    const QSHAPES: &[(usize, usize, usize)] =
+        &[(3, 2, 9), (5, 9, 17), (7, 13, 257), (8, 16, 256), (6, 13, 300)];
+
+    /// `b` with every element replaced by what the packed store will
+    /// reconstruct — the oracle for the quantized kernels.
+    fn dequantized(pb: &PackedB, k: usize, n: usize) -> Vec<f32> {
+        (0..k * n).map(|i| pb.stored(i / n, i % n)).collect()
+    }
+
+    #[test]
+    fn quantized_pack_roundtrip_and_padding_stay_bounded() {
+        for &(_, n, k) in QSHAPES {
+            let b = fill(k * n, 42);
+            for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+                let pb = PackedB::pack_as(k, n, &b, prec);
+                assert_eq!(pb.precision(), prec);
+                let n_padded = n.div_ceil(NR) * NR;
+                for p in 0..k {
+                    // zero-padded panel tail dequantizes to exactly 0.0
+                    for j in n..n_padded {
+                        assert_eq!(pb.stored(p, j).to_bits(), 0,
+                                   "padding ({p},{j}) not exactly zero");
+                    }
+                    for j in 0..n {
+                        let w = b[p * n + j];
+                        let got = pb.stored(p, j);
+                        match prec {
+                            Precision::F32 => {
+                                assert_eq!(got.to_bits(), w.to_bits())
+                            }
+                            Precision::F16 => assert_eq!(
+                                got.to_bits(),
+                                f16_to_f32(f32_to_f16(w)).to_bits(),
+                                "f16 ({p},{j})"
+                            ),
+                            Precision::Int8 => {
+                                // per-(k-panel, column) scale: error is
+                                // at most half a quant step
+                                let p0 = (p / KC) * KC;
+                                let pc = KC.min(k - p0);
+                                let colmax = (0..pc)
+                                    .map(|dp| b[(p0 + dp) * n + j].abs())
+                                    .fold(0.0f32, f32::max);
+                                let bound = colmax / 254.0 + 1e-6;
+                                assert!((got - w).abs() <= bound,
+                                        "int8 ({p},{j}): |{got} - {w}| \
+                                         > {bound}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_bytes_shrink_as_documented() {
+        let (n, k) = (24usize, 300usize);
+        let b = fill(k * n, 9);
+        let f32b = PackedB::pack_as(k, n, &b, Precision::F32).bytes();
+        let f16b = PackedB::pack_as(k, n, &b, Precision::F16).bytes();
+        let i8b = PackedB::pack_as(k, n, &b, Precision::Int8).bytes();
+        assert_eq!(f32b, k * n.div_ceil(NR) * NR * 4);
+        assert_eq!(f16b, f32b / 2);
+        assert!(i8b < f32b / 3, "int8 {i8b} vs f32 {f32b}");
+    }
+
+    #[test]
+    fn f16_portable_kernel_matches_ref_on_dequantized_matrix_bitwise() {
+        // the portable f16 kernel is the f32 kernel run on the
+        // (exactly) dequantized matrix — bit for bit
+        for &(m, n, k) in QSHAPES {
+            let a = fill(m * k, 51);
+            let b = fill(k * n, 52);
+            let bias = fill(n, 53);
+            let pb = PackedB::pack_as(k, n, &b, Precision::F16);
+            let bdeq = dequantized(&pb, k, n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, n, k, &a, &bdeq, Some(&bias), Epilogue::Silu, None,
+                     &mut want);
+            let mut got = vec![7.0f32; m * n];
+            gemm_packed_bias_act(m, n, k, &a, &pb, Some(&bias),
+                                 Epilogue::Silu, None, &mut got);
+            assert_eq!(bits(&want), bits(&got), "f16 m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn int8_portable_kernel_tracks_ref_on_dequantized_matrix() {
+        // int8 applies the scale once per k-panel (s * sum(a*q)) where
+        // the dequantized ref multiplies per element (sum(a*(q*s))) —
+        // same value up to f32 rounding
+        for &(m, n, k) in QSHAPES {
+            let a = fill(m * k, 61);
+            let b = fill(k * n, 62);
+            let bias = fill(n, 63);
+            let pb = PackedB::pack_as(k, n, &b, Precision::Int8);
+            let bdeq = dequantized(&pb, k, n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, n, k, &a, &bdeq, Some(&bias), Epilogue::Linear,
+                     None, &mut want);
+            let mut got = vec![7.0f32; m * n];
+            gemm_packed_bias_act(m, n, k, &a, &pb, Some(&bias),
+                                 Epilogue::Linear, None, &mut got);
+            for i in 0..m * n {
+                let rel = (got[i] - want[i]).abs() / want[i].abs().max(1.0);
+                assert!(rel <= 1e-4,
+                        "int8 m={m} n={n} k={k} i={i}: {} vs {} (rel {rel})",
+                        got[i], want[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn isa_dispatch_tracks_ref_within_tier_tolerance_and_is_bit_stable() {
+        // whatever ISA this host resolves: f32 within the tier
+        // tolerance of gemm_ref (bitwise when portable), and a repeat
+        // run reproduces the bits exactly
+        let isa = detect_isa();
+        for &(m, n, k) in QSHAPES {
+            let a = fill(m * k, 71);
+            let b = fill(k * n, 72);
+            let bias = fill(n, 73);
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, n, k, &a, &b, Some(&bias), Epilogue::Silu, None,
+                     &mut want);
+            for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+                let pb = PackedB::pack_as(k, n, &b, prec);
+                let tol = gemm_rel_tolerance(isa, prec);
+                let mut got = vec![7.0f32; m * n];
+                gemm_packed_bias_act_on(isa, m, n, k, &a, &pb, Some(&bias),
+                                        Epilogue::Silu, None, &mut got);
+                if tol == 0.0 {
+                    assert_eq!(bits(&want), bits(&got),
+                               "portable f32 m={m} n={n} k={k}");
+                } else {
+                    for i in 0..m * n {
+                        let rel = ((got[i] - want[i]).abs()
+                                   / want[i].abs().max(1.0)) as f64;
+                        assert!(rel <= tol,
+                                "{isa}/{prec} m={m} n={n} k={k} i={i}: \
+                                 {} vs {} (rel {rel:e} > {tol:e})",
+                                got[i], want[i]);
+                    }
+                }
+                let first = bits(&got);
+                let mut again = vec![3.0f32; m * n];
+                gemm_packed_bias_act_on(isa, m, n, k, &a, &pb, Some(&bias),
+                                        Epilogue::Silu, None, &mut again);
+                assert_eq!(first, bits(&again),
+                           "{isa}/{prec} m={m} n={n} k={k} not bit-stable");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_on_active_isa_is_bit_invariant_in_shards_for_every_store() {
+        // the reproducible-given-config contract: for a fixed ISA and
+        // store, the tile grid and shard count never change a bit
+        let isa = detect_isa();
+        for &(m, n, k) in &[(4usize, 96usize, 64usize), (16, 40, 300),
+                            (13, 17, 31)] {
+            let a = fill(m * k, 81);
+            let b = fill(k * n, 82);
+            let bias = fill(n, 83);
+            for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+                let pb = PackedB::pack_as(k, n, &b, prec);
+                let mut want = vec![0.0f32; m * n];
+                gemm_packed_bias_act_on(isa, m, n, k, &a, &pb, Some(&bias),
+                                        Epilogue::Silu, None, &mut want);
+                for shards in [1usize, 2, 8, 64] {
+                    let mut got = vec![0.0f32; m * n];
+                    let eff = gemm_packed_sharded_on(
+                        isa, m, n, k, &a, &pb, Some(&bias), Epilogue::Silu,
+                        None, &mut got, shards);
+                    assert!(eff >= 1 && eff <= shards.max(1));
+                    assert_eq!(bits(&want), bits(&got),
+                               "{isa}/{prec} m={m} n={n} k={k} \
+                                shards={shards}");
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,526 @@
+//! Runtime kernel selection for the packed GEMM path.
+//!
+//! [`KernelPolicy`] is the knob threaded from `NativeMlp::from_flat`
+//! (and `ServerConfig` / the CLI flags `--gemm-isa`,
+//! `--gemm-precision`) down to `math::gemm`: which instruction set the
+//! packed micro-kernels should use — an [`IsaRequest`], resolved once
+//! per model load against the host into an [`Isa`] — and which
+//! precision the weight panels are stored at ([`Precision`]). Every
+//! (ISA, precision) combination lands in an explicit
+//! [`DeterminismTier`]:
+//!
+//! * [`DeterminismTier::BitExact`] — portable f32 kernels. Bit-identical
+//!   to `gemm_ref` on every host; this is the seed contract and the
+//!   `ASD_GEMM_ISA=portable` CI leg.
+//! * [`DeterminismTier::ReproducibleGivenConfig`] — SIMD f32 kernels
+//!   (AVX2+FMA on x86-64, NEON on aarch64). Fused multiply-add
+//!   contracts the intermediate rounding, so the bits differ from the
+//!   portable reduction — but for a *fixed* resolved ISA the outputs
+//!   are bit-stable across pool sizes, tile grids and work-steal
+//!   schedules. The argument: IEEE-754 requires FMA to be exactly
+//!   rounded, so a scalar `mul_add` and one lane of a vector
+//!   `fmadd` produce identical bits for identical inputs; the tile
+//!   grid is MR/NR block-aligned and never splits a k-reduction; and
+//!   the kernel is chosen once per GEMM call, never per tile. Asserted
+//!   in `tests/test_parallel_determinism.rs`.
+//! * [`DeterminismTier::QuantizedWithErrorBound`] — int8 or f16 weight
+//!   panels. Outputs carry a documented relative error bound vs
+//!   `NativeMlp::denoise_batch_ref`
+//!   ([`KernelPolicy::denoise_rel_tolerance`]), asserted by the tier
+//!   oracle in `tests/test_properties.rs`; still bit-stable across
+//!   pool sizes and schedules for a fixed config.
+//!
+//! The environment variable `ASD_GEMM_ISA` (`auto` | `portable` |
+//! `avx2` | `neon`) overrides every policy's ISA request — the
+//! forced-fallback hook CI uses to keep the portable path exercised on
+//! SIMD runners. An unknown value warns once and is ignored (auto); a
+//! requested ISA the host cannot run warns once and falls back to
+//! portable, mirroring the `ASD_POOL_THREADS` diagnostics.
+
+use std::fmt;
+use std::sync::{Once, OnceLock};
+
+/// A concrete instruction set the packed kernels can run on, resolved
+/// against the host. `Portable` is always available and always
+/// correct; the SIMD variants are only ever produced on hosts that
+/// support them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Plain-Rust kernels: separate mul + add, bit-identical to
+    /// `gemm_ref`.
+    Portable,
+    /// AVX2 + FMA 256-bit kernels (x86-64). F16 panels additionally
+    /// use F16C when the host has it.
+    Avx2,
+    /// NEON 128-bit FMA kernels (aarch64, f32 panels only — quantized
+    /// panels route to the portable kernels there).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lower-case name used in BENCH_gemm.json rows and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Portable => "portable",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+impl fmt::Display for Isa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What the user/config *asked* for; resolved to an [`Isa`] via
+/// [`resolve`]. `Auto` picks the fastest ISA the host supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IsaRequest {
+    #[default]
+    Auto,
+    Portable,
+    Avx2,
+    Neon,
+}
+
+impl IsaRequest {
+    /// Parse a CLI/env spelling (case-insensitive). `None` for unknown
+    /// values — callers decide whether that is a warning (env) or an
+    /// error (CLI flag).
+    pub fn parse(s: &str) -> Option<IsaRequest> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(IsaRequest::Auto),
+            "portable" | "scalar" => Some(IsaRequest::Portable),
+            "avx2" => Some(IsaRequest::Avx2),
+            "neon" => Some(IsaRequest::Neon),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaRequest::Auto => "auto",
+            IsaRequest::Portable => "portable",
+            IsaRequest::Avx2 => "avx2",
+            IsaRequest::Neon => "neon",
+        }
+    }
+}
+
+impl fmt::Display for IsaRequest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Storage precision of the packed weight panels. Activations and
+/// accumulators are always f32; only the B panels shrink.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f32 panels — bit-exact or reproducible-given-config
+    /// depending on the resolved ISA.
+    #[default]
+    F32,
+    /// IEEE binary16 bit patterns (half the L2 footprint); dequant is
+    /// exact per element and fused into the kernel.
+    F16,
+    /// Per-(k-panel, column) scaled int8 (quarter the footprint);
+    /// dequant is fused into the kernel epilogue.
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Some(Precision::F32),
+            "f16" | "fp16" | "half" => Some(Precision::F16),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Stable lower-case name used in BENCH_gemm.json rows and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The determinism contract a kernel configuration ships under. See
+/// the module docs for the exact guarantees.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeterminismTier {
+    /// Bit-identical to `gemm_ref` / `denoise_batch_ref` reduction
+    /// order on every host.
+    BitExact,
+    /// Bit-stable across pool sizes, tile grids and steal schedules
+    /// for a fixed resolved ISA; not bit-comparable across ISAs.
+    ReproducibleGivenConfig,
+    /// Tracks the f32 reference within
+    /// [`KernelPolicy::denoise_rel_tolerance`]; bit-stable across
+    /// schedules for a fixed config.
+    QuantizedWithErrorBound,
+}
+
+impl DeterminismTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeterminismTier::BitExact => "bit-exact",
+            DeterminismTier::ReproducibleGivenConfig => {
+                "reproducible-given-config"
+            }
+            DeterminismTier::QuantizedWithErrorBound => {
+                "quantized-with-error-bound"
+            }
+        }
+    }
+}
+
+impl fmt::Display for DeterminismTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The kernel knob threaded from model load / `ServerConfig` down to
+/// `math::gemm`. The default (`auto` ISA, f32 panels) is the fast
+/// path; `ASD_GEMM_ISA=portable` restores the seed's bit-exact
+/// behaviour globally without touching any config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KernelPolicy {
+    pub isa: IsaRequest,
+    pub precision: Precision,
+}
+
+impl KernelPolicy {
+    /// Resolve the ISA request against the host (and the
+    /// `ASD_GEMM_ISA` override). Call once at model load and reuse the
+    /// result — the kernel choice must be per model, never per tile.
+    pub fn resolve_isa(&self) -> Isa {
+        resolve(self.isa)
+    }
+
+    /// Which determinism tier this policy lands in on this host.
+    pub fn tier(&self) -> DeterminismTier {
+        if self.precision != Precision::F32 {
+            DeterminismTier::QuantizedWithErrorBound
+        } else if self.resolve_isa() == Isa::Portable {
+            DeterminismTier::BitExact
+        } else {
+            DeterminismTier::ReproducibleGivenConfig
+        }
+    }
+
+    /// Documented end-to-end relative error bound of `denoise_batch`
+    /// vs `denoise_batch_ref` under this policy, relative to
+    /// `max(1, |ref|)` per output element. The f32 figure is the
+    /// existing `exp_fast`-vs-libm budget; the quantized figures are
+    /// conservative worst-case bounds for unit-scale weights (typical
+    /// observed error is ~10x smaller) and are pinned by the tier
+    /// oracle in `tests/test_properties.rs`.
+    pub fn denoise_rel_tolerance(&self) -> f64 {
+        match self.precision {
+            Precision::F32 => 1e-5,
+            Precision::F16 => 5e-2,
+            Precision::Int8 => 2e-1,
+        }
+    }
+}
+
+/// Per-GEMM relative error bound vs `gemm_ref` for a (precision, ISA)
+/// pair, relative to `max(1, |ref|)` per output element. Used by the
+/// bench-grid runner's in-loop tolerance checks. Zero means the
+/// contract is bitwise.
+pub fn gemm_rel_tolerance(isa: Isa, precision: Precision) -> f64 {
+    match precision {
+        // FMA contraction only: bounded by accumulated rounding
+        // differences over the k-reduction
+        Precision::F32 => {
+            if isa == Isa::Portable {
+                0.0
+            } else {
+                5e-5
+            }
+        }
+        Precision::F16 => 5e-2,
+        Precision::Int8 => 1.5e-1,
+    }
+}
+
+/// The ISA `IsaRequest::Auto` resolves to on this host (after the
+/// `ASD_GEMM_ISA` override).
+pub fn detect_isa() -> Isa {
+    resolve(IsaRequest::Auto)
+}
+
+/// Resolve a request against the host. The `ASD_GEMM_ISA` environment
+/// override, when present and valid, replaces the request entirely.
+pub fn resolve(req: IsaRequest) -> Isa {
+    let req = env_override().unwrap_or(req);
+    match req {
+        IsaRequest::Auto => {
+            if host_supports_avx2() {
+                Isa::Avx2
+            } else if host_supports_neon() {
+                Isa::Neon
+            } else {
+                Isa::Portable
+            }
+        }
+        IsaRequest::Portable => Isa::Portable,
+        IsaRequest::Avx2 => {
+            if host_supports_avx2() {
+                Isa::Avx2
+            } else {
+                warn_unsupported("avx2");
+                Isa::Portable
+            }
+        }
+        IsaRequest::Neon => {
+            if host_supports_neon() {
+                Isa::Neon
+            } else {
+                warn_unsupported("neon");
+                Isa::Portable
+            }
+        }
+    }
+}
+
+/// Cached `ASD_GEMM_ISA` parse; `None` when unset or invalid (invalid
+/// warns once and falls back to auto-resolution of the caller's
+/// request).
+fn env_override() -> Option<IsaRequest> {
+    static OVERRIDE: OnceLock<Option<IsaRequest>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        let raw = std::env::var("ASD_GEMM_ISA").ok()?;
+        match IsaRequest::parse(&raw) {
+            Some(req) => Some(req),
+            None => {
+                eprintln!(
+                    "warning: ASD_GEMM_ISA='{raw}' is not one of \
+                     auto|portable|avx2|neon; ignoring"
+                );
+                None
+            }
+        }
+    })
+}
+
+fn warn_unsupported(isa: &str) {
+    static WARNED: Once = Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "warning: requested GEMM ISA '{isa}' is not supported on \
+             this host; falling back to portable kernels"
+        );
+    });
+}
+
+/// AVX2 *and* FMA — the microkernels need both, and requiring both
+/// keeps "avx2" a single reproducible-given-config point.
+#[cfg(target_arch = "x86_64")]
+pub fn host_supports_avx2() -> bool {
+    static CAP: OnceLock<bool> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn host_supports_avx2() -> bool {
+    false
+}
+
+/// F16C (hardware f16↔f32 converts). Checked separately from AVX2:
+/// without it, f16 panels route to the portable kernel. The hardware
+/// convert is exact, so it cannot change the f16 tier's bits.
+#[cfg(target_arch = "x86_64")]
+pub fn host_has_f16c() -> bool {
+    static CAP: OnceLock<bool> = OnceLock::new();
+    *CAP.get_or_init(|| is_x86_feature_detected!("f16c"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn host_has_f16c() -> bool {
+    false
+}
+
+/// NEON is baseline on aarch64 — no runtime probe needed.
+pub fn host_supports_neon() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+// ----------------------------------------------------------------------
+// binary16 conversions (no external crate; both directions exact /
+// round-to-nearest-even, used by the f16 panel store)
+// ----------------------------------------------------------------------
+
+/// Convert an IEEE-754 binary16 bit pattern to f32. Exact: every f16
+/// value (including subnormals, infs and NaN payloads) is
+/// representable in f32.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        // inf / NaN: payload widens into the f32 mantissa top bits
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into an f32 normal
+            let mut e = 113u32; // 127 - 14, adjusted down per shift
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        // normal: rebias 15 -> 127
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 to the nearest binary16 bit pattern
+/// (round-to-nearest-even). Overflow goes to ±inf; NaN payloads keep
+/// their top 10 bits (forced quiet if that truncates to zero, so a NaN
+/// can never round-trip into an inf).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+    if exp == 0xff {
+        let payload = (mant >> 13) as u16;
+        let keep = if mant != 0 && payload == 0 { 0x200 } else { payload };
+        return sign | 0x7c00 | keep;
+    }
+    let e = exp - 127; // unbiased
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf (covers e.g. 65520+)
+    }
+    if e >= -14 {
+        // normal f16 range (rounding may still carry up to inf, which
+        // the exponent-field add below produces naturally)
+        let half_exp = (e + 15) as u32;
+        let base = (half_exp << 10) | (mant >> 13);
+        let rem = mant & 0x1fff;
+        let round_up = rem > 0x1000 || (rem == 0x1000 && (base & 1) == 1);
+        return sign | (base + round_up as u32) as u16;
+    }
+    if e < -25 {
+        return sign; // underflow to signed zero (below half of min subnormal)
+    }
+    // subnormal f16: shift the implicit-1 mantissa right
+    let m = mant | 0x80_0000; // restore implicit leading 1
+    let shift = (-14 - e + 13) as u32; // bits dropped from the 24-bit mantissa
+    let base = m >> shift;
+    let rem = m & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let round_up = rem > half || (rem == half && (base & 1) == 1);
+    sign | (base + round_up as u32) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_and_precision_parse_all_spellings() {
+        assert_eq!(IsaRequest::parse("AUTO"), Some(IsaRequest::Auto));
+        assert_eq!(IsaRequest::parse("portable"), Some(IsaRequest::Portable));
+        assert_eq!(IsaRequest::parse("Avx2"), Some(IsaRequest::Avx2));
+        assert_eq!(IsaRequest::parse("neon"), Some(IsaRequest::Neon));
+        assert_eq!(IsaRequest::parse("sse9"), None);
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("F16"), Some(Precision::F16));
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("int4"), None);
+    }
+
+    #[test]
+    fn tier_mapping_matches_contract() {
+        // quantized precision always lands in the quantized tier,
+        // whatever the host resolves the ISA to
+        for prec in [Precision::F16, Precision::Int8] {
+            let p = KernelPolicy { isa: IsaRequest::Auto, precision: prec };
+            assert_eq!(p.tier(), DeterminismTier::QuantizedWithErrorBound);
+        }
+        // f32 tier depends only on the resolved ISA
+        let p = KernelPolicy::default();
+        match p.resolve_isa() {
+            Isa::Portable => assert_eq!(p.tier(), DeterminismTier::BitExact),
+            _ => assert_eq!(p.tier(),
+                            DeterminismTier::ReproducibleGivenConfig),
+        }
+    }
+
+    #[test]
+    fn portable_f32_gemm_tolerance_is_bitwise() {
+        assert_eq!(gemm_rel_tolerance(Isa::Portable, Precision::F32), 0.0);
+        assert!(gemm_rel_tolerance(Isa::Avx2, Precision::F32) > 0.0);
+        assert!(gemm_rel_tolerance(Isa::Portable, Precision::Int8)
+                > gemm_rel_tolerance(Isa::Portable, Precision::F16));
+    }
+
+    #[test]
+    fn resolved_isa_is_always_host_runnable() {
+        // whatever the env says, the resolved ISA must be executable
+        // here — the dispatch table relies on this invariant
+        for req in [IsaRequest::Auto, IsaRequest::Portable,
+                    IsaRequest::Avx2, IsaRequest::Neon] {
+            match resolve(req) {
+                Isa::Portable => {}
+                Isa::Avx2 => assert!(host_supports_avx2()),
+                Isa::Neon => assert!(host_supports_neon()),
+            }
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_all_65536_patterns() {
+        for h in 0..=u16::MAX {
+            let back = f32_to_f16(f16_to_f32(h));
+            assert_eq!(back, h, "pattern {h:#06x} round-tripped to {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_spot_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // min subnormal
+        assert_eq!(f32_to_f16(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16(65520.0), 0x7c00); // ties-to-even -> inf
+        assert_eq!(f32_to_f16(1e9), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16(2.0e-8), 0x0000); // below half min subnormal
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16(f32::NAN) & 0x7c00, 0x7c00);
+        assert_ne!(f32_to_f16(f32::NAN) & 0x3ff, 0); // stays NaN, not inf
+        // round-to-nearest-even at the first odd/even boundary:
+        // 1 + 2^-11 is exactly halfway between 0x3c00 and 0x3c01
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+    }
+}

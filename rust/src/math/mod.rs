@@ -3,6 +3,7 @@
 
 pub mod erf;
 pub mod gemm;
+pub mod isa;
 pub mod stats;
 pub mod vec_ops;
 

@@ -28,6 +28,20 @@
 //! sharding only regroups independent output elements of one fixed
 //! reduction order.
 //!
+//! Which kernels run — and therefore which determinism tier the model
+//! lands in ([`crate::math::isa`]) — is set by the
+//! [`KernelPolicy`] passed to [`NativeMlp::from_flat_with`] /
+//! [`NativeMlp::load_with`]: the ISA request is resolved against the
+//! host **once at load** and every GEMM this model ever runs uses that
+//! resolved ISA (so the tier's bit-stability-given-config holds by
+//! construction), and the weight panels are packed at the policy's
+//! precision. The plain `from_flat`/`load` entries use the default
+//! policy (auto ISA, f32 panels); `ASD_GEMM_ISA=portable` restores the
+//! seed's bit-exact behaviour globally. The scalar reference path
+//! always reads the exact f32 bytes the artifacts shipped, whatever
+//! the packed precision — it is the oracle the quantized tiers are
+//! toleranced against.
+//!
 //! All math in f32 (matching the HLO) then widened to f64 at the edge.
 
 use std::cell::RefCell;
@@ -36,7 +50,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::math::gemm::{gemm_packed_sharded, Epilogue, PackedB};
+use crate::math::gemm::{gemm_packed_sharded_on, Epilogue, PackedB};
+use crate::math::isa::{DeterminismTier, Isa, KernelPolicy};
 use crate::model::{DenoiseModel, VariantInfo};
 use crate::schedule::DdpmSchedule;
 
@@ -124,6 +139,11 @@ pub struct NativeMlp {
     /// TEMB_DIM` row-major: a trajectory only ever visits `k_steps`
     /// distinct values, so verify batches never recompute sin/cos
     temb_cache: Vec<f32>,
+    /// requested kernel policy (ISA request + panel precision)
+    policy: KernelPolicy,
+    /// ISA resolved once at load — every GEMM this model runs uses it,
+    /// which is what makes the reproducible-given-config tier hold
+    isa: Isa,
 }
 
 #[derive(Debug)]
@@ -146,6 +166,13 @@ struct Layer {
 
 impl NativeMlp {
     pub fn load(info: &VariantInfo, artifacts_dir: &Path) -> Result<Arc<NativeMlp>> {
+        Self::load_with(info, artifacts_dir, KernelPolicy::default())
+    }
+
+    /// [`load`](Self::load) with an explicit kernel policy (GEMM ISA
+    /// request + packed-panel precision).
+    pub fn load_with(info: &VariantInfo, artifacts_dir: &Path,
+                     policy: KernelPolicy) -> Result<Arc<NativeMlp>> {
         let path = artifacts_dir.join(&info.weights_file);
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -156,10 +183,18 @@ impl NativeMlp {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Self::from_flat(info, &flat)
+        Self::from_flat_with(info, &flat, policy)
     }
 
     pub fn from_flat(info: &VariantInfo, flat: &[f32]) -> Result<Arc<NativeMlp>> {
+        Self::from_flat_with(info, flat, KernelPolicy::default())
+    }
+
+    /// [`from_flat`](Self::from_flat) with an explicit kernel policy:
+    /// weight panels are packed at `policy.precision` and the ISA
+    /// request is resolved against the host here, once.
+    pub fn from_flat_with(info: &VariantInfo, flat: &[f32],
+                          policy: KernelPolicy) -> Result<Arc<NativeMlp>> {
         let mut layers = Vec::new();
         let mut off = 0usize;
         for &(n_in, n_out) in &info.weights_layout {
@@ -172,7 +207,7 @@ impl NativeMlp {
             layers.push(Layer {
                 n_in,
                 n_out,
-                wp: PackedB::pack(n_in, n_out, &w),
+                wp: PackedB::pack_as(n_in, n_out, &w, policy.precision),
                 w,
                 b: flat[w_end..b_end].to_vec(),
             });
@@ -219,12 +254,30 @@ impl NativeMlp {
             schedule: info.schedule(),
             freqs,
             temb_cache,
+            policy,
+            isa: policy.resolve_isa(),
         }))
     }
 
     /// Input layer width: d + TEMB_DIM + cond_dim.
     pub fn in_dim(&self) -> usize {
         self.d + TEMB_DIM + self.cond_dim
+    }
+
+    /// The kernel policy this model was loaded with.
+    pub fn kernel_policy(&self) -> KernelPolicy {
+        self.policy
+    }
+
+    /// The ISA the policy resolved to at load (fixed for the model's
+    /// lifetime).
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// The determinism tier this model's forward passes ship under.
+    pub fn determinism_tier(&self) -> DeterminismTier {
+        self.policy.tier()
     }
 
     fn embed_time(&self, t: f32, out: &mut [f32]) {
@@ -309,11 +362,13 @@ impl NativeMlp {
 
     /// [`denoise_batch_with`](Self::denoise_batch_with) with each
     /// layer's GEMM split into up to `tile_shards` MR×NR-aligned M×N
-    /// tiles on the global worker pool (`gemm_packed_sharded`). Small
-    /// batches — fused serving rounds — parallelize over the weight
-    /// matrix's column panels even when they have too few rows to
-    /// row-shard. Bit-identical to the serial pipeline for every
-    /// `tile_shards` (tiles never split an element's reduction).
+    /// tiles on the global worker pool (`gemm_packed_sharded_on`,
+    /// driven by the ISA resolved at load). Small batches — fused
+    /// serving rounds — parallelize over the weight matrix's column
+    /// panels even when they have too few rows to row-shard.
+    /// Bit-identical to the serial pipeline for every `tile_shards`
+    /// (tiles never split an element's reduction, and the kernel is
+    /// fixed per model, so this holds in every determinism tier).
     pub fn denoise_batch_tiled(&self, ys: &[f64], ts: &[f64], cond: &[f64],
                                n: usize, out: &mut [f64],
                                ws: &mut Workspace, tile_shards: usize)
@@ -344,24 +399,28 @@ impl NativeMlp {
             }
         }
 
-        // input layer: h = silu(input · W0 + b0)
+        // input layer: h = silu(input · W0 + b0). All layer GEMMs run
+        // on the ISA resolved at load — never re-resolved per call, so
+        // a model's outputs are bit-stable whatever the pool does
         let first = &self.layers[0];
-        gemm_packed_sharded(n, hidden, in_dim, &ws.input[..n * in_dim],
-                            &first.wp, Some(&first.b), Epilogue::Silu, None,
-                            &mut ws.h[..n * hidden], tile_shards);
+        gemm_packed_sharded_on(self.isa, n, hidden, in_dim,
+                               &ws.input[..n * in_dim], &first.wp,
+                               Some(&first.b), Epilogue::Silu,
+                               None, &mut ws.h[..n * hidden], tile_shards);
         // residual blocks: h = h + silu(h · W + b), fused epilogue
         for layer in &self.layers[1..self.layers.len() - 1] {
-            gemm_packed_sharded(n, hidden, hidden, &ws.h[..n * hidden],
-                                &layer.wp, Some(&layer.b), Epilogue::Silu,
-                                Some(&ws.h[..n * hidden]),
-                                &mut ws.tmp[..n * hidden], tile_shards);
+            gemm_packed_sharded_on(self.isa, n, hidden, hidden,
+                                   &ws.h[..n * hidden], &layer.wp,
+                                   Some(&layer.b), Epilogue::Silu,
+                                   Some(&ws.h[..n * hidden]),
+                                   &mut ws.tmp[..n * hidden], tile_shards);
             std::mem::swap(&mut ws.h, &mut ws.tmp);
         }
         // output layer: no activation
         let last = self.layers.last().unwrap();
-        gemm_packed_sharded(n, d, hidden, &ws.h[..n * hidden], &last.wp,
-                            Some(&last.b), Epilogue::Linear, None,
-                            &mut ws.out32[..n * d], tile_shards);
+        gemm_packed_sharded_on(self.isa, n, d, hidden, &ws.h[..n * hidden],
+                               &last.wp, Some(&last.b), Epilogue::Linear,
+                               None, &mut ws.out32[..n * d], tile_shards);
         for (o, &v) in out[..n * d].iter_mut().zip(&ws.out32[..n * d]) {
             *o = v as f64;
         }
@@ -733,5 +792,44 @@ mod tests {
         assert!(e1.iter().all(|v| v.abs() <= 1.0));
         let diff: f32 = e1.iter().zip(&e2).map(|(a, b)| (a - b).abs()).sum();
         assert!(diff > 0.1);
+    }
+
+    #[test]
+    fn quantized_policies_track_scalar_ref_within_tier_bound() {
+        use crate::math::isa::{IsaRequest, Precision};
+        let info = toy_info(3, 2, 16, 3);
+        let flat = pseudo_weights(flat_len(&info));
+        let n = 7usize;
+        let ys: Vec<f64> =
+            (0..n * 3).map(|i| (i as f64 * 0.31).sin()).collect();
+        let ts: Vec<f64> = (0..n).map(|r| (1 + r % 10) as f64).collect();
+        let cond: Vec<f64> =
+            (0..n * 2).map(|i| (i as f64 * 0.13).cos()).collect();
+        for precision in [Precision::F16, Precision::Int8] {
+            let policy = KernelPolicy { isa: IsaRequest::Auto, precision };
+            let mlp = NativeMlp::from_flat_with(&info, &flat, policy).unwrap();
+            assert_eq!(mlp.determinism_tier(),
+                       DeterminismTier::QuantizedWithErrorBound);
+            assert_eq!(mlp.kernel_policy().precision, precision);
+            // the scalar ref path reads the exact f32 bytes, so even on
+            // a quantized model it is the f32 oracle
+            let mut want = vec![0.0; n * 3];
+            mlp.denoise_batch_ref(&ys, &ts, &cond, n, &mut want).unwrap();
+            let mut got = vec![0.0; n * 3];
+            mlp.denoise_batch(&ys, &ts, &cond, n, &mut got).unwrap();
+            let tol = policy.denoise_rel_tolerance();
+            for i in 0..n * 3 {
+                let bound = tol * want[i].abs().max(1.0);
+                assert!((want[i] - got[i]).abs() <= bound,
+                        "{precision:?} i={i}: ref {} vs quantized {}",
+                        want[i], got[i]);
+            }
+        }
+        // a forced portable f32 request is the bit-exact contract
+        let portable = KernelPolicy { isa: IsaRequest::Portable,
+                                      precision: Precision::F32 };
+        let mlp = NativeMlp::from_flat_with(&info, &flat, portable).unwrap();
+        assert_eq!(mlp.determinism_tier(), DeterminismTier::BitExact);
+        assert_eq!(mlp.isa(), Isa::Portable);
     }
 }

@@ -10,7 +10,13 @@
 //! *which thread* runs a shard (stealing moves shards between workers
 //! under load), never the shard partition or any reduction order, so
 //! scheduling changes wall-clock, never samples (the float summation
-//! order per sample is untouched). This composes with
+//! order per sample is untouched). With the ISA-dispatched GEMM
+//! backends (`math::isa`) this invariance holds *within a fixed
+//! kernel configuration*: the resolved ISA and panel precision are
+//! frozen per model at load, so pool size and steal schedules still
+//! never flip a bit, but two hosts resolving different ISAs (or two
+//! `KernelPolicy`s) sit in different determinism tiers and may differ
+//! from each other by FMA/quantization rounding. This composes with
 //! `NativeMlp`'s GEMM batch path: each shard runs the whole pipeline
 //! on its row range against its own thread-local workspace, and the
 //! GEMM reduction order is row-independent by construction (see

@@ -561,6 +561,14 @@ impl ThreadPool {
     /// parallelism whenever `shards % sm != 0` — e.g. 4 row blocks on a
     /// 6-shard budget produced a 4×1 grid (4 tiles, 2 idle workers)
     /// where 3×2 fills all 6. Returns the effective tile count.
+    ///
+    /// The grid is a pure function of `(m, m_block, n, n_block,
+    /// shards)` and must stay **ISA-agnostic**: the SIMD microkernels
+    /// in `math::gemm` pick their instruction set *inside* a tile, so
+    /// the same partition (and therefore the same per-element
+    /// reduction geometry) is handed to every kernel variant. Keying
+    /// the grid on the host ISA would silently break the
+    /// reproducible-given-config determinism tier.
     pub fn run_sharded_tiles<F: Fn(usize, usize, usize, usize) + Sync>(
         &self, m: usize, m_block: usize, n: usize, n_block: usize,
         shards: usize, f: F) -> usize {

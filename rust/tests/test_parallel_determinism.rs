@@ -292,6 +292,47 @@ fn single_worker_two_lane_burst_overlaps_without_barrier() {
     c.shutdown();
 }
 
+/// Reproducible-given-config tier, asserted end to end: a native MLP
+/// whose GEMMs run on the load-resolved ISA (whatever this host — or
+/// an `ASD_GEMM_ISA` override — picked) must produce bit-identical
+/// samples across pool sizes 1/2/8 AND across repeated runs (each rep
+/// samples a different steal schedule). The kernel config is frozen
+/// per model, so the only thing sharding may change is wall-clock.
+#[test]
+fn native_mlp_bit_identical_across_pool_sizes_for_fixed_isa() {
+    use asd::model::{NativeMlp, VariantInfo};
+    let info = VariantInfo::toy("det", 3, 0, 24, 2, 40);
+    let flat: Vec<f32> = (0..info.weights_len())
+        .map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5)
+        .collect();
+    let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+    let isa = mlp.isa();
+    let model: Arc<dyn DenoiseModel> = mlp;
+    let mut reference: Option<Vec<u64>> = None;
+    for pool_size in POOL_SIZES {
+        for rep in 0..2 {
+            let mut engine = AsdEngine::new(
+                model.clone(),
+                AsdConfig {
+                    theta: 8,
+                    pool: PoolConfig { pool_size, shard_min: 1 },
+                    ..Default::default()
+                });
+            let mut all_bits = Vec::new();
+            for seed in 0..4u64 {
+                all_bits.extend(bits(&engine.sample(seed).unwrap().y0));
+            }
+            match &reference {
+                None => reference = Some(all_bits),
+                Some(b) => assert_eq!(
+                    &all_bits, b,
+                    "pool_size={pool_size} rep={rep} changed native-MLP \
+                     bits on isa={isa}"),
+            }
+        }
+    }
+}
+
 #[test]
 fn conditional_asd_bit_identical_across_pool_sizes() {
     let model: Arc<dyn DenoiseModel> =

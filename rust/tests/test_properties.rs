@@ -4,8 +4,9 @@
 //! at random K, GEMM-vs-naive-reference parity (v1, prepacked-panel
 //! and 2-D M×N-sharded kernels all bitwise vs `gemm_ref`; the native
 //! MLP's packed GEMM batch path vs its scalar reference, incl. tiled
-//! bit-invariance), `exp_fast` edge semantics + a max-ulp sweep vs
-//! libm, and worker-pool sharding invariants
+//! bit-invariance), quantized `PackedB` pack/dequant round-trips and
+//! the int8/f16 denoise error-bound sweep, `exp_fast` edge semantics
+//! + a max-ulp sweep vs libm, and worker-pool sharding invariants
 //! (sharded == unsharded bitwise; GRS accept counts invariant under
 //! pool size and kernel backend).
 
@@ -477,4 +478,104 @@ fn grs_acceptance_counts_invariant_under_pool_and_backend() {
         assert_eq!(a.stats.accepted, b.stats.accepted, "seed {seed}");
         assert_eq!(a.stats.rejected, b.stats.rejected, "seed {seed}");
     }
+}
+
+#[test]
+fn quantized_packedb_pack_dequant_roundtrip_properties() {
+    use asd::math::gemm::{PackedB, KC, NR};
+    use asd::math::isa::{f16_to_f32, f32_to_f16, Precision};
+
+    prop::check("quantized-packedb-roundtrip", 30, |g| {
+        // shapes straddling the NR column panel and the KC k-panel
+        let k = *g.pick(&[1usize, 2, 7, 64, 255, 256, 300]);
+        let n = *g.pick(&[1usize, 5, 8, 9, 16, 23]);
+        let w: Vec<f32> =
+            g.normal_vec(k * n).into_iter().map(|v| v as f32).collect();
+        let n_padded = n.div_ceil(NR) * NR;
+        for precision in [Precision::F16, Precision::Int8] {
+            let pb = PackedB::pack_as(k, n, &w, precision);
+            assert_eq!(pb.precision(), precision);
+            for p in 0..k {
+                // zero-padded tail columns must stay exactly zero
+                // after dequant — the kernels accumulate them unmasked
+                for j in n..n_padded {
+                    assert_eq!(pb.stored(p, j).to_bits(),
+                               0.0f32.to_bits(),
+                               "padding p={p} j={j} {precision:?}");
+                }
+                for j in 0..n {
+                    let want = w[p * n + j];
+                    let got = pb.stored(p, j);
+                    match precision {
+                        // the panel stores the RNE f16 bit pattern:
+                        // round-trip is exact by construction
+                        Precision::F16 => assert_eq!(
+                            got.to_bits(),
+                            f16_to_f32(f32_to_f16(want)).to_bits(),
+                            "f16 p={p} j={j}"),
+                        // per-(k-panel, column) scale: dequant error
+                        // is at most half a quantization step
+                        Precision::Int8 => {
+                            let p0 = (p / KC) * KC;
+                            let pc = KC.min(k - p0);
+                            let colmax = (0..pc)
+                                .map(|dp| w[(p0 + dp) * n + j].abs())
+                                .fold(0.0f32, f32::max);
+                            let step = colmax / 127.0;
+                            assert!((got - want).abs()
+                                        <= step / 2.0 + 1e-6,
+                                    "int8 p={p} j={j}: {got} vs {want} \
+                                     (step {step})");
+                        }
+                        Precision::F32 => unreachable!(),
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn quantized_mlp_denoise_tracks_scalar_ref_within_documented_bound() {
+    use asd::math::isa::{IsaRequest, KernelPolicy, Precision};
+    use asd::model::{NativeMlp, VariantInfo};
+
+    // max-relative-error sweep pinning the documented per-tier bound:
+    // int8/f16 `denoise_batch` vs the exact-f32 `denoise_batch_ref`
+    prop::check("quantized-mlp-error-bound", 8, |g| {
+        let d = g.usize_in(1, 5);
+        let cond_dim = *g.pick(&[0usize, 2]);
+        let hidden = g.usize_in(4, 24);
+        let blocks = g.usize_in(0, 2);
+        let info = VariantInfo::toy("quant-prop", d, cond_dim, hidden,
+                                    blocks, 20);
+        let flat: Vec<f32> = g.normal_vec(info.weights_len())
+            .into_iter().map(|v| (v * 0.3) as f32).collect();
+        for precision in [Precision::F16, Precision::Int8] {
+            let policy = KernelPolicy { isa: IsaRequest::Auto, precision };
+            let mlp =
+                NativeMlp::from_flat_with(&info, &flat, policy).unwrap();
+            let tol = policy.denoise_rel_tolerance();
+            for n in [1usize, 3, 9] {
+                let ys = g.normal_vec(n * d);
+                let ts: Vec<f64> =
+                    (0..n).map(|_| g.usize_in(1, 20) as f64).collect();
+                let cond = g.normal_vec(n * cond_dim);
+                let mut want = vec![0.0; n * d];
+                mlp.denoise_batch_ref(&ys, &ts, &cond, n, &mut want)
+                    .unwrap();
+                let mut got = vec![0.0; n * d];
+                mlp.denoise_batch(&ys, &ts, &cond, n, &mut got).unwrap();
+                let mut max_rel = 0.0f64;
+                for i in 0..n * d {
+                    let rel = (want[i] - got[i]).abs()
+                        / want[i].abs().max(1.0);
+                    max_rel = max_rel.max(rel);
+                }
+                assert!(max_rel <= tol,
+                        "{precision:?} n={n}: max rel err {max_rel} \
+                         exceeds the documented bound {tol}");
+            }
+        }
+    });
 }
