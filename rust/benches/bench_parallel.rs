@@ -16,6 +16,9 @@
 //!   64}); emits `BENCH_gemm.json` with GFLOP/s per kernel generation.
 //! * **ASD sweep** — a wide random GMM oracle; outputs are asserted
 //!   bit-identical across pool sizes (the pool buys wall-clock only).
+//! * **Pareto grid** — sequential / ASD / SL-ASD / draft-SD over the
+//!   analytic target × draft cells; emits `BENCH_pareto.json` (the
+//!   speedup-vs-cost frontier tracked across PRs).
 //!
 //! Hard perf floors (the `>= 4x` GEMM-vs-scalar assert, the fused-rows
 //! assert, the small-M packed-2D gain) read their thresholds from
@@ -218,6 +221,14 @@ fn main() -> anyhow::Result<()> {
                 "concurrency 64 served per-request (rows/round {fused:.2}, \
                  floor {min_fused:.2})");
     }
+
+    // --- Pareto grid: sequential vs ASD vs SL-ASD vs draft-SD ---------
+    // analytic cells only (the native MLP cells run under `asd pareto`
+    // without --analytic); small n keeps the bench wall-clock sane.
+    // Emits BENCH_pareto.json, schema v1.
+    println!("\n[speedup-vs-cost Pareto grid, analytic cells]");
+    asd::exp::speedup::run_pareto_grid(
+        true, 2, 6, std::path::Path::new("BENCH_pareto.json"))?;
 
     // --- lockstep batched sequential: one sharded call per step -------
     println!("\n[lockstep batched sequential, n=32 chains, same model]");

@@ -1,0 +1,615 @@
+//! Draft-model speculative sampling (draft-SD): the fifth poll/resume
+//! [`StepSampler`] machine, beside sequential DDPM, Picard, ASD and
+//! SL-ASD.
+//!
+//! ASD is draft-free: it speculates with the *target's own* x0hat and
+//! pays one parallel round per proposal plus one per verification.
+//! Draft-SD (De Bortoli et al., "Accelerated Diffusion Models via
+//! Speculative Sampling") replaces the proposal round with a *cheap
+//! draft model* chained sequentially inside the machine: the draft
+//! proposes a k-step trajectory at negligible cost, then the target
+//! verifies all k proposed steps in ONE fused `denoise_batch` round.
+//! The accept/reject decision is the same GRS (Algorithm 3) the ASD
+//! verifier uses — by Theorem 12 each corrected step is an *exact*
+//! sample from the target transition N(m, sigma^2 I) regardless of the
+//! draft's proposal mean, so draft-SD samples the exact DDPM law. On
+//! rejection the GRS reflection-coupled sample replaces the first
+//! rejected position and the proposed suffix is discarded.
+//!
+//! Round accounting: one parallel round per iteration (the fused
+//! verify of the whole window) — structurally half of ASD's
+//! propose+verify cadence. The draft's own chain calls never hit the
+//! round plane: they are machine-internal sampler math (the draft is
+//! assumed cheap relative to the target; `AsdStats::draft_calls`
+//! counts them so the Pareto bench can price the trade honestly).
+//!
+//! The machine consumes the same pre-drawn Philox streams as every
+//! other sampler (`xi[j]`/`u[j]` for transition j+1 -> j), so fused
+//! coordinator execution is bit-identical to solo execution, and a
+//! draft that equals the target yields v = 0 at every position and
+//! never rejects (Lemma 13) — reproducing sequential DDPM bit-for-bit.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::asd::adaptive::WindowController;
+use crate::asd::engine::{AsdOutput, AsdStats};
+use crate::asd::grs::grs_native;
+use crate::ddpm::NoiseStreams;
+use crate::math::vec_ops::lincomb_into;
+use crate::model::{DenoiseModel, ParallelModel};
+use crate::runtime::pool::PoolConfig;
+use crate::sampler::{ArenaSpan, DenoiseDemand, RoundArena, RoundExec,
+                     SamplerPoll, StepSampler};
+
+/// Configuration for the draft-speculative engine/machine.
+#[derive(Clone)]
+pub struct DraftConfig {
+    /// Draft speculation window; 0 = speculate to the end.
+    pub k: usize,
+    /// Sharded execution of the fused verify rounds on the global
+    /// worker pool (bit-transparent; see [`crate::asd::AsdConfig`]).
+    pub pool: PoolConfig,
+    /// Optional acceptance-driven window controller (shared economics
+    /// with ASD's adaptive theta — see `asd::adaptive`). The engine
+    /// threads it through each sample's machine and carries the learned
+    /// state across samples.
+    pub adaptive: Option<WindowController>,
+}
+
+impl Default for DraftConfig {
+    fn default() -> DraftConfig {
+        DraftConfig {
+            k: 8,
+            pool: PoolConfig::default(),
+            adaptive: None,
+        }
+    }
+}
+
+/// The draft-SD engine — a thin [`crate::sampler::drive`] loop over
+/// [`DraftStepMachine`], mirroring [`crate::asd::AsdEngine`]'s API.
+/// `model` is the (pool-wrapped) target; `draft` stays unwrapped — its
+/// chain runs as sequential single-row calls inside the machine.
+pub struct DraftEngine {
+    pub model: Arc<dyn DenoiseModel>,
+    pub draft: Arc<dyn DenoiseModel>,
+    pub config: DraftConfig,
+}
+
+impl DraftEngine {
+    pub fn new(target: Arc<dyn DenoiseModel>, draft: Arc<dyn DenoiseModel>,
+               config: DraftConfig) -> DraftEngine {
+        let model = ParallelModel::wrap(target, config.pool);
+        DraftEngine { model, draft, config }
+    }
+
+    pub fn sample(&mut self, seed: u64) -> Result<AsdOutput> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_owned_noise(noise, &[])
+    }
+
+    pub fn sample_cond(&mut self, seed: u64, cond: &[f64])
+                       -> Result<AsdOutput> {
+        let noise = NoiseStreams::draw(seed, 0, self.model.k_steps(),
+                                       self.model.dim());
+        self.sample_owned_noise(noise, cond)
+    }
+
+    pub fn sample_with_noise(&mut self, noise: &NoiseStreams, cond: &[f64])
+                             -> Result<AsdOutput> {
+        self.sample_owned_noise(noise.clone(), cond)
+    }
+
+    fn sample_owned_noise(&mut self, noise: NoiseStreams, cond: &[f64])
+                          -> Result<AsdOutput> {
+        let t_start = std::time::Instant::now();
+        let mut machine = DraftStepMachine::new(
+            self.model.clone(),
+            self.draft.clone(),
+            self.config.k,
+            self.config.adaptive.clone(),
+            noise,
+            cond,
+        )?;
+        let y0 = crate::sampler::drive(&mut machine, &self.model,
+                                       self.config.pool)?;
+        // carry the controller's learned acceptance across samples
+        self.config.adaptive = machine.take_controller();
+        Ok(AsdOutput {
+            y0,
+            stats: machine.into_stats(),
+            wallclock_s: t_start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Where the draft machine is between rounds. Unlike ASD there is no
+/// Propose phase: the draft chain is built inline (machine-internal),
+/// so every round is a fused verify of the whole proposed window.
+enum DraftPhase {
+    /// demand `th` verify rows: the current state plus the first
+    /// `th - 1` draft-proposed points
+    Verify { th: usize },
+    Done,
+}
+
+/// Draft-model speculative sampling as a poll/resume state machine.
+/// Each demand is one parallel round: the batched target verification
+/// of a draft-proposed window. The draft chain and the GRS scan run
+/// inside the machine (`new` / `resume`); the *target* is never called
+/// by the machine — only demanded through the round plane, so the
+/// coordinator fuses draft-SD verify rounds with any other machine's
+/// rows bit-identically to solo execution.
+pub struct DraftStepMachine {
+    target: Arc<dyn DenoiseModel>,
+    draft: Arc<dyn DenoiseModel>,
+    k_window: usize,
+    adaptive: Option<WindowController>,
+    noise: NoiseStreams,
+    cond: Vec<f64>,
+    // chain buffers (sized K x d)
+    m_hat: Vec<f64>,
+    y_hat: Vec<f64>,
+    x0_eval: Vec<f64>,
+    eval_in: Vec<f64>,
+    eval_ts: Vec<f64>,
+    eval_cond: Vec<f64>,
+    x0_draft: Vec<f64>,
+    m_buf: Vec<f64>,
+    z_buf: Vec<f64>,
+    v_buf: Vec<f64>,
+    // loop state
+    y: Vec<f64>,
+    i_cur: usize,
+    phase: DraftPhase,
+    /// whether the eval buffers hold the current Verify demand (lazy
+    /// staging for the compatibility `poll`; `poll_into` writes the
+    /// arena straight from the chain buffers)
+    staged: bool,
+    stats: AsdStats,
+}
+
+impl DraftStepMachine {
+    pub fn new(target: Arc<dyn DenoiseModel>, draft: Arc<dyn DenoiseModel>,
+               k_window: usize, adaptive: Option<WindowController>,
+               noise: NoiseStreams, cond: &[f64])
+               -> Result<DraftStepMachine> {
+        anyhow::ensure!(cond.len() == target.cond_dim(),
+                        "conditioning length {} != cond_dim {}",
+                        cond.len(), target.cond_dim());
+        anyhow::ensure!(draft.dim() == target.dim(),
+                        "draft dim {} != target dim {}",
+                        draft.dim(), target.dim());
+        anyhow::ensure!(draft.cond_dim() == target.cond_dim(),
+                        "draft cond_dim {} != target cond_dim {}",
+                        draft.cond_dim(), target.cond_dim());
+        anyhow::ensure!(draft.k_steps() == target.k_steps(),
+                        "draft k_steps {} != target k_steps {}",
+                        draft.k_steps(), target.k_steps());
+        let d = target.dim();
+        let k = target.k_steps();
+        let c = target.cond_dim();
+        let mut m = DraftStepMachine {
+            k_window,
+            adaptive,
+            cond: cond.to_vec(),
+            m_hat: vec![0.0; k.max(1) * d],
+            y_hat: vec![0.0; k.max(1) * d],
+            x0_eval: vec![0.0; k.max(1) * d],
+            eval_in: vec![0.0; k.max(1) * d],
+            eval_ts: vec![0.0; k.max(1)],
+            eval_cond: vec![0.0; k.max(1) * c.max(1)],
+            x0_draft: vec![0.0; d],
+            m_buf: vec![0.0; d],
+            z_buf: vec![0.0; d],
+            v_buf: vec![0.0; d],
+            y: noise.y_k.clone(),
+            i_cur: k,
+            phase: DraftPhase::Done,
+            staged: false,
+            noise,
+            target,
+            draft,
+            stats: AsdStats::default(),
+        };
+        if m.i_cur > 0 {
+            m.stats.iterations = 1; // entering the first iteration
+            m.start_window()?;
+        }
+        Ok(m)
+    }
+
+    pub fn stats(&self) -> &AsdStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> AsdStats {
+        self.stats
+    }
+
+    /// Hand back the (possibly updated) window controller so callers
+    /// can carry its acceptance estimate across samples.
+    pub fn take_controller(&mut self) -> Option<WindowController> {
+        self.adaptive.take()
+    }
+
+    /// Effective draft window for the current iteration.
+    fn window_for(&self, i_cur: usize) -> usize {
+        let want = match &self.adaptive {
+            Some(ctl) => ctl.window(),
+            None if self.k_window == 0 => i_cur,
+            None => self.k_window,
+        };
+        want.min(i_cur).max(1)
+    }
+
+    /// Run the draft chain for the next window and stage its fused
+    /// verify demand. Requires `i_cur > 0`.
+    fn start_window(&mut self) -> Result<()> {
+        let th = self.window_for(self.i_cur);
+        self.speculate_draft(th)?;
+        self.phase = DraftPhase::Verify { th };
+        self.staged = false;
+        Ok(())
+    }
+
+    /// Draft speculation chain: position kpos covers transition
+    /// j -> j-1 with j = i_cur - kpos. The draft predicts x0hat at each
+    /// chain point sequentially (cheap single-row calls); means and
+    /// proposed points use the *target's* schedule, so the GRS compares
+    /// same-variance Gaussians (Theorem 12's setting).
+    fn speculate_draft(&mut self, th: usize) -> Result<()> {
+        let d = self.target.dim();
+        let i_cur = self.i_cur;
+        let model = self.target.clone();
+        let sched = model.schedule();
+        let (c1, c2, sigma) = (&sched.c1, &sched.c2, &sched.sigma);
+        for kpos in 0..th {
+            let j = i_cur - kpos;
+            let row = j - 1;
+            {
+                let y_base: &[f64] = if kpos == 0 {
+                    &self.y
+                } else {
+                    &self.y_hat[(kpos - 1) * d..kpos * d]
+                };
+                self.draft.denoise_one(y_base, j, &self.cond,
+                                       &mut self.x0_draft)?;
+            }
+            self.stats.draft_calls += 1;
+            let (head, tail_buf) = self.y_hat.split_at_mut(kpos * d);
+            let y_base: &[f64] = if kpos == 0 {
+                &self.y
+            } else {
+                &head[(kpos - 1) * d..kpos * d]
+            };
+            let m_slice = &mut self.m_hat[kpos * d..(kpos + 1) * d];
+            lincomb_into(m_slice, c1[row], &self.x0_draft, c2[row], y_base);
+            let xi = self.noise.xi_row(row, d);
+            let y_slice = &mut tail_buf[..d];
+            for i in 0..d {
+                y_slice[i] = m_slice[i] + sigma[row] * xi[i];
+            }
+        }
+        Ok(())
+    }
+
+    /// Verifier scan: sequential GRS over the window, every position
+    /// checked against the target's x0hat (no Lemma 13 shortcut at
+    /// position 0 — the draft's mean differs from the target's there
+    /// too). An accepted z bit-equals the proposed y_hat point, so the
+    /// chain base stays valid; the first reject yields the
+    /// reflection-coupled exact sample and discards the suffix.
+    fn scan(&mut self, th: usize) {
+        let d = self.target.dim();
+        let model = self.target.clone();
+        let sched = model.schedule();
+        let (c1, c2, sigma) = (&sched.c1, &sched.c2, &sched.sigma);
+        let mut advanced = 0usize;
+        let mut win_accepted = 0usize;
+        let mut win_rejected = 0usize;
+        for kpos in 0..th {
+            let j = self.i_cur - kpos; // transition j -> j-1
+            let row = j - 1;
+            let y_base: &[f64] = if kpos == 0 {
+                &self.y
+            } else {
+                &self.y_hat[(kpos - 1) * d..kpos * d]
+            };
+            // target mean: c1 x0hat_target + c2 y_base
+            lincomb_into(&mut self.m_buf, c1[row],
+                         &self.x0_eval[kpos * d..(kpos + 1) * d],
+                         c2[row], y_base);
+            let accept = grs_native(
+                self.noise.u[row],
+                self.noise.xi_row(row, d),
+                &self.m_hat[kpos * d..(kpos + 1) * d],
+                &self.m_buf,
+                sigma[row],
+                &mut self.z_buf,
+                &mut self.v_buf,
+            );
+            self.y.copy_from_slice(&self.z_buf);
+            advanced += 1;
+            if accept {
+                win_accepted += 1;
+            } else {
+                win_rejected += 1;
+                break;
+            }
+        }
+        self.i_cur -= advanced;
+        self.stats.accepted += win_accepted;
+        self.stats.rejected += win_rejected;
+        if let Some(ctl) = &mut self.adaptive {
+            ctl.observe(win_accepted, win_rejected);
+        }
+    }
+
+    /// Write the current Verify demand's rows into arbitrary target
+    /// slices (sized exactly `th`): slot 0 is the current state at
+    /// `i_cur`, slot s >= 1 the draft-proposed point at `i_cur - s`.
+    fn write_verify_rows(&self, th: usize, ys: &mut [f64], ts: &mut [f64],
+                         cond: &mut [f64]) {
+        let d = self.target.dim();
+        ys[..d].copy_from_slice(&self.y);
+        ts[0] = self.i_cur as f64;
+        for slot in 1..th {
+            ys[slot * d..(slot + 1) * d]
+                .copy_from_slice(&self.y_hat[(slot - 1) * d..slot * d]);
+            ts[slot] = (self.i_cur - slot) as f64;
+        }
+        let c_dim = self.target.cond_dim();
+        if c_dim > 0 {
+            for slot in 0..th {
+                cond[slot * c_dim..(slot + 1) * c_dim]
+                    .copy_from_slice(&self.cond);
+            }
+        }
+    }
+
+    /// Compatibility staging for the slice-based `poll`.
+    fn stage_verify(&mut self) {
+        if let DraftPhase::Verify { th } = self.phase {
+            let mut ys = std::mem::take(&mut self.eval_in);
+            let mut ts = std::mem::take(&mut self.eval_ts);
+            let mut cond = std::mem::take(&mut self.eval_cond);
+            let d = self.target.dim();
+            let c_dim = self.target.cond_dim();
+            self.write_verify_rows(th, &mut ys[..th * d], &mut ts[..th],
+                                   &mut cond[..th * c_dim]);
+            self.eval_in = ys;
+            self.eval_ts = ts;
+            self.eval_cond = cond;
+            self.staged = true;
+        }
+    }
+}
+
+impl StepSampler for DraftStepMachine {
+    fn poll(&mut self) -> Result<SamplerPoll<'_>> {
+        if matches!(self.phase, DraftPhase::Verify { .. }) && !self.staged {
+            self.stage_verify();
+        }
+        let d = self.target.dim();
+        let c_dim = self.target.cond_dim();
+        match self.phase {
+            DraftPhase::Done => Ok(SamplerPoll::Done(&self.y)),
+            DraftPhase::Verify { th } => {
+                Ok(SamplerPoll::Demand(DenoiseDemand {
+                    ys: &self.eval_in[..th * d],
+                    ts: &self.eval_ts[..th],
+                    cond: &self.eval_cond[..th * c_dim],
+                    n: th,
+                }))
+            }
+        }
+    }
+
+    /// Arena path: the verify window is written straight from the
+    /// draft chain into the arena's reserved row range.
+    fn poll_into(&mut self, arena: &mut RoundArena)
+                 -> Result<Option<ArenaSpan>> {
+        match self.phase {
+            DraftPhase::Done => Ok(None),
+            DraftPhase::Verify { th } => {
+                let (span, rows) = arena.reserve(th);
+                self.write_verify_rows(th, rows.ys, rows.ts, rows.cond);
+                Ok(Some(span))
+            }
+        }
+    }
+
+    fn resume(&mut self, x0: &[f64], exec: RoundExec) -> Result<()> {
+        let d = self.target.dim();
+        match self.phase {
+            DraftPhase::Done => anyhow::bail!("resume after Done"),
+            DraftPhase::Verify { th } => {
+                anyhow::ensure!(x0.len() == th * d,
+                                "verify rows length {} != {}", x0.len(),
+                                th * d);
+                self.x0_eval[..th * d].copy_from_slice(x0);
+                self.stats.model_calls += th;
+                self.stats.parallel_rounds += 1;
+                self.stats.round_batches.push(th);
+                self.stats.round_shards.push(exec.shards);
+                self.stats.round_latency_s.push(exec.latency_s);
+                self.scan(th);
+                if self.i_cur == 0 {
+                    self.phase = DraftPhase::Done;
+                    Ok(())
+                } else {
+                    self.stats.iterations += 1;
+                    self.start_window()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddpm::SequentialSampler;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    fn perturbed_oracle(base: &Gmm, k: usize, eps: f64)
+                        -> Arc<GmmDdpmOracle> {
+        let comps = base.weights.len();
+        let means: Vec<Vec<f64>> = (0..comps)
+            .map(|c| {
+                base.mean_of(c)
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| v + eps * if i % 2 == 0 { 1.0 } else { -1.0 })
+                    .collect()
+            })
+            .collect();
+        let gmm = Gmm::new(means, base.sigmas.clone(),
+                           base.weights.clone());
+        GmmDdpmOracle::new(gmm, k, false)
+    }
+
+    #[test]
+    fn identical_draft_never_rejects_and_matches_sequential_bits() {
+        // draft == target => v = 0 at every position (Lemma 13): every
+        // window fully accepts and the trajectory IS the sequential
+        // DDPM trajectory on the same Philox streams, bit for bit.
+        let k = 40;
+        let oracle = GmmDdpmOracle::new(Gmm::circle_2d(), k, false);
+        let seq = SequentialSampler::new(oracle.clone());
+        let mut e = DraftEngine::new(oracle.clone(), oracle,
+                                     DraftConfig { k: 8,
+                                                   ..Default::default() });
+        for seed in 0..6 {
+            let out = e.sample(seed).unwrap();
+            assert_eq!(out.stats.rejected, 0, "seed {seed}");
+            assert_eq!(out.stats.accepted, k);
+            assert_eq!(out.stats.parallel_rounds, k / 8);
+            assert_eq!(out.stats.model_calls, k);
+            assert_eq!(out.stats.draft_calls, k);
+            let (s, _) = seq.sample(seed, &[]).unwrap();
+            let bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(bits(&out.y0), bits(&s), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn all_transitions_consumed_once() {
+        let k = 60;
+        let gmm = Gmm::circle_2d();
+        let target = GmmDdpmOracle::new(gmm.clone(), k, false);
+        let draft = perturbed_oracle(&gmm, k, 0.05);
+        let mut e = DraftEngine::new(target, draft, DraftConfig {
+            k: 8,
+            ..Default::default()
+        });
+        for seed in 0..8 {
+            let out = e.sample(seed).unwrap();
+            assert_eq!(out.stats.accepted + out.stats.rejected, k,
+                       "seed {seed}");
+            // every proposed row was verified in a fused round, and the
+            // draft chain priced every proposal
+            assert_eq!(out.stats.model_calls, out.stats.draft_calls);
+            let sum: usize = out.stats.round_batches.iter().sum();
+            assert_eq!(sum, out.stats.model_calls);
+            assert_eq!(out.stats.round_batches.len(),
+                       out.stats.parallel_rounds);
+            assert_eq!(out.stats.round_shards.len(),
+                       out.stats.parallel_rounds);
+            // one fused round per iteration — no separate propose round
+            assert_eq!(out.stats.parallel_rounds, out.stats.iterations);
+        }
+    }
+
+    #[test]
+    fn close_draft_beats_sequential_rounds() {
+        let k = 80;
+        let gmm = Gmm::circle_2d();
+        let target = GmmDdpmOracle::new(gmm.clone(), k, false);
+        let draft = perturbed_oracle(&gmm, k, 0.02);
+        let mut e = DraftEngine::new(target, draft, DraftConfig {
+            k: 8,
+            ..Default::default()
+        });
+        let mut rounds = 0usize;
+        for seed in 0..6 {
+            rounds += e.sample(seed).unwrap().stats.parallel_rounds;
+        }
+        let mean = rounds as f64 / 6.0;
+        assert!(mean < k as f64 / 3.0,
+                "draft-SD rounds {mean} not well below K={k}");
+    }
+
+    #[test]
+    fn distribution_matches_sequential() {
+        let k = 60;
+        let gmm = Gmm::circle_2d();
+        let target = GmmDdpmOracle::new(gmm.clone(), k, false);
+        let seq = SequentialSampler::new(target.clone());
+        let draft = perturbed_oracle(&gmm, k, 0.15);
+        let mut e = DraftEngine::new(target, draft,
+                                     DraftConfig { k: 6,
+                                                   ..Default::default() });
+        let n = 150;
+        let mut r_seq = 0.0;
+        let mut r_dsd = 0.0;
+        let mut rejected = 0usize;
+        for seed in 0..n {
+            let (s, _) = seq.sample(seed, &[]).unwrap();
+            r_seq += (s[0] * s[0] + s[1] * s[1]).sqrt();
+            let out = e.sample(10_000 + seed).unwrap();
+            rejected += out.stats.rejected;
+            let a = out.y0;
+            r_dsd += (a[0] * a[0] + a[1] * a[1]).sqrt();
+        }
+        // the draft is visibly wrong (it must actually reject) yet the
+        // corrected marginal stays on the target
+        assert!(rejected > 0, "perturbed draft never rejected");
+        let (r_seq, r_dsd) = (r_seq / n as f64, r_dsd / n as f64);
+        assert!((r_seq - r_dsd).abs() < 0.08,
+                "radius mismatch: seq {r_seq} vs draft-sd {r_dsd}");
+        assert!((r_dsd - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn adaptive_controller_drives_the_window() {
+        let k = 60;
+        let gmm = Gmm::circle_2d();
+        let target = GmmDdpmOracle::new(gmm.clone(), k, false);
+        let draft = perturbed_oracle(&gmm, k, 0.05);
+        let mut e = DraftEngine::new(target, draft, DraftConfig {
+            k: 8,
+            adaptive: Some(WindowController::new(2, 24)),
+            ..Default::default()
+        });
+        let mut last_estimate = 0.0;
+        for seed in 0..5 {
+            let out = e.sample(seed).unwrap();
+            assert_eq!(out.stats.accepted + out.stats.rejected, k);
+            let ctl = e.config.adaptive.as_ref()
+                .expect("controller must survive the sample");
+            last_estimate = ctl.acceptance_estimate();
+        }
+        // a close draft must have pushed the estimate above the prior
+        assert!(last_estimate > 0.7, "estimate {last_estimate}");
+    }
+
+    #[test]
+    fn mismatched_draft_is_rejected_at_construction() {
+        let target = GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
+        let wrong_k = GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
+        let noise = NoiseStreams::draw(1, 0, 40, 2);
+        assert!(DraftStepMachine::new(target.clone(), wrong_k, 8, None,
+                                      noise.clone(), &[]).is_err());
+        let wrong_d = GmmDdpmOracle::new(Gmm::random(3, 4, 1.0, 7), 40,
+                                         false);
+        assert!(DraftStepMachine::new(target, wrong_d, 8, None, noise,
+                                      &[]).is_err());
+    }
+}

@@ -75,6 +75,10 @@ pub struct AsdStats {
     pub iterations: usize,
     pub accepted: usize,
     pub rejected: usize,
+    /// draft-model evaluations (draft-SD only; 0 for every other
+    /// sampler) — the chain calls that never hit the round plane but
+    /// must be priced by the Pareto bench
+    pub draft_calls: usize,
     /// batch size of each parallel round (for the latency model)
     pub round_batches: Vec<usize>,
     /// shard occupancy of each parallel round (1 = ran inline; >1 =

@@ -5,15 +5,21 @@
 //!   Algorithm 2), mirroring python/compile/asd_ref.py.
 //! * [`sl_engine`] — SL-native ASD + sequential Euler over a
 //!   [`crate::model::GmmSlOracle`] (theory benches, Thm 4).
-//! * [`adaptive`] — extension: online theta controller driven by the
-//!   observed acceptance rate.
+//! * [`draft`] — draft-model speculative sampling: a cheap draft
+//!   proposes the window sequentially, the target verifies it in one
+//!   fused round through the same GRS (exact by Theorem 12).
+//! * [`adaptive`] — extension: online speculation-window controller
+//!   driven by the observed acceptance rate (shared by ASD and
+//!   draft-SD).
 
 pub mod adaptive;
+pub mod draft;
 pub mod engine;
 pub mod grs;
 pub mod sl_engine;
 
-pub use adaptive::AdaptiveTheta;
+pub use adaptive::{AdaptiveTheta, WindowController};
+pub use draft::{DraftConfig, DraftEngine, DraftStepMachine};
 pub use engine::{AsdConfig, AsdEngine, AsdOutput, AsdStats, AsdStepMachine,
                  KernelBackend};
 pub use grs::grs_native;

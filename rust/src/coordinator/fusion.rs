@@ -42,6 +42,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::asd::draft::DraftStepMachine;
 use crate::asd::engine::AsdStepMachine;
 use crate::asd::AsdStats;
 use crate::coordinator::metrics::Metrics;
@@ -59,21 +60,27 @@ pub(crate) enum Machine {
     Sequential(SequentialStepMachine),
     Asd(Box<AsdStepMachine>),
     Picard(PicardStepMachine),
+    Draft(Box<DraftStepMachine>),
 }
 
 impl Machine {
     /// Build the machine for a request. `model` is the lane's shared
     /// (possibly `ParallelModel`-wrapped) model — machines only read
-    /// its metadata and schedule, never call it.
+    /// its metadata and schedule, never call it. `draft` is the lane's
+    /// paired draft model (raw, unwrapped — its chain runs as cheap
+    /// sequential calls inside the draft machine), required only for
+    /// `SamplerSpec::Draft` requests.
     pub(crate) fn for_request(model: Arc<dyn DenoiseModel>,
+                              draft: Option<Arc<dyn DenoiseModel>>,
                               sampler: SamplerSpec, seed: u64, cond: &[f64])
                               -> Result<Machine> {
         let noise = NoiseStreams::draw(seed, 0, model.k_steps(), model.dim());
         // machine parameters come from the canonical per-spec configs
-        // (SamplerSpec::asd_config / picard_config) — the same source
-        // server::run_sampler builds its engines from, so fused and
-        // solo execution of a request can never drift apart. The pool
-        // field is irrelevant here: machines never call the model.
+        // (SamplerSpec::asd_config / picard_config / draft_config) —
+        // the same source server::run_sampler builds its engines from,
+        // so fused and solo execution of a request can never drift
+        // apart. The pool field is irrelevant here: machines never call
+        // the (target) model.
         Ok(match sampler {
             SamplerSpec::Sequential => Machine::Sequential(
                 SequentialStepMachine::new(model, noise, cond)?),
@@ -91,6 +98,16 @@ impl Machine {
                     model, cfg.window, cfg.tol, cfg.max_sweeps, noise,
                     cond)?)
             }
+            SamplerSpec::Draft(k) => {
+                let draft = draft.ok_or_else(|| anyhow::anyhow!(
+                    "no draft model paired for this variant (pair one \
+                     with Coordinator::pair_draft before submitting \
+                     draft requests)"))?;
+                let cfg = SamplerSpec::draft_config(k,
+                                                    PoolConfig::default());
+                Machine::Draft(Box::new(DraftStepMachine::new(
+                    model, draft, cfg.k, cfg.adaptive, noise, cond)?))
+            }
         })
     }
 
@@ -99,6 +116,7 @@ impl Machine {
             Machine::Sequential(m) => m,
             Machine::Asd(m) => m.as_mut(),
             Machine::Picard(m) => m,
+            Machine::Draft(m) => m.as_mut(),
         }
     }
 
@@ -117,6 +135,10 @@ impl Machine {
                 let st = m.into_stats();
                 (st.model_calls, st.parallel_rounds, None)
             }
+            Machine::Draft(m) => {
+                let st = m.into_stats();
+                (st.model_calls, st.parallel_rounds, Some(st))
+            }
         }
     }
 }
@@ -131,6 +153,9 @@ struct ActiveRequest {
 
 pub(crate) struct FusionScheduler {
     model: Arc<dyn DenoiseModel>,
+    /// paired draft model for `SamplerSpec::Draft` requests on this
+    /// lane (None = draft requests fail cleanly at admission)
+    draft: Option<Arc<dyn DenoiseModel>>,
     /// the lane label this scheduler reports per-lane metrics under
     lane: String,
     active: Vec<ActiveRequest>,
@@ -153,12 +178,14 @@ impl FusionScheduler {
     /// lane drains, a footprint past the cap is released instead of
     /// pinning a burst's memory forever (0 = unbounded, the pre-cap
     /// behavior).
-    pub(crate) fn new(model: Arc<dyn DenoiseModel>, lane: &str,
+    pub(crate) fn new(model: Arc<dyn DenoiseModel>,
+                      draft: Option<Arc<dyn DenoiseModel>>, lane: &str,
                       arena_byte_cap: usize) -> FusionScheduler {
         let mut arena = RoundArena::for_model(model.as_ref());
         arena.set_byte_cap(arena_byte_cap);
         FusionScheduler {
             model,
+            draft,
             lane: lane.to_string(),
             active: Vec::new(),
             arena,
@@ -180,8 +207,9 @@ impl FusionScheduler {
     /// the construction error (bad conditioning shape, ...).
     pub(crate) fn admit(&mut self, job: QueuedJob, metrics: &Metrics) {
         let queued_s = job.enqueued.elapsed().as_secs_f64();
-        match Machine::for_request(self.model.clone(), job.request.sampler,
-                                   job.request.seed, &job.request.cond) {
+        match Machine::for_request(self.model.clone(), self.draft.clone(),
+                                   job.request.sampler, job.request.seed,
+                                   &job.request.cond) {
             Ok(machine) => {
                 metrics.on_lane_admit(&self.lane, queued_s);
                 self.active.push(ActiveRequest {
@@ -350,6 +378,8 @@ impl FusionScheduler {
         let (calls, rounds, asd_stats) = ar.machine.outcome();
         if let Some(st) = &asd_stats {
             metrics.on_round_stats(&st.round_latency_s, &st.round_shards);
+            metrics.on_grs_stats(&self.lane, st.accepted, st.rejected,
+                                 st.iterations);
         }
         metrics.on_complete(ar.queued_s, service_s, calls, rounds, false);
         let _ = ar.job.reply.send(Response {
@@ -416,7 +446,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model.clone(), "gmm", 0);
+        let mut sched = FusionScheduler::new(model.clone(), None, "gmm", 0);
         let (j1, rx1) = queued("gmm", SamplerSpec::Sequential, 5);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 6);
         sched.admit(j1, &metrics);
@@ -457,7 +487,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, "gmm", 0);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0);
         let (j1, rx1) = queued("gmm", SamplerSpec::Asd(8), 1);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 2);
         let (j3, rx3) = queued("gmm", SamplerSpec::Picard(8, 1e-6), 3);
@@ -494,7 +524,7 @@ mod tests {
         let metrics = Metrics::default();
         // a 1-byte cap: any staged round overflows it, so the drain
         // must release the buffers entirely
-        let mut sched = FusionScheduler::new(model, "gmm", 1);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 1);
         let (j, rx) = queued("gmm", SamplerSpec::Sequential, 4);
         sched.admit(j, &metrics);
         let mut ticks = 0usize;
@@ -517,7 +547,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, "gmm", 0);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0);
         let (tx, rx) = channel();
         sched.admit(QueuedJob {
             request: Request {
@@ -543,7 +573,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, "gmm", 0);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0);
         let (j, rx) = queued("gmm", SamplerSpec::Sequential, 9);
         sched.admit(j, &metrics);
         let mut rounds = 0usize;

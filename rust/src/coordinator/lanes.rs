@@ -56,17 +56,23 @@ pub(crate) struct Lane {
 
 impl Lane {
     /// Build the lane for `variant`, snapshotting the model `Arc` once
-    /// — round execution never touches the registry again.
-    /// `arena_byte_cap` bounds the lane arena's burst footprint
-    /// (`ServerConfig::arena_byte_cap`; 0 = unbounded).
+    /// — round execution never touches the registry again. `draft` is
+    /// the variant's paired draft model, resolved once at lane creation
+    /// (None = `SamplerSpec::Draft` requests fail cleanly at
+    /// admission). `arena_byte_cap` bounds the lane arena's burst
+    /// footprint (`ServerConfig::arena_byte_cap`; 0 = unbounded).
     pub(crate) fn new(variant: &str, model: Arc<dyn DenoiseModel>,
+                      draft: Option<Arc<dyn DenoiseModel>>,
                       pool: PoolConfig, arena_byte_cap: usize) -> Lane {
         // one ParallelModel wrapper per lane: fused rounds shard on the
-        // global pool exactly like solo engines' batched rounds
+        // global pool exactly like solo engines' batched rounds. The
+        // draft stays un-wrapped — its chain calls are single-row
+        // `denoise_one`s that never hit the round plane.
         let model = ParallelModel::wrap(model, pool);
         Lane {
             variant: variant.to_string(),
-            sched: FusionScheduler::new(model, variant, arena_byte_cap),
+            sched: FusionScheduler::new(model, draft, variant,
+                                        arena_byte_cap),
             counted: false,
         }
     }
@@ -379,7 +385,7 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         // an idle parked lane is NOT flagged
-        st.release(Box::new(Lane::new("idle", model.clone(),
+        st.release(Box::new(Lane::new("idle", model.clone(), None,
                                       PoolConfig::default(), 0)));
         let mut out = Vec::new();
         st.parked_nonidle(&mut out);
@@ -387,7 +393,7 @@ mod tests {
         // a parked lane with an in-flight machine IS flagged (the
         // panic-recovery path)
         let metrics = Metrics::default();
-        let mut lane = Box::new(Lane::new("busy", model,
+        let mut lane = Box::new(Lane::new("busy", model, None,
                                           PoolConfig::default(), 0));
         let mut batch = vec![job("busy", 1)];
         lane.admit(&mut batch, &metrics);
@@ -420,8 +426,8 @@ mod tests {
         assert!(matches!(st.claim("a"), LaneClaim::Busy));
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
-        let lane = Box::new(Lane::new("a", model, PoolConfig::default(),
-                                      0));
+        let lane = Box::new(Lane::new("a", model, None,
+                                      PoolConfig::default(), 0));
         st.release(lane);
         // parked lane is claimable exactly once
         assert!(matches!(st.claim("a"), LaneClaim::Claimed(_)));

@@ -34,6 +34,12 @@ struct LaneAgg {
     /// largest round-arena footprint (staging buffers + GEMM
     /// workspace) this lane ever reported, bytes
     arena_high_water_bytes: u64,
+    /// GRS verifier outcomes across this lane's speculative requests
+    /// (ASD and draft-SD): transitions accepted / rejected, and the
+    /// speculation windows they were scanned in
+    accepted_steps: u64,
+    rejected_steps: u64,
+    grs_windows: u64,
 }
 
 #[derive(Debug, Default)]
@@ -61,6 +67,11 @@ struct Inner {
     fused_requests: Welford,
     /// worker-pool shards per fused round
     fused_shards: Welford,
+    /// GRS verifier outcomes across all speculative requests (ASD and
+    /// draft-SD) this coordinator served
+    accepted_steps: u64,
+    rejected_steps: u64,
+    grs_windows: u64,
     /// per-variant lane aggregates
     lanes: BTreeMap<String, LaneAgg>,
 }
@@ -115,6 +126,15 @@ pub struct LaneSnapshot {
     /// GEMM workspace) — what a burst leaves resident until the lane
     /// drains past `ServerConfig::arena_byte_cap` and releases
     pub arena_high_water_bytes: u64,
+    /// GRS-accepted transitions across this lane's speculative requests
+    /// (ASD and draft-SD)
+    pub accepted_steps: u64,
+    /// GRS-rejected transitions (each reject ends its window and costs
+    /// a re-speculation)
+    pub rejected_steps: u64,
+    /// mean accepted transitions per speculation window — the observed
+    /// accept-run length the speedup theorems price in
+    pub mean_accept_run: f64,
 }
 
 impl LaneSnapshot {
@@ -154,6 +174,12 @@ pub struct MetricsSnapshot {
     pub mean_fused_requests_per_round: f64,
     /// mean worker-pool shard occupancy of fused rounds
     pub fused_occupancy: f64,
+    /// GRS-accepted transitions across all speculative requests served
+    pub accepted_steps: u64,
+    /// GRS-rejected transitions across all speculative requests served
+    pub rejected_steps: u64,
+    /// mean accepted transitions per speculation window
+    pub mean_accept_run: f64,
     /// per-variant lane aggregates, sorted by lane name
     pub lanes: Vec<LaneSnapshot>,
     /// work-stealing scheduler activity since coordinator start
@@ -248,6 +274,22 @@ impl Metrics {
         self.lock().batched_requests += n as u64;
     }
 
+    /// Record a speculative request's GRS verifier outcome on `lane`:
+    /// `accepted` / `rejected` transitions scanned across `windows`
+    /// speculation windows (from `AsdStats` — ASD and draft-SD both
+    /// report here; sequential and Picard requests never do).
+    pub fn on_grs_stats(&self, lane: &str, accepted: usize, rejected: usize,
+                        windows: usize) {
+        let mut m = self.lock();
+        m.accepted_steps += accepted as u64;
+        m.rejected_steps += rejected as u64;
+        m.grs_windows += windows as u64;
+        let agg = lane_agg(&mut m, lane);
+        agg.accepted_steps += accepted as u64;
+        agg.rejected_steps += rejected as u64;
+        agg.grs_windows += windows as u64;
+    }
+
     /// Record a request's measured per-round latencies and shard
     /// occupancies (from `AsdStats`).
     pub fn on_round_stats(&self, latencies_s: &[f64], shards: &[usize]) {
@@ -293,6 +335,9 @@ impl Metrics {
             } else {
                 m.fused_shards.mean()
             },
+            accepted_steps: m.accepted_steps,
+            rejected_steps: m.rejected_steps,
+            mean_accept_run: accept_run(m.accepted_steps, m.grs_windows),
             lanes: m.lanes.iter()
                 .map(|(name, a)| LaneSnapshot {
                     lane: name.clone(),
@@ -313,10 +358,24 @@ impl Metrics {
                     first_round_ms: a.first_round_s * 1e3,
                     last_round_ms: a.last_round_s * 1e3,
                     arena_high_water_bytes: a.arena_high_water_bytes,
+                    accepted_steps: a.accepted_steps,
+                    rejected_steps: a.rejected_steps,
+                    mean_accept_run: accept_run(a.accepted_steps,
+                                                a.grs_windows),
                 })
                 .collect(),
             pool: pool::global_stats().since(&self.pool_base),
         }
+    }
+}
+
+/// Mean accepted transitions per speculation window (0 when no
+/// speculative request has reported yet).
+fn accept_run(accepted: u64, windows: u64) -> f64 {
+    if windows == 0 {
+        0.0
+    } else {
+        accepted as f64 / windows as f64
     }
 }
 
@@ -416,6 +475,31 @@ mod tests {
         assert!(a.last_round_ms >= a.first_round_ms);
         assert!(a.overlaps(b) || !a.overlaps(b)); // structural smoke
         assert!(s.lane("c").is_none());
+    }
+
+    #[test]
+    fn grs_stats_aggregate_globally_and_per_lane() {
+        let m = Metrics::default();
+        let s0 = m.snapshot();
+        assert_eq!(s0.accepted_steps, 0);
+        assert_eq!(s0.mean_accept_run, 0.0);
+        // lane a: 2 requests — 38+20 accepts, 2+4 rejects, 5+6 windows
+        m.on_grs_stats("a", 38, 2, 5);
+        m.on_grs_stats("a", 20, 4, 6);
+        // lane b: 1 request
+        m.on_grs_stats("b", 10, 0, 2);
+        let s = m.snapshot();
+        assert_eq!(s.accepted_steps, 68);
+        assert_eq!(s.rejected_steps, 6);
+        assert!((s.mean_accept_run - 68.0 / 13.0).abs() < 1e-12);
+        let a = s.lane("a").unwrap();
+        assert_eq!(a.accepted_steps, 58);
+        assert_eq!(a.rejected_steps, 6);
+        assert!((a.mean_accept_run - 58.0 / 11.0).abs() < 1e-12);
+        let b = s.lane("b").unwrap();
+        assert_eq!(b.accepted_steps, 10);
+        assert_eq!(b.rejected_steps, 0);
+        assert!((b.mean_accept_run - 5.0).abs() < 1e-12);
     }
 
     #[test]

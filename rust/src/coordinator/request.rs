@@ -3,7 +3,7 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::asd::{AsdConfig, AsdStats, KernelBackend};
+use crate::asd::{AsdConfig, AsdStats, DraftConfig, KernelBackend};
 use crate::picard::PicardConfig;
 use crate::runtime::pool::PoolConfig;
 
@@ -15,6 +15,11 @@ pub enum SamplerSpec {
     Asd(usize),
     /// window, tol
     Picard(usize, f64),
+    /// draft-model speculative sampling: draft window k (0 = to the
+    /// end). The draft *model* is not part of the spec — it is paired
+    /// per variant at the coordinator (`Coordinator::pair_draft`), so
+    /// the spec stays `Copy` and requests stay variant-addressed.
+    Draft(usize),
 }
 
 impl SamplerSpec {
@@ -37,6 +42,14 @@ impl SamplerSpec {
     pub(crate) fn picard_config(window: usize, tol: f64, pool: PoolConfig)
                                 -> PicardConfig {
         PicardConfig { window, tol, pool, ..PicardConfig::default() }
+    }
+
+    /// Canonical draft-SD config; see [`SamplerSpec::asd_config`]. The
+    /// served paths never use an adaptive controller — a learned,
+    /// order-dependent window would make fused and solo execution
+    /// diverge.
+    pub(crate) fn draft_config(k: usize, pool: PoolConfig) -> DraftConfig {
+        DraftConfig { k, pool, adaptive: None }
     }
 }
 

@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::asd::AsdEngine;
+use crate::asd::{AsdEngine, DraftEngine};
 use crate::coordinator::lanes::{Lane, LaneClaim, LaneState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
@@ -100,6 +100,11 @@ struct Shared {
     /// creation (the lane snapshots its model `Arc`) — never on the
     /// round hot path.
     models: Mutex<HashMap<String, Arc<dyn DenoiseModel>>>,
+    /// draft pairings: target variant name -> draft variant name (both
+    /// must be registered models). Resolved to an `Arc` snapshot once
+    /// per lane creation, exactly like `models` — never locked on the
+    /// round hot path.
+    drafts: Mutex<HashMap<String, String>>,
     config: ServerConfig,
     next_id: AtomicU64,
 }
@@ -128,6 +133,7 @@ impl Coordinator {
             shutdown: AtomicBool::new(false),
             metrics: Metrics::default(),
             models: Mutex::new(HashMap::new()),
+            drafts: Mutex::new(HashMap::new()),
             config: config.clone(),
             next_id: AtomicU64::new(1),
         });
@@ -154,6 +160,24 @@ impl Coordinator {
 
     pub fn has_model(&self, name: &str) -> bool {
         self.shared.models.lock().unwrap().contains_key(name)
+    }
+
+    /// Pair a draft variant with a target variant for
+    /// [`SamplerSpec::Draft`] requests: draft requests addressed to
+    /// `target` verify proposals produced by `draft`'s model. Both
+    /// names must already be registered. The pairing is snapshotted at
+    /// lane creation — pair before the first draft request for the
+    /// variant (an existing lane keeps the pairing it was built with).
+    pub fn pair_draft(&self, target: &str, draft: &str) -> Result<()> {
+        let models = self.shared.models.lock().unwrap();
+        anyhow::ensure!(models.contains_key(target),
+                        "pair_draft: unknown target variant '{target}'");
+        anyhow::ensure!(models.contains_key(draft),
+                        "pair_draft: unknown draft variant '{draft}'");
+        drop(models);
+        self.shared.drafts.lock().unwrap()
+            .insert(target.to_string(), draft.to_string());
+        Ok(())
     }
 
     /// Submit a request; returns the response channel and the assigned
@@ -402,11 +426,18 @@ impl<'a> Driver<'a> {
                     // would answer Busy forever.
                     let built = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            shared.models.lock().unwrap().get(variant)
-                                .cloned()
-                                .map(|m| Box::new(Lane::new(
-                                    variant, m, shared.config.pool,
-                                    shared.config.arena_byte_cap)))
+                            let models = shared.models.lock().unwrap();
+                            models.get(variant).cloned().map(|m| {
+                                // resolve the variant's draft pairing
+                                // (if any) to an Arc snapshot alongside
+                                // the target model
+                                let draft = shared.drafts.lock().unwrap()
+                                    .get(variant)
+                                    .and_then(|d| models.get(d).cloned());
+                                Box::new(Lane::new(
+                                    variant, m, draft, shared.config.pool,
+                                    shared.config.arena_byte_cap))
+                            })
                         }));
                     match built {
                         Ok(Some(lane)) => lane,
@@ -673,17 +704,29 @@ fn model_for(shared: &Shared, variant: &str) -> Option<Arc<dyn DenoiseModel>> {
     shared.models.lock().unwrap().get(variant).cloned()
 }
 
+/// The variant's paired draft model, if one is registered.
+fn draft_for(shared: &Shared, variant: &str)
+             -> Option<Arc<dyn DenoiseModel>> {
+    let name = shared.drafts.lock().unwrap().get(variant).cloned()?;
+    model_for(shared, &name)
+}
+
 fn serve_single(shared: &Shared, job: QueuedJob) {
     let queued_s = job.enqueued.elapsed().as_secs_f64();
     let t0 = Instant::now();
     let req = &job.request;
     let outcome = match model_for(shared, &req.variant) {
         None => Err(format!("unknown model '{}'", req.variant)),
-        Some(model) => run_sampler(model, req, shared.config.pool),
+        Some(model) => {
+            let draft = draft_for(shared, &req.variant);
+            run_sampler(model, draft, req, shared.config.pool)
+        }
     };
     let service_s = t0.elapsed().as_secs_f64();
     if let Ok((_, _, _, Some(st))) = &outcome {
         shared.metrics.on_round_stats(&st.round_latency_s, &st.round_shards);
+        shared.metrics.on_grs_stats(&req.variant, st.accepted, st.rejected,
+                                    st.iterations);
     }
     let resp = match outcome {
         Ok((sample, calls, rounds, asd_stats)) => Response {
@@ -710,7 +753,8 @@ fn serve_single(shared: &Shared, job: QueuedJob) {
 type SampleOutcome =
     std::result::Result<(Vec<f64>, usize, usize, Option<crate::asd::AsdStats>), String>;
 
-fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
+fn run_sampler(model: Arc<dyn DenoiseModel>,
+               draft: Option<Arc<dyn DenoiseModel>>, req: &Request,
                pool: PoolConfig) -> SampleOutcome {
     match req.sampler {
         SamplerSpec::Sequential => {
@@ -740,6 +784,26 @@ fn run_sampler(model: Arc<dyn DenoiseModel>, req: &Request,
             sampler
                 .sample(req.seed, &req.cond)
                 .map(|(y, st)| (y, st.model_calls, st.parallel_rounds, None))
+                .map_err(|e| e.to_string())
+        }
+        SamplerSpec::Draft(k) => {
+            let Some(draft) = draft else {
+                return Err(
+                    "no draft model paired for this variant (pair one \
+                     with Coordinator::pair_draft before submitting \
+                     draft requests)".to_string());
+            };
+            // canonical config shared with the fused path — see
+            // SamplerSpec::draft_config
+            let mut engine = DraftEngine::new(
+                model, draft, SamplerSpec::draft_config(k, pool));
+            engine
+                .sample_cond(req.seed, &req.cond)
+                .map(|out| {
+                    let calls = out.stats.model_calls;
+                    let rounds = out.stats.parallel_rounds;
+                    (out.y0, calls, rounds, Some(out.stats))
+                })
                 .map_err(|e| e.to_string())
         }
     }

@@ -11,6 +11,8 @@ pub use quality::{format_quality_table, QualityRow};
 pub use serve_bench::{bench_coordinator, bench_coordinator_json,
                       bench_mixed_variants, format_coord_rows,
                       format_lanes, CoordBenchRow, MixedVariantBench};
-pub use speedup::{bench_parallel_json, format_pool_rows, format_rows,
-                  outputs_bit_identical, sweep_pool_sizes, sweep_thetas,
-                  write_bench_json, ForwardBenchRow, PoolRow, SpeedupRow};
+pub use speedup::{bench_parallel_json, bench_pareto_grid,
+                  bench_pareto_json, format_pareto_rows, format_pool_rows,
+                  format_rows, outputs_bit_identical, run_pareto_grid,
+                  sweep_pool_sizes, sweep_thetas, write_bench_json,
+                  ForwardBenchRow, ParetoRow, PoolRow, SpeedupRow};

@@ -16,11 +16,14 @@
 //!   window overlapped the others' (lanes' round tasks ran
 //!   concurrently instead of back to back).
 //!
-//! Schema v3: rows carry a `lanes` array and a `pool` object with the
+//! Schema v4: rows carry a `lanes` array and a `pool` object with the
 //! work-stealing scheduler's counters (entries executed / stolen /
 //! injected, lane round tasks) accumulated over that row's run; the
 //! document carries an optional `mixed_variants` section with its own
-//! `pool` object.
+//! `pool` object. v4 adds the GRS verifier outcome per lane
+//! (`accepted_steps` / `rejected_steps` / `mean_accept_run`) — the
+//! observed accept-run length speculative samplers (ASD, draft-SD)
+//! achieve under serving traffic.
 
 use std::sync::Arc;
 
@@ -228,6 +231,9 @@ fn lane_json(l: &LaneSnapshot) -> Json {
         ("last_round_ms", Json::Num(l.last_round_ms)),
         ("arena_high_water_bytes",
          Json::Num(l.arena_high_water_bytes as f64)),
+        ("accepted_steps", Json::Num(l.accepted_steps as f64)),
+        ("rejected_steps", Json::Num(l.rejected_steps as f64)),
+        ("mean_accept_run", Json::Num(l.mean_accept_run)),
     ])
 }
 
@@ -269,15 +275,15 @@ fn mixed_json(b: &MixedVariantBench) -> Json {
     ])
 }
 
-/// Assemble the `BENCH_coordinator.json` document (schema v3: per-row
-/// `lanes` arrays + `pool` scheduler counters + optional
-/// `mixed_variants` section).
+/// Assemble the `BENCH_coordinator.json` document (schema v4: per-row
+/// `lanes` arrays with GRS accept/reject outcomes + `pool` scheduler
+/// counters + optional `mixed_variants` section).
 pub fn bench_coordinator_json(variant: &str, k: usize,
                               rows: &[CoordBenchRow],
                               mixed: Option<&MixedVariantBench>) -> Json {
     let mut fields = vec![
         ("bench", Json::Str("bench_coordinator".into())),
-        ("schema_version", Json::Num(3.0)),
+        ("schema_version", Json::Num(4.0)),
         ("variant", Json::Str(variant.to_string())),
         ("k", Json::Num(k as f64)),
         ("pool_threads",
@@ -366,7 +372,7 @@ mod tests {
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_coordinator");
         assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
-                   3);
+                   4);
         let rs = back.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[1].get("concurrency").unwrap().as_usize().unwrap(), 4);
@@ -375,6 +381,14 @@ mod tests {
         assert!(lanes[0].get("fused_rows_per_round").unwrap()
                     .as_f64().unwrap() > 1.0);
         assert!(lanes[0].get("mean_queue_wait_ms").is_ok());
+        // schema v4: the GRS outcome rode along — the mix includes ASD
+        // requests, so the lane must have accepted transitions and a
+        // positive mean accept-run length
+        assert!(lanes[0].get("accepted_steps").unwrap()
+                    .as_f64().unwrap() > 0.0);
+        assert!(lanes[0].get("mean_accept_run").unwrap()
+                    .as_f64().unwrap() > 0.0);
+        assert!(lanes[0].get("rejected_steps").is_ok());
         // the scheduler counters rode along: fused rounds flow through
         // the pool's round-task registry
         let pool = rs[1].get("pool").unwrap();

@@ -544,6 +544,361 @@ pub fn write_bench_json(path: &std::path::Path, doc: &Json) -> Result<()> {
         .with_context(|| format!("writing {}", path.display()))
 }
 
+// ---------------------------------------------------------------------
+// Pareto grid: sequential vs ASD vs SL-ASD vs draft-SD
+// ---------------------------------------------------------------------
+
+/// One `BENCH_pareto.json` measurement: one sampler on one grid cell
+/// (a target × draft × precision pairing). Every cell emits four rows —
+/// sequential DDPM, ASD, SL-ASD and draft-SD — so the speedup-vs-cost
+/// frontier can be read per cell.
+#[derive(Debug, Clone)]
+pub struct ParetoRow {
+    /// cell label: target × draft pairing this row was measured in
+    pub cell: String,
+    pub target: String,
+    /// draft variant ("-" for samplers that use no draft)
+    pub draft: String,
+    /// draft weight-panel precision ("f32" | "int8"; "-" = no draft /
+    /// analytic oracle draft)
+    pub precision: String,
+    /// "sequential" | "asd" | "sl_asd" | "draft_sd"
+    pub sampler: String,
+    /// target chain steps K
+    pub k: usize,
+    /// speculation window (theta for ASD/SL-ASD, draft window for
+    /// draft-SD; 0 for sequential)
+    pub k_window: usize,
+    pub accept_rate: f64,
+    pub mean_rounds: f64,
+    pub mean_wall_s: f64,
+    pub mean_model_calls: f64,
+    /// draft chain calls per sample (0 for draft-free samplers)
+    pub mean_draft_calls: f64,
+    /// draft FLOPs / target FLOPs per model call (0 = no draft; 1 =
+    /// analytic oracle draft priced at parity)
+    pub flops_ratio: f64,
+    /// K / mean_rounds — the Theorem 4 round-compression quantity
+    pub alg_speedup: f64,
+}
+
+/// Forward FLOPs of one MLP call under `info`'s layout (2·n_in·n_out
+/// per layer; bias and activation noise ignored — panel precision does
+/// not change the count, only the bytes).
+pub fn mlp_flops(info: &crate::model::VariantInfo) -> f64 {
+    info.weights_layout.iter()
+        .map(|&(a, b)| 2.0 * a as f64 * b as f64)
+        .sum()
+}
+
+/// A GMM whose component means are shifted by `eps` (alternating sign
+/// per coordinate) — the analytic stand-in for an imperfect draft: the
+/// draft's x0hat is wrong by O(eps), so the GRS accept rate degrades
+/// smoothly with eps.
+fn perturbed_gmm(base: &crate::model::Gmm, eps: f64) -> crate::model::Gmm {
+    let comps = base.weights.len();
+    let means: Vec<Vec<f64>> = (0..comps)
+        .map(|c| {
+            base.mean_of(c).iter().enumerate()
+                .map(|(i, &v)| v + eps * if i % 2 == 0 { 1.0 } else { -1.0 })
+                .collect()
+        })
+        .collect();
+    crate::model::Gmm::new(means, base.sigmas.clone(), base.weights.clone())
+}
+
+/// Everything one Pareto cell needs: the target/draft models, the cell
+/// labels, and the matched-d GMM the SL-ASD leg runs on.
+struct ParetoCell {
+    cell: String,
+    target_name: String,
+    draft_name: String,
+    precision: String,
+    target: Arc<dyn DenoiseModel>,
+    draft: Arc<dyn DenoiseModel>,
+    /// GMM for the SL-ASD leg (the cell's own GMM for analytic cells;
+    /// a matched-dimension companion for native-MLP cells, where no
+    /// analytic SL oracle exists)
+    sl_gmm: crate::model::Gmm,
+    flops_ratio: f64,
+}
+
+/// Run all four samplers on one cell and emit the four rows.
+fn pareto_cell_rows(cell: &ParetoCell, k_window: usize, n_samples: usize,
+                    seed0: u64) -> Result<Vec<ParetoRow>> {
+    use crate::asd::{DraftConfig, DraftEngine, SlAsd};
+    use crate::ddpm::SequentialSampler;
+    use crate::model::GmmSlOracle;
+    use crate::schedule::SlGrid;
+
+    let k = cell.target.k_steps();
+    let n = n_samples.max(1);
+    let nf = n as f64;
+    let row = |sampler: &str, k_window: usize, accept_rate: f64,
+               rounds: f64, wall: f64, calls: f64, draft_calls: f64,
+               flops_ratio: f64| {
+        ParetoRow {
+            cell: cell.cell.clone(),
+            target: cell.target_name.clone(),
+            draft: if flops_ratio > 0.0 {
+                cell.draft_name.clone()
+            } else {
+                "-".into()
+            },
+            precision: if flops_ratio > 0.0 {
+                cell.precision.clone()
+            } else {
+                "-".into()
+            },
+            sampler: sampler.to_string(),
+            k,
+            k_window,
+            accept_rate,
+            mean_rounds: rounds / nf,
+            mean_wall_s: wall / nf,
+            mean_model_calls: calls / nf,
+            mean_draft_calls: draft_calls / nf,
+            flops_ratio,
+            alg_speedup: k as f64 / (rounds / nf).max(1e-12),
+        }
+    };
+    let mut rows = Vec::with_capacity(4);
+
+    // sequential DDPM: the 1x baseline (every transition is trivially
+    // "accepted" — there is no verifier)
+    let seq = SequentialSampler::new(cell.target.clone());
+    let mut wall = 0.0;
+    for s in 0..n {
+        let t0 = std::time::Instant::now();
+        seq.sample(seed0 + s as u64, &[])?;
+        wall += t0.elapsed().as_secs_f64();
+    }
+    rows.push(row("sequential", 0, 1.0, (n * k) as f64, wall,
+                  (n * k) as f64, 0.0, 0.0));
+
+    // ASD: draft-free autospeculation at theta = k_window
+    let mut engine = AsdEngine::new(cell.target.clone(), AsdConfig {
+        theta: k_window,
+        eval_tail: true,
+        backend: KernelBackend::Native,
+        ..Default::default()
+    });
+    let (mut rounds, mut calls, mut acc, mut rej, mut wall) =
+        (0usize, 0usize, 0usize, 0usize, 0.0);
+    for s in 0..n {
+        let out = engine.sample(seed0 + s as u64)?;
+        rounds += out.stats.parallel_rounds;
+        calls += out.stats.model_calls;
+        acc += out.stats.accepted;
+        rej += out.stats.rejected;
+        wall += out.wallclock_s;
+    }
+    rows.push(row("asd", k_window,
+                  acc as f64 / (acc + rej).max(1) as f64, rounds as f64,
+                  wall, calls as f64, 0.0, 0.0));
+
+    // SL-ASD: autospeculation over the SL Euler chain on the cell's
+    // (companion) GMM, same K and theta — the Thm-4 theory leg
+    let oracle = GmmSlOracle { gmm: cell.sl_gmm.clone() };
+    let grid = SlGrid::uniform(300.0, k);
+    let sl = SlAsd { oracle: &oracle, grid: &grid, theta: k_window };
+    let (mut rounds, mut calls, mut acc, mut rej, mut wall) =
+        (0usize, 0usize, 0usize, 0usize, 0.0);
+    for s in 0..n {
+        let t0 = std::time::Instant::now();
+        let (_, st) = sl.sample(seed0 + s as u64);
+        wall += t0.elapsed().as_secs_f64();
+        rounds += st.parallel_rounds;
+        calls += st.oracle_calls;
+        acc += st.accepted;
+        rej += st.rejected;
+    }
+    rows.push(row("sl_asd", k_window,
+                  acc as f64 / (acc + rej).max(1) as f64, rounds as f64,
+                  wall, calls as f64, 0.0, 0.0));
+
+    // draft-SD: the cell's draft proposes, the target verifies in one
+    // fused round per window
+    let mut engine = DraftEngine::new(cell.target.clone(),
+                                      cell.draft.clone(), DraftConfig {
+                                          k: k_window,
+                                          ..Default::default()
+                                      });
+    let (mut rounds, mut calls, mut dcalls, mut acc, mut rej, mut wall) =
+        (0usize, 0usize, 0usize, 0usize, 0usize, 0.0);
+    for s in 0..n {
+        let out = engine.sample(seed0 + s as u64)?;
+        rounds += out.stats.parallel_rounds;
+        calls += out.stats.model_calls;
+        dcalls += out.stats.draft_calls;
+        acc += out.stats.accepted;
+        rej += out.stats.rejected;
+        wall += out.wallclock_s;
+    }
+    rows.push(row("draft_sd", k_window,
+                  acc as f64 / (acc + rej).max(1) as f64, rounds as f64,
+                  wall, calls as f64, dcalls as f64, cell.flops_ratio));
+    Ok(rows)
+}
+
+/// The speedup-vs-cost Pareto grid: sequential vs ASD vs SL-ASD vs
+/// draft-SD across target sizes × draft configs × precision tiers.
+///
+/// * **Analytic cells** (always run): GMM DDPM oracles at two target
+///   sizes, each paired with perturbed-means oracle drafts at two
+///   error levels (`eps`) — the draft costs exactly one oracle call,
+///   so `flops_ratio = 1` and the frontier isolates the *accept-rate*
+///   axis.
+/// * **Native cells** (skipped when `analytic_only`): `NativeMlp` toys
+///   at two hidden widths, drafts distilled from the target's own
+///   weights (`model::distill`) at two fold factors, the cheaper one
+///   additionally quantized to int8 panels — `flops_ratio < 1`
+///   exercises the *cost* axis. SL-ASD runs on a matched-dimension
+///   companion GMM in these cells (no analytic SL oracle exists for an
+///   MLP).
+pub fn bench_pareto_grid(analytic_only: bool, n_samples: usize,
+                         k_window: usize, seed0: u64)
+                         -> Result<Vec<ParetoRow>> {
+    use crate::math::isa::{IsaRequest, KernelPolicy, Precision};
+    use crate::model::{distill_draft, synth_group_constant, Gmm,
+                       GmmDdpmOracle, NativeMlp, VariantInfo};
+
+    let k_window = k_window.max(1);
+    let mut rows = Vec::new();
+
+    // ---- analytic cells: 2 target sizes x 2 draft error levels ----
+    let targets: Vec<(&str, Gmm, usize)> = vec![
+        ("gmm-d2-K96", Gmm::circle_2d(), 96),
+        ("gmm-d8-K192", Gmm::random(8, 6, 1.5, 17), 192),
+    ];
+    for (tname, gmm, k) in &targets {
+        let target = GmmDdpmOracle::new(gmm.clone(), *k, false);
+        for eps in [0.02, 0.10] {
+            let dname = format!("oracle-eps{eps}");
+            let draft = GmmDdpmOracle::new(perturbed_gmm(gmm, eps), *k,
+                                           false);
+            let cell = ParetoCell {
+                cell: format!("{tname}/{dname}"),
+                target_name: tname.to_string(),
+                draft_name: dname,
+                precision: "-".into(),
+                target: target.clone(),
+                draft,
+                sl_gmm: gmm.clone(),
+                flops_ratio: 1.0,
+            };
+            rows.extend(pareto_cell_rows(&cell, k_window, n_samples,
+                                         seed0)?);
+        }
+    }
+    if analytic_only {
+        return Ok(rows);
+    }
+
+    // ---- native cells: 2 target widths x {fold-4 f32, fold-8 int8} --
+    // group-constant-plus-jitter weights make the distilled draft a
+    // faithful-but-imperfect approximation of the target (the jitter is
+    // what the fold averages away), so accept rates land strictly
+    // inside (0, 1)
+    let natives: Vec<(&str, usize, usize)> = vec![
+        ("mlp-h48", 48, 1),
+        ("mlp-h96", 96, 2),
+    ];
+    for (tname, hidden, blocks) in &natives {
+        let info = VariantInfo::toy(tname, 2, 0, *hidden, *blocks, 64);
+        let flat = synth_group_constant(&info, 8, 0.02, 0xC0FFEE)?;
+        let target = NativeMlp::from_flat(&info, &flat)?;
+        let t_flops = mlp_flops(&info);
+        for (fold, precision) in [(4usize, Precision::F32),
+                                  (8usize, Precision::Int8)] {
+            let (dinfo, dflat) = distill_draft(&info, &flat, fold)?;
+            let draft = NativeMlp::from_flat_with(
+                &dinfo, &dflat,
+                KernelPolicy { isa: IsaRequest::Auto, precision })?;
+            let cell = ParetoCell {
+                cell: format!("{tname}/{}-{}", dinfo.name,
+                              precision.name()),
+                target_name: tname.to_string(),
+                draft_name: dinfo.name.clone(),
+                precision: precision.name().to_string(),
+                target: target.clone(),
+                draft,
+                sl_gmm: Gmm::circle_2d(),
+                flops_ratio: mlp_flops(&dinfo) / t_flops,
+            };
+            rows.extend(pareto_cell_rows(&cell, k_window, n_samples,
+                                         seed0)?);
+        }
+    }
+    Ok(rows)
+}
+
+fn pareto_row_json(r: &ParetoRow) -> Json {
+    Json::obj(vec![
+        ("cell", Json::Str(r.cell.clone())),
+        ("target", Json::Str(r.target.clone())),
+        ("draft", Json::Str(r.draft.clone())),
+        ("precision", Json::Str(r.precision.clone())),
+        ("sampler", Json::Str(r.sampler.clone())),
+        ("k", Json::Num(r.k as f64)),
+        ("k_window", Json::Num(r.k_window as f64)),
+        ("accept_rate", Json::Num(r.accept_rate)),
+        ("mean_rounds", Json::Num(r.mean_rounds)),
+        ("mean_wall_s", Json::Num(r.mean_wall_s)),
+        ("mean_model_calls", Json::Num(r.mean_model_calls)),
+        ("mean_draft_calls", Json::Num(r.mean_draft_calls)),
+        ("flops_ratio", Json::Num(r.flops_ratio)),
+        ("alg_speedup", Json::Num(r.alg_speedup)),
+    ])
+}
+
+/// Assemble the `BENCH_pareto.json` document (schema v1: one row per
+/// cell × sampler, four samplers per cell).
+pub fn bench_pareto_json(rows: &[ParetoRow]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("bench_pareto".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("pool_threads",
+         Json::Num(crate::runtime::pool::default_threads() as f64)),
+        ("samplers", Json::Arr(
+            ["sequential", "asd", "sl_asd", "draft_sd"].iter()
+                .map(|s| Json::Str((*s).into())).collect())),
+        ("rows", Json::Arr(rows.iter().map(pareto_row_json).collect())),
+    ])
+}
+
+/// Render the Pareto grid as a table, one line per (cell, sampler).
+pub fn format_pareto_rows(rows: &[ParetoRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:<10} {:>6} {:>8} {:>8} {:>10} {:>8} {:>10}\n",
+        "cell", "sampler", "win", "accept", "rounds", "alg x", "flops",
+        "wall ms"));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<28} {:<10} {:>6} {:>8.3} {:>8.1} {:>10.2} {:>8.3} \
+             {:>10.2}\n",
+            r.cell, r.sampler, r.k_window, r.accept_rate, r.mean_rounds,
+            r.alg_speedup, r.flops_ratio, r.mean_wall_s * 1e3));
+    }
+    out
+}
+
+/// The full Pareto pipeline shared by `benches/bench_parallel.rs` and
+/// `asd pareto`: run the grid, print the table, write the
+/// `BENCH_pareto.json` document to `path`, and return the rows. One
+/// definition, so the CLI artifact and the bench artifact can never
+/// silently diverge.
+pub fn run_pareto_grid(analytic_only: bool, n_samples: usize,
+                       k_window: usize, path: &std::path::Path)
+                       -> Result<Vec<ParetoRow>> {
+    let rows = bench_pareto_grid(analytic_only, n_samples, k_window, 4242)?;
+    print!("{}", format_pareto_rows(&rows));
+    write_bench_json(path, &bench_pareto_json(&rows))?;
+    println!("wrote {} ({} rows)", path.display(), rows.len());
+    Ok(rows)
+}
+
 /// Render the pool sweep as a table: both speedup columns side by side.
 pub fn format_pool_rows(k: usize, rows: &[PoolRow]) -> String {
     let base = rows.first().map(|r| r.pool_size).unwrap_or(1);
@@ -691,6 +1046,108 @@ mod tests {
         let table = format_gemm_rows(&rows);
         assert!(table.contains("packed2d") && table.contains("GFLOP/s")
                 && table.contains("precision") && table.contains("int8"));
+    }
+
+    #[test]
+    fn pareto_grid_analytic_cells_cover_all_four_samplers() {
+        let rows = bench_pareto_grid(true, 3, 6, 11).unwrap();
+        // 2 targets x 2 draft eps levels x 4 samplers
+        assert_eq!(rows.len(), 16);
+        let cells: std::collections::BTreeSet<&str> =
+            rows.iter().map(|r| r.cell.as_str()).collect();
+        assert_eq!(cells.len(), 4);
+        for cell in &cells {
+            let samplers: Vec<&str> = rows.iter()
+                .filter(|r| r.cell == *cell)
+                .map(|r| r.sampler.as_str())
+                .collect();
+            assert_eq!(samplers,
+                       vec!["sequential", "asd", "sl_asd", "draft_sd"],
+                       "cell {cell}");
+        }
+        for r in &rows {
+            assert!(r.accept_rate > 0.0 && r.accept_rate <= 1.0, "{r:?}");
+            assert!(r.mean_rounds > 0.0 && r.mean_wall_s > 0.0, "{r:?}");
+            match r.sampler.as_str() {
+                "sequential" => {
+                    assert_eq!(r.mean_rounds, r.k as f64);
+                    assert_eq!(r.flops_ratio, 0.0);
+                    assert_eq!(r.mean_draft_calls, 0.0);
+                }
+                "draft_sd" => {
+                    // analytic drafts are priced at oracle parity and
+                    // the chain calls every transition exactly once
+                    assert_eq!(r.flops_ratio, 1.0);
+                    assert!(r.mean_draft_calls >= r.k as f64);
+                }
+                _ => assert_eq!(r.flops_ratio, 0.0),
+            }
+        }
+        // the tentpole claim on the large-target / accurate-draft cell:
+        // draft-SD verifies each window in ONE round where ASD pays
+        // propose + verify, so with a close draft it wins on rounds
+        let cheap = rows.iter()
+            .find(|r| r.cell.contains("K192") && r.cell.contains("0.02")
+                      && r.sampler == "draft_sd").unwrap();
+        let asd = rows.iter()
+            .find(|r| r.cell == cheap.cell && r.sampler == "asd").unwrap();
+        assert!(cheap.mean_rounds < asd.mean_rounds,
+                "draft-SD {} rounds vs ASD {} rounds",
+                cheap.mean_rounds, asd.mean_rounds);
+    }
+
+    #[test]
+    fn pareto_native_cells_price_the_draft_below_the_target() {
+        let rows = bench_pareto_grid(false, 1, 6, 5).unwrap();
+        // 4 analytic cells + (2 widths x 2 draft configs) native cells
+        assert_eq!(rows.len(), 32);
+        let native: Vec<&ParetoRow> = rows.iter()
+            .filter(|r| r.cell.starts_with("mlp-") &&
+                        r.sampler == "draft_sd")
+            .collect();
+        assert_eq!(native.len(), 4);
+        for r in &native {
+            assert!(r.flops_ratio > 0.0 && r.flops_ratio < 1.0,
+                    "distilled draft must be cheaper: {r:?}");
+            assert!(r.accept_rate > 0.0, "{r:?}");
+        }
+        // both precision tiers made it into the grid
+        assert!(native.iter().any(|r| r.precision == "f32"));
+        assert!(native.iter().any(|r| r.precision == "int8"));
+        // the fold-8 draft is cheaper than the fold-4 draft
+        let f4 = native.iter()
+            .find(|r| r.cell.contains("mlp-h96") && r.precision == "f32")
+            .unwrap();
+        let f8 = native.iter()
+            .find(|r| r.cell.contains("mlp-h96") && r.precision == "int8")
+            .unwrap();
+        assert!(f8.flops_ratio < f4.flops_ratio);
+    }
+
+    #[test]
+    fn pareto_json_roundtrips_schema_v1() {
+        let rows = bench_pareto_grid(true, 1, 8, 3).unwrap();
+        let doc = bench_pareto_json(&rows);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
+                   "bench_pareto");
+        assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
+                   1);
+        let samplers = back.get("samplers").unwrap().as_arr().unwrap();
+        assert_eq!(samplers.len(), 4);
+        let rs = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), rows.len());
+        let dsd = rs.iter()
+            .find(|r| r.get("sampler").unwrap().as_str().unwrap()
+                      == "draft_sd")
+            .expect("a draft_sd row");
+        for field in ["accept_rate", "mean_rounds", "mean_wall_s",
+                      "flops_ratio", "alg_speedup"] {
+            assert!(dsd.get(field).unwrap().as_f64().is_ok(),
+                    "missing {field}");
+        }
+        let table = format_pareto_rows(&rows);
+        assert!(table.contains("draft_sd") && table.contains("accept"));
     }
 
     #[test]

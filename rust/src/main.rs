@@ -10,6 +10,10 @@
 //!                                 GMM workload: measured wall-clock
 //!                                 speedup next to the algorithmic
 //!                                 rounds speedup (no artifacts needed)
+//!   pareto   [...]                speedup-vs-cost Pareto grid: sequential
+//!                                 vs ASD vs SL-ASD vs draft-model
+//!                                 speculative sampling across target ×
+//!                                 draft × precision cells
 //!
 //! Examples live in examples/ (quickstart, image_generation,
 //! robot_control, serve, scaling_law).
@@ -18,11 +22,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use asd::asd::{AsdConfig, AsdEngine, KernelBackend};
+use asd::asd::{AsdConfig, AsdEngine, DraftConfig, DraftEngine,
+               KernelBackend};
 use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
 use asd::ddpm::SequentialSampler;
 use asd::math::isa::{IsaRequest, KernelPolicy, Precision};
-use asd::model::NativeMlp;
+use asd::model::{distill_draft, NativeMlp};
 use asd::runtime::Runtime;
 use asd::util::cli::Args;
 
@@ -55,6 +60,7 @@ fn main() {
         "sample" => cmd_sample(&args),
         "serve" => cmd_serve(&args),
         "pool" => cmd_pool(&args),
+        "pareto" => cmd_pareto(&args),
         _ => {
             print_help();
             Ok(())
@@ -73,7 +79,8 @@ fn print_help() {
          COMMANDS:\n  \
          info                       list artifact variants\n  \
          sample --model <v>         sample; options: --n 4 --theta 8\n    \
-         [--sampler asd|ddpm] [--seed 0] [--native] [--hlo-kernels]\n    \
+         [--sampler asd|ddpm|draft] [--seed 0] [--native] [--hlo-kernels]\n    \
+         [--draft-fold 4] (draft sampler: distill hidden/fold draft)\n    \
          [--gemm-isa auto|portable|avx2|neon] (native GEMM kernels)\n    \
          [--gemm-precision f32|f16|int8] (native packed-panel store)\n  \
          serve  --model <v>         synthetic serving trace; options:\n    \
@@ -89,7 +96,11 @@ fn print_help() {
          [--d 64] [--components 96] [--k 150] [--theta 16] [--n 4]\n    \
          [--pool-sizes 1,2,4,8] [--shard-min 2] [--json out.json]\n    \
          [--gemm-grid] (time ref/v1/packed/packed2d GEMM kernels over\n    \
-         the shape grid) [--gemm-json BENCH_gemm.json] [--gemm-reps 3]\n"
+         the shape grid) [--gemm-json BENCH_gemm.json] [--gemm-reps 3]\n  \
+         pareto                     speedup-vs-cost Pareto grid over\n    \
+         sequential / ASD / SL-ASD / draft-SD; artifact-free; options:\n    \
+         [--analytic] (GMM cells only, skip native MLP cells)\n    \
+         [--n 4] [--k 8] [--json BENCH_pareto.json]\n"
     );
 }
 
@@ -178,7 +189,49 @@ fn cmd_sample(args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown sampler '{other}' (use asd|ddpm)"),
+        "draft" => {
+            // distill a cheap draft from the target's own weights and
+            // run draft-model speculative sampling: the draft proposes
+            // --theta-step windows sequentially, the target verifies
+            // each window in one fused round
+            let fold = args.get_usize("draft-fold", 4)?.max(2);
+            let info = rt.manifest.variant(variant)?;
+            let path = rt.manifest.dir.join(&info.weights_file);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            if bytes.len() % 4 != 0 {
+                bail!("weights file not a multiple of 4 bytes");
+            }
+            let flat: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let (dinfo, dflat) = distill_draft(info, &flat, fold)?;
+            let policy = kernel_policy_from_args(args)?;
+            let draft: Arc<dyn asd::model::DenoiseModel> =
+                NativeMlp::from_flat_with(&dinfo, &dflat, policy)?;
+            println!("draft: {} (hidden {} -> {}, fold {fold})",
+                     dinfo.name, info.hidden, dinfo.hidden);
+            let mut e = DraftEngine::new(
+                model, draft,
+                DraftConfig { k: theta, ..Default::default() });
+            for i in 0..n {
+                let out = e.sample_cond(seed0 + i as u64, &cond)?;
+                println!(
+                    "sample {i}: {} rounds ({} target + {} draft calls, \
+                     {:.2}x alg speedup), {:.1} ms, acc {:.3}, \
+                     y[0..4]={:?}",
+                    out.stats.parallel_rounds,
+                    out.stats.model_calls,
+                    out.stats.draft_calls,
+                    out.stats.algorithmic_speedup(k),
+                    out.wallclock_s * 1e3,
+                    out.stats.acceptance_rate(),
+                    &out.y0[..out.y0.len().min(4)]
+                );
+            }
+        }
+        other => bail!("unknown sampler '{other}' (use asd|ddpm|draft)"),
     }
     Ok(())
 }
@@ -390,4 +443,18 @@ fn cmd_pool(args: &Args) -> Result<()> {
             tile_shards, 1, reps, std::path::Path::new(gemm_path))?;
     }
     Ok(())
+}
+
+/// Speedup-vs-cost Pareto grid: sequential DDPM vs ASD vs SL-ASD vs
+/// draft-model speculative sampling across target-size × draft-size ×
+/// precision cells. Artifact-free (analytic GMM oracles plus synthetic
+/// native MLPs), so the frontier — including the draft-SD
+/// rounds-vs-FLOPs trade — reproduces anywhere the crate builds.
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 4)?;
+    let k_window = args.get_usize("k", 8)?;
+    let analytic_only = args.flag("analytic");
+    let path = args.get("json").unwrap_or("BENCH_pareto.json");
+    asd::exp::speedup::run_pareto_grid(
+        analytic_only, n, k_window, std::path::Path::new(path))
 }

@@ -1,0 +1,289 @@
+//! Deterministic draft-model synthesis: width-fold distillation of a
+//! `NativeMlp` variant into a narrow draft for speculative sampling.
+//!
+//! The draft path (see `asd::draft`) needs a cheap model whose x0hat
+//! predictions track the target closely enough that GRS accepts long
+//! runs. We obtain one *deterministically* — no training loop — by
+//! folding the target's hidden width by an integer factor `fold`:
+//! every group of `fold` consecutive hidden units collapses into one
+//! draft unit. The folding rule is chosen so that whenever the target's
+//! weights are *group-constant* (all units in a group identical), the
+//! draft computes exactly the same function:
+//!
+//! * input layer `(n_in, H) -> (n_in, G)`: mean over each out-group
+//!   (group-equal activations stay equal through SiLU);
+//! * hidden blocks `(H, H) -> (G, G)`: sum over the in-group of the
+//!   mean over the out-group (the sum absorbs the `fold`-fold
+//!   replication of equal inputs);
+//! * output layer `(H, d) -> (G, d)`: sum over the in-group, bias
+//!   unchanged (exact for *any* output weights once the hidden
+//!   activations are group-constant);
+//! * biases: mean over each out-group (output bias unchanged).
+//!
+//! On real (non-group-constant) targets the draft is an approximation
+//! whose quality degrades smoothly with intra-group weight variance —
+//! exactly the accept-rate knob the Pareto bench sweeps. The draft
+//! reuses the target's schedule (`abar`), dims and conditioning, so it
+//! is loadable through the same `NativeMlp::from_flat` /
+//! `from_flat_with` route (and packable to f16/int8 panels).
+
+use anyhow::Result;
+
+use crate::model::VariantInfo;
+
+/// Validate that `info`'s layout is the standard MLP shape (input
+/// layer, residual hidden blocks, output layer) and that `fold` evenly
+/// divides the hidden width. Returns the draft hidden width.
+fn check_fold(info: &VariantInfo, fold: usize) -> Result<usize> {
+    anyhow::ensure!(fold >= 1, "fold must be >= 1 (got {fold})");
+    let h = info.hidden;
+    anyhow::ensure!(h > 0 && h % fold == 0,
+                    "hidden width {h} is not divisible by fold {fold}");
+    let nl = info.weights_layout.len();
+    anyhow::ensure!(nl >= 2, "layout needs input + output layers");
+    anyhow::ensure!(info.weights_layout[0].1 == h,
+                    "input layer out-width {} != hidden {h}",
+                    info.weights_layout[0].1);
+    for &(a, b) in &info.weights_layout[1..nl - 1] {
+        anyhow::ensure!(a == h && b == h,
+                        "hidden block ({a}, {b}) is not ({h}, {h})");
+    }
+    anyhow::ensure!(info.weights_layout[nl - 1] == (h, info.d),
+                    "output layer {:?} != ({h}, {})",
+                    info.weights_layout[nl - 1], info.d);
+    Ok(h / fold)
+}
+
+/// Distill a flat target weight buffer into a width-folded draft.
+/// Returns the draft's `VariantInfo` (same dims/schedule, hidden width
+/// divided by `fold`, name suffixed `-draft{fold}`, no artifacts) and
+/// its flat weight buffer, loadable via `NativeMlp::from_flat[_with]`.
+pub fn distill_draft(info: &VariantInfo, flat: &[f32], fold: usize)
+                     -> Result<(VariantInfo, Vec<f32>)> {
+    let g = check_fold(info, fold)?;
+    anyhow::ensure!(flat.len() == info.weights_len(),
+                    "flat weights length {} != layout length {}",
+                    flat.len(), info.weights_len());
+
+    let mut draft = info.clone();
+    draft.name = format!("{}-draft{}", info.name, fold);
+    draft.hidden = g;
+    draft.artifacts = Default::default();
+    draft.weights_file = String::new();
+    let nl = info.weights_layout.len();
+    draft.weights_layout = info
+        .weights_layout
+        .iter()
+        .enumerate()
+        .map(|(li, &(a, b))| {
+            let a = if li == 0 { a } else { g };
+            let b = if li == nl - 1 { b } else { g };
+            (a, b)
+        })
+        .collect();
+
+    let inv = 1.0f32 / fold as f32;
+    let mut out = Vec::with_capacity(draft.weights_len());
+    let mut src = 0usize;
+    for (li, &(n_in, n_out)) in info.weights_layout.iter().enumerate() {
+        let w = &flat[src..src + n_in * n_out];
+        let b = &flat[src + n_in * n_out..src + n_in * n_out + n_out];
+        src += n_in * n_out + n_out;
+        let (first, last) = (li == 0, li == nl - 1);
+        if last {
+            // (H, d): sum over in-groups; bias unchanged
+            for gi in 0..g {
+                for o in 0..n_out {
+                    let mut s = 0.0f32;
+                    for i in gi * fold..(gi + 1) * fold {
+                        s += w[i * n_out + o];
+                    }
+                    out.push(s);
+                }
+            }
+            out.extend_from_slice(b);
+        } else if first {
+            // (n_in, H): mean over out-groups
+            for i in 0..n_in {
+                for go in 0..g {
+                    let mut s = 0.0f32;
+                    for o in go * fold..(go + 1) * fold {
+                        s += w[i * n_out + o];
+                    }
+                    out.push(s * inv);
+                }
+            }
+            for go in 0..g {
+                let mut s = 0.0f32;
+                for o in go * fold..(go + 1) * fold {
+                    s += b[o];
+                }
+                out.push(s * inv);
+            }
+        } else {
+            // (H, H): sum over in-group of the mean over out-group
+            for gi in 0..g {
+                for go in 0..g {
+                    let mut s = 0.0f32;
+                    for i in gi * fold..(gi + 1) * fold {
+                        for o in go * fold..(go + 1) * fold {
+                            s += w[i * n_out + o];
+                        }
+                    }
+                    out.push(s * inv);
+                }
+            }
+            for go in 0..g {
+                let mut s = 0.0f32;
+                for o in go * fold..(go + 1) * fold {
+                    s += b[o];
+                }
+                out.push(s * inv);
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), draft.weights_len());
+    Ok((draft, out))
+}
+
+/// splitmix64-style hash to a deterministic value in (-0.5, 0.5).
+fn unit(seed: u64, tag: u64) -> f32 {
+    let mut z = seed
+        .wrapping_add(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(tag.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+}
+
+fn tag(layer: usize, a: usize, b: usize) -> u64 {
+    ((layer as u64) << 48) ^ ((a as u64) << 24) ^ b as u64
+}
+
+/// Deterministically synthesize target weights whose intra-group
+/// variance is controlled by `jitter`: at `jitter == 0` every weight is
+/// exactly group-constant w.r.t. `fold`-sized hidden groups, so
+/// [`distill_draft`] reproduces the target function up to f32
+/// summation-order rounding; growing `jitter` degrades the draft
+/// smoothly (the accept-rate knob for tests and the Pareto bench).
+pub fn synth_group_constant(info: &VariantInfo, fold: usize, jitter: f32,
+                            seed: u64) -> Result<Vec<f32>> {
+    let _ = check_fold(info, fold)?;
+    let nl = info.weights_layout.len();
+    let scale = 0.4f32;
+    let mut out = Vec::with_capacity(info.weights_len());
+    for (li, &(n_in, n_out)) in info.weights_layout.iter().enumerate() {
+        let (first, last) = (li == 0, li == nl - 1);
+        for i in 0..n_in {
+            for o in 0..n_out {
+                // group-constant base: input layer keys on (i, group(o)),
+                // hidden blocks on (group(i), group(o)), output layer is
+                // free (exactness needs no structure there)
+                let base = if last {
+                    tag(li, i, o)
+                } else if first {
+                    tag(li, i, o / fold)
+                } else {
+                    tag(li, i / fold, o / fold)
+                };
+                let mut v = scale * unit(seed, base);
+                if jitter > 0.0 {
+                    v += jitter * unit(seed ^ 0xD1F7, tag(li, i, o + 1));
+                }
+                out.push(v);
+            }
+        }
+        for o in 0..n_out {
+            let base = if last { tag(li, n_in, o) } else { tag(li, n_in, o / fold) };
+            let mut v = scale * unit(seed, base ^ 0xB1A5);
+            if jitter > 0.0 {
+                v += jitter * unit(seed ^ 0xD1F7, tag(li, n_in, o + 1) ^ 0xB1A5);
+            }
+            out.push(v);
+        }
+    }
+    debug_assert_eq!(out.len(), info.weights_len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DenoiseModel, NativeMlp};
+
+    fn probe(model: &dyn DenoiseModel, t: usize) -> Vec<f64> {
+        let d = model.dim();
+        let y: Vec<f64> =
+            (0..d).map(|i| 0.3 * (i as f64 + 1.0) - 0.5).collect();
+        let mut out = vec![0.0; d];
+        model.denoise_one(&y, t, &[], &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn distill_is_exact_on_group_constant_weights() {
+        let info = VariantInfo::toy("dtgt", 3, 0, 24, 2, 12);
+        let flat = synth_group_constant(&info, 4, 0.0, 9).unwrap();
+        let (dinfo, dflat) = distill_draft(&info, &flat, 4).unwrap();
+        assert_eq!(dinfo.hidden, 6);
+        assert_eq!(dinfo.name, "dtgt-draft4");
+        assert_eq!(dflat.len(), dinfo.weights_len());
+        let target = NativeMlp::from_flat(&info, &flat).unwrap();
+        let draft = NativeMlp::from_flat(&dinfo, &dflat).unwrap();
+        for t in [1usize, 6, 12] {
+            let a = probe(target.as_ref(), t);
+            let b = probe(draft.as_ref(), t);
+            for (x, y) in a.iter().zip(&b) {
+                // summation-order f32 rounding only
+                assert!((x - y).abs() < 1e-3,
+                        "t={t}: target {x} vs draft {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_degrades_the_draft_smoothly() {
+        let info = VariantInfo::toy("djit", 2, 0, 16, 1, 10);
+        let mut errs = Vec::new();
+        for jitter in [0.0f32, 0.05, 0.3] {
+            let flat = synth_group_constant(&info, 4, jitter, 5).unwrap();
+            let (dinfo, dflat) = distill_draft(&info, &flat, 4).unwrap();
+            let target = NativeMlp::from_flat(&info, &flat).unwrap();
+            let draft = NativeMlp::from_flat(&dinfo, &dflat).unwrap();
+            let a = probe(target.as_ref(), 5);
+            let b = probe(draft.as_ref(), 5);
+            let err: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert!(err.is_finite());
+            errs.push(err);
+        }
+        assert!(errs[0] < 1e-3, "jitter=0 not exact: {}", errs[0]);
+        assert!(errs[2] > errs[0],
+                "jitter did not degrade the draft: {errs:?}");
+    }
+
+    #[test]
+    fn distill_rejects_bad_folds() {
+        let info = VariantInfo::toy("dbad", 2, 0, 24, 1, 10);
+        let flat = vec![0.0f32; info.weights_len()];
+        assert!(distill_draft(&info, &flat, 0).is_err());
+        assert!(distill_draft(&info, &flat, 5).is_err());
+        assert!(distill_draft(&info, &flat[..10], 4).is_err());
+    }
+
+    #[test]
+    fn draft_keeps_dims_and_schedule() {
+        let info = VariantInfo::toy("dkeep", 4, 2, 32, 2, 20);
+        let flat = synth_group_constant(&info, 8, 0.1, 1).unwrap();
+        let (dinfo, _) = distill_draft(&info, &flat, 8).unwrap();
+        assert_eq!((dinfo.d, dinfo.cond_dim, dinfo.k_steps), (4, 2, 20));
+        assert_eq!(dinfo.hidden, 4);
+        assert_eq!(dinfo.abar, info.abar);
+        assert!(dinfo.artifacts.is_empty());
+        assert_eq!(dinfo.weights_layout.first().unwrap().0,
+                   info.weights_layout.first().unwrap().0);
+        assert_eq!(dinfo.weights_layout.last().unwrap().1, 4);
+    }
+}

@@ -14,7 +14,11 @@
 //! * [`parallel`] — sharded-execution decorator running `denoise_batch`
 //!   rows concurrently on the global worker pool (bit-identical
 //!   outputs; see rust/src/runtime/pool.rs).
+//! * [`distill`] — deterministic width-fold distillation producing the
+//!   cheap draft variants the draft-speculative sampler pairs with a
+//!   target (see `asd::draft`).
 
+pub mod distill;
 pub mod gmm;
 pub mod manifest;
 pub mod mlp;
@@ -23,6 +27,7 @@ pub mod targets;
 
 use anyhow::Result;
 
+pub use distill::{distill_draft, synth_group_constant};
 pub use gmm::{Gmm, GmmDdpmOracle, GmmSlOracle};
 pub use manifest::{Manifest, TargetSpec, VariantInfo};
 pub use mlp::{NativeMlp, Workspace};

@@ -2,21 +2,24 @@
 //!
 //! Extends tests/test_parallel_determinism.rs from the worker-pool
 //! layer up to the serving layer: a mixed burst (ASD + Picard +
-//! sequential on one variant) served through the coordinator's fused
-//! mega-batches must reproduce, bit for bit, the samples each request
-//! would get from its solo sampler — at every pool size. This holds
-//! because each request's `StepSampler` machine consumes only its own
-//! Philox streams and native models are row-independent
-//! (`model::parallel`), so fusing rows across requests changes
-//! wall-clock, never samples.
+//! sequential + draft-SD on one variant) served through the
+//! coordinator's fused mega-batches must reproduce, bit for bit, the
+//! samples each request would get from its solo sampler — at every
+//! pool size. This holds because each request's `StepSampler` machine
+//! consumes only its own Philox streams and native models are
+//! row-independent (`model::parallel`), so fusing rows across requests
+//! changes wall-clock, never samples. Draft-SD rides the same
+//! argument: the draft chain runs machine-internal, and the target's
+//! verify rows are just more rows on the fused round plane.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use asd::asd::{AsdConfig, AsdEngine};
+use asd::asd::{AsdConfig, AsdEngine, DraftConfig, DraftEngine};
 use asd::coordinator::{Coordinator, Request, SamplerSpec, ServerConfig};
 use asd::ddpm::SequentialSampler;
-use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle, NativeMlp, VariantInfo};
+use asd::model::{distill_draft, DenoiseModel, Gmm, GmmDdpmOracle,
+                 NativeMlp, VariantInfo};
 use asd::picard::{PicardConfig, PicardSampler};
 use asd::runtime::pool::PoolConfig;
 
@@ -27,6 +30,25 @@ fn model() -> Arc<dyn DenoiseModel> {
     GmmDdpmOracle::new(Gmm::random(8, 6, 1.5, 3), K, false)
 }
 
+/// An imperfect draft for [`model`]: the same GMM with component means
+/// shifted by 0.05 (alternating sign per coordinate), so the GRS
+/// verifier must actually reject some windows — the determinism claim
+/// has to survive rejection/resample, not just the all-accept path.
+fn draft_model() -> Arc<dyn DenoiseModel> {
+    let base = Gmm::random(8, 6, 1.5, 3);
+    let means: Vec<Vec<f64>> = (0..base.weights.len())
+        .map(|c| {
+            base.mean_of(c).iter().enumerate()
+                .map(|(i, &v)| {
+                    v + 0.05 * if i % 2 == 0 { 1.0 } else { -1.0 }
+                })
+                .collect()
+        })
+        .collect();
+    let gmm = Gmm::new(means, base.sigmas.clone(), base.weights.clone());
+    GmmDdpmOracle::new(gmm, K, false)
+}
+
 fn bits(v: &[f64]) -> Vec<u64> {
     asd::math::vec_ops::to_bits_vec(v)
 }
@@ -34,12 +56,13 @@ fn bits(v: &[f64]) -> Vec<u64> {
 /// The burst: 3 of each sampler kind, same specs the coordinator's
 /// fusion layer builds machines with.
 fn burst_specs() -> Vec<(SamplerSpec, u64)> {
-    (0..9u64)
+    (0..12u64)
         .map(|i| {
-            let spec = match i % 3 {
+            let spec = match i % 4 {
                 0 => SamplerSpec::Sequential,
                 1 => SamplerSpec::Asd(8),
-                _ => SamplerSpec::Picard(8, 1e-6),
+                2 => SamplerSpec::Picard(8, 1e-6),
+                _ => SamplerSpec::Draft(8),
             };
             (spec, 1000 + i)
         })
@@ -47,7 +70,9 @@ fn burst_specs() -> Vec<(SamplerSpec, u64)> {
 }
 
 /// Solo reference sample for one (spec, seed), no coordinator involved.
-fn solo_sample(model: &Arc<dyn DenoiseModel>, spec: SamplerSpec, seed: u64)
+/// `draft` is only consulted for `SamplerSpec::Draft`.
+fn solo_sample(model: &Arc<dyn DenoiseModel>,
+               draft: &Arc<dyn DenoiseModel>, spec: SamplerSpec, seed: u64)
                -> Vec<f64> {
     match spec {
         SamplerSpec::Sequential => {
@@ -66,15 +91,24 @@ fn solo_sample(model: &Arc<dyn DenoiseModel>, spec: SamplerSpec, seed: u64)
                                ..Default::default() });
             p.sample(seed, &[]).unwrap().0
         }
+        SamplerSpec::Draft(k) => {
+            // same canonical config the coordinator builds machines
+            // with (no adaptive controller on served paths)
+            let mut e = DraftEngine::new(
+                model.clone(), draft.clone(),
+                DraftConfig { k, ..Default::default() });
+            e.sample(seed).unwrap().y0
+        }
     }
 }
 
 #[test]
 fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
     let model = model();
+    let draft = draft_model();
     let specs = burst_specs();
     let want: Vec<Vec<u64>> = specs.iter()
-        .map(|&(spec, seed)| bits(&solo_sample(&model, spec, seed)))
+        .map(|&(spec, seed)| bits(&solo_sample(&model, &draft, spec, seed)))
         .collect();
 
     for pool_size in POOL_SIZES {
@@ -86,6 +120,8 @@ fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
             ..Default::default()
         }).unwrap();
         c.register_model("gmm", model.clone());
+        c.register_model("gmm-draft", draft.clone());
+        c.pair_draft("gmm", "gmm-draft").unwrap();
         let mut rxs = Vec::new();
         for &(spec, seed) in &specs {
             rxs.push(c.submit(Request {
@@ -109,41 +145,48 @@ fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
 }
 
 /// A toy in-memory MLP variant (NativeMlp GEMM backend) for the
-/// mixed-variant burst: same layout the benches use, pseudo-random
-/// weights, K = 40.
-fn toy_mlp() -> Arc<dyn DenoiseModel> {
+/// mixed-variant burst — same layout the benches use, pseudo-random
+/// weights, K = 40 — plus a fold-4 draft distilled from its own
+/// weights (the native draft/target pairing the serving stack ships).
+fn toy_mlp_with_draft() -> (Arc<dyn DenoiseModel>, Arc<dyn DenoiseModel>) {
     let info = VariantInfo::toy("toy", 3, 0, 16, 1, 40);
     let n_w = info.weights_len();
     let flat: Vec<f32> =
         (0..n_w).map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5).collect();
-    NativeMlp::from_flat(&info, &flat).unwrap()
+    let target = NativeMlp::from_flat(&info, &flat).unwrap();
+    let (dinfo, dflat) = distill_draft(&info, &flat, 4).unwrap();
+    let draft = NativeMlp::from_flat(&dinfo, &dflat).unwrap();
+    (target, draft)
 }
 
 #[test]
 fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
     // acceptance criterion: a concurrent two-variant burst (analytic
-    // GMM oracle + toy NativeMlp, all three sampler kinds) must be
+    // GMM oracle + toy NativeMlp, all four sampler kinds) must be
     // bit-identical to solo execution at pool sizes 1/2/8, AND both
     // variant lanes must fuse rows (no lane served per-request, no
     // cross-variant head-of-line blocking)
     let gmm = model();
-    let mlp = toy_mlp();
-    let variants: [(&str, &Arc<dyn DenoiseModel>); 2] =
-        [("gmm", &gmm), ("toy", &mlp)];
-    // 6 requests per variant, rotating sampler kinds, interleaved
-    let burst: Vec<(usize, SamplerSpec, u64)> = (0..12u64)
+    let gmm_draft = draft_model();
+    let (mlp, mlp_draft) = toy_mlp_with_draft();
+    let variants: [(&str, &Arc<dyn DenoiseModel>,
+                    &Arc<dyn DenoiseModel>); 2] =
+        [("gmm", &gmm, &gmm_draft), ("toy", &mlp, &mlp_draft)];
+    // 8 requests per variant, rotating sampler kinds, interleaved
+    let burst: Vec<(usize, SamplerSpec, u64)> = (0..16u64)
         .map(|i| {
-            let spec = match (i / 2) % 3 {
+            let spec = match (i / 2) % 4 {
                 0 => SamplerSpec::Sequential,
                 1 => SamplerSpec::Asd(8),
-                _ => SamplerSpec::Picard(8, 1e-6),
+                2 => SamplerSpec::Picard(8, 1e-6),
+                _ => SamplerSpec::Draft(8),
             };
             ((i % 2) as usize, spec, 3000 + i)
         })
         .collect();
     let want: Vec<Vec<u64>> = burst.iter()
         .map(|&(v, spec, seed)| {
-            bits(&solo_sample(variants[v].1, spec, seed))
+            bits(&solo_sample(variants[v].1, variants[v].2, spec, seed))
         })
         .collect();
 
@@ -155,8 +198,11 @@ fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
             pool: PoolConfig { pool_size, shard_min: 1 },
             ..Default::default()
         }).unwrap();
-        for (name, m) in variants {
+        for (name, m, d) in variants {
             c.register_model(name, (*m).clone());
+            let dname = format!("{name}-draft");
+            c.register_model(&dname, (*d).clone());
+            c.pair_draft(name, &dname).unwrap();
         }
         let rxs: Vec<_> = burst.iter()
             .map(|&(v, spec, seed)| {
@@ -179,8 +225,8 @@ fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
                        variants[burst[i].0].0, burst[i].1);
         }
         let m = c.metrics();
-        assert_eq!(m.completed, 12);
-        for (name, _) in variants {
+        assert_eq!(m.completed, 16);
+        for (name, _, _) in variants {
             let lane = m.lane(name)
                 .unwrap_or_else(|| panic!("no lane '{name}'"));
             assert!(lane.fused_rounds > 0,
@@ -205,6 +251,8 @@ fn fused_burst_actually_fuses_rows_per_round() {
         ..Default::default()
     }).unwrap();
     c.register_model("gmm", model);
+    c.register_model("gmm-draft", draft_model());
+    c.pair_draft("gmm", "gmm-draft").unwrap();
     let rxs: Vec<_> = burst_specs().into_iter()
         .map(|(spec, seed)| {
             c.submit(Request {
@@ -220,7 +268,7 @@ fn fused_burst_actually_fuses_rows_per_round() {
         assert!(rx.recv().unwrap().error.is_none());
     }
     let m = c.metrics();
-    assert_eq!(m.completed, 9);
+    assert_eq!(m.completed, 12);
     assert!(m.fused_rounds > 0, "no fused rounds ran");
     assert!(m.fused_rows_per_round > 1.0,
             "fused_rows_per_round {} — burst was served per-request",
@@ -233,6 +281,7 @@ fn solo_sized_group_matches_dedicated_engines_repeatedly() {
     // fusion groups of size 1 (requests trickling in) must also stay
     // bit-identical to the engines — the degenerate fused path
     let model = model();
+    let draft = draft_model();
     let c = Coordinator::new(ServerConfig {
         workers: 1,
         max_batch: 8,
@@ -240,7 +289,9 @@ fn solo_sized_group_matches_dedicated_engines_repeatedly() {
         ..Default::default()
     }).unwrap();
     c.register_model("gmm", model.clone());
-    for &(spec, seed) in &burst_specs()[..3] {
+    c.register_model("gmm-draft", draft.clone());
+    c.pair_draft("gmm", "gmm-draft").unwrap();
+    for &(spec, seed) in &burst_specs()[..4] {
         let (_, rx) = c.submit(Request {
             id: 0,
             variant: "gmm".into(),
@@ -251,7 +302,8 @@ fn solo_sized_group_matches_dedicated_engines_repeatedly() {
         // recv before the next submit: each request runs alone
         let r = rx.recv().unwrap();
         assert!(r.error.is_none());
-        assert_eq!(bits(&r.sample), bits(&solo_sample(&model, spec, seed)),
+        assert_eq!(bits(&r.sample),
+                   bits(&solo_sample(&model, &draft, spec, seed)),
                    "solo-group {spec:?} changed bits");
     }
     c.shutdown();

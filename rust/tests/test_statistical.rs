@@ -3,13 +3,17 @@
 //!
 //! * Thm 3: ASD output law == sequential DDPM output law (two-sample KS
 //!   per coordinate + radial statistic).
+//! * Thm 3 / Lemma 13 for draft-model speculation: draft-SD output law
+//!   == sequential DDPM output law even under an imperfect draft (the
+//!   GRS verifier corrects the draft's proposal bias exactly).
 //! * Thm 1: SL increments are exchangeable (moment symmetry).
 //! * Thm 12: GRS rejection rate equals the Gaussian TV distance
 //!   (swept over ||v||/sigma by the property harness).
 
 mod common;
 
-use asd::asd::{grs_native, AsdConfig, AsdEngine, KernelBackend};
+use asd::asd::{grs_native, AsdConfig, AsdEngine, DraftConfig, DraftEngine,
+               KernelBackend};
 use asd::ddpm::SequentialSampler;
 use asd::math::erf::gaussian_tv;
 use asd::math::stats::{ks_critical, ks_statistic};
@@ -41,6 +45,63 @@ fn asd_law_equals_sequential_law_ks() {
     let crit = ks_critical(n, n, 0.001);
     let d_x = ks_statistic(&seq_x, &asd_x);
     let d_r = ks_statistic(&seq_r, &asd_r);
+    assert!(d_x < crit, "x-coordinate KS {d_x} >= {crit}");
+    assert!(d_r < crit, "radius KS {d_r} >= {crit}");
+}
+
+#[test]
+fn draft_sd_law_equals_sequential_law_ks() {
+    // draft-model speculative sampling with a deliberately WRONG draft
+    // (component means shifted by 0.05, alternating sign) must still
+    // reproduce the sequential DDPM law exactly: the target's GRS
+    // verifier accepts/resamples so the draft only affects round
+    // counts, never the output distribution.
+    let k = 60;
+    let eps = 0.05;
+    let gmm = Gmm::circle_2d();
+    let comps = gmm.weights.len();
+    let shifted: Vec<Vec<f64>> = (0..comps)
+        .map(|c| {
+            gmm.mean_of(c).iter().enumerate()
+                .map(|(i, &v)| {
+                    v + eps * if i % 2 == 0 { 1.0 } else { -1.0 }
+                })
+                .collect()
+        })
+        .collect();
+    let draft_gmm = Gmm::new(shifted, gmm.sigmas.clone(),
+                             gmm.weights.clone());
+    let target = GmmDdpmOracle::new(gmm, k, false);
+    let draft = GmmDdpmOracle::new(draft_gmm, k, false);
+    let seq = SequentialSampler::new(target.clone());
+    let mut engine = DraftEngine::new(
+        target, draft, DraftConfig { k: 8, ..Default::default() });
+    let n = 500;
+    let mut seq_x = Vec::with_capacity(n);
+    let mut seq_r = Vec::with_capacity(n);
+    let mut dsd_x = Vec::with_capacity(n);
+    let mut dsd_r = Vec::with_capacity(n);
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    for s in 0..n as u64 {
+        let (y, _) = seq.sample(s, &[]).unwrap();
+        seq_x.push(y[0]);
+        seq_r.push((y[0] * y[0] + y[1] * y[1]).sqrt());
+        let out = engine.sample(1_000_000 + s).unwrap();
+        dsd_x.push(out.y0[0]);
+        dsd_r.push((out.y0[0].powi(2) + out.y0[1].powi(2)).sqrt());
+        accepted += out.stats.accepted;
+        rejected += out.stats.rejected;
+    }
+    // the imperfect draft must actually get rejected sometimes (else
+    // this leg degenerates to the v=0 bit-identity invariant) while
+    // still being useful (accept rate well above chance)
+    assert!(rejected > 0, "eps={eps} draft was never rejected");
+    let acc_rate = accepted as f64 / (accepted + rejected) as f64;
+    assert!(acc_rate > 0.5, "draft acceptance collapsed: {acc_rate}");
+    let crit = ks_critical(n, n, 0.001);
+    let d_x = ks_statistic(&seq_x, &dsd_x);
+    let d_r = ks_statistic(&seq_r, &dsd_r);
     assert!(d_x < crit, "x-coordinate KS {d_x} >= {crit}");
     assert!(d_r < crit, "radius KS {d_r} >= {crit}");
 }
