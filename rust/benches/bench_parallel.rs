@@ -149,11 +149,12 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
 
-    // --- GEMM shape grid: ref / v1 / packed / packed+2D-sharded -------
+    // --- GEMM shape grid: ref / v1 / packed / packed2d / chains -------
     // square training-ish shapes AND the small-M serve shapes where the
-    // 2-D (M×N) split is what keeps the pool busy. Emits BENCH_gemm.json
-    // (every kernel's output is bit-checked against gemm_ref inside the
-    // grid runner before its timing counts).
+    // 2-D (M×N) split is what keeps the pool busy, plus the 3-GEMM
+    // chain cells (barrier chain2d vs tile-graph pipelined). Emits
+    // BENCH_gemm.json (every kernel's output is bit-checked against
+    // gemm_ref inside the grid runner before its timing counts).
     let tile_shards = default_threads().clamp(1, 8);
     println!("[GEMM shape grid, tile_shards={tile_shards}]");
     let gemm_rows = run_gemm_grid(tile_shards, 2, 8,
@@ -175,6 +176,18 @@ fn main() -> anyhow::Result<()> {
         })
         .fold(f64::INFINITY, f64::min);
     println!("worst small-M packed2d/v1 gain: {small_m_gain:.2}x\n");
+    // worst small-M pipelined-vs-chain2d ratio: the tile graph runs
+    // the identical 3-layer chain without the two layer-boundary
+    // barriers, so it must not lose to the barrier schedule
+    let chain_gain = gemm_serve_shapes()
+        .iter()
+        .filter(|(m, _, _)| *m <= 16)
+        .map(|&(m, _, _)| {
+            gflops(&gemm_rows, m, "pipelined")
+                / gflops(&gemm_rows, m, "chain2d").max(1e-12)
+        })
+        .fold(f64::INFINITY, f64::min);
+    println!("worst small-M pipelined/chain2d gain: {chain_gain:.2}x\n");
 
     // --- ASD: verify rounds sharded across the pool -------------------
     let k = 150;
@@ -264,6 +277,12 @@ fn main() -> anyhow::Result<()> {
                 "packed+2D GEMM must reach {min_gain:.2}x the v1 kernel \
                  at small-M serve shapes with {tile_shards} tile shards, \
                  got {small_m_gain:.2}x (see BENCH_gemm.json)");
+        let min_chain = env_f64("ASD_BENCH_MIN_CHAIN_GAIN", 1.0);
+        assert!(chain_gain >= min_chain,
+                "pipelined tile graph must reach {min_chain:.2}x the \
+                 chain2d barrier schedule at small-M serve shapes with \
+                 {tile_shards} tile shards, got {chain_gain:.2}x (see \
+                 BENCH_gemm.json)");
     }
     Ok(())
 }

@@ -13,10 +13,15 @@
 //!    machine write its demanded rows **directly into the lane's
 //!    arena** (`StepSampler::poll_into`; no mega-batch pack copy).
 //! 2. [`FusionScheduler::execute_round`] — one fused `denoise_round`
-//!    over the arena (through the lane's `ParallelModel` wrapper, so
-//!    the global worker pool shards the fused rows; the native backend
-//!    converts f64→f32 once into the arena's per-lane GEMM workspace).
-//!    Runs lock-free — safe to execute concurrently with other lanes.
+//!    over the arena (through the lane's `ParallelModel` wrapper; the
+//!    native backend converts f64→f32 once into the arena's per-lane
+//!    GEMM workspace). Runs lock-free — safe to execute concurrently
+//!    with other lanes. Graph-capable backends skip this opaque form:
+//!    [`FusionScheduler::compile_round`] emits the round as a
+//!    dependency-counted tile graph the driver hands to the pool
+//!    (zero intra-round barriers, tiles of many lanes interleave),
+//!    and [`FusionScheduler::complete_round`] stages the execution
+//!    report when the round's single completion notification arrives.
 //! 3. [`FusionScheduler::finish_round`] — scatter phase: resume every
 //!    machine from a *view* into the arena's output region
 //!    (`StepSampler::resume_from`; no scatter copy).
@@ -50,7 +55,7 @@ use crate::coordinator::request::{QueuedJob, Response, SamplerSpec};
 use crate::ddpm::{NoiseStreams, SequentialStepMachine};
 use crate::model::DenoiseModel;
 use crate::picard::PicardStepMachine;
-use crate::runtime::pool::PoolConfig;
+use crate::runtime::pool::{PoolConfig, TileGraph};
 use crate::sampler::{ArenaSpan, RoundArena, RoundExec, SamplerPoll,
                      StepSampler};
 
@@ -168,6 +173,9 @@ pub(crate) struct FusionScheduler {
     round: Option<RoundExec>,
     /// fused-call error staged for `finish_round` to fail the group
     round_err: Option<String>,
+    /// (t0, shards) staged by `compile_round` for `complete_round` to
+    /// turn into the execution report once the pool finishes the graph
+    staged_graph: Option<(Instant, usize)>,
 }
 
 impl FusionScheduler {
@@ -192,6 +200,7 @@ impl FusionScheduler {
             spans: Vec::new(),
             round: None,
             round_err: None,
+            staged_graph: None,
         }
     }
 
@@ -236,6 +245,7 @@ impl FusionScheduler {
         self.spans.clear();
         self.round = None;
         self.round_err = None;
+        self.staged_graph = None;
         let mut completed = 0usize;
         let mut idx = 0usize;
         while idx < self.active.len() {
@@ -285,21 +295,88 @@ impl FusionScheduler {
         !self.spans.is_empty()
     }
 
-    /// Phase 2 — execute the fused call over the arena. Takes no locks
-    /// and touches only lane-owned state, so lane drivers co-schedule
-    /// many lanes' `execute_round`s concurrently on the global pool.
-    /// Panics inside the model call (including re-raised pool shard
-    /// panics) are contained here and fail the group like an `Err` —
-    /// a panicking model must not unwind the lane driver, which would
-    /// leave this lane's variant claimed and unservable forever.
-    pub(crate) fn execute_round(&mut self) {
+    /// Phase 2a (graph path) — compile the fused round into a
+    /// barrier-free tile graph for the driver to submit straight to
+    /// the worker pool, instead of wrapping the whole round in one
+    /// opaque `execute_round` task. Returns `None` when the model has
+    /// no graph form (the driver falls back to `execute_round`) or
+    /// when compilation failed — the error is staged, so a subsequent
+    /// `execute_round` no-ops and `finish_round` fails the group.
+    /// Round latency is stamped from here: it covers graph build plus
+    /// pool execution, directly comparable to `execute_round`'s span.
+    /// The returned graph holds raw pointers into the lane's arena —
+    /// sound under the standing driver contract that an inflight
+    /// lane's state is untouched until its completion arrives.
+    pub(crate) fn compile_round(&mut self) -> Option<TileGraph> {
         if self.spans.is_empty() {
+            return None;
+        }
+        let t0 = Instant::now();
+        let shards = self.model.round_shards(self.arena.rows());
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                self.model.compile_round(&mut self.arena)
+            }));
+        match outcome {
+            Ok(Ok(Some(graph))) => {
+                self.staged_graph = Some((t0, shards));
+                Some(graph)
+            }
+            Ok(Ok(None)) => None,
+            Ok(Err(e)) => {
+                self.round_err = Some(e.to_string());
+                None
+            }
+            Err(_) => {
+                self.round_err = Some(
+                    "model call panicked during round compilation".into());
+                None
+            }
+        }
+    }
+
+    /// Phase 2b (graph path) — the driver observed the round's
+    /// completion notification from the pool: turn the staged stamp
+    /// into the execution report `finish_round` reads. `panicked`
+    /// relays the pool's tile-panic flag; it fails the group exactly
+    /// like an `execute_round` panic (dependents of the failed tile
+    /// never ran, so the arena's output region is simply discarded).
+    /// Returns whether a graph round was actually staged — `false`
+    /// tells the driver this was a closure round (whose report, or
+    /// panic, is handled on the closure path).
+    pub(crate) fn complete_round(&mut self, panicked: bool) -> bool {
+        let Some((t0, shards)) = self.staged_graph.take() else {
+            return false;
+        };
+        if panicked {
+            self.round_err =
+                Some("model call panicked during fused round".into());
+        } else {
+            self.round = Some(RoundExec {
+                latency_s: t0.elapsed().as_secs_f64(),
+                shards,
+            });
+        }
+        true
+    }
+
+    /// Phase 2 (closure path) — execute the fused call over the arena.
+    /// Takes no locks and touches only lane-owned state, so lane
+    /// drivers co-schedule many lanes' `execute_round`s concurrently
+    /// on the global pool. Panics inside the model call (including
+    /// re-raised pool shard panics) are contained here and fail the
+    /// group like an `Err` — a panicking model must not unwind the
+    /// lane driver, which would leave this lane's variant claimed and
+    /// unservable forever. No-ops when `compile_round` already staged
+    /// a failure for this round.
+    pub(crate) fn execute_round(&mut self) {
+        if self.spans.is_empty() || self.round_err.is_some() {
             return;
         }
         let t0 = Instant::now();
-        // the model's own routing decision (row shards, or the 2-D
-        // tile budget for small-M tiled rounds) — not shards_for,
-        // which under-reports occupancy for tiled rounds
+        // the model's own routing decision (row shards, or the whole
+        // pool for graph-compiled rounds) — not shards_for, which
+        // under-reports occupancy for graph rounds
         let shards = self.model.round_shards(self.arena.rows());
         let outcome = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
@@ -333,8 +410,11 @@ impl FusionScheduler {
         }
         let exec = self.round.take()
             .expect("finish_round without execute_round");
-        metrics.on_fused_round(&self.lane, self.arena.rows(),
-                               self.spans.len(), exec.shards,
+        let rows = self.arena.rows();
+        metrics.on_fused_round(&self.lane, rows, self.spans.len(),
+                               exec.shards,
+                               self.model.round_barriers(rows),
+                               exec.latency_s,
                                self.arena.high_water_bytes()
                                    .max(self.arena.bytes()));
         // Failures are answered immediately but removed only after the

@@ -123,6 +123,23 @@ impl Lane {
         self.sched.has_round()
     }
 
+    /// Phase 2a: compile the staged round into a barrier-free tile
+    /// graph for the driver to submit to the pool, or `None` to fall
+    /// back to the opaque [`execute_round`](Self::execute_round) task
+    /// (non-graph backend, or a staged compile error `finish_round`
+    /// will report).
+    pub(crate) fn compile_round(&mut self)
+                                -> Option<crate::runtime::pool::TileGraph> {
+        self.sched.compile_round()
+    }
+
+    /// Phase 2b (graph path): the round's completion notification
+    /// arrived from the pool — stage the execution report. Returns
+    /// whether a graph round was staged (false = closure round).
+    pub(crate) fn complete_round(&mut self, panicked: bool) -> bool {
+        self.sched.complete_round(panicked)
+    }
+
     /// Phase 2: the lane's fused model call. Lock-free; runs as an
     /// independent round task on the global pool (`server::Driver`),
     /// concurrently with other lanes' rounds.

@@ -24,6 +24,11 @@ struct LaneAgg {
     requests: Welford,
     /// worker-pool shards per round
     shards: Welford,
+    /// estimated time lost to intra-round pool fork/join barriers per
+    /// round (ms): `latency * barriers / (barriers + 1)` — the
+    /// equal-phase-cost upper estimate of layer-boundary idling.
+    /// Identically 0 on the graph path (zero barriers by construction)
+    layer_stall: Welford,
     /// queue wait at lane admission (ms)
     queue_wait: Welford,
     admitted: u64,
@@ -114,6 +119,11 @@ pub struct LaneSnapshot {
     pub mean_requests_per_round: f64,
     /// mean worker-pool shard occupancy of this lane's rounds
     pub occupancy: f64,
+    /// mean estimated time per round lost to intra-round pool
+    /// fork/join barriers (ms): `latency * barriers / (barriers + 1)`
+    /// per round. Identically 0 when every round ran the barrier-free
+    /// tile-graph path
+    pub mean_layer_stall_ms: f64,
     /// mean queue wait of requests admitted to this lane (ms)
     pub mean_queue_wait_ms: f64,
     /// requests admitted into this lane's fused scheduler
@@ -216,11 +226,20 @@ impl Metrics {
     }
 
     /// One fused round on `lane`: `rows` total rows from `requests`
-    /// in-flight requests, executed as `shards` pool shards while the
-    /// lane's round arena held `arena_bytes` at its high-water mark.
+    /// in-flight requests, executed as `shards` pool shards through
+    /// `barriers` intra-round pool fork/joins (0 = the barrier-free
+    /// graph path) in `latency_s` seconds, while the lane's round
+    /// arena held `arena_bytes` at its high-water mark.
+    #[allow(clippy::too_many_arguments)]
     pub fn on_fused_round(&self, lane: &str, rows: usize, requests: usize,
-                          shards: usize, arena_bytes: usize) {
+                          shards: usize, barriers: usize, latency_s: f64,
+                          arena_bytes: usize) {
         let now_s = self.started.elapsed().as_secs_f64();
+        // equal-phase-cost estimate of time spent re-gathering the pool
+        // at layer boundaries: b barriers split a round into b+1 joined
+        // phases, each join idling the stragglers' gap
+        let stall_ms =
+            latency_s * 1e3 * barriers as f64 / (barriers + 1) as f64;
         let mut m = self.lock();
         m.fused_rounds += 1;
         m.fused_rows += rows as u64;
@@ -235,6 +254,7 @@ impl Metrics {
         agg.fused_rows += rows as u64;
         agg.requests.push(requests as f64);
         agg.shards.push(shards as f64);
+        agg.layer_stall.push(stall_ms);
         agg.arena_high_water_bytes =
             agg.arena_high_water_bytes.max(arena_bytes as u64);
     }
@@ -353,6 +373,7 @@ impl Metrics {
                     } else {
                         a.shards.mean()
                     },
+                    mean_layer_stall_ms: a.layer_stall.mean(),
                     mean_queue_wait_ms: a.queue_wait.mean(),
                     admitted: a.admitted,
                     first_round_ms: a.first_round_s * 1e3,
@@ -423,8 +444,8 @@ mod tests {
         assert_eq!(s0.fused_rounds, 0);
         assert_eq!(s0.fused_rows_per_round, 0.0);
         assert_eq!(s0.fused_occupancy, 1.0);
-        m.on_fused_round("a", 6, 3, 2, 4096);
-        m.on_fused_round("a", 2, 1, 1, 1024);
+        m.on_fused_round("a", 6, 3, 2, 1, 0.010, 4096);
+        m.on_fused_round("a", 2, 1, 1, 0, 0.010, 1024);
         m.on_reject();
         let s = m.snapshot();
         assert_eq!(s.fused_rounds, 2);
@@ -451,9 +472,9 @@ mod tests {
         m.on_lane_admit("a", 0.002);
         m.on_lane_admit("a", 0.004);
         m.on_lane_admit("b", 0.010);
-        m.on_fused_round("a", 6, 2, 2, 2048);
-        m.on_fused_round("a", 4, 2, 1, 4096);
-        m.on_fused_round("b", 3, 1, 1, 512);
+        m.on_fused_round("a", 6, 2, 2, 1, 0.008, 2048);
+        m.on_fused_round("a", 4, 2, 1, 1, 0.004, 4096);
+        m.on_fused_round("b", 3, 1, 1, 0, 0.002, 512);
         let s = m.snapshot();
         assert_eq!(s.lanes.len(), 2);
         let a = s.lane("a").unwrap();
@@ -469,6 +490,11 @@ mod tests {
         // arena high water is a per-lane max gauge
         assert_eq!(a.arena_high_water_bytes, 4096);
         assert_eq!(b.arena_high_water_bytes, 512);
+        // barrier rounds (b=1) charge latency/2 to the stall estimate;
+        // graph rounds (b=0) charge nothing
+        assert!((a.mean_layer_stall_ms - 3.0).abs() < 1e-9,
+                "stall {}", a.mean_layer_stall_ms);
+        assert_eq!(b.mean_layer_stall_ms, 0.0);
         // global aggregates still cover both lanes
         assert_eq!(s.fused_rounds, 3);
         // both lanes ran rounds; their windows are well-formed
@@ -505,9 +531,9 @@ mod tests {
     #[test]
     fn lane_window_overlap_detects_concurrent_progress() {
         let m = Metrics::default();
-        m.on_fused_round("a", 1, 1, 1, 0);
-        m.on_fused_round("b", 1, 1, 1, 0);
-        m.on_fused_round("a", 1, 1, 1, 0);
+        m.on_fused_round("a", 1, 1, 1, 0, 0.001, 0);
+        m.on_fused_round("b", 1, 1, 1, 0, 0.001, 0);
+        m.on_fused_round("a", 1, 1, 1, 0, 0.001, 0);
         let s = m.snapshot();
         let a = s.lane("a").unwrap();
         let b = s.lane("b").unwrap();

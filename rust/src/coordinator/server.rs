@@ -501,9 +501,12 @@ impl<'a> Driver<'a> {
     }
 
     /// Poll every held, not-in-flight lane (retiring finished machines
-    /// and staging demands) and submit a round task for each lane that
-    /// staged rows. The task executes the lane's fused call on
-    /// whichever pool thread pops it; completions drain through
+    /// and staging demands) and submit each lane that staged rows to
+    /// the pool — as the compiled barrier-free tile graph when the
+    /// lane's backend has one (the graph's tiles interleave with every
+    /// other lane's across the workers, and its single completion
+    /// lands in the same round group), falling back to one opaque
+    /// round task otherwise. Completions drain through
     /// [`Self::wait_and_finish`]. Lanes already mid-round are skipped —
     /// that is what makes rounds continuous instead of tick-aligned.
     fn pump(&mut self) {
@@ -517,16 +520,21 @@ impl<'a> Driver<'a> {
             if !lane.has_round() {
                 continue;
             }
-            let ptr = SendLane(&mut **lane as *mut Lane);
-            pool::global().submit_round(
-                &self.group, i,
-                Box::new(move || {
-                    // SAFETY: see SendLane — the driver neither touches
-                    // nor drops this lane until the key drains from its
-                    // group
-                    let lane = unsafe { &mut *ptr.0 };
-                    lane.execute_round();
-                }));
+            // SAFETY (both arms): see SendLane — the driver neither
+            // touches nor drops this lane until the key drains from its
+            // group, which is exactly the keep-alive contract the
+            // graph's raw arena pointers need.
+            if let Some(graph) = lane.compile_round() {
+                pool::global().submit_graph(&self.group, i, graph);
+            } else {
+                let ptr = SendLane(&mut **lane as *mut Lane);
+                pool::global().submit_round(
+                    &self.group, i,
+                    Box::new(move || {
+                        let lane = unsafe { &mut *ptr.0 };
+                        lane.execute_round();
+                    }));
+            }
             self.inflight[i] = true;
             self.n_inflight += 1;
         }
@@ -547,7 +555,14 @@ impl<'a> Driver<'a> {
             self.n_inflight -= 1;
             let lane = self.held[key].as_mut()
                 .expect("round completion for an empty slot");
-            if panicked {
+            // graph rounds report their outcome through the completion
+            // flag: complete_round turns it into the staged execution
+            // report (a tile panic fails the group like a model error,
+            // with dependent tiles never having run) and the scatter
+            // phase proceeds. No-op (false) for closure rounds, which
+            // staged their report inline.
+            let was_graph = lane.complete_round(panicked);
+            if panicked && !was_graph {
                 // the round task itself panicked (execute_round already
                 // contains model-call panics, so this is scheduler
                 // bookkeeping gone wrong): mid-round machines are

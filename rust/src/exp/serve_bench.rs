@@ -16,14 +16,20 @@
 //!   window overlapped the others' (lanes' round tasks ran
 //!   concurrently instead of back to back).
 //!
-//! Schema v4: rows carry a `lanes` array and a `pool` object with the
+//! Schema v5: rows carry a `lanes` array and a `pool` object with the
 //! work-stealing scheduler's counters (entries executed / stolen /
 //! injected, lane round tasks) accumulated over that row's run; the
 //! document carries an optional `mixed_variants` section with its own
-//! `pool` object. v4 adds the GRS verifier outcome per lane
+//! `pool` object. v4 added the GRS verifier outcome per lane
 //! (`accepted_steps` / `rejected_steps` / `mean_accept_run`) — the
 //! observed accept-run length speculative samplers (ASD, draft-SD)
-//! achieve under serving traffic.
+//! achieve under serving traffic. v5 adds the tile-graph runtime's
+//! observability: `pool` gains `tile_tasks` / `graph_rounds` /
+//! `ready_pushes` (how many GEMM tiles the barrier-free graph path
+//! executed, how many rounds completed as graphs, how many
+//! dependency-release pushes the counters performed) and each lane
+//! gains `mean_layer_stall_ms` — the estimated per-round time lost to
+//! intra-round fork/join barriers, identically 0 on the graph path.
 
 use std::sync::Arc;
 
@@ -225,6 +231,7 @@ fn lane_json(l: &LaneSnapshot) -> Json {
         ("fused_rows_per_round", Json::Num(l.fused_rows_per_round)),
         ("mean_requests_per_round", Json::Num(l.mean_requests_per_round)),
         ("occupancy", Json::Num(l.occupancy)),
+        ("mean_layer_stall_ms", Json::Num(l.mean_layer_stall_ms)),
         ("mean_queue_wait_ms", Json::Num(l.mean_queue_wait_ms)),
         ("admitted", Json::Num(l.admitted as f64)),
         ("first_round_ms", Json::Num(l.first_round_ms)),
@@ -243,6 +250,9 @@ fn pool_json(p: &PoolStats) -> Json {
         ("stolen", Json::Num(p.stolen as f64)),
         ("injected", Json::Num(p.injected as f64)),
         ("rounds", Json::Num(p.rounds as f64)),
+        ("tile_tasks", Json::Num(p.tile_tasks as f64)),
+        ("graph_rounds", Json::Num(p.graph_rounds as f64)),
+        ("ready_pushes", Json::Num(p.ready_pushes as f64)),
     ])
 }
 
@@ -275,15 +285,16 @@ fn mixed_json(b: &MixedVariantBench) -> Json {
     ])
 }
 
-/// Assemble the `BENCH_coordinator.json` document (schema v4: per-row
-/// `lanes` arrays with GRS accept/reject outcomes + `pool` scheduler
+/// Assemble the `BENCH_coordinator.json` document (schema v5: per-row
+/// `lanes` arrays with GRS accept/reject outcomes and layer-stall
+/// estimates + `pool` scheduler counters including the tile-graph
 /// counters + optional `mixed_variants` section).
 pub fn bench_coordinator_json(variant: &str, k: usize,
                               rows: &[CoordBenchRow],
                               mixed: Option<&MixedVariantBench>) -> Json {
     let mut fields = vec![
         ("bench", Json::Str("bench_coordinator".into())),
-        ("schema_version", Json::Num(4.0)),
+        ("schema_version", Json::Num(5.0)),
         ("variant", Json::Str(variant.to_string())),
         ("k", Json::Num(k as f64)),
         ("pool_threads",
@@ -372,7 +383,7 @@ mod tests {
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_coordinator");
         assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
-                   4);
+                   5);
         let rs = back.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[1].get("concurrency").unwrap().as_usize().unwrap(), 4);
@@ -394,6 +405,14 @@ mod tests {
         let pool = rs[1].get("pool").unwrap();
         assert!(pool.get("rounds").unwrap().as_f64().unwrap() > 0.0);
         assert!(pool.get("executed").unwrap().as_f64().unwrap() > 0.0);
+        // schema v5: tile-graph counters and the per-lane stall
+        // estimate are present (the analytic oracle has no graph form,
+        // so the values can be 0 here — nonzero coverage lives in the
+        // NativeMlp determinism suite)
+        assert!(pool.get("tile_tasks").is_ok());
+        assert!(pool.get("graph_rounds").is_ok());
+        assert!(pool.get("ready_pushes").is_ok());
+        assert!(lanes[0].get("mean_layer_stall_ms").is_ok());
         let table = format_coord_rows(&rows);
         assert!(table.contains("rows/round"));
     }

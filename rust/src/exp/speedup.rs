@@ -229,7 +229,7 @@ impl ForwardBenchRow {
     }
 }
 
-/// One GEMM shape-grid measurement for `BENCH_gemm.json` (schema v2):
+/// One GEMM shape-grid measurement for `BENCH_gemm.json` (schema v3):
 /// a single `(m, n, k)` product timed under one kernel generation on
 /// one ISA/precision pairing.
 ///
@@ -237,11 +237,17 @@ impl ForwardBenchRow {
 /// MR-row kernel over row-major B), `"packed"` (prepacked KC×NR panel
 /// kernel, serial — one row per ISA × panel precision the host can
 /// run), `"packed2d"` (packed kernel 2-D M×N-sharded on the global
-/// pool — `pool_size` carries the tile-shard budget). Each row is
-/// parity-checked per its determinism tier before timing: portable
-/// f32 bit-identical to `gemm_ref`, SIMD f32 within the FMA tolerance
-/// *and* bit-stable across reruns, f16/int8 within the quantization
-/// tolerance (see `math::isa::gemm_rel_tolerance`).
+/// pool — `pool_size` carries the tile-shard budget), and two
+/// 3-GEMM-chain cells (`k→n`, `n→n`, `n→n`; SiLU/SiLU/Linear):
+/// `"chain2d"` runs the chain as three sharded GEMMs with a pool
+/// barrier at each layer boundary, `"pipelined"` compiles the same
+/// chain into a dependency-counted tile graph and runs it with zero
+/// intra-chain barriers. Chain rows report whole-chain throughput
+/// (flops = 2m·(nk + 2n²)). Each row is parity-checked per its
+/// determinism tier before timing: portable f32 bit-identical to
+/// `gemm_ref`, SIMD f32 within the FMA tolerance *and* bit-stable
+/// across reruns, f16/int8 within the quantization tolerance (see
+/// `math::isa::gemm_rel_tolerance`).
 #[derive(Debug, Clone)]
 pub struct GemmBenchRow {
     pub m: usize,
@@ -307,6 +313,71 @@ pub fn gemm_serve_shapes() -> Vec<(usize, usize, usize)> {
     vec![(4, 256, 256), (16, 256, 256), (64, 256, 256)]
 }
 
+/// One layer of the chain-bench pipeline, captured as raw pointers so
+/// graph tiles (whose closures must be `'static`) can run it. The
+/// safety contract mirrors `model::mlp`'s round compiler: every
+/// buffer outlives the graph run, row blocks own disjoint rows, and a
+/// layer's tiles only read rows its graph dependencies have finished
+/// writing.
+#[derive(Clone, Copy)]
+struct ChainStage {
+    pb: *const crate::math::gemm::PackedB,
+    bias: *const f32,
+    bias_len: usize,
+    epi: crate::math::gemm::Epilogue,
+    /// inner (reduction) dimension of this layer
+    k: usize,
+    /// input plane, row-major with stride `k`
+    src: *const f32,
+    /// output plane, row-major with stride `n`
+    dst: *mut f32,
+}
+
+// raw pointers strip Send/Sync; the graph's dependency edges restore
+// the exclusive-writer discipline (see the struct doc)
+unsafe impl Send for ChainStage {}
+unsafe impl Sync for ChainStage {}
+
+/// Compile an m-row GEMM chain into a dependency-counted tile graph:
+/// per row block, a layer-(l+1) tile depends only on that block's
+/// layer-l tiles, so one block can be in layer 3 while another is
+/// still in layer 1 — no layer-boundary barrier anywhere. Partition
+/// matches the serve-path compiler in `model::mlp` (2·MR-row blocks ×
+/// 8·NR-column panels).
+fn compile_chain_graph(isa: crate::math::isa::Isa, m: usize, n: usize,
+                       stages: &[ChainStage])
+                       -> crate::runtime::pool::TileGraph {
+    use crate::math::gemm::{gemm_packed_tile_on, MR, NR};
+    let row_block = 2 * MR;
+    let panel_cols = 8 * NR;
+    let mut graph = crate::runtime::pool::TileGraph::new();
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = row_block.min(m - r0);
+        let mut prev: Vec<usize> = Vec::new();
+        for &stage in stages {
+            let mut ids = Vec::new();
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = j0.saturating_add(panel_cols).min(n);
+                ids.push(graph.add_node(&prev, move || unsafe {
+                    let bias = std::slice::from_raw_parts(
+                        stage.bias, stage.bias_len);
+                    gemm_packed_tile_on(isa, rows, j0, j1, stage.k,
+                                        stage.src.add(r0 * stage.k),
+                                        &*stage.pb, Some(bias),
+                                        stage.epi, None,
+                                        stage.dst.add(r0 * n));
+                }));
+                j0 = j1;
+            }
+            prev = ids;
+        }
+        r0 += rows;
+    }
+    graph
+}
+
 /// Time the kernel generations over a shape grid (bias + SiLU
 /// epilogue — the hidden-layer workload). `tile_shards` is the
 /// `packed2d` shard budget; `warmup`/`iters` feed `util::timer::bench`.
@@ -322,6 +393,13 @@ pub fn gemm_serve_shapes() -> Vec<(usize, usize, usize)> {
 /// land within the quantization tolerance. `packed2d` (active ISA,
 /// f32) must match the serial same-config product bit-for-bit —
 /// sharding may never move a bit within a fixed kernel config.
+///
+/// Each shape also gets the two 3-GEMM-chain cells (`chain2d` /
+/// `pipelined` — barrier chain vs tile graph over the identical
+/// layer stack). Both must match the serial same-config chain
+/// bit-for-bit — neither sharding nor graph scheduling may move a
+/// bit — and the serial chain is itself parity-checked against a
+/// `gemm_ref` chain per the active tier.
 pub fn bench_gemm_grid(shapes: &[(usize, usize, usize)], tile_shards: usize,
                        warmup: usize, iters: usize)
                        -> Result<Vec<GemmBenchRow>> {
@@ -444,6 +522,112 @@ pub fn bench_gemm_grid(shapes: &[(usize, usize, usize)], tile_shards: usize,
         rows.push(GemmBenchRow::from_mean_ms(m, n, k, "packed2d",
                                              active.name(), "f32",
                                              tile_shards, st.mean_ms));
+
+        // 3-GEMM chain cells (k→n, n→n, n→n; SiLU, SiLU, Linear) —
+        // the layer-boundary workload the serve path actually runs.
+        // "chain2d" is three sharded GEMMs with a full pool barrier at
+        // every layer boundary; "pipelined" compiles the same chain
+        // into a tile graph (compile cost inside the timed cell, as
+        // on the serve path) and runs it barrier-free.
+        let w1: Vec<f32> =
+            (0..n * n).map(|i| ((i % 461) as f32 / 461.0) - 0.5).collect();
+        let w2: Vec<f32> =
+            (0..n * n).map(|i| ((i % 347) as f32 / 347.0) - 0.5).collect();
+        let bias2: Vec<f32> =
+            (0..n).map(|i| ((i % 29) as f32 / 29.0) - 0.5).collect();
+        let pb1 = PackedB::pack(n, n, &w1);
+        let pb2 = PackedB::pack(n, n, &w2);
+        // reference chain: layer 0 is exactly the `want` product above
+        let mut ref1 = vec![0.0f32; m * n];
+        let mut ref2 = vec![0.0f32; m * n];
+        gemm_ref(m, n, n, &want, &w1, Some(&bias2), Epilogue::Silu,
+                 None, &mut ref1);
+        gemm_ref(m, n, n, &ref1, &w2, Some(&bias), Epilogue::Linear,
+                 None, &mut ref2);
+        // serial same-config chain on the active ISA: the bitwise
+        // anchor both parallel schedules must reproduce exactly
+        let mut s0 = vec![0.0f32; m * n];
+        let mut s1 = vec![0.0f32; m * n];
+        let mut s2 = vec![0.0f32; m * n];
+        gemm_packed_bias_act_on(active, m, n, k, &a, &pb, Some(&bias),
+                                Epilogue::Silu, None, &mut s0);
+        gemm_packed_bias_act_on(active, m, n, n, &s0, &pb1, Some(&bias2),
+                                Epilogue::Silu, None, &mut s1);
+        gemm_packed_bias_act_on(active, m, n, n, &s1, &pb2, Some(&bias),
+                                Epilogue::Linear, None, &mut s2);
+        let chain_bits: Vec<u32> =
+            s2.iter().map(|v| v.to_bits()).collect();
+        let tol = gemm_rel_tolerance(active, Precision::F32);
+        if tol == 0.0 {
+            let ref_bits: Vec<u32> =
+                ref2.iter().map(|v| v.to_bits()).collect();
+            anyhow::ensure!(chain_bits == ref_bits,
+                            "serial packed chain diverged from the \
+                             gemm_ref chain at m={m} n={n} k={k}");
+        } else {
+            // the per-layer FMA tolerance compounds over the 3-deep
+            // chain; 8× is generous headroom without masking a bug
+            for (i, (&got, &wv)) in s2.iter().zip(&ref2).enumerate() {
+                let bound = 8.0 * tol * (wv.abs() as f64).max(1.0);
+                anyhow::ensure!(((got - wv).abs() as f64) <= bound,
+                                "serial packed chain outside its tier \
+                                 tolerance at m={m} n={n} k={k} i={i}: \
+                                 got {got}, ref {wv}, tol {tol}");
+            }
+        }
+        let chain_flops = 2.0 * m as f64
+            * (n as f64 * k as f64 + 2.0 * n as f64 * n as f64);
+        let chain_row = |kernel: &str, mean_ms: f64| GemmBenchRow {
+            m,
+            n,
+            k,
+            kernel: kernel.to_string(),
+            isa: active.name().to_string(),
+            precision: "f32".to_string(),
+            pool_size: tile_shards,
+            mean_ms,
+            gflops: chain_flops / (mean_ms.max(1e-9) * 1e-3) / 1e9,
+        };
+        let mut h0 = vec![0.0f32; m * n];
+        let mut h1 = vec![0.0f32; m * n];
+        let mut cout = vec![0.0f32; m * n];
+        let st = bench(warmup, iters, || {
+            gemm_packed_sharded_on(active, m, n, k, &a, &pb,
+                                   Some(&bias), Epilogue::Silu, None,
+                                   &mut h0, tile_shards);
+            gemm_packed_sharded_on(active, m, n, n, &h0, &pb1,
+                                   Some(&bias2), Epilogue::Silu, None,
+                                   &mut h1, tile_shards);
+            gemm_packed_sharded_on(active, m, n, n, &h1, &pb2,
+                                   Some(&bias), Epilogue::Linear, None,
+                                   &mut cout, tile_shards);
+        });
+        let got: Vec<u32> = cout.iter().map(|v| v.to_bits()).collect();
+        anyhow::ensure!(got == chain_bits,
+                        "chain2d barrier chain moved a bit vs the \
+                         serial same-config chain at m={m} n={n} k={k}");
+        rows.push(chain_row("chain2d", st.mean_ms));
+
+        let stages = [
+            ChainStage { pb: &pb, bias: bias.as_ptr(), bias_len: n,
+                         epi: Epilogue::Silu, k, src: a.as_ptr(),
+                         dst: h0.as_mut_ptr() },
+            ChainStage { pb: &pb1, bias: bias2.as_ptr(), bias_len: n,
+                         epi: Epilogue::Silu, k: n, src: h0.as_ptr(),
+                         dst: h1.as_mut_ptr() },
+            ChainStage { pb: &pb2, bias: bias.as_ptr(), bias_len: n,
+                         epi: Epilogue::Linear, k: n, src: h1.as_ptr(),
+                         dst: cout.as_mut_ptr() },
+        ];
+        let st = bench(warmup, iters, || {
+            let graph = compile_chain_graph(active, m, n, &stages);
+            crate::runtime::pool::global().run_graph(graph);
+        });
+        let got: Vec<u32> = cout.iter().map(|v| v.to_bits()).collect();
+        anyhow::ensure!(got == chain_bits,
+                        "pipelined graph chain moved a bit vs the \
+                         serial same-config chain at m={m} n={n} k={k}");
+        rows.push(chain_row("pipelined", st.mean_ms));
     }
     Ok(rows)
 }
@@ -467,12 +651,14 @@ pub fn run_gemm_grid(tile_shards: usize, warmup: usize, iters: usize,
 
 /// Assemble the `BENCH_gemm.json` document (GFLOP/s per kernel
 /// generation × ISA × precision over the shape grid). Schema v2 adds
-/// per-row `isa`/`precision` fields and the top-level `isa_detected`.
+/// per-row `isa`/`precision` fields and the top-level `isa_detected`;
+/// v3 adds the 3-GEMM-chain kernels (`chain2d`, `pipelined`) so the
+/// layer-boundary win of the tile graph is visible in the artifact.
 pub fn bench_gemm_json(rows: &[GemmBenchRow], tile_shards: usize) -> Json {
     use crate::math::gemm::{KC, MR, NR};
     Json::obj(vec![
         ("bench", Json::Str("bench_gemm".into())),
-        ("schema_version", Json::Num(2.0)),
+        ("schema_version", Json::Num(3.0)),
         ("pool_threads",
          Json::Num(crate::runtime::pool::default_threads() as f64)),
         ("isa_detected",
@@ -999,14 +1185,15 @@ mod tests {
     fn gemm_grid_measures_every_kernel_generation_and_serializes() {
         // tiny odd shape: correctness (per-tier parity checks inside
         // the grid runner) + schema, not speed. Host-agnostic: a
-        // portable-only host produces 6 rows per shape (ref, v1,
-        // packed × 3 precisions, packed2d), a SIMD host 9 (+ the
-        // active ISA's 3 packed rows).
+        // portable-only host produces 8 rows per shape (ref, v1,
+        // packed × 3 precisions, packed2d, chain2d, pipelined), a
+        // SIMD host 11 (+ the active ISA's 3 packed rows).
         let rows = bench_gemm_grid(&[(5, 9, 17)], 4, 0, 1).unwrap();
-        assert!(rows.len() == 6 || rows.len() == 9, "{}", rows.len());
+        assert!(rows.len() == 8 || rows.len() == 11, "{}", rows.len());
         let kernels: Vec<&str> =
             rows.iter().map(|r| r.kernel.as_str()).collect();
-        for kernel in ["ref", "v1", "packed", "packed2d"] {
+        for kernel in ["ref", "v1", "packed", "packed2d", "chain2d",
+                       "pipelined"] {
             assert!(kernels.contains(&kernel), "missing {kernel}");
         }
         for precision in ["f32", "f16", "int8"] {
@@ -1022,13 +1209,13 @@ mod tests {
         }
         let last = rows.last().unwrap();
         assert_eq!((last.kernel.as_str(), last.pool_size),
-                   ("packed2d", 4));
+                   ("pipelined", 4));
         let doc = bench_gemm_json(&rows, 4);
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_gemm");
         assert_eq!(back.get("schema_version").unwrap()
-                       .as_usize().unwrap(), 2);
+                       .as_usize().unwrap(), 3);
         assert_eq!(back.get("isa_detected").unwrap().as_str().unwrap(),
                    crate::math::isa::detect_isa().name());
         assert_eq!(back.get("nr").unwrap().as_usize().unwrap(),
@@ -1045,7 +1232,8 @@ mod tests {
         }
         let table = format_gemm_rows(&rows);
         assert!(table.contains("packed2d") && table.contains("GFLOP/s")
-                && table.contains("precision") && table.contains("int8"));
+                && table.contains("precision") && table.contains("int8")
+                && table.contains("pipelined"));
     }
 
     #[test]

@@ -1295,6 +1295,54 @@ pub fn gemm_packed_sharded_on(isa: Isa, m: usize, n: usize, k: usize,
         .max(1)
 }
 
+/// One tile of a packed GEMM, executed as a node of a
+/// [`pool::TileGraph`]: rows `0..rows` of a row block × packed column
+/// panels `[j0, j1)` (`j0` NR-aligned, `j1` NR-aligned or `pb.n()`),
+/// full bias→ascending-k accumulate→epilogue for every element it
+/// owns. This is exactly the region a shard of
+/// [`gemm_packed_sharded_on`] computes — same `packed_region` core,
+/// same per-element op stream — so a layer executed as graph tiles is
+/// bit-identical to the barrier path for every tier. Pointer-based
+/// because graph tiles of *different* layers run concurrently over the
+/// same activation planes: a tile may only materialize slices over its
+/// own row block (frozen by the graph's dependency edges), never over
+/// whole planes other tiles are still writing.
+///
+/// * `a_block`: row 0 of this row block's A rows (`rows × k`,
+///   row-major, lda = k).
+/// * `residual_block`: like `a_block` but `rows × pb.n()` (lda = n).
+/// * `c_block`: row 0, column 0 of this row block in C (lda =
+///   `pb.n()`); only columns `[j0, j1)` are touched.
+///
+/// # Safety
+/// For the duration of the call, `a_block`/`residual_block` rows must
+/// not be written by anyone, and columns `[j0, j1)` of `c_block`'s
+/// `rows` rows must be exclusively this tile's. The graph dependency
+/// rule (a layer-(l+1) tile of row block *i* waits on all layer-l
+/// tiles of row block *i*; planes ping-pong by layer parity) provides
+/// both.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_packed_tile_on(isa: Isa, rows: usize, j0: usize,
+                                  j1: usize, k: usize,
+                                  a_block: *const f32, pb: &PackedB,
+                                  bias: Option<&[f32]>, epi: Epilogue,
+                                  residual_block: Option<*const f32>,
+                                  c_block: *mut f32) {
+    let n = pb.n();
+    debug_assert_eq!(pb.k, k, "packed tile: PackedB k mismatch");
+    debug_assert!(j0 % NR == 0, "packed tile start must be NR-aligned");
+    debug_assert!(j1 <= n, "packed tile end past n");
+    if rows == 0 || j1 <= j0 {
+        return;
+    }
+    let a = std::slice::from_raw_parts(a_block, rows * k);
+    let residual = residual_block
+        .map(|p| std::slice::from_raw_parts(p, rows * n));
+    let cv = CView { ptr: c_block, n };
+    packed_region(isa, n, k, a, pb, bias, epi, residual, &cv, 0, rows,
+                  j0, j1);
+}
+
 /// [`gemm_packed_sharded_on`] on the portable kernels (bit-exact
 /// tier).
 pub fn gemm_packed_sharded(m: usize, n: usize, k: usize, a: &[f32],
@@ -1500,6 +1548,51 @@ mod tests {
                                       Epilogue::Linear, None, &mut got, 8);
         assert!(eff > 1, "small-M product did not tile over N (eff={eff})");
         assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn packed_tile_entry_matches_serial_bitwise() {
+        // the graph-node entry computes exactly a shard's region:
+        // cutting a product into row blocks × NR panel ranges and
+        // running every piece through gemm_packed_tile_on must
+        // reproduce the serial call bit for bit, whatever the cut
+        let (m, n, k) = (13usize, 40usize, 300usize);
+        let a = fill(m * k, 51);
+        let b = fill(k * n, 52);
+        let bias = fill(n, 53);
+        let res = fill(m * n, 54);
+        let pb = PackedB::pack(k, n, &b);
+        let mut want = vec![0.0f32; m * n];
+        gemm_packed_bias_act(m, n, k, &a, &pb, Some(&bias), Epilogue::Silu,
+                             Some(&res), &mut want);
+        for rows_per_block in [4usize, 8, 16] {
+            for panels_per_tile in [1usize, 2, 8] {
+                let mut got = vec![7.0f32; m * n];
+                let mut r0 = 0usize;
+                while r0 < m {
+                    let r1 = (r0 + rows_per_block).min(m);
+                    let mut j0 = 0usize;
+                    while j0 < n {
+                        let j1 = (j0 + panels_per_tile * NR).min(n);
+                        // SAFETY: serial loop — every region is
+                        // exclusive, nothing else touches the buffers
+                        unsafe {
+                            gemm_packed_tile_on(
+                                Isa::Portable, r1 - r0, j0, j1, k,
+                                a.as_ptr().add(r0 * k), &pb, Some(&bias),
+                                Epilogue::Silu,
+                                Some(res.as_ptr().add(r0 * n)),
+                                got.as_mut_ptr().add(r0 * n));
+                        }
+                        j0 = j1;
+                    }
+                    r0 = r1;
+                }
+                assert_eq!(bits(&want), bits(&got),
+                           "rows_per_block={rows_per_block} \
+                            panels_per_tile={panels_per_tile}");
+            }
+        }
     }
 
     #[test]

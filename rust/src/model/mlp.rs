@@ -8,12 +8,20 @@
 //! * a fast in-process backend (`--backend native`) for experiments that
 //!   need millions of cheap model calls.
 //!
-//! The batched forward is a GEMM pipeline (`math::gemm`): the whole
-//! batch input matrix `[x ‖ temb ‖ cond]` is packed once into a
-//! reusable [`Workspace`], then every layer runs as one
-//! `B×n_in · n_in×n_out` product with a fused bias + SiLU (+ residual)
-//! epilogue. Every layer's weight matrix is repacked **once at load**
-//! into KC×NR column panels (`math::gemm::PackedB`), so the per-round
+//! The batched forward is a GEMM pipeline (`math::gemm`) **compiled
+//! into a dependency-counted tile graph**
+//! ([`crate::runtime::pool::TileGraph`]): the batch is cut into row
+//! blocks, each row block gets an f64→f32 pack node, then one packed
+//! GEMM tile node per `(row block, column-panel range)` per layer —
+//! where a layer-(l+1) tile of row block *i* depends only on the
+//! layer-l tiles of row block *i* — and a final f32→f64 store node per
+//! row block. There is **no barrier between layers**: row block 0 can
+//! be in layer 3 while row block 1 is still packing, and on the shared
+//! pool the layer-boundary gaps of one lane's round fill with another
+//! lane's tiles. The serial path is the same compiler with a
+//! degenerate 1×1 partition executed inline — one pipeline, two
+//! schedules. Every layer's weight matrix is repacked **once at load**
+//! into KC×NR column panels (`math::gemm::PackedB`), so the per-tile
 //! kernel is the prepacked MR×NR register-tiled micro-kernel; the flat
 //! row-major copy is kept only for the scalar reference path
 //! ([`NativeMlp::forward_one_ref`] — the HLO parity oracle). Sinusoidal
@@ -23,10 +31,11 @@
 //! `math::gemm::exp_fast` (~1e-7 relative per layer) where the
 //! reference calls libm `expf`, so parity holds to 1e-5 relative
 //! rather than bitwise. Pool-size invariance of `denoise_batch` itself
-//! *is* bitwise, both for row sharding (`ParallelModel`) and for the
-//! in-layer 2-D GEMM tiling ([`NativeMlp::denoise_batch_tiled`]):
-//! sharding only regroups independent output elements of one fixed
-//! reduction order.
+//! *is* bitwise, for row sharding (`ParallelModel`), for the in-layer
+//! 2-D GEMM tiling, and for the graph schedule: the graph's
+//! dependency counters change only *when* a tile runs, never the tile
+//! partition or any element's reduction order, and partitions only
+//! regroup independent output elements.
 //!
 //! Which kernels run — and therefore which determinism tier the model
 //! lands in ([`crate::math::isa`]) — is set by the
@@ -50,12 +59,24 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::math::gemm::{gemm_packed_sharded_on, Epilogue, PackedB};
+use crate::math::gemm::{gemm_packed_tile_on, Epilogue, PackedB, MR, NR};
 use crate::math::isa::{DeterminismTier, Isa, KernelPolicy};
 use crate::model::{DenoiseModel, VariantInfo};
+use crate::runtime::pool::{self, TileGraph};
 use crate::schedule::DdpmSchedule;
 
 pub const TEMB_DIM: usize = 32;
+
+/// Row-block height of the parallel graph partition: MR-aligned so
+/// every tile runs the full-width micro-kernel except at the batch
+/// tail. Two MR blocks per pack/store node keeps the node count (and
+/// queue traffic) at half the finest possible grain.
+const GRAPH_ROW_BLOCK: usize = 2 * MR;
+
+/// Column width of one graph GEMM tile: eight NR panels, so a tile
+/// amortizes its queue pop over a meaningful strip of packed panels
+/// while small-M serve rounds still fan out over columns.
+const GRAPH_PANEL_COLS: usize = 8 * NR;
 
 /// Scratch arena for the batched GEMM forward. Buffers grow to the
 /// high-water batch size and are reused, so the steady-state hot loop
@@ -67,10 +88,13 @@ pub const TEMB_DIM: usize = 32;
 pub struct Workspace {
     /// packed B×in_dim input matrix `[x ‖ temb ‖ cond]`
     input: Vec<f32>,
-    /// hidden state, B×hidden
-    h: Vec<f32>,
-    /// residual-block output, B×hidden (swapped with `h` per block)
-    tmp: Vec<f32>,
+    /// double-buffered activation planes, B×hidden each: non-output
+    /// layer `l` writes `planes[l % 2]` and (for `l > 0`) reads
+    /// `planes[(l - 1) % 2]`. Two planes suffice for the graph
+    /// schedule because a layer-(l+2) tile of a row block can only run
+    /// after that block's layer-(l+1) tiles — the sole readers of the
+    /// plane it overwrites — have finished.
+    planes: [Vec<f32>; 2],
     /// f32 output staging, B×d
     out32: Vec<f32>,
 }
@@ -83,16 +107,17 @@ impl Workspace {
     fn ensure(&mut self, n: usize, in_dim: usize, hidden: usize,
               d_out: usize) {
         grow(&mut self.input, n * in_dim);
-        grow(&mut self.h, n * hidden);
-        grow(&mut self.tmp, n * hidden);
+        grow(&mut self.planes[0], n * hidden);
+        grow(&mut self.planes[1], n * hidden);
         grow(&mut self.out32, n * d_out);
     }
 
     /// Bytes currently held by the scratch buffers (capacity, not
     /// round usage) — the high-water footprint a burst leaves behind.
     pub fn bytes(&self) -> usize {
-        (self.input.capacity() + self.h.capacity() + self.tmp.capacity()
-         + self.out32.capacity()) * std::mem::size_of::<f32>()
+        (self.input.capacity() + self.planes[0].capacity()
+         + self.planes[1].capacity() + self.out32.capacity())
+            * std::mem::size_of::<f32>()
     }
 
     /// Release the scratch buffers when they hold more than `cap`
@@ -102,8 +127,8 @@ impl Workspace {
         if self.bytes() <= cap {
             return;
         }
-        for v in [&mut self.input, &mut self.h, &mut self.tmp,
-                  &mut self.out32] {
+        let [p0, p1] = &mut self.planes;
+        for v in [&mut self.input, p0, p1, &mut self.out32] {
             v.clear();
             v.shrink_to_fit();
         }
@@ -349,30 +374,65 @@ impl NativeMlp {
         Ok(())
     }
 
-    /// The GEMM pipeline with a caller-owned workspace: pack the batch
-    /// input matrix once, then one packed-panel GEMM per layer with the
-    /// epilogue fused (SiLU on hidden layers, residual add on blocks).
-    /// Serial GEMMs; see [`denoise_batch_tiled`](Self::
-    /// denoise_batch_tiled) for the 2-D sharded form.
+    /// The GEMM pipeline with a caller-owned workspace: the graph
+    /// compiler's degenerate 1×1 partition (one pack node, one tile
+    /// per layer, one store node) executed inline on the calling
+    /// thread — exactly the old serial per-layer loop, expressed as
+    /// the same compiled pipeline the parallel paths run.
     pub fn denoise_batch_with(&self, ys: &[f64], ts: &[f64], cond: &[f64],
                               n: usize, out: &mut [f64], ws: &mut Workspace)
                               -> Result<()> {
         self.denoise_batch_tiled(ys, ts, cond, n, out, ws, 1)
     }
 
-    /// [`denoise_batch_with`](Self::denoise_batch_with) with each
-    /// layer's GEMM split into up to `tile_shards` MR×NR-aligned M×N
-    /// tiles on the global worker pool (`gemm_packed_sharded_on`,
-    /// driven by the ISA resolved at load). Small batches — fused
-    /// serving rounds — parallelize over the weight matrix's column
-    /// panels even when they have too few rows to row-shard.
+    /// [`denoise_batch_with`](Self::denoise_batch_with) compiled for
+    /// `tile_shards > 1` into the full row-block × column-panel tile
+    /// graph and executed barrier-free on the global worker pool
+    /// ([`pool::ThreadPool::run_graph`], caller helping). Small
+    /// batches — fused serving rounds — parallelize over the weight
+    /// matrix's column panels even when they have too few rows to
+    /// row-shard, and no layer ever fork/joins the pool.
     /// Bit-identical to the serial pipeline for every `tile_shards`
-    /// (tiles never split an element's reduction, and the kernel is
-    /// fixed per model, so this holds in every determinism tier).
+    /// and steal schedule (tiles never split an element's reduction,
+    /// and the kernel is fixed per model, so this holds in every
+    /// determinism tier).
     pub fn denoise_batch_tiled(&self, ys: &[f64], ts: &[f64], cond: &[f64],
                                n: usize, out: &mut [f64],
                                ws: &mut Workspace, tile_shards: usize)
                                -> Result<()> {
+        let graph =
+            self.compile_graph(ys, ts, cond, n, out, ws, tile_shards > 1)?;
+        if tile_shards > 1 {
+            pool::global().run_graph(graph);
+        } else {
+            graph.run_inline();
+        }
+        Ok(())
+    }
+
+    /// Compile one fused forward over rows `0..n` into a
+    /// dependency-counted [`TileGraph`]. Node kinds per row block:
+    /// one f64→f32 **pack** node (`[x ‖ temb ‖ cond]`, cached integer
+    /// time embeddings), per layer one packed-GEMM **tile** node per
+    /// column-panel range — each layer-(l+1) tile depending on all of
+    /// *this row block's* layer-l tiles and nothing else — and one
+    /// f32→f64 **store** node. `parallel` picks the partition:
+    /// `false` is the degenerate 1 row block × full-width panels
+    /// (serial schedule), `true` the [`GRAPH_ROW_BLOCK`] ×
+    /// [`GRAPH_PANEL_COLS`] grid. The partition is a pure function of
+    /// the shapes — never of the pool size or host ISA — and output
+    /// bits are independent of it anyway (each element's reduction
+    /// runs whole inside one tile, ascending-k).
+    ///
+    /// The returned graph holds raw pointers into `ys`/`ts`/`cond`/
+    /// `out`/`ws` and `self`; the caller must keep all of them alive
+    /// and untouched until the graph has fully executed (the
+    /// synchronous entries block; the lane path keeps its arena and
+    /// model untouched until the round group drains — the same
+    /// contract boxed round closures already had).
+    fn compile_graph(&self, ys: &[f64], ts: &[f64], cond: &[f64],
+                     n: usize, out: &mut [f64], ws: &mut Workspace,
+                     parallel: bool) -> Result<TileGraph> {
         let (d, c) = (self.d, self.cond_dim);
         let in_dim = self.in_dim();
         let hidden = self.hidden;
@@ -381,50 +441,196 @@ impl NativeMlp {
                 "denoise_batch shape mismatch: n={n} d={d} c={c} ys={} \
                  ts={} cond={} out={}",
                 ys.len(), ts.len(), cond.len(), out.len());
+        let mut graph = TileGraph::new();
         if n == 0 {
-            return Ok(());
+            return Ok(graph);
         }
         ws.ensure(n, in_dim, hidden, d);
+        let (row_block, panel_cols) = if parallel {
+            (GRAPH_ROW_BLOCK, GRAPH_PANEL_COLS)
+        } else {
+            (n, usize::MAX)
+        };
+        let p = RoundPtrs {
+            model: self,
+            ys: ys.as_ptr(),
+            ts: ts.as_ptr(),
+            cond: cond.as_ptr(),
+            out: out.as_mut_ptr(),
+            input: ws.input.as_mut_ptr(),
+            planes: [ws.planes[0].as_mut_ptr(), ws.planes[1].as_mut_ptr()],
+            out32: ws.out32.as_mut_ptr(),
+        };
+        let n_layers = self.layers.len();
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + row_block).min(n);
+            let rows = r1 - r0;
+            // pack node: this row block's [x | temb | cond] rows
+            let pack = graph.add_node(&[], move || {
+                // SAFETY: the pack node owns rows r0..r1 of the input
+                // matrix exclusively (row blocks are disjoint), and the
+                // ys/ts/cond sources are frozen for the graph's life.
+                unsafe { p.pack_rows(r0, rows) }
+            });
+            let mut prev = vec![pack];
+            for li in 0..n_layers {
+                let layer = &self.layers[li];
+                let (k, n_out) = (layer.n_in, layer.n_out);
+                // SAFETY: pointer arithmetic only — the buffers were
+                // just ensured to hold n rows of every plane.
+                let (a, residual, cbase) = unsafe {
+                    if li == 0 {
+                        (p.input.add(r0 * in_dim) as *const f32, None,
+                         p.planes[0].add(r0 * hidden))
+                    } else if li + 1 == n_layers {
+                        (p.planes[(li - 1) % 2].add(r0 * hidden)
+                             as *const f32,
+                         None, p.out32.add(r0 * d))
+                    } else {
+                        let src = p.planes[(li - 1) % 2].add(r0 * hidden)
+                            as *const f32;
+                        (src, Some(src), p.planes[li % 2].add(r0 * hidden))
+                    }
+                };
+                let model = p.model;
+                let mut tiles =
+                    Vec::with_capacity(n_out.div_ceil(panel_cols.max(1)));
+                let mut j0 = 0usize;
+                while j0 < n_out {
+                    let j1 = j0.saturating_add(panel_cols).min(n_out);
+                    let t = GemmTile {
+                        model, layer: li, rows, j0, j1, k, a, residual,
+                        c: cbase,
+                    };
+                    // depends on ALL of this row block's previous-stage
+                    // nodes (pack, or every layer-(l-1) tile)
+                    tiles.push(graph.add_node(&prev, move || {
+                        // SAFETY: dependency edges freeze the A and
+                        // residual rows and make the C columns
+                        // exclusive; see GemmTile::run.
+                        unsafe { t.run() }
+                    }));
+                    j0 = j1;
+                }
+                prev = tiles;
+            }
+            // store node: widen this row block's f32 staging to f64
+            graph.add_node(&prev, move || {
+                // SAFETY: all last-layer tiles of this row block have
+                // finished (deps); rows r0..r1 of out are exclusive.
+                unsafe { p.store_rows(r0, rows) }
+            });
+            r0 = r1;
+        }
+        Ok(graph)
+    }
+}
 
-        // pack [x | temb | cond] rows
-        for r in 0..n {
-            let row = &mut ws.input[r * in_dim..(r + 1) * in_dim];
+/// Raw-pointer bundle the graph nodes capture: the model plus the
+/// round's input/output/scratch base pointers. Copied into every node;
+/// `Send + Sync` because node tasks hop threads. Soundness is the
+/// graph dependency rule (see [`NativeMlp::compile_graph`]) plus the
+/// caller's keep-alive contract.
+#[derive(Clone, Copy)]
+struct RoundPtrs {
+    model: *const NativeMlp,
+    ys: *const f64,
+    ts: *const f64,
+    cond: *const f64,
+    out: *mut f64,
+    input: *mut f32,
+    planes: [*mut f32; 2],
+    out32: *mut f32,
+}
+
+unsafe impl Send for RoundPtrs {}
+unsafe impl Sync for RoundPtrs {}
+
+impl RoundPtrs {
+    /// Pack rows `r0..r0+rows` of the round's input matrix.
+    ///
+    /// SAFETY: caller (the graph schedule) guarantees exclusive
+    /// ownership of those input-matrix rows and frozen sources.
+    unsafe fn pack_rows(&self, r0: usize, rows: usize) {
+        let model = &*self.model;
+        let (d, c) = (model.d, model.cond_dim);
+        let in_dim = model.in_dim();
+        let input = std::slice::from_raw_parts_mut(
+            self.input.add(r0 * in_dim), rows * in_dim);
+        let ys = std::slice::from_raw_parts(self.ys.add(r0 * d), rows * d);
+        let ts = std::slice::from_raw_parts(self.ts.add(r0), rows);
+        let cond =
+            std::slice::from_raw_parts(self.cond.add(r0 * c), rows * c);
+        for r in 0..rows {
+            let row = &mut input[r * in_dim..(r + 1) * in_dim];
             for i in 0..d {
                 row[i] = ys[r * d + i] as f32;
             }
             let (temb, rest) = row[d..].split_at_mut(TEMB_DIM);
-            self.fill_temb(ts[r], temb);
+            model.fill_temb(ts[r], temb);
             for i in 0..c {
                 rest[i] = cond[r * c + i] as f32;
             }
         }
+    }
 
-        // input layer: h = silu(input · W0 + b0). All layer GEMMs run
-        // on the ISA resolved at load — never re-resolved per call, so
-        // a model's outputs are bit-stable whatever the pool does
-        let first = &self.layers[0];
-        gemm_packed_sharded_on(self.isa, n, hidden, in_dim,
-                               &ws.input[..n * in_dim], &first.wp,
-                               Some(&first.b), Epilogue::Silu,
-                               None, &mut ws.h[..n * hidden], tile_shards);
-        // residual blocks: h = h + silu(h · W + b), fused epilogue
-        for layer in &self.layers[1..self.layers.len() - 1] {
-            gemm_packed_sharded_on(self.isa, n, hidden, hidden,
-                                   &ws.h[..n * hidden], &layer.wp,
-                                   Some(&layer.b), Epilogue::Silu,
-                                   Some(&ws.h[..n * hidden]),
-                                   &mut ws.tmp[..n * hidden], tile_shards);
-            std::mem::swap(&mut ws.h, &mut ws.tmp);
-        }
-        // output layer: no activation
-        let last = self.layers.last().unwrap();
-        gemm_packed_sharded_on(self.isa, n, d, hidden, &ws.h[..n * hidden],
-                               &last.wp, Some(&last.b), Epilogue::Linear,
-                               None, &mut ws.out32[..n * d], tile_shards);
-        for (o, &v) in out[..n * d].iter_mut().zip(&ws.out32[..n * d]) {
+    /// Widen rows `r0..r0+rows` of the f32 staging into the f64 out.
+    ///
+    /// SAFETY: caller guarantees those staging rows are final and the
+    /// out rows exclusive.
+    unsafe fn store_rows(&self, r0: usize, rows: usize) {
+        let model = &*self.model;
+        let d = model.d;
+        let src = std::slice::from_raw_parts(self.out32.add(r0 * d),
+                                             rows * d);
+        let dst = std::slice::from_raw_parts_mut(self.out.add(r0 * d),
+                                                 rows * d);
+        for (o, &v) in dst.iter_mut().zip(src) {
             *o = v as f64;
         }
-        Ok(())
+    }
+}
+
+/// One packed-GEMM tile node: rows of one row block × packed column
+/// panels `[j0, j1)` of one layer, full bias→accumulate→epilogue.
+/// All pointer arithmetic happens at compile time; the node just runs.
+#[derive(Clone, Copy)]
+struct GemmTile {
+    model: *const NativeMlp,
+    layer: usize,
+    rows: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    /// row 0 of this row block in the layer's input (lda = k)
+    a: *const f32,
+    /// residual rows (lda = n_out), the fused skip connection
+    residual: Option<*const f32>,
+    /// row 0, column 0 of this row block in the layer's output
+    c: *mut f32,
+}
+
+unsafe impl Send for GemmTile {}
+unsafe impl Sync for GemmTile {}
+
+impl GemmTile {
+    /// SAFETY: the graph dependency rule guarantees the A/residual
+    /// rows are fully written and no longer mutated, and columns
+    /// `[j0, j1)` of the C rows are exclusively this tile's. All GEMMs
+    /// run on the ISA resolved at model load — never re-resolved per
+    /// tile — so outputs are bit-stable whatever the pool does.
+    unsafe fn run(self) {
+        let model = &*self.model;
+        let l = &model.layers[self.layer];
+        gemm_packed_tile_on(model.isa, self.rows, self.j0, self.j1,
+                            self.k, self.a, &l.wp, Some(&l.b),
+                            if self.layer + 1 == model.layers.len() {
+                                Epilogue::Linear
+                            } else {
+                                Epilogue::Silu
+                            },
+                            self.residual, self.c);
     }
 }
 
@@ -492,25 +698,35 @@ impl DenoiseModel for NativeMlp {
     /// Arena rounds run the GEMM pipeline against the *arena's*
     /// workspace: the whole round's f64→f32 conversion packs once into
     /// the per-lane buffers, which persist across rounds/ticks (the
-    /// thread-local workspace stays the target for sharded sub-calls,
-    /// where each pool worker needs its own scratch). Bit-identical to
-    /// `denoise_batch` — the workspace is pure scratch.
+    /// thread-local workspace stays the target for pool-worker
+    /// sub-calls, where each worker needs its own scratch).
+    /// Bit-identical to `denoise_batch` — the workspace is pure
+    /// scratch, and the serial schedule here runs the identical
+    /// compiled graph [`compile_round`](DenoiseModel::compile_round)
+    /// hands the pool.
     fn denoise_round(&self, arena: &mut crate::sampler::RoundArena)
                      -> Result<()> {
-        self.denoise_round_tiled(arena, 1)
-    }
-
-    /// The packed pipeline tiles its layer GEMMs over M×N, so small-M
-    /// rounds can use the whole pool — `ParallelModel` routes them
-    /// here.
-    fn supports_round_tiling(&self) -> bool {
-        true
-    }
-
-    fn denoise_round_tiled(&self, arena: &mut crate::sampler::RoundArena,
-                           tile_shards: usize) -> Result<()> {
         let (ys, ts, cond, n, out, ws) = arena.round_io_ws();
-        self.denoise_batch_tiled(ys, ts, cond, n, out, ws, tile_shards)
+        self.compile_graph(ys, ts, cond, n, out, ws, false)?
+            .run_inline();
+        Ok(())
+    }
+
+    /// The barrier-free round form: the full row-block × column-panel
+    /// tile graph over the arena's buffers, for the caller to execute
+    /// on the pool. The graph captures raw pointers into the arena (and
+    /// `self`) — the standing lane contract (arena untouched until the
+    /// round's `RoundGroup` completion arrives) is exactly its
+    /// keep-alive requirement.
+    fn compile_round(&self, arena: &mut crate::sampler::RoundArena)
+                     -> Result<Option<TileGraph>> {
+        let (ys, ts, cond, n, out, ws) = arena.round_io_ws();
+        Ok(Some(self.compile_graph(ys, ts, cond, n, out, ws, true)?))
+    }
+
+    /// Graph rounds never fork/join the pool between layers.
+    fn round_barriers(&self, _n: usize) -> usize {
+        0
     }
 }
 
@@ -707,6 +923,48 @@ mod tests {
             for i in 0..n * 3 {
                 assert_eq!(want[i].to_bits(), got[i].to_bits(),
                            "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_round_graph_matches_inline_round_bitwise() {
+        // the pool-executed tile graph (compile_round) and the inline
+        // serial schedule (denoise_round) are the same compiled
+        // pipeline — outputs must match bit for bit, whatever the
+        // steal schedule does
+        use crate::model::DenoiseModel;
+        use crate::sampler::RoundArena;
+        let info = toy_info(3, 2, 16, 3);
+        let flat = pseudo_weights(flat_len(&info));
+        let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
+        for n in [1usize, 4, 9, 21] {
+            let ys: Vec<f64> =
+                (0..n * 3).map(|i| (i as f64 * 0.37).sin()).collect();
+            let ts: Vec<f64> = (0..n).map(|r| (1 + r % 10) as f64).collect();
+            let cond: Vec<f64> =
+                (0..n * 2).map(|i| (i as f64 * 0.09).cos()).collect();
+            let fill = |arena: &mut RoundArena| {
+                arena.begin_round();
+                let (span, rows) = arena.reserve(n);
+                rows.ys.copy_from_slice(&ys);
+                rows.ts.copy_from_slice(&ts);
+                rows.cond.copy_from_slice(&cond);
+                span
+            };
+            let mut arena = RoundArena::new(3, 2);
+            let span = fill(&mut arena);
+            mlp.denoise_round(&mut arena).unwrap();
+            let want: Vec<u64> =
+                arena.out_rows(span).iter().map(|v| v.to_bits()).collect();
+            for _ in 0..3 {
+                let span = fill(&mut arena);
+                let graph = mlp.compile_round(&mut arena).unwrap().unwrap();
+                assert!(!graph.is_empty());
+                pool::global().run_graph(graph);
+                let got: Vec<u64> = arena.out_rows(span).iter()
+                    .map(|v| v.to_bits()).collect();
+                assert_eq!(want, got, "n={n}");
             }
         }
     }

@@ -33,6 +33,7 @@ pub use manifest::{Manifest, TargetSpec, VariantInfo};
 pub use mlp::{NativeMlp, Workspace};
 pub use parallel::ParallelModel;
 
+use crate::runtime::pool::TileGraph;
 use crate::sampler::RoundArena;
 use crate::schedule::DdpmSchedule;
 
@@ -69,34 +70,42 @@ pub trait DenoiseModel: Send + Sync {
         self.denoise_batch(ys, ts, cond, n, out)
     }
 
-    /// Whether [`denoise_round_tiled`](Self::denoise_round_tiled) has a
-    /// real 2-D tiled implementation. `ParallelModel` uses this to
-    /// route small-M rounds — too few rows to fill the pool with row
-    /// shards — to the backend's own M×N GEMM tiling instead of
-    /// row-sharding them (or running them inline). Default: no.
-    fn supports_round_tiling(&self) -> bool {
-        false
+    /// Compile one staged arena round into a barrier-free
+    /// [`TileGraph`] for the caller to execute on the worker pool
+    /// instead of calling [`denoise_round`](Self::denoise_round).
+    /// Backends that can express a round as dependency-counted tiles
+    /// (`NativeMlp`: pack → per-(row-block, column-panel) GEMM tiles
+    /// per layer → store) return `Some(graph)`; the graph must be
+    /// bit-identical to `denoise_round` under every execution order
+    /// the dependencies admit. The returned graph holds raw pointers
+    /// into the arena and the model — the caller must keep both alive
+    /// and untouched until the graph has fully executed. Default:
+    /// `None` (no graph form; the caller falls back to
+    /// `denoise_round`).
+    fn compile_round(&self, _arena: &mut RoundArena)
+                     -> Result<Option<TileGraph>> {
+        Ok(None)
     }
 
     /// Worker-pool shards a `denoise_round` over an `n`-row arena
     /// would occupy — stats only (`RoundExec::shards`, lane occupancy
     /// metrics). The default is serial; `ParallelModel` overrides it
     /// with the same routing decision `denoise_round` makes (row
-    /// shards, or the 2-D tile budget for small-M tiled rounds), so
+    /// shards, or the graph tile budget for small-M rounds), so
     /// reported occupancy tracks what actually ran.
     fn round_shards(&self, _n: usize) -> usize {
         1
     }
 
-    /// Like [`denoise_round`](Self::denoise_round), but hinted to split
-    /// each internal GEMM into up to `tile_shards` MR×NR-aligned M×N
-    /// tiles on the global worker pool (`math::gemm::
-    /// gemm_packed_sharded`). The default ignores the hint. Must be
-    /// bit-identical to `denoise_round` — tiles never split an
-    /// element's reduction.
-    fn denoise_round_tiled(&self, arena: &mut RoundArena,
-                           _tile_shards: usize) -> Result<()> {
-        self.denoise_round(arena)
+    /// Intra-round pool fork/join barriers an `n`-row `denoise_round`
+    /// performs — feeds the coordinator's layer-boundary stall
+    /// estimate, and doubles as the graph-capability advertisement:
+    /// `ParallelModel` routes rounds to `compile_round` exactly when
+    /// the inner backend reports 0 here (a barrier-free backend is by
+    /// construction one whose rounds compile to a tile graph). The
+    /// legacy default (one joined parallel region) is 1.
+    fn round_barriers(&self, _n: usize) -> usize {
+        1
     }
 
     /// Convenience single-call wrapper.

@@ -21,9 +21,14 @@
 //! on its row range against its own thread-local workspace, and the
 //! GEMM reduction order is row-independent by construction (see
 //! `math::gemm`), so wrapping the MLP stays bit-transparent too.
-//! Sharding at the row level (here) rather than inside each layer's
-//! GEMM keeps a shard's activations resident in one core's cache
-//! across all layers; `math::gemm::gemm_sharded` exists for the
+//! Arena rounds against a graph-capable backend (`NativeMlp`) skip
+//! row sharding entirely: the round compiles to the backend's
+//! dependency-counted tile graph (`DenoiseModel::compile_round`) and
+//! executes barrier-free on the pool — row blocks flow through the
+//! layers independently, and small-M serving rounds fan out over
+//! column panels. Row sharding remains the route for slice
+//! `denoise_batch` calls and for backends without a graph form (the
+//! analytic oracles); `math::gemm::gemm_sharded` exists for the
 //! complementary case of one very large standalone product.
 //!
 //! HLO-backed models note: `HloModel` pads batches up to the nearest
@@ -74,15 +79,18 @@ impl ParallelModel {
         self.pool.shards_for(n)
     }
 
-    /// The single routing predicate `denoise_round` and `round_shards`
-    /// share: a round that would row-shard (past the `shard_min`
-    /// inline guard) but can't fill the pool goes to the backend's
-    /// 2-D GEMM tiling instead.
-    fn takes_tiled_route(&self, n: usize) -> bool {
-        let shards = self.pool.shards_for(n);
-        shards < self.pool.pool_size
-            && n > self.pool.shard_min.max(1)
-            && self.inner.supports_round_tiling()
+    /// The single routing predicate `denoise_round`, `compile_round`,
+    /// and the stats methods share: whether an `n`-row round executes
+    /// as the inner backend's compiled tile graph on the pool.
+    /// Graph-capable backends advertise themselves by reporting zero
+    /// [`DenoiseModel::round_barriers`]; past the `shard_min` inline
+    /// guard every such round — even ones with too few rows to
+    /// row-shard — fans out over the whole pool through the graph's
+    /// column-panel tiles.
+    fn graph_round(&self, n: usize) -> bool {
+        self.inner.round_barriers(n) == 0
+            && (self.pool.shards_for(n) > 1
+                || n > self.pool.shard_min.max(1))
     }
 }
 
@@ -147,45 +155,63 @@ impl DenoiseModel for ParallelModel {
         }
     }
 
-    /// Arena rounds shard exactly like slice rounds: the arena's input
-    /// region is split into contiguous per-shard row ranges (pure
-    /// subslicing — no staging copies, no allocations). Rounds with too
-    /// few rows to fill the pool with row shards are handed whole to
-    /// the inner model — with the configured `pool_size` as a 2-D GEMM
-    /// tile-shard hint when the backend supports it
-    /// (`DenoiseModel::denoise_round_tiled`; the native MLP tiles each
-    /// layer product over M×N, so a 4-row fused serving round still
-    /// occupies the whole pool through its column panels). Either way
-    /// the inner model consumes the arena's per-lane GEMM workspace,
-    /// and outputs stay bit-identical to inline execution.
+    /// Arena rounds route through one predicate (`graph_round`):
+    /// backends that compile barrier-free tile graphs execute every
+    /// round past the inline guard as a graph on the pool (this
+    /// subsumes both the old row-shard and 2-D-tiled routes — the
+    /// graph partitions over row blocks *and* column panels, so a
+    /// 4-row fused serving round still occupies the whole pool through
+    /// its column-panel tiles, with zero intra-round fork/joins).
+    /// Non-graph backends keep the contiguous row-shard route: pure
+    /// subslicing of the arena's input region, one `denoise_batch`
+    /// per shard. Either way outputs stay bit-identical to inline
+    /// execution — the graph never changes a partition or reduction
+    /// order, and row shards never split a row.
     fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
-        let n = arena.rows();
-        // `takes_tiled_route` keeps the shards_for inline guard:
-        // rounds small enough that PoolConfig promises inline execution
-        // ("sharding overhead never dominates cheap rounds") stay
-        // inline on the tiled route too — only rounds that would
-        // row-shard but can't fill the pool get handed to the backend.
-        if self.takes_tiled_route(n) {
-            // row shards alone can't fill the pool: let the backend
-            // tile its GEMMs over M×N instead
-            return self.inner.denoise_round_tiled(arena,
-                                                  self.pool.pool_size);
+        if let Some(graph) = self.compile_round(arena)? {
+            pool::global().run_graph(graph);
+            return Ok(());
         }
-        if self.pool.shards_for(n) <= 1 {
+        if self.pool.shards_for(arena.rows()) <= 1 {
             return self.inner.denoise_round(arena);
         }
         let (ys, ts, cond, n, out) = arena.round_io();
         self.denoise_batch(ys, ts, cond, n, out)
     }
 
-    /// Stats-only view of the routing above: the tile budget for
-    /// tiled rounds, the row-shard count otherwise — so occupancy
-    /// metrics report what actually ran.
+    /// Rounds the routing predicate sends to the graph path compile to
+    /// the inner backend's tile graph; others return `None`, telling
+    /// callers (the coordinator driver, `denoise_round` above) to fall
+    /// back to `denoise_round`'s row-shard / inline routes.
+    fn compile_round(&self, arena: &mut RoundArena)
+                     -> Result<Option<crate::runtime::pool::TileGraph>> {
+        if self.graph_round(arena.rows()) {
+            self.inner.compile_round(arena)
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Stats-only view of the routing above: the whole pool for graph
+    /// rounds, the row-shard count otherwise — so occupancy metrics
+    /// report what actually ran.
     fn round_shards(&self, n: usize) -> usize {
-        if self.takes_tiled_route(n) {
+        if self.graph_round(n) {
             self.pool.pool_size
         } else {
             self.pool.shards_for(n)
+        }
+    }
+
+    /// Graph rounds are barrier-free; row-sharded rounds fork/join the
+    /// pool once; inline rounds inherit the inner model's count.
+    fn round_barriers(&self, n: usize) -> usize {
+        if self.graph_round(n) {
+            0
+        } else if self.pool.shards_for(n) > 1 {
+            1
+        } else {
+            self.inner.round_barriers(n)
         }
     }
 }
@@ -254,20 +280,22 @@ mod tests {
     }
 
     #[test]
-    fn small_rounds_route_to_backend_tiling_bit_identically() {
+    fn small_rounds_route_to_backend_graph_bit_identically() {
         use crate::model::{NativeMlp, VariantInfo};
-        // a native MLP supports 2-D round tiling; rounds too small to
-        // row-shard must still produce the exact inline bits through
-        // the tiled route
+        // a native MLP compiles rounds to tile graphs; rounds too
+        // small to row-shard must still produce the exact inline bits
+        // through the graph route
         let info = VariantInfo::toy("tile", 3, 0, 16, 2, 10);
         let flat: Vec<f32> = (0..info.weights_len())
             .map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5)
             .collect();
         let mlp = NativeMlp::from_flat(&info, &flat).unwrap();
-        assert!(mlp.supports_round_tiling());
+        // the MLP advertises graph capability via zero round barriers
+        assert_eq!(mlp.round_barriers(4), 0);
         // shard_min 1: n=1 stays inline (the shards_for inline guard),
-        // n in {2, 4} row-shards to < pool_size and takes the tiled
-        // route — both must produce the exact inline bits
+        // n in {2, 4} is too small to fill the pool with row shards
+        // and takes the graph route — both must produce the exact
+        // inline bits
         let par = ParallelModel::new(
             mlp.clone(), PoolConfig { pool_size: 8, shard_min: 1 });
         for n in [1usize, 2, 4] {

@@ -10,7 +10,7 @@
 //! shape of the mini-rayon registry — a global injector plus one deque
 //! per worker — but self-contained).
 //!
-//! Two kinds of work ride the same deques:
+//! Three kinds of work ride the same deques:
 //!
 //! * **Sharded calls** ([`ThreadPool::run_sharded`] and its block/tile
 //!   variants): a batched call split into contiguous row ranges (or
@@ -22,6 +22,17 @@
 //!   (a serving lane's fused round) submitted asynchronously; their
 //!   completions are reported to a [`RoundGroup`] mailbox that the
 //!   submitting driver drains with [`ThreadPool::wait_rounds`].
+//! * **Tile graphs** ([`ThreadPool::submit_graph`] /
+//!   [`ThreadPool::run_graph`]): a dependency-counted DAG of one-shot
+//!   tile tasks built with [`TileGraph`]. Only *ready* tiles (atomic
+//!   dependency count zero) are ever queued; whichever thread finishes
+//!   a tile decrements its dependents' counters and pushes the newly
+//!   ready ones to the injector, so a multi-layer fused round executes
+//!   with **zero** intra-round pool barriers — the last tile posts one
+//!   `(key, panicked)` completion into the [`RoundGroup`] mailbox,
+//!   exactly like a round task. Idle workers fill layer-boundary gaps
+//!   of one graph with ready tiles of another (or with any other queued
+//!   work), which is what makes lanes overlap *inside* a round.
 //!
 //! Scheduling topology (the work-stealing part):
 //!
@@ -60,7 +71,11 @@
 //!   ranges executed row-by-row, each 2-D tile is owned by exactly one
 //!   executor, and no cross-row reduction ever moves between shards —
 //!   so outputs are bit-identical for every pool size and every steal
-//!   schedule (enforced by tests/test_parallel_determinism.rs).
+//!   schedule (enforced by tests/test_parallel_determinism.rs). Tile
+//!   graphs inherit the same contract: the schedule changes only *when*
+//!   a ready tile runs, never the node partition or any reduction
+//!   order inside a node, and the dependency counters order every
+//!   writer before every reader regardless of which thread runs what.
 //! * **Poison recovery.** All pool mutexes are locked through
 //!   [`lock_recover`]: a panicking thread must degrade that panic's own
 //!   call, never cascade into pool-wide worker death or a
@@ -215,6 +230,127 @@ impl Default for RoundGroup {
     }
 }
 
+/// One node of a compiled tile graph: the task, its live dependency
+/// count, and the indices of the nodes waiting on it.
+struct GraphNode {
+    /// The tile task. `Fn` rather than `FnOnce` so nodes can live in a
+    /// shared, lock-free structure; the scheduler still runs each node
+    /// exactly once (a node is pushed only by the thread that drops its
+    /// dependency count to zero, and counts never go back up).
+    run: Box<dyn Fn() + Send + Sync>,
+    /// Unfinished dependencies; the decrement that reaches zero pushes
+    /// the node.
+    deps: AtomicUsize,
+    /// Nodes whose `deps` this node decrements when it finishes.
+    dependents: Vec<u32>,
+}
+
+/// Executor-side state of one submitted graph.
+struct GraphShared {
+    nodes: Vec<GraphNode>,
+    /// Nodes not yet finished (run or cancelled); the thread that
+    /// retires the last one posts the round completion.
+    remaining: AtomicUsize,
+    /// Set by the first tile panic; later tiles skip their task (the
+    /// round already failed) and dependents cascade-cancel.
+    failed: AtomicBool,
+    key: usize,
+    group: Arc<GroupShared>,
+}
+
+/// A dependency-counted DAG of one-shot tile tasks, built once per
+/// fused round and executed barrier-free on the pool via
+/// [`ThreadPool::submit_graph`] (asynchronous, lane rounds) or
+/// [`ThreadPool::run_graph`] (synchronous, batch calls).
+///
+/// Nodes are added in topological order: each node's dependencies must
+/// already be in the graph, which makes cycles unrepresentable and
+/// guarantees node 0 is a root. The builder is deliberately generic —
+/// the MLP round compiler, the bench harness and tests all describe
+/// their pipelines with the same two calls.
+pub struct TileGraph {
+    nodes: Vec<GraphNode>,
+}
+
+impl TileGraph {
+    pub fn new() -> TileGraph {
+        TileGraph { nodes: Vec::new() }
+    }
+
+    /// Append a node that runs `task` once every node in `deps` has
+    /// finished, returning its index for later nodes to depend on.
+    /// Dependencies must reference already-added nodes (topological
+    /// insertion order).
+    pub fn add_node<F>(&mut self, deps: &[usize], task: F) -> usize
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let id = self.nodes.len();
+        assert!(id < u32::MAX as usize, "tile graph too large");
+        for &d in deps {
+            assert!(d < id, "graph dependency {d} is not an earlier node \
+                             (adding node {id})");
+            self.nodes[d].dependents.push(id as u32);
+        }
+        self.nodes.push(GraphNode {
+            run: Box::new(task),
+            deps: AtomicUsize::new(deps.len()),
+            dependents: Vec::new(),
+        });
+        id
+    }
+
+    /// Number of nodes added so far.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Execute every node on the calling thread, in insertion order.
+    /// `add_node` only accepts already-inserted dependencies, so
+    /// insertion order is a topological order and this is the serial
+    /// schedule of the same compiled pipeline — no pool, no atomics.
+    pub fn run_inline(self) {
+        for node in &self.nodes {
+            (node.run)();
+        }
+    }
+
+    /// Freeze into executor state, returning the shared graph and its
+    /// root node indices (dependency count zero). `None` for an empty
+    /// graph.
+    fn into_shared(self, key: usize, group: Arc<GroupShared>)
+                   -> Option<(Arc<GraphShared>, Vec<u32>)> {
+        if self.nodes.is_empty() {
+            return None;
+        }
+        let roots: Vec<u32> = self.nodes.iter().enumerate()
+            .filter(|(_, n)| n.deps.load(Ordering::Relaxed) == 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let remaining = self.nodes.len();
+        Some((
+            Arc::new(GraphShared {
+                nodes: self.nodes,
+                remaining: AtomicUsize::new(remaining),
+                failed: AtomicBool::new(false),
+                key,
+                group,
+            }),
+            roots,
+        ))
+    }
+}
+
+impl Default for TileGraph {
+    fn default() -> TileGraph {
+        TileGraph::new()
+    }
+}
+
 /// One queued unit of work.
 enum Entry {
     /// Claim hint for a sharded call: executing it claims and works
@@ -228,11 +364,19 @@ enum Entry {
         key: usize,
         group: Arc<GroupShared>,
     },
+    /// One ready tile of a submitted graph: runs its task (unless the
+    /// graph already failed), then decrements dependents and pushes the
+    /// newly ready ones. The thread that retires the graph's last node
+    /// reports `(key, failed)` to the group mailbox.
+    Tile {
+        graph: Arc<GraphShared>,
+        node: u32,
+    },
 }
 
 #[derive(Debug, Default)]
 struct Counters {
-    /// entries executed (both kinds, all threads)
+    /// entries executed (all kinds, all threads)
     executed: AtomicU64,
     /// entries taken from a sibling worker's deque (true steals)
     stolen: AtomicU64,
@@ -240,19 +384,32 @@ struct Counters {
     injected: AtomicU64,
     /// round tasks executed to completion
     rounds: AtomicU64,
+    /// graph tile entries executed (including cancelled-by-failure)
+    tile_tasks: AtomicU64,
+    /// graphs retired (one per submitted non-empty graph)
+    graph_rounds: AtomicU64,
+    /// ready tiles pushed to the injector (roots + dependency-count
+    /// zero crossings)
+    ready_pushes: AtomicU64,
 }
 
 /// Monotone scheduling counters, snapshotted by [`ThreadPool::stats`]
 /// (process-lifetime totals for the global pool; see
 /// [`global_stats`]). `stolen / executed` is the observable steal rate;
-/// `rounds` counts lane round tasks, the coordinator's unit of fused
-/// work.
+/// `rounds` counts boxed lane round tasks and `graph_rounds` graph
+/// rounds — together the coordinator's units of fused work;
+/// `tile_tasks`/`ready_pushes` expose the barrier-free graph schedule
+/// (a graph round pushes each tile exactly once, as it becomes ready,
+/// instead of fork/joining per layer).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     pub executed: u64,
     pub stolen: u64,
     pub injected: u64,
     pub rounds: u64,
+    pub tile_tasks: u64,
+    pub graph_rounds: u64,
+    pub ready_pushes: u64,
 }
 
 impl PoolStats {
@@ -264,6 +421,11 @@ impl PoolStats {
             stolen: self.stolen.saturating_sub(base.stolen),
             injected: self.injected.saturating_sub(base.injected),
             rounds: self.rounds.saturating_sub(base.rounds),
+            tile_tasks: self.tile_tasks.saturating_sub(base.tile_tasks),
+            graph_rounds: self.graph_rounds
+                .saturating_sub(base.graph_rounds),
+            ready_pushes: self.ready_pushes
+                .saturating_sub(base.ready_pushes),
         }
     }
 }
@@ -323,6 +485,65 @@ fn push_entry(shared: &PoolShared, entry: Entry) {
     }
 }
 
+/// Enqueue a ready graph tile. Always the global injector — even from
+/// a worker — so every idle thread (and every helping driver)
+/// converges on ready tiles in FIFO submission order: two lanes' tiles
+/// interleave instead of one lane's chain monopolizing the finishing
+/// worker's own deque.
+fn push_ready_tile(shared: &PoolShared, graph: Arc<GraphShared>,
+                   node: u32) {
+    shared.pending.fetch_add(1, Ordering::SeqCst);
+    lock_recover(&shared.injector)
+        .push_back(Entry::Tile { graph, node });
+    shared.stats.ready_pushes.fetch_add(1, Ordering::Relaxed);
+    if shared.sleepers.load(Ordering::SeqCst) > 0 {
+        let _g = lock_recover(&shared.sleep);
+        shared.wake.notify_one();
+    }
+}
+
+/// Run one ready tile (skipped if its graph already failed), then
+/// retire it: decrement dependents, push the newly ready ones, and —
+/// from whichever thread retires the graph's last node — post the
+/// round completion. Cancelled dependents (ready after failure) retire
+/// through an iterative worklist without ever queueing, so a mid-graph
+/// panic can neither run a dependent nor strand the completion.
+fn run_tile(shared: &PoolShared, graph: &Arc<GraphShared>, node: u32) {
+    if !graph.failed.load(Ordering::Acquire) {
+        let task = &graph.nodes[node as usize].run;
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| task()));
+        if outcome.is_err() {
+            graph.failed.store(true, Ordering::Release);
+        }
+    }
+    let mut retired = 0usize;
+    let mut worklist = vec![node];
+    while let Some(nid) = worklist.pop() {
+        retired += 1;
+        for &d in &graph.nodes[nid as usize].dependents {
+            // AcqRel: the zero-crossing decrement observes every
+            // dependency's writes through the RMW chain before the
+            // dependent can run
+            let dep = &graph.nodes[d as usize].deps;
+            if dep.fetch_sub(1, Ordering::AcqRel) == 1 {
+                if graph.failed.load(Ordering::Acquire) {
+                    worklist.push(d);
+                } else {
+                    push_ready_tile(shared, graph.clone(), d);
+                }
+            }
+        }
+    }
+    if graph.remaining.fetch_sub(retired, Ordering::AcqRel) == retired {
+        shared.stats.graph_rounds.fetch_add(1, Ordering::Relaxed);
+        let failed = graph.failed.load(Ordering::Acquire);
+        let mut done = lock_recover(&graph.group.done);
+        done.push((graph.key, failed));
+        graph.group.cv.notify_all();
+    }
+}
+
 /// Scheduling role of the thread scanning for work: a pool worker pops
 /// the injector oldest-first, a helping driver newest-first (its own
 /// just-submitted rounds — keeping the blocked driver off straggler
@@ -374,9 +595,9 @@ fn find_work(shared: &PoolShared, scan: Scan) -> Option<Entry> {
     None
 }
 
-/// Execute one entry. Round-task panics are contained here and
-/// reported through the group mailbox; shard panics are contained in
-/// [`Job::work`].
+/// Execute one entry. Round-task and tile panics are contained here
+/// and reported through the group mailbox; shard panics are contained
+/// in [`Job::work`].
 fn execute_entry(shared: &PoolShared, entry: Entry) {
     shared.stats.executed.fetch_add(1, Ordering::Relaxed);
     match entry {
@@ -388,6 +609,10 @@ fn execute_entry(shared: &PoolShared, entry: Entry) {
             let mut done = lock_recover(&group.done);
             done.push((key, panicked));
             group.cv.notify_all();
+        }
+        Entry::Tile { graph, node } => {
+            shared.stats.tile_tasks.fetch_add(1, Ordering::Relaxed);
+            run_tile(shared, &graph, node);
         }
     }
 }
@@ -468,6 +693,9 @@ impl ThreadPool {
             stolen: c.stolen.load(Ordering::Relaxed),
             injected: c.injected.load(Ordering::Relaxed),
             rounds: c.rounds.load(Ordering::Relaxed),
+            tile_tasks: c.tile_tasks.load(Ordering::Relaxed),
+            graph_rounds: c.graph_rounds.load(Ordering::Relaxed),
+            ready_pushes: c.ready_pushes.load(Ordering::Relaxed),
         }
     }
 
@@ -651,6 +879,53 @@ impl ThreadPool {
             key,
             group: group.shared.clone(),
         });
+    }
+
+    /// Submit one compiled tile graph tagged `key`: its root tiles go
+    /// to the injector immediately, every other tile is pushed by
+    /// whichever thread finishes its last dependency, and the thread
+    /// that retires the final node reports `(key, failed)` to `group` —
+    /// the graph-shaped sibling of [`submit_round`](Self::submit_round)
+    /// with zero intra-round barriers. An empty graph completes
+    /// immediately (reported `(key, false)`).
+    ///
+    /// Asynchronous: this returns immediately. As with `submit_round`,
+    /// the submitter owns the key space and must keep everything the
+    /// graph's tasks capture alive (and untouched) until the key is
+    /// drained from `group`.
+    pub fn submit_graph(&self, group: &RoundGroup, key: usize,
+                        graph: TileGraph) {
+        match graph.into_shared(key, group.shared.clone()) {
+            None => {
+                let mut done = lock_recover(&group.shared.done);
+                done.push((key, false));
+                group.shared.cv.notify_all();
+            }
+            Some((g, roots)) => {
+                for r in roots {
+                    push_ready_tile(&self.shared, g.clone(), r);
+                }
+            }
+        }
+    }
+
+    /// Execute one tile graph synchronously, the caller helping until
+    /// it completes (so a single-thread pool — or a fully busy one —
+    /// still finishes). Panics if any tile panicked, mirroring
+    /// [`run_sharded`](Self::run_sharded)'s contract for batch callers.
+    pub fn run_graph(&self, graph: TileGraph) {
+        if graph.is_empty() {
+            return;
+        }
+        let group = RoundGroup::new();
+        self.submit_graph(&group, 0, graph);
+        let mut out = Vec::new();
+        while out.is_empty() {
+            self.wait_rounds(&group, &mut out);
+        }
+        if out.iter().any(|&(_, failed)| failed) {
+            panic!("a graph tile panicked");
+        }
     }
 
     /// Block until `group` has at least one completed round, draining
@@ -1118,6 +1393,154 @@ mod tests {
             count.fetch_add(e - s, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn graph_runs_each_node_once_in_dependency_order() {
+        // diamond: 0 → {1, 2} → 3, run synchronously; every node runs
+        // exactly once and never before its dependencies
+        let pool = ThreadPool::new(2);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut g = TileGraph::new();
+        let o = order.clone();
+        let n0 = g.add_node(&[], move || o.lock().unwrap().push(0usize));
+        let o = order.clone();
+        let n1 = g.add_node(&[n0], move || o.lock().unwrap().push(1));
+        let o = order.clone();
+        let n2 = g.add_node(&[n0], move || o.lock().unwrap().push(2));
+        let o = order.clone();
+        let n3 = g.add_node(&[n1, n2], move || o.lock().unwrap().push(3));
+        assert_eq!((n0, n1, n2, n3), (0, 1, 2, 3));
+        assert_eq!(g.len(), 4);
+        pool.run_graph(g);
+        let order = order.lock().unwrap().clone();
+        assert_eq!(order.len(), 4, "order={order:?}");
+        let pos = |v: usize| order.iter().position(|&x| x == v).unwrap();
+        assert_eq!(pos(0), 0, "root did not run first: {order:?}");
+        assert_eq!(pos(3), 3, "join did not run last: {order:?}");
+        let stats = pool.stats();
+        assert_eq!(stats.tile_tasks, 4);
+        assert_eq!(stats.graph_rounds, 1);
+        assert_eq!(stats.ready_pushes, 4);
+    }
+
+    #[test]
+    fn empty_graph_completes_immediately() {
+        let pool = ThreadPool::new(1);
+        pool.run_graph(TileGraph::new()); // must not block or panic
+        let group = RoundGroup::new();
+        pool.submit_graph(&group, 7, TileGraph::new());
+        let mut out = Vec::new();
+        pool.wait_rounds(&group, &mut out);
+        assert_eq!(out, vec![(7, false)]);
+        assert_eq!(pool.stats().graph_rounds, 0);
+    }
+
+    #[test]
+    fn two_graphs_interleave_on_a_single_worker() {
+        // the layer-boundary overlap property: two chain graphs (two
+        // lanes' fused rounds) submitted to a 1-worker pool must make
+        // progress together — some lane-B tile executes between lane-A
+        // tiles — because ready tiles sit FIFO on the shared injector
+        // instead of one chain fork/joining the pool per layer
+        let pool = ThreadPool::new(1);
+        let group = RoundGroup::new();
+        let logv: Arc<Mutex<Vec<(usize, usize)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        for lane in 0..2usize {
+            let mut g = TileGraph::new();
+            let mut prev: Option<usize> = None;
+            for layer in 0..8usize {
+                let l = logv.clone();
+                let deps: Vec<usize> = prev.into_iter().collect();
+                prev = Some(g.add_node(&deps, move || {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(2));
+                    l.lock().unwrap().push((lane, layer));
+                }));
+            }
+            pool.submit_graph(&group, lane, g);
+        }
+        let mut out = Vec::new();
+        while out.len() < 2 {
+            pool.wait_rounds(&group, &mut out);
+        }
+        assert!(out.iter().all(|&(_, failed)| !failed));
+        let logv = logv.lock().unwrap().clone();
+        assert_eq!(logv.len(), 16);
+        // each lane's own chain is ordered...
+        for lane in 0..2usize {
+            let layers: Vec<usize> = logv.iter()
+                .filter(|&&(l, _)| l == lane)
+                .map(|&(_, lay)| lay)
+                .collect();
+            assert_eq!(layers, (0..8).collect::<Vec<_>>(),
+                       "lane {lane} chain ran out of order: {logv:?}");
+        }
+        // ...and the lanes interleave: lane 1 must appear strictly
+        // between two lane-0 tiles (and vice versa)
+        let first = |lane| logv.iter()
+            .position(|&(l, _)| l == lane).unwrap();
+        let last = |lane| logv.iter()
+            .rposition(|&(l, _)| l == lane).unwrap();
+        assert!(first(1) < last(0) && first(0) < last(1),
+                "lanes ran back-to-back, no overlap: {logv:?}");
+    }
+
+    #[test]
+    fn mid_graph_tile_panic_cancels_dependents_and_reports() {
+        // chain 0 → 1(panics) → 2 → 3: the round reports failed, the
+        // dependents never fire, and the pool keeps serving graphs
+        let pool = ThreadPool::new(2);
+        let group = RoundGroup::new();
+        let ran_after = Arc::new(AtomicUsize::new(0));
+        let mut g = TileGraph::new();
+        let n0 = g.add_node(&[], || {});
+        let n1 = g.add_node(&[n0], || panic!("tile boom"));
+        let r = ran_after.clone();
+        let n2 = g.add_node(&[n1], move || {
+            r.fetch_add(1, Ordering::Relaxed);
+        });
+        let r = ran_after.clone();
+        g.add_node(&[n2], move || {
+            r.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.submit_graph(&group, 5, g);
+        let mut out = Vec::new();
+        while out.is_empty() {
+            pool.wait_rounds(&group, &mut out);
+        }
+        assert_eq!(out, vec![(5, true)], "panic not reported");
+        assert_eq!(ran_after.load(Ordering::Relaxed), 0,
+                   "a dependent of the panicked tile fired");
+        // the pool and the group survive: the next graph completes
+        let ok = Arc::new(AtomicUsize::new(0));
+        let mut g = TileGraph::new();
+        let o = ok.clone();
+        let a = g.add_node(&[], move || {
+            o.fetch_add(1, Ordering::Relaxed);
+        });
+        let o = ok.clone();
+        g.add_node(&[a], move || {
+            o.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.submit_graph(&group, 6, g);
+        out.clear();
+        while out.is_empty() {
+            pool.wait_rounds(&group, &mut out);
+        }
+        assert_eq!(out, vec![(6, false)]);
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "graph tile panicked")]
+    fn run_graph_propagates_tile_panic_to_caller() {
+        let pool = ThreadPool::new(2);
+        let mut g = TileGraph::new();
+        let n0 = g.add_node(&[], || {});
+        g.add_node(&[n0], || panic!("boom"));
+        pool.run_graph(g);
     }
 
     #[test]

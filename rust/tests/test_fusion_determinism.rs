@@ -163,9 +163,15 @@ fn toy_mlp_with_draft() -> (Arc<dyn DenoiseModel>, Arc<dyn DenoiseModel>) {
 fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
     // acceptance criterion: a concurrent two-variant burst (analytic
     // GMM oracle + toy NativeMlp, all four sampler kinds) must be
-    // bit-identical to solo execution at pool sizes 1/2/8, AND both
-    // variant lanes must fuse rows (no lane served per-request, no
-    // cross-variant head-of-line blocking)
+    // bit-identical to solo execution at pool sizes 1/2/8 — three
+    // repetitions each, so a steal-order-dependent bit would have
+    // chances to show — AND both variant lanes must fuse rows (no
+    // lane served per-request, no cross-variant head-of-line
+    // blocking). The NativeMlp lane's fused rounds run as
+    // dependency-counted tile graphs on the worker pool (the
+    // zero-barrier path), which the pool's tile_tasks counter must
+    // witness: graph scheduling freedom, same bits.
+    let pool_before = asd::runtime::pool::global_stats();
     let gmm = model();
     let gmm_draft = draft_model();
     let (mlp, mlp_draft) = toy_mlp_with_draft();
@@ -191,52 +197,66 @@ fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
         .collect();
 
     for pool_size in POOL_SIZES {
-        let c = Coordinator::new(ServerConfig {
-            workers: 2,
-            max_batch: 16,
-            enable_batching: true,
-            pool: PoolConfig { pool_size, shard_min: 1 },
-            ..Default::default()
-        }).unwrap();
-        for (name, m, d) in variants {
-            c.register_model(name, (*m).clone());
-            let dname = format!("{name}-draft");
-            c.register_model(&dname, (*d).clone());
-            c.pair_draft(name, &dname).unwrap();
+        for rep in 0..3 {
+            let c = Coordinator::new(ServerConfig {
+                workers: 2,
+                max_batch: 16,
+                enable_batching: true,
+                pool: PoolConfig { pool_size, shard_min: 1 },
+                ..Default::default()
+            }).unwrap();
+            for (name, m, d) in variants {
+                c.register_model(name, (*m).clone());
+                let dname = format!("{name}-draft");
+                c.register_model(&dname, (*d).clone());
+                c.pair_draft(name, &dname).unwrap();
+            }
+            let rxs: Vec<_> = burst.iter()
+                .map(|&(v, spec, seed)| {
+                    c.submit(Request {
+                        id: 0,
+                        variant: variants[v].0.into(),
+                        sampler: spec,
+                        seed,
+                        cond: vec![],
+                    }).1
+                })
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let r = rx.recv().unwrap();
+                assert!(r.error.is_none(),
+                        "pool={pool_size} rep={rep} req {i}: {:?}",
+                        r.error);
+                assert_eq!(bits(&r.sample), want[i],
+                           "pool_size={pool_size} rep={rep} request {i} \
+                            (variant {}, {:?}) changed bits vs solo run",
+                           variants[burst[i].0].0, burst[i].1);
+            }
+            let m = c.metrics();
+            assert_eq!(m.completed, 16);
+            for (name, _, _) in variants {
+                let lane = m.lane(name)
+                    .unwrap_or_else(|| panic!("no lane '{name}'"));
+                assert!(lane.fused_rounds > 0,
+                        "pool={pool_size} rep={rep} lane '{name}' never \
+                         ran a round");
+                assert!(lane.fused_rows_per_round > 1.0,
+                        "pool={pool_size} rep={rep} lane '{name}' served \
+                         per-request (rows/round {})",
+                        lane.fused_rows_per_round);
+            }
+            c.shutdown();
         }
-        let rxs: Vec<_> = burst.iter()
-            .map(|&(v, spec, seed)| {
-                c.submit(Request {
-                    id: 0,
-                    variant: variants[v].0.into(),
-                    sampler: spec,
-                    seed,
-                    cond: vec![],
-                }).1
-            })
-            .collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let r = rx.recv().unwrap();
-            assert!(r.error.is_none(), "pool={pool_size} req {i}: {:?}",
-                    r.error);
-            assert_eq!(bits(&r.sample), want[i],
-                       "pool_size={pool_size} request {i} \
-                        (variant {}, {:?}) changed bits vs solo run",
-                       variants[burst[i].0].0, burst[i].1);
-        }
-        let m = c.metrics();
-        assert_eq!(m.completed, 16);
-        for (name, _, _) in variants {
-            let lane = m.lane(name)
-                .unwrap_or_else(|| panic!("no lane '{name}'"));
-            assert!(lane.fused_rounds > 0,
-                    "pool={pool_size} lane '{name}' never ran a round");
-            assert!(lane.fused_rows_per_round > 1.0,
-                    "pool={pool_size} lane '{name}' served per-request \
-                     (rows/round {})", lane.fused_rows_per_round);
-        }
-        c.shutdown();
     }
+    // the toy lane's fused rounds went through the tile-graph path:
+    // the process-global pool must have executed graph tiles and
+    // retired graph rounds on its behalf (counters are cumulative, so
+    // compare against the snapshot taken before the bursts)
+    let d = asd::runtime::pool::global_stats().since(&pool_before);
+    assert!(d.tile_tasks > 0,
+            "no graph tiles executed — the NativeMlp lane never took \
+             the compiled-round path");
+    assert!(d.graph_rounds > 0, "no graph rounds retired");
 }
 
 #[test]

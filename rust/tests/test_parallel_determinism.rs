@@ -298,6 +298,9 @@ fn single_worker_two_lane_burst_overlaps_without_barrier() {
 /// samples across pool sizes 1/2/8 AND across repeated runs (each rep
 /// samples a different steal schedule). The kernel config is frozen
 /// per model, so the only thing sharding may change is wall-clock.
+/// Multi-row rounds route through the compiled tile graph here (the
+/// zero-barrier path), so the reps also sample graph ready-queue
+/// orders — which likewise may not move a bit.
 #[test]
 fn native_mlp_bit_identical_across_pool_sizes_for_fixed_isa() {
     use asd::model::{NativeMlp, VariantInfo};
