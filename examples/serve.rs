@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             sampler,
             seed: 7_000 + i as u64,
             cond,
+            deadline: None,
         });
         pending.push((variant, sampler, rx));
     }

@@ -43,7 +43,7 @@
 //! — enforced by tests/test_fusion_determinism.rs.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -51,13 +51,118 @@ use crate::asd::draft::DraftStepMachine;
 use crate::asd::engine::AsdStepMachine;
 use crate::asd::AsdStats;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{QueuedJob, Response, SamplerSpec};
+use crate::coordinator::request::{FailReason, QueuedJob, Response,
+                                  SamplerSpec};
 use crate::ddpm::{NoiseStreams, SequentialStepMachine};
 use crate::model::DenoiseModel;
 use crate::picard::PicardStepMachine;
 use crate::runtime::pool::{PoolConfig, TileGraph};
 use crate::sampler::{ArenaSpan, RoundArena, RoundExec, SamplerPoll,
                      StepSampler};
+
+/// Failure-recovery knobs for a lane's fused rounds (part of
+/// `ServerConfig`). Retry is *from scratch*: a request caught in a
+/// faulted fused round gets a freshly built machine, which is
+/// bit-transparent because machines are pure functions of
+/// `(seed, cond)` over pre-drawn noise streams. Backoff is measured in
+/// *lane rounds*, not wall-clock — a request waiting out its backoff
+/// simply skips `backoff_rounds << (retries-1)` polls — so the retry
+/// schedule is identical across pool sizes and steal schedules (the
+/// chaos determinism suite depends on this).
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryPolicy {
+    /// per-request restarts granted after faulted fused rounds; past
+    /// this the request fails with the round's `FailReason`
+    pub retry_max: u32,
+    /// base backoff (in lane rounds) before a retried request polls
+    /// again; doubles per retry
+    pub backoff_rounds: u32,
+    /// consecutive faulted rounds before the lane's circuit breaker
+    /// opens and admissions are rejected (`FailReason::BreakerOpen`)
+    pub breaker_threshold: u32,
+    /// how long an open breaker rejects before letting a half-open
+    /// probe batch through
+    pub breaker_cooldown: Duration,
+    /// scan each request's output rows for NaN/Inf after a successful
+    /// fused round, failing only the offending request
+    /// (`FailReason::NonFinite`)
+    pub validate_outputs: bool,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy {
+            retry_max: 2,
+            backoff_rounds: 1,
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(250),
+            validate_outputs: true,
+        }
+    }
+}
+
+/// Per-lane circuit breaker: `threshold` consecutive faulted rounds
+/// open it; while open, admissions are rejected; after `cooldown` one
+/// half-open probe batch is admitted — success closes the breaker,
+/// another fault reopens it immediately.
+enum BreakerState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen,
+}
+
+struct Breaker {
+    streak: u32,
+    state: BreakerState,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker { streak: 0, state: BreakerState::Closed }
+    }
+
+    /// Whether admissions may proceed. An expired cooldown flips the
+    /// breaker half-open and admits the caller's batch as the probe.
+    fn admit(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if Instant::now() >= until {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a faulted round; returns true when this failure tripped
+    /// the breaker open (a half-open probe failure reopens at once).
+    fn on_failure(&mut self, policy: &RecoveryPolicy) -> bool {
+        self.streak += 1;
+        let trip = match self.state {
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => {
+                self.streak >= policy.breaker_threshold.max(1)
+            }
+            BreakerState::Open { .. } => false,
+        };
+        if trip {
+            self.state = BreakerState::Open {
+                until: Instant::now() + policy.breaker_cooldown,
+            };
+        }
+        trip
+    }
+
+    /// A clean fused round: reset the streak and close the breaker
+    /// (a successful half-open probe is exactly this).
+    fn on_success(&mut self) {
+        self.streak = 0;
+        self.state = BreakerState::Closed;
+    }
+}
 
 /// Per-request sampler state machine (concrete enum so finished
 /// machines can surface their sampler-specific stats without downcasts).
@@ -154,6 +259,10 @@ struct ActiveRequest {
     /// queue wait, frozen at admission
     queued_s: f64,
     admitted: Instant,
+    /// from-scratch restarts consumed after faulted fused rounds
+    retries: u32,
+    /// backoff: rounds left to skip before this request polls again
+    wait_rounds: u32,
 }
 
 pub(crate) struct FusionScheduler {
@@ -171,11 +280,17 @@ pub(crate) struct FusionScheduler {
     /// execution report staged between `execute_round` and
     /// `finish_round`
     round: Option<RoundExec>,
-    /// fused-call error staged for `finish_round` to fail the group
-    round_err: Option<String>,
+    /// fused-call failure staged for `finish_round` to run recovery on
+    /// (structured reason when the failure class is known, plus the
+    /// display message)
+    round_err: Option<(Option<FailReason>, String)>,
     /// (t0, shards) staged by `compile_round` for `complete_round` to
     /// turn into the execution report once the pool finishes the graph
     staged_graph: Option<(Instant, usize)>,
+    /// failure-recovery knobs (retry budget, backoff, breaker)
+    recovery: RecoveryPolicy,
+    /// per-lane circuit breaker gating admissions
+    breaker: Breaker,
 }
 
 impl FusionScheduler {
@@ -188,7 +303,8 @@ impl FusionScheduler {
     /// behavior).
     pub(crate) fn new(model: Arc<dyn DenoiseModel>,
                       draft: Option<Arc<dyn DenoiseModel>>, lane: &str,
-                      arena_byte_cap: usize) -> FusionScheduler {
+                      arena_byte_cap: usize, recovery: RecoveryPolicy)
+                      -> FusionScheduler {
         let mut arena = RoundArena::for_model(model.as_ref());
         arena.set_byte_cap(arena_byte_cap);
         FusionScheduler {
@@ -201,7 +317,34 @@ impl FusionScheduler {
             round: None,
             round_err: None,
             staged_graph: None,
+            recovery,
+            breaker: Breaker::new(),
         }
+    }
+
+    /// Whether this lane has a paired draft model — `Lane::admit`
+    /// rejects `SamplerSpec::Draft` jobs *before* they are counted
+    /// admitted when it doesn't.
+    pub(crate) fn has_draft(&self) -> bool {
+        self.draft.is_some()
+    }
+
+    /// Breaker admission gate (see [`Breaker::admit`]).
+    pub(crate) fn breaker_admits(&mut self) -> bool {
+        self.breaker.admit()
+    }
+
+    /// Hot-swap the lane's model (and paired draft) —
+    /// `Coordinator::reload_variant`. Already-built machines keep
+    /// their own `Arc` clones of the old model's metadata and finish
+    /// untouched; fused *calls* route through the new model from the
+    /// next round, and retries/new admissions build against it. The
+    /// caller guarantees matching geometry (dim / cond_dim / k_steps),
+    /// so the arena carries over as-is.
+    pub(crate) fn set_model(&mut self, model: Arc<dyn DenoiseModel>,
+                            draft: Option<Arc<dyn DenoiseModel>>) {
+        self.model = model;
+        self.draft = draft;
     }
 
     pub(crate) fn len(&self) -> usize {
@@ -226,6 +369,8 @@ impl FusionScheduler {
                     machine,
                     queued_s,
                     admitted: Instant::now(),
+                    retries: 0,
+                    wait_rounds: 0,
                 });
             }
             Err(e) => {
@@ -249,12 +394,31 @@ impl FusionScheduler {
         let mut completed = 0usize;
         let mut idx = 0usize;
         while idx < self.active.len() {
+            // deadline sweep: an expired in-flight request is
+            // cancelled here, at the round boundary — its rows are
+            // simply never staged, so the arena reclaims them with
+            // this round's begin_round reset
+            if self.active[idx].job.expired() {
+                metrics.on_timeout(&self.lane, true);
+                self.fail_at(idx, Some(FailReason::Timeout),
+                             "deadline exceeded (request cancelled at \
+                              round boundary)", metrics);
+                continue;
+            }
+            // backoff: a retried request sits out its wait without
+            // contributing rows (rounds, not wall-clock — see
+            // RecoveryPolicy)
+            if self.active[idx].wait_rounds > 0 {
+                self.active[idx].wait_rounds -= 1;
+                idx += 1;
+                continue;
+            }
             match self.active[idx].machine.as_step()
                 .poll_into(&mut self.arena)
             {
                 Err(e) => {
                     let msg = e.to_string();
-                    self.fail_at(idx, &msg, metrics);
+                    self.fail_at(idx, None, &msg, metrics);
                     // swap_remove moved an unpolled request into `idx`
                 }
                 Ok(None) => {
@@ -266,13 +430,13 @@ impl FusionScheduler {
                             completed += 1;
                         }
                         Ok(SamplerPoll::Demand(_)) => {
-                            self.fail_at(idx,
+                            self.fail_at(idx, None,
                                          "machine demanded rows after \
                                           reporting done", metrics);
                         }
                         Err(e) => {
                             let msg = e.to_string();
-                            self.fail_at(idx, &msg, metrics);
+                            self.fail_at(idx, None, &msg, metrics);
                         }
                     }
                 }
@@ -324,12 +488,14 @@ impl FusionScheduler {
             }
             Ok(Ok(None)) => None,
             Ok(Err(e)) => {
-                self.round_err = Some(e.to_string());
+                self.round_err = Some((None, e.to_string()));
                 None
             }
             Err(_) => {
-                self.round_err = Some(
-                    "model call panicked during round compilation".into());
+                self.round_err = Some((
+                    Some(FailReason::ModelPanic),
+                    "model call panicked during round compilation".into(),
+                ));
                 None
             }
         }
@@ -349,8 +515,11 @@ impl FusionScheduler {
             return false;
         };
         if panicked {
-            self.round_err =
-                Some("model call panicked during fused round".into());
+            self.round_err = Some((
+                Some(FailReason::TilePanic),
+                "tile panicked during fused graph round (dependents \
+                 cancelled)".into(),
+            ));
         } else {
             self.round = Some(RoundExec {
                 latency_s: t0.elapsed().as_secs_f64(),
@@ -389,25 +558,31 @@ impl FusionScheduler {
                     shards,
                 });
             }
-            Ok(Err(e)) => self.round_err = Some(e.to_string()),
+            Ok(Err(e)) => self.round_err = Some((None, e.to_string())),
             Err(_) => {
-                self.round_err =
-                    Some("model call panicked during fused round".into());
+                self.round_err = Some((
+                    Some(FailReason::ModelPanic),
+                    "model call panicked during fused round".into(),
+                ));
             }
         }
     }
 
     /// Phase 3 — scatter: resume every demanding machine from its view
-    /// into the arena's output region. On a fused-call error the whole
-    /// group fails (they shared the call) and is drained.
+    /// into the arena's output region. A fused-call failure runs
+    /// recovery instead: every participant of the faulted call either
+    /// restarts from scratch (bounded, backed-off) or — budget spent —
+    /// fails with the round's `FailReason`; requests sitting out a
+    /// backoff were never in the call and are untouched.
     pub(crate) fn finish_round(&mut self, metrics: &Metrics) {
         if self.spans.is_empty() {
             return;
         }
-        if let Some(msg) = self.round_err.take() {
-            self.fail_all(&msg, metrics);
+        if let Some((reason, msg)) = self.round_err.take() {
+            self.recover_round(reason, &msg, metrics);
             return;
         }
+        self.breaker.on_success();
         let exec = self.round.take()
             .expect("finish_round without execute_round");
         let rows = self.arena.rows();
@@ -421,6 +596,25 @@ impl FusionScheduler {
         // loop, so the span indices stay valid throughout.
         let mut failed: Vec<usize> = Vec::new();
         for &(idx, span) in &self.spans {
+            // non-finite output validation: the fused call succeeded,
+            // but THIS request's rows came back NaN/Inf — fail only
+            // the offending request, never the lane or its roundmates
+            if self.recovery.validate_outputs
+                && !self.arena.out_rows(span).iter()
+                    .all(|v| v.is_finite())
+            {
+                let ar = &self.active[idx];
+                metrics.on_complete(ar.queued_s,
+                                    ar.admitted.elapsed().as_secs_f64(),
+                                    0, 0, true);
+                let mut resp = Response::failed_with(
+                    ar.job.request.id, ar.queued_s, FailReason::NonFinite,
+                    "non-finite model output in this request's rows");
+                resp.retries = ar.retries;
+                let _ = ar.job.reply.send(resp);
+                failed.push(idx);
+                continue;
+            }
             if let Err(e) = self.active[idx].machine.as_step()
                 .resume_from(&self.arena, span, exec)
             {
@@ -437,6 +631,53 @@ impl FusionScheduler {
         failed.sort_unstable_by(|a, b| b.cmp(a));
         for idx in failed {
             self.active.swap_remove(idx);
+        }
+        self.spans.clear();
+    }
+
+    /// The staged round failed as a unit (panic, tile panic, or model
+    /// error). Feed the breaker, then quarantine-and-retry: each
+    /// participant with retry budget left gets a from-scratch machine
+    /// (bit-transparent — pure function of `(seed, cond)`) plus an
+    /// exponential round-count backoff; the rest fail with the round's
+    /// reason. Fix for the old behavior where one poisoned row failed
+    /// the whole fused group irrecoverably.
+    fn recover_round(&mut self, reason: Option<FailReason>, msg: &str,
+                     metrics: &Metrics) {
+        if self.breaker.on_failure(&self.recovery) {
+            metrics.on_breaker_trip(&self.lane);
+        }
+        let mut failed: Vec<usize> = Vec::new();
+        for i in 0..self.spans.len() {
+            let idx = self.spans[i].0;
+            if self.active[idx].retries >= self.recovery.retry_max {
+                failed.push(idx);
+                continue;
+            }
+            let (sampler, seed, cond) = {
+                let r = &self.active[idx].job.request;
+                (r.sampler, r.seed, r.cond.clone())
+            };
+            match Machine::for_request(self.model.clone(),
+                                       self.draft.clone(), sampler, seed,
+                                       &cond) {
+                Ok(machine) => {
+                    let ar = &mut self.active[idx];
+                    ar.retries += 1;
+                    ar.machine = machine;
+                    let shift = (ar.retries - 1).min(16);
+                    ar.wait_rounds = self.recovery.backoff_rounds
+                        .saturating_mul(1u32 << shift);
+                    metrics.on_retry(&self.lane);
+                }
+                // unreachable in practice (the machine was already
+                // built once at admission); fail cleanly if it happens
+                Err(_) => failed.push(idx),
+            }
+        }
+        failed.sort_unstable_by(|a, b| b.cmp(a));
+        for idx in failed {
+            self.fail_at(idx, reason, msg, metrics);
         }
         self.spans.clear();
     }
@@ -472,26 +713,36 @@ impl FusionScheduler {
             service_s,
             rejected: false,
             error: None,
+            reason: None,
+            retries: ar.retries,
         });
     }
 
     /// Answer and remove the request at `idx` (failure).
-    fn fail_at(&mut self, idx: usize, msg: &str, metrics: &Metrics) {
+    fn fail_at(&mut self, idx: usize, reason: Option<FailReason>, msg: &str,
+               metrics: &Metrics) {
         let ar = self.active.swap_remove(idx);
         metrics.on_complete(ar.queued_s, ar.admitted.elapsed().as_secs_f64(),
                             0, 0, true);
-        let _ = ar.job.reply.send(Response::failed(ar.job.request.id,
-                                                   ar.queued_s, msg));
+        let mut resp = Response::failed(ar.job.request.id, ar.queued_s, msg);
+        resp.reason = reason;
+        resp.retries = ar.retries;
+        let _ = ar.job.reply.send(resp);
     }
 
-    /// Fail every in-flight request (shared model call errored).
-    pub(crate) fn fail_all(&mut self, msg: &str, metrics: &Metrics) {
+    /// Fail every in-flight request (the lane itself is unusable —
+    /// driver-level panic containment and teardown paths).
+    pub(crate) fn fail_all(&mut self, reason: Option<FailReason>, msg: &str,
+                           metrics: &Metrics) {
         for ar in self.active.drain(..) {
             metrics.on_complete(ar.queued_s,
                                 ar.admitted.elapsed().as_secs_f64(), 0, 0,
                                 true);
-            let _ = ar.job.reply.send(Response::failed(ar.job.request.id,
-                                                       ar.queued_s, msg));
+            let mut resp = Response::failed(ar.job.request.id, ar.queued_s,
+                                            msg);
+            resp.reason = reason;
+            resp.retries = ar.retries;
+            let _ = ar.job.reply.send(resp);
         }
         self.spans.clear();
     }
@@ -515,6 +766,7 @@ mod tests {
                 sampler,
                 seed,
                 cond: vec![],
+                deadline: None,
             },
             reply: tx,
             enqueued: Instant::now(),
@@ -526,7 +778,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 30, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model.clone(), None, "gmm", 0);
+        let mut sched = FusionScheduler::new(model.clone(), None, "gmm", 0,
+                                             RecoveryPolicy::default());
         let (j1, rx1) = queued("gmm", SamplerSpec::Sequential, 5);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 6);
         sched.admit(j1, &metrics);
@@ -567,7 +820,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 40, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, None, "gmm", 0);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0,
+                                             RecoveryPolicy::default());
         let (j1, rx1) = queued("gmm", SamplerSpec::Asd(8), 1);
         let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 2);
         let (j3, rx3) = queued("gmm", SamplerSpec::Picard(8, 1e-6), 3);
@@ -604,7 +858,8 @@ mod tests {
         let metrics = Metrics::default();
         // a 1-byte cap: any staged round overflows it, so the drain
         // must release the buffers entirely
-        let mut sched = FusionScheduler::new(model, None, "gmm", 1);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 1,
+                                             RecoveryPolicy::default());
         let (j, rx) = queued("gmm", SamplerSpec::Sequential, 4);
         sched.admit(j, &metrics);
         let mut ticks = 0usize;
@@ -627,7 +882,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, None, "gmm", 0);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0,
+                                             RecoveryPolicy::default());
         let (tx, rx) = channel();
         sched.admit(QueuedJob {
             request: Request {
@@ -636,6 +892,7 @@ mod tests {
                 sampler: SamplerSpec::Sequential,
                 seed: 0,
                 cond: vec![1.0, 2.0], // model is unconditional
+                deadline: None,
             },
             reply: tx,
             enqueued: Instant::now(),
@@ -653,7 +910,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
         let metrics = Metrics::default();
-        let mut sched = FusionScheduler::new(model, None, "gmm", 0);
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0,
+                                             RecoveryPolicy::default());
         let (j, rx) = queued("gmm", SamplerSpec::Sequential, 9);
         sched.admit(j, &metrics);
         let mut rounds = 0usize;
@@ -670,5 +928,278 @@ mod tests {
         let r = rx.recv().unwrap();
         assert!(r.error.is_none());
         assert_eq!(r.model_calls, 20);
+    }
+
+    use crate::schedule::DdpmSchedule;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    /// Fails the first `remaining` fused rounds with an `Err`, then
+    /// delegates cleanly — the minimal fault the retry path must
+    /// absorb.
+    struct FailFirst {
+        inner: Arc<dyn DenoiseModel>,
+        remaining: AtomicUsize,
+    }
+
+    impl DenoiseModel for FailFirst {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn cond_dim(&self) -> usize {
+            self.inner.cond_dim()
+        }
+        fn k_steps(&self) -> usize {
+            self.inner.k_steps()
+        }
+        fn schedule(&self) -> &DdpmSchedule {
+            self.inner.schedule()
+        }
+        fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64],
+                         n: usize, out: &mut [f64]) -> Result<()> {
+            self.inner.denoise_batch(ys, ts, cond, n, out)
+        }
+        fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
+            let r = self.remaining.load(Ordering::SeqCst);
+            if r > 0 {
+                self.remaining.store(r - 1, Ordering::SeqCst);
+                anyhow::bail!("injected round failure");
+            }
+            self.inner.denoise_round(arena)
+        }
+    }
+
+    #[test]
+    fn faulted_round_retries_from_scratch_bit_identically() {
+        let inner: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 20, false);
+        let model: Arc<dyn DenoiseModel> = Arc::new(FailFirst {
+            inner: inner.clone(),
+            remaining: AtomicUsize::new(1),
+        });
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0,
+                                             RecoveryPolicy::default());
+        let (j, rx) = queued("gmm", SamplerSpec::Sequential, 5);
+        sched.admit(j, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 200, "retried request failed to drain");
+        }
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.retries, 1);
+        // retry-from-scratch is bit-transparent
+        let (want, _) = SequentialSampler::new(inner).sample(5, &[]).unwrap();
+        let bits = |v: &[f64]| -> Vec<u64> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&r.sample), bits(&want));
+        let m = metrics.snapshot();
+        assert_eq!(m.retried, 1);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.lane("gmm").unwrap().retried, 1);
+    }
+
+    /// Always panics in the fused call.
+    struct AlwaysPanics(Arc<dyn DenoiseModel>);
+
+    impl DenoiseModel for AlwaysPanics {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+        fn cond_dim(&self) -> usize {
+            self.0.cond_dim()
+        }
+        fn k_steps(&self) -> usize {
+            self.0.k_steps()
+        }
+        fn schedule(&self) -> &DdpmSchedule {
+            self.0.schedule()
+        }
+        fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64],
+                         n: usize, out: &mut [f64]) -> Result<()> {
+            self.0.denoise_batch(ys, ts, cond, n, out)
+        }
+        fn denoise_round(&self, _arena: &mut RoundArena) -> Result<()> {
+            panic!("injected model panic");
+        }
+    }
+
+    #[test]
+    fn exhausted_retry_budget_fails_with_model_panic_reason() {
+        let inner: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        let model: Arc<dyn DenoiseModel> = Arc::new(AlwaysPanics(inner));
+        let metrics = Metrics::default();
+        let recovery = RecoveryPolicy {
+            retry_max: 1,
+            backoff_rounds: 0,
+            ..RecoveryPolicy::default()
+        };
+        let mut sched =
+            FusionScheduler::new(model, None, "gmm", 0, recovery);
+        let (j, rx) = queued("gmm", SamplerSpec::Sequential, 3);
+        sched.admit(j, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 50, "failed request did not drain");
+        }
+        let r = rx.recv().unwrap();
+        assert_eq!(r.reason, Some(FailReason::ModelPanic));
+        assert!(r.error.as_deref().unwrap().contains("panicked"));
+        assert_eq!(r.retries, 1);
+        let m = metrics.snapshot();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.retried, 1);
+    }
+
+    #[test]
+    fn breaker_opens_after_streak_and_half_open_probe_recovers() {
+        let inner: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        let model: Arc<dyn DenoiseModel> = Arc::new(FailFirst {
+            inner,
+            remaining: AtomicUsize::new(2),
+        });
+        let metrics = Metrics::default();
+        let recovery = RecoveryPolicy {
+            retry_max: 0,
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(5),
+            ..RecoveryPolicy::default()
+        };
+        let mut sched =
+            FusionScheduler::new(model, None, "gmm", 0, recovery);
+        for seed in [1u64, 2] {
+            assert!(sched.breaker_admits(),
+                    "breaker closed before threshold");
+            let (j, rx) = queued("gmm", SamplerSpec::Sequential, seed);
+            sched.admit(j, &metrics);
+            while !sched.is_empty() {
+                sched.tick(&metrics);
+            }
+            assert!(rx.recv().unwrap().error.is_some());
+        }
+        // streak hit the threshold: open, admissions refused
+        assert!(!sched.breaker_admits(), "breaker failed to open");
+        assert_eq!(metrics.snapshot().breaker_trips, 1);
+        std::thread::sleep(Duration::from_millis(10));
+        // cooldown elapsed: half-open probe admitted, model is healthy
+        // again, the clean round closes the breaker
+        assert!(sched.breaker_admits(), "cooldown did not half-open");
+        let (j, rx) = queued("gmm", SamplerSpec::Sequential, 3);
+        sched.admit(j, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 50, "probe failed to drain");
+        }
+        assert!(rx.recv().unwrap().error.is_none());
+        assert!(sched.breaker_admits(), "probe success did not close");
+        assert_eq!(metrics.snapshot().breaker_trips, 1);
+    }
+
+    #[test]
+    fn expired_deadline_is_cancelled_at_the_round_boundary() {
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0,
+                                             RecoveryPolicy::default());
+        let (tx, rx) = channel();
+        sched.admit(QueuedJob {
+            request: Request {
+                id: 1,
+                variant: "gmm".into(),
+                sampler: SamplerSpec::Sequential,
+                seed: 1,
+                cond: vec![],
+                deadline: Some(Duration::ZERO),
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }, &metrics);
+        sched.tick(&metrics);
+        assert!(sched.is_empty());
+        let r = rx.recv().unwrap();
+        assert_eq!(r.reason, Some(FailReason::Timeout));
+        assert!(!r.rejected, "timeout is a failure, not a rejection");
+        assert!(r.error.as_deref().unwrap().contains("deadline"));
+        let m = metrics.snapshot();
+        assert_eq!(m.timed_out, 1);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.failed, 1);
+    }
+
+    /// Corrupts row 0's output whenever a round fuses >= 2 rows —
+    /// exactly one request's span goes non-finite.
+    struct NanRow0(Arc<dyn DenoiseModel>);
+
+    impl DenoiseModel for NanRow0 {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+        fn cond_dim(&self) -> usize {
+            self.0.cond_dim()
+        }
+        fn k_steps(&self) -> usize {
+            self.0.k_steps()
+        }
+        fn schedule(&self) -> &DdpmSchedule {
+            self.0.schedule()
+        }
+        fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64],
+                         n: usize, out: &mut [f64]) -> Result<()> {
+            self.0.denoise_batch(ys, ts, cond, n, out)
+        }
+        fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
+            self.0.denoise_round(arena)?;
+            let (_, _, _, n, out) = arena.round_io();
+            if n >= 2 {
+                out[0] = f64::NAN;
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn non_finite_output_fails_only_the_offending_request() {
+        let inner: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 15, false);
+        let model: Arc<dyn DenoiseModel> = Arc::new(NanRow0(inner.clone()));
+        let metrics = Metrics::default();
+        let mut sched = FusionScheduler::new(model, None, "gmm", 0,
+                                             RecoveryPolicy::default());
+        let (j1, rx1) = queued("gmm", SamplerSpec::Sequential, 5);
+        let (j2, rx2) = queued("gmm", SamplerSpec::Sequential, 6);
+        sched.admit(j1, &metrics);
+        sched.admit(j2, &metrics);
+        let mut ticks = 0usize;
+        while !sched.is_empty() {
+            sched.tick(&metrics);
+            ticks += 1;
+            assert!(ticks < 100, "group failed to drain");
+        }
+        // request 1 owned row 0 of the first fused round: it alone
+        // fails; its roundmate finishes with solo bits
+        let r1 = rx1.recv().unwrap();
+        assert_eq!(r1.reason, Some(FailReason::NonFinite));
+        assert!(r1.error.as_deref().unwrap().contains("non-finite"));
+        let r2 = rx2.recv().unwrap();
+        assert!(r2.error.is_none(), "{:?}", r2.error);
+        let (want, _) = SequentialSampler::new(inner).sample(6, &[]).unwrap();
+        let bits = |v: &[f64]| -> Vec<u64> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&r2.sample), bits(&want));
+        let m = metrics.snapshot();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 1);
     }
 }

@@ -35,9 +35,11 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::coordinator::fusion::FusionScheduler;
+use crate::coordinator::fusion::{FusionScheduler, RecoveryPolicy};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::QueuedJob;
+use crate::coordinator::request::{FailReason, QueuedJob, Response,
+                                  SamplerSpec};
+use crate::faults::{ChaosModel, FaultPlan};
 use crate::model::{DenoiseModel, ParallelModel};
 use crate::runtime::pool::PoolConfig;
 
@@ -52,6 +54,16 @@ pub(crate) struct Lane {
     /// whether the current fusion group has been counted in the
     /// batched_groups metrics (a group is >= 2 concurrent requests)
     counted: bool,
+    /// the pool config the lane wraps models with — kept so
+    /// `set_model` re-wraps hot-reloaded snapshots identically
+    pool: PoolConfig,
+    /// fault-injection plan, when this coordinator runs under chaos
+    /// (`ServerConfig::faults`); re-applied on reload
+    faults: Option<FaultPlan>,
+    /// which registry epoch this lane's model snapshot came from
+    /// (`server::Shared::reload_epoch`); stale lanes get refreshed by
+    /// the driver before serving
+    pub(crate) epoch: u64,
 }
 
 impl Lane {
@@ -61,20 +73,54 @@ impl Lane {
     /// (None = `SamplerSpec::Draft` requests fail cleanly at
     /// admission). `arena_byte_cap` bounds the lane arena's burst
     /// footprint (`ServerConfig::arena_byte_cap`; 0 = unbounded).
+    /// `faults` injects deterministic faults into the lane's fused
+    /// calls (chaos testing); `recovery` governs deadline/retry/breaker
+    /// behavior.
     pub(crate) fn new(variant: &str, model: Arc<dyn DenoiseModel>,
                       draft: Option<Arc<dyn DenoiseModel>>,
-                      pool: PoolConfig, arena_byte_cap: usize) -> Lane {
-        // one ParallelModel wrapper per lane: fused rounds shard on the
-        // global pool exactly like solo engines' batched rounds. The
-        // draft stays un-wrapped — its chain calls are single-row
-        // `denoise_one`s that never hit the round plane.
-        let model = ParallelModel::wrap(model, pool);
+                      pool: PoolConfig, arena_byte_cap: usize,
+                      faults: Option<&FaultPlan>,
+                      recovery: RecoveryPolicy) -> Lane {
+        let faults = faults.cloned();
+        let model = Lane::wrap_model(variant, model, pool, &faults);
         Lane {
             variant: variant.to_string(),
             sched: FusionScheduler::new(model, draft, variant,
-                                        arena_byte_cap),
+                                        arena_byte_cap, recovery),
             counted: false,
+            pool,
+            faults,
+            epoch: 0,
         }
+    }
+
+    /// The lane's model wrapping chain: `ParallelModel` for pool
+    /// sharding, then (under chaos) `ChaosModel` *outside* it so fault
+    /// decisions are per-round, never per-shard — injection stays
+    /// bit-identical across pool sizes. The draft stays un-wrapped —
+    /// its chain calls are single-row `denoise_one`s that never hit
+    /// the round plane.
+    fn wrap_model(variant: &str, model: Arc<dyn DenoiseModel>,
+                  pool: PoolConfig, faults: &Option<FaultPlan>)
+                  -> Arc<dyn DenoiseModel> {
+        let model = ParallelModel::wrap(model, pool);
+        match faults {
+            Some(plan) => ChaosModel::wrap(model, plan.clone(), variant),
+            None => model,
+        }
+    }
+
+    /// Hot-swap the lane's model snapshot (`Coordinator::reload_variant`
+    /// bumped the registry epoch): re-wrap the new snapshot with the
+    /// same pool/chaos chain and hand it to the scheduler. In-flight
+    /// machines keep their old `Arc` clones and finish untouched.
+    pub(crate) fn set_model(&mut self, model: Arc<dyn DenoiseModel>,
+                            draft: Option<Arc<dyn DenoiseModel>>,
+                            epoch: u64) {
+        let model = Lane::wrap_model(&self.variant, model, self.pool,
+                                     &self.faults);
+        self.sched.set_model(model, draft);
+        self.epoch = epoch;
     }
 
     pub(crate) fn in_flight(&self) -> usize {
@@ -94,6 +140,61 @@ impl Lane {
     /// admits.
     pub(crate) fn admit(&mut self, jobs: &mut Vec<QueuedJob>,
                         metrics: &Metrics) {
+        if jobs.is_empty() {
+            return;
+        }
+        // Pre-admission gate: answer jobs the scheduler must never see
+        // BEFORE the group-formation counters run, so admitted/rejected
+        // accounting only covers requests that actually entered the
+        // fused scheduler.
+        if !self.sched.breaker_admits() {
+            // breaker open: the whole batch is turned away while the
+            // lane cools down (half-open lets the next batch probe)
+            for job in jobs.drain(..) {
+                metrics.on_lane_reject(&self.variant);
+                let resp = Response {
+                    rejected: true,
+                    reason: Some(FailReason::BreakerOpen),
+                    error: Some(format!(
+                        "rejected: lane '{}' circuit breaker open \
+                         (cooling down after repeated round failures)",
+                        self.variant)),
+                    ..Response::failed(
+                        job.request.id,
+                        job.enqueued.elapsed().as_secs_f64(), "")
+                };
+                let _ = job.reply.send(resp);
+            }
+            return;
+        }
+        jobs.retain(|job| {
+            let queued_s = job.enqueued.elapsed().as_secs_f64();
+            if job.expired() {
+                // dead on arrival: its budget ran out in the queue
+                metrics.on_timeout(&self.variant, false);
+                metrics.on_complete(queued_s, 0.0, 0, 0, true);
+                let _ = job.reply.send(Response::failed_with(
+                    job.request.id, queued_s, FailReason::Timeout,
+                    "deadline exceeded while queued (request never \
+                     admitted)"));
+                return false;
+            }
+            if matches!(job.request.sampler, SamplerSpec::Draft(_))
+                && !self.sched.has_draft()
+            {
+                // reject BEFORE counting: a draft request with no
+                // paired draft model must not inflate the lane's
+                // admitted/batched counters on its way to an error
+                metrics.on_complete(queued_s, 0.0, 0, 0, true);
+                let _ = job.reply.send(Response::failed_with(
+                    job.request.id, queued_s, FailReason::NoDraftPairing,
+                    "no draft model paired for this variant (pair one \
+                     with Coordinator::pair_draft before submitting \
+                     draft requests)"));
+                return false;
+            }
+            true
+        });
         if jobs.is_empty() {
             return;
         }
@@ -155,8 +256,9 @@ impl Lane {
     /// Fail every in-flight request on this lane (a sampler machine
     /// panicked mid-round: its state is unusable, so the whole group is
     /// answered with an error instead of stranding clients).
-    pub(crate) fn fail_all(&mut self, msg: &str, metrics: &Metrics) {
-        self.sched.fail_all(msg, metrics);
+    pub(crate) fn fail_all(&mut self, reason: Option<FailReason>,
+                           msg: &str, metrics: &Metrics) {
+        self.sched.fail_all(reason, msg, metrics);
     }
 }
 
@@ -248,6 +350,16 @@ impl LaneState {
                       out);
     }
 
+    /// Whether every lane slot is parked (not held by a worker) and
+    /// idle — together with `depth() == 0` this is the "fully drained"
+    /// condition `Coordinator::drain` waits on. A held slot (`None`)
+    /// counts as not-idle: its worker may still be driving rounds.
+    pub(crate) fn all_parked_idle(&self) -> bool {
+        self.slots.values().all(|slot| {
+            slot.as_ref().is_some_and(|l| l.is_idle())
+        })
+    }
+
     /// Pop the single globally-oldest queued job (by request id — ids
     /// are assigned monotonically at submission). The batching-off /
     /// `max_batch == 1` serving path.
@@ -323,20 +435,27 @@ mod tests {
     use std::time::Instant;
 
     fn job(variant: &str, id: u64) -> QueuedJob {
-        let (tx, _rx) = channel();
+        let (j, _rx) = job_with_rx(variant, id, SamplerSpec::Sequential);
         // leak the receiver: these tests never reply
         std::mem::forget(_rx);
-        QueuedJob {
+        j
+    }
+
+    fn job_with_rx(variant: &str, id: u64, sampler: SamplerSpec)
+                   -> (QueuedJob, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (QueuedJob {
             request: Request {
                 id,
                 variant: variant.into(),
-                sampler: SamplerSpec::Sequential,
+                sampler,
                 seed: 0,
                 cond: vec![],
+                deadline: None,
             },
             reply: tx,
             enqueued: Instant::now(),
-        }
+        }, rx)
     }
 
     #[test]
@@ -403,7 +522,8 @@ mod tests {
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         // an idle parked lane is NOT flagged
         st.release(Box::new(Lane::new("idle", model.clone(), None,
-                                      PoolConfig::default(), 0)));
+                                      PoolConfig::default(), 0, None,
+                                      RecoveryPolicy::default())));
         let mut out = Vec::new();
         st.parked_nonidle(&mut out);
         assert!(out.is_empty());
@@ -411,13 +531,48 @@ mod tests {
         // panic-recovery path)
         let metrics = Metrics::default();
         let mut lane = Box::new(Lane::new("busy", model, None,
-                                          PoolConfig::default(), 0));
+                                          PoolConfig::default(), 0, None,
+                                          RecoveryPolicy::default()));
         let mut batch = vec![job("busy", 1)];
         lane.admit(&mut batch, &metrics);
         assert!(!lane.is_idle());
         st.release(lane);
         st.parked_nonidle(&mut out);
         assert_eq!(out, vec!["busy".to_string()]);
+    }
+
+    #[test]
+    fn unpaired_draft_requests_are_rejected_before_counting() {
+        use crate::coordinator::metrics::Metrics;
+        use crate::model::{Gmm, GmmDdpmOracle};
+        let model: Arc<dyn DenoiseModel> =
+            GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
+        // no draft paired on this lane
+        let mut lane = Lane::new("gmm", model, None,
+                                 PoolConfig::default(), 0, None,
+                                 RecoveryPolicy::default());
+        let metrics = Metrics::default();
+        let (seq, seq_rx) =
+            job_with_rx("gmm", 1, SamplerSpec::Sequential);
+        let (draft, draft_rx) =
+            job_with_rx("gmm", 2, SamplerSpec::Draft(8));
+        let mut batch = vec![seq, draft];
+        lane.admit(&mut batch, &metrics);
+        // the draft job was answered at the gate, pre-admission
+        let resp = draft_rx.try_recv().expect("draft job answered");
+        assert_eq!(resp.reason, Some(FailReason::NoDraftPairing));
+        assert!(resp.error.unwrap().contains("pair_draft"));
+        assert!(!resp.rejected); // admitted-then-failed taxonomy: failed
+        // the sequential job entered the scheduler and is in flight
+        assert!(seq_rx.try_recv().is_err());
+        assert_eq!(lane.in_flight(), 1);
+        let s = metrics.snapshot();
+        // accounting: exactly the surviving request was admitted, the
+        // gate never formed a >= 2 "batch group" around the reject
+        assert_eq!(s.lane("gmm").unwrap().admitted, 1);
+        assert_eq!(s.batched_groups, 0);
+        assert_eq!(s.batched_requests, 0);
+        assert_eq!(s.failed, 1);
     }
 
     #[test]
@@ -444,7 +599,8 @@ mod tests {
         let model: Arc<dyn DenoiseModel> =
             GmmDdpmOracle::new(Gmm::circle_2d(), 10, false);
         let lane = Box::new(Lane::new("a", model, None,
-                                      PoolConfig::default(), 0));
+                                      PoolConfig::default(), 0, None,
+                                      RecoveryPolicy::default()));
         st.release(lane);
         // parked lane is claimable exactly once
         assert!(matches!(st.claim("a"), LaneClaim::Claimed(_)));

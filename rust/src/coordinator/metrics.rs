@@ -45,6 +45,16 @@ struct LaneAgg {
     accepted_steps: u64,
     rejected_steps: u64,
     grs_windows: u64,
+    /// failure-domain counters (see `fusion::RecoveryPolicy`): requests
+    /// turned away at this lane's admission gate (breaker open),
+    /// deadline expiries, in-flight cancellations, granted retries,
+    /// circuit-breaker trips and model hot-reloads
+    rejected: u64,
+    timed_out: u64,
+    cancelled: u64,
+    retried: u64,
+    breaker_trips: u64,
+    reloads: u64,
 }
 
 #[derive(Debug, Default)]
@@ -77,6 +87,18 @@ struct Inner {
     accepted_steps: u64,
     rejected_steps: u64,
     grs_windows: u64,
+    /// requests whose deadline expired before completion (at admission
+    /// or at a round boundary)
+    timed_out: u64,
+    /// in-flight requests cancelled at a round boundary (deadline
+    /// sweep); a timeout caught at admission cancels nothing
+    cancelled: u64,
+    /// from-scratch retries granted after faulted fused rounds
+    retried: u64,
+    /// lane circuit-breaker trips (closed/half-open -> open)
+    breaker_trips: u64,
+    /// variant model hot-reloads (`Coordinator::reload_variant`)
+    reloads: u64,
     /// per-variant lane aggregates
     lanes: BTreeMap<String, LaneAgg>,
 }
@@ -145,6 +167,20 @@ pub struct LaneSnapshot {
     /// mean accepted transitions per speculation window — the observed
     /// accept-run length the speedup theorems price in
     pub mean_accept_run: f64,
+    /// requests turned away at this lane's admission gate (circuit
+    /// breaker open)
+    pub rejected: u64,
+    /// requests on this lane whose deadline expired
+    pub timed_out: u64,
+    /// in-flight requests cancelled at a round boundary by the
+    /// deadline sweep
+    pub cancelled: u64,
+    /// from-scratch retries granted on this lane after faulted rounds
+    pub retried: u64,
+    /// circuit-breaker trips on this lane
+    pub breaker_trips: u64,
+    /// model hot-reloads applied to this lane
+    pub reloads: u64,
 }
 
 impl LaneSnapshot {
@@ -190,6 +226,18 @@ pub struct MetricsSnapshot {
     pub rejected_steps: u64,
     /// mean accepted transitions per speculation window
     pub mean_accept_run: f64,
+    /// requests whose deadline expired before completion (these also
+    /// count in `failed` when they were already in flight)
+    pub timed_out: u64,
+    /// in-flight requests cancelled at a round boundary (deadline
+    /// sweep)
+    pub cancelled: u64,
+    /// from-scratch retries granted after faulted fused rounds
+    pub retried: u64,
+    /// lane circuit-breaker trips
+    pub breaker_trips: u64,
+    /// variant model hot-reloads
+    pub reloads: u64,
     /// per-variant lane aggregates, sorted by lane name
     pub lanes: Vec<LaneSnapshot>,
     /// work-stealing scheduler activity since coordinator start
@@ -310,6 +358,57 @@ impl Metrics {
         agg.grs_windows += windows as u64;
     }
 
+    /// A request's deadline expired on `lane`. `in_flight` says whether
+    /// it was already sampling (cancelled at a round boundary, arena
+    /// rows reclaimed) or still queued at admission; only the former
+    /// counts as a cancellation. Timed-out requests also flow through
+    /// `on_complete(failed = true)`, so `failed` includes them.
+    pub fn on_timeout(&self, lane: &str, in_flight: bool) {
+        let mut m = self.lock();
+        m.timed_out += 1;
+        if in_flight {
+            m.cancelled += 1;
+        }
+        let agg = lane_agg(&mut m, lane);
+        agg.timed_out += 1;
+        if in_flight {
+            agg.cancelled += 1;
+        }
+    }
+
+    /// A faulted fused round granted one participant a from-scratch
+    /// retry (bit-transparent: machines are pure in (seed, cond)).
+    pub fn on_retry(&self, lane: &str) {
+        let mut m = self.lock();
+        m.retried += 1;
+        lane_agg(&mut m, lane).retried += 1;
+    }
+
+    /// `lane`'s circuit breaker tripped open (consecutive-failure
+    /// threshold reached, or a half-open probe failed).
+    pub fn on_breaker_trip(&self, lane: &str) {
+        let mut m = self.lock();
+        m.breaker_trips += 1;
+        lane_agg(&mut m, lane).breaker_trips += 1;
+    }
+
+    /// `lane`'s model snapshot was hot-reloaded
+    /// (`Coordinator::reload_variant`).
+    pub fn on_reload(&self, lane: &str) {
+        let mut m = self.lock();
+        m.reloads += 1;
+        lane_agg(&mut m, lane).reloads += 1;
+    }
+
+    /// `lane`'s admission gate turned a request away (circuit breaker
+    /// open). Counts into the global `rejected` alongside bounded-queue
+    /// rejections.
+    pub fn on_lane_reject(&self, lane: &str) {
+        let mut m = self.lock();
+        m.rejected += 1;
+        lane_agg(&mut m, lane).rejected += 1;
+    }
+
     /// Record a request's measured per-round latencies and shard
     /// occupancies (from `AsdStats`).
     pub fn on_round_stats(&self, latencies_s: &[f64], shards: &[usize]) {
@@ -358,6 +457,11 @@ impl Metrics {
             accepted_steps: m.accepted_steps,
             rejected_steps: m.rejected_steps,
             mean_accept_run: accept_run(m.accepted_steps, m.grs_windows),
+            timed_out: m.timed_out,
+            cancelled: m.cancelled,
+            retried: m.retried,
+            breaker_trips: m.breaker_trips,
+            reloads: m.reloads,
             lanes: m.lanes.iter()
                 .map(|(name, a)| LaneSnapshot {
                     lane: name.clone(),
@@ -383,6 +487,12 @@ impl Metrics {
                     rejected_steps: a.rejected_steps,
                     mean_accept_run: accept_run(a.accepted_steps,
                                                 a.grs_windows),
+                    rejected: a.rejected,
+                    timed_out: a.timed_out,
+                    cancelled: a.cancelled,
+                    retried: a.retried,
+                    breaker_trips: a.breaker_trips,
+                    reloads: a.reloads,
                 })
                 .collect(),
             pool: pool::global_stats().since(&self.pool_base),
@@ -526,6 +636,42 @@ mod tests {
         assert_eq!(b.accepted_steps, 10);
         assert_eq!(b.rejected_steps, 0);
         assert!((b.mean_accept_run - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_domain_counters_aggregate_globally_and_per_lane() {
+        let m = Metrics::default();
+        let s0 = m.snapshot();
+        assert_eq!(s0.timed_out, 0);
+        assert_eq!(s0.breaker_trips, 0);
+        // lane a: in-flight timeout (cancels), admission timeout (no
+        // cancel), one retry, one breaker trip, one lane rejection
+        m.on_timeout("a", true);
+        m.on_timeout("a", false);
+        m.on_retry("a");
+        m.on_breaker_trip("a");
+        m.on_lane_reject("a");
+        // lane b: a hot reload only
+        m.on_reload("b");
+        let s = m.snapshot();
+        assert_eq!(s.timed_out, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.retried, 1);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.reloads, 1);
+        // lane rejections count into the global rejected alongside
+        // bounded-queue rejections
+        assert_eq!(s.rejected, 1);
+        let a = s.lane("a").unwrap();
+        assert_eq!(a.timed_out, 2);
+        assert_eq!(a.cancelled, 1);
+        assert_eq!(a.retried, 1);
+        assert_eq!(a.breaker_trips, 1);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.reloads, 0);
+        let b = s.lane("b").unwrap();
+        assert_eq!(b.reloads, 1);
+        assert_eq!(b.timed_out, 0);
     }
 
     #[test]

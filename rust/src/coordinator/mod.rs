@@ -26,6 +26,7 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
+pub use fusion::RecoveryPolicy;
 pub use metrics::{LaneSnapshot, Metrics, MetricsSnapshot};
-pub use request::{Request, Response, SamplerSpec};
+pub use request::{FailReason, Request, Response, SamplerSpec};
 pub use server::{Coordinator, ServerConfig};

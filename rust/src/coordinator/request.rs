@@ -1,7 +1,7 @@
 //! Request / response types for the serving stack.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::asd::{AsdConfig, AsdStats, DraftConfig, KernelBackend};
 use crate::picard::PicardConfig;
@@ -53,6 +53,37 @@ impl SamplerSpec {
     }
 }
 
+/// Structured failure taxonomy for [`Response`]. Clients and tests
+/// branch on this instead of string-matching `Response::error`; the
+/// free-text message stays alongside for display.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// the fused model call (closure round) panicked or the round
+    /// compilation panicked
+    ModelPanic,
+    /// a tile of the round's compiled graph panicked mid-graph (the
+    /// pool cancelled its dependents and failed only this round)
+    TilePanic,
+    /// `Request::deadline` expired (pre-admission or swept at a round
+    /// boundary)
+    Timeout,
+    /// the lane's circuit breaker was open — admission refused while
+    /// the lane cools down
+    BreakerOpen,
+    /// the request's output rows contained NaN/Inf after an otherwise
+    /// successful fused round
+    NonFinite,
+    /// bounded admission: the coordinator queue was at
+    /// `max_queue_depth`
+    QueueFull,
+    /// a `SamplerSpec::Draft` request on a lane with no paired draft
+    /// model (`Coordinator::pair_draft`)
+    NoDraftPairing,
+    /// the coordinator is draining (`Coordinator::drain`) and refuses
+    /// new work
+    Draining,
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -61,6 +92,11 @@ pub struct Request {
     pub seed: u64,
     /// conditioning row (empty for unconditional variants)
     pub cond: Vec<f64>,
+    /// optional wall-clock budget, relative to submission. Expired
+    /// requests are cancelled at the next round boundary (never
+    /// mid-round — the fused call is indivisible) and answered with
+    /// [`FailReason::Timeout`]. `None` = no deadline.
+    pub deadline: Option<Duration>,
 }
 
 #[derive(Debug)]
@@ -75,10 +111,18 @@ pub struct Response {
     pub asd_stats: Option<AsdStats>,
     pub queued_s: f64,
     pub service_s: f64,
-    /// true when admission control turned the request away (queue full)
-    /// without ever scheduling it; `error` carries the reason
+    /// true when admission control turned the request away (queue
+    /// full, breaker open, draining) without ever scheduling it;
+    /// `error` carries the reason
     pub rejected: bool,
     pub error: Option<String>,
+    /// structured failure class when `error` is set (may be `None` for
+    /// generic sampler errors that predate the taxonomy)
+    pub reason: Option<FailReason>,
+    /// how many times the request was restarted from scratch after a
+    /// faulted fused round (retry-from-scratch is bit-transparent:
+    /// machines are pure functions of `(seed, cond)`)
+    pub retries: u32,
 }
 
 impl Response {
@@ -94,7 +138,15 @@ impl Response {
             service_s: 0.0,
             rejected: false,
             error: Some(msg.to_string()),
+            reason: None,
+            retries: 0,
         }
+    }
+
+    /// A failed request with a structured [`FailReason`].
+    pub fn failed_with(id: u64, queued_s: f64, reason: FailReason,
+                       msg: &str) -> Response {
+        Response { reason: Some(reason), ..Response::failed(id, queued_s, msg) }
     }
 
     /// Bounded-admission rejection: the queue was at
@@ -102,6 +154,7 @@ impl Response {
     pub fn rejected(id: u64, depth: usize, max_depth: usize) -> Response {
         Response {
             rejected: true,
+            reason: Some(FailReason::QueueFull),
             error: Some(format!(
                 "rejected: queue depth {depth} at max_queue_depth \
                  {max_depth}")),
@@ -114,4 +167,12 @@ pub(crate) struct QueuedJob {
     pub request: Request,
     pub reply: Sender<Response>,
     pub enqueued: Instant,
+}
+
+impl QueuedJob {
+    /// Whether the request's deadline has already expired.
+    pub(crate) fn expired(&self) -> bool {
+        self.request.deadline
+            .is_some_and(|d| self.enqueued.elapsed() >= d)
+    }
 }

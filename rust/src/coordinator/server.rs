@@ -10,10 +10,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::asd::{AsdEngine, DraftEngine};
+use crate::coordinator::fusion::RecoveryPolicy;
 use crate::coordinator::lanes::{Lane, LaneClaim, LaneState};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{QueuedJob, Request, Response, SamplerSpec};
+use crate::coordinator::request::{FailReason, QueuedJob, Request, Response,
+                                  SamplerSpec};
 use crate::ddpm::SequentialSampler;
+use crate::faults::FaultPlan;
 use crate::model::DenoiseModel;
 use crate::math::isa::KernelPolicy;
 use crate::picard::PicardSampler;
@@ -56,6 +59,14 @@ pub struct ServerConfig {
     /// callers carry their own policy; this field does not rewrite
     /// them.
     pub kernel: KernelPolicy,
+    /// failure-recovery knobs shared by every lane: per-request
+    /// deadline handling, from-scratch retry with per-round backoff,
+    /// the lane circuit breaker, and NaN/Inf output validation
+    pub recovery: RecoveryPolicy,
+    /// deterministic fault injection (chaos testing): when set, every
+    /// lane's fused calls run through a `ChaosModel` seeded by this
+    /// plan. `None` (the default) = production serving, no injection.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -68,6 +79,8 @@ impl Default for ServerConfig {
             pool: PoolConfig::default(),
             arena_byte_cap: 64 << 20, // 64 MiB per lane
             kernel: KernelPolicy::default(),
+            recovery: RecoveryPolicy::default(),
+            faults: None,
         }
     }
 }
@@ -83,6 +96,9 @@ impl ServerConfig {
                         "ServerConfig::max_batch must be >= 1 (got 0)");
         anyhow::ensure!(self.max_queue_depth >= 1,
                         "ServerConfig::max_queue_depth must be >= 1 \
+                         (got 0)");
+        anyhow::ensure!(self.recovery.breaker_threshold >= 1,
+                        "RecoveryPolicy::breaker_threshold must be >= 1 \
                          (got 0)");
         Ok(())
     }
@@ -107,6 +123,17 @@ struct Shared {
     drafts: Mutex<HashMap<String, String>>,
     config: ServerConfig,
     next_id: AtomicU64,
+    /// `Coordinator::drain` raised this: admissions are refused
+    /// ([`FailReason::Draining`]) until `resume` clears it
+    draining: AtomicBool,
+    /// bumped by `Coordinator::reload_variant`; lanes carrying an older
+    /// epoch re-snapshot their model from the registry before their
+    /// next round (`Driver::pump`)
+    reload_epoch: AtomicU64,
+    /// requests currently being served by the batching-off solo path
+    /// (`serve_single`) — they are invisible to the lane state, so
+    /// `drain` waits on this too
+    single_busy: AtomicU64,
 }
 
 /// The serving coordinator. Models are registered up front (they wrap
@@ -136,6 +163,9 @@ impl Coordinator {
             drafts: Mutex::new(HashMap::new()),
             config: config.clone(),
             next_id: AtomicU64::new(1),
+            draining: AtomicBool::new(false),
+            reload_epoch: AtomicU64::new(0),
+            single_busy: AtomicU64::new(0),
         });
         let mut handles = Vec::new();
         for w in 0..config.workers {
@@ -191,6 +221,18 @@ impl Coordinator {
         request.id = id;
         let (tx, rx) = channel();
         self.shared.metrics.on_submit();
+        if self.shared.draining.load(Ordering::SeqCst) {
+            self.shared.metrics.on_reject();
+            let _ = tx.send(Response {
+                rejected: true,
+                reason: Some(FailReason::Draining),
+                error: Some("rejected: coordinator is draining \
+                             (Coordinator::resume re-opens admissions)"
+                                .to_string()),
+                ..Response::failed(id, 0.0, "")
+            });
+            return (id, rx);
+        }
         {
             let mut st = lock_state(&self.shared);
             let depth = st.depth();
@@ -209,6 +251,61 @@ impl Coordinator {
         }
         self.shared.cv.notify_one();
         (id, rx)
+    }
+
+    /// Hot-swap `name`'s model snapshot without dropping in-flight
+    /// requests: the registry entry is replaced and the reload epoch
+    /// bumped; each lane re-snapshots its model `Arc` before its next
+    /// round (`Driver::pump`). Requests already mid-sample keep their
+    /// own clone of the old model and finish against it untouched —
+    /// only fused *calls*, retries and new admissions route through the
+    /// new snapshot. The new model must match the old geometry
+    /// (dim / cond_dim / k_steps): lane arenas and in-flight machines
+    /// are sized against it.
+    pub fn reload_variant(&self, name: &str,
+                          model: Arc<dyn DenoiseModel>) -> Result<()> {
+        {
+            let mut models = self.shared.models.lock().unwrap();
+            let old = models.get(name).ok_or_else(|| anyhow::anyhow!(
+                "reload_variant: unknown variant '{name}'"))?;
+            anyhow::ensure!(
+                old.dim() == model.dim()
+                    && old.cond_dim() == model.cond_dim()
+                    && old.k_steps() == model.k_steps(),
+                "reload_variant: geometry mismatch for '{name}' \
+                 (dim/cond_dim/k_steps must match the serving snapshot; \
+                 register a new variant name for a different geometry)");
+            models.insert(name.to_string(), model);
+        }
+        self.shared.reload_epoch.fetch_add(1, Ordering::SeqCst);
+        self.shared.metrics.on_reload(name);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Stop admitting work and block until every queued and in-flight
+    /// request has been answered. New submissions are rejected with
+    /// [`FailReason::Draining`] the moment this is called; nothing
+    /// already accepted is dropped. Returns once all lanes are parked
+    /// idle and the queues are empty; [`Coordinator::resume`] re-opens
+    /// admissions (workers stay alive throughout — drain is a pause,
+    /// not a shutdown).
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let mut st = lock_state(&self.shared);
+        while !(st.depth() == 0
+                && st.all_parked_idle()
+                && self.shared.single_busy.load(Ordering::SeqCst) == 0)
+        {
+            st = wait_state(&self.shared, st);
+        }
+    }
+
+    /// Re-open admissions after [`Coordinator::drain`].
+    pub fn resume(&self) {
+        self.shared.draining.store(false, Ordering::SeqCst);
+        self.shared.cv.notify_all();
     }
 
     pub fn metrics(&self) -> crate::coordinator::MetricsSnapshot {
@@ -426,6 +523,12 @@ impl<'a> Driver<'a> {
                     // would answer Busy forever.
                     let built = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
+                            // read the epoch BEFORE snapshotting: a
+                            // reload racing in between leaves the lane
+                            // stale-marked, so pump refreshes it — the
+                            // safe direction
+                            let epoch = shared.reload_epoch
+                                .load(Ordering::SeqCst);
                             let models = shared.models.lock().unwrap();
                             models.get(variant).cloned().map(|m| {
                                 // resolve the variant's draft pairing
@@ -434,9 +537,13 @@ impl<'a> Driver<'a> {
                                 let draft = shared.drafts.lock().unwrap()
                                     .get(variant)
                                     .and_then(|d| models.get(d).cloned());
-                                Box::new(Lane::new(
+                                let mut lane = Box::new(Lane::new(
                                     variant, m, draft, shared.config.pool,
-                                    shared.config.arena_byte_cap))
+                                    shared.config.arena_byte_cap,
+                                    shared.config.faults.as_ref(),
+                                    shared.config.recovery));
+                                lane.epoch = epoch;
+                                lane
                             })
                         }));
                     match built {
@@ -511,11 +618,19 @@ impl<'a> Driver<'a> {
     /// that is what makes rounds continuous instead of tick-aligned.
     fn pump(&mut self) {
         let metrics = &self.shared.metrics;
+        let epoch = self.shared.reload_epoch.load(Ordering::SeqCst);
         for i in 0..self.held.len() {
             if self.inflight[i] {
                 continue;
             }
             let Some(lane) = self.held[i].as_mut() else { continue };
+            if lane.epoch != epoch {
+                // a reload landed since this lane snapshotted its
+                // model: re-snapshot before the next fused call. Not
+                // on the hot path in steady state (one atomic load +
+                // u64 compare per lane per round otherwise).
+                refresh_lane(self.shared, lane, epoch);
+            }
             guard_phase(lane, metrics, "poll", |l| l.begin_round(metrics));
             if !lane.has_round() {
                 continue;
@@ -568,6 +683,7 @@ impl<'a> Driver<'a> {
                 // bookkeeping gone wrong): mid-round machines are
                 // unusable — fail the group, keep the lane servable
                 lane.fail_all(
+                    Some(FailReason::ModelPanic),
                     "lane round task panicked during fused execute",
                     metrics);
             } else {
@@ -689,6 +805,11 @@ fn lane_loop(shared: Arc<Shared>) {
                                   &mut variants, &mut jobs);
                 }
             }
+            if shared.draining.load(Ordering::SeqCst) {
+                // a drain() caller waits on the cv for the fully-
+                // drained condition; progress here may have produced it
+                shared.cv.notify_all();
+            }
             answer_failures(&shared, &mut failures);
             driver.apply_admissions(&mut admissions, &mut batch);
         }
@@ -710,8 +831,23 @@ fn guard_phase<F: FnOnce(&mut Lane)>(lane: &mut Box<Lane>,
         std::panic::AssertUnwindSafe(|| f(lane)));
     if outcome.is_err() {
         lane.fail_all(
+            Some(FailReason::ModelPanic),
             &format!("sampler machine panicked during fused {phase}"),
             metrics);
+    }
+}
+
+/// Re-snapshot a stale lane's model (and draft pairing) from the
+/// registry after a `reload_variant` bumped the epoch. Missing models
+/// can't happen (the registry is insert-only) but are tolerated: the
+/// lane just stays stale and retries next round.
+fn refresh_lane(shared: &Shared, lane: &mut Lane, epoch: u64) {
+    let models = shared.models.lock().unwrap();
+    if let Some(m) = models.get(&lane.variant).cloned() {
+        let draft = shared.drafts.lock().unwrap()
+            .get(&lane.variant)
+            .and_then(|d| models.get(d).cloned());
+        lane.set_model(m, draft, epoch);
     }
 }
 
@@ -728,6 +864,17 @@ fn draft_for(shared: &Shared, variant: &str)
 
 fn serve_single(shared: &Shared, job: QueuedJob) {
     let queued_s = job.enqueued.elapsed().as_secs_f64();
+    if job.expired() {
+        // solo path deadline check: the request's budget ran out while
+        // it queued — answer it without spending a model call
+        shared.metrics.on_timeout(&job.request.variant, false);
+        shared.metrics.on_complete(queued_s, 0.0, 0, 0, true);
+        let _ = job.reply.send(Response::failed_with(
+            job.request.id, queued_s, FailReason::Timeout,
+            "deadline exceeded while queued (request never admitted)"));
+        return;
+    }
+    shared.single_busy.fetch_add(1, Ordering::SeqCst);
     let t0 = Instant::now();
     let req = &job.request;
     let outcome = match model_for(shared, &req.variant) {
@@ -754,6 +901,8 @@ fn serve_single(shared: &Shared, job: QueuedJob) {
             service_s,
             rejected: false,
             error: None,
+            reason: None,
+            retries: 0,
         },
         Err(e) => Response {
             service_s,
@@ -763,6 +912,10 @@ fn serve_single(shared: &Shared, job: QueuedJob) {
     shared.metrics.on_complete(queued_s, service_s, resp.model_calls,
                                resp.parallel_rounds, resp.error.is_some());
     let _ = job.reply.send(resp);
+    shared.single_busy.fetch_sub(1, Ordering::SeqCst);
+    if shared.draining.load(Ordering::SeqCst) {
+        shared.cv.notify_all();
+    }
 }
 
 type SampleOutcome =
@@ -856,6 +1009,7 @@ mod tests {
             sampler,
             seed,
             cond: vec![],
+            deadline: None,
         }
     }
 
@@ -895,6 +1049,7 @@ mod tests {
             sampler: SamplerSpec::Sequential,
             seed: 0,
             cond: vec![],
+            deadline: None,
         });
         let r = rx.recv().unwrap();
         assert!(r.error.unwrap().contains("unknown model"));
@@ -996,6 +1151,7 @@ mod tests {
             sampler: SamplerSpec::Sequential,
             seed,
             cond: vec![],
+            deadline: None,
         };
         // r1 is picked up by the worker and blocks inside the model
         let (_, rx1) = c.submit(req(1));
@@ -1086,6 +1242,7 @@ mod tests {
                 sampler: SamplerSpec::Sequential,
                 seed: 50 + i,
                 cond: vec![],
+                deadline: None,
             }).1);
         }
         for rx in rxs {
@@ -1161,6 +1318,7 @@ mod tests {
             sampler: SamplerSpec::Sequential,
             seed,
             cond: vec![],
+            deadline: None,
         };
         let (_, rx_slow) = c.submit(mk("slow", 1));
         let (_, rx_fast) = c.submit(mk("fast", 2));
@@ -1227,5 +1385,206 @@ mod tests {
         assert_eq!(bits(&inline), bits(&sharded));
         assert!((occ1 - 1.0).abs() < 1e-12, "inline occupancy {occ1}");
         assert!(occ4 > 1.0, "sharded occupancy {occ4}");
+    }
+
+    /// Test model that fails every denoise call while `faulty` is
+    /// raised — a controllable fault source for the breaker test.
+    struct FlakyModel {
+        sched: DdpmSchedule,
+        faulty: Arc<AtomicBool>,
+    }
+
+    impl crate::model::DenoiseModel for FlakyModel {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn cond_dim(&self) -> usize {
+            0
+        }
+        fn k_steps(&self) -> usize {
+            self.sched.k_steps
+        }
+        fn schedule(&self) -> &DdpmSchedule {
+            &self.sched
+        }
+        fn denoise_batch(&self, _ys: &[f64], _ts: &[f64], _cond: &[f64],
+                         n: usize, out: &mut [f64]) -> Result<()> {
+            anyhow::ensure!(!self.faulty.load(Ordering::SeqCst),
+                            "injected flaky model failure");
+            out[..n].fill(0.0);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn breaker_rejects_while_open_and_recovers_after_cooldown() {
+        use std::time::Duration;
+        let faulty = Arc::new(AtomicBool::new(true));
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 4,
+            enable_batching: true,
+            recovery: RecoveryPolicy {
+                retry_max: 0,
+                backoff_rounds: 0,
+                breaker_threshold: 1,
+                breaker_cooldown: Duration::from_millis(300),
+                validate_outputs: true,
+            },
+            ..Default::default()
+        }).unwrap();
+        c.register_model("flaky", Arc::new(FlakyModel {
+            sched: DdpmSchedule::new(4),
+            faulty: faulty.clone(),
+        }));
+        let mk = |seed| Request {
+            id: 0,
+            variant: "flaky".into(),
+            sampler: SamplerSpec::Sequential,
+            seed,
+            cond: vec![],
+            deadline: None,
+        };
+        // the first request faults its round and trips the breaker
+        // (threshold 1, no retries)
+        let (_, rx) = c.submit(mk(1));
+        let r = rx.recv().unwrap();
+        assert!(r.error.unwrap().contains("injected"), "first failure");
+        // while the breaker is open, admissions bounce with a distinct
+        // reason (admitted-and-failed rounds in a half-open probe keep
+        // reopening it, so SOME submission must observe BreakerOpen)
+        let mut saw_open = false;
+        for seed in 2..120 {
+            let (_, rx) = c.submit(mk(seed));
+            let r = rx.recv().unwrap();
+            if r.reason == Some(FailReason::BreakerOpen) {
+                assert!(r.rejected);
+                assert!(r.error.unwrap().contains("breaker"));
+                saw_open = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(saw_open, "breaker never rejected an admission");
+        // heal the model and wait past the cooldown: the half-open
+        // probe must succeed and close the breaker — no lane is
+        // permanently stranded
+        faulty.store(false, Ordering::SeqCst);
+        let mut recovered = false;
+        for seed in 200..260 {
+            std::thread::sleep(Duration::from_millis(10));
+            let (_, rx) = c.submit(mk(seed));
+            if rx.recv().unwrap().error.is_none() {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "lane stayed stranded after cooldown");
+        let m = c.metrics();
+        assert!(m.breaker_trips >= 1, "trips {}", m.breaker_trips);
+        let lane = m.lane("flaky").unwrap();
+        assert!(lane.breaker_trips >= 1);
+        assert!(lane.rejected >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn reload_variant_swaps_snapshots_without_dropping_requests() {
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            enable_batching: true,
+            ..Default::default()
+        }).unwrap();
+        let oracle = || GmmDdpmOracle::new(Gmm::circle_2d(), 60, false);
+        c.register_model("gmm", oracle());
+        let rxs: Vec<_> = (0..8)
+            .map(|s| c.submit(req(SamplerSpec::Sequential, s)).1)
+            .collect();
+        // swap in an identical-weights snapshot mid-burst: every
+        // in-flight request must complete, and (same weights) the
+        // swap must be bit-invisible in the samples
+        c.reload_variant("gmm", oracle()).unwrap();
+        let bits = |v: &[f64]| -> Vec<u64> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        for (seed, rx) in (0..8u64).zip(rxs) {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            let (solo, _) = SequentialSampler::new(oracle())
+                .sample(seed, &[]).unwrap();
+            assert_eq!(bits(&r.sample), bits(&solo), "seed {seed}");
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.reloads, 1);
+        // geometry mismatch is a clean error, not a corrupted lane
+        let err = c.reload_variant(
+            "gmm", GmmDdpmOracle::new(Gmm::random(3, 4, 1.5, 9), 60,
+                                      false)).err().expect("must reject");
+        assert!(err.to_string().contains("geometry mismatch"), "{err:#}");
+        assert!(c.reload_variant("nope", oracle()).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_refuses_new_work_and_waits_out_in_flight() {
+        let c = coordinator_with_oracle(2);
+        let rxs: Vec<_> = (0..6)
+            .map(|s| c.submit(req(SamplerSpec::Sequential, s)).1)
+            .collect();
+        c.drain();
+        // drain returned: everything accepted beforehand was already
+        // answered — zero drops
+        for rx in rxs {
+            let r = rx.try_recv()
+                .expect("drain returned before a response landed");
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        // new work bounces with the draining reason
+        let (_, rx) = c.submit(req(SamplerSpec::Sequential, 99));
+        let r = rx.recv().unwrap();
+        assert!(r.rejected);
+        assert_eq!(r.reason, Some(FailReason::Draining));
+        // resume re-opens admissions on the same workers
+        c.resume();
+        let (_, rx) = c.submit(req(SamplerSpec::Sequential, 100));
+        assert!(rx.recv().unwrap().error.is_none());
+        assert_eq!(c.metrics().completed, 7);
+        c.shutdown();
+    }
+
+    #[test]
+    fn in_flight_deadline_is_swept_at_a_round_boundary() {
+        use std::time::Duration;
+        let c = Coordinator::new(ServerConfig {
+            workers: 1,
+            max_batch: 4,
+            enable_batching: true,
+            ..Default::default()
+        }).unwrap();
+        c.register_model("slow", Arc::new(SlowModel {
+            sched: DdpmSchedule::new(60),
+            delay: Duration::from_millis(4),
+        }));
+        // 60 rounds x 4ms >> the 60ms budget: the request is admitted
+        // quickly, then cancelled at a round boundary mid-sample
+        let (_, rx) = c.submit(Request {
+            id: 0,
+            variant: "slow".into(),
+            sampler: SamplerSpec::Sequential,
+            seed: 1,
+            cond: vec![],
+            deadline: Some(Duration::from_millis(60)),
+        });
+        let r = rx.recv().unwrap();
+        assert!(!r.rejected, "timeout is a failure, not a rejection");
+        assert_eq!(r.reason, Some(FailReason::Timeout));
+        assert!(r.error.unwrap().contains("deadline"));
+        let m = c.metrics();
+        assert_eq!(m.timed_out, 1);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.failed, 1);
+        c.shutdown();
     }
 }

@@ -1,0 +1,260 @@
+//! Chaos bench — the `BENCH_chaos.json` emitter behind `asd chaos`.
+//!
+//! Sweeps per-round fault rates against a live coordinator serving a
+//! mixed sequential / ASD / Picard / draft-SD burst under a seeded
+//! [`FaultPlan`] and reports, per rate:
+//!
+//! * **completion rate** — fraction of submitted requests answered
+//!   successfully despite injected round panics / NaN outputs /
+//!   latency spikes,
+//! * **goodput** — successful requests per second of wall clock (the
+//!   throughput the client actually sees under faults),
+//! * **recovery latency** — mean end-to-end service time of requests
+//!   that needed at least one retry (how much a faulted round costs
+//!   the request that survives it),
+//! * the failure-domain counters (`timed_out` / `retried` /
+//!   `breaker_trips`) from the metrics snapshot.
+//!
+//! Every 8th request carries an already-expired deadline so the sweep
+//! exercises the queue-side deadline sweep even at fault rate 0.
+//!
+//! Schema v1: `{bench: "bench_chaos", schema_version: 1, k, theta,
+//! requests_per_rate, seed, rows: [...]}`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, RecoveryPolicy, Request,
+                         SamplerSpec, ServerConfig};
+use crate::faults::FaultPlan;
+use crate::model::{DenoiseModel, Gmm, GmmDdpmOracle};
+use crate::util::Json;
+
+/// One fault rate's measurements.
+#[derive(Debug, Clone)]
+pub struct ChaosRow {
+    /// per-round panic probability; non-finite / latency / tile faults
+    /// are injected at half this rate each
+    pub fault_rate: f64,
+    pub requests: usize,
+    pub completed: u64,
+    pub failed: u64,
+    /// admission rejections (open breaker / draining / full queue)
+    pub rejected: u64,
+    pub timed_out: u64,
+    pub retried: u64,
+    pub breaker_trips: u64,
+    /// completed / requests
+    pub completion_rate: f64,
+    /// completed / elapsed_s — successful requests per wall second
+    pub goodput_rps: f64,
+    /// mean service time (ms) of requests that retried at least once;
+    /// 0 when no request retried
+    pub mean_recovery_ms: f64,
+    pub elapsed_s: f64,
+}
+
+/// Target model for the sweep: the 8-d GMM oracle the determinism
+/// suites use, analytic so the bench runs anywhere.
+fn target(k: usize) -> Arc<dyn DenoiseModel> {
+    GmmDdpmOracle::new(Gmm::random(8, 6, 1.5, 3), k, false)
+}
+
+/// Imperfect draft for [`target`]: component means shifted by 0.05
+/// with alternating sign, so draft-SD verification rejects some
+/// windows under chaos too.
+fn draft(k: usize) -> Arc<dyn DenoiseModel> {
+    let base = Gmm::random(8, 6, 1.5, 3);
+    let means: Vec<Vec<f64>> = (0..base.weights.len())
+        .map(|c| {
+            base.mean_of(c).iter().enumerate()
+                .map(|(i, &v)| {
+                    v + 0.05 * if i % 2 == 0 { 1.0 } else { -1.0 }
+                })
+                .collect()
+        })
+        .collect();
+    let gmm = Gmm::new(means, base.sigmas.clone(), base.weights.clone());
+    GmmDdpmOracle::new(gmm, k, false)
+}
+
+/// Traffic mix: rotate all four sampler families so every machine kind
+/// rides through the fault schedule.
+fn sampler_for(i: usize, theta: usize) -> SamplerSpec {
+    match i % 4 {
+        0 => SamplerSpec::Sequential,
+        1 => SamplerSpec::Asd(theta),
+        2 => SamplerSpec::Picard(8, 1e-6),
+        _ => SamplerSpec::Draft(theta),
+    }
+}
+
+/// Run the chaos sweep: one fresh coordinator per fault rate, each
+/// serving `n_requests` mixed-sampler requests under a [`FaultPlan`]
+/// seeded with `seed` whose panic rate is the row's `fault_rate` (and
+/// non-finite / latency / tile rates at half that).
+pub fn bench_chaos(k: usize, theta: usize, n_requests: usize,
+                   workers: usize, fault_rates: &[f64], seed: u64)
+                   -> Result<Vec<ChaosRow>> {
+    let mut rows = Vec::with_capacity(fault_rates.len());
+    for &rate in fault_rates {
+        let plan = FaultPlan {
+            seed,
+            panic_rate: rate,
+            non_finite_rate: rate / 2.0,
+            latency_rate: rate / 2.0,
+            latency: Duration::from_millis(1),
+            tile_rate: rate / 2.0,
+            only_lane: None,
+        };
+        let c = Coordinator::new(ServerConfig {
+            workers,
+            faults: if rate > 0.0 { Some(plan) } else { None },
+            recovery: RecoveryPolicy {
+                retry_max: 3,
+                backoff_rounds: 1,
+                // high enough that the breaker only trips under a
+                // genuinely pathological streak, not ambient chaos
+                breaker_threshold: 8,
+                breaker_cooldown: Duration::from_millis(50),
+                validate_outputs: true,
+            },
+            ..ServerConfig::default()
+        })?;
+        c.register_model("gmm", target(k));
+        c.register_model("gmm-draft", draft(k));
+        c.pair_draft("gmm", "gmm-draft")?;
+        let n = n_requests.max(1);
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::with_capacity(n);
+        for i in 0..n {
+            rxs.push(c.submit(Request {
+                id: 0,
+                variant: "gmm".into(),
+                sampler: sampler_for(i, theta),
+                seed: 40_000 + i as u64,
+                cond: vec![],
+                // every 8th request is born expired: the deadline
+                // sweep must fire even in the fault-free row
+                deadline: if i % 8 == 7 {
+                    Some(Duration::ZERO)
+                } else {
+                    None
+                },
+            }).1);
+        }
+        let mut recovery_ms: Vec<f64> = Vec::new();
+        for rx in rxs {
+            let r = rx.recv()?;
+            if r.retries > 0 {
+                recovery_ms.push(r.service_s * 1e3);
+            }
+        }
+        let elapsed_s = t0.elapsed().as_secs_f64().max(1e-12);
+        let m = c.metrics();
+        c.shutdown();
+        let mean_recovery_ms = if recovery_ms.is_empty() {
+            0.0
+        } else {
+            recovery_ms.iter().sum::<f64>() / recovery_ms.len() as f64
+        };
+        rows.push(ChaosRow {
+            fault_rate: rate,
+            requests: n,
+            completed: m.completed,
+            failed: m.failed,
+            rejected: m.rejected,
+            timed_out: m.timed_out,
+            retried: m.retried,
+            breaker_trips: m.breaker_trips,
+            completion_rate: m.completed as f64 / n as f64,
+            goodput_rps: m.completed as f64 / elapsed_s,
+            mean_recovery_ms,
+            elapsed_s,
+        });
+    }
+    Ok(rows)
+}
+
+fn row_json(r: &ChaosRow) -> Json {
+    Json::obj(vec![
+        ("fault_rate", Json::Num(r.fault_rate)),
+        ("requests", Json::Num(r.requests as f64)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("failed", Json::Num(r.failed as f64)),
+        ("rejected", Json::Num(r.rejected as f64)),
+        ("timed_out", Json::Num(r.timed_out as f64)),
+        ("retried", Json::Num(r.retried as f64)),
+        ("breaker_trips", Json::Num(r.breaker_trips as f64)),
+        ("completion_rate", Json::Num(r.completion_rate)),
+        ("goodput_rps", Json::Num(r.goodput_rps)),
+        ("mean_recovery_ms", Json::Num(r.mean_recovery_ms)),
+        ("elapsed_s", Json::Num(r.elapsed_s)),
+    ])
+}
+
+/// Assemble the `BENCH_chaos.json` document (schema v1).
+pub fn bench_chaos_json(k: usize, theta: usize, n_requests: usize,
+                        seed: u64, rows: &[ChaosRow]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("bench_chaos".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("k", Json::Num(k as f64)),
+        ("theta", Json::Num(theta as f64)),
+        ("requests_per_rate", Json::Num(n_requests as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("rows", Json::Arr(rows.iter().map(row_json).collect())),
+    ])
+}
+
+/// Render the sweep as a table.
+pub fn format_chaos_rows(rows: &[ChaosRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12} {:>10}\n",
+        "fault", "completed", "failed", "timed_out", "retried",
+        "breakers", "recovery ms", "goodput"));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10.3} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12.2} \
+             {:>10.1}\n",
+            r.fault_rate, r.completed, r.failed, r.timed_out, r.retried,
+            r.breaker_trips, r.mean_recovery_ms, r.goodput_rps));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_sweep_runs_and_roundtrips_json() {
+        let rows = bench_chaos(20, 8, 16, 1, &[0.0, 0.25], 7).unwrap();
+        assert_eq!(rows.len(), 2);
+        // fault-free row: only the born-expired deadlines fail
+        assert_eq!(rows[0].timed_out, 2);
+        assert_eq!(rows[0].completed, 14);
+        assert_eq!(rows[0].retried, 0);
+        assert!((rows[0].completion_rate - 14.0 / 16.0).abs() < 1e-12);
+        // faulted row: every request is answered one way or the other
+        assert_eq!(rows[1].completed + rows[1].failed + rows[1].rejected,
+                   16);
+        assert!(rows[1].goodput_rps > 0.0);
+        let doc = bench_chaos_json(20, 8, 16, 7, &rows);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
+                   "bench_chaos");
+        assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
+                   1);
+        let rs = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("timed_out").unwrap().as_f64().unwrap(), 2.0);
+        assert!(rs[1].get("completion_rate").unwrap().as_f64().unwrap()
+                    > 0.0);
+        let table = format_chaos_rows(&rows);
+        assert!(table.contains("recovery ms"));
+    }
+}

@@ -1,11 +1,14 @@
 //! Shared experiment drivers: the code behind every reproduced table
 //! and figure (examples/ and benches/ are thin wrappers over these).
 
+pub mod chaos_bench;
 pub mod latency;
 pub mod quality;
 pub mod serve_bench;
 pub mod speedup;
 
+pub use chaos_bench::{bench_chaos, bench_chaos_json, format_chaos_rows,
+                      ChaosRow};
 pub use latency::LatencyModel;
 pub use quality::{format_quality_table, QualityRow};
 pub use serve_bench::{bench_coordinator, bench_coordinator_json,

@@ -16,6 +16,11 @@
 //!   window overlapped the others' (lanes' round tasks ran
 //!   concurrently instead of back to back).
 //!
+//! Schema v6: each lane gains the failure-domain counters (`rejected`
+//! / `timed_out` / `cancelled` / `retried` / `breaker_trips` /
+//! `reloads` — see `coordinator::fusion::RecoveryPolicy`), all 0 in a
+//! healthy fault-free run.
+//!
 //! Schema v5: rows carry a `lanes` array and a `pool` object with the
 //! work-stealing scheduler's counters (entries executed / stolen /
 //! injected, lane round tasks) accumulated over that row's run; the
@@ -142,6 +147,7 @@ pub fn bench_coordinator(model: Arc<dyn DenoiseModel>, variant: &str,
                     sampler: sampler_for(i, theta),
                     seed: 10_000 + i as u64,
                     cond: one_hot(cond_dim, i),
+                    deadline: None,
                 }).1);
             }
             for rx in rxs {
@@ -198,6 +204,7 @@ pub fn bench_mixed_variants(models: &[(String, Arc<dyn DenoiseModel>)],
                 sampler: sampler_for(i, theta),
                 seed: 20_000 + rxs.len() as u64,
                 cond: one_hot(model.cond_dim(), i),
+                deadline: None,
             }).1);
         }
     }
@@ -241,6 +248,12 @@ fn lane_json(l: &LaneSnapshot) -> Json {
         ("accepted_steps", Json::Num(l.accepted_steps as f64)),
         ("rejected_steps", Json::Num(l.rejected_steps as f64)),
         ("mean_accept_run", Json::Num(l.mean_accept_run)),
+        ("rejected", Json::Num(l.rejected as f64)),
+        ("timed_out", Json::Num(l.timed_out as f64)),
+        ("cancelled", Json::Num(l.cancelled as f64)),
+        ("retried", Json::Num(l.retried as f64)),
+        ("breaker_trips", Json::Num(l.breaker_trips as f64)),
+        ("reloads", Json::Num(l.reloads as f64)),
     ])
 }
 
@@ -285,16 +298,17 @@ fn mixed_json(b: &MixedVariantBench) -> Json {
     ])
 }
 
-/// Assemble the `BENCH_coordinator.json` document (schema v5: per-row
-/// `lanes` arrays with GRS accept/reject outcomes and layer-stall
-/// estimates + `pool` scheduler counters including the tile-graph
-/// counters + optional `mixed_variants` section).
+/// Assemble the `BENCH_coordinator.json` document (schema v6: per-lane
+/// failure-domain counters on top of v5's per-row `lanes` arrays with
+/// GRS accept/reject outcomes and layer-stall estimates + `pool`
+/// scheduler counters including the tile-graph counters + optional
+/// `mixed_variants` section).
 pub fn bench_coordinator_json(variant: &str, k: usize,
                               rows: &[CoordBenchRow],
                               mixed: Option<&MixedVariantBench>) -> Json {
     let mut fields = vec![
         ("bench", Json::Str("bench_coordinator".into())),
-        ("schema_version", Json::Num(5.0)),
+        ("schema_version", Json::Num(6.0)),
         ("variant", Json::Str(variant.to_string())),
         ("k", Json::Num(k as f64)),
         ("pool_threads",
@@ -383,7 +397,7 @@ mod tests {
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(),
                    "bench_coordinator");
         assert_eq!(back.get("schema_version").unwrap().as_usize().unwrap(),
-                   5);
+                   6);
         let rs = back.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[1].get("concurrency").unwrap().as_usize().unwrap(), 4);
@@ -413,6 +427,13 @@ mod tests {
         assert!(pool.get("graph_rounds").is_ok());
         assert!(pool.get("ready_pushes").is_ok());
         assert!(lanes[0].get("mean_layer_stall_ms").is_ok());
+        // schema v6: failure-domain counters ride along per lane, all
+        // 0 in this fault-free run
+        for key in ["rejected", "timed_out", "cancelled", "retried",
+                    "breaker_trips", "reloads"] {
+            assert_eq!(lanes[0].get(key).unwrap().as_f64().unwrap(), 0.0,
+                       "{key} nonzero in a fault-free run");
+        }
         let table = format_coord_rows(&rows);
         assert!(table.contains("rows/round"));
     }

@@ -1,0 +1,530 @@
+//! Deterministic fault injection — the chaos harness the
+//! failure-domain tests and `asd chaos` bench drive.
+//!
+//! A [`FaultPlan`] is a *pure function* from `(lane, round, site)` to a
+//! fault decision, indexed through the same counter-based Philox block
+//! the samplers draw noise from ([`crate::rng::Philox::block`]). No
+//! mutable RNG state is threaded through execution, so the injection
+//! schedule is bit-reproducible across pool sizes, steal schedules,
+//! and driver paths: round `r` of lane `l` faults (or not) identically
+//! whether the round ran on 1 OS thread or 8, compiled to a tile graph
+//! or executed as a closure.
+//!
+//! [`ChaosModel`] is a [`DenoiseModel`] decorator that consults the
+//! plan once per fused round and injects:
+//!
+//! * **Panic** — the model call panics (the scheduler's
+//!   `catch_unwind` containment and retry path must absorb it),
+//! * **NonFinite** — the round executes, then one deterministic output
+//!   element is overwritten with NaN (exercises output validation:
+//!   fail the offending request, not the lane),
+//! * **Latency** — the round sleeps `FaultPlan::latency` first
+//!   (wall-clock only; bits are untouched),
+//! * **Tile** — the round's compiled [`TileGraph`] gets one node
+//!   poisoned ([`TileGraph::poison_node`]), so the panic happens
+//!   *mid-graph* on a pool worker and must ride the cancel-dependents
+//!   path, failing only this lane's round.
+//!
+//! The wrapper must sit **outside** `ParallelModel`: the plan is
+//! consulted once per round, never once per shard, or the injection
+//! schedule would depend on the shard partition.
+//!
+//! The solo (batching-off) path `server::run_sampler` is intentionally
+//! not chaos'd — `denoise_batch` forwards untouched; the failure
+//! domains under test (fused groups, lanes, tile graphs) only exist on
+//! the fused path.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::fusion::{FusionScheduler, RecoveryPolicy};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{QueuedJob, Request, SamplerSpec};
+use crate::coordinator::FailReason;
+use crate::model::{DenoiseModel, ParallelModel};
+use crate::rng::Philox;
+use crate::runtime::pool::{self, PoolConfig, TileGraph};
+use crate::sampler::RoundArena;
+use crate::schedule::DdpmSchedule;
+
+/// Sub-round draw index within a round's counter block. Each round
+/// owns `SITES` consecutive Philox counters, so per-site draws are
+/// independent and the site space can grow without reshuffling
+/// existing plans.
+const SITES: u64 = 4;
+const SITE_DECIDE: u64 = 0;
+const SITE_CORRUPT: u64 = 1;
+
+/// One injected fault. `Tile` carries the raw u32 draw that picks the
+/// poisoned node (`draw % graph.len()` at injection time, so the same
+/// plan is usable against graphs of any size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Panic,
+    NonFinite,
+    Latency,
+    Tile(u32),
+}
+
+/// A seeded, schedule-independent fault-injection plan.
+///
+/// Rates are independent per-round probabilities evaluated in priority
+/// order panic > non-finite > latency > tile (one fault per round at
+/// most). All decisions derive from `Philox::block(key(lane),
+/// round * SITES + site)` — pure, so the plan can also be *queried*
+/// ahead of time (tests scan for a seed whose first fault lands in a
+/// chosen window instead of hoping).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// per-round probability the fused model call panics
+    pub panic_rate: f64,
+    /// per-round probability one output element becomes NaN
+    pub non_finite_rate: f64,
+    /// per-round probability the round sleeps `latency` first
+    pub latency_rate: f64,
+    /// injected latency for `FaultKind::Latency` rounds
+    pub latency: Duration,
+    /// per-round probability one tile of the round's compiled graph
+    /// panics mid-graph
+    pub tile_rate: f64,
+    /// restrict injection to one lane (None = every wrapped lane)
+    pub only_lane: Option<String>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            panic_rate: 0.0,
+            non_finite_rate: 0.0,
+            latency_rate: 0.0,
+            latency: Duration::from_millis(1),
+            tile_rate: 0.0,
+            only_lane: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan injecting only round panics — the common test shape.
+    pub fn panics(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, panic_rate: rate, ..FaultPlan::default() }
+    }
+
+    /// Per-lane Philox key: FNV-1a of the lane name folded into the
+    /// plan seed, so two lanes draw independent fault schedules from
+    /// one seed.
+    fn key(&self, lane: &str) -> [u32; 2] {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in lane.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        [(self.seed as u32) ^ (h as u32),
+         ((self.seed >> 32) as u32) ^ ((h >> 32) as u32)]
+    }
+
+    /// The raw 4x32 draw for `(lane, round, site)` — pure.
+    pub fn draw(&self, lane: &str, round: u64, site: u64) -> [u32; 4] {
+        Philox::block(self.key(lane), round * SITES + site)
+    }
+
+    /// The fault (if any) this plan injects into fused round `round`
+    /// of `lane`. Pure — callable ahead of execution.
+    pub fn round_fault(&self, lane: &str, round: u64) -> Option<FaultKind> {
+        if let Some(only) = &self.only_lane {
+            if only != lane {
+                return None;
+            }
+        }
+        let u = self.draw(lane, round, SITE_DECIDE);
+        let thr = |rate: f64| (rate.clamp(0.0, 1.0) * 4_294_967_296.0) as u64;
+        if (u[0] as u64) < thr(self.panic_rate) {
+            return Some(FaultKind::Panic);
+        }
+        if (u[1] as u64) < thr(self.non_finite_rate) {
+            return Some(FaultKind::NonFinite);
+        }
+        if (u[2] as u64) < thr(self.latency_rate) {
+            return Some(FaultKind::Latency);
+        }
+        if (u[3] as u64) < thr(self.tile_rate) {
+            return Some(FaultKind::Tile(u[3]));
+        }
+        None
+    }
+
+    /// Index of the first faulted round in `[0, horizon)`, if any —
+    /// lets tests *construct* seeds with a fault in a known window.
+    pub fn first_fault(&self, lane: &str, horizon: u64) -> Option<u64> {
+        (0..horizon).find(|&r| self.round_fault(lane, r).is_some())
+    }
+}
+
+/// Round counter + the decision staged between `compile_round` and
+/// `denoise_round` (a round that compiles to `None` falls through to
+/// the closure path, which must consume the *same* round's decision,
+/// not advance the counter again).
+struct ChaosState {
+    next_round: u64,
+    staged: Option<(u64, Option<FaultKind>)>,
+}
+
+/// Fault-injecting [`DenoiseModel`] decorator. Wrap **outside**
+/// `ParallelModel` (see module docs); one wrapper per lane.
+pub struct ChaosModel {
+    inner: Arc<dyn DenoiseModel>,
+    plan: FaultPlan,
+    lane: String,
+    state: Mutex<ChaosState>,
+}
+
+impl ChaosModel {
+    pub fn wrap(inner: Arc<dyn DenoiseModel>, plan: FaultPlan, lane: &str)
+                -> Arc<dyn DenoiseModel> {
+        Arc::new(ChaosModel {
+            inner,
+            plan,
+            lane: lane.to_string(),
+            state: Mutex::new(ChaosState { next_round: 0, staged: None }),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ChaosState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn tile_msg(&self, round: u64, idx: usize) -> String {
+        format!("chaos: injected tile fault (lane {} round {round} \
+                 tile {idx})", self.lane)
+    }
+
+    /// Overwrite one deterministic output element with NaN — which
+    /// element is a site-indexed draw, so pool size never moves it.
+    fn corrupt(&self, arena: &mut RoundArena, round: u64) {
+        let d = self.inner.dim();
+        let (_, _, _, n, out) = arena.round_io();
+        if n == 0 || d == 0 {
+            return;
+        }
+        let u = self.plan.draw(&self.lane, round, SITE_CORRUPT);
+        let bits = ((u[0] as u64) << 32) | u[1] as u64;
+        out[(bits % (n * d) as u64) as usize] = f64::NAN;
+    }
+}
+
+impl DenoiseModel for ChaosModel {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn cond_dim(&self) -> usize {
+        self.inner.cond_dim()
+    }
+
+    fn k_steps(&self) -> usize {
+        self.inner.k_steps()
+    }
+
+    fn schedule(&self) -> &DdpmSchedule {
+        self.inner.schedule()
+    }
+
+    /// Solo-path calls forward untouched (see module docs).
+    fn denoise_batch(&self, ys: &[f64], ts: &[f64], cond: &[f64], n: usize,
+                     out: &mut [f64]) -> Result<()> {
+        self.inner.denoise_batch(ys, ts, cond, n, out)
+    }
+
+    fn denoise_round(&self, arena: &mut RoundArena) -> Result<()> {
+        let (round, fault) = {
+            let mut st = self.lock();
+            match st.staged.take() {
+                Some(rf) => rf,
+                None => {
+                    let round = st.next_round;
+                    st.next_round += 1;
+                    (round, self.plan.round_fault(&self.lane, round))
+                }
+            }
+        };
+        match fault {
+            Some(FaultKind::Panic) => panic!(
+                "chaos: injected model panic (lane {} round {round})",
+                self.lane),
+            Some(FaultKind::Latency) => {
+                std::thread::sleep(self.plan.latency);
+                self.inner.denoise_round(arena)
+            }
+            Some(FaultKind::NonFinite) => {
+                self.inner.denoise_round(arena)?;
+                self.corrupt(arena, round);
+                Ok(())
+            }
+            Some(FaultKind::Tile(draw)) => {
+                // a driver that skipped compile_round (lockstep tick
+                // path) must still see the mid-graph fault: compile +
+                // poison + run here. Backends with no graph form this
+                // round just execute clean — the tile fault has no
+                // tile to land on.
+                match self.inner.compile_round(arena)? {
+                    Some(mut graph) if !graph.is_empty() => {
+                        let idx = draw as usize % graph.len();
+                        graph.poison_node(idx, &self.tile_msg(round, idx));
+                        // resumes the tile panic on this thread once
+                        // the pool has cancelled the dependents
+                        pool::global().run_graph(graph);
+                        Ok(())
+                    }
+                    _ => self.inner.denoise_round(arena),
+                }
+            }
+            None => self.inner.denoise_round(arena),
+        }
+    }
+
+    fn compile_round(&self, arena: &mut RoundArena)
+                     -> Result<Option<TileGraph>> {
+        let mut st = self.lock();
+        let round = st.next_round;
+        st.next_round += 1;
+        st.staged = None;
+        let fault = self.plan.round_fault(&self.lane, round);
+        if matches!(fault, Some(FaultKind::Panic) | Some(FaultKind::NonFinite)
+                           | Some(FaultKind::Latency)) {
+            // round-granularity fault: refuse the graph form so the
+            // round takes the closure path, where denoise_round
+            // injects it
+            st.staged = Some((round, fault));
+            return Ok(None);
+        }
+        match self.inner.compile_round(arena) {
+            Ok(Some(mut graph)) => {
+                if let Some(FaultKind::Tile(draw)) = fault {
+                    if !graph.is_empty() {
+                        let idx = draw as usize % graph.len();
+                        graph.poison_node(idx, &self.tile_msg(round, idx));
+                    }
+                }
+                Ok(Some(graph))
+            }
+            Ok(None) => {
+                // falls through to denoise_round — hand it this
+                // round's decision
+                st.staged = Some((round, fault));
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn round_shards(&self, n: usize) -> usize {
+        self.inner.round_shards(n)
+    }
+
+    fn round_barriers(&self, n: usize) -> usize {
+        self.inner.round_barriers(n)
+    }
+}
+
+/// One request's outcome from [`run_chaos_burst`].
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub id: u64,
+    pub sample: Vec<f64>,
+    pub error: Option<String>,
+    pub reason: Option<FailReason>,
+    pub retries: u32,
+}
+
+/// Deterministic lockstep chaos driver: admit `specs` as one burst
+/// into a single fused lane and tick it dry. Unlike the coordinator
+/// (whose admission batching is timing-dependent), this produces an
+/// identical round schedule on every run, so the determinism suite can
+/// compare *failure sets* — not just survivor bits — across pool
+/// sizes. Requests are unconditional (`cond = []`), ids are the spec
+/// index.
+pub fn run_chaos_burst(model: Arc<dyn DenoiseModel>,
+                       draft: Option<Arc<dyn DenoiseModel>>, lane: &str,
+                       plan: Option<&FaultPlan>, recovery: RecoveryPolicy,
+                       pool: PoolConfig, specs: &[(SamplerSpec, u64)])
+                       -> Vec<ChaosOutcome> {
+    let mut wrapped = ParallelModel::wrap(model, pool);
+    if let Some(p) = plan {
+        wrapped = ChaosModel::wrap(wrapped, p.clone(), lane);
+    }
+    let metrics = Metrics::default();
+    let mut sched = FusionScheduler::new(wrapped, draft, lane, 0, recovery);
+    let mut rxs = Vec::with_capacity(specs.len());
+    for (i, &(sampler, seed)) in specs.iter().enumerate() {
+        let (tx, rx) = channel();
+        sched.admit(QueuedJob {
+            request: Request {
+                id: i as u64,
+                variant: lane.to_string(),
+                sampler,
+                seed,
+                cond: vec![],
+                deadline: None,
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }, &metrics);
+        rxs.push(rx);
+    }
+    let mut ticks = 0usize;
+    while !sched.is_empty() {
+        sched.tick(&metrics);
+        ticks += 1;
+        assert!(ticks < 1_000_000, "chaos burst failed to drain");
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(i, rx)| {
+            let r = rx.recv().expect("request dropped without a response");
+            ChaosOutcome {
+                id: i as u64,
+                sample: r.sample,
+                error: r.error,
+                reason: r.reason,
+                retries: r.retries,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Gmm, GmmDdpmOracle};
+
+    fn oracle(k: usize) -> Arc<dyn DenoiseModel> {
+        GmmDdpmOracle::new(Gmm::circle_2d(), k, false)
+    }
+
+    fn staged_arena(model: &dyn DenoiseModel, n: usize) -> RoundArena {
+        let mut arena = RoundArena::for_model(model);
+        arena.begin_round();
+        let (_, rows) = arena.reserve(n);
+        for (i, y) in rows.ys.iter_mut().enumerate() {
+            *y = (i as f64 * 0.31).sin();
+        }
+        for (i, t) in rows.ts.iter_mut().enumerate() {
+            *t = (1 + i % 5) as f64;
+        }
+        arena
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_lane_round_site() {
+        let plan = FaultPlan { seed: 42, panic_rate: 0.3,
+                               non_finite_rate: 0.2, tile_rate: 0.1,
+                               ..FaultPlan::default() };
+        for round in 0..200 {
+            assert_eq!(plan.round_fault("a", round),
+                       plan.round_fault("a", round));
+        }
+        // rate extremes are certain
+        assert_eq!(FaultPlan::panics(7, 1.0).round_fault("x", 3),
+                   Some(FaultKind::Panic));
+        assert_eq!(FaultPlan::panics(7, 0.0).round_fault("x", 3), None);
+        // only_lane masks every other lane
+        let scoped = FaultPlan { only_lane: Some("a".into()),
+                                 ..FaultPlan::panics(7, 1.0) };
+        assert_eq!(scoped.round_fault("a", 0), Some(FaultKind::Panic));
+        assert_eq!(scoped.round_fault("b", 0), None);
+    }
+
+    #[test]
+    fn lanes_draw_independent_schedules() {
+        // with a mid-range rate, two lanes must not share a schedule
+        // for every round (the FNV fold makes their keys differ)
+        let plan = FaultPlan::panics(11, 0.5);
+        let differs = (0..64).any(|r| {
+            plan.round_fault("lane-a", r) != plan.round_fault("lane-b", r)
+        });
+        assert!(differs, "lane keys collided");
+    }
+
+    #[test]
+    fn chaos_panic_round_panics_and_clean_plan_is_transparent() {
+        let base = oracle(5);
+        let chaotic = ChaosModel::wrap(base.clone(),
+                                       FaultPlan::panics(1, 1.0), "l");
+        let mut arena = staged_arena(base.as_ref(), 3);
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                chaotic.denoise_round(&mut arena)
+            }));
+        assert!(err.is_err(), "panic fault did not panic");
+
+        // zero-rate plan: bit-identical to the inner model
+        let clean = ChaosModel::wrap(base.clone(),
+                                     FaultPlan::panics(1, 0.0), "l");
+        let mut a1 = staged_arena(base.as_ref(), 3);
+        let mut a2 = staged_arena(base.as_ref(), 3);
+        base.denoise_round(&mut a1).unwrap();
+        clean.denoise_round(&mut a2).unwrap();
+        let (_, _, _, n, o1) = a1.round_io();
+        let (_, _, _, _, o2) = a2.round_io();
+        for i in 0..n * 2 {
+            assert_eq!(o1[i].to_bits(), o2[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn non_finite_fault_corrupts_exactly_one_element() {
+        let base = oracle(5);
+        let plan = FaultPlan { non_finite_rate: 1.0,
+                               ..FaultPlan::default() };
+        let chaotic = ChaosModel::wrap(base.clone(), plan, "l");
+        let mut arena = staged_arena(base.as_ref(), 4);
+        chaotic.denoise_round(&mut arena).unwrap();
+        let (_, _, _, n, out) = arena.round_io();
+        let bad = out[..n * 2].iter().filter(|v| !v.is_finite()).count();
+        assert_eq!(bad, 1, "expected exactly one corrupted element");
+    }
+
+    #[test]
+    fn compile_stages_the_decision_for_the_closure_path() {
+        // compile_round on a graph-less backend returns None and must
+        // hand the SAME round's fault to denoise_round — the panic
+        // fires there, and the counter advanced exactly once
+        let base = oracle(5);
+        let plan = FaultPlan::panics(3, 1.0);
+        let chaotic = ChaosModel::wrap(base.clone(), plan, "l");
+        let mut arena = staged_arena(base.as_ref(), 2);
+        assert!(chaotic.compile_round(&mut arena).unwrap().is_none());
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                chaotic.denoise_round(&mut arena)
+            }));
+        assert!(err.is_err(), "staged panic fault did not fire");
+    }
+
+    #[test]
+    fn chaos_burst_without_plan_matches_plain_burst_bitwise() {
+        let specs = [(SamplerSpec::Sequential, 5u64),
+                     (SamplerSpec::Asd(4), 6u64)];
+        let a = run_chaos_burst(oracle(20), None, "gmm", None,
+                                RecoveryPolicy::default(),
+                                PoolConfig::default(), &specs);
+        let b = run_chaos_burst(oracle(20), None, "gmm", None,
+                                RecoveryPolicy::default(),
+                                PoolConfig::default(), &specs);
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.error.is_none(), "{:?}", x.error);
+            assert_eq!(x.retries, 0);
+            let xb: Vec<u64> =
+                x.sample.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u64> =
+                y.sample.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "id {}", x.id);
+        }
+    }
+}

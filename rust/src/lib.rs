@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod ddpm;
 pub mod env;
 pub mod exp;
+pub mod faults;
 pub mod math;
 pub mod model;
 pub mod picard;
@@ -36,7 +37,9 @@ pub mod util;
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::asd::{AsdConfig, AsdEngine, AsdOutput, AsdStats};
-    pub use crate::coordinator::{Coordinator, Request, ServerConfig};
+    pub use crate::coordinator::{Coordinator, FailReason, Request,
+                                 ServerConfig};
+    pub use crate::faults::{ChaosModel, FaultPlan};
     pub use crate::ddpm::SequentialSampler;
     pub use crate::model::{DenoiseModel, Manifest};
     pub use crate::rng::Philox;

@@ -14,6 +14,10 @@
 //!                                 vs ASD vs SL-ASD vs draft-model
 //!                                 speculative sampling across target ×
 //!                                 draft × precision cells
+//!   chaos    [...]                fault-injection sweep: serve a mixed
+//!                                 burst under a seeded FaultPlan and
+//!                                 report completion rate, goodput and
+//!                                 recovery latency per fault rate
 //!
 //! Examples live in examples/ (quickstart, image_generation,
 //! robot_control, serve, scaling_law).
@@ -61,6 +65,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "pool" => cmd_pool(&args),
         "pareto" => cmd_pareto(&args),
+        "chaos" => cmd_chaos(&args),
         _ => {
             print_help();
             Ok(())
@@ -100,7 +105,11 @@ fn print_help() {
          pareto                     speedup-vs-cost Pareto grid over\n    \
          sequential / ASD / SL-ASD / draft-SD; artifact-free; options:\n    \
          [--analytic] (GMM cells only, skip native MLP cells)\n    \
-         [--n 4] [--k 8] [--json BENCH_pareto.json]\n"
+         [--n 4] [--k 8] [--json BENCH_pareto.json]\n  \
+         chaos                      deterministic fault-injection sweep\n    \
+         on the analytic GMM serving stack (always artifact-free);\n    \
+         [--requests 48] [--workers 2] [--theta 8] [--k 20] [--seed 7]\n    \
+         [--fault-rates 0,0.05,0.1,0.25] [--json BENCH_chaos.json]\n"
     );
 }
 
@@ -256,6 +265,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // 0 disables the cap (lanes grow to high water forever)
         arena_byte_cap: arena_cap_mb << 20,
         kernel: kernel_policy_from_args(args)?,
+        ..ServerConfig::default()
     };
 
     // --analytic serves GMM posterior-mean oracles: no AOT artifacts
@@ -328,6 +338,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             sampler,
             seed: 1000 + i as u64,
             cond,
+            deadline: None,
         });
         rxs.push(rx);
     }
@@ -457,4 +468,41 @@ fn cmd_pareto(args: &Args) -> Result<()> {
     let path = args.get("json").unwrap_or("BENCH_pareto.json");
     asd::exp::speedup::run_pareto_grid(
         analytic_only, n, k_window, std::path::Path::new(path))
+}
+
+/// Deterministic fault-injection sweep over the serving stack — always
+/// analytic (GMM oracle target + shifted-mean draft), so the chaos
+/// smoke runs anywhere the crate builds. `--analytic` is accepted for
+/// symmetry with `serve` but is the only mode.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let n_requests = args.get_usize("requests", 48)?;
+    let workers = args.get_usize("workers", 2)?;
+    let theta = args.get_usize("theta", 8)?;
+    let k = args.get_usize("k", 20)?;
+    let seed = args.get_u64("seed", 7)?;
+    // comma-separated f64 list (Args has no float-list helper)
+    let rates_s = args.get_or("fault-rates", "0,0.05,0.1,0.25");
+    let mut fault_rates = Vec::new();
+    for part in rates_s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        fault_rates.push(part.parse::<f64>().with_context(
+            || format!("bad --fault-rates entry '{part}'"))?);
+    }
+    if fault_rates.is_empty() {
+        bail!("--fault-rates needs at least one rate");
+    }
+    println!("chaos sweep: analytic GMM d=8 K={k} theta={theta} \
+              requests={n_requests}/rate workers={workers} seed={seed}");
+    let rows = asd::exp::chaos_bench::bench_chaos(
+        k, theta, n_requests, workers, &fault_rates, seed)?;
+    print!("{}", asd::exp::chaos_bench::format_chaos_rows(&rows));
+    let path = args.get("json").unwrap_or("BENCH_chaos.json");
+    let doc = asd::exp::chaos_bench::bench_chaos_json(
+        k, theta, n_requests, seed, &rows);
+    asd::exp::speedup::write_bench_json(std::path::Path::new(path), &doc)?;
+    println!("wrote {path}");
+    Ok(())
 }

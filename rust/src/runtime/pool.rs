@@ -300,6 +300,16 @@ impl TileGraph {
         id
     }
 
+    /// Replace node `idx`'s task with one that panics with `msg` —
+    /// the deterministic mid-graph fault-injection hook
+    /// (`faults::ChaosModel`). Dependency edges are untouched, so the
+    /// panic exercises the real cascade-cancel path: the poisoned
+    /// tile's dependents never run and the round reports failed.
+    pub fn poison_node(&mut self, idx: usize, msg: &str) {
+        let msg = msg.to_string();
+        self.nodes[idx].run = Box::new(move || panic!("{msg}"));
+    }
+
     /// Number of nodes added so far.
     pub fn len(&self) -> usize {
         self.nodes.len()

@@ -1,0 +1,301 @@
+//! Fault injection must be as deterministic as the sampling it breaks.
+//!
+//! A [`FaultPlan`] is a pure function of `(lane, round, site)`, so the
+//! same seeded chaos run must produce the *identical* outcome vector —
+//! which requests fail, with what reason, after how many retries, and
+//! the exact bits of every survivor — at every worker-pool size. The
+//! survivors must additionally be bit-identical to a fault-free run:
+//! retry-from-scratch rebuilds a machine that consumes only its own
+//! pre-drawn Philox streams, so recovery is bit-transparent.
+//!
+//! The third leg pushes a mid-graph tile fault through the coordinator:
+//! with injection restricted to one NativeMlp lane, only that lane's
+//! rounds may fail (reason `TilePanic` — the panic happened on a pool
+//! worker inside a compiled tile graph, and the cancel-dependents path
+//! contained it), while the sibling lane's burst stays bit-identical
+//! to solo execution.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use asd::asd::{AsdConfig, AsdEngine};
+use asd::coordinator::{Coordinator, FailReason, RecoveryPolicy, Request,
+                       SamplerSpec, ServerConfig};
+use asd::ddpm::SequentialSampler;
+use asd::faults::{run_chaos_burst, ChaosOutcome, FaultPlan};
+use asd::model::{DenoiseModel, Gmm, GmmDdpmOracle, NativeMlp, VariantInfo};
+use asd::runtime::pool::PoolConfig;
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+const K: usize = 20;
+const LANE: &str = "gmm";
+
+fn model() -> Arc<dyn DenoiseModel> {
+    GmmDdpmOracle::new(Gmm::random(8, 6, 1.5, 3), K, false)
+}
+
+/// Imperfect draft for [`model`] (means shifted 0.05, alternating
+/// sign), same shape the fusion determinism suite uses.
+fn draft_model() -> Arc<dyn DenoiseModel> {
+    let base = Gmm::random(8, 6, 1.5, 3);
+    let means: Vec<Vec<f64>> = (0..base.weights.len())
+        .map(|c| {
+            base.mean_of(c).iter().enumerate()
+                .map(|(i, &v)| {
+                    v + 0.05 * if i % 2 == 0 { 1.0 } else { -1.0 }
+                })
+                .collect()
+        })
+        .collect();
+    let gmm = Gmm::new(means, base.sigmas.clone(), base.weights.clone());
+    GmmDdpmOracle::new(gmm, K, false)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    asd::math::vec_ops::to_bits_vec(v)
+}
+
+/// Mixed burst: all four sampler kinds, three of each.
+fn burst_specs() -> Vec<(SamplerSpec, u64)> {
+    (0..12u64)
+        .map(|i| {
+            let spec = match i % 4 {
+                0 => SamplerSpec::Sequential,
+                1 => SamplerSpec::Asd(8),
+                2 => SamplerSpec::Picard(8, 1e-6),
+                _ => SamplerSpec::Draft(8),
+            };
+            (spec, 1000 + i)
+        })
+        .collect()
+}
+
+/// A panic-only plan whose first injected fault provably lands inside
+/// the burst's round horizon (every burst runs at least K rounds — it
+/// contains sequential machines), found by scanning seeds with the
+/// plan's own pure query instead of hoping.
+fn plan_with_early_fault(rate: f64) -> FaultPlan {
+    (0..64u64)
+        .map(|s| FaultPlan::panics(s, rate))
+        .find(|p| p.first_fault(LANE, K as u64).is_some())
+        .expect("no seed in 0..64 faults within the horizon")
+}
+
+fn recovery(retry_max: u32) -> RecoveryPolicy {
+    RecoveryPolicy {
+        retry_max,
+        backoff_rounds: 1,
+        // high enough that the breaker never interferes with the
+        // completeness/determinism claims under ambient chaos
+        breaker_threshold: 100,
+        breaker_cooldown: Duration::from_millis(50),
+        validate_outputs: true,
+    }
+}
+
+fn run(plan: Option<&FaultPlan>, retry_max: u32, pool_size: usize)
+       -> Vec<ChaosOutcome> {
+    run_chaos_burst(model(), Some(draft_model()), LANE, plan,
+                    recovery(retry_max),
+                    PoolConfig { pool_size, shard_min: 1 },
+                    &burst_specs())
+}
+
+/// Assert two chaos runs are outcome-identical: same failure set, same
+/// reasons and messages, same retry counts, same survivor bits.
+fn assert_outcomes_identical(a: &[ChaosOutcome], b: &[ChaosOutcome],
+                             ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: outcome count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}: id order");
+        assert_eq!(x.error, y.error, "{ctx}: request {} error", x.id);
+        assert_eq!(x.reason, y.reason, "{ctx}: request {} reason", x.id);
+        assert_eq!(x.retries, y.retries, "{ctx}: request {} retries",
+                   x.id);
+        assert_eq!(bits(&x.sample), bits(&y.sample),
+                   "{ctx}: request {} sample bits", x.id);
+    }
+}
+
+#[test]
+fn same_seed_same_failures_and_survivor_bits_across_pool_sizes() {
+    // no-retry leg: the faulted rounds' participants fail, and the
+    // whole outcome vector is a pure function of the plan seed
+    let plan = plan_with_early_fault(0.2);
+    let clean = run(None, 0, 1);
+    assert!(clean.iter().all(|o| o.error.is_none()),
+            "fault-free burst must complete fully");
+
+    let reference = run(Some(&plan), 0, POOL_SIZES[0]);
+    let failures: Vec<u64> = reference.iter()
+        .filter(|o| o.error.is_some()).map(|o| o.id).collect();
+    assert!(!failures.is_empty(),
+            "plan seed {} injected no failure", plan.seed);
+    for o in &reference {
+        match &o.error {
+            Some(msg) => {
+                assert_eq!(o.reason, Some(FailReason::ModelPanic),
+                           "request {}: {msg}", o.id);
+                assert!(msg.contains("panicked"), "request {}: {msg}",
+                        o.id);
+            }
+            // survivors are bit-identical to the fault-free run:
+            // requests that never shared a faulted round are untouched
+            None => assert_eq!(bits(&o.sample),
+                               bits(&clean[o.id as usize].sample),
+                               "survivor {} drifted from fault-free bits",
+                               o.id),
+        }
+    }
+    for &pool_size in &POOL_SIZES[1..] {
+        let got = run(Some(&plan), 0, pool_size);
+        assert_outcomes_identical(&reference, &got,
+                                  &format!("pool_size={pool_size}"));
+    }
+}
+
+#[test]
+fn retries_recover_bit_transparently_across_pool_sizes() {
+    // retry leg: the same plan with generous retries must *retry*
+    // (the fault still fires) and every recovered request's bits must
+    // equal the fault-free run — retry-from-scratch re-consumes the
+    // same pre-drawn noise streams
+    let plan = plan_with_early_fault(0.2);
+    let clean = run(None, 0, 1);
+    let reference = run(Some(&plan), 10, POOL_SIZES[0]);
+    let total_retries: u32 = reference.iter().map(|o| o.retries).sum();
+    assert!(total_retries > 0, "plan seed {} never triggered a retry",
+            plan.seed);
+    for o in &reference {
+        if o.error.is_none() {
+            assert_eq!(bits(&o.sample), bits(&clean[o.id as usize].sample),
+                       "request {} ({} retries) not bit-transparent",
+                       o.id, o.retries);
+        }
+    }
+    for &pool_size in &POOL_SIZES[1..] {
+        let got = run(Some(&plan), 10, pool_size);
+        assert_outcomes_identical(&reference, &got,
+                                  &format!("pool_size={pool_size}"));
+    }
+}
+
+/// Toy in-memory NativeMlp variant (same layout the fusion determinism
+/// suite uses) with `seed_mul` varying the pseudo-random weights.
+fn toy_mlp(name: &str, seed_mul: usize) -> Arc<dyn DenoiseModel> {
+    let info = VariantInfo::toy(name, 3, 0, 16, 1, 40);
+    let n_w = info.weights_len();
+    let flat: Vec<f32> = (0..n_w)
+        .map(|i| ((i * seed_mul % 101) as f32 / 101.0) - 0.5)
+        .collect();
+    NativeMlp::from_flat(&info, &flat).unwrap()
+}
+
+#[test]
+fn tile_faults_stay_inside_their_lane() {
+    // mid-graph leg: injection restricted to lane "a" (tile_rate 1 —
+    // every compiled round of lane a gets one poisoned node). Lane a's
+    // failures must carry the TilePanic reason (the panic happened on
+    // a pool worker mid-graph and rode the cancel-dependents path);
+    // lane b — same chaos'd coordinator, same pool — must complete
+    // fully and bit-identical to solo execution.
+    let a = toy_mlp("a", 37);
+    let b = toy_mlp("b", 53);
+    let specs: Vec<(SamplerSpec, u64)> = (0..8u64)
+        .map(|i| {
+            let spec = if i % 2 == 0 {
+                SamplerSpec::Sequential
+            } else {
+                SamplerSpec::Asd(8)
+            };
+            (spec, 7000 + i)
+        })
+        .collect();
+    let solo = |m: &Arc<dyn DenoiseModel>, spec: SamplerSpec, seed: u64| {
+        match spec {
+            SamplerSpec::Sequential => {
+                SequentialSampler::new(m.clone()).sample(seed, &[])
+                    .unwrap().0
+            }
+            SamplerSpec::Asd(theta) => {
+                AsdEngine::new(m.clone(),
+                               AsdConfig { theta, ..Default::default() })
+                    .sample(seed).unwrap().y0
+            }
+            _ => unreachable!(),
+        }
+    };
+    let c = Coordinator::new(ServerConfig {
+        workers: 2,
+        max_batch: 16,
+        enable_batching: true,
+        pool: PoolConfig { pool_size: 2, shard_min: 1 },
+        recovery: recovery(0),
+        faults: Some(FaultPlan {
+            seed: 11,
+            tile_rate: 1.0,
+            only_lane: Some("a".into()),
+            ..FaultPlan::default()
+        }),
+        ..Default::default()
+    }).unwrap();
+    c.register_model("a", a.clone());
+    c.register_model("b", b.clone());
+    let mut rxs = Vec::new();
+    for &(spec, seed) in &specs {
+        for variant in ["a", "b"] {
+            rxs.push((variant, spec, seed, c.submit(Request {
+                id: 0,
+                variant: variant.into(),
+                sampler: spec,
+                seed,
+                cond: vec![],
+                deadline: None,
+            }).1));
+        }
+    }
+    let mut a_tile_failures = 0u32;
+    for (variant, spec, seed, rx) in rxs {
+        let r = rx.recv().unwrap();
+        match variant {
+            "a" => match &r.error {
+                Some(msg) => {
+                    // the only way a lane-a round fails is the poisoned
+                    // tile: mid-graph containment, not a whole-model
+                    // panic at round granularity
+                    assert_eq!(r.reason, Some(FailReason::TilePanic),
+                               "lane a seed {seed}: {msg}");
+                    assert!(msg.contains("tile"),
+                            "lane a seed {seed}: {msg}");
+                    a_tile_failures += 1;
+                }
+                // a round too small to compile a graph gives the tile
+                // fault nothing to land on and must execute clean —
+                // still bit-exact
+                None => assert_eq!(bits(&r.sample),
+                                   bits(&solo(&a, spec, seed)),
+                                   "clean lane-a request {seed} drifted"),
+            },
+            _ => {
+                assert!(r.error.is_none(),
+                        "lane b seed {seed} collateral failure: {:?}",
+                        r.error);
+                assert_eq!(bits(&r.sample), bits(&solo(&b, spec, seed)),
+                           "lane b seed {seed} drifted under sibling \
+                            chaos");
+            }
+        }
+    }
+    assert!(a_tile_failures > 0,
+            "tile_rate 1.0 never landed a mid-graph fault on lane a");
+    let m = c.metrics();
+    let lane_b = m.lanes.iter().find(|l| l.lane == "b").unwrap();
+    assert_eq!(lane_b.admitted, 8);
+    for (name, v) in [("rejected", lane_b.rejected),
+                      ("timed_out", lane_b.timed_out),
+                      ("retried", lane_b.retried),
+                      ("breaker_trips", lane_b.breaker_trips)] {
+        assert_eq!(v, 0, "lane b {name} moved under lane-a chaos");
+    }
+    c.shutdown();
+}

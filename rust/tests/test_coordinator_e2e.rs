@@ -19,7 +19,8 @@ fn coordinator() -> Coordinator {
 }
 
 fn req(sampler: SamplerSpec, seed: u64) -> Request {
-    Request { id: 0, variant: "gmm2d".into(), sampler, seed, cond: vec![] }
+    Request { id: 0, variant: "gmm2d".into(), sampler, seed, cond: vec![],
+              deadline: None }
 }
 
 #[test]
@@ -84,6 +85,7 @@ fn unknown_variant_fails_without_poisoning_the_pool() {
         sampler: SamplerSpec::Sequential,
         seed: 0,
         cond: vec![],
+        deadline: None,
     });
     assert!(bad.recv().unwrap().error.is_some());
     // pool still serves

@@ -130,6 +130,7 @@ fn fused_mixed_burst_bit_identical_to_solo_across_pool_sizes() {
                 sampler: spec,
                 seed,
                 cond: vec![],
+                deadline: None,
             }).1);
         }
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -219,6 +220,7 @@ fn mixed_variant_burst_bit_identical_and_both_lanes_fuse() {
                         sampler: spec,
                         seed,
                         cond: vec![],
+                        deadline: None,
                     }).1
                 })
                 .collect();
@@ -281,6 +283,7 @@ fn fused_burst_actually_fuses_rows_per_round() {
                 sampler: spec,
                 seed,
                 cond: vec![],
+                deadline: None,
             }).1
         })
         .collect();
@@ -318,6 +321,7 @@ fn solo_sized_group_matches_dedicated_engines_repeatedly() {
             sampler: spec,
             seed,
             cond: vec![],
+            deadline: None,
         });
         // recv before the next submit: each request runs alone
         let r = rx.recv().unwrap();
@@ -364,6 +368,7 @@ fn conditional_requests_fuse_bit_identically() {
                 sampler: SamplerSpec::Asd(6),
                 seed: i,
                 cond: mk_cond(i as usize),
+                deadline: None,
             }).1)
         })
         .collect();

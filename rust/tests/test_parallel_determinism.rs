@@ -195,6 +195,7 @@ fn coordinator_burst_bit_identical_across_pool_sizes_and_schedules() {
                     sampler,
                     seed: 300 + i,
                     cond: vec![],
+                    deadline: None,
                 }).1
             })
             .collect();
@@ -272,6 +273,7 @@ fn single_worker_two_lane_burst_overlaps_without_barrier() {
         sampler: SamplerSpec::Sequential,
         seed,
         cond: vec![],
+        deadline: None,
     };
     let (_, rx_slow) = c.submit(mk("straggler", 1));
     let (_, rx_fast) = c.submit(mk("fast", 2));
